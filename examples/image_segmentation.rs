@@ -1,0 +1,116 @@
+//! Image segmentation / color quantization — the paper's motivating
+//! application ("image segmentation, anomaly detection, etc.").
+//!
+//! Renders a synthetic RGB test image (smooth gradients + shapes),
+//! clusters its pixels in 3D color space with the offload engine
+//! (K = 8 palette), and writes before/after PPM images plus the palette.
+//!
+//!     cargo run --release --offline --example image_segmentation
+
+use std::io::Write;
+use std::path::Path;
+
+use parakmeans::config::RunConfig;
+use parakmeans::coordinator::offload;
+use parakmeans::data::Dataset;
+
+const W: usize = 320;
+const H: usize = 240;
+
+/// Synthetic scene: vertical sky gradient, a sun disk, hills, water.
+fn render_scene() -> Vec<[f32; 3]> {
+    let mut px = Vec::with_capacity(W * H);
+    for y in 0..H {
+        for x in 0..W {
+            let (fx, fy) = (x as f32 / W as f32, y as f32 / H as f32);
+            // sky gradient
+            let mut c = [0.35 + 0.3 * (1.0 - fy), 0.55 + 0.25 * (1.0 - fy), 0.9];
+            // sun
+            let (dx, dy) = (fx - 0.75, fy - 0.2);
+            if (dx * dx + dy * dy).sqrt() < 0.09 {
+                c = [1.0, 0.9, 0.3];
+            }
+            // hills (sine silhouette)
+            let hill = 0.55 + 0.08 * (fx * 9.0).sin() + 0.05 * (fx * 23.0).cos();
+            if fy > hill {
+                c = [0.2 + 0.15 * fy, 0.45 + 0.2 * (1.0 - fy), 0.2];
+            }
+            // water
+            if fy > 0.8 {
+                let ripple = 0.03 * ((fx * 40.0 + fy * 60.0).sin());
+                c = [0.15 + ripple, 0.3 + ripple, 0.55 + ripple];
+            }
+            px.push(c);
+        }
+    }
+    px
+}
+
+fn write_ppm(path: &Path, pixels: &[[f32; 3]]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "P6\n{W} {H}\n255")?;
+    for p in pixels {
+        let bytes: Vec<u8> = p
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * 255.0) as u8)
+            .collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let pixels = render_scene();
+    let out_dir = Path::new("results/examples");
+    std::fs::create_dir_all(out_dir)?;
+    write_ppm(&out_dir.join("scene_original.ppm"), &pixels)?;
+
+    // pixels -> 3D dataset in color space
+    let flat: Vec<f32> = pixels.iter().flat_map(|p| p.iter().copied()).collect();
+    let ds = Dataset::from_vec(flat, 3)?;
+    println!("segmenting {} pixels into 8 colors...", ds.len());
+
+    let k = 8;
+    let cfg = RunConfig { k, seed: 3, ..Default::default() }; // chunk auto
+    let run = offload::run(&ds, &cfg)?;
+    println!(
+        "offload engine: {} iters (converged: {}), sse {:.4}, {:.3}s wall",
+        run.result.iterations, run.result.converged, run.result.sse, run.wall_secs
+    );
+
+    // quantized image: replace each pixel by its centroid color
+    let quant: Vec<[f32; 3]> = run
+        .result
+        .assign
+        .iter()
+        .map(|&a| {
+            let c = run.result.centroid(a as usize);
+            [c[0], c[1], c[2]]
+        })
+        .collect();
+    write_ppm(&out_dir.join("scene_quantized_k8.ppm"), &quant)?;
+
+    println!("palette:");
+    for c in 0..k {
+        let col = run.result.centroid(c);
+        println!(
+            "  cluster {c}: rgb({:>3},{:>3},{:>3})  {} px",
+            (col[0] * 255.0) as u8,
+            (col[1] * 255.0) as u8,
+            (col[2] * 255.0) as u8,
+            run.result.cluster_sizes()[c]
+        );
+    }
+    // quantization must reduce per-pixel error vs a 1-color baseline
+    let one = parakmeans::kmeans::serial::run(
+        &ds,
+        &parakmeans::kmeans::KmeansConfig::new(1).with_seed(3),
+    );
+    assert!(run.result.sse < one.sse * 0.25, "k=8 should beat k=1 by 4x+");
+    println!(
+        "wrote {} and {}",
+        out_dir.join("scene_original.ppm").display(),
+        out_dir.join("scene_quantized_k8.ppm").display()
+    );
+    Ok(())
+}

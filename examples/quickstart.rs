@@ -1,0 +1,62 @@
+//! Quickstart: generate a dataset, cluster it three ways (serial rust,
+//! AOT shared-memory engine, AOT offload engine), verify they agree.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use parakmeans::config::{Engine, RunConfig};
+use parakmeans::coordinator::{offload, shared};
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::metrics;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 3D mixture of 4 Gaussians, 50k points (the paper's small case).
+    let ds = MixtureSpec::paper_3d(4).generate(50_000, 42);
+    println!("dataset: {} points, {}D", ds.len(), ds.dim());
+
+    // 2. Pure-rust serial Lloyd (the paper's baseline).
+    let kc = KmeansConfig::new(4).with_seed(7);
+    let t0 = std::time::Instant::now();
+    let serial = kmeans::serial::run(&ds, &kc);
+    println!(
+        "serial : {} iters, sse {:.4e}, {:.3}s",
+        serial.iterations,
+        serial.sse,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 3. The AOT engines (python never runs here — artifacts were
+    //    compiled once by `make artifacts`).
+    let cfg = RunConfig { engine: Engine::Shared, k: 4, seed: 7, ..Default::default() };
+    let sh = shared::run(&ds, &cfg, 4)?;
+    println!(
+        "shared : {} iters, sse {:.4e}, {:.3}s wall (+{:.2}s setup), {:.3}s testbed p=4",
+        sh.result.iterations,
+        sh.result.sse,
+        sh.wall_secs,
+        sh.setup_secs,
+        sh.table_secs()
+    );
+
+    let off = offload::run(&ds, &cfg)?;
+    println!(
+        "offload: {} iters, sse {:.4e}, {:.3}s wall (+{:.2}s setup)",
+        off.result.iterations,
+        off.result.sse,
+        off.wall_secs,
+        off.setup_secs
+    );
+
+    // 4. All three must produce the same clustering (paper Figures 1-6).
+    let ari_sh = metrics::adjusted_rand_index(&serial.assign, &sh.result.assign);
+    let ari_off = metrics::adjusted_rand_index(&serial.assign, &off.result.assign);
+    println!("ARI serial/shared  = {ari_sh:.5}");
+    println!("ARI serial/offload = {ari_off:.5}");
+    assert!(ari_sh > 0.999 && ari_off > 0.999, "engines disagree");
+
+    // 5. And recover the generating mixture.
+    let ari_truth = metrics::adjusted_rand_index(&serial.assign, ds.truth.as_ref().unwrap());
+    println!("ARI vs ground truth = {ari_truth:.5}");
+    println!("quickstart OK");
+    Ok(())
+}

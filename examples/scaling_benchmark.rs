@@ -1,0 +1,86 @@
+//! End-to-end driver (DESIGN.md §6): the full system on the paper's 3D
+//! workload family — data generation → serial baseline → shared-memory
+//! engine sweep (p = 2..16) → offload engine → metrics → figures.
+//!
+//! Proves all layers compose: L3 coordination (this binary), AOT
+//! executables from the L2 jax programs, and the L1 Pallas kernel
+//! inside them. Verifies every engine produces the serial clustering
+//! (ARI ≥ 0.99) and prints Table-1/3/5-style rows plus speedup and
+//! efficiency. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Scale: PARAKM_SCALE=full reproduces the paper sizes (slow on 1
+//! core); default smoke is the same structure at 1/50 size.
+//!
+//!     cargo run --release --offline --example scaling_benchmark
+
+use parakmeans::config::{Engine, RunConfig};
+use parakmeans::coordinator::{offload, shared};
+use parakmeans::data::gmm::workloads;
+use parakmeans::eval::{self, Scale};
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::metrics;
+use parakmeans::util::tables;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let k = workloads::K_3D;
+    println!("scaling_benchmark: 3D family, K={k}, scale {scale:?}\n");
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for &n_full in &workloads::SIZES_3D {
+        let n = scale.apply(n_full);
+        let ds = eval::paper_dataset(3, n);
+
+        // serial baseline (Table 1 analog)
+        let kc = KmeansConfig::new(k).with_seed(42);
+        let t0 = std::time::Instant::now();
+        let serial = kmeans::serial::run(&ds, &kc);
+        let t_serial = t0.elapsed().as_secs_f64();
+
+        // shared engine sweep (Table 3 analog)
+        let cfg = RunConfig { engine: Engine::Shared, k, seed: 42, ..Default::default() };
+        let mut shared_times = Vec::new();
+        for p in workloads::THREADS {
+            let run = shared::run(&ds, &cfg, p)?;
+            let ari = metrics::adjusted_rand_index(&serial.assign, &run.result.assign);
+            anyhow::ensure!(ari > 0.99, "shared p={p} diverged: ARI {ari}");
+            anyhow::ensure!(
+                run.result.iterations == serial.iterations,
+                "iteration mismatch at p={p}"
+            );
+            shared_times.push(run.table_secs());
+        }
+
+        // offload engine (Table 5 analog)
+        let off = offload::run(&ds, &cfg)?;
+        let ari = metrics::adjusted_rand_index(&serial.assign, &off.result.assign);
+        anyhow::ensure!(ari > 0.99, "offload diverged: ARI {ari}");
+
+        let psi8 = metrics::speedup(shared_times[0], shared_times[2]); // p=2 -> p=8
+        println!(
+            "N={n:<8} iters={:<3} serial={:<9.4}s shared(p=2..16)={:?} offload={:.4}s (raw {:.4}s)  psi(2->8)={:.2}",
+            serial.iterations,
+            t_serial,
+            shared_times.iter().map(|t| (t * 1e4).round() / 1e4).collect::<Vec<_>>(),
+            off.table_secs(),
+            off.wall_secs,
+            psi8,
+        );
+        let mut row = vec![n.to_string(), tables::secs(t_serial)];
+        row.extend(shared_times.iter().map(|&t| tables::secs(t)));
+        row.push(tables::secs(off.table_secs()));
+        rows.push(row);
+    }
+
+    println!();
+    println!(
+        "{}",
+        tables::render(
+            "E2E: 3D family — serial vs shared(p) vs offload (seconds)",
+            &["N", "serial", "p=2", "p=4", "p=8", "p=16", "offload"],
+            &rows
+        )
+    );
+    println!("scaling_benchmark OK — all engines agree with serial (ARI > 0.99)");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Serving load test: train a model, start the assignment service
+//! in-process, drive it with concurrent clients, and report latency /
+//! throughput percentiles — the serving-paper-style evaluation of the
+//! L3 router/batcher.
+//!
+//!     cargo run --release --offline --example serving_load
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::serve::{serve, BatcherConfig, Response, ServeConfig};
+
+const CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 50;
+const POINTS_PER_REQUEST: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    // 1. train
+    let ds = MixtureSpec::paper_3d(4).generate(50_000, 42);
+    let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(7));
+    println!(
+        "trained K=4 on {} points ({} iters, sse {:.3e})",
+        ds.len(),
+        model.iterations,
+        model.sse
+    );
+
+    // 2. serve on an ephemeral port
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        batcher: BatcherConfig::default(),
+        ..Default::default()
+    };
+    let server = serve(cfg, model.centroids.clone(), 3, 4)?;
+    let addr = server.local_addr;
+    println!("serving on {addr}; driving {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests × {POINTS_PER_REQUEST} points");
+
+    // 3. drive concurrent clients, collecting per-request latency
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut rng = parakmeans::rng::Pcg64::new(c as u64, 0x10AD);
+                let mut conn = TcpStream::connect(addr)?;
+                conn.set_nodelay(true)?;
+                let mut reader = BufReader::new(conn.try_clone()?);
+                let mut latencies = Vec::with_capacity(REQUESTS_PER_CLIENT);
+                for r in 0..REQUESTS_PER_CLIENT {
+                    let pts: Vec<String> = (0..POINTS_PER_REQUEST)
+                        .map(|_| {
+                            format!(
+                                "[{}, {}, {}]",
+                                rng.next_f32() * 30.0,
+                                rng.next_f32() * 30.0,
+                                rng.next_f32() * 30.0
+                            )
+                        })
+                        .collect();
+                    let line = format!(
+                        r#"{{"id": {}, "points": [{}]}}"#,
+                        c * REQUESTS_PER_CLIENT + r,
+                        pts.join(", ")
+                    );
+                    let t = Instant::now();
+                    writeln!(conn, "{line}")?;
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp)?;
+                    latencies.push(t.elapsed().as_secs_f64());
+                    match Response::parse(resp.trim())
+                        .map_err(|e| anyhow::anyhow!("{e}"))?
+                    {
+                        Response::Ok { clusters, .. } => {
+                            anyhow::ensure!(clusters.len() == POINTS_PER_REQUEST);
+                        }
+                        Response::Err { error, .. } => anyhow::bail!("server error: {error}"),
+                    }
+                }
+                Ok(latencies)
+            })
+        })
+        .collect();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().expect("client panicked")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    // 4. report
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[(q * (latencies.len() - 1) as f64) as usize] * 1e3;
+    let total_requests = CLIENTS * REQUESTS_PER_CLIENT;
+    let total_points = total_requests * POINTS_PER_REQUEST;
+    println!("requests    : {total_requests} ({total_points} points) in {wall:.3}s");
+    println!("throughput  : {:.0} req/s, {:.0} points/s", total_requests as f64 / wall, total_points as f64 / wall);
+    println!("latency p50 : {:.2} ms", pct(0.50));
+    println!("latency p90 : {:.2} ms", pct(0.90));
+    println!("latency p99 : {:.2} ms", pct(0.99));
+    assert!(pct(0.50) < 250.0, "median latency degenerate");
+    println!("serving_load OK");
+    Ok(())
+}

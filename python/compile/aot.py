@@ -1,0 +1,197 @@
+"""AOT pipeline: lower the L2 programs to HLO text + manifest.
+
+``python -m compile.aot --out ../artifacts`` emits, for every variant in
+VARIANTS, three artifacts (assign_partial / fused_step / finalize) as HLO
+*text* plus a single ``manifest.json`` that the rust runtime parses to
+know each executable's name, file, and input/output signature.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` on new jax,
+and NOT serialized HloModuleProto — is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` rust crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. We lower to stablehlo and convert via
+xla_client, exactly like /opt/xla-example/gen_hlo.py.
+
+This runs at build time only (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Streaming chunk sizes (points per executable call) and kernel tile.
+# Multiple sizes let the rust planner greedily fit shards with bounded
+# padding waste (plan.rs): big chunks amortize launch overhead on large
+# shards, the small chunk caps padding on shard tails.
+CHUNKS = [4096, 65536]
+DEFAULT_CHUNK = 65536
+# 32768 measured ~17% faster than 8192 through XLA CPU (§Perf L1-1);
+# on TPU this is the VMEM-resident x-tile: 32768×3×4B = 384 KiB ≪ VMEM.
+DEFAULT_TILE = 32768
+
+# (d, k) variants covering every paper experiment:
+#   2D: K=8 for Tables 2/4, K=11 for Figures 5/6, K=4 for Table 1.
+#   3D: K=4 for Tables 3/5 + Figures 1-4, K=8/11 for Table 1.
+VARIANTS = [
+    (2, 4), (2, 8), (2, 11),
+    (3, 4), (3, 8), (3, 11),
+]
+
+# Chunk-size ablation (DESIGN.md A1) — only for the headline 3D/K=4 case
+# to keep the artifact set small.
+ABLATION_CHUNKS = [16384, 262144]
+ABLATION_VARIANT = (3, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(args, outs):
+    """Manifest-side description of an executable signature."""
+    def one(name, s):
+        return {"name": name, "shape": list(s.shape), "dtype": s.dtype.name}
+    return (
+        [one(n, s) for n, s in args],
+        [one(n, s) for n, s in outs],
+    )
+
+
+def lower_variant(d: int, k: int, chunk: int, tile_n: int):
+    """Lower the four programs for one variant; yield manifest entries.
+
+    Iteration-loop programs (`stats_partial`, `fused_stats`) return only
+    the per-cluster statistics — a few hundred bytes per call — while
+    `assign` is a separate program the engines run once after
+    convergence (§Perf L2-1: transferring chunk-sized assignments every
+    call dominated the tuple fetch).
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    x = _spec((chunk, d), f32)
+    mu = _spec((k, d), f32)
+    nv = _spec((1,), i32)
+    sums = _spec((k, d), f32)
+    counts = _spec((k,), f32)
+    sse = _spec((1,), f32)
+    assign = _spec((chunk,), i32)
+    shift = _spec((1,), f32)
+
+    sp = jax.jit(model.make_stats_partial(d, k, chunk, tile_n))
+    ao = jax.jit(model.make_assign_only(d, k, chunk, tile_n))
+    fs = jax.jit(model.make_fused_stats(d, k, chunk, tile_n))
+    fin = jax.jit(model.make_finalize(d, k))
+
+    yield (
+        f"stats_partial_d{d}_k{k}_c{chunk}",
+        sp.lower(x, mu, nv),
+        _sig(
+            [("x", x), ("mu", mu), ("n_valid", nv)],
+            [("sums", sums), ("counts", counts), ("sse", sse)],
+        ),
+        {"kind": "stats_partial", "d": d, "k": k, "chunk": chunk, "tile_n": tile_n},
+    )
+    yield (
+        f"assign_d{d}_k{k}_c{chunk}",
+        ao.lower(x, mu, nv),
+        _sig(
+            [("x", x), ("mu", mu), ("n_valid", nv)],
+            [("assign", assign)],
+        ),
+        {"kind": "assign", "d": d, "k": k, "chunk": chunk, "tile_n": tile_n},
+    )
+    yield (
+        f"fused_stats_d{d}_k{k}_c{chunk}",
+        fs.lower(x, mu, sums, counts, sse, nv),
+        _sig(
+            [("x", x), ("mu", mu), ("acc_sums", sums), ("acc_counts", counts),
+             ("acc_sse", sse), ("n_valid", nv)],
+            [("sums", sums), ("counts", counts), ("sse", sse)],
+        ),
+        {"kind": "fused_stats", "d": d, "k": k, "chunk": chunk, "tile_n": tile_n},
+    )
+    yield (
+        f"finalize_d{d}_k{k}",
+        fin.lower(sums, counts, mu),
+        _sig(
+            [("sums", sums), ("counts", counts), ("mu_old", mu)],
+            [("mu_new", mu), ("shift", shift)],
+        ),
+        {"kind": "finalize", "d": d, "k": k, "chunk": 0, "tile_n": 0},
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument("--tile", type=int, default=DEFAULT_TILE)
+    parser.add_argument(
+        "--no-ablation", action="store_true",
+        help="skip the chunk-size ablation artifacts",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = [
+        (d, k, chunk, min(args.tile, chunk))
+        for d, k in VARIANTS
+        for chunk in CHUNKS
+    ]
+    if not args.no_ablation:
+        d, k = ABLATION_VARIANT
+        for c in ABLATION_CHUNKS:
+            jobs.append((d, k, c, min(args.tile, c)))
+
+    entries = []
+    seen = set()
+    for d, k, chunk, tile_n in jobs:
+        for name, lowered, (ins, outs), meta in lower_variant(d, k, chunk, tile_n):
+            if name in seen:  # finalize_d{d}_k{k} repeats across chunk jobs
+                continue
+            seen.add(name)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append({
+                "name": name,
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                **meta,
+                "inputs": ins,
+                "outputs": outs,
+            })
+            print(f"  lowered {name}: {len(text)} chars")
+
+    manifest = {
+        "format": 1,
+        "default_chunk": DEFAULT_CHUNK,
+        "default_tile": args.tile,
+        "executables": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""L1 — the Lloyd-iteration hot-spot as a Pallas kernel.
+
+One fused kernel does, per tile of the chunk dimension:
+
+1. squared L2 distances to every centroid via the MXU-friendly expansion
+   ``||x||^2 - 2 x.mu^T + ||mu||^2`` (the cross term is a
+   ``[tile_n, d] x [d, kp]`` matmul that maps onto the systolic array);
+2. argmin over centroids -> assignment;
+3. per-cluster partial sums / counts via a one-hot matmul
+   (``onehot^T @ x`` — the TPU-native replacement for the paper's
+   OpenACC ``atomic`` adds; TPUs have no atomics) and the tile's SSE;
+4. accumulation of 3. into chunk-level output refs across grid steps
+   (constant output index_map -> the output block is revisited every
+   step; initialized at step 0).
+
+Hardware adaptation notes (DESIGN.md §3): the BlockSpec grid expresses
+the HBM->VMEM streaming schedule the paper expressed with OpenACC gangs:
+x tiles stream through VMEM while the (tiny) centroid block stays
+resident. K is padded to ``kp`` (lane-friendly multiple) by the caller
+with +large sentinel centroids so argmin never selects padding.
+
+``interpret=True`` is mandatory on this image: CPU PJRT cannot execute
+Mosaic custom-calls. The kernel is structured for TPU anyway; interpret
+mode traces the same program into portable HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel coordinate for padded centroid rows. Chosen so that
+# ||sentinel||^2 (~1e34 * d) stays finite in f32 while dwarfing any real
+# distance; padded rows therefore never win the argmin.
+PAD_SENTINEL = 1.0e17
+
+
+def _lloyd_tile_kernel(
+    nvalid_ref,  # [1]   i32, whole-array block (chunk-global valid count)
+    x_ref,       # [tile_n, d] f32 — this grid step's tile of points
+    mu_ref,      # [kp, d]     f32 — padded centroids, resident every step
+    assign_ref,  # [tile_n]    i32 out — this tile's assignments
+    sums_ref,    # [kp, d]     f32 out — chunk-level accumulator (revisited)
+    counts_ref,  # [kp]        f32 out — chunk-level accumulator (revisited)
+    sse_ref,     # [1]         f32 out — chunk-level accumulator (revisited)
+    *,
+    tile_n: int,
+):
+    step = pl.program_id(0)
+
+    x = x_ref[...]                                   # [tn, d]
+    mu = mu_ref[...]                                 # [kp, d]
+    kp = mu.shape[0]
+
+    # -- 1. distances via the matmul expansion (MXU path) ----------------
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)      # [tn, 1]
+    musq = jnp.sum(mu * mu, axis=1)[None, :]         # [1, kp]
+    cross = jax.lax.dot_general(
+        x, mu,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # [tn, kp] = x @ mu^T
+    d2 = xsq - 2.0 * cross + musq                    # [tn, kp]
+
+    # -- 2. assignment ----------------------------------------------------
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)     # [tn]
+    rows = step * tile_n + jax.lax.iota(jnp.int32, tile_n)
+    valid = rows < nvalid_ref[0]                     # [tn] bool
+    assign_ref[...] = jnp.where(valid, a, jnp.int32(-1))
+
+    # -- 3. tile-local statistics (one-hot matmul, no atomics) ------------
+    kiota = jax.lax.iota(jnp.int32, kp)              # [kp]
+    onehot = jnp.where(
+        valid[:, None], (a[:, None] == kiota[None, :]).astype(x.dtype), 0.0
+    )                                                # [tn, kp]
+    tile_sums = jax.lax.dot_general(
+        onehot, x,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # [kp, d] = onehot^T @ x
+    tile_counts = jnp.sum(onehot, axis=0)            # [kp]
+    best = jnp.min(d2, axis=1)                       # [tn]
+    # Distances are mathematically >= 0 but the expansion can go slightly
+    # negative in f32; clamp so SSE stays a valid sum of squares.
+    best = jnp.maximum(best, 0.0)
+    tile_sse = jnp.sum(jnp.where(valid, best, 0.0))[None]  # [1]
+
+    # -- 4. cross-step accumulation into the revisited output block -------
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    sums_ref[...] += tile_sums
+    counts_ref[...] += tile_counts
+    sse_ref[...] += tile_sse
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def lloyd_chunk(x, mu_padded, n_valid, *, tile_n: int = 2048):
+    """Run the fused assign+accumulate kernel over one chunk.
+
+    Args:
+      x:         [chunk, d] f32; chunk must be a multiple of ``tile_n``.
+      mu_padded: [kp, d] f32, padded with ``PAD_SENTINEL`` rows beyond the
+                 real K (see :func:`pad_centroids`).
+      n_valid:   [] or [1] i32 — rows of ``x`` beyond this are padding.
+      tile_n:    grid tile along the chunk dimension.
+
+    Returns:
+      (assign[chunk] i32, sums[kp, d] f32, counts[kp] f32, sse[1] f32).
+    """
+    chunk, d = x.shape
+    kp = mu_padded.shape[0]
+    if chunk % tile_n != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of tile_n {tile_n}")
+    grid = (chunk // tile_n,)
+    nv = jnp.reshape(n_valid.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_lloyd_tile_kernel, tile_n=tile_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # n_valid
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # x: streamed
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),       # mu: resident
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),       # assign
+            pl.BlockSpec((kp, d), lambda i: (0, 0)),       # sums (revisited)
+            pl.BlockSpec((kp,), lambda i: (0,)),           # counts (revisited)
+            pl.BlockSpec((1,), lambda i: (0,)),            # sse (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((chunk,), jnp.int32),
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(nv, x, mu_padded)
+
+
+def pad_k(k: int) -> int:
+    """Lane-friendly padded cluster count (next multiple of 8, min 8)."""
+    return max(8, -(-k // 8) * 8)
+
+
+def pad_centroids(mu: jnp.ndarray, kp: int) -> jnp.ndarray:
+    """Pad [k, d] centroids to [kp, d] with sentinel rows."""
+    k, d = mu.shape
+    if kp < k:
+        raise ValueError(f"kp {kp} < k {k}")
+    pad = jnp.full((kp - k, d), PAD_SENTINEL, dtype=mu.dtype)
+    return jnp.concatenate([mu, pad], axis=0)

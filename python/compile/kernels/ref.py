@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jax.numpy` ops in the most obvious way possible.
+pytest (``python/tests/``) sweeps shapes/dtypes with hypothesis and asserts
+the kernels match these oracles; the kernels are only trusted through that
+equivalence.
+
+Conventions (shared with the kernels and the rust runtime):
+
+- ``x``       : ``[n, d]`` float32 chunk of data points (possibly padded).
+- ``mu``      : ``[k, d]`` float32 current centroids.
+- ``n_valid`` : int32 scalar — number of *real* rows in ``x``; rows at
+  index >= n_valid are padding and must not contribute to any statistic.
+- assignments are int32 in ``[0, k)``; padded rows get assignment ``-1``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sq_distances(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Full [n, k] matrix of squared L2 distances ||x_i - mu_j||^2.
+
+    Computed the naive way (explicit difference) so it cannot share a bug
+    with the kernel's ``||x||^2 - 2 x.mu + ||mu||^2`` expansion.
+    """
+    diff = x[:, None, :] - mu[None, :, :]  # [n, k, d]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign(x: jnp.ndarray, mu: jnp.ndarray, n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-centroid assignment; padded rows -> -1."""
+    d2 = sq_distances(x, mu)
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    row = jnp.arange(x.shape[0], dtype=jnp.int32)
+    return jnp.where(row < n_valid, a, jnp.int32(-1))
+
+
+def partial_stats(x, mu, n_valid):
+    """Reference for the ``assign_partial`` executable.
+
+    Returns (assign[n] i32, sums[k,d] f32, counts[k] f32, sse[] f32):
+    per-cluster sums/counts over the valid rows plus the summed squared
+    distance of each valid point to its chosen centroid.
+    """
+    k = mu.shape[0]
+    a = assign(x, mu, n_valid)
+    valid = a >= 0
+    onehot = (a[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(x.dtype)
+    sums = onehot.T @ x  # [k, d]
+    counts = jnp.sum(onehot, axis=0)  # [k]
+    d2 = sq_distances(x, mu)
+    best = jnp.min(d2, axis=1)
+    sse = jnp.sum(jnp.where(valid, best, 0.0))
+    return a, sums, counts, sse
+
+
+def fused_step(x, mu, acc_sums, acc_counts, acc_sse, n_valid):
+    """Reference for the ``fused_step`` executable: running accumulators.
+
+    The offload engine streams chunks through this, keeping the
+    accumulators device-resident between calls within one Lloyd iteration.
+    """
+    a, sums, counts, sse = partial_stats(x, mu, n_valid)
+    return a, acc_sums + sums, acc_counts + counts, acc_sse + sse
+
+
+def finalize(sums, counts, mu_old):
+    """Reference for the ``finalize`` executable.
+
+    New centroids = sums / counts, with empty clusters keeping their old
+    centroid (the paper's C implementation divides by the count and
+    relies on no cluster emptying; we make the empty case explicit and
+    deterministic). Also returns the paper's convergence error
+    E = sum_k ||mu_new_k - mu_old_k||^2.
+    """
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    mu_new = jnp.where(counts[:, None] > 0, sums / safe, mu_old)
+    diff = mu_new - mu_old
+    shift = jnp.sum(diff * diff)
+    return mu_new, shift

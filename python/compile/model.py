@@ -1,0 +1,131 @@
+"""L2 — the Lloyd iteration as jax programs, built on the L1 kernel.
+
+Three programs are AOT-lowered per (d, K, chunk) variant — see DESIGN.md
+§2 for why these three and how the rust engines use them:
+
+- ``assign_partial``: one chunk -> (assignments, per-cluster partial
+  sums/counts, chunk SSE). The shared-memory engine's workers call this
+  on their shards; the leader merges partials (the paper's OpenMP
+  "local means -> critical-section merge" step).
+- ``fused_step``: ``assign_partial`` plus running-accumulator add. The
+  offload engine streams chunks through this, keeping the accumulators
+  device-side (the paper's OpenACC model: reductions happen on device).
+- ``finalize``: merged (sums, counts, mu_old) -> (mu_new, shift error E).
+  E is the paper's convergence criterion Σ_k ||μ^{t+1}_k − μ^t_k||².
+
+Python never runs at request time: these exist only to be lowered by
+``aot.py``. K is padded to a lane-friendly multiple inside the programs;
+the artifact boundary (what rust sees) always uses the *real* K.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import lloyd as L
+
+
+def make_assign_partial(d: int, k: int, chunk: int, tile_n: int):
+    """Build ``assign_partial`` for one (d, K, chunk) variant.
+
+    Signature: (x[chunk,d] f32, mu[k,d] f32, n_valid[1] i32)
+            -> (assign[chunk] i32, sums[k,d] f32, counts[k] f32, sse[1] f32)
+    """
+    kp = L.pad_k(k)
+
+    def assign_partial(x, mu, n_valid):
+        mu_p = L.pad_centroids(mu, kp)
+        a, sums_p, counts_p, sse = L.lloyd_chunk(x, mu_p, n_valid, tile_n=tile_n)
+        return a, sums_p[:k], counts_p[:k], sse
+
+    return assign_partial
+
+
+def make_stats_partial(d: int, k: int, chunk: int, tile_n: int):
+    """``assign_partial`` without the assignment output.
+
+    Signature: (x, mu, n_valid) -> (sums[k,d], counts[k], sse[1]).
+
+    The engines drive this in the iteration loop: the per-call result
+    is ~(k·d + k + 1) floats instead of a chunk-sized assignment array,
+    so the PJRT tuple fetch is bytes, not megabytes (§Perf L2-1). XLA
+    dead-code-eliminates the argmin write in the lowered module; the
+    final assignments come from one post-convergence pass over
+    :func:`make_assign_only`.
+    """
+    assign_partial = make_assign_partial(d, k, chunk, tile_n)
+
+    def stats_partial(x, mu, n_valid):
+        _, sums, counts, sse = assign_partial(x, mu, n_valid)
+        return sums, counts, sse
+
+    return stats_partial
+
+
+def make_assign_only(d: int, k: int, chunk: int, tile_n: int):
+    """Assignment-only program, run once after convergence.
+
+    Signature: (x, mu, n_valid) -> (assign[chunk] i32,)
+    """
+    assign_partial = make_assign_partial(d, k, chunk, tile_n)
+
+    def assign_only(x, mu, n_valid):
+        a, _, _, _ = assign_partial(x, mu, n_valid)
+        return (a,)
+
+    return assign_only
+
+
+def make_fused_stats(d: int, k: int, chunk: int, tile_n: int):
+    """``fused_step`` without the assignment output (offload engine's
+    device-side running reduction — the OpenACC `reduction` analog).
+
+    Signature: (x, mu, acc_sums, acc_counts, acc_sse, n_valid)
+            -> (new_sums, new_counts, new_sse)
+    """
+    stats_partial = make_stats_partial(d, k, chunk, tile_n)
+
+    def fused_stats(x, mu, acc_sums, acc_counts, acc_sse, n_valid):
+        sums, counts, sse = stats_partial(x, mu, n_valid)
+        return acc_sums + sums, acc_counts + counts, acc_sse + sse
+
+    return fused_stats
+
+
+def make_fused_step(d: int, k: int, chunk: int, tile_n: int):
+    """Build ``fused_step`` for one (d, K, chunk) variant.
+
+    Signature: (x, mu, acc_sums[k,d], acc_counts[k], acc_sse[1], n_valid)
+            -> (assign, new_sums, new_counts, new_sse)
+
+    The accumulators are passed in and returned so the offload engine can
+    keep them resident across the chunks of one Lloyd iteration.
+    """
+    assign_partial = make_assign_partial(d, k, chunk, tile_n)
+
+    def fused_step(x, mu, acc_sums, acc_counts, acc_sse, n_valid):
+        a, sums, counts, sse = assign_partial(x, mu, n_valid)
+        return a, acc_sums + sums, acc_counts + counts, acc_sse + sse
+
+    return fused_step
+
+
+def make_finalize(d: int, k: int):
+    """Build ``finalize`` for one (d, K) variant.
+
+    Signature: (sums[k,d] f32, counts[k] f32, mu_old[k,d] f32)
+            -> (mu_new[k,d] f32, shift[1] f32)
+
+    Empty clusters keep their previous centroid (deterministic, matches
+    the serial rust baseline bit-for-bit in intent; the paper's code
+    assumes clusters never empty).
+    """
+
+    def finalize(sums, counts, mu_old):
+        safe = jnp.maximum(counts, 1.0)[:, None]
+        mu_new = jnp.where(counts[:, None] > 0.0, sums / safe, mu_old)
+        diff = mu_new - mu_old
+        shift = jnp.sum(diff * diff)[None]
+        return mu_new, shift
+
+    return finalize

@@ -1,0 +1,132 @@
+"""AOT pipeline tests: lowering produces loadable HLO text and a
+manifest whose signatures match what the rust runtime will assume.
+
+These don't re-run the heavy full variant set; they lower one small
+variant end-to-end and check the contract pieces (HLO text shape,
+signature derivation, manifest completeness rules).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered_small():
+    """One tiny variant (d=2, k=4, chunk=128, tile=64), all programs."""
+    return list(aot.lower_variant(2, 4, 128, 64))
+
+
+def test_four_programs_per_variant(lowered_small):
+    kinds = [meta["kind"] for _, _, _, meta in lowered_small]
+    assert kinds == ["stats_partial", "assign", "fused_stats", "finalize"]
+
+
+def test_hlo_text_parses_as_hlo(lowered_small):
+    for name, lowered, _, _ in lowered_small:
+        text = aot.to_hlo_text(lowered)
+        # HLO text essentials: module header + ENTRY + ROOT tuple
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        assert "ROOT" in text, name
+        # ids must be small (the whole point of the text round-trip:
+        # xla_extension 0.5.1 rejects 64-bit instruction ids)
+        assert "parameter(0)" in text, name
+
+
+def test_signatures_match_program_outputs(lowered_small):
+    """Manifest signature == actual jax eval shapes for every program."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 2)).astype(np.float32))
+    mu = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+    nv = jnp.asarray([100], dtype=jnp.int32)
+    sums = jnp.zeros((4, 2), jnp.float32)
+    counts = jnp.zeros((4,), jnp.float32)
+    sse = jnp.zeros((1,), jnp.float32)
+
+    args_by_kind = {
+        "stats_partial": (x, mu, nv),
+        "assign": (x, mu, nv),
+        "fused_stats": (x, mu, sums, counts, sse, nv),
+        "finalize": (sums, counts, mu),
+    }
+    makers = {
+        "stats_partial": model.make_stats_partial(2, 4, 128, 64),
+        "assign": model.make_assign_only(2, 4, 128, 64),
+        "fused_stats": model.make_fused_stats(2, 4, 128, 64),
+        "finalize": model.make_finalize(2, 4),
+    }
+    for name, _, (ins, outs), meta in lowered_small:
+        kind = meta["kind"]
+        result = makers[kind](*args_by_kind[kind])
+        if not isinstance(result, tuple):
+            result = (result,)
+        assert len(result) == len(outs), name
+        for got, spec in zip(result, outs):
+            assert list(got.shape) == spec["shape"], (name, spec["name"])
+            assert got.dtype.name == spec["dtype"], (name, spec["name"])
+        assert len(args_by_kind[kind]) == len(ins), name
+
+
+def test_stats_partial_drops_assign_everywhere(lowered_small):
+    """stats_partial's HLO must not output a chunk-length i32 tensor
+    (the assignment was the §Perf L2-1 transfer hog)."""
+    for name, lowered, _, meta in lowered_small:
+        if meta["kind"] != "stats_partial":
+            continue
+        text = aot.to_hlo_text(lowered)
+        # the entry computation's ROOT tuple elements
+        root = [l for l in text.splitlines() if "ROOT" in l and "tuple(" in l]
+        assert root, name
+        assert "s32[128]" not in root[-1], f"{name}: assign leaked into outputs"
+
+
+def test_manifest_main_writes_complete_set(tmp_path, monkeypatch):
+    """Run aot.main with a tiny matrix and verify the manifest indexes
+    every file it wrote."""
+    monkeypatch.setattr(aot, "VARIANTS", [(2, 4)])
+    monkeypatch.setattr(aot, "CHUNKS", [128])
+    monkeypatch.setattr(aot, "ABLATION_CHUNKS", [])
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(tmp_path), "--tile", "64"]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == 1
+    names = {e["name"] for e in manifest["executables"]}
+    assert names == {
+        "stats_partial_d2_k4_c128",
+        "assign_d2_k4_c128",
+        "fused_stats_d2_k4_c128",
+        "finalize_d2_k4",
+    }
+    for e in manifest["executables"]:
+        f = tmp_path / e["file"]
+        assert f.exists(), e["file"]
+        import hashlib
+        assert hashlib.sha256(f.read_bytes()).hexdigest() == e["sha256"]
+
+
+def test_tile_must_divide_chunk():
+    with pytest.raises(ValueError):
+        ap = model.make_assign_partial(2, 4, 100, 64)  # 100 % 64 != 0
+        x = jnp.zeros((100, 2), jnp.float32)
+        mu = jnp.zeros((4, 2), jnp.float32)
+        ap(x, mu, jnp.asarray([100], dtype=jnp.int32))
+
+
+def test_lowering_is_deterministic():
+    """Same variant lowers to byte-identical HLO text (artifact caching
+    and sha256 integrity depend on this)."""
+    a = list(aot.lower_variant(2, 4, 128, 64))
+    b = list(aot.lower_variant(2, 4, 128, 64))
+    for (n1, l1, _, _), (n2, l2, _, _) in zip(a, b):
+        assert n1 == n2
+        assert aot.to_hlo_text(l1) == aot.to_hlo_text(l2)

@@ -1,0 +1,129 @@
+"""Additional L1 kernel properties beyond point-wise oracle equality:
+dtype policy, centroid-permutation equivariance, translation robustness,
+and sentinel-padding safety under hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import lloyd as L
+
+
+def _run(x, mu, n_valid, tile=64):
+    n, d = x.shape
+    k = mu.shape[0]
+    ap = model.make_assign_partial(d, k, n, tile)
+    return ap(
+        jnp.asarray(x), jnp.asarray(mu), jnp.asarray([n_valid], dtype=jnp.int32)
+    )
+
+
+# ------------------------------------------------------------- dtypes
+
+def test_f32_is_the_artifact_dtype():
+    """The AOT contract is f32 (manifest + rust runtime); the kernel
+    must produce f32 stats and i32 assignments from f32 inputs."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(128, 3)).astype(np.float32)
+    mu = rng.normal(size=(4, 3)).astype(np.float32)
+    a, sums, counts, sse = _run(x, mu, 128)
+    assert a.dtype == jnp.int32
+    assert sums.dtype == jnp.float32
+    assert counts.dtype == jnp.float32
+    assert sse.dtype == jnp.float32
+
+
+def test_f64_inputs_follow_jax_x64_policy():
+    """Without jax_enable_x64, f64 inputs silently demote to f32 —
+    document the behavior the build relies on (the AOT path only ever
+    traces f32 ShapeDtypeStructs, so this is belt-and-braces)."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(64, 2)).astype(np.float64)
+    mu = rng.normal(size=(4, 2)).astype(np.float64)
+    a, sums, _, _ = _run(x, mu, 64)
+    assert sums.dtype == jnp.float32
+    assert a.dtype == jnp.int32
+
+
+# -------------------------------------------------- equivariance sweeps
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), k=st.sampled_from([4, 8]))
+def test_centroid_permutation_equivariance(seed, k):
+    """Permuting centroid rows permutes assignments and per-cluster
+    stats identically — no hidden order dependence in the one-hot
+    matmul accumulation."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(128, 3)).astype(np.float32)
+    mu = rng.normal(size=(k, 3)).astype(np.float32) * 3.0
+    perm = rng.permutation(k)
+
+    a1, s1, c1, e1 = _run(x, mu, 128)
+    a2, s2, c2, e2 = _run(x, mu[perm], 128)
+
+    # mapping: cluster j in permuted run == cluster perm[j] in original
+    a2 = np.asarray(a2)
+    remapped = np.asarray([perm[j] for j in a2])
+    np.testing.assert_array_equal(remapped, np.asarray(a1))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1)[perm], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c1)[perm], atol=1e-5)
+    np.testing.assert_allclose(float(e2[0]), float(e1[0]), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    shift=st.floats(-50.0, 50.0),
+)
+def test_translation_equivariance(seed, shift):
+    """Translating data and centroids together must not change the
+    assignment (distances are translation invariant); SSE unchanged."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(128, 2)).astype(np.float32)
+    mu = rng.normal(size=(4, 2)).astype(np.float32) * 2.0
+    a1, _, c1, e1 = _run(x, mu, 128)
+    a2, _, c2, e2 = _run(x + np.float32(shift), mu + np.float32(shift), 128)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    # the ||x||²−2x·μ+||μ||² expansion loses precision as |shift| grows;
+    # tolerance scales accordingly
+    tol = 1e-3 + abs(shift) * 2e-4
+    np.testing.assert_allclose(float(e1[0]), float(e2[0]), rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------- sentinel safety
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), k=st.sampled_from([1, 3, 5, 11]))
+def test_sentinel_rows_never_win_even_for_huge_data(seed, k):
+    """K-padding rows must never be selected even at extreme data
+    magnitudes (|x| up to 1e6)."""
+    rng = np.random.default_rng(seed)
+    kp = L.pad_k(k)
+    x = (rng.normal(size=(64, 3)) * 1e6).astype(np.float32)
+    mu = (rng.normal(size=(k, 3)) * 1e6).astype(np.float32)
+    mu_p = L.pad_centroids(jnp.asarray(mu), kp)
+    a, sums, counts, _ = L.lloyd_chunk(
+        jnp.asarray(x), mu_p, jnp.asarray([64], dtype=jnp.int32), tile_n=64
+    )
+    a = np.asarray(a)
+    assert a.max() < k, f"padding row selected: {a.max()} >= {k}"
+    counts = np.asarray(counts)
+    assert np.all(counts[k:] == 0.0), "padding rows accumulated counts"
+    sums = np.asarray(sums)
+    assert np.all(sums[k:] == 0.0), "padding rows accumulated sums"
+
+
+def test_chunk_must_be_tile_multiple():
+    with pytest.raises(ValueError, match="multiple"):
+        L.lloyd_chunk(
+            jnp.zeros((100, 2), jnp.float32),
+            jnp.zeros((8, 2), jnp.float32),
+            jnp.asarray([100], dtype=jnp.int32),
+            tile_n=64,
+        )

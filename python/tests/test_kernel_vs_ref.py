@@ -1,0 +1,270 @@
+"""L1 kernel vs pure-jnp oracle: hypothesis sweeps over shapes and data.
+
+The kernel is only trusted through this equivalence (DESIGN.md §2). We
+sweep chunk/tile/d/k/n_valid and several data regimes (generic normal,
+clustered, duplicated points, extreme coordinates) and compare every
+output against ``ref.py`` with f32-appropriate tolerances.
+
+Assignment ties: the kernel computes distances via the matmul expansion,
+the oracle via explicit differences; at exact ties (or near-ties within
+f32 noise) argmin may legitimately differ. Comparisons therefore accept
+assignment mismatches only where the two candidate distances are within
+a relative epsilon, and always check the *aggregate* statistics with
+tolerances scaled to the data magnitude.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lloyd as L
+from compile.kernels import ref
+from compile import model
+
+
+def _mk(rng, n, d, k, scale=1.0, clustered=False):
+    if clustered:
+        centers = rng.normal(size=(k, d)) * 5.0 * scale
+        idx = rng.integers(0, k, size=n)
+        x = centers[idx] + rng.normal(size=(n, d)) * 0.3 * scale
+    else:
+        x = rng.normal(size=(n, d)) * scale
+    mu = rng.normal(size=(k, d)) * scale
+    return x.astype(np.float32), mu.astype(np.float32)
+
+
+def _check_assign(x, mu, got, want):
+    """Assignments must agree except at near-ties (see module docstring)."""
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if np.array_equal(got, want):
+        return
+    d2 = np.asarray(ref.sq_distances(jnp.asarray(x), jnp.asarray(mu)))
+    bad = np.nonzero(got != want)[0]
+    for i in bad:
+        assert got[i] >= 0 and want[i] >= 0, f"validity mask differs at row {i}"
+        a, b = d2[i, got[i]], d2[i, want[i]]
+        denom = max(abs(a), abs(b), 1e-6)
+        assert abs(a - b) / denom < 1e-3, (
+            f"row {i}: kernel chose {got[i]} (d2={a}), ref {want[i]} (d2={b})"
+        )
+
+
+def _run_and_compare(x, mu, n_valid, tile_n):
+    n, d = x.shape
+    k = mu.shape[0]
+    ap = model.make_assign_partial(d, k, n, tile_n)
+    nv = jnp.asarray([n_valid], dtype=jnp.int32)
+    a, sums, counts, sse = ap(jnp.asarray(x), jnp.asarray(mu), nv)
+    ra, rsums, rcounts, rsse = ref.partial_stats(jnp.asarray(x), jnp.asarray(mu), nv)
+
+    _check_assign(x, mu, a, ra)
+    scale = float(np.abs(x).max()) + 1.0
+    np.testing.assert_allclose(
+        np.asarray(counts), np.asarray(rcounts), atol=n_valid * 1e-3 + 0.5
+    )
+    # counts must be exact integers
+    assert float(np.asarray(counts).sum()) == pytest.approx(n_valid, abs=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(sums), np.asarray(rsums),
+        rtol=1e-4, atol=scale * max(n_valid, 1) * 1e-5 + 1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(sse)[0], float(rsse),
+        rtol=1e-3, atol=scale * scale * max(n_valid, 1) * 1e-5 + 1e-4,
+    )
+    return a, sums, counts, sse
+
+
+# ---------------------------------------------------------------- sweeps
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    d=st.sampled_from([2, 3]),
+    k=st.sampled_from([4, 8, 11]),
+    tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([32, 64, 256]),
+    frac_valid=st.floats(0.01, 1.0),
+    clustered=st.booleans(),
+)
+def test_partial_stats_sweep(seed, d, k, tiles, tile_n, frac_valid, clustered):
+    rng = np.random.default_rng(seed)
+    n = tiles * tile_n
+    n_valid = max(1, int(n * frac_valid))
+    x, mu = _mk(rng, n, d, k, clustered=clustered)
+    _run_and_compare(x, mu, n_valid, tile_n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_partial_stats_scales(seed, scale):
+    """Extreme coordinate magnitudes must not break the expansion."""
+    rng = np.random.default_rng(seed)
+    x, mu = _mk(rng, 128, 3, 4, scale=scale)
+    _run_and_compare(x, mu, 128, 64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_duplicate_points(seed):
+    """Many exactly-duplicated points (ties everywhere in the data)."""
+    rng = np.random.default_rng(seed)
+    base, mu = _mk(rng, 16, 2, 4)
+    x = np.repeat(base, 8, axis=0)  # 128 rows, 8 copies each
+    _run_and_compare(x, mu, 128, 32)
+
+
+def test_all_points_one_cluster():
+    """Degenerate: one centroid is vastly closer; all counts land on it."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(128, 3)).astype(np.float32)
+    mu = np.full((4, 3), 100.0, dtype=np.float32)
+    mu[2] = 0.0
+    _, _, counts, _ = _run_and_compare(x, mu, 128, 64)
+    counts = np.asarray(counts)
+    assert counts[2] == 128 and counts.sum() == 128
+
+
+def test_n_valid_zero_statistics_empty():
+    """All-padding chunk contributes nothing."""
+    rng = np.random.default_rng(1)
+    x, mu = _mk(rng, 64, 2, 4)
+    ap = model.make_assign_partial(2, 4, 64, 32)
+    a, sums, counts, sse = ap(
+        jnp.asarray(x), jnp.asarray(mu), jnp.asarray([0], dtype=jnp.int32)
+    )
+    assert np.all(np.asarray(a) == -1)
+    assert np.all(np.asarray(sums) == 0)
+    assert np.all(np.asarray(counts) == 0)
+    assert float(np.asarray(sse)[0]) == 0.0
+
+
+def test_single_tile_equals_multi_tile():
+    """Grid decomposition must not change the chunk-level statistics."""
+    rng = np.random.default_rng(3)
+    x, mu = _mk(rng, 256, 3, 8, clustered=True)
+    nv = jnp.asarray([256], dtype=jnp.int32)
+    ap1 = model.make_assign_partial(3, 8, 256, 256)
+    ap4 = model.make_assign_partial(3, 8, 256, 64)
+    a1, s1, c1, e1 = ap1(jnp.asarray(x), jnp.asarray(mu), nv)
+    a4, s4, c4, e4 = ap4(jnp.asarray(x), jnp.asarray(mu), nv)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a4))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s4), rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c4))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e4), rtol=1e-4)
+
+
+# ------------------------------------------------------------ fused_step
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    d=st.sampled_from([2, 3]),
+    k=st.sampled_from([4, 8]),
+)
+def test_fused_step_accumulates(seed, d, k):
+    rng = np.random.default_rng(seed)
+    x, mu = _mk(rng, 128, d, k)
+    acc_s = rng.normal(size=(k, d)).astype(np.float32)
+    acc_c = rng.integers(0, 50, size=(k,)).astype(np.float32)
+    acc_e = np.array([3.5], dtype=np.float32)
+    nv = jnp.asarray([100], dtype=jnp.int32)
+
+    fs = model.make_fused_step(d, k, 128, 64)
+    a, s, c, e = fs(
+        jnp.asarray(x), jnp.asarray(mu),
+        jnp.asarray(acc_s), jnp.asarray(acc_c), jnp.asarray(acc_e), nv,
+    )
+    ra, rs, rc, re = ref.fused_step(
+        jnp.asarray(x), jnp.asarray(mu),
+        jnp.asarray(acc_s), jnp.asarray(acc_c), jnp.asarray(acc_e[0]), nv,
+    )
+    _check_assign(x, mu, a, ra)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(e)[0], float(re), rtol=1e-3)
+
+
+def test_fused_step_chain_equals_batch():
+    """Streaming two chunks through fused_step == one partial over both."""
+    rng = np.random.default_rng(11)
+    d, k = 3, 4
+    x1, mu = _mk(rng, 128, d, k)
+    x2, _ = _mk(rng, 128, d, k)
+    nv = jnp.asarray([128], dtype=jnp.int32)
+    fs = model.make_fused_step(d, k, 128, 64)
+    z_s = jnp.zeros((k, d), jnp.float32)
+    z_c = jnp.zeros((k,), jnp.float32)
+    z_e = jnp.zeros((1,), jnp.float32)
+    _, s, c, e = fs(jnp.asarray(x1), jnp.asarray(mu), z_s, z_c, z_e, nv)
+    _, s, c, e = fs(jnp.asarray(x2), jnp.asarray(mu), s, c, e, nv)
+
+    both = np.concatenate([x1, x2])
+    _, rs, rc, re = ref.partial_stats(
+        jnp.asarray(both), jnp.asarray(mu), jnp.asarray([256], dtype=jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(e)[0], float(re), rtol=1e-3)
+
+
+# -------------------------------------------------------------- finalize
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    d=st.sampled_from([2, 3]),
+    k=st.sampled_from([4, 8, 11]),
+    empty=st.integers(0, 3),
+)
+def test_finalize(seed, d, k, empty):
+    rng = np.random.default_rng(seed)
+    sums = rng.normal(size=(k, d)).astype(np.float32) * 100
+    counts = rng.integers(1, 1000, size=(k,)).astype(np.float32)
+    counts[:empty] = 0.0  # empty clusters keep old centroid
+    mu_old = rng.normal(size=(k, d)).astype(np.float32)
+
+    fin = model.make_finalize(d, k)
+    mu_new, shift = fin(jnp.asarray(sums), jnp.asarray(counts), jnp.asarray(mu_old))
+    rmu, rshift = ref.finalize(jnp.asarray(sums), jnp.asarray(counts), jnp.asarray(mu_old))
+    np.testing.assert_allclose(np.asarray(mu_new), np.asarray(rmu), rtol=1e-6)
+    np.testing.assert_allclose(float(np.asarray(shift)[0]), float(rshift), rtol=1e-5)
+    # empty clusters: unchanged centroids
+    np.testing.assert_array_equal(np.asarray(mu_new)[:empty], mu_old[:empty])
+
+
+def test_finalize_converged_zero_shift():
+    """If sums/counts reproduce mu_old exactly, shift must be 0."""
+    k, d = 4, 3
+    mu_old = np.arange(k * d, dtype=np.float32).reshape(k, d)
+    counts = np.full((k,), 5.0, dtype=np.float32)
+    sums = mu_old * counts[:, None]
+    fin = model.make_finalize(d, k)
+    mu_new, shift = fin(jnp.asarray(sums), jnp.asarray(counts), jnp.asarray(mu_old))
+    np.testing.assert_allclose(np.asarray(mu_new), mu_old, rtol=1e-6)
+    assert float(np.asarray(shift)[0]) < 1e-10
+
+
+# ------------------------------------------------------------- pad utils
+
+@pytest.mark.parametrize("k,kp", [(1, 8), (4, 8), (8, 8), (9, 16), (11, 16), (16, 16), (17, 24)])
+def test_pad_k(k, kp):
+    assert L.pad_k(k) == kp
+
+
+def test_pad_centroids_sentinel_never_wins():
+    rng = np.random.default_rng(5)
+    mu = rng.normal(size=(11, 3)).astype(np.float32)
+    mu_p = L.pad_centroids(jnp.asarray(mu), 16)
+    assert mu_p.shape == (16, 3)
+    x = rng.normal(size=(64, 3)).astype(np.float32) * 1e3
+    d2 = ref.sq_distances(jnp.asarray(x), mu_p)
+    a = np.asarray(jnp.argmin(d2, axis=1))
+    assert a.max() < 11

@@ -1,0 +1,86 @@
+//! Bench A1–A3 — the design-choice ablations DESIGN.md §5 calls out:
+//! A1 chunk size, A2 merge policy (leader vs critical), A3 algorithm /
+//! init matrix (Lloyd vs Elkan vs Hamerly vs mini-batch; random vs
+//! k-means++).
+//!
+//!     PARAKM_SCALE=full cargo bench --bench ablations
+
+use std::sync::mpsc;
+
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::eval::{ablations, Scale};
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::serve::batcher::{Batcher, Job};
+use parakmeans::serve::{BatcherConfig, Request};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts { repeats: 1, ..BenchOpts::from_env() };
+    println!("== ABLATIONS bench (scale {scale:?}) ==");
+    let a1 = run_case("A1 chunk size", &opts, || {
+        ablations::chunk_size(scale).expect("a1")
+    });
+    report(&a1);
+    let a2 = run_case("A2 merge policy", &opts, || {
+        ablations::merge_policy(scale).expect("a2")
+    });
+    report(&a2);
+    let a3 = run_case("A3 algorithms/init", &opts, || {
+        ablations::algorithms(scale).expect("a3")
+    });
+    report(&a3);
+    serve_batching_ablation();
+}
+
+/// A-serve — batching level vs device-call efficiency: the same 256
+/// requests × 32 points flushed in groups of g requests per batch.
+/// More batching = fewer padded `assign` calls = higher points/s;
+/// the latency side of the trade-off lives in `examples/serving_load`.
+fn serve_batching_ablation() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built; skipping A-serve)");
+        return;
+    }
+    let ds = MixtureSpec::paper_3d(4).generate(20_000, 3);
+    let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+    let opts = BenchOpts { repeats: 3, ..BenchOpts::from_env() };
+    let requests = 256usize;
+    let points = 32usize;
+    for group in [1usize, 8, 64, 128] {
+        let mut b = Batcher::new(dir, model.centroids.clone(), 3, 4, BatcherConfig::default())
+            .expect("batcher");
+        let mk_jobs = |lo: usize, hi: usize| -> (Vec<Job>, Vec<mpsc::Receiver<_>>) {
+            let mut jobs = Vec::new();
+            let mut rxs = Vec::new();
+            for r in lo..hi {
+                let pts: Vec<Vec<f64>> = (0..points)
+                    .map(|i| ds.point((r * points + i) % ds.len()).iter().map(|&v| v as f64).collect())
+                    .collect();
+                let (tx, rx) = mpsc::channel();
+                jobs.push(Job { request: Request { id: r as u64, points: pts }, reply: tx });
+                rxs.push(rx);
+            }
+            (jobs, rxs)
+        };
+        let s = run_case(&format!("A-serve batch-group={group}"), &opts, || {
+            let mut done = 0;
+            while done < requests {
+                let hi = (done + group).min(requests);
+                let (jobs, rxs) = mk_jobs(done, hi);
+                b.flush(jobs);
+                for rx in rxs {
+                    rx.recv().expect("reply");
+                }
+                done = hi;
+            }
+        });
+        report(&s);
+        println!(
+            "         -> {:.0} points/s, {} device calls",
+            (requests * points) as f64 / s.median(),
+            b.stats.device_calls
+        );
+    }
+}

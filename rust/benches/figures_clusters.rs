@@ -1,0 +1,27 @@
+//! Bench F1–F6 — regenerates paper Figures 1–6: cluster scatter plots
+//! (serial vs parallel) for 3D 1M/400k (K=4) and 2D 500k (K=11), with
+//! the paper's visual "similar clustering" claim checked as ARI.
+//!
+//!     PARAKM_SCALE=full cargo bench --bench figures_clusters
+
+use parakmeans::eval::{figures, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts { repeats: 1, ..BenchOpts::from_env() };
+    println!("== FIGURES 1-6 bench (scale {scale:?}) ==");
+    let s = run_case("cluster figures (1-6)", &opts, || {
+        let figs = figures::cluster_figures(scale).expect("figures");
+        for f in &figs {
+            assert!(
+                f.ari_serial_vs_parallel > 0.99,
+                "{}: parallel clustering diverged (ARI {})",
+                f.name,
+                f.ari_serial_vs_parallel
+            );
+        }
+        figs
+    });
+    report(&s);
+}

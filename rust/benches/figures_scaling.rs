@@ -1,0 +1,21 @@
+//! Bench F11–F12 — regenerates paper Figures 11/12: time vs dataset
+//! scale for serial / shared(p=8) / offload, 3D and 2D families.
+//!
+//!     PARAKM_SCALE=full cargo bench --bench figures_scaling
+
+use parakmeans::eval::{figures, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts { repeats: 1, ..BenchOpts::from_env() };
+    println!("== FIGURES 11-12 bench (scale {scale:?}) ==");
+    let s3 = run_case("time-vs-scaling 3D (fig 11)", &opts, || {
+        figures::time_vs_scaling(3, scale).expect("3d")
+    });
+    report(&s3);
+    let s2 = run_case("time-vs-scaling 2D (fig 12)", &opts, || {
+        figures::time_vs_scaling(2, scale).expect("2d")
+    });
+    report(&s2);
+}

@@ -1,0 +1,22 @@
+//! Bench F7–F10 — regenerates paper Figures 7/8 (speedup ψ(n,p)) and
+//! 9/10 (efficiency ε(n,p)) for the 3D and 2D families. Writes CSV +
+//! SVG to results/figures/ and prints the series.
+//!
+//!     PARAKM_SCALE=full cargo bench --bench figures_speedup_efficiency
+
+use parakmeans::eval::{figures, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts { repeats: 1, ..BenchOpts::from_env() };
+    println!("== FIGURES 7-10 bench (scale {scale:?}) ==");
+    let s3 = run_case("speedup+efficiency 3D (figs 7/9)", &opts, || {
+        figures::speedup_efficiency(3, scale).expect("3d")
+    });
+    report(&s3);
+    let s2 = run_case("speedup+efficiency 2D (figs 8/10)", &opts, || {
+        figures::speedup_efficiency(2, scale).expect("2d")
+    });
+    report(&s2);
+}

@@ -1,0 +1,93 @@
+//! Microbenchmarks of the L3 hot path (EXPERIMENTS.md §Perf).
+//!
+//! Isolates the pieces the profile showed matter:
+//!  - `assign_accumulate` (the per-shard inner loop) at d = 2/3,
+//!    K = 4/8/11 — points/sec;
+//!  - generic vs monomorphized inner loop (the d-specialization);
+//!  - PartialStats merge (the leader's per-worker fold);
+//!  - one AOT `assign_partial` call per chunk size — XLA call overhead
+//!    + per-point device throughput.
+//!
+//!     cargo bench --bench hotpath_micro
+
+use parakmeans::config::RunConfig;
+use parakmeans::coordinator::shared::{run_with, MergePolicy};
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::step::{assign_accumulate, PartialStats};
+use parakmeans::rng::Pcg64;
+use parakmeans::runtime::manifest::ExecKind;
+use parakmeans::runtime::Runtime;
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    println!("== hot-path microbench ==");
+
+    // ---- assign_accumulate throughput ---------------------------------
+    let n = 200_000;
+    for (d, ks) in [(2usize, [4usize, 8, 11]), (3, [4, 8, 11])] {
+        let mut rng = Pcg64::new(1, 0);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 20.0).collect();
+        for k in ks {
+            let mu: Vec<f32> = (0..k * d).map(|_| rng.next_f32() * 20.0).collect();
+            let mut assign = vec![0i32; n];
+            let mut stats = PartialStats::zeros(k, d);
+            let s = run_case(&format!("assign_accumulate d={d} k={k} n={n}"), &opts, || {
+                assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats);
+            });
+            report(&s);
+            println!(
+                "         -> {:.1} Mpoints/s",
+                n as f64 / s.median() / 1e6
+            );
+        }
+    }
+
+    // ---- merge cost (leader fold) --------------------------------------
+    for (k, d) in [(4usize, 3usize), (8, 2), (11, 2)] {
+        let mut a = PartialStats::zeros(k, d);
+        let b = PartialStats::zeros(k, d);
+        let s = run_case(&format!("stats merge k={k} d={d} x1000"), &opts, || {
+            for _ in 0..1000 {
+                a.merge(&b);
+            }
+        });
+        report(&s);
+    }
+
+    // ---- AOT call overhead + throughput per chunk ----------------------
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::new(dir).expect("runtime");
+        for chunk in [4096usize, 65536] {
+            let Ok(spec) = rt.find(ExecKind::StatsPartial, 3, 4, chunk) else {
+                continue;
+            };
+            let mut rng = Pcg64::new(2, 0);
+            let x: Vec<f32> = (0..chunk * 3).map(|_| rng.next_f32() * 20.0).collect();
+            let mu: Vec<f32> = (0..12).map(|_| rng.next_f32() * 20.0).collect();
+            let xb = rt.upload_f32(&x, &[chunk, 3]).unwrap();
+            let nvb = rt.upload_i32(&[chunk as i32], &[1]).unwrap();
+            rt.prepare(&spec).unwrap();
+            let mub = rt.upload_f32(&mu, &[4, 3]).unwrap();
+            let s = run_case(&format!("aot stats_partial d=3 k=4 chunk={chunk}"), &opts, || {
+                rt.execute_buffers(&spec, &[&xb, &mub, &nvb]).unwrap()
+            });
+            report(&s);
+            println!(
+                "         -> {:.1} Mpoints/s through XLA",
+                chunk as f64 / s.median() / 1e6
+            );
+        }
+
+        // ---- end-to-end shared engine, one workload ---------------------
+        let ds = MixtureSpec::paper_3d(4).generate(100_000, 9);
+        let cfg = RunConfig { k: 4, seed: 42, ..Default::default() };
+        let s = run_case("shared engine e2e n=100k p=4", &opts, || {
+            run_with(&mut rt, &ds, &cfg, 4, MergePolicy::Leader).unwrap()
+        });
+        report(&s);
+    } else {
+        println!("(artifacts not built; skipping AOT microbenches)");
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench T1 — regenerates paper Table 1: serial convergence time vs
+//! K ∈ {4, 8, 11} on the largest 2D (500k) and 3D (1M) datasets.
+//!
+//!     PARAKM_SCALE=full cargo bench --bench table1_serial
+//!
+//! Measurement: the eval runner performs the full convergence run; the
+//! house harness wraps it with warmup + repeats (BenchOpts).
+
+use parakmeans::eval::{tables, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts::from_env();
+    println!("== TABLE 1 bench (scale {scale:?}) ==");
+    let sample = run_case("table1(all cells)", &opts, || {
+        tables::table1(scale).expect("table1")
+    });
+    report(&sample);
+}

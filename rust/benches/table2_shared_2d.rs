@@ -1,0 +1,17 @@
+//! Bench T2 — regenerates paper Table 2: 2D dataset, shared-memory
+//! engine time vs threads p ∈ {2, 4, 8, 16} (K = 8).
+//!
+//!     PARAKM_SCALE=full cargo bench --bench table2_shared_2d
+
+use parakmeans::eval::{tables, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts::from_env();
+    println!("== TABLE 2 bench (scale {scale:?}) ==");
+    let sample = run_case("table2(all cells)", &opts, || {
+        tables::table2(scale).expect("table2")
+    });
+    report(&sample);
+}

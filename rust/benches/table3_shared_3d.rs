@@ -1,0 +1,17 @@
+//! Bench T3 — regenerates paper Table 3: 3D dataset family,
+//! shared-memory engine time vs threads p ∈ {2, 4, 8, 16} (K = 4).
+//!
+//!     PARAKM_SCALE=full cargo bench --bench table3_shared_3d
+
+use parakmeans::eval::{tables, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts::from_env();
+    println!("== TABLE 3 bench (scale {scale:?}) ==");
+    let sample = run_case("table3(all cells)", &opts, || {
+        tables::table3(scale).expect("table3")
+    });
+    report(&sample);
+}

@@ -1,0 +1,17 @@
+//! Bench T4 — regenerates paper Table 4: 2D dataset size vs
+//! offload-engine time (K = 8).
+//!
+//!     PARAKM_SCALE=full cargo bench --bench table4_offload_2d
+
+use parakmeans::eval::{tables, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts::from_env();
+    println!("== TABLE 4 bench (scale {scale:?}) ==");
+    let sample = run_case("table4(all cells)", &opts, || {
+        tables::table4(scale).expect("table4")
+    });
+    report(&sample);
+}

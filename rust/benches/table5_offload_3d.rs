@@ -1,0 +1,17 @@
+//! Bench T5 — regenerates paper Table 5: 3D dataset size vs
+//! offload-engine time (K = 4).
+//!
+//!     PARAKM_SCALE=full cargo bench --bench table5_offload_3d
+
+use parakmeans::eval::{tables, Scale};
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn main() {
+    let scale = Scale::from_env();
+    let opts = BenchOpts::from_env();
+    println!("== TABLE 5 bench (scale {scale:?}) ==");
+    let sample = run_case("table5(all cells)", &opts, || {
+        tables::table5(scale).expect("table5")
+    });
+    report(&sample);
+}

@@ -1,0 +1,190 @@
+//! Run configuration shared by the CLI, engines, eval harness and
+//! examples.
+
+use crate::error::{Error, Result};
+
+/// Which engine executes the Lloyd iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust serial Lloyd (paper's serial C program).
+    Serial,
+    /// Pure-rust shared-memory threads (paper's OpenMP program).
+    Threads,
+    /// AOT shared-memory leader/worker engine (OpenMP model over the
+    /// PJRT executables).
+    Shared,
+    /// AOT device-offload engine (OpenACC model).
+    Offload,
+    /// Triangle-inequality accelerated serial baselines (paper ref [4]).
+    Elkan,
+    Hamerly,
+    /// Mini-batch extension.
+    MiniBatch,
+    /// Out-of-core streaming engine (reads a .pkd file directly).
+    Streaming,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "serial" => Engine::Serial,
+            "threads" => Engine::Threads,
+            "shared" => Engine::Shared,
+            "offload" => Engine::Offload,
+            "elkan" => Engine::Elkan,
+            "hamerly" => Engine::Hamerly,
+            "minibatch" => Engine::MiniBatch,
+            "streaming" => Engine::Streaming,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown engine `{other}` (serial|threads|shared|offload|elkan|hamerly|minibatch|streaming)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Engine::Serial => "serial",
+            Engine::Threads => "threads",
+            Engine::Shared => "shared",
+            Engine::Offload => "offload",
+            Engine::Elkan => "elkan",
+            Engine::Hamerly => "hamerly",
+            Engine::MiniBatch => "minibatch",
+            Engine::Streaming => "streaming",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Centroid initialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// K distinct points sampled uniformly from the data (the paper).
+    Random,
+    /// k-means++ D² seeding (extension, DESIGN.md A3).
+    KmeansPlusPlus,
+}
+
+impl std::str::FromStr for Init {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Init> {
+        Ok(match s {
+            "random" => Init::Random,
+            "kmeans++" | "kpp" => Init::KmeansPlusPlus,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown init `{other}` (random|kmeans++)"
+                )))
+            }
+        })
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub engine: Engine,
+    pub k: usize,
+    /// Convergence tolerance on E = Σ‖μ_new − μ_old‖² (paper: 1e-6).
+    pub tol: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub init: Init,
+    /// Worker/thread count (Threads/Shared engines).
+    pub threads: usize,
+    /// Streaming chunk size for the AOT engines. 0 = auto: the planner
+    /// combines every artifact size available for (d, k); a nonzero
+    /// value pins one artifact (used by the A1 ablation).
+    pub chunk: usize,
+    /// Mini-batch size (MiniBatch engine only).
+    pub batch: usize,
+    /// Artifacts directory (AOT engines only).
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            engine: Engine::Serial,
+            k: 4,
+            tol: 1e-6,
+            max_iters: 300,
+            seed: 42,
+            init: Init::Random,
+            threads: 4,
+            chunk: 0, // auto
+            batch: 8192,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            return Err(Error::Config("k must be >= 1".into()));
+        }
+        if self.tol < 0.0 {
+            return Err(Error::Config("tol must be >= 0".into()));
+        }
+        if self.max_iters == 0 {
+            return Err(Error::Config("max_iters must be >= 1".into()));
+        }
+        if self.threads == 0 {
+            return Err(Error::Config("threads must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in [
+            Engine::Serial,
+            Engine::Threads,
+            Engine::Shared,
+            Engine::Offload,
+            Engine::Elkan,
+            Engine::Hamerly,
+            Engine::MiniBatch,
+            Engine::Streaming,
+        ] {
+            let s = e.to_string();
+            assert_eq!(s.parse::<Engine>().unwrap(), e);
+        }
+        assert!("gpu".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn init_parse() {
+        assert_eq!("random".parse::<Init>().unwrap(), Init::Random);
+        assert_eq!("kpp".parse::<Init>().unwrap(), Init::KmeansPlusPlus);
+        assert!("fancy".parse::<Init>().is_err());
+    }
+
+    #[test]
+    fn validation() {
+        let mut c = RunConfig::default();
+        assert!(c.validate().is_ok());
+        c.k = 0;
+        assert!(c.validate().is_err());
+        c = RunConfig { tol: -1.0, ..Default::default() };
+        assert!(c.validate().is_err());
+        c = RunConfig { threads: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        // chunk 0 is valid (auto)
+        c = RunConfig { chunk: 0, ..Default::default() };
+        assert!(c.validate().is_ok());
+    }
+}

@@ -1,0 +1,68 @@
+//! Shared engine-run telemetry: what every AOT engine reports back to
+//! the eval harness and benches.
+
+use crate::coordinator::simtime::VirtualClock;
+use crate::kmeans::KmeansResult;
+
+/// Result + timing telemetry of one engine run.
+#[derive(Debug, Clone)]
+pub struct EngineRun {
+    pub result: KmeansResult,
+    /// One-time setup: client creation + artifact compilation + data
+    /// upload. Reported separately — the paper times the algorithm, and
+    /// AOT compilation is a build-time analog.
+    pub setup_secs: f64,
+    /// Real measured wall-clock of the iteration loop on this container.
+    pub wall_secs: f64,
+    /// Virtual testbed clock (DESIGN.md §8); `None` for engines that
+    /// report only real time (e.g. offload with device parallelism 1).
+    pub virtual_clock: Option<VirtualClock>,
+    /// Executable calls made (telemetry for the A1 chunk ablation).
+    pub exec_calls: usize,
+}
+
+impl EngineRun {
+    /// The time used in paper-table comparisons: virtual testbed total
+    /// when simulated, otherwise real wall-clock.
+    pub fn table_secs(&self) -> f64 {
+        self.virtual_clock
+            .as_ref()
+            .map(VirtualClock::total)
+            .unwrap_or(self.wall_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_result() -> KmeansResult {
+        KmeansResult {
+            centroids: vec![0.0; 4],
+            assign: vec![0, 1],
+            k: 2,
+            dim: 2,
+            iterations: 1,
+            sse: 0.0,
+            shift: 0.0,
+            converged: true,
+            history: vec![],
+        }
+    }
+
+    #[test]
+    fn table_secs_prefers_virtual() {
+        let mut vc = VirtualClock::default();
+        vc.push_iteration(&[0.5], 0.1);
+        let run = EngineRun {
+            result: dummy_result(),
+            setup_secs: 9.0,
+            wall_secs: 2.0,
+            virtual_clock: Some(vc),
+            exec_calls: 3,
+        };
+        assert!((run.table_secs() - 0.6).abs() < 1e-12);
+        let raw = EngineRun { virtual_clock: None, ..run };
+        assert_eq!(raw.table_secs(), 2.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's coordination contribution, over the AOT runtime.
+//!
+//! Two engines share one compiled compute core (DESIGN.md §2):
+//!
+//! - [`shared`] — the OpenMP model: the dataset is sharded across `p`
+//!   workers; each worker streams its shard through the
+//!   `assign_partial` executable and produces local statistics; the
+//!   leader merges them (barrier + critical-section analog) and
+//!   finalizes the centroids.
+//! - [`offload`] — the OpenACC model: the whole dataset streams through
+//!   the `fused_step` executable with device-resident accumulators;
+//!   the host only shuttles centroids and checks convergence
+//!   (per-iteration fork/join onto the device).
+//!
+//! [`simtime`] provides the simulated-testbed clock used to report
+//! multi-core numbers from this 1-core container (DESIGN.md §8).
+
+pub mod driver;
+pub mod offload;
+pub mod plan;
+pub mod shared;
+pub mod simtime;
+pub mod streaming;
+
+pub use driver::EngineRun;

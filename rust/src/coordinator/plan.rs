@@ -1,0 +1,212 @@
+//! Shard/chunk planning: how `n` rows map onto workers and onto
+//! fixed-size executable calls.
+//!
+//! AOT artifacts are shape-specialized, one per streaming chunk size
+//! (DESIGN.md §2). A shard is covered greedily with the largest
+//! available chunk that fits, so big shards amortize launch overhead
+//! over big calls while the padding waste of the tail is bounded by
+//! the *smallest* available chunk size. The final call pads up to the
+//! smallest chunk ≥ the remainder and masks via `n_valid`.
+
+/// One executable invocation: rows `[lo, hi)`, executed by the
+/// artifact specialized to `chunk` (`hi - lo <= chunk`; the gap is
+/// padding masked by `n_valid`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkCall {
+    pub lo: usize,
+    pub hi: usize,
+    pub chunk: usize,
+}
+
+impl ChunkCall {
+    pub fn n_valid(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn padding(&self) -> usize {
+        self.chunk - self.n_valid()
+    }
+}
+
+/// Greedy multi-size chunking of rows `[lo, hi)`.
+///
+/// `sizes` is the available artifact chunk sizes (any order, deduped
+/// internally). Invariants (tested): calls are contiguous, cover the
+/// range exactly, only the final call may pad, and its padding is less
+/// than the smallest size.
+pub fn chunk_calls(lo: usize, hi: usize, sizes: &[usize]) -> Vec<ChunkCall> {
+    assert!(!sizes.is_empty(), "no chunk sizes");
+    let mut sorted: Vec<usize> = sizes.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert!(sorted[0] > 0, "zero chunk size");
+
+    let mut out = Vec::new();
+    let mut cur = lo;
+    while cur < hi {
+        let remaining = hi - cur;
+        // largest size fully covered by the remaining rows …
+        let fit = sorted.iter().rev().find(|&&s| s <= remaining);
+        let chunk = match fit {
+            Some(&s) => s,
+            // … or the smallest size ≥ remainder (padded tail)
+            None => *sorted.iter().find(|&&s| s >= remaining).unwrap(),
+        };
+        let end = (cur + chunk).min(hi);
+        out.push(ChunkCall { lo: cur, hi: end, chunk });
+        cur = end;
+    }
+    out
+}
+
+/// Convenience: single-size chunking (A1 ablation pins one size).
+pub fn chunk_calls_single(lo: usize, hi: usize, chunk: usize) -> Vec<ChunkCall> {
+    chunk_calls(lo, hi, &[chunk])
+}
+
+/// Full plan for `p` workers over `n` rows.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub n: usize,
+    pub p: usize,
+    /// (shard_range, chunk calls) per worker.
+    pub shards: Vec<((usize, usize), Vec<ChunkCall>)>,
+}
+
+impl ShardPlan {
+    pub fn new(n: usize, p: usize, sizes: &[usize]) -> ShardPlan {
+        let ranges = crate::data::dataset::shard_ranges(n, p);
+        let shards = ranges
+            .iter()
+            .map(|&(lo, hi)| ((lo, hi), chunk_calls(lo, hi, sizes)))
+            .collect();
+        ShardPlan { n, p, shards }
+    }
+
+    /// Total executable calls per iteration.
+    pub fn total_calls(&self) -> usize {
+        self.shards.iter().map(|(_, c)| c.len()).sum()
+    }
+
+    /// Fraction of transferred rows that are padding (perf telemetry).
+    pub fn padding_fraction(&self) -> f64 {
+        let padded: usize = self
+            .shards
+            .iter()
+            .flat_map(|(_, calls)| calls.iter())
+            .map(ChunkCall::padding)
+            .sum();
+        let total: usize = self
+            .shards
+            .iter()
+            .flat_map(|(_, calls)| calls.iter())
+            .map(|c| c.chunk)
+            .sum();
+        if total == 0 {
+            0.0
+        } else {
+            padded as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn single_size_covers_range() {
+        let calls = chunk_calls_single(10, 250, 100);
+        assert_eq!(
+            calls,
+            vec![
+                ChunkCall { lo: 10, hi: 110, chunk: 100 },
+                ChunkCall { lo: 110, hi: 210, chunk: 100 },
+                ChunkCall { lo: 210, hi: 250, chunk: 100 },
+            ]
+        );
+        assert_eq!(calls[2].n_valid(), 40);
+        assert_eq!(calls[2].padding(), 60);
+    }
+
+    #[test]
+    fn multi_size_prefers_large_then_small_tail() {
+        let calls = chunk_calls(0, 70_000, &[4096, 65536]);
+        assert_eq!(calls[0], ChunkCall { lo: 0, hi: 65536, chunk: 65536 });
+        assert_eq!(calls[1], ChunkCall { lo: 65536, hi: 69632, chunk: 4096 });
+        // tail: 368 rows in one padded 4096 call
+        assert_eq!(calls[2], ChunkCall { lo: 69632, hi: 70_000, chunk: 4096 });
+        assert_eq!(calls[2].padding(), 4096 - 368);
+    }
+
+    #[test]
+    fn tiny_range_single_padded_small_call() {
+        let calls = chunk_calls(5, 25, &[4096, 65536]);
+        assert_eq!(calls, vec![ChunkCall { lo: 5, hi: 25, chunk: 4096 }]);
+    }
+
+    #[test]
+    fn empty_range_no_calls() {
+        assert!(chunk_calls(5, 5, &[100]).is_empty());
+    }
+
+    #[test]
+    fn exact_multiple_no_padding() {
+        let plan = ShardPlan::new(200, 2, &[100]);
+        assert_eq!(plan.total_calls(), 2);
+        assert_eq!(plan.padding_fraction(), 0.0);
+    }
+
+    #[test]
+    fn plan_properties() {
+        prop::check("shard plan covers all rows exactly once", 64, |g| {
+            let n = g.usize_in(0, 5000);
+            let p = g.usize_in(1, 17);
+            let mut sizes = vec![g.usize_in(1, 100), g.usize_in(100, 700)];
+            if g.bool() {
+                sizes.truncate(1);
+            }
+            let plan = ShardPlan::new(n, p, &sizes);
+            let smallest = *sizes.iter().min().unwrap();
+            prop::ensure(plan.shards.len() == p, "wrong worker count")?;
+            let mut covered = 0usize;
+            let mut expected_next = 0usize;
+            for ((lo, hi), calls) in &plan.shards {
+                prop::ensure(*lo == expected_next, "shards not contiguous")?;
+                expected_next = *hi;
+                let mut cur = *lo;
+                for (i, c) in calls.iter().enumerate() {
+                    prop::ensure(c.lo == cur, "chunks not contiguous")?;
+                    prop::ensure(c.n_valid() > 0, "empty chunk call")?;
+                    prop::ensure(c.n_valid() <= c.chunk, "oversized chunk")?;
+                    prop::ensure(sizes.contains(&c.chunk), "unknown chunk size")?;
+                    if i + 1 < calls.len() {
+                        prop::ensure(c.padding() == 0, "padding before the tail")?;
+                    } else {
+                        prop::ensure(
+                            c.padding() < smallest,
+                            format!("tail padding {} >= smallest {}", c.padding(), smallest),
+                        )?;
+                    }
+                    cur = c.hi;
+                    covered += c.n_valid();
+                }
+                prop::ensure(cur == *hi, "chunks don't cover shard")?;
+            }
+            prop::ensure(expected_next == n, "shards don't cover dataset")?;
+            prop::ensure(covered == n, "row count mismatch")
+        });
+    }
+
+    #[test]
+    fn padding_fraction_bounds() {
+        prop::check("padding fraction in [0,1)", 32, |g| {
+            let n = g.usize_in(1, 3000);
+            let p = g.usize_in(1, 8);
+            let sizes = [g.usize_in(1, 500)];
+            let f = ShardPlan::new(n, p, &sizes).padding_fraction();
+            prop::ensure((0.0..1.0).contains(&f), format!("padding {f}"))
+        });
+    }
+}

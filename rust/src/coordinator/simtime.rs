@@ -1,0 +1,171 @@
+//! Simulated-testbed clock (DESIGN.md §8).
+//!
+//! This container has **one CPU core**, so the paper's p = 2…16 thread
+//! sweeps cannot produce real concurrency. Engines therefore run their
+//! real code paths while *accounting* virtual time the way a p-core
+//! shared-memory machine would spend it:
+//!
+//! ```text
+//! T_iter(p) = max_w(compute_w)            // workers run concurrently
+//!           + t_barrier(p)                 // two barrier phases
+//!           + t_merge(p)                   // leader folds p partials
+//! T_run(p)  = Σ_iters T_iter(p)
+//! ```
+//!
+//! `compute_w` is *measured* (the real per-shard work, identical
+//! instructions a real thread would execute). The sync terms come from
+//! [`SyncModel`], calibrated by [`calibrate`] with microbenchmarks of
+//! the actual merge/lock operations on this machine. Both raw 1-core
+//! wall-clock and virtual-clock numbers are recorded for every
+//! experiment (EXPERIMENTS.md).
+
+use std::time::Instant;
+
+use crate::kmeans::step::PartialStats;
+
+/// Calibrated synchronization-cost model for the virtual testbed.
+#[derive(Debug, Clone)]
+pub struct SyncModel {
+    /// Seconds for the leader to fold one worker's PartialStats
+    /// (measured per (k, d) at calibration).
+    pub t_merge_one: f64,
+    /// Seconds per barrier crossing per worker (cache-line ping-pong +
+    /// futex wake; measured with real `std::sync::Barrier` pairs).
+    pub t_barrier_per_worker: f64,
+    /// Extra serialization cost per worker when merging under a single
+    /// mutex (the paper's `critical` directive): lock handoff latency.
+    pub t_critical_handoff: f64,
+}
+
+impl SyncModel {
+    /// Leader-merge iteration overhead for `p` workers.
+    pub fn leader_overhead(&self, p: usize) -> f64 {
+        2.0 * self.t_barrier_per_worker * p as f64 + self.t_merge_one * p as f64
+    }
+
+    /// Critical-section iteration overhead for `p` workers: merges are
+    /// serialized through one lock, each paying handoff + merge.
+    pub fn critical_overhead(&self, p: usize) -> f64 {
+        2.0 * self.t_barrier_per_worker * p as f64
+            + (self.t_merge_one + self.t_critical_handoff) * p as f64
+    }
+}
+
+/// Measure the sync primitives on this machine for a given (k, d).
+pub fn calibrate(k: usize, d: usize) -> SyncModel {
+    // merge cost: fold PartialStats repeatedly
+    let mut a = PartialStats::zeros(k, d);
+    let mut b = PartialStats::zeros(k, d);
+    for i in 0..k * d {
+        b.sums[i] = i as f64;
+    }
+    for c in 0..k {
+        b.counts[c] = c as u64;
+    }
+    let reps = 20_000;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        a.merge(&b);
+        std::hint::black_box(&a);
+    }
+    let t_merge_one = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // barrier cost: ping-pong a 2-party barrier (measures wake latency)
+    let barrier = std::sync::Barrier::new(2);
+    let rounds = 2_000;
+    let t_barrier = crossbeam_utils::thread::scope(|s| {
+        let h = s.spawn(|_| {
+            for _ in 0..rounds {
+                barrier.wait();
+            }
+        });
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            barrier.wait();
+        }
+        let dt = t0.elapsed().as_secs_f64() / rounds as f64;
+        h.join().unwrap();
+        dt
+    })
+    .unwrap();
+
+    // lock handoff: uncontended mutex lock/unlock (contended handoff is
+    // strictly worse; this is the optimistic floor, noted in DESIGN.md)
+    let m = std::sync::Mutex::new(0u64);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        *m.lock().unwrap() += 1;
+    }
+    let t_critical_handoff = t0.elapsed().as_secs_f64() / reps as f64 + t_barrier * 0.1;
+
+    SyncModel {
+        t_merge_one,
+        t_barrier_per_worker: t_barrier,
+        t_critical_handoff,
+    }
+}
+
+/// Virtual-clock accumulator for one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    /// Per-iteration max worker compute (seconds).
+    pub iter_compute: Vec<f64>,
+    /// Per-iteration sync overhead (seconds).
+    pub iter_sync: Vec<f64>,
+}
+
+impl VirtualClock {
+    pub fn push_iteration(&mut self, worker_busy: &[f64], sync: f64) {
+        let max = worker_busy.iter().copied().fold(0.0, f64::max);
+        self.iter_compute.push(max);
+        self.iter_sync.push(sync);
+    }
+
+    /// Total virtual wall-clock.
+    pub fn total(&self) -> f64 {
+        self.iter_compute.iter().sum::<f64>() + self.iter_sync.iter().sum::<f64>()
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iter_compute.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_positive_and_sane() {
+        let m = calibrate(8, 3);
+        assert!(m.t_merge_one > 0.0 && m.t_merge_one < 1e-3, "{m:?}");
+        assert!(m.t_barrier_per_worker > 0.0 && m.t_barrier_per_worker < 1e-2, "{m:?}");
+        assert!(m.t_critical_handoff > 0.0, "{m:?}");
+    }
+
+    #[test]
+    fn overhead_monotone_in_p() {
+        let m = SyncModel {
+            t_merge_one: 1e-6,
+            t_barrier_per_worker: 2e-6,
+            t_critical_handoff: 5e-7,
+        };
+        let mut last = 0.0;
+        for p in [1, 2, 4, 8, 16] {
+            let o = m.leader_overhead(p);
+            assert!(o > last);
+            last = o;
+            // critical always costs at least leader
+            assert!(m.critical_overhead(p) >= o);
+        }
+    }
+
+    #[test]
+    fn virtual_clock_takes_max_over_workers() {
+        let mut vc = VirtualClock::default();
+        vc.push_iteration(&[0.1, 0.5, 0.2], 0.01);
+        vc.push_iteration(&[0.3, 0.3], 0.01);
+        assert!((vc.total() - (0.5 + 0.3 + 0.02)).abs() < 1e-12);
+        assert_eq!(vc.iterations(), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! In-memory dataset container.
+//!
+//! Row-major `f32` (`n × dim`, point `i` at `data[i*dim .. (i+1)*dim]`) —
+//! the layout the AOT executables consume directly (no transpose or copy
+//! on the request path) and the cache-friendly layout for the rust
+//! assignment loop.
+
+use crate::error::{Error, Result};
+
+/// A dense dataset of `n` points in `dim` dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    dim: usize,
+    data: Vec<f32>,
+    /// Ground-truth component labels if synthetically generated
+    /// (used by ARI/NMI validation, never by the clustering itself).
+    pub truth: Option<Vec<i32>>,
+}
+
+impl Dataset {
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(data: Vec<f32>, dim: usize) -> Result<Dataset> {
+        if dim == 0 {
+            return Err(Error::Shape("dim must be > 0".into()));
+        }
+        if data.len() % dim != 0 {
+            return Err(Error::Shape(format!(
+                "buffer len {} not divisible by dim {dim}",
+                data.len()
+            )));
+        }
+        Ok(Dataset { dim, data, truth: None })
+    }
+
+    /// Empty dataset with reserved capacity.
+    pub fn with_capacity(dim: usize, n: usize) -> Dataset {
+        Dataset { dim, data: Vec::with_capacity(dim * n), truth: None }
+    }
+
+    #[inline(always)]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Point `i` as a slice.
+    #[inline(always)]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Raw row-major buffer.
+    #[inline(always)]
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Rows `[lo, hi)` as a raw slice (shard view; zero-copy).
+    #[inline(always)]
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.data[lo * self.dim..hi * self.dim]
+    }
+
+    pub fn push(&mut self, point: &[f32]) {
+        assert_eq!(point.len(), self.dim);
+        self.data.extend_from_slice(point);
+    }
+
+    /// Split into `p` contiguous shards, sizes differing by at most 1
+    /// (the paper's OpenMP data decomposition). Returns `(lo, hi)` row
+    /// ranges covering `[0, n)` exactly.
+    pub fn shard_ranges(&self, p: usize) -> Vec<(usize, usize)> {
+        shard_ranges(self.len(), p)
+    }
+
+    /// Per-coordinate (min, max) bounding box — used by plot axes and
+    /// test invariants.
+    pub fn bounds(&self) -> Vec<(f32, f32)> {
+        let mut b = vec![(f32::INFINITY, f32::NEG_INFINITY); self.dim];
+        for i in 0..self.len() {
+            let pt = self.point(i);
+            for (j, &v) in pt.iter().enumerate() {
+                b[j].0 = b[j].0.min(v);
+                b[j].1 = b[j].1.max(v);
+            }
+        }
+        b
+    }
+
+    /// Copy of column `j` (plotting).
+    pub fn column(&self, j: usize) -> Vec<f32> {
+        assert!(j < self.dim);
+        (0..self.len()).map(|i| self.point(i)[j]).collect()
+    }
+}
+
+/// Contiguous near-equal partition of `n` items into `p` shards.
+pub fn shard_ranges(n: usize, p: usize) -> Vec<(usize, usize)> {
+    assert!(p > 0, "shard_ranges: p == 0");
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0;
+    for i in 0..p {
+        let size = base + usize::from(i < extra);
+        out.push((lo, lo + size));
+        lo += size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Dataset::from_vec(vec![1.0, 2.0, 3.0], 2).is_err());
+        assert!(Dataset::from_vec(vec![], 0).is_err());
+        let ds = Dataset::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn push_and_views() {
+        let mut ds = Dataset::with_capacity(3, 2);
+        ds.push(&[1.0, 2.0, 3.0]);
+        ds.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.rows(1, 2), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.column(2), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 101, 1_000_003] {
+            for p in [1usize, 2, 3, 8, 16] {
+                let r = shard_ranges(n, p);
+                assert_eq!(r.len(), p);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[p - 1].1, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0); // contiguous
+                }
+                let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+                let min = sizes.iter().min().unwrap();
+                let max = sizes.iter().max().unwrap();
+                assert!(max - min <= 1, "n={n} p={p} sizes={sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounds() {
+        let ds = Dataset::from_vec(vec![0.0, 5.0, -2.0, 3.0], 2).unwrap();
+        assert_eq!(ds.bounds(), vec![(-2.0, 0.0), (3.0, 5.0)]);
+    }
+}

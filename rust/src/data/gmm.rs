@@ -1,0 +1,220 @@
+//! Gaussian-mixture dataset generator — the paper's dataset families.
+//!
+//! The paper: *"all three of them are generated in a similar manner
+//! using a mixture of Bivariate Gaussian Distributions of some mean and
+//! covariance"*, 2D sizes {100k, 200k, 500k} and 3D sizes
+//! {100k, 200k, 400k, 800k, 1M}. Exact parameters are unspecified
+//! (DESIGN.md §8), so [`MixtureSpec::paper_2d`]/[`paper_3d`] fix a
+//! deterministic family: component means on a jittered grid scaled to
+//! keep components distinguishable-but-overlapping (like the paper's
+//! Figure 5 clustering), random SPD covariances via Cholesky, equal
+//! weights with a seeded tilt. Everything reproduces bit-for-bit from
+//! `(spec, n, seed)`.
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::rng::Pcg64;
+
+/// One mixture component.
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub mean: Vec<f64>,
+    /// Lower-triangular Cholesky factor of the covariance (row-major d×d).
+    pub chol: Vec<f64>,
+    /// Unnormalized weight.
+    pub weight: f64,
+}
+
+/// A mixture-of-Gaussians generator specification.
+#[derive(Debug, Clone)]
+pub struct MixtureSpec {
+    pub dim: usize,
+    pub components: Vec<Component>,
+}
+
+impl MixtureSpec {
+    /// Random-but-seeded spec: `k` components in `dim` dims, means on a
+    /// jittered grid of pitch `spread`, covariances `scale² · (I + ε)`.
+    pub fn random(dim: usize, k: usize, spread: f64, scale: f64, seed: u64) -> MixtureSpec {
+        assert!(dim >= 1 && k >= 1);
+        let mut rng = Pcg64::new(seed, 0xC0);
+        // grid side: ceil(k^(1/dim))
+        let side = (k as f64).powf(1.0 / dim as f64).ceil() as usize;
+        let mut components = Vec::with_capacity(k);
+        for c in 0..k {
+            // grid coordinates of component c
+            let mut rem = c;
+            let mut mean = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                let g = rem % side;
+                rem /= side;
+                let jitter = (rng.next_f64() - 0.5) * 0.35 * spread;
+                mean.push(g as f64 * spread + jitter);
+            }
+            // random SPD covariance: A = scale^2 * (I + 0.5 B B^T), B small
+            let mut b = vec![0.0f64; dim * dim];
+            for v in b.iter_mut() {
+                *v = (rng.next_f64() - 0.5) * 0.8;
+            }
+            let mut a = vec![0.0f64; dim * dim];
+            for i in 0..dim {
+                for j in 0..dim {
+                    let mut acc = if i == j { 1.0 } else { 0.0 };
+                    for l in 0..dim {
+                        acc += 0.5 * b[i * dim + l] * b[j * dim + l];
+                    }
+                    a[i * dim + j] = acc * scale * scale;
+                }
+            }
+            let chol = linalg::cholesky(&a, dim).expect("constructed SPD");
+            let weight = 0.5 + rng.next_f64(); // mild imbalance
+            components.push(Component { mean, chol, weight });
+        }
+        MixtureSpec { dim, components }
+    }
+
+    /// The paper's 2D family (Tables 2/4, Figures 5/6): `k` bivariate
+    /// Gaussians with overlapping regions ("closely spaced groups of
+    /// points" — the paper's own description of Figure 5).
+    pub fn paper_2d(k: usize) -> MixtureSpec {
+        MixtureSpec::random(2, k, 10.0, 1.6, 0x2D2D)
+    }
+
+    /// The paper's 3D family (Tables 3/5, Figures 1-4): well-separated
+    /// enough that K=4 clustering is "optimal" per the paper's Figure 1.
+    pub fn paper_3d(k: usize) -> MixtureSpec {
+        MixtureSpec::random(3, k, 14.0, 1.2, 0x3D3D)
+    }
+
+    pub fn k(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Generate `n` points. Component choice and noise are both driven
+    /// by `seed`; ground-truth labels are stored on the dataset.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed, 0xDA7A);
+        let weights: Vec<f64> = self.components.iter().map(|c| c.weight).collect();
+        let mut ds = Dataset::with_capacity(self.dim, n);
+        let mut truth = Vec::with_capacity(n);
+        let mut z = vec![0.0f64; self.dim];
+        let mut pt = vec![0.0f32; self.dim];
+        for _ in 0..n {
+            let ci = rng.next_weighted(&weights);
+            let comp = &self.components[ci];
+            for v in z.iter_mut() {
+                *v = rng.next_normal();
+            }
+            let noise = linalg::tril_matvec(&comp.chol, &z, self.dim);
+            for j in 0..self.dim {
+                pt[j] = (comp.mean[j] + noise[j]) as f32;
+            }
+            ds.push(&pt);
+            truth.push(ci as i32);
+        }
+        ds.truth = Some(truth);
+        ds
+    }
+}
+
+/// The paper's named workloads, used throughout eval/benches.
+pub mod workloads {
+    /// 2D dataset sizes (Tables 2/4, Figures 8/10/12).
+    pub const SIZES_2D: [usize; 3] = [100_000, 200_000, 500_000];
+    /// 3D dataset sizes (Tables 3/5, Figures 7/9/11).
+    pub const SIZES_3D: [usize; 5] = [100_000, 200_000, 400_000, 800_000, 1_000_000];
+    /// Thread counts swept in Tables 2/3 and Figures 7-10.
+    pub const THREADS: [usize; 4] = [2, 4, 8, 16];
+    /// Cluster counts in Table 1.
+    pub const TABLE1_KS: [usize; 3] = [4, 8, 11];
+    /// K fixed for the 2D parallel experiments.
+    pub const K_2D: usize = 8;
+    /// K fixed for the 3D parallel experiments.
+    pub const K_3D: usize = 4;
+    /// True component count used when *generating* the paper datasets.
+    /// The paper clusters the same data with several K values; we fix
+    /// the generator at 8 components (2D) / 4 (3D) to match the plotted
+    /// structure in Figures 1-6.
+    pub const GEN_K_2D: usize = 8;
+    pub const GEN_K_3D: usize = 4;
+    /// Deterministic per-size seed so every bench sees identical data.
+    pub fn seed_for(dim: usize, n: usize) -> u64 {
+        0x5EED_0000 ^ ((dim as u64) << 32) ^ n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = MixtureSpec::paper_2d(4);
+        let a = spec.generate(1000, 7);
+        let b = spec.generate(1000, 7);
+        assert_eq!(a, b);
+        let c = spec.generate(1000, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn shapes_and_truth() {
+        let spec = MixtureSpec::paper_3d(4);
+        let ds = spec.generate(500, 1);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.len(), 500);
+        let truth = ds.truth.as_ref().unwrap();
+        assert_eq!(truth.len(), 500);
+        assert!(truth.iter().all(|&t| (0..4).contains(&t)));
+        // all components actually emit points
+        let mut seen = [false; 4];
+        for &t in truth {
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn component_stats_match_spec() {
+        // one isolated component: sample mean ~ spec mean
+        let spec = MixtureSpec::random(2, 1, 10.0, 1.0, 3);
+        let ds = spec.generate(20_000, 5);
+        let m = &spec.components[0].mean;
+        let mut sum = [0.0f64; 2];
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            sum[0] += p[0] as f64;
+            sum[1] += p[1] as f64;
+        }
+        let n = ds.len() as f64;
+        assert!((sum[0] / n - m[0]).abs() < 0.05, "{} vs {}", sum[0] / n, m[0]);
+        assert!((sum[1] / n - m[1]).abs() < 0.05);
+    }
+
+    #[test]
+    fn components_are_separated() {
+        // paper_3d means must be pairwise farther apart than ~4 sigma so
+        // K=4 clustering is recoverable (paper Figure 1 "optimal")
+        let spec = MixtureSpec::paper_3d(4);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let a = &spec.components[i].mean;
+                let b = &spec.components[j].mean;
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                assert!(d2.sqrt() > 6.0, "components {i},{j} too close: {}", d2.sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn workload_seed_unique() {
+        use workloads::seed_for;
+        let mut seen = std::collections::HashSet::new();
+        for n in workloads::SIZES_3D {
+            assert!(seen.insert(seed_for(3, n)));
+        }
+        for n in workloads::SIZES_2D {
+            assert!(seen.insert(seed_for(2, n)));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Dataset (de)serialization.
+//!
+//! Two formats:
+//! - **binary** (`.pkd`): little-endian, magic + dim + n + f32 payload
+//!   (+ optional truth labels). Fast path used by the CLI `gen-data` /
+//!   `run` round trip for the 1M-point workloads.
+//! - **CSV**: one point per row, interchange with external tools.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"PARAKMD1";
+
+/// Write the binary format.
+pub fn write_binary(path: &Path, ds: &Dataset) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ds.dim() as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u64).to_le_bytes())?;
+    let has_truth = ds.truth.is_some() as u8;
+    w.write_all(&[has_truth])?;
+    for v in ds.raw() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    if let Some(truth) = &ds.truth {
+        for t in truth {
+            w.write_all(&t.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary format.
+pub fn read_binary(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Manifest(format!(
+            "{}: not a parakmeans dataset (bad magic)",
+            path.display()
+        )));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let dim = u32::from_le_bytes(b4) as usize;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    let has_truth = b1[0] != 0;
+
+    let mut payload = vec![0u8; n * dim * 4];
+    r.read_exact(&mut payload)?;
+    let mut data = Vec::with_capacity(n * dim);
+    for c in payload.chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    let mut ds = Dataset::from_vec(data, dim)?;
+    if has_truth {
+        let mut tbuf = vec![0u8; n * 4];
+        r.read_exact(&mut tbuf)?;
+        let truth: Vec<i32> = tbuf
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        ds.truth = Some(truth);
+    }
+    Ok(ds)
+}
+
+/// Write CSV (no truth labels; header `x0,x1,...`).
+pub fn write_csv(path: &Path, ds: &Dataset) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let header: Vec<String> = (0..ds.dim()).map(|j| format!("x{j}")).collect();
+    writeln!(w, "{}", header.join(","))?;
+    for i in 0..ds.len() {
+        let cells: Vec<String> = ds.point(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read CSV produced by [`write_csv`] (or any numeric CSV with header).
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let (header, rows) = crate::util::csv::read_table(path)?;
+    let dim = header.len();
+    if dim == 0 {
+        return Err(Error::Shape("csv has no columns".into()));
+    }
+    let mut data = Vec::with_capacity(rows.len() * dim);
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != dim {
+            return Err(Error::Shape(format!(
+                "csv row {i} has {} cells, expected {dim}",
+                row.len()
+            )));
+        }
+        data.extend(row.iter().map(|&v| v as f32));
+    }
+    Dataset::from_vec(data, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parakm_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_roundtrip_with_truth() {
+        let ds = MixtureSpec::paper_2d(4).generate(257, 3);
+        let p = tmp("rt.pkd");
+        write_binary(&p, &ds).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(ds, back);
+        assert!(back.truth.is_some());
+    }
+
+    #[test]
+    fn binary_roundtrip_without_truth() {
+        let mut ds = MixtureSpec::paper_3d(4).generate(64, 3);
+        ds.truth = None;
+        let p = tmp("rt2.pkd");
+        write_binary(&p, &ds).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(ds, back);
+        assert!(back.truth.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.pkd");
+        std::fs::write(&p, b"NOTMAGIC123456").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut ds = MixtureSpec::paper_2d(4).generate(100, 9);
+        ds.truth = None;
+        let p = tmp("rt.csv");
+        write_csv(&p, &ds).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back.dim(), 2);
+        assert_eq!(back.len(), 100);
+        for i in 0..100 {
+            for j in 0..2 {
+                assert!((back.point(i)[j] - ds.point(i)[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_binary_errors() {
+        let ds = MixtureSpec::paper_2d(4).generate(64, 3);
+        let p = tmp("trunc.pkd");
+        write_binary(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

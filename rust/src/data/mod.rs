@@ -1,0 +1,9 @@
+//! Datasets: container, synthetic Gaussian-mixture generation (the
+//! paper's 2D/3D dataset families), and binary/CSV interchange.
+
+pub mod dataset;
+pub mod gmm;
+pub mod io;
+
+pub use dataset::Dataset;
+pub use gmm::MixtureSpec;

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+//!
+//! Library modules return [`Result`]; binaries/examples may wrap it in
+//! `anyhow` for context chaining. The XLA runtime variant boxes the
+//! `xla` crate error to keep this enum `Send + Sync`.
+
+use thiserror::Error;
+
+/// All errors produced by parakmeans.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Malformed or missing AOT artifact manifest.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// JSON syntax error while parsing (path context in the message).
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Shape/dimension mismatch between datasets, centroids, artifacts.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration (CLI or programmatic).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Underlying XLA/PJRT failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Dataset / file IO.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// A worker thread panicked or disconnected.
+    #[error("worker failure: {0}")]
+    Worker(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

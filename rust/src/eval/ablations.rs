@@ -1,0 +1,138 @@
+//! Ablations A1–A3 (DESIGN.md §5) — the design choices the paper leaves
+//! unexplored, quantified on the paper's headline workload (3D, K=4).
+//!
+//! - **A1 chunk size**: streaming-chunk size of the AOT engines
+//!   (launch overhead vs padding waste vs device-buffer pressure).
+//! - **A2 merge policy**: leader fold vs critical-section serialization
+//!   in the shared engine's virtual clock.
+//! - **A3 algorithms**: Lloyd vs Elkan vs Hamerly vs mini-batch, and
+//!   random vs k-means++ init — wall-clock and SSE on identical data.
+
+use crate::config::{Engine, Init, RunConfig};
+use crate::coordinator::shared::{self, MergePolicy};
+use crate::data::gmm::workloads;
+use crate::error::Result;
+use crate::eval::{paper_dataset, results_dir, run_engine, Scale};
+use crate::kmeans::{self, KmeansConfig};
+use crate::util::{csv, tables};
+
+/// A1 — chunk-size sweep on the offload engine (3D, K=4).
+/// Chunks must exist as artifacts: 16384, 65536, 262144.
+pub fn chunk_size(scale: Scale) -> Result<Vec<(usize, f64, usize)>> {
+    let n = scale.apply(1_000_000);
+    let ds = paper_dataset(3, n);
+    let mut rows = Vec::new();
+    for chunk in [16384usize, 65536, 262144] {
+        let cfg = RunConfig { k: workloads::K_3D, chunk, ..Default::default() };
+        let run = crate::eval::with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+            crate::coordinator::offload::run_with(rt, &ds, &cfg)
+        })?;
+        println!(
+            "A1 chunk={chunk:<7} time={:.4}s calls={} iters={}",
+            run.wall_secs, run.exec_calls, run.result.iterations
+        );
+        rows.push((chunk, run.wall_secs, run.exec_calls));
+    }
+    let csv_rows: Vec<Vec<f64>> =
+        rows.iter().map(|r| vec![r.0 as f64, r.1, r.2 as f64]).collect();
+    csv::write_table(
+        &results_dir().join("ablations/a1_chunk.csv"),
+        &["chunk", "secs", "exec_calls"],
+        &csv_rows,
+    )?;
+    Ok(rows)
+}
+
+/// A2 — merge policy: virtual-clock totals for leader vs critical at
+/// p ∈ {2, 4, 8, 16} (3D, K=4).
+pub fn merge_policy(scale: Scale) -> Result<Vec<(usize, f64, f64)>> {
+    let n = scale.apply(1_000_000);
+    let ds = paper_dataset(3, n);
+    let cfg = RunConfig { k: workloads::K_3D, ..Default::default() };
+    let mut rows = Vec::new();
+    for p in workloads::THREADS {
+        let leader = crate::eval::with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+            shared::run_with(rt, &ds, &cfg, p, MergePolicy::Leader)
+        })?;
+        let critical = crate::eval::with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+            shared::run_with(rt, &ds, &cfg, p, MergePolicy::Critical)
+        })?;
+        let (tl, tc) = (leader.table_secs(), critical.table_secs());
+        println!("A2 p={p:<3} leader={tl:.4}s critical={tc:.4}s overhead_ratio={:.3}", tc / tl);
+        rows.push((p, tl, tc));
+    }
+    let csv_rows: Vec<Vec<f64>> =
+        rows.iter().map(|r| vec![r.0 as f64, r.1, r.2]).collect();
+    csv::write_table(
+        &results_dir().join("ablations/a2_merge.csv"),
+        &["p", "leader_secs", "critical_secs"],
+        &csv_rows,
+    )?;
+    Ok(rows)
+}
+
+/// A3 — algorithm/init matrix on identical data (3D, K=4):
+/// (label, secs, sse, iterations).
+pub fn algorithms(scale: Scale) -> Result<Vec<(String, f64, f64, usize)>> {
+    let n = scale.apply(1_000_000);
+    let ds = paper_dataset(3, n);
+    let k = workloads::K_3D;
+    let mut rows: Vec<(String, f64, f64, usize)> = Vec::new();
+
+    for engine in [Engine::Serial, Engine::Elkan, Engine::Hamerly, Engine::MiniBatch] {
+        let t = run_engine(engine, &ds, k, 1, 42)?;
+        rows.push((engine.to_string(), t.secs, t.sse, t.iterations));
+    }
+    // init comparison on serial Lloyd
+    for (label, init) in [("serial+random", Init::Random), ("serial+kpp", Init::KmeansPlusPlus)] {
+        let kc = KmeansConfig::new(k).with_seed(42).with_init(init);
+        let t0 = std::time::Instant::now();
+        let r = kmeans::serial::run(&ds, &kc);
+        rows.push((label.to_string(), t0.elapsed().as_secs_f64(), r.sse, r.iterations));
+    }
+
+    let printed: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(l, s, sse, it)| {
+            vec![l.clone(), tables::secs(*s), format!("{sse:.3e}"), it.to_string()]
+        })
+        .collect();
+    println!(
+        "{}",
+        tables::render(
+            "A3. Algorithm / init ablation (3D, K=4)",
+            &["variant", "secs", "sse", "iters"],
+            &printed
+        )
+    );
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(l, s, sse, it)| vec![l.clone(), s.to_string(), sse.to_string(), it.to_string()])
+        .collect();
+    csv::write_rows(
+        &results_dir().join("ablations/a3_algorithms.csv"),
+        &["variant", "secs", "sse", "iters"],
+        &csv_rows,
+    )?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a3_accelerated_variants_match_lloyd_sse() {
+        std::env::set_var("PARAKM_RESULTS", std::env::temp_dir().join("parakm_abl"));
+        let rows = algorithms(Scale::Smoke).unwrap();
+        let sse_of = |name: &str| {
+            rows.iter().find(|r| r.0 == name).map(|r| r.2).unwrap()
+        };
+        let lloyd = sse_of("serial");
+        // Elkan/Hamerly are exact: same SSE as Lloyd
+        assert!((sse_of("elkan") - lloyd).abs() / lloyd < 1e-4);
+        assert!((sse_of("hamerly") - lloyd).abs() / lloyd < 1e-4);
+        // mini-batch approximate: within 10% on this easy mixture
+        assert!(sse_of("minibatch") <= lloyd * 1.10);
+    }
+}

@@ -1,0 +1,263 @@
+//! Figures 1–12 runners (DESIGN.md §5: F1–F12).
+//!
+//! - F1–F6: cluster scatter plots, serial vs parallel, checked by ARI
+//!   instead of the paper's eyeball comparison (plus the SVGs for the
+//!   eyeball anyway).
+//! - F7/F8: speedup ψ(n, p); F9/F10: efficiency ε(n, p); F11/F12:
+//!   time vs dataset scale — all as CSV series + SVG line charts.
+
+use crate::config::Engine;
+use crate::data::gmm::workloads;
+use crate::error::Result;
+use crate::eval::{paper_dataset, results_dir, run_engine, Scale};
+use crate::metrics;
+use crate::util::svg::{self, Series};
+
+/// Outcome of the cluster-figure pair (F1/F2, F3/F4, F5/F6): the ARI
+/// between serial and parallel assignments, which the paper asserts
+/// visually ("the parallel program achieves similar clustering").
+#[derive(Debug, Clone)]
+pub struct ClusterFigure {
+    pub name: String,
+    pub n: usize,
+    pub ari_serial_vs_parallel: f64,
+    pub serial_svg: std::path::PathBuf,
+    pub parallel_svg: std::path::PathBuf,
+}
+
+/// Figures 1–4 (3D, K=4, 1M and 400k) and 5–6 (2D, K=11, 500k).
+pub fn cluster_figures(scale: Scale) -> Result<Vec<ClusterFigure>> {
+    let jobs: [(usize, usize, usize, &str); 3] = [
+        (3, 1_000_000, workloads::K_3D, "fig1_2_3d_1m"),
+        (3, 400_000, workloads::K_3D, "fig3_4_3d_400k"),
+        (2, 500_000, 11, "fig5_6_2d_500k"),
+    ];
+    let dir = results_dir().join("figures");
+    let mut out = Vec::new();
+    for (dim, n_full, k, name) in jobs {
+        let n = scale.apply(n_full);
+        let ds = paper_dataset(dim, n);
+        let serial = run_engine(Engine::Serial, &ds, k, 1, 42)?;
+        // Offload is "the parallel program" of Figures 2/4/6 (OpenACC)
+        let parallel = run_engine(Engine::Offload, &ds, k, 1, 42)?;
+        let ari = metrics::adjusted_rand_index(&serial.assign, &parallel.assign);
+
+        let xs = ds.column(0);
+        let ys = ds.column(1);
+        let s_path = dir.join(format!("{name}_serial.svg"));
+        let p_path = dir.join(format!("{name}_parallel.svg"));
+        svg::scatter(
+            &s_path,
+            &format!("Serial K-Means, N={n} {dim}D, K={k} (x0/x1 projection)"),
+            &xs,
+            &ys,
+            &serial.assign,
+            20_000,
+        )?;
+        svg::scatter(
+            &p_path,
+            &format!("Parallel K-Means (offload), N={n} {dim}D, K={k} — ARI vs serial: {ari:.4}"),
+            &xs,
+            &ys,
+            &parallel.assign,
+            20_000,
+        )?;
+        println!("FIGURE {name}: ARI(serial, parallel) = {ari:.5}");
+        out.push(ClusterFigure {
+            name: name.to_string(),
+            n,
+            ari_serial_vs_parallel: ari,
+            serial_svg: s_path,
+            parallel_svg: p_path,
+        });
+    }
+    Ok(out)
+}
+
+/// One speedup/efficiency series point.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub n: usize,
+    pub p: usize,
+    pub t_serial: f64,
+    pub t_parallel: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+}
+
+/// Figures 7–10: speedup and efficiency vs p, one series per dataset
+/// size, for `dim` ∈ {3 (F7/F9), 2 (F8/F10)}.
+pub fn speedup_efficiency(dim: usize, scale: Scale) -> Result<Vec<ScalingPoint>> {
+    let (sizes, k): (&[usize], usize) = if dim == 3 {
+        (&workloads::SIZES_3D, workloads::K_3D)
+    } else {
+        (&workloads::SIZES_2D, workloads::K_2D)
+    };
+    let mut points = Vec::new();
+    for &n_full in sizes {
+        let n = scale.apply(n_full);
+        let ds = paper_dataset(dim, n);
+        // ψ's denominator substrate must match its numerator (the
+        // paper divides its serial C time by its OpenMP C time):
+        // here both sides are the AOT shared engine, serial = p 1.
+        let serial = run_engine(Engine::Shared, &ds, k, 1, 42)?;
+        for p in workloads::THREADS {
+            let par = run_engine(Engine::Shared, &ds, k, p, 42)?;
+            points.push(ScalingPoint {
+                n,
+                p,
+                t_serial: serial.secs,
+                t_parallel: par.secs,
+                speedup: metrics::speedup(serial.secs, par.secs),
+                efficiency: metrics::efficiency(serial.secs, par.secs, p),
+            });
+        }
+    }
+
+    let dir = results_dir().join("figures");
+    let mk_series = |f: &dyn Fn(&ScalingPoint) -> f64| -> Vec<Series> {
+        sizes
+            .iter()
+            .map(|&n_full| {
+                let n = scale.apply(n_full);
+                Series {
+                    name: Box::leak(format!("N={n}").into_boxed_str()),
+                    points: points
+                        .iter()
+                        .filter(|pt| pt.n == n)
+                        .map(|pt| (pt.p as f64, f(pt)))
+                        .collect(),
+                }
+            })
+            .collect()
+    };
+    let fig_s = if dim == 3 { 7 } else { 8 };
+    let fig_e = if dim == 3 { 9 } else { 10 };
+    svg::line_chart(
+        &dir.join(format!("fig{fig_s}_speedup_{dim}d.svg")),
+        &format!("FIGURE {fig_s}. Speedup for {dim}D Dataset"),
+        "threads p",
+        "speedup psi(n,p)",
+        &mk_series(&|pt| pt.speedup),
+    )?;
+    svg::line_chart(
+        &dir.join(format!("fig{fig_e}_efficiency_{dim}d.svg")),
+        &format!("FIGURE {fig_e}. Efficiency for {dim}D Dataset"),
+        "threads p",
+        "efficiency eps(n,p)",
+        &mk_series(&|pt| pt.efficiency),
+    )?;
+    let rows: Vec<Vec<f64>> = points
+        .iter()
+        .map(|pt| vec![pt.n as f64, pt.p as f64, pt.t_serial, pt.t_parallel, pt.speedup, pt.efficiency])
+        .collect();
+    crate::util::csv::write_table(
+        &dir.join(format!("speedup_efficiency_{dim}d.csv")),
+        &["n", "p", "t_serial", "t_parallel", "speedup", "efficiency"],
+        &rows,
+    )?;
+    for pt in &points {
+        println!(
+            "FIGURE {fig_s}/{fig_e} {dim}D  N={:<8} p={:<2} psi={:.3} eps={:.3}",
+            pt.n, pt.p, pt.speedup, pt.efficiency
+        );
+    }
+    Ok(points)
+}
+
+/// Figures 11–12: time vs dataset scale for serial / shared(p=8) /
+/// offload, per dim.
+pub fn time_vs_scaling(dim: usize, scale: Scale) -> Result<Vec<(usize, f64, f64, f64)>> {
+    let (sizes, k): (&[usize], usize) = if dim == 3 {
+        (&workloads::SIZES_3D, workloads::K_3D)
+    } else {
+        (&workloads::SIZES_2D, workloads::K_2D)
+    };
+    let mut rows = Vec::new();
+    for &n_full in sizes {
+        let n = scale.apply(n_full);
+        let ds = paper_dataset(dim, n);
+        let serial = run_engine(Engine::Serial, &ds, k, 1, 42)?;
+        let shared = run_engine(Engine::Shared, &ds, k, 8, 42)?;
+        let offload = run_engine(Engine::Offload, &ds, k, 1, 42)?;
+        println!(
+            "FIGURE {} {dim}D  N={n:<8} serial={:.4}s shared(p=8)={:.4}s offload={:.4}s",
+            if dim == 3 { 11 } else { 12 },
+            serial.secs,
+            shared.secs,
+            offload.secs
+        );
+        rows.push((n, serial.secs, shared.secs, offload.secs));
+    }
+    let dir = results_dir().join("figures");
+    let fig = if dim == 3 { 11 } else { 12 };
+    let series = [
+        Series { name: "serial", points: rows.iter().map(|r| (r.0 as f64, r.1)).collect() },
+        Series { name: "shared p=8", points: rows.iter().map(|r| (r.0 as f64, r.2)).collect() },
+        Series { name: "offload", points: rows.iter().map(|r| (r.0 as f64, r.3)).collect() },
+    ];
+    svg::line_chart(
+        &dir.join(format!("fig{fig}_scaling_{dim}d.svg")),
+        &format!("FIGURE {fig}. Time taken vs Scaling for {dim}D Datasets"),
+        "dataset size N",
+        "time (s)",
+        &series,
+    )?;
+    let csv_rows: Vec<Vec<f64>> =
+        rows.iter().map(|r| vec![r.0 as f64, r.1, r.2, r.3]).collect();
+    crate::util::csv::write_table(
+        &dir.join(format!("scaling_{dim}d.csv")),
+        &["n", "serial", "shared_p8", "offload"],
+        &csv_rows,
+    )?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn cluster_figures_parallel_matches_serial() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        std::env::set_var("PARAKM_RESULTS", std::env::temp_dir().join("parakm_figs"));
+        let figs = cluster_figures(Scale::Smoke).unwrap();
+        assert_eq!(figs.len(), 3);
+        for f in &figs {
+            // the paper's claim: parallel == serial clustering
+            assert!(
+                f.ari_serial_vs_parallel > 0.99,
+                "{}: ARI {}",
+                f.name,
+                f.ari_serial_vs_parallel
+            );
+            assert!(f.serial_svg.exists() && f.parallel_svg.exists());
+        }
+    }
+
+    #[test]
+    fn speedup_shape_3d() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        std::env::set_var("PARAKM_RESULTS", std::env::temp_dir().join("parakm_figs2"));
+        let pts = speedup_efficiency(3, Scale::Smoke).unwrap();
+        // paper shape: speedup > 1 and grows from p=2 to p=8 for the
+        // largest dataset; efficiency peaks at p=2
+        let largest = pts.iter().filter(|p| p.n == pts.last().unwrap().n).collect::<Vec<_>>();
+        let by_p = |p: usize| largest.iter().find(|x| x.p == p).unwrap();
+        assert!(by_p(2).speedup > 1.0, "{:?}", by_p(2));
+        assert!(by_p(8).speedup > by_p(2).speedup * 0.9);
+        assert!(by_p(2).efficiency >= by_p(16).efficiency);
+    }
+}

@@ -1,0 +1,226 @@
+//! Experiment harness: regenerates every table and figure in the
+//! paper's evaluation (DESIGN.md §5 maps ids to modules).
+//!
+//! Every runner is callable from `cargo bench` targets, from the CLI
+//! (`parakm eval --exp t1`), and from the E2E example. Output goes to
+//! `results/` as printed tables (paper format), CSV series and SVG
+//! figures.
+//!
+//! Scaling: the full paper workloads (up to 1M×3D) are expensive on a
+//! 1-core container, so every runner takes a [`Scale`]; `Scale::Full`
+//! is the paper's exact sizes, `Scale::Smoke` a 50× reduction with the
+//! same structure (used by `cargo test` integration and quick runs).
+//! `PARAKM_SCALE=full|smoke` selects at bench time.
+
+pub mod ablations;
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use crate::config::{Engine, RunConfig};
+use crate::coordinator::{offload, shared};
+use crate::data::gmm::{workloads, MixtureSpec};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::{self, KmeansConfig};
+
+/// Workload scale for the experiment runners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// The paper's exact dataset sizes.
+    Full,
+    /// Same structure, 50× smaller (CI / quick iteration).
+    Smoke,
+}
+
+impl Scale {
+    /// Read from `PARAKM_SCALE` (default smoke — full runs opt in).
+    pub fn from_env() -> Scale {
+        match std::env::var("PARAKM_SCALE").as_deref() {
+            Ok("full") => Scale::Full,
+            _ => Scale::Smoke,
+        }
+    }
+
+    pub fn apply(&self, n: usize) -> usize {
+        match self {
+            Scale::Full => n,
+            // /10 keeps p=8 shards above the smallest artifact chunk on
+            // the larger sizes, so scaling shapes remain observable
+            Scale::Smoke => (n / 10).max(1000),
+        }
+    }
+}
+
+/// Where results (tables, CSVs, SVGs) are written.
+pub fn results_dir() -> PathBuf {
+    std::env::var("PARAKM_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Generate a paper dataset (deterministic per (dim, n)).
+pub fn paper_dataset(dim: usize, n: usize) -> Dataset {
+    let spec = match dim {
+        2 => MixtureSpec::paper_2d(workloads::GEN_K_2D),
+        3 => MixtureSpec::paper_3d(workloads::GEN_K_3D),
+        _ => panic!("paper datasets are 2D/3D"),
+    };
+    spec.generate(n, workloads::seed_for(dim, n))
+}
+
+thread_local! {
+    /// Per-thread runtime cache: compiled executables are reused across
+    /// every eval cell instead of recompiling per run (PjRtClient is
+    /// `Rc`-based, hence thread-local rather than global).
+    static RUNTIME: std::cell::RefCell<Option<(PathBuf, crate::runtime::Runtime)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Run `f` with the cached thread-local [`crate::runtime::Runtime`] for
+/// `dir`, creating or replacing it when the artifacts dir changes.
+pub fn with_runtime<T>(
+    dir: &std::path::Path,
+    f: impl FnOnce(&mut crate::runtime::Runtime) -> Result<T>,
+) -> Result<T> {
+    RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let rebuild = match &*slot {
+            Some((cached_dir, _)) => cached_dir != dir,
+            None => true,
+        };
+        if rebuild {
+            *slot = Some((dir.to_path_buf(), crate::runtime::Runtime::new(dir)?));
+        }
+        let (_, rt) = slot.as_mut().expect("just initialized");
+        f(rt)
+    })
+}
+
+/// Timing outcome of one engine run, as the tables need it.
+#[derive(Debug, Clone)]
+pub struct Timed {
+    pub engine: Engine,
+    /// Seconds used for paper-table comparison (virtual-testbed time
+    /// for the shared engine, real wall-clock otherwise).
+    pub secs: f64,
+    /// Real wall-clock on this container (always recorded).
+    pub raw_secs: f64,
+    pub iterations: usize,
+    pub sse: f64,
+    pub converged: bool,
+    pub assign: Vec<i32>,
+    pub centroids: Vec<f32>,
+}
+
+/// Run one engine on a dataset with paper-standard settings.
+/// `threads` is the worker count for Threads/Shared; ignored otherwise.
+pub fn run_engine(
+    engine: Engine,
+    ds: &Dataset,
+    k: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<Timed> {
+    let kc = KmeansConfig::new(k).with_seed(seed);
+    let t0 = std::time::Instant::now();
+    let (secs, raw, result) = match engine {
+        Engine::Serial => {
+            let r = kmeans::serial::run(ds, &kc);
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
+        }
+        Engine::Threads => {
+            let r = kmeans::parallel::run(ds, &kc, threads);
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
+        }
+        Engine::Elkan => {
+            let r = kmeans::elkan::run(ds, &kc);
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
+        }
+        Engine::Hamerly => {
+            let r = kmeans::hamerly::run(ds, &kc);
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
+        }
+        Engine::MiniBatch => {
+            let r = kmeans::minibatch::run(ds, &kc, 8192);
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
+        }
+        Engine::Shared => {
+            let cfg = RunConfig { k, seed, threads, ..Default::default() };
+            let run = with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+                shared::run_with(rt, ds, &cfg, threads, shared::MergePolicy::Leader)
+            })?;
+            (run.table_secs(), run.wall_secs, run.result)
+        }
+        Engine::Offload => {
+            let cfg = RunConfig { k, seed, ..Default::default() };
+            let run = with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+                offload::run_with(rt, ds, &cfg)
+            })?;
+            (run.table_secs(), run.wall_secs, run.result)
+        }
+        Engine::Streaming => {
+            // materialize to a temp file: the streaming engine is
+            // file-oriented by design (bounded memory)
+            let path = std::env::temp_dir().join(format!(
+                "parakm_eval_stream_{}_{}.pkd",
+                ds.dim(),
+                ds.len()
+            ));
+            crate::data::io::write_binary(&path, ds)?;
+            let cfg = RunConfig { k, seed, ..Default::default() };
+            let run = with_runtime(&cfg.artifacts_dir.clone(), |rt| {
+                crate::coordinator::streaming::run_file_with(rt, &path, &cfg)
+            })?;
+            let _ = std::fs::remove_file(&path);
+            (run.table_secs(), run.wall_secs, run.result)
+        }
+    };
+    Ok(Timed {
+        engine,
+        secs,
+        raw_secs: raw,
+        iterations: result.iterations,
+        sse: result.sse,
+        converged: result.converged,
+        assign: result.assign,
+        centroids: result.centroids,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_applies() {
+        assert_eq!(Scale::Full.apply(1_000_000), 1_000_000);
+        assert_eq!(Scale::Smoke.apply(1_000_000), 100_000);
+        assert_eq!(Scale::Smoke.apply(5_000), 1000); // floor
+    }
+
+    #[test]
+    fn paper_dataset_shapes() {
+        let d2 = paper_dataset(2, 5000);
+        assert_eq!(d2.dim(), 2);
+        assert_eq!(d2.len(), 5000);
+        let d3 = paper_dataset(3, 5000);
+        assert_eq!(d3.dim(), 3);
+    }
+
+    #[test]
+    fn run_engine_serial_smoke() {
+        let ds = paper_dataset(3, 3000);
+        let t = run_engine(Engine::Serial, &ds, 4, 1, 42).unwrap();
+        assert!(t.converged);
+        assert!(t.secs > 0.0);
+        assert_eq!(t.assign.len(), 3000);
+    }
+}

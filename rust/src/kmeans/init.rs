@@ -1,0 +1,147 @@
+//! Centroid initialization.
+//!
+//! [`random`] is the paper's scheme — K distinct points sampled
+//! uniformly from the dataset. [`kmeans_plus_plus`] is the D² seeding
+//! extension (DESIGN.md A3): it typically cuts iterations-to-converge,
+//! which the ablation bench quantifies against the paper's scheme.
+
+use crate::config::Init;
+use crate::data::Dataset;
+use crate::linalg;
+use crate::rng::Pcg64;
+
+/// Dispatch on the configured strategy.
+pub fn initialize(ds: &Dataset, k: usize, init: Init, seed: u64) -> Vec<f32> {
+    match init {
+        Init::Random => random(ds, k, seed),
+        Init::KmeansPlusPlus => kmeans_plus_plus(ds, k, seed),
+    }
+}
+
+/// K distinct data points, uniformly at random (the paper's init).
+pub fn random(ds: &Dataset, k: usize, seed: u64) -> Vec<f32> {
+    assert!(k <= ds.len(), "k {} > n {}", k, ds.len());
+    let mut rng = Pcg64::new(seed, 0x1417);
+    let idx = rng.sample_indices(ds.len(), k);
+    let mut out = Vec::with_capacity(k * ds.dim());
+    for i in idx {
+        out.extend_from_slice(ds.point(i));
+    }
+    out
+}
+
+/// k-means++ (Arthur & Vassilvitskii 2007): first centroid uniform,
+/// each next centroid sampled ∝ D²(x) = squared distance to the
+/// nearest already-chosen centroid.
+pub fn kmeans_plus_plus(ds: &Dataset, k: usize, seed: u64) -> Vec<f32> {
+    assert!(k <= ds.len(), "k {} > n {}", k, ds.len());
+    let n = ds.len();
+    let d = ds.dim();
+    let mut rng = Pcg64::new(seed, 0x1418);
+    let mut centroids = Vec::with_capacity(k * d);
+
+    let first = rng.next_below(n as u64) as usize;
+    centroids.extend_from_slice(ds.point(first));
+
+    // running D² to nearest chosen centroid
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| linalg::sqdist_f64(ds.point(i), ds.point(first)))
+        .collect();
+
+    for _ in 1..k {
+        let next = rng.next_weighted(&d2);
+        let np = ds.point(next).to_vec();
+        centroids.extend_from_slice(&np);
+        for i in 0..n {
+            let dist = linalg::sqdist_f64(ds.point(i), &np);
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::testutil::prop;
+
+    #[test]
+    fn random_picks_k_distinct_data_points() {
+        let ds = MixtureSpec::paper_2d(4).generate(1000, 1);
+        let mu = random(&ds, 8, 5);
+        assert_eq!(mu.len(), 16);
+        // each centroid is an actual data point
+        for c in 0..8 {
+            let cent = &mu[c * 2..(c + 1) * 2];
+            assert!(
+                (0..ds.len()).any(|i| ds.point(i) == cent),
+                "centroid {c} not a data point"
+            );
+        }
+        // distinct
+        for a in 0..8 {
+            for b in (a + 1)..8 {
+                assert_ne!(&mu[a * 2..a * 2 + 2], &mu[b * 2..b * 2 + 2]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = MixtureSpec::paper_3d(4).generate(500, 2);
+        assert_eq!(random(&ds, 4, 9), random(&ds, 4, 9));
+        assert_ne!(random(&ds, 4, 9), random(&ds, 4, 10));
+        assert_eq!(kmeans_plus_plus(&ds, 4, 9), kmeans_plus_plus(&ds, 4, 9));
+    }
+
+    #[test]
+    fn kpp_spreads_over_components() {
+        // 4 tight far-apart blobs: k-means++ must pick one seed in each
+        let spec = MixtureSpec::random(2, 4, 100.0, 0.1, 3);
+        let ds = spec.generate(2000, 4);
+        let mu = kmeans_plus_plus(&ds, 4, 11);
+        // nearest true component of each chosen centroid must be unique
+        let mut used = std::collections::HashSet::new();
+        for c in 0..4 {
+            let cent = &mu[c * 2..(c + 1) * 2];
+            let (mut best, mut best_d) = (0, f64::INFINITY);
+            for (ci, comp) in spec.components.iter().enumerate() {
+                let m: Vec<f32> = comp.mean.iter().map(|&v| v as f32).collect();
+                let dist = linalg::sqdist_f64(cent, &m);
+                if dist < best_d {
+                    best_d = dist;
+                    best = ci;
+                }
+            }
+            used.insert(best);
+        }
+        assert_eq!(used.len(), 4, "k-means++ collapsed onto {} components", used.len());
+    }
+
+    #[test]
+    fn kpp_property_centroids_are_data_points() {
+        prop::check("kpp centroids ⊆ data", 16, |g| {
+            let n = g.usize_in(10, 200);
+            let k = g.usize_in(1, 9).min(n);
+            let data = g.points(n, 2, 20.0);
+            let ds = crate::data::Dataset::from_vec(data, 2).unwrap();
+            let mu = kmeans_plus_plus(&ds, k, g.u64());
+            for c in 0..k {
+                let cent = &mu[c * 2..(c + 1) * 2];
+                let found = (0..n).any(|i| ds.point(i) == cent);
+                prop::ensure(found, format!("centroid {c} not in data"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        let ds = MixtureSpec::paper_2d(4).generate(3, 1);
+        random(&ds, 4, 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Choosing K: elbow (SSE-vs-K knee) and silhouette-based selection.
+//!
+//! The paper fixes K per experiment; real deployments of its system
+//! must pick K. This module sweeps a K range with any engine-agnostic
+//! runner and applies two standard criteria:
+//!
+//! - **elbow**: the K maximizing distance from the SSE(K) curve to the
+//!   chord between its endpoints (the "kneedle" construction);
+//! - **silhouette**: the K maximizing the sampled silhouette score.
+
+use crate::data::Dataset;
+use crate::kmeans::{serial, KmeansConfig};
+use crate::metrics;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct KPoint {
+    pub k: usize,
+    pub sse: f64,
+    pub silhouette: f64,
+    pub iterations: usize,
+}
+
+/// Sweep K ∈ `ks` with serial Lloyd (deterministic per seed).
+pub fn sweep(ds: &Dataset, ks: &[usize], seed: u64, silhouette_sample: usize) -> Vec<KPoint> {
+    ks.iter()
+        .map(|&k| {
+            let r = serial::run(ds, &KmeansConfig::new(k).with_seed(seed));
+            let sil = if k >= 2 {
+                metrics::silhouette_sampled(ds, &r.assign, k, silhouette_sample, seed)
+            } else {
+                0.0
+            };
+            KPoint { k, sse: r.sse, silhouette: sil, iterations: r.iterations }
+        })
+        .collect()
+}
+
+/// Elbow selection: K whose SSE point is farthest below the chord from
+/// the first to the last sweep point (requires ≥ 3 points).
+pub fn elbow(points: &[KPoint]) -> Option<usize> {
+    if points.len() < 3 {
+        return None;
+    }
+    let (x0, y0) = (points[0].k as f64, points[0].sse);
+    let (x1, y1) = (
+        points[points.len() - 1].k as f64,
+        points[points.len() - 1].sse,
+    );
+    let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+    if len == 0.0 {
+        return None;
+    }
+    let mut best = None;
+    let mut best_dist = f64::NEG_INFINITY;
+    for p in &points[1..points.len() - 1] {
+        // signed distance to the chord; below-chord (convex knee) > 0
+        let d = ((y1 - y0) * (p.k as f64) - (x1 - x0) * p.sse + x1 * y0 - y1 * x0) / len;
+        if d > best_dist {
+            best_dist = d;
+            best = Some(p.k);
+        }
+    }
+    best
+}
+
+/// Silhouette selection: K with the best sampled silhouette.
+pub fn best_silhouette(points: &[KPoint]) -> Option<usize> {
+    points
+        .iter()
+        .filter(|p| p.k >= 2)
+        .max_by(|a, b| a.silhouette.partial_cmp(&b.silhouette).unwrap())
+        .map(|p| p.k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+
+    #[test]
+    fn finds_true_k_on_separated_mixture() {
+        // 4 well-separated blobs: both criteria should pick ~4
+        let spec = MixtureSpec::random(2, 4, 60.0, 0.6, 5);
+        let ds = spec.generate(2000, 2);
+        let ks: Vec<usize> = (1..=8).collect();
+        let pts = sweep(&ds, &ks, 7, 200);
+        assert_eq!(pts.len(), 8);
+        // SSE decreases (weakly) with K
+        for w in pts.windows(2) {
+            assert!(w[1].sse <= w[0].sse * 1.05, "{:?}", w);
+        }
+        let e = elbow(&pts).unwrap();
+        assert!((3..=5).contains(&e), "elbow picked {e}");
+        let s = best_silhouette(&pts).unwrap();
+        assert!((3..=5).contains(&s), "silhouette picked {s}");
+    }
+
+    #[test]
+    fn elbow_needs_three_points() {
+        let two = vec![
+            KPoint { k: 1, sse: 10.0, silhouette: 0.0, iterations: 1 },
+            KPoint { k: 2, sse: 5.0, silhouette: 0.5, iterations: 1 },
+        ];
+        assert_eq!(elbow(&two), None);
+    }
+
+    #[test]
+    fn silhouette_ignores_k1() {
+        let pts = vec![
+            KPoint { k: 1, sse: 10.0, silhouette: 0.99, iterations: 1 },
+            KPoint { k: 2, sse: 5.0, silhouette: 0.4, iterations: 1 },
+            KPoint { k: 3, sse: 4.0, silhouette: 0.6, iterations: 1 },
+        ];
+        assert_eq!(best_silhouette(&pts), Some(3));
+    }
+}

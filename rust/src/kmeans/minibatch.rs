@@ -1,0 +1,154 @@
+//! Mini-batch K-Means (Sculley 2010) — the big-data extension the
+//! paper's conclusion motivates ("extremely large datasets with
+//! real-world data").
+//!
+//! Instead of full passes, each iteration samples a batch, assigns it,
+//! and moves each touched centroid toward the batch mean with a
+//! per-centroid learning rate 1/count. Converges approximately but
+//! touches a fraction of the data per step; the A3 ablation bench
+//! compares wall-clock-to-quality against full Lloyd.
+
+use crate::data::Dataset;
+use crate::kmeans::step::{assign_accumulate, PartialStats};
+use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::rng::Pcg64;
+
+/// Run mini-batch K-Means with batch size `batch`.
+///
+/// Convergence: EWMA of centroid movement per step below `cfg.tol`
+/// (scaled by batch/n) or `cfg.max_iters` batches.
+pub fn run(ds: &Dataset, cfg: &KmeansConfig, batch: usize) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from(ds, cfg, batch, &centroids0)
+}
+
+/// Run from explicit initial centroids.
+pub fn run_from(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    batch: usize,
+    centroids0: &[f32],
+) -> KmeansResult {
+    let n = ds.len();
+    let d = ds.dim();
+    let k = cfg.k;
+    let b = batch.max(1).min(n);
+    assert_eq!(centroids0.len(), k * d);
+    let mut mu = centroids0.to_vec();
+    let mut rng = Pcg64::new(cfg.seed ^ 0xBA7C4, 0x31);
+
+    let mut counts = vec![0u64; k]; // lifetime per-centroid counts
+    let mut batch_rows = vec![0.0f32; b * d];
+    let mut batch_assign = vec![-1i32; b];
+    let mut stats = PartialStats::zeros(k, d);
+    let mut history = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut ewma_shift = f64::NAN;
+
+    for _ in 0..cfg.max_iters {
+        // sample the batch (with replacement: standard for mini-batch)
+        for bi in 0..b {
+            let src = rng.next_below(n as u64) as usize;
+            batch_rows[bi * d..(bi + 1) * d].copy_from_slice(ds.point(src));
+        }
+        assign_accumulate(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats);
+
+        // per-centroid gradient step toward the batch mean
+        let mut shift = 0.0f64;
+        for c in 0..k {
+            let bc = stats.counts[c];
+            if bc == 0 {
+                continue;
+            }
+            counts[c] += bc;
+            let eta = bc as f64 / counts[c] as f64;
+            let target_scale = 1.0 / bc as f64;
+            for j in 0..d {
+                let idx = c * d + j;
+                let batch_mean = stats.sums[idx] * target_scale;
+                let old = mu[idx] as f64;
+                let new = old + eta * (batch_mean - old);
+                mu[idx] = new as f32;
+                shift += (new - old) * (new - old);
+            }
+        }
+        iterations += 1;
+        ewma_shift = if ewma_shift.is_nan() { shift } else { 0.7 * ewma_shift + 0.3 * shift };
+        history.push((stats.sse * (n as f64 / b as f64), shift));
+        // tolerance scaled: a batch step moves centroids ~b/n as much
+        if ewma_shift < cfg.tol * (b as f64 / n as f64).max(1e-3) && iterations > 10 {
+            converged = true;
+            break;
+        }
+    }
+
+    // final full assignment pass for a comparable result/objective
+    let mut assign = vec![-1i32; n];
+    let mut full_stats = PartialStats::zeros(k, d);
+    assign_accumulate(ds.raw(), d, &mu, k, &mut assign, &mut full_stats);
+    let sse = full_stats.sse;
+    let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
+    KmeansResult {
+        centroids: mu,
+        assign,
+        k,
+        dim: d,
+        iterations,
+        sse,
+        shift,
+        converged,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::serial;
+
+    #[test]
+    fn near_lloyd_quality_on_separated_data() {
+        let spec = MixtureSpec::random(2, 4, 80.0, 0.6, 3);
+        let ds = spec.generate(20_000, 2);
+        let cfg = KmeansConfig::new(4).with_seed(5).with_max_iters(300);
+        let lloyd = serial::run(&ds, &cfg);
+        let mb = run(&ds, &cfg, 1024);
+        // within 5% of full-Lloyd SSE on an easy mixture
+        assert!(
+            mb.sse <= lloyd.sse * 1.05,
+            "minibatch sse {} vs lloyd {}",
+            mb.sse,
+            lloyd.sse
+        );
+        let ari = crate::metrics::adjusted_rand_index(&mb.assign, ds.truth.as_ref().unwrap());
+        assert!(ari > 0.95, "ari {ari}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = MixtureSpec::paper_2d(8).generate(5000, 7);
+        let cfg = KmeansConfig::new(8).with_seed(9);
+        let a = run(&ds, &cfg, 512);
+        let b = run(&ds, &cfg, 512);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn batch_larger_than_n_clamped() {
+        let ds = MixtureSpec::paper_2d(4).generate(100, 1);
+        let r = run(&ds, &KmeansConfig::new(4).with_seed(2).with_max_iters(50), 10_000);
+        assert_eq!(r.assign.len(), 100);
+        assert!(r.assign.iter().all(|&a| a >= 0));
+    }
+
+    #[test]
+    fn full_assignment_pass_covers_everything() {
+        let ds = MixtureSpec::paper_3d(4).generate(3000, 4);
+        let r = run(&ds, &KmeansConfig::new(4).with_seed(3).with_max_iters(100), 256);
+        let total: usize = r.cluster_sizes().iter().sum();
+        assert_eq!(total, 3000);
+    }
+}

@@ -1,0 +1,128 @@
+//! The K-Means algorithm family (pure rust, no XLA).
+//!
+//! These are the paper's baselines re-expressed in rust:
+//! [`serial`] is the serial C program, [`parallel`] the OpenMP program
+//! (spawn-once threads, local accumulation, critical-section merge).
+//! [`elkan`]/[`hamerly`] implement the triangle-inequality acceleration
+//! of the paper's reference [4]; [`minibatch`] is the big-data
+//! extension motivated in the conclusion. The AOT-backed engines live
+//! in [`crate::coordinator`] and share these types.
+
+pub mod bisecting;
+pub mod elkan;
+pub mod hamerly;
+pub mod init;
+pub mod kselect;
+pub mod minibatch;
+pub mod parallel;
+pub mod serial;
+pub mod step;
+
+use crate::config::Init;
+
+/// Configuration for the pure-rust algorithms (the AOT engines use the
+/// richer [`crate::config::RunConfig`]).
+#[derive(Debug, Clone)]
+pub struct KmeansConfig {
+    pub k: usize,
+    /// Convergence tolerance on E = Σ‖μ^{t+1} − μ^t‖² (paper: 1e-6).
+    pub tol: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub init: Init,
+}
+
+impl KmeansConfig {
+    pub fn new(k: usize) -> KmeansConfig {
+        KmeansConfig { k, tol: 1e-6, max_iters: 300, seed: 42, init: Init::Random }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> KmeansConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> KmeansConfig {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_max_iters(mut self, m: usize) -> KmeansConfig {
+        self.max_iters = m;
+        self
+    }
+
+    pub fn with_init(mut self, init: Init) -> KmeansConfig {
+        self.init = init;
+        self
+    }
+}
+
+/// Result of any engine: centroids (k×d row-major), hard assignments,
+/// and convergence telemetry.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub centroids: Vec<f32>,
+    pub assign: Vec<i32>,
+    pub k: usize,
+    pub dim: usize,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+    /// Final objective Σᵢ‖xᵢ − μ_{zᵢ}‖².
+    pub sse: f64,
+    /// Final centroid-shift error E (the convergence quantity).
+    pub shift: f64,
+    /// True iff E < tol before `max_iters` ran out.
+    pub converged: bool,
+    /// Per-iteration (sse, shift) history for convergence tests/plots.
+    pub history: Vec<(f64, f64)>,
+}
+
+impl KmeansResult {
+    /// Centroid `c` as a slice.
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Number of points assigned to each cluster.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &a in &self.assign {
+            if a >= 0 {
+                sizes[a as usize] += 1;
+            }
+        }
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_builder() {
+        let c = KmeansConfig::new(8).with_seed(1).with_tol(1e-4).with_max_iters(10);
+        assert_eq!(c.k, 8);
+        assert_eq!(c.seed, 1);
+        assert_eq!(c.tol, 1e-4);
+        assert_eq!(c.max_iters, 10);
+    }
+
+    #[test]
+    fn result_accessors() {
+        let r = KmeansResult {
+            centroids: vec![0.0, 0.0, 1.0, 1.0],
+            assign: vec![0, 1, 1, -1],
+            k: 2,
+            dim: 2,
+            iterations: 3,
+            sse: 0.5,
+            shift: 0.0,
+            converged: true,
+            history: vec![],
+        };
+        assert_eq!(r.centroid(1), &[1.0, 1.0]);
+        assert_eq!(r.cluster_sizes(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Shared-memory parallel Lloyd — the paper's OpenMP program (Tables
+//! 2/3, Figures 7–10), re-expressed with rust threads.
+//!
+//! Faithful to the paper's structure:
+//! - threads are spawned **once** before the iteration loop (the paper
+//!   prefers `parallel` over `parallel for` for exactly this reason —
+//!   the iteration count is unknown);
+//! - the dataset is sharded contiguously across `p` threads;
+//! - each thread reassigns its shard and accumulates *local* stats;
+//! - locals reach the leader either per-thread-slot (leader merges —
+//!   the default, lock-free) or through a single mutex the workers
+//!   serialize on (the paper's `critical` directive — kept as
+//!   [`MergeMode::Critical`] for the A2 ablation);
+//! - two barriers per iteration mirror the paper's `barrier`: one
+//!   after centroid publication, one after stat accumulation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
+
+use crate::data::Dataset;
+use crate::kmeans::step::{assign_accumulate, finalize, PartialStats};
+use crate::kmeans::{init, KmeansConfig, KmeansResult};
+
+/// How worker-local statistics reach the leader (DESIGN.md A2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Each worker owns a slot; the leader folds all slots. No lock
+    /// contention; the rust-native translation of the paper's intent.
+    Leader,
+    /// Workers merge into one shared accumulator under a mutex — the
+    /// literal translation of the paper's OpenMP `critical` section.
+    Critical,
+}
+
+/// Run threaded Lloyd with `threads` workers.
+pub fn run(ds: &Dataset, cfg: &KmeansConfig, threads: usize) -> KmeansResult {
+    run_opts(ds, cfg, threads, MergeMode::Leader)
+}
+
+/// Run with an explicit merge mode (ablation entry point).
+pub fn run_opts(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from(ds, cfg, threads, merge, &centroids0)
+}
+
+/// Run from explicit initial centroids.
+pub fn run_from(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    centroids0: &[f32],
+) -> KmeansResult {
+    let p = threads.max(1).min(ds.len().max(1));
+    let k = cfg.k;
+    let d = ds.dim();
+    assert_eq!(centroids0.len(), k * d, "bad initial centroids");
+
+    let ranges = ds.shard_ranges(p);
+    let mut assign = vec![-1i32; ds.len()];
+
+    // split the global assignment buffer into per-shard &mut slices
+    let mut assign_shards: Vec<&mut [i32]> = Vec::with_capacity(p);
+    {
+        let mut rest: &mut [i32] = &mut assign;
+        for (lo, hi) in &ranges {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            assign_shards.push(head);
+            rest = tail;
+        }
+    }
+
+    let centroids = RwLock::new(centroids0.to_vec());
+    let slots: Vec<Mutex<PartialStats>> =
+        (0..p).map(|_| Mutex::new(PartialStats::zeros(k, d))).collect();
+    let global = Mutex::new(PartialStats::zeros(k, d)); // Critical mode
+    let barrier = Barrier::new(p + 1); // workers + leader
+    let done = AtomicBool::new(false);
+
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+
+    crossbeam_utils::thread::scope(|scope| {
+        // ---- workers: spawned once, live across all iterations --------
+        for (wid, shard) in assign_shards.into_iter().enumerate() {
+            let (lo, hi) = ranges[wid];
+            let rows = ds.rows(lo, hi);
+            let centroids = &centroids;
+            let slots = &slots;
+            let global = &global;
+            let barrier = &barrier;
+            let done = &done;
+            scope.spawn(move |_| {
+                let mut local = PartialStats::zeros(k, d);
+                loop {
+                    barrier.wait(); // (A) leader published centroids/done
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mu = centroids.read().unwrap().clone();
+                    assign_accumulate(rows, d, &mu, k, shard, &mut local);
+                    match merge {
+                        MergeMode::Leader => {
+                            *slots[wid].lock().unwrap() = local.clone();
+                        }
+                        MergeMode::Critical => {
+                            // the paper's critical section
+                            global.lock().unwrap().merge(&local);
+                        }
+                    }
+                    barrier.wait(); // (B) stats complete
+                }
+            });
+        }
+
+        // ---- leader ----------------------------------------------------
+        for _ in 0..cfg.max_iters {
+            if merge == MergeMode::Critical {
+                global.lock().unwrap().reset();
+            }
+            barrier.wait(); // (A)
+            barrier.wait(); // (B) workers finished this iteration
+
+            let mut merged = PartialStats::zeros(k, d);
+            match merge {
+                MergeMode::Leader => {
+                    for slot in &slots {
+                        merged.merge(&slot.lock().unwrap());
+                    }
+                }
+                MergeMode::Critical => {
+                    merged.merge(&global.lock().unwrap());
+                }
+            }
+            let mu_old = centroids.read().unwrap().clone();
+            let (mu_new, shift) = finalize(&merged, &mu_old);
+            *centroids.write().unwrap() = mu_new;
+            iterations += 1;
+            history.push((merged.sse, shift));
+            if shift < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+        done.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the exit branch
+    })
+    .expect("worker thread panicked");
+
+    let final_centroids = centroids.into_inner().unwrap();
+    let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
+    KmeansResult {
+        centroids: final_centroids,
+        assign,
+        k,
+        dim: d,
+        iterations,
+        sse,
+        shift,
+        converged,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::serial;
+    use crate::testutil::prop;
+
+    /// Threaded must equal serial bit-for-bit from the same init:
+    /// the decomposition changes *who* computes, not *what*.
+    #[test]
+    fn matches_serial_exactly_all_thread_counts() {
+        let ds = MixtureSpec::paper_2d(8).generate(5003, 3); // odd n: ragged shards
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let s = serial::run_from(&ds, &cfg, &mu0);
+        for p in [1, 2, 3, 4, 8, 16] {
+            let r = run_from(&ds, &cfg, p, MergeMode::Leader, &mu0);
+            assert_eq!(r.iterations, s.iterations, "p={p}");
+            assert_eq!(r.assign, s.assign, "p={p}");
+            // centroids: f64 merge order differs (per-shard partials),
+            // so allow f32-level slack rather than bit equality
+            for (a, b) in r.centroids.iter().zip(&s.centroids) {
+                assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "p={p}: {a} vs {b}");
+            }
+            assert!((r.sse - s.sse).abs() / s.sse.max(1.0) < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn critical_mode_matches_leader_mode() {
+        let ds = MixtureSpec::paper_3d(4).generate(4001, 7);
+        let cfg = KmeansConfig::new(4).with_seed(2);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let a = run_from(&ds, &cfg, 4, MergeMode::Leader, &mu0);
+        let b = run_from(&ds, &cfg, 4, MergeMode::Critical, &mu0);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.iterations, b.iterations);
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn converges() {
+        let ds = MixtureSpec::random(3, 4, 80.0, 0.5, 9).generate(3000, 1);
+        let r = run(&ds, &KmeansConfig::new(4).with_seed(4), 8);
+        assert!(r.converged);
+        let ari = crate::metrics::adjusted_rand_index(&r.assign, ds.truth.as_ref().unwrap());
+        assert!(ari > 0.99, "ari {ari}");
+    }
+
+    #[test]
+    fn more_threads_than_points() {
+        let ds = MixtureSpec::paper_2d(4).generate(10, 1);
+        let r = run(&ds, &KmeansConfig::new(2).with_seed(1), 64);
+        assert_eq!(r.assign.len(), 10);
+        assert!(r.assign.iter().all(|&a| a >= 0));
+    }
+
+    #[test]
+    fn property_partition_complete_any_p() {
+        prop::check("threaded partition complete", 8, |g| {
+            let n = g.usize_in(50, 500);
+            let p = g.usize_in(1, 9);
+            let k = g.usize_in(1, 6);
+            let data = g.points(n, 2, 10.0);
+            let ds = crate::data::Dataset::from_vec(data, 2).unwrap();
+            let cfg = KmeansConfig::new(k).with_seed(g.u64()).with_max_iters(5);
+            let r = run(&ds, &cfg, p);
+            prop::ensure(r.assign.len() == n, "assign length")?;
+            prop::ensure(
+                r.assign.iter().all(|&a| a >= 0 && (a as usize) < k),
+                "assignment out of range",
+            )?;
+            let total: usize = r.cluster_sizes().iter().sum();
+            prop::ensure(total == n, format!("sizes sum {total} != n {n}"))
+        });
+    }
+}

@@ -1,0 +1,323 @@
+//! The Lloyd-iteration primitives shared by every pure-rust engine —
+//! and the L3 performance hot path (EXPERIMENTS.md §Perf).
+//!
+//! [`assign_accumulate`] fuses the reassignment step with local
+//! statistic accumulation (one pass over the rows), exactly the loop
+//! each of the paper's OpenMP threads runs on its shard. The inner loop
+//! is monomorphized per dimension (`D = 2, 3`) so the distance
+//! computation fully unrolls; other dims fall back to a generic loop.
+//! Sums accumulate in f64: at N = 1M, f32 accumulation loses enough
+//! precision to perturb centroids between engines.
+
+use crate::data::Dataset;
+
+/// Per-shard accumulation buffers (one per thread — the paper's "local
+/// cluster means" — merged by the leader).
+#[derive(Debug, Clone)]
+pub struct PartialStats {
+    pub k: usize,
+    pub dim: usize,
+    /// k×d running sums (f64 — see module docs).
+    pub sums: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sse: f64,
+}
+
+impl PartialStats {
+    pub fn zeros(k: usize, dim: usize) -> PartialStats {
+        PartialStats { k, dim, sums: vec![0.0; k * dim], counts: vec![0; k], sse: 0.0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.sums.iter_mut().for_each(|v| *v = 0.0);
+        self.counts.iter_mut().for_each(|v| *v = 0);
+        self.sse = 0.0;
+    }
+
+    /// Merge another shard's stats into this one (the paper's critical
+    /// section; in rust the leader owns the merge so no lock is needed).
+    pub fn merge(&mut self, other: &PartialStats) {
+        debug_assert_eq!(self.k, other.k);
+        debug_assert_eq!(self.dim, other.dim);
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sse += other.sse;
+    }
+}
+
+/// Assign every row in `rows` (row-major, `dim` wide) to its nearest
+/// centroid, writing assignments into `assign_out` and accumulating
+/// sums/counts/SSE into `stats` (which is reset first).
+///
+/// `row_offset` is the global index of `rows[0]` — only used to address
+/// `assign_out`, which is the *global* assignment buffer.
+pub fn assign_accumulate(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+) {
+    debug_assert_eq!(rows.len() % dim, 0);
+    debug_assert_eq!(centroids.len(), k * dim);
+    debug_assert_eq!(assign_out.len() * dim, rows.len());
+    stats.reset();
+    match dim {
+        2 => assign_rows::<2>(rows, centroids, k, assign_out, stats),
+        3 => assign_rows::<3>(rows, centroids, k, assign_out, stats),
+        _ => assign_rows_generic(rows, dim, centroids, k, assign_out, stats),
+    }
+}
+
+/// Monomorphized hot loop: D known at compile time, distance unrolled.
+fn assign_rows<const D: usize>(
+    rows: &[f32],
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+) {
+    let n = rows.len() / D;
+    for i in 0..n {
+        let p: &[f32; D] = rows[i * D..(i + 1) * D].try_into().unwrap();
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let mu = &centroids[c * D..(c + 1) * D];
+            let mut d2 = 0.0f32;
+            for j in 0..D {
+                let diff = p[j] - mu[j];
+                d2 += diff * diff;
+            }
+            if d2 < best_d {
+                best_d = d2;
+                best = c;
+            }
+        }
+        assign_out[i] = best as i32;
+        stats.counts[best] += 1;
+        stats.sse += best_d as f64;
+        let s = &mut stats.sums[best * D..(best + 1) * D];
+        for j in 0..D {
+            s[j] += p[j] as f64;
+        }
+    }
+}
+
+fn assign_rows_generic(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+) {
+    let n = rows.len() / dim;
+    for i in 0..n {
+        let p = &rows[i * dim..(i + 1) * dim];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let d2 = crate::linalg::sqdist(p, &centroids[c * dim..(c + 1) * dim]);
+            if d2 < best_d {
+                best_d = d2;
+                best = c;
+            }
+        }
+        assign_out[i] = best as i32;
+        stats.counts[best] += 1;
+        stats.sse += best_d as f64;
+        crate::linalg::add_assign(&mut stats.sums[best * dim..(best + 1) * dim], p);
+    }
+}
+
+/// Mean-recomputation + convergence error: consumes merged stats,
+/// produces new centroids and E = Σ‖μ_new − μ_old‖². Empty clusters
+/// keep their previous centroid (see python `model.make_finalize`).
+pub fn finalize(stats: &PartialStats, centroids_old: &[f32]) -> (Vec<f32>, f64) {
+    let (k, d) = (stats.k, stats.dim);
+    debug_assert_eq!(centroids_old.len(), k * d);
+    let mut mu_new = vec![0.0f32; k * d];
+    let mut shift = 0.0f64;
+    for c in 0..k {
+        let cnt = stats.counts[c];
+        for j in 0..d {
+            let idx = c * d + j;
+            let v = if cnt > 0 {
+                (stats.sums[idx] / cnt as f64) as f32
+            } else {
+                centroids_old[idx]
+            };
+            mu_new[idx] = v;
+            let diff = (v - centroids_old[idx]) as f64;
+            shift += diff * diff;
+        }
+    }
+    (mu_new, shift)
+}
+
+/// Single-threaded full Lloyd iteration over a dataset (assignment +
+/// accumulate + finalize). Returns (new_centroids, shift, sse).
+pub fn lloyd_iteration(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+) -> (Vec<f32>, f64, f64) {
+    assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats);
+    let (mu_new, shift) = finalize(stats, centroids);
+    (mu_new, shift, stats.sse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::testutil::prop;
+
+    fn toy() -> (Dataset, Vec<f32>) {
+        // two obvious clusters on the x axis
+        let ds = Dataset::from_vec(
+            vec![0.0, 0.0, 0.2, 0.0, 10.0, 0.0, 10.2, 0.0],
+            2,
+        )
+        .unwrap();
+        let centroids = vec![0.0, 0.0, 10.0, 0.0];
+        (ds, centroids)
+    }
+
+    #[test]
+    fn assigns_to_nearest() {
+        let (ds, mu) = toy();
+        let mut assign = vec![0i32; 4];
+        let mut stats = PartialStats::zeros(2, 2);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        assert_eq!(assign, vec![0, 0, 1, 1]);
+        assert_eq!(stats.counts, vec![2, 2]);
+        assert!((stats.sums[0] - 0.2).abs() < 1e-6);
+        assert!((stats.sums[2] - 20.2).abs() < 1e-5);
+        assert!((stats.sse - 0.08).abs() < 1e-5);
+    }
+
+    #[test]
+    fn finalize_means_and_shift() {
+        let (ds, mu) = toy();
+        let mut assign = vec![0i32; 4];
+        let mut stats = PartialStats::zeros(2, 2);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        let (mu_new, shift) = finalize(&stats, &mu);
+        assert!((mu_new[0] - 0.1).abs() < 1e-6);
+        assert!((mu_new[2] - 10.1).abs() < 1e-5);
+        // shift = 2 * 0.1^2
+        assert!((shift - 0.02).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let ds = Dataset::from_vec(vec![0.0, 0.0], 2).unwrap();
+        let mu = vec![0.0, 0.0, 99.0, 99.0];
+        let mut assign = vec![0i32; 1];
+        let mut stats = PartialStats::zeros(2, 2);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        let (mu_new, _) = finalize(&stats, &mu);
+        assert_eq!(&mu_new[2..4], &[99.0, 99.0]);
+    }
+
+    #[test]
+    fn merge_is_sum() {
+        let mut a = PartialStats::zeros(2, 2);
+        a.sums = vec![1.0, 2.0, 3.0, 4.0];
+        a.counts = vec![1, 2];
+        a.sse = 0.5;
+        let mut b = PartialStats::zeros(2, 2);
+        b.sums = vec![10.0, 20.0, 30.0, 40.0];
+        b.counts = vec![3, 4];
+        b.sse = 1.5;
+        a.merge(&b);
+        assert_eq!(a.sums, vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(a.counts, vec![4, 6]);
+        assert_eq!(a.sse, 2.0);
+    }
+
+    #[test]
+    fn specialized_matches_generic() {
+        // property: the D=2/3 monomorphized loops agree with the
+        // generic loop on identical inputs
+        prop::check("specialized == generic", 32, |g| {
+            let d = *g.choice(&[2usize, 3]);
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(1, 12);
+            let rows = g.points(n, d, 10.0);
+            let mu = g.points(k, d, 10.0);
+            let mut a1 = vec![0i32; n];
+            let mut a2 = vec![0i32; n];
+            let mut s1 = PartialStats::zeros(k, d);
+            let mut s2 = PartialStats::zeros(k, d);
+            match d {
+                2 => assign_rows::<2>(&rows, &mu, k, &mut a1, &mut s1),
+                3 => assign_rows::<3>(&rows, &mu, k, &mut a1, &mut s1),
+                _ => unreachable!(),
+            }
+            assign_rows_generic(&rows, d, &mu, k, &mut a2, &mut s2);
+            prop::ensure(a1 == a2, "assignments differ")?;
+            prop::ensure(s1.counts == s2.counts, "counts differ")?;
+            let close = s1
+                .sums
+                .iter()
+                .zip(&s2.sums)
+                .all(|(x, y)| (x - y).abs() < 1e-9);
+            prop::ensure(close, "sums differ")?;
+            prop::ensure((s1.sse - s2.sse).abs() < 1e-6, "sse differs")
+        });
+    }
+
+    #[test]
+    fn stats_invariants_property() {
+        // counts sum to n; sums-of-sums equals the column sums of data
+        prop::check("partition invariants", 32, |g| {
+            let d = *g.choice(&[2usize, 3]);
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 8);
+            let rows = g.points(n, d, 5.0);
+            let mu = g.points(k, d, 5.0);
+            let mut assign = vec![0i32; n];
+            let mut stats = PartialStats::zeros(k, d);
+            assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats);
+            let total: u64 = stats.counts.iter().sum();
+            prop::ensure(total == n as u64, format!("counts {total} != n {n}"))?;
+            for j in 0..d {
+                let col: f64 = (0..n).map(|i| rows[i * d + j] as f64).sum();
+                let via: f64 = (0..k).map(|c| stats.sums[c * d + j]).sum();
+                prop::ensure((col - via).abs() < 1e-6 * n as f64 + 1e-9, "column sum mismatch")?;
+            }
+            prop::ensure(assign.iter().all(|&a| (a as usize) < k), "assignment out of range")
+        });
+    }
+
+    #[test]
+    fn lloyd_iteration_reduces_sse() {
+        // Lloyd invariant: SSE non-increasing across iterations
+        let mut g = prop::Gen::new(77);
+        let n = 400;
+        let d = 2;
+        let k = 5;
+        let data = g.points(n, d, 10.0);
+        let ds = Dataset::from_vec(data, d).unwrap();
+        let mut mu: Vec<f32> = ds.rows(0, k).to_vec();
+        let mut assign = vec![0i32; n];
+        let mut stats = PartialStats::zeros(k, d);
+        let mut last_sse = f64::INFINITY;
+        for _ in 0..10 {
+            let (mu_new, _, sse) = lloyd_iteration(&ds, &mu, k, &mut assign, &mut stats);
+            assert!(sse <= last_sse * (1.0 + 1e-9), "sse increased: {sse} > {last_sse}");
+            last_sse = sse;
+            mu = mu_new;
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # parakmeans — parallel K-Means for big-data clustering
+//!
+//! A three-layer reproduction of *"Parallelization of the K-Means
+//! Algorithm with Applications to Big Data Clustering"* (CS.DC 2024):
+//!
+//! - **Layer 3 (this crate)** — the coordination contribution: a
+//!   shared-memory leader/worker engine ([`coordinator::shared`],
+//!   the paper's OpenMP model) and a device-offload engine
+//!   ([`coordinator::offload`], the paper's OpenACC model), plus
+//!   pure-rust baselines ([`kmeans`]), dataset generation ([`data`]),
+//!   metrics ([`metrics`]) and the paper-table/figure harness ([`eval`]).
+//! - **Layer 2** — the Lloyd iteration as jax programs
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! - **Layer 1** — the fused assign+accumulate Pallas kernel
+//!   (`python/compile/kernels/lloyd.py`).
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and the rust engines
+//! drive them directly.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parakmeans::data::gmm::MixtureSpec;
+//! use parakmeans::kmeans::{self, KmeansConfig};
+//!
+//! let ds = MixtureSpec::paper_2d(4).generate(10_000, 42);
+//! let cfg = KmeansConfig::new(4).with_seed(7);
+//! let result = kmeans::serial::run(&ds, &cfg);
+//! println!("converged in {} iters, sse={}", result.iterations, result.sse);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,147 @@
+//! Small dense linear-algebra helpers shared by the generators,
+//! baselines and metrics. Everything operates on row-major `f32`/`f64`
+//! slices; dimensions here are tiny (d ≤ a few dozen), so clarity wins
+//! over blocking.
+
+/// Squared L2 distance between two d-vectors.
+#[inline(always)]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared L2 distance, f64 accumulate (metrics paths that must not
+/// drift on 1M-point sums).
+#[inline(always)]
+pub fn sqdist_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Dot product.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y += x`.
+#[inline(always)]
+pub fn add_assign(y: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += x[i] as f64;
+    }
+}
+
+/// Cholesky factorization of a symmetric positive-definite `d×d` matrix
+/// (row-major). Returns lower-triangular `L` with `L·Lᵀ = A`, or `None`
+/// if not positive definite.
+pub fn cholesky(a: &[f64], d: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), d * d);
+    let mut l = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut sum = a[i * d + j];
+            for k in 0..j {
+                sum -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * d + i] = sum.sqrt();
+            } else {
+                l[i * d + j] = sum / l[j * d + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// `y = L·x` for lower-triangular `L` (d×d row-major).
+pub fn tril_matvec(l: &[f64], x: &[f64], d: usize) -> Vec<f64> {
+    let mut y = vec![0.0f64; d];
+    for i in 0..d {
+        let mut acc = 0.0;
+        for j in 0..=i {
+            acc += l[i * d + j] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqdist_basic() {
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sqdist(&[1.0], &[1.0]), 0.0);
+        assert_eq!(sqdist_f64(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut y = vec![1.0f64, 2.0];
+        add_assign(&mut y, &[0.5, 0.5]);
+        assert_eq!(y, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert_eq!(l, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = [[4, 2], [2, 3]] — SPD
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        // verify L L^T = A
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut acc = 0.0;
+                for k in 0..2 {
+                    acc += l[i * 2 + k] * l[j * 2 + k];
+                }
+                assert!((acc - a[i * 2 + j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn tril_matvec_applies() {
+        let l = vec![2.0, 0.0, 1.0, 3.0];
+        let y = tril_matvec(&l, &[1.0, 1.0], 2);
+        assert_eq!(y, vec![2.0, 4.0]);
+    }
+}

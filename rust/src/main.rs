@@ -1,0 +1,314 @@
+//! `parakm` — the parakmeans CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   gen-data   generate a paper-family GMM dataset to a .pkd/.csv file
+//!   run        cluster a dataset with any engine, print a report
+//!   eval       regenerate paper tables/figures (t1..t5, f*, a1..a3, all)
+//!   info       show AOT artifact manifest + runtime info
+//!
+//! Examples:
+//!   parakm gen-data --dim 3 --n 100000 --out data/d3_100k.pkd
+//!   parakm run --input data/d3_100k.pkd --engine shared --k 4 --threads 8
+//!   parakm run --synthetic 3d:200000 --engine offload --k 4
+//!   parakm eval --exp t3 --scale smoke
+//!   parakm info
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context};
+use parakmeans::config::{Engine, Init, RunConfig};
+use parakmeans::coordinator::{offload, shared};
+use parakmeans::data::{gmm::MixtureSpec, io, Dataset};
+use parakmeans::eval::{self, Scale};
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::metrics;
+use parakmeans::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand() {
+        Some("gen-data") => cmd_gen_data(args),
+        Some("run") => cmd_run(args),
+        Some("eval") => cmd_eval(args),
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand `{other}` (gen-data|run|eval|serve|info)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "parakm — parallel K-Means (rust + JAX/Pallas AOT)\n\
+         \n\
+         usage: parakm <gen-data|run|eval|info> [flags]\n\
+         \n\
+         gen-data  --dim <2|3> --n <N> --out <file.pkd|file.csv> [--components K] [--seed S]\n\
+         run       --input <file> | --synthetic <2d|3d>:<N>\n\
+         \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming\n\
+         \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
+         \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
+         eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
+         serve     --input <file> | --synthetic <2d|3d>:<N>  --k K [--addr HOST:PORT]\n\
+         \u{20}          [--max-batch B] [--max-delay-ms T] [--artifacts DIR]\n\
+         info      [--artifacts DIR]"
+    );
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let dim: usize = args.require("dim")?;
+    let n: usize = args.require("n")?;
+    let out: PathBuf = PathBuf::from(args.get("out").context("missing --out")?.to_string());
+    let seed: u64 = args.get_or("seed", 42)?;
+    let components: usize = args.get_or("components", if dim == 2 { 8 } else { 4 })?;
+    args.finish()?;
+
+    let spec = match dim {
+        2 => MixtureSpec::paper_2d(components),
+        3 => MixtureSpec::paper_3d(components),
+        d => MixtureSpec::random(d, components, 12.0, 1.5, 0x9e0 + d as u64),
+    };
+    let ds = spec.generate(n, seed);
+    match out.extension().and_then(|e| e.to_str()) {
+        Some("csv") => io::write_csv(&out, &ds)?,
+        _ => io::write_binary(&out, &ds)?,
+    }
+    println!(
+        "wrote {} points ({dim}D, {components} components, seed {seed}) to {}",
+        n,
+        out.display()
+    );
+    Ok(())
+}
+
+fn load_input(args: &Args) -> anyhow::Result<Dataset> {
+    if let Some(path) = args.get("input") {
+        let p = PathBuf::from(path);
+        let ds = match p.extension().and_then(|e| e.to_str()) {
+            Some("csv") => io::read_csv(&p)?,
+            _ => io::read_binary(&p)?,
+        };
+        return Ok(ds);
+    }
+    if let Some(spec) = args.get("synthetic") {
+        let (dim_s, n_s) = spec
+            .split_once(':')
+            .context("--synthetic expects <2d|3d>:<N>")?;
+        let dim = match dim_s {
+            "2d" => 2,
+            "3d" => 3,
+            other => bail!("--synthetic dim `{other}` (2d|3d)"),
+        };
+        let n: usize = n_s.parse().context("--synthetic size")?;
+        return Ok(eval::paper_dataset(dim, n));
+    }
+    bail!("provide --input <file> or --synthetic <2d|3d>:<N>")
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let ds = load_input(args)?;
+    let engine: Engine = args.require("engine")?;
+    let k: usize = args.require("k")?;
+    let threads: usize = args.get_or("threads", 4)?;
+    let tol: f64 = args.get_or("tol", 1e-6)?;
+    let max_iters: usize = args.get_or("max-iters", 300)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let init: Init = args.get_or("init", Init::Random)?;
+    let chunk: usize = args.get_or("chunk", 0)?; // 0 = auto
+    let batch: usize = args.get_or("batch", 8192)?;
+    let artifacts: PathBuf =
+        PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
+    let assign_out = args.get("assign-out").map(PathBuf::from);
+    args.finish()?;
+
+    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+    let t0 = std::time::Instant::now();
+    let (result, setup, engine_wall) = match engine {
+        Engine::Serial => (kmeans::serial::run(&ds, &kc), 0.0, None),
+        Engine::Threads => (kmeans::parallel::run(&ds, &kc, threads), 0.0, None),
+        Engine::Elkan => (kmeans::elkan::run(&ds, &kc), 0.0, None),
+        Engine::Hamerly => (kmeans::hamerly::run(&ds, &kc), 0.0, None),
+        Engine::MiniBatch => (kmeans::minibatch::run(&ds, &kc, batch), 0.0, None),
+        Engine::Shared => {
+            let cfg = RunConfig {
+                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                artifacts_dir: artifacts,
+            };
+            let run = shared::run(&ds, &cfg, threads)?;
+            (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
+        }
+        Engine::Offload => {
+            let cfg = RunConfig {
+                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                artifacts_dir: artifacts,
+            };
+            let run = offload::run(&ds, &cfg)?;
+            (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
+        }
+        Engine::Streaming => {
+            let path = args
+                .get("input")
+                .context("--engine streaming requires --input <file.pkd>")?;
+            let cfg = RunConfig {
+                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                artifacts_dir: artifacts,
+            };
+            let run =
+                parakmeans::coordinator::streaming::run_file(std::path::Path::new(path), &cfg)?;
+            (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
+        }
+    };
+    let total = t0.elapsed().as_secs_f64();
+
+    println!("engine      : {engine}");
+    println!("dataset     : {} points, {}D", ds.len(), ds.dim());
+    println!("k           : {k}   init: {init:?}   seed: {seed}");
+    println!(
+        "iterations  : {} (converged: {})",
+        result.iterations, result.converged
+    );
+    println!("sse         : {:.6e}", result.sse);
+    println!("final shift : {:.3e}", result.shift);
+    match engine_wall {
+        Some((wall, table)) => {
+            println!("setup       : {setup:.3}s (client + AOT compile + upload)");
+            println!("iter loop   : {wall:.4}s wall, {table:.4}s testbed-clock");
+        }
+        None => println!("time        : {total:.4}s"),
+    }
+    println!("cluster sizes: {:?}", result.cluster_sizes());
+    if let Some(truth) = &ds.truth {
+        println!(
+            "ARI vs truth: {:.4}",
+            metrics::adjusted_rand_index(&result.assign, truth)
+        );
+    }
+    if let Some(path) = assign_out {
+        let rows: Vec<Vec<f64>> = result
+            .assign
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| vec![i as f64, a as f64])
+            .collect();
+        parakmeans::util::csv::write_table(&path, &["index", "cluster"], &rows)?;
+        println!("assignments : {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let exp = args.get("exp").unwrap_or("all").to_string();
+    let scale = match args.get("scale") {
+        Some("full") => Scale::Full,
+        Some("smoke") | None => Scale::Smoke,
+        Some(other) => bail!("--scale `{other}` (full|smoke)"),
+    };
+    args.finish()?;
+    run_eval(&exp, scale)
+}
+
+fn run_eval(exp: &str, scale: Scale) -> anyhow::Result<()> {
+    use parakmeans::eval::{ablations, figures, tables};
+    match exp {
+        "t1" => drop(tables::table1(scale)?),
+        "t2" => drop(tables::table2(scale)?),
+        "t3" => drop(tables::table3(scale)?),
+        "t4" => drop(tables::table4(scale)?),
+        "t5" => drop(tables::table5(scale)?),
+        "figs" => drop(figures::cluster_figures(scale)?),
+        "speedup" => {
+            figures::speedup_efficiency(3, scale)?;
+            figures::speedup_efficiency(2, scale)?;
+        }
+        "scaling" => {
+            figures::time_vs_scaling(3, scale)?;
+            figures::time_vs_scaling(2, scale)?;
+        }
+        "a1" => drop(ablations::chunk_size(scale)?),
+        "a2" => drop(ablations::merge_policy(scale)?),
+        "a3" => drop(ablations::algorithms(scale)?),
+        "report" => {
+            let text = parakmeans::eval::report::generate(&parakmeans::eval::results_dir())?;
+            println!("{text}");
+        }
+        "all" => {
+            for e in [
+                "t1", "t2", "t3", "t4", "t5", "figs", "speedup", "scaling", "a1", "a2", "a3",
+                "report",
+            ] {
+                println!("==== eval {e} ====");
+                run_eval(e, scale)?;
+            }
+        }
+        other => bail!("unknown --exp `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
+    args.finish()?;
+    let manifest = parakmeans::runtime::Manifest::load(&dir)?;
+    println!("artifacts dir : {}", dir.display());
+    println!("default chunk : {}", manifest.default_chunk);
+    println!("executables   : {}", manifest.executables.len());
+    for e in &manifest.executables {
+        println!(
+            "  {:<36} kind={:<14?} d={} k={:<2} chunk={:<6} tile={}",
+            e.name, e.kind, e.d, e.k, e.chunk, e.tile_n
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use parakmeans::serve::{serve, BatcherConfig, ServeConfig};
+    let ds = load_input(args)?;
+    let k: usize = args.require("k")?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
+    let max_batch: usize = args.get_or("max-batch", 4096)?;
+    let max_delay_ms: u64 = args.get_or("max-delay-ms", 2)?;
+    let artifacts: PathBuf =
+        PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
+    args.finish()?;
+
+    // train with the offload engine, then serve assignments
+    let cfg = RunConfig { k, seed, artifacts_dir: artifacts.clone(), ..Default::default() };
+    eprintln!("training on {} points ({}D, K={k})...", ds.len(), ds.dim());
+    let run = offload::run(&ds, &cfg)?;
+    eprintln!(
+        "trained: {} iters (converged: {}), sse {:.4e}",
+        run.result.iterations, run.result.converged, run.result.sse
+    );
+    let scfg = ServeConfig {
+        addr,
+        artifacts_dir: artifacts,
+        batcher: BatcherConfig {
+            max_batch,
+            max_delay: std::time::Duration::from_millis(max_delay_ms),
+        },
+        queue_depth: 256,
+    };
+    let dim = ds.dim();
+    let handle = serve(scfg, run.result.centroids, dim, k)?;
+    println!("serving on {} — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}", handle.local_addr);
+    // block forever (ctrl-c to stop)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,196 @@
+//! Internal cluster-validity indices: Davies–Bouldin and
+//! Calinski–Harabasz.
+//!
+//! Both are O(n·d + k²·d) — cheap enough to compute exactly even at
+//! the paper's 1M-point scale — and complement the sampled silhouette
+//! for K-selection ([`crate::kmeans::kselect`]) and quality reporting.
+
+use crate::data::Dataset;
+use crate::linalg;
+
+/// Per-cluster means and scatter needed by both indices.
+struct ClusterStats {
+    dim: usize,
+    /// k×d centroids (means of the *assigned* points).
+    means: Vec<f64>,
+    counts: Vec<u64>,
+    /// Mean distance of members to their centroid (for DB).
+    dispersion: Vec<f64>,
+    /// Within-cluster sum of squares (for CH).
+    wss: f64,
+    /// Global mean.
+    global: Vec<f64>,
+    n: u64,
+}
+
+fn cluster_stats(ds: &Dataset, assign: &[i32], k: usize) -> ClusterStats {
+    let d = ds.dim();
+    let mut means = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    let mut global = vec![0.0f64; d];
+    let mut n = 0u64;
+    for i in 0..ds.len() {
+        let a = assign[i];
+        if a < 0 {
+            continue;
+        }
+        let p = ds.point(i);
+        linalg::add_assign(&mut means[(a as usize) * d..(a as usize + 1) * d], p);
+        linalg::add_assign(&mut global, p);
+        counts[a as usize] += 1;
+        n += 1;
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            for j in 0..d {
+                means[c * d + j] /= counts[c] as f64;
+            }
+        }
+    }
+    if n > 0 {
+        for v in global.iter_mut() {
+            *v /= n as f64;
+        }
+    }
+    let means_f32: Vec<f32> = means.iter().map(|&v| v as f32).collect();
+    let mut dispersion = vec![0.0f64; k];
+    let mut wss = 0.0f64;
+    for i in 0..ds.len() {
+        let a = assign[i];
+        if a < 0 {
+            continue;
+        }
+        let c = a as usize;
+        let d2 = linalg::sqdist_f64(ds.point(i), &means_f32[c * d..(c + 1) * d]);
+        dispersion[c] += d2.sqrt();
+        wss += d2;
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            dispersion[c] /= counts[c] as f64;
+        }
+    }
+    ClusterStats { dim: d, means, counts, dispersion, wss, global, n }
+}
+
+/// Davies–Bouldin index (lower is better; 0 is ideal).
+pub fn davies_bouldin(ds: &Dataset, assign: &[i32], k: usize) -> f64 {
+    assert_eq!(assign.len(), ds.len());
+    if k < 2 {
+        return 0.0;
+    }
+    let st = cluster_stats(ds, assign, k);
+    let d = st.dim;
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..k {
+        if st.counts[i] == 0 {
+            continue;
+        }
+        let mut worst: f64 = 0.0;
+        for j in 0..k {
+            if i == j || st.counts[j] == 0 {
+                continue;
+            }
+            let mi: Vec<f32> = st.means[i * d..(i + 1) * d].iter().map(|&v| v as f32).collect();
+            let mj: Vec<f32> = st.means[j * d..(j + 1) * d].iter().map(|&v| v as f32).collect();
+            let between = linalg::sqdist_f64(&mi, &mj).sqrt();
+            if between > 0.0 {
+                worst = worst.max((st.dispersion[i] + st.dispersion[j]) / between);
+            }
+        }
+        total += worst;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// Calinski–Harabasz index (higher is better).
+pub fn calinski_harabasz(ds: &Dataset, assign: &[i32], k: usize) -> f64 {
+    assert_eq!(assign.len(), ds.len());
+    let st = cluster_stats(ds, assign, k);
+    if k < 2 || st.n <= k as u64 || st.wss == 0.0 {
+        return 0.0;
+    }
+    let d = st.dim;
+    let global_f32: Vec<f32> = st.global.iter().map(|&v| v as f32).collect();
+    let mut bss = 0.0f64;
+    for c in 0..k {
+        if st.counts[c] == 0 {
+            continue;
+        }
+        let mc: Vec<f32> = st.means[c * d..(c + 1) * d].iter().map(|&v| v as f32).collect();
+        bss += st.counts[c] as f64 * linalg::sqdist_f64(&mc, &global_f32);
+    }
+    (bss / (k as f64 - 1.0)) / (st.wss / (st.n as f64 - k as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::{self, KmeansConfig};
+
+    fn clustered() -> (Dataset, Vec<i32>, Vec<i32>) {
+        // well-separated blobs: good labels = truth, bad = scrambled
+        let spec = MixtureSpec::random(2, 4, 80.0, 0.5, 3);
+        let ds = spec.generate(2000, 1);
+        let good = ds.truth.clone().unwrap();
+        let bad: Vec<i32> = (0..2000).map(|i| (i % 4) as i32).collect();
+        (ds, good, bad)
+    }
+
+    #[test]
+    fn db_lower_for_better_clustering() {
+        let (ds, good, bad) = clustered();
+        let db_good = davies_bouldin(&ds, &good, 4);
+        let db_bad = davies_bouldin(&ds, &bad, 4);
+        assert!(db_good < 0.2, "good clustering DB {db_good}");
+        assert!(db_bad > db_good * 5.0, "bad {db_bad} vs good {db_good}");
+    }
+
+    #[test]
+    fn ch_higher_for_better_clustering() {
+        let (ds, good, bad) = clustered();
+        let ch_good = calinski_harabasz(&ds, &good, 4);
+        let ch_bad = calinski_harabasz(&ds, &bad, 4);
+        assert!(ch_good > ch_bad * 10.0, "good {ch_good} vs bad {ch_bad}");
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let ds = MixtureSpec::paper_2d(4).generate(50, 1);
+        let one = vec![0i32; 50];
+        assert_eq!(davies_bouldin(&ds, &one, 1), 0.0);
+        assert_eq!(calinski_harabasz(&ds, &one, 1), 0.0);
+        // negative labels ignored
+        let mut part = one.clone();
+        part[0] = -1;
+        let _ = davies_bouldin(&ds, &part, 1);
+    }
+
+    #[test]
+    fn tracks_kmeans_quality_across_k() {
+        // CH should peak near the true K=4 on a crisp mixture
+        let spec = MixtureSpec::random(2, 4, 70.0, 0.5, 9);
+        let ds = spec.generate(1500, 2);
+        let ch: Vec<f64> = [2usize, 4, 8]
+            .iter()
+            .map(|&k| {
+                let r = kmeans::serial::run(
+                    &ds,
+                    &KmeansConfig::new(k)
+                        .with_seed(3)
+                        .with_init(crate::config::Init::KmeansPlusPlus),
+                );
+                calinski_harabasz(&ds, &r.assign, k)
+            })
+            .collect();
+        assert!(ch[1] > ch[0], "CH(4) {} !> CH(2) {}", ch[1], ch[0]);
+        assert!(ch[1] > ch[2], "CH(4) {} !> CH(8) {}", ch[1], ch[2]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Clustering-quality and parallel-performance metrics.
+//!
+//! Quality: SSE/inertia (the paper's objective), Adjusted Rand Index and
+//! NMI (used instead of the paper's eyeball comparison of Figures 1–6 to
+//! check serial == parallel clustering), sampled silhouette.
+//! Performance: speedup ψ(n,p) and efficiency ε(n,p) exactly as the
+//! paper defines them (Figures 7–10).
+
+pub mod indices;
+
+pub use indices::{calinski_harabasz, davies_bouldin};
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+use crate::linalg;
+
+/// Sum of squared distances of each point to its assigned centroid
+/// (the K-Means objective; f64 accumulation for 1M-point stability).
+pub fn sse(ds: &Dataset, centroids: &[f32], k: usize, assign: &[i32]) -> f64 {
+    assert_eq!(assign.len(), ds.len());
+    assert_eq!(centroids.len(), k * ds.dim());
+    let d = ds.dim();
+    let mut total = 0.0f64;
+    for i in 0..ds.len() {
+        let a = assign[i];
+        if a < 0 {
+            continue;
+        }
+        let c = &centroids[(a as usize) * d..(a as usize + 1) * d];
+        total += linalg::sqdist_f64(ds.point(i), c);
+    }
+    total
+}
+
+/// Contingency table between two labelings (ignores negative labels).
+fn contingency(a: &[i32], b: &[i32]) -> (HashMap<(i32, i32), u64>, HashMap<i32, u64>, HashMap<i32, u64>, u64) {
+    assert_eq!(a.len(), b.len());
+    let mut joint: HashMap<(i32, i32), u64> = HashMap::new();
+    let mut ma: HashMap<i32, u64> = HashMap::new();
+    let mut mb: HashMap<i32, u64> = HashMap::new();
+    let mut n = 0u64;
+    for (&x, &y) in a.iter().zip(b) {
+        if x < 0 || y < 0 {
+            continue;
+        }
+        *joint.entry((x, y)).or_default() += 1;
+        *ma.entry(x).or_default() += 1;
+        *mb.entry(y).or_default() += 1;
+        n += 1;
+    }
+    (joint, ma, mb, n)
+}
+
+fn comb2(x: u64) -> f64 {
+    (x as f64) * ((x as f64) - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index ∈ [-1, 1]; 1 ⇔ identical partitions.
+pub fn adjusted_rand_index(a: &[i32], b: &[i32]) -> f64 {
+    let (joint, ma, mb, n) = contingency(a, b);
+    if n < 2 {
+        return 1.0;
+    }
+    let sum_ij: f64 = joint.values().map(|&c| comb2(c)).sum();
+    let sum_a: f64 = ma.values().map(|&c| comb2(c)).sum();
+    let sum_b: f64 = mb.values().map(|&c| comb2(c)).sum();
+    let total = comb2(n);
+    let expected = sum_a * sum_b / total;
+    let max_idx = 0.5 * (sum_a + sum_b);
+    if (max_idx - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_idx - expected)
+}
+
+/// Normalized Mutual Information ∈ [0, 1] (arithmetic-mean normalizer).
+pub fn nmi(a: &[i32], b: &[i32]) -> f64 {
+    let (joint, ma, mb, n) = contingency(a, b);
+    if n == 0 {
+        return 1.0;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for (&(x, y), &c) in &joint {
+        let pxy = c as f64 / nf;
+        let px = ma[&x] as f64 / nf;
+        let py = mb[&y] as f64 / nf;
+        mi += pxy * (pxy / (px * py)).ln();
+    }
+    let h = |m: &HashMap<i32, u64>| -> f64 {
+        m.values()
+            .map(|&c| {
+                let p = c as f64 / nf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ha, hb) = (h(&ma), h(&mb));
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0; // both single-cluster: identical
+    }
+    let denom = 0.5 * (ha + hb);
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+/// Silhouette coefficient averaged over a deterministic sample of at
+/// most `sample` points (full silhouette is O(n²); the sampled variant
+/// is the standard big-data compromise).
+pub fn silhouette_sampled(ds: &Dataset, assign: &[i32], k: usize, sample: usize, seed: u64) -> f64 {
+    let n = ds.len();
+    assert_eq!(assign.len(), n);
+    if n == 0 || k < 2 {
+        return 0.0;
+    }
+    let mut rng = crate::rng::Pcg64::new(seed, 0x51);
+    let idx: Vec<usize> = if n <= sample {
+        (0..n).collect()
+    } else {
+        rng.sample_indices(n, sample)
+    };
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    for &i in &idx {
+        let ai = assign[i];
+        if ai < 0 {
+            continue;
+        }
+        // mean distance to every cluster (over the sampled pool, against
+        // all points for exactness would be O(n) per point — acceptable
+        // only for the sample)
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0u64; k];
+        for j in 0..n {
+            if j == i || assign[j] < 0 {
+                continue;
+            }
+            let c = assign[j] as usize;
+            sums[c] += linalg::sqdist_f64(ds.point(i), ds.point(j)).sqrt();
+            counts[c] += 1;
+        }
+        let own = ai as usize;
+        if counts[own] == 0 {
+            continue;
+        }
+        let a_val = sums[own] / counts[own] as f64;
+        let b_val = (0..k)
+            .filter(|&c| c != own && counts[c] > 0)
+            .map(|c| sums[c] / counts[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b_val.is_finite() {
+            continue;
+        }
+        total += (b_val - a_val) / a_val.max(b_val);
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// Speedup ψ(n, p) = T_serial / T_parallel (paper Figures 7/8).
+pub fn speedup(t_serial: f64, t_parallel: f64) -> f64 {
+    assert!(t_parallel > 0.0);
+    t_serial / t_parallel
+}
+
+/// Efficiency ε(n, p) = ψ(n, p) / p (paper Figures 9/10).
+pub fn efficiency(t_serial: f64, t_parallel: f64, p: usize) -> f64 {
+    speedup(t_serial, t_parallel) / p as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn sse_basic() {
+        let ds = Dataset::from_vec(vec![0.0, 0.0, 2.0, 0.0], 2).unwrap();
+        let centroids = vec![0.0, 0.0, 1.0, 0.0];
+        let v = sse(&ds, &centroids, 2, &[0, 1]);
+        assert_eq!(v, 1.0);
+        // negative assignment skipped
+        assert_eq!(sse(&ds, &centroids, 2, &[0, -1]), 0.0);
+    }
+
+    #[test]
+    fn ari_identical_permuted_random() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        let permuted = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert!((adjusted_rand_index(&a, &permuted) - 1.0).abs() < 1e-12);
+        let b = vec![0, 1, 0, 1, 0, 1];
+        assert!(adjusted_rand_index(&a, &b) < 0.2);
+    }
+
+    #[test]
+    fn ari_tiny_input() {
+        assert_eq!(adjusted_rand_index(&[0], &[0]), 1.0);
+        assert_eq!(adjusted_rand_index(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn nmi_identical_and_independent() {
+        let a = vec![0, 0, 1, 1];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let perm = vec![1, 1, 0, 0];
+        assert!((nmi(&a, &perm) - 1.0).abs() < 1e-12);
+        // one side constant, other split: MI = 0
+        assert!(nmi(&[0, 0, 0, 0], &a) < 1e-12);
+    }
+
+    #[test]
+    fn silhouette_separated_vs_mixed() {
+        // two tight, far-apart blobs => silhouette near 1 with correct labels
+        let mut data = Vec::new();
+        for i in 0..20 {
+            data.extend([i as f32 * 0.01, 0.0]);
+        }
+        for i in 0..20 {
+            data.extend([100.0 + i as f32 * 0.01, 0.0]);
+        }
+        let ds = Dataset::from_vec(data, 2).unwrap();
+        let good: Vec<i32> = (0..40).map(|i| (i >= 20) as i32).collect();
+        let s_good = silhouette_sampled(&ds, &good, 2, 40, 1);
+        assert!(s_good > 0.95, "{s_good}");
+        // scrambled labels => poor silhouette
+        let bad: Vec<i32> = (0..40).map(|i| (i % 2) as i32).collect();
+        let s_bad = silhouette_sampled(&ds, &bad, 2, 40, 1);
+        assert!(s_bad < 0.1, "{s_bad}");
+    }
+
+    #[test]
+    fn speedup_efficiency() {
+        assert_eq!(speedup(10.0, 2.5), 4.0);
+        assert_eq!(efficiency(10.0, 2.5, 8), 0.5);
+    }
+}

@@ -1,0 +1,253 @@
+//! Deterministic PRNG + distribution sampling (no `rand` offline —
+//! DESIGN.md §8).
+//!
+//! [`Pcg64`] is PCG-XSL-RR 128/64 — the same generator family numpy's
+//! `PCG64` uses — seeded through SplitMix64 so any `u64` seed yields a
+//! well-mixed state. Gaussian sampling is polar Box–Muller. Everything
+//! here is deterministic across platforms: dataset generation, init
+//! selection, and the eval harness all reproduce bit-for-bit from a
+//! seed.
+
+/// SplitMix64 — used to expand user seeds into generator state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// One cached spare normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion; `stream` selects an independent
+    /// sequence (used to give each mixture component / worker its own
+    /// stream).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream ^ 0xDA3E39CB94B95BDB);
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut rng = Pcg64 {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1, // must be odd
+            spare_normal: None,
+        };
+        rng.next_u64(); // discard first output (decorrelate seeds)
+        rng
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        // XSL-RR output function
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's rejection method,
+    /// unbiased.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as u64;
+            }
+            // threshold = 2^64 mod bound = wrapping_neg(bound) % bound
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via polar Box–Muller (caches the spare).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(s) = self.spare_normal.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Fisher–Yates sample of `k` distinct indices from [0, n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k {k} > n {n}");
+        // partial Fisher-Yates over an index map (sparse for big n)
+        let mut swaps: std::collections::HashMap<usize, usize> = Default::default();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            out.push(vj);
+            swaps.insert(j, vi);
+        }
+        out
+    }
+
+    /// Sample an index from unnormalized non-negative weights
+    /// (k-means++ D² sampling).
+    pub fn next_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "next_weighted: all-zero weights");
+        let mut target = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1 // fp slack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_independent() {
+        let a: Vec<u64> = {
+            let mut r = Pcg64::new(42, 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::new(42, 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Pcg64::new(42, 1);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::new(1, 0);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3, 0);
+        let n = 50_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let v = r.next_normal();
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg64::new(9, 0);
+        let idx = r.sample_indices(1000, 50);
+        assert_eq!(idx.len(), 50);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 50);
+        assert!(idx.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn sample_indices_full_permutation() {
+        let mut r = Pcg64::new(5, 0);
+        let mut idx = r.sample_indices(10, 10);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Pcg64::new(11, 0);
+        let w = [0.0, 1.0, 0.0, 9.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..5000 {
+            counts[r.next_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[2], 0);
+        let frac = counts[3] as f64 / 5000.0;
+        assert!((frac - 0.9).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_all_zero_panics() {
+        Pcg64::new(0, 0).next_weighted(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,396 @@
+//! PJRT client wrapper: compile-once executable cache + typed execute.
+//!
+//! One [`Runtime`] per engine (the underlying `PjRtClient` is `Rc`-based
+//! and not `Send`). Executables compile lazily on first use and stay
+//! cached for the life of the runtime — compilation is setup cost, not
+//! request-path cost, and the engines report it separately.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{DType, ExecKind, ExecSpec, Manifest, TensorSpec};
+
+/// A typed host-side tensor heading into an executable.
+#[derive(Debug, Clone)]
+pub enum TensorArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// A typed host-side tensor coming out of an executable.
+#[derive(Debug, Clone)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorOut::F32(v) => v,
+            TensorOut::I32(_) => panic!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            TensorOut::I32(v) => v,
+            TensorOut::F32(_) => panic!("expected i32 output, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            TensorOut::F32(v) => v,
+            TensorOut::I32(_) => panic!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            TensorOut::I32(v) => v,
+            TensorOut::F32(_) => panic!("expected i32 output, got f32"),
+        }
+    }
+}
+
+/// PJRT CPU client + manifest + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative compile time (reported as setup cost by the engines).
+    pub compile_secs: f64,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifacts in `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), compile_secs: 0.0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Resolve an executable spec (no compilation yet).
+    pub fn find(&self, kind: ExecKind, d: usize, k: usize, chunk: usize) -> Result<ExecSpec> {
+        self.manifest.find(kind, d, k, chunk).cloned()
+    }
+
+    /// Compile (or fetch cached) an executable.
+    pub fn prepare(&mut self, spec: &ExecSpec) -> Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_secs += t0.elapsed().as_secs_f64();
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute `spec` with `args`, validating the signature both ways.
+    ///
+    /// Returns host tensors in the manifest's output order. The AOT
+    /// programs are lowered with `return_tuple=True`; the single result
+    /// buffer decomposes into `spec.outputs.len()` literals. Keeping
+    /// iteration-loop outputs tiny is the engines' job (§Perf L2-1:
+    /// stats-only programs; assignments fetched once after
+    /// convergence via the separate `Assign` program).
+    pub fn execute(&mut self, spec: &ExecSpec, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        self.prepare(spec)?;
+        let literals = build_literals(spec, args)?;
+        let exe = self.cache.get(&spec.name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        read_tuple_outputs(&result[0][0], spec)
+    }
+}
+
+impl Runtime {
+    /// Upload an f32 tensor to the device once; reusable across many
+    /// `execute_buffers` calls. This is the OpenACC `data copyin`
+    /// analog: the engines upload immutable X chunks at setup so the
+    /// per-iteration transfer is only the (tiny) centroids.
+    pub fn upload_f32(&self, v: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(v, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, v: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(v, dims, None)?)
+    }
+
+    /// Execute with device-resident inputs (X chunks uploaded once at
+    /// setup — the OpenACC `data copyin` analog), fetching the outputs
+    /// to the host.
+    pub fn execute_buffers(
+        &mut self,
+        spec: &ExecSpec,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<TensorOut>> {
+        self.prepare(spec)?;
+        if args.len() != spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                args.len()
+            )));
+        }
+        let exe = self.cache.get(&spec.name).expect("prepared above");
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        read_tuple_outputs(&result[0][0], spec)
+    }
+}
+
+/// Decompose the (tuple) result buffer and read each element, typed by
+/// the manifest signature.
+fn read_tuple_outputs(buf: &xla::PjRtBuffer, spec: &ExecSpec) -> Result<Vec<TensorOut>> {
+    let tuple = buf.to_literal_sync()?.to_tuple()?;
+    if tuple.len() != spec.outputs.len() {
+        return Err(Error::Shape(format!(
+            "{}: expected {} outputs, got {}",
+            spec.name,
+            spec.outputs.len(),
+            tuple.len()
+        )));
+    }
+    tuple
+        .into_iter()
+        .zip(&spec.outputs)
+        .map(|(lit, out_spec)| read_literal(&lit, out_spec, &spec.name))
+        .collect()
+}
+
+/// Typed host copy of one output literal.
+fn read_literal(lit: &xla::Literal, out: &TensorSpec, exe: &str) -> Result<TensorOut> {
+    let n = lit.element_count();
+    if n != out.elements() {
+        return Err(Error::Shape(format!(
+            "{exe}: output `{}` expects {} elements, got {n}",
+            out.name,
+            out.elements()
+        )));
+    }
+    Ok(match out.dtype {
+        DType::F32 => TensorOut::F32(lit.to_vec::<f32>()?),
+        DType::I32 => TensorOut::I32(lit.to_vec::<i32>()?),
+    })
+}
+
+fn build_literals(spec: &ExecSpec, args: &[TensorArg]) -> Result<Vec<xla::Literal>> {
+    if args.len() != spec.inputs.len() {
+        return Err(Error::Shape(format!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            args.len()
+        )));
+    }
+    args.iter()
+        .zip(&spec.inputs)
+        .map(|(arg, input)| build_literal(arg, input, &spec.name))
+        .collect()
+}
+
+fn build_literal(arg: &TensorArg, input: &TensorSpec, exe: &str) -> Result<xla::Literal> {
+    let (len, dtype) = match arg {
+        TensorArg::F32(v) => (v.len(), DType::F32),
+        TensorArg::I32(v) => (v.len(), DType::I32),
+    };
+    if dtype != input.dtype || len != input.elements() {
+        return Err(Error::Shape(format!(
+            "{exe}: input `{}` expects {:?}×{}, got {:?}×{}",
+            input.name,
+            input.dtype,
+            input.elements(),
+            dtype,
+            len
+        )));
+    }
+    // one copy host->literal; bytes reinterpreted in place
+    let lit = match arg {
+        TensorArg::F32(v) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &input.shape,
+            bytes_of_f32(v),
+        )?,
+        TensorArg::I32(v) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &input.shape,
+            bytes_of_i32(v),
+        )?,
+    };
+    Ok(lit)
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    // safety: f32 has no invalid bit patterns; alignment of u8 is 1
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ExecKind;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// End-to-end: load real artifacts, execute them, compare against a
+    /// hand-computed expectation. This is the rust side of the python
+    /// kernel-vs-ref contract.
+    #[test]
+    fn stats_and_assign_execute_correctly() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let chunk = 4096;
+        let stats = rt.find(ExecKind::StatsPartial, 2, 4, chunk).unwrap();
+        let assign_spec = rt.find(ExecKind::Assign, 2, 4, chunk).unwrap();
+
+        // 3 valid points near obvious centroids, rest padding
+        let mut x = vec![0.0f32; chunk * 2];
+        x[0..2].copy_from_slice(&[0.1, 0.0]); // -> centroid 0
+        x[2..4].copy_from_slice(&[10.0, 9.9]); // -> centroid 1
+        x[4..6].copy_from_slice(&[0.0, 0.2]); // -> centroid 0
+        let mu = vec![0.0f32, 0.0, 10.0, 10.0, -50.0, -50.0, 50.0, 50.0];
+        let nv = vec![3i32];
+        let args = [TensorArg::F32(&x), TensorArg::F32(&mu), TensorArg::I32(&nv)];
+
+        let outs = rt.execute(&stats, &args).unwrap();
+        let sums = outs[0].as_f32();
+        assert!((sums[0] - 0.1).abs() < 1e-5); // cluster 0 x-sum
+        assert!((sums[1] - 0.2).abs() < 1e-5);
+        assert!((sums[2] - 10.0).abs() < 1e-4); // cluster 1
+        let counts = outs[1].as_f32();
+        assert_eq!(counts, &[2.0, 1.0, 0.0, 0.0]);
+        let sse = outs[2].as_f32()[0];
+        // (0.1,0)->c0: 0.01; (10,9.9)->c1: 0.01; (0,0.2)->c0: 0.04
+        assert!((sse - 0.06).abs() < 1e-4, "sse {sse}");
+
+        let outs = rt.execute(&assign_spec, &args).unwrap();
+        let assign = outs[0].as_i32();
+        assert_eq!(&assign[0..3], &[0, 1, 0]);
+        assert!(assign[3..].iter().all(|&a| a == -1));
+    }
+
+    #[test]
+    fn finalize_executes_correctly() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let spec = rt.find(ExecKind::Finalize, 3, 4, 0).unwrap();
+        let sums = vec![2.0f32, 4.0, 6.0, /* c1 */ 0.0, 0.0, 0.0, /* c2 */ 3.0, 3.0, 3.0, /* c3 */ 8.0, 8.0, 8.0];
+        let counts = vec![2.0f32, 0.0, 3.0, 4.0];
+        let mu_old = vec![1.0f32, 2.0, 3.0, 9.0, 9.0, 9.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0];
+        let outs = rt
+            .execute(
+                &spec,
+                &[
+                    TensorArg::F32(&sums),
+                    TensorArg::F32(&counts),
+                    TensorArg::F32(&mu_old),
+                ],
+            )
+            .unwrap();
+        let mu_new = outs[0].as_f32();
+        assert_eq!(&mu_new[0..3], &[1.0, 2.0, 3.0]); // sums/2
+        assert_eq!(&mu_new[3..6], &[9.0, 9.0, 9.0]); // empty keeps old
+        assert_eq!(&mu_new[6..9], &[1.0, 1.0, 1.0]); // sums/3
+        assert_eq!(&mu_new[9..12], &[2.0, 2.0, 2.0]); // sums/4
+        let shift = outs[0 + 1].as_f32()[0];
+        assert!(shift.abs() < 1e-6, "converged case: shift {shift}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_wrong_args() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let chunk = rt.manifest().default_chunk;
+        let spec = rt.find(ExecKind::StatsPartial, 2, 4, chunk).unwrap();
+        // wrong arity
+        assert!(rt.execute(&spec, &[]).is_err());
+        // wrong dtype for n_valid
+        let x = vec![0.0f32; chunk * 2];
+        let mu = vec![0.0f32; 8];
+        let bad_nv = vec![3.0f32];
+        assert!(rt
+            .execute(
+                &spec,
+                &[TensorArg::F32(&x), TensorArg::F32(&mu), TensorArg::F32(&bad_nv)]
+            )
+            .is_err());
+        // wrong length for x
+        let short_x = vec![0.0f32; 10];
+        let nv = vec![3i32];
+        assert!(rt
+            .execute(
+                &spec,
+                &[TensorArg::F32(&short_x), TensorArg::F32(&mu), TensorArg::I32(&nv)]
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn buffer_path_matches_literal_path() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let chunk = rt.manifest().default_chunk;
+        let spec = rt.find(ExecKind::StatsPartial, 3, 4, chunk).unwrap();
+        let mut rng = crate::rng::Pcg64::new(5, 0);
+        let x: Vec<f32> = (0..chunk * 3).map(|_| rng.next_f32() * 10.0).collect();
+        let mu: Vec<f32> = (0..12).map(|_| rng.next_f32() * 10.0).collect();
+        let nv = vec![chunk as i32];
+
+        let via_literal = rt
+            .execute(&spec, &[TensorArg::F32(&x), TensorArg::F32(&mu), TensorArg::I32(&nv)])
+            .unwrap();
+        let xb = rt.upload_f32(&x, &[chunk, 3]).unwrap();
+        let mub = rt.upload_f32(&mu, &[4, 3]).unwrap();
+        let nvb = rt.upload_i32(&nv, &[1]).unwrap();
+        let via_buffers = rt.execute_buffers(&spec, &[&xb, &mub, &nvb]).unwrap();
+
+        assert_eq!(via_literal[0].as_f32(), via_buffers[0].as_f32()); // sums
+        assert_eq!(via_literal[1].as_f32(), via_buffers[1].as_f32()); // counts
+        assert_eq!(via_literal[2].as_f32(), via_buffers[2].as_f32()); // sse
+    }
+
+    #[test]
+    fn compile_cache_reused() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let spec = rt.find(ExecKind::Finalize, 2, 4, 0).unwrap();
+        rt.prepare(&spec).unwrap();
+        let t_after_first = rt.compile_secs;
+        assert!(t_after_first > 0.0);
+        rt.prepare(&spec).unwrap();
+        assert_eq!(rt.compile_secs, t_after_first, "second prepare must be cached");
+    }
+}

@@ -1,0 +1,285 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; read here with the built-in
+//! JSON parser. The manifest is the *contract* between the python
+//! compile path and the rust request path: executable names, files,
+//! kinds, shape parameters and full input/output signatures.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Data type of a tensor at the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype `{other}`"))),
+        }
+    }
+}
+
+/// One tensor in an executable signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let name = j.str_field("name")?.to_string();
+        let dtype = DType::parse(j.str_field("dtype")?)?;
+        let shape = j
+            .arr_field("shape")?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Manifest("non-integer shape entry".into()))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Executable kinds emitted by the AOT pipeline.
+///
+/// Iteration-loop programs (`StatsPartial`, `FusedStats`) return only
+/// per-cluster statistics; `Assign` produces the chunk assignments and
+/// runs once after convergence (§Perf L2-1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecKind {
+    StatsPartial,
+    Assign,
+    FusedStats,
+    Finalize,
+}
+
+impl ExecKind {
+    fn parse(s: &str) -> Result<ExecKind> {
+        match s {
+            "stats_partial" => Ok(ExecKind::StatsPartial),
+            "assign" => Ok(ExecKind::Assign),
+            "fused_stats" => Ok(ExecKind::FusedStats),
+            "finalize" => Ok(ExecKind::Finalize),
+            other => Err(Error::Manifest(format!("unknown exec kind `{other}`"))),
+        }
+    }
+}
+
+/// One AOT executable.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub kind: ExecKind,
+    pub d: usize,
+    pub k: usize,
+    /// Streaming chunk size (0 for `finalize`).
+    pub chunk: usize,
+    pub tile_n: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ExecSpec {
+    fn parse(j: &Json) -> Result<ExecSpec> {
+        Ok(ExecSpec {
+            name: j.str_field("name")?.to_string(),
+            file: j.str_field("file")?.to_string(),
+            kind: ExecKind::parse(j.str_field("kind")?)?,
+            d: j.usize_field("d")?,
+            k: j.usize_field("k")?,
+            chunk: j.usize_field("chunk")?,
+            tile_n: j.usize_field("tile_n")?,
+            inputs: j
+                .arr_field("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: j
+                .arr_field("outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub default_chunk: usize,
+    pub executables: Vec<ExecSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{}: {e} (run `make artifacts` first)",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let format = j.usize_field("format")?;
+        if format != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest format {format}")));
+        }
+        let executables = j
+            .arr_field("executables")?
+            .iter()
+            .map(ExecSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            default_chunk: j.usize_field("default_chunk")?,
+            executables,
+        })
+    }
+
+    /// Find an executable by kind and shape parameters. `chunk` is
+    /// ignored for `Finalize`.
+    pub fn find(&self, kind: ExecKind, d: usize, k: usize, chunk: usize) -> Result<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| {
+                e.kind == kind
+                    && e.d == d
+                    && e.k == k
+                    && (kind == ExecKind::Finalize || e.chunk == chunk)
+            })
+            .ok_or_else(|| {
+                Error::Manifest(format!(
+                    "no artifact for kind={kind:?} d={d} k={k} chunk={chunk}; \
+                     available: {:?}",
+                    self.executables
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    /// All (d, k) variants present for a kind.
+    pub fn variants(&self, kind: ExecKind) -> Vec<(usize, usize, usize)> {
+        self.executables
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.d, e.k, e.chunk))
+            .collect()
+    }
+
+    /// Absolute path of an executable's HLO file.
+    pub fn hlo_path(&self, spec: &ExecSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "default_chunk": 65536,
+      "default_tile": 8192,
+      "executables": [
+        {"name": "stats_partial_d2_k4_c65536", "file": "a.hlo.txt",
+         "sha256": "x", "kind": "stats_partial", "d": 2, "k": 4,
+         "chunk": 65536, "tile_n": 8192,
+         "inputs": [{"name": "x", "shape": [65536, 2], "dtype": "float32"},
+                    {"name": "mu", "shape": [4, 2], "dtype": "float32"},
+                    {"name": "n_valid", "shape": [1], "dtype": "int32"}],
+         "outputs": [{"name": "sums", "shape": [4, 2], "dtype": "float32"}]},
+        {"name": "finalize_d2_k4", "file": "f.hlo.txt",
+         "sha256": "y", "kind": "finalize", "d": 2, "k": 4,
+         "chunk": 0, "tile_n": 0,
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.default_chunk, 65536);
+        assert_eq!(m.executables.len(), 2);
+        let e = &m.executables[0];
+        assert_eq!(e.kind, ExecKind::StatsPartial);
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![65536, 2]);
+        assert_eq!(e.inputs[2].dtype, DType::I32);
+        assert_eq!(e.inputs[0].elements(), 131072);
+    }
+
+    #[test]
+    fn find_by_kind() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.find(ExecKind::StatsPartial, 2, 4, 65536).is_ok());
+        assert!(m.find(ExecKind::StatsPartial, 2, 4, 123).is_err());
+        // finalize ignores chunk
+        assert!(m.find(ExecKind::Finalize, 2, 4, 999).is_ok());
+        assert!(m.find(ExecKind::Finalize, 3, 4, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/t")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("float32", "float64");
+        assert!(Manifest::parse(&bad, Path::new("/t")).is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins() {
+        let m = Manifest::parse(SAMPLE, Path::new("/base")).unwrap();
+        assert_eq!(
+            m.hlo_path(&m.executables[0]),
+            PathBuf::from("/base/a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration guard: if `make artifacts` has run, the real
+        // manifest must parse and contain every (d, k) the eval needs
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for (d, k) in [(2, 4), (2, 8), (2, 11), (3, 4), (3, 8), (3, 11)] {
+            m.find(ExecKind::StatsPartial, d, k, m.default_chunk).unwrap();
+            m.find(ExecKind::Assign, d, k, m.default_chunk).unwrap();
+            m.find(ExecKind::FusedStats, d, k, m.default_chunk).unwrap();
+            m.find(ExecKind::Finalize, d, k, 0).unwrap();
+        }
+    }
+}

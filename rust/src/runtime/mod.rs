@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). The interchange
+//! format is HLO *text* — see `python/compile/aot.py` for why (the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//!
+//! `PjRtClient` holds an `Rc` internally, so nothing here is `Send`:
+//! each engine (or worker) constructs its own [`Runtime`]. Compilation
+//! is cached per runtime keyed by executable name.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Runtime, TensorArg, TensorOut};
+pub use manifest::{ExecSpec, Manifest, TensorSpec};

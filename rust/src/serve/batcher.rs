@@ -1,0 +1,400 @@
+//! Dynamic batcher: coalesces queued assignment requests into padded
+//! AOT `assign` calls.
+//!
+//! Policy (vLLM-router-style, adapted to fixed-shape artifacts): drain
+//! the queue until `max_batch` points are staged or `max_delay` has
+//! passed since the first staged request, then run ONE padded chunk
+//! call and scatter results back per request. Latency-throughput
+//! trade-off is the A-serve ablation in `benches/ablations.rs`.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::ExecKind;
+use crate::runtime::{Runtime, TensorArg};
+use crate::serve::protocol::{Request, Response};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum staged points per device call (must not exceed the
+    /// largest available artifact chunk).
+    pub max_batch: usize,
+    /// Maximum time the first staged request may wait.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4096, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Counters exposed for tests/metrics endpoints.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub points: u64,
+    pub device_calls: u64,
+    pub errors: u64,
+}
+
+/// A queued unit of work: one request plus the reply channel.
+pub struct Job {
+    pub request: Request,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The batcher: owns the runtime + trained centroids.
+pub struct Batcher {
+    rt: Runtime,
+    spec: crate::runtime::ExecSpec,
+    centroids: Vec<f32>,
+    dim: usize,
+    #[allow(dead_code)] // retained for a future /stats endpoint
+    k: usize,
+    chunk: usize,
+    cfg: BatcherConfig,
+    pub stats: BatcherStats,
+}
+
+impl Batcher {
+    /// Build a batcher for a trained model.
+    pub fn new(
+        artifacts_dir: &std::path::Path,
+        centroids: Vec<f32>,
+        dim: usize,
+        k: usize,
+        cfg: BatcherConfig,
+    ) -> Result<Batcher> {
+        if centroids.len() != dim * k {
+            return Err(Error::Shape(format!(
+                "centroids len {} != k {k} × dim {dim}",
+                centroids.len()
+            )));
+        }
+        let mut rt = Runtime::new(artifacts_dir)?;
+        // smallest artifact chunk that covers max_batch (latency first)
+        let mut sizes = crate::coordinator::shared::resolve_chunk_sizes(
+            &rt,
+            ExecKind::Assign,
+            dim,
+            k,
+            0,
+        )?;
+        sizes.sort_unstable();
+        let chunk = *sizes
+            .iter()
+            .find(|&&s| s >= cfg.max_batch)
+            .or(sizes.last())
+            .ok_or_else(|| Error::Manifest("no assign artifacts".into()))?;
+        let spec = rt.find(ExecKind::Assign, dim, k, chunk)?;
+        rt.prepare(&spec)?;
+        Ok(Batcher {
+            rt,
+            spec,
+            centroids,
+            dim,
+            k,
+            chunk,
+            cfg: BatcherConfig { max_batch: cfg.max_batch.min(chunk), ..cfg },
+            stats: BatcherStats::default(),
+        })
+    }
+
+    /// Drain the queue and serve until it disconnects (server shutdown).
+    pub fn run(&mut self, queue: mpsc::Receiver<Job>) {
+        loop {
+            // block for the first job of a batch
+            let first = match queue.recv() {
+                Ok(j) => j,
+                Err(_) => return, // all senders dropped
+            };
+            let deadline = Instant::now() + self.cfg.max_delay;
+            let mut jobs = vec![first];
+            let mut staged: usize = jobs[0].request.points.len();
+            // stage more until full or the delay budget is spent
+            while staged < self.cfg.max_batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match queue.recv_timeout(left) {
+                    Ok(j) => {
+                        staged += j.request.points.len();
+                        jobs.push(j);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            self.flush(jobs);
+        }
+    }
+
+    /// Execute one padded device call for `jobs`, scattering replies.
+    /// Oversized batches (staged > chunk) split across multiple calls.
+    pub fn flush(&mut self, jobs: Vec<Job>) {
+        // validate dims first; reject bad jobs without spending a call
+        let mut valid = Vec::new();
+        for job in jobs {
+            self.stats.requests += 1;
+            if job.request.points.iter().any(|p| p.len() != self.dim) {
+                self.stats.errors += 1;
+                let _ = job.reply.send(Response::Err {
+                    id: job.request.id,
+                    error: format!("expected {}-dimensional points", self.dim),
+                });
+            } else {
+                self.stats.points += job.request.points.len() as u64;
+                valid.push(job);
+            }
+        }
+
+        let mut pending: Vec<(Job, Vec<i32>, Vec<f32>)> = Vec::new();
+        let mut x = vec![0.0f32; self.chunk * self.dim];
+        let mut filled = 0usize;
+        // (job index, offset-in-batch, count)
+        let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+
+        let flush_device =
+            |this: &mut Batcher,
+             x: &mut Vec<f32>,
+             filled: &mut usize,
+             spans: &mut Vec<(usize, usize, usize)>,
+             pending: &mut Vec<(Job, Vec<i32>, Vec<f32>)>| {
+                if *filled == 0 {
+                    return;
+                }
+                let nv = [*filled as i32];
+                let result = this.rt.execute(
+                    &this.spec,
+                    &[
+                        TensorArg::F32(&x[..]),
+                        TensorArg::F32(&this.centroids),
+                        TensorArg::I32(&nv),
+                    ],
+                );
+                this.stats.device_calls += 1;
+                match result {
+                    Ok(outs) => {
+                        let assign = outs[0].as_i32();
+                        for &(ji, off, cnt) in spans.iter() {
+                            let (job, clusters, distances) = &mut pending[ji];
+                            for i in 0..cnt {
+                                let a = assign[off + i];
+                                clusters.push(a);
+                                // distance computed host-side (k·cnt tiny)
+                                let p = &x[(off + i) * this.dim..(off + i + 1) * this.dim];
+                                let c = &this.centroids
+                                    [(a as usize) * this.dim..(a as usize + 1) * this.dim];
+                                distances.push(crate::linalg::sqdist(p, c));
+                            }
+                            let _ = job;
+                        }
+                    }
+                    Err(e) => {
+                        this.stats.errors += spans.len() as u64;
+                        for &(ji, _, _) in spans.iter() {
+                            let (job, clusters, _) = &mut pending[ji];
+                            clusters.clear();
+                            let _ = job.reply.send(Response::Err {
+                                id: job.request.id,
+                                error: e.to_string(),
+                            });
+                        }
+                    }
+                }
+                *filled = 0;
+                spans.clear();
+                x.iter_mut().for_each(|v| *v = 0.0);
+            };
+
+        for job in valid {
+            let n = job.request.points.len();
+            let ji = pending.len();
+            pending.push((job, Vec::with_capacity(n), Vec::with_capacity(n)));
+            let mut remaining = n;
+            let mut src = 0usize;
+            while remaining > 0 {
+                if filled == self.chunk {
+                    flush_device(self, &mut x, &mut filled, &mut spans, &mut pending);
+                }
+                let take = remaining.min(self.chunk - filled);
+                for i in 0..take {
+                    let p = &pending[ji].0.request.points[src + i];
+                    for (jj, &v) in p.iter().enumerate() {
+                        x[(filled + i) * self.dim + jj] = v as f32;
+                    }
+                }
+                spans.push((ji, filled, take));
+                filled += take;
+                src += take;
+                remaining -= take;
+            }
+        }
+        flush_device(self, &mut x, &mut filled, &mut spans, &mut pending);
+
+        for (job, clusters, distances) in pending {
+            if clusters.len() == job.request.points.len() {
+                let _ = job.reply.send(Response::Ok {
+                    id: job.request.id,
+                    clusters,
+                    distances,
+                });
+            }
+            // else: error already sent by flush_device
+        }
+    }
+
+    /// Chunk actually used for device calls (tests).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::{self, KmeansConfig};
+    use std::sync::mpsc;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn trained_model() -> (Vec<f32>, crate::data::Dataset) {
+        let ds = MixtureSpec::paper_3d(4).generate(5000, 3);
+        let r = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+        (r.centroids, ds)
+    }
+
+    fn job(id: u64, points: Vec<Vec<f64>>) -> (Job, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (Job { request: Request { id, points }, reply: tx }, rx)
+    }
+
+    #[test]
+    fn assigns_to_nearest_centroid() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (centroids, ds) = trained_model();
+        let mut b =
+            Batcher::new(&dir, centroids.clone(), 3, 4, BatcherConfig::default()).unwrap();
+        let pts: Vec<Vec<f64>> =
+            (0..64).map(|i| ds.point(i).iter().map(|&v| v as f64).collect()).collect();
+        let (j, rx) = job(1, pts.clone());
+        b.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { id, clusters, distances } => {
+                assert_eq!(id, 1);
+                assert_eq!(clusters.len(), 64);
+                assert_eq!(distances.len(), 64);
+                // verify nearest-centroid against host math
+                for (i, &c) in clusters.iter().enumerate() {
+                    let p: Vec<f32> = pts[i].iter().map(|&v| v as f32).collect();
+                    let mut best = 0;
+                    let mut best_d = f32::INFINITY;
+                    for cc in 0..4 {
+                        let d = crate::linalg::sqdist(&p, &centroids[cc * 3..cc * 3 + 3]);
+                        if d < best_d {
+                            best_d = d;
+                            best = cc as i32;
+                        }
+                    }
+                    assert_eq!(c, best, "point {i}");
+                    assert!((distances[i] - best_d).abs() < 1e-4);
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.stats.device_calls, 1);
+        assert_eq!(b.stats.points, 64);
+    }
+
+    #[test]
+    fn batches_multiple_requests_into_one_call() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (centroids, ds) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let mut rxs = Vec::new();
+        let mut jobs = Vec::new();
+        for r in 0..10 {
+            let pts: Vec<Vec<f64>> = (0..16)
+                .map(|i| ds.point(r * 16 + i).iter().map(|&v| v as f64).collect())
+                .collect();
+            let (j, rx) = job(r as u64, pts);
+            jobs.push(j);
+            rxs.push(rx);
+        }
+        b.flush(jobs);
+        for (r, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().unwrap() {
+                Response::Ok { id, clusters, .. } => {
+                    assert_eq!(id, r as u64);
+                    assert_eq!(clusters.len(), 16);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(b.stats.device_calls, 1, "10 small requests must share one call");
+    }
+
+    #[test]
+    fn oversized_request_splits_across_calls() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (centroids, _) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let chunk = b.chunk();
+        let n = chunk + 100; // forces 2 device calls
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 * 0.001, 0.0, 0.0]).collect();
+        let (j, rx) = job(5, pts);
+        b.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { clusters, .. } => assert_eq!(clusters.len(), n),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.stats.device_calls, 2);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected_without_device_call() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (centroids, _) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let (j, rx) = job(2, vec![vec![1.0, 2.0]]); // 2D point, 3D model
+        b.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Err { id, error } => {
+                assert_eq!(id, 2);
+                assert!(error.contains("3-dimensional"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.stats.device_calls, 0);
+        assert_eq!(b.stats.errors, 1);
+    }
+
+    #[test]
+    fn bad_centroid_shape_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(Batcher::new(&dir, vec![0.0; 7], 3, 4, BatcherConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! Serving mode: a clustering inference service over the AOT runtime.
+//!
+//! After a model is trained (centroids fixed), `parakm serve` exposes
+//! nearest-centroid assignment as a network service — the
+//! production-facing face of the paper's system (cluster-membership
+//! lookup is how segmentation/anomaly pipelines consume K-Means).
+//!
+//! Architecture (single-node analog of a vLLM-style router):
+//!
+//! ```text
+//! TCP clients ── line-JSON ──► acceptor threads ─► bounded queue
+//!                                                   │ (backpressure)
+//!                            ┌──────────────────────▼─────────────┐
+//!                            │ batcher: drain up to `max_batch`   │
+//!                            │ or wait `max_delay` — then one     │
+//!                            │ padded AOT `assign` call           │
+//!                            └──────────────────────┬─────────────┘
+//!                              responses routed back per request
+//! ```
+//!
+//! The batcher owns the (non-`Send`) [`Runtime`], so it lives on one
+//! dedicated thread; acceptors communicate via `mpsc`. No tokio in the
+//! offline image (DESIGN.md §8): blocking IO + threads, which is also
+//! the right shape for a CPU PJRT backend.
+
+pub mod batcher;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use protocol::{Request, Response};
+pub use server::{serve, ServeConfig};

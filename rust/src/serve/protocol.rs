@@ -1,0 +1,149 @@
+//! Line-delimited JSON protocol for the assignment service.
+//!
+//! Request  : `{"id": 7, "points": [[x,y,z], ...]}`
+//! Response : `{"id": 7, "clusters": [0, 2, ...], "distances": [..]}`
+//! Error    : `{"id": 7, "error": "..."}`
+//!
+//! One JSON document per line; a connection may pipeline any number of
+//! requests. Parsing uses the in-crate [`crate::util::json`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Row-major points, `dim` implied by the served model.
+    pub points: Vec<Vec<f64>>,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        let id = j
+            .get("id")
+            .and_then(Json::as_f64)
+            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+            .ok_or_else(|| Error::Config("request: missing numeric `id`".into()))? as u64;
+        let points = j
+            .arr_field("points")
+            .map_err(|_| Error::Config("request: missing `points` array".into()))?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .ok_or_else(|| Error::Config("request: point must be an array".into()))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().ok_or_else(|| {
+                            Error::Config("request: point coordinate must be a number".into())
+                        })
+                    })
+                    .collect::<Result<Vec<f64>>>()
+            })
+            .collect::<Result<Vec<Vec<f64>>>>()?;
+        if points.is_empty() {
+            return Err(Error::Config("request: empty `points`".into()));
+        }
+        Ok(Request { id, points })
+    }
+}
+
+/// A server response (success or error).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok {
+        id: u64,
+        clusters: Vec<i32>,
+        /// Squared distance to the assigned centroid per point.
+        distances: Vec<f32>,
+    },
+    Err {
+        id: u64,
+        error: String,
+    },
+}
+
+impl Response {
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ok { id, clusters, distances } => {
+                let mut obj = BTreeMap::new();
+                obj.insert("id".to_string(), Json::Num(*id as f64));
+                obj.insert(
+                    "clusters".to_string(),
+                    Json::Arr(clusters.iter().map(|&c| Json::Num(c as f64)).collect()),
+                );
+                obj.insert(
+                    "distances".to_string(),
+                    Json::Arr(distances.iter().map(|&d| Json::Num(d as f64)).collect()),
+                );
+                Json::Obj(obj).to_string()
+            }
+            Response::Err { id, error } => {
+                let mut obj = BTreeMap::new();
+                obj.insert("id".to_string(), Json::Num(*id as f64));
+                obj.insert("error".to_string(), Json::Str(error.clone()));
+                Json::Obj(obj).to_string()
+            }
+        }
+    }
+
+    /// Parse a response line (client side / tests).
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line)?;
+        let id = j
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Config("response: missing id".into()))? as u64;
+        if let Some(err) = j.get("error").and_then(Json::as_str) {
+            return Ok(Response::Err { id, error: err.to_string() });
+        }
+        let clusters = j
+            .arr_field("clusters")?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as i32).ok_or_else(|| Error::Config("bad cluster".into())))
+            .collect::<Result<Vec<i32>>>()?;
+        let distances = j
+            .arr_field("distances")?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| Error::Config("bad distance".into())))
+            .collect::<Result<Vec<f32>>>()?;
+        Ok(Response::Ok { id, clusters, distances })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request::parse(r#"{"id": 7, "points": [[1.0, 2.0], [3, 4]]}"#).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.points, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn request_rejects_malformed() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"points": [[1,2]]}"#).is_err()); // no id
+        assert!(Request::parse(r#"{"id": 1}"#).is_err()); // no points
+        assert!(Request::parse(r#"{"id": 1, "points": []}"#).is_err());
+        assert!(Request::parse(r#"{"id": 1, "points": [["a"]]}"#).is_err());
+        assert!(Request::parse(r#"{"id": -3, "points": [[1]]}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::Ok { id: 9, clusters: vec![0, 3], distances: vec![0.5, 1.25] };
+        let line = r.to_line();
+        assert_eq!(Response::parse(&line).unwrap(), r);
+        let e = Response::Err { id: 9, error: "dim mismatch".into() };
+        assert_eq!(Response::parse(&e.to_line()).unwrap(), e);
+    }
+}

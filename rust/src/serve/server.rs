@@ -1,0 +1,289 @@
+//! TCP front end: accept connections, parse line-JSON requests, queue
+//! them to the batcher thread, route responses back.
+//!
+//! One OS thread per connection (blocking reads), one batcher thread
+//! owning the runtime; a bounded `sync_channel` between them provides
+//! backpressure: when the device falls behind, acceptors block instead
+//! of buffering unboundedly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::error::Result;
+use crate::serve::batcher::{Batcher, BatcherConfig, Job};
+use crate::serve::protocol::{Request, Response};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7878`. Port 0 picks a free port.
+    pub addr: String,
+    pub artifacts_dir: PathBuf,
+    pub batcher: BatcherConfig,
+    /// Queue capacity (requests) between acceptors and the batcher.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            artifacts_dir: "artifacts".into(),
+            batcher: BatcherConfig::default(),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Handle to a running server (tests use it to stop cleanly).
+pub struct ServerHandle {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join the acceptor.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        // poke the listener out of accept()
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start serving a trained model (non-blocking; returns a handle).
+///
+/// `centroids` is the trained k×dim model (row-major).
+pub fn serve(
+    cfg: ServeConfig,
+    centroids: Vec<f32>,
+    dim: usize,
+    k: usize,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local_addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (queue_tx, queue_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+
+    // batcher thread owns the (non-Send) runtime
+    let artifacts = cfg.artifacts_dir.clone();
+    let bcfg = cfg.batcher.clone();
+    std::thread::Builder::new()
+        .name("parakm-batcher".into())
+        .spawn(move || {
+            let mut batcher = match Batcher::new(&artifacts, centroids, dim, k, bcfg) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("batcher init failed: {e}");
+                    return;
+                }
+            };
+            // adapt sync_channel receiver to the batcher loop
+            let (tx, rx) = mpsc::channel();
+            std::thread::spawn(move || {
+                while let Ok(job) = queue_rx.recv() {
+                    if tx.send(job).is_err() {
+                        break;
+                    }
+                }
+            });
+            batcher.run(rx);
+        })
+        .expect("spawn batcher");
+
+    // acceptor thread
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("parakm-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Acquire) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        // small request/response lines: Nagle + delayed
+                        // ACK would add ~40 ms stalls per round trip
+                        let _ = stream.set_nodelay(true);
+                        let q = queue_tx.clone();
+                        std::thread::spawn(move || handle_conn(stream, q));
+                    }
+                    Err(e) => eprintln!("accept error: {e}"),
+                }
+            }
+        })
+        .expect("spawn acceptor");
+
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread) })
+}
+
+/// Per-connection loop: read request lines, queue jobs, write replies
+/// in completion order (ids let clients correlate).
+fn handle_conn(stream: TcpStream, queue: mpsc::SyncSender<Job>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client hung up
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(request) => {
+                let (tx, rx) = mpsc::channel();
+                if queue.send(Job { request, reply: tx }).is_err() {
+                    break; // batcher gone; drop connection
+                }
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            }
+            Err(e) => Response::Err { id: 0, error: e.to_string() },
+        };
+        if writeln!(writer, "{}", response.to_line()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::{self, KmeansConfig};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn start_server() -> Option<(ServerHandle, Vec<f32>)> {
+        let dir = artifacts_dir()?;
+        let ds = MixtureSpec::paper_3d(4).generate(3000, 3);
+        let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            artifacts_dir: dir,
+            ..Default::default()
+        };
+        let handle = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
+        Some((handle, model.centroids))
+    }
+
+    #[test]
+    fn end_to_end_request_response() {
+        let Some((server, centroids)) = start_server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        writeln!(conn, r#"{{"id": 42, "points": [[0.0, 0.0, 0.0], [5.0, 5.0, 5.0]]}}"#)
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match Response::parse(&line).unwrap() {
+            Response::Ok { id, clusters, distances } => {
+                assert_eq!(id, 42);
+                assert_eq!(clusters.len(), 2);
+                assert_eq!(distances.len(), 2);
+                assert!(clusters.iter().all(|&c| (0..4).contains(&c)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let _ = centroids;
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_same_connection() {
+        let Some((server, _)) = start_server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        for i in 0..5 {
+            writeln!(conn, r#"{{"id": {i}, "points": [[{i}.0, 0.0, 1.0]]}}"#).unwrap();
+        }
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        let mut seen = Vec::new();
+        for line in reader.lines().take(5) {
+            match Response::parse(&line.unwrap()).unwrap() {
+                Response::Ok { id, .. } => seen.push(id),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_error_not_disconnect() {
+        let Some((server, _)) = start_server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        writeln!(conn, "this is not json").unwrap();
+        writeln!(conn, r#"{{"id": 1, "points": [[1.0, 2.0, 3.0]]}}"#).unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        let mut lines = reader.lines();
+        let first = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
+        assert!(matches!(first, Response::Err { .. }), "{first:?}");
+        let second = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
+        assert!(matches!(second, Response::Ok { id: 1, .. }), "{second:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let Some((server, _)) = start_server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.local_addr;
+        let handles: Vec<_> = (0..8)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    writeln!(
+                        conn,
+                        r#"{{"id": {c}, "points": [[{c}.5, 1.0, -2.0], [0.0, 0.0, 0.0]]}}"#
+                    )
+                    .unwrap();
+                    let mut reader = BufReader::new(conn);
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    match Response::parse(&line).unwrap() {
+                        Response::Ok { id, clusters, .. } => {
+                            assert_eq!(id, c);
+                            assert_eq!(clusters.len(), 2);
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,161 @@
+//! Mini property-testing framework (proptest is unavailable offline —
+//! DESIGN.md §8).
+//!
+//! Deliberately small: seeded generators + a fixed-iteration runner with
+//! linear input shrinking. Usage:
+//!
+//! ```
+//! use parakmeans::testutil::prop;
+//! prop::check("sum commutes", 64, |g| {
+//!     let a = g.usize_in(0, 100);
+//!     let b = g.usize_in(0, 100);
+//!     prop::ensure(a + b == b + a, format!("a={a} b={b}"))
+//! });
+//! ```
+
+pub mod prop {
+    use crate::rng::Pcg64;
+
+    /// Seeded input generator handed to each property iteration.
+    pub struct Gen {
+        rng: Pcg64,
+        /// Shrink factor in (0, 1]; generators scale their ranges by it
+        /// so re-runs after a failure probe smaller inputs.
+        pub scale: f64,
+    }
+
+    impl Gen {
+        pub fn new(seed: u64) -> Gen {
+            Gen { rng: Pcg64::new(seed, 0x9E), scale: 1.0 }
+        }
+
+        pub fn u64(&mut self) -> u64 {
+            self.rng.next_u64()
+        }
+
+        pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+            lo + self.rng.next_f64() * (hi - lo)
+        }
+
+        pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+            lo + self.rng.next_f32() * (hi - lo)
+        }
+
+        /// Integer in [lo, hi] inclusive, range scaled by `scale`.
+        pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+            assert!(hi >= lo);
+            let span = ((hi - lo) as f64 * self.scale).ceil() as u64 + 1;
+            lo + self.rng.next_below(span) as usize
+        }
+
+        pub fn bool(&mut self) -> bool {
+            self.rng.next_u64() & 1 == 1
+        }
+
+        pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+            &items[self.rng.next_below(items.len() as u64) as usize]
+        }
+
+        /// Vector of f32 points (row-major n×d) roughly in [-spread, spread].
+        pub fn points(&mut self, n: usize, d: usize, spread: f32) -> Vec<f32> {
+            (0..n * d).map(|_| self.f32_in(-spread, spread)).collect()
+        }
+    }
+
+    /// A property outcome: `Ok(())` passes, `Err(msg)` fails with context.
+    pub type Outcome = Result<(), String>;
+
+    /// Convenience assertion.
+    pub fn ensure(cond: bool, msg: impl Into<String>) -> Outcome {
+        if cond {
+            Ok(())
+        } else {
+            Err(msg.into())
+        }
+    }
+
+    /// Run `iters` iterations of `prop`. On failure, retry with
+    /// progressively smaller `scale` (shrink-lite) to report the
+    /// smallest failing seed/scale found, then panic with context.
+    pub fn check(name: &str, iters: u64, mut prop: impl FnMut(&mut Gen) -> Outcome) {
+        // Seed derives from the property name so adding properties does
+        // not perturb existing ones; PARAKM_PROP_SEED overrides.
+        let base = std::env::var("PARAKM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| {
+                name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+                    (h ^ b as u64).wrapping_mul(0x100000001b3)
+                })
+            });
+        for i in 0..iters {
+            let seed = base.wrapping_add(i);
+            let mut g = Gen::new(seed);
+            if let Err(msg) = prop(&mut g) {
+                // shrink: same seed, smaller scales
+                let mut smallest = (1.0f64, msg.clone());
+                for &s in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                    let mut g = Gen::new(seed);
+                    g.scale = s;
+                    if let Err(m) = prop(&mut g) {
+                        smallest = (s, m);
+                    }
+                }
+                panic!(
+                    "property `{name}` failed (seed={seed}, iter={i}):\n  at scale 1.0: {msg}\n  smallest failing scale {}: {}",
+                    smallest.0, smallest.1
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        prop::check("always true", 32, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false` failed")]
+    fn failing_property_panics_with_context() {
+        prop::check("always false", 8, |_| prop::ensure(false, "nope"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        prop::check("ranges", 64, |g| {
+            let v = g.usize_in(5, 10);
+            prop::ensure((5..=10).contains(&v), format!("usize_in out of range: {v}"))?;
+            let f = g.f64_in(-1.0, 1.0);
+            prop::ensure((-1.0..1.0).contains(&f), format!("f64_in out of range: {f}"))?;
+            let c = *g.choice(&[1, 2, 3]);
+            prop::ensure([1, 2, 3].contains(&c), "choice outside set")
+        });
+    }
+
+    #[test]
+    fn points_shape() {
+        let mut g = prop::Gen::new(1);
+        let pts = g.points(7, 3, 2.0);
+        assert_eq!(pts.len(), 21);
+        assert!(pts.iter().all(|v| v.abs() <= 2.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = prop::Gen::new(9);
+        let mut b = prop::Gen::new(9);
+        for _ in 0..16 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

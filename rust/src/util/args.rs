@@ -1,0 +1,204 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §8).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! subcommands (first positional). Typed getters parse on access and
+//! report which flag failed. Unknown-flag detection is the caller's
+//! choice via [`Args::finish`].
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I, S>(items: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positionals = Vec::new();
+        let mut it = items.into_iter().map(Into::into).peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.entry(body.to_string()).or_default().push(v);
+                } else {
+                    flags.entry(body.to_string()).or_default().push(String::new());
+                }
+            } else {
+                positionals.push(a);
+            }
+        }
+        Args { flags, positionals, consumed: Default::default() }
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// First positional (conventionally the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+
+    /// Positionals after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positionals.is_empty() {
+            &[]
+        } else {
+            &self.positionals[1..]
+        }
+    }
+
+    /// Boolean flag: present (with or without value)?
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    /// Raw string value of the last occurrence of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed value with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| {
+                Error::Config(format!("--{key}: cannot parse `{raw}`"))
+            }),
+        }
+    }
+
+    /// Typed required value.
+    pub fn require<T: FromStr>(&self, key: &str) -> Result<T> {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| Error::Config(format!("missing required --{key}")))?;
+        raw.parse()
+            .map_err(|_| Error::Config(format!("--{key}: cannot parse `{raw}`")))
+    }
+
+    /// Comma-separated list, e.g. `--threads 2,4,8,16`.
+    pub fn get_list<T: FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        Error::Config(format!("--{key}: cannot parse element `{s}`"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any flag never touched by a getter (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::Config(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(["run", "--k", "8", "--fast", "--n=100", "extra"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.rest(), &["extra".to_string()]);
+        assert_eq!(a.get("k"), Some("8"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(["--k", "8", "--tol", "1e-6"]);
+        assert_eq!(a.get_or("k", 4usize).unwrap(), 8);
+        assert_eq!(a.get_or("missing", 4usize).unwrap(), 4);
+        assert_eq!(a.require::<f64>("tol").unwrap(), 1e-6);
+        assert!(a.require::<usize>("tol").is_err());
+        assert!(a.require::<usize>("absent").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(["--threads", "2,4,8"]);
+        assert_eq!(a.get_list("threads", &[1usize]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.get_list("sizes", &[5usize]).unwrap(), vec![5]);
+        let bad = Args::parse(["--threads", "2,x"]);
+        assert!(bad.get_list::<usize>("threads", &[]).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_last_wins_and_all() {
+        let a = Args::parse(["--k", "4", "--k", "8"]);
+        assert_eq!(a.get("k"), Some("8"));
+        assert_eq!(a.get_all("k"), vec!["4", "8"]);
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let a = Args::parse(["--known", "1", "--typo", "2"]);
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+        let b = Args::parse(["--known", "1"]);
+        let _ = b.get("known");
+        assert!(b.finish().is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = Args::parse(["--verbose", "--k", "3"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some(""));
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 3);
+    }
+}

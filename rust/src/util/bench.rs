@@ -1,0 +1,173 @@
+//! Benchmark harness (criterion is unavailable offline — DESIGN.md §8).
+//!
+//! Measurement discipline: warmup runs discarded, `repeats` timed runs,
+//! report median + MAD (median absolute deviation) — robust to the odd
+//! scheduling hiccup on a shared container. Every `rust/benches/*.rs`
+//! target uses this via `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Label for reporting (e.g. `"N=500000 K=8 p=4"`).
+    pub label: String,
+    /// All timed runs, seconds.
+    pub runs: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        percentile(&self.runs, 0.5)
+    }
+
+    /// Median absolute deviation (scaled by nothing; raw seconds).
+    pub fn mad(&self) -> f64 {
+        let m = self.median();
+        let devs: Vec<f64> = self.runs.iter().map(|r| (r - m).abs()).collect();
+        percentile(&devs, 0.5)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.runs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.runs.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub repeats: usize,
+    /// Hard cap on total time per case; once exceeded (and >= 1 timed
+    /// run exists) remaining repeats are skipped. Keeps the 1M-point
+    /// cases from blowing the bench budget.
+    pub time_cap: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 1, repeats: 5, time_cap: Duration::from_secs(120) }
+    }
+}
+
+impl BenchOpts {
+    /// Read overrides from env: PARAKM_BENCH_WARMUP / _REPEATS / _CAP_SECS.
+    /// Lets CI shrink the matrix without code edits.
+    pub fn from_env() -> Self {
+        let mut o = BenchOpts::default();
+        if let Ok(v) = std::env::var("PARAKM_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                o.warmup = n;
+            }
+        }
+        if let Ok(v) = std::env::var("PARAKM_BENCH_REPEATS") {
+            if let Ok(n) = v.parse() {
+                o.repeats = n;
+            }
+        }
+        if let Ok(v) = std::env::var("PARAKM_BENCH_CAP_SECS") {
+            if let Ok(n) = v.parse() {
+                o.time_cap = Duration::from_secs_f64(n);
+            }
+        }
+        o
+    }
+}
+
+/// Time one case: `f` is the workload; its return value is black-boxed.
+pub fn run_case<T>(label: &str, opts: &BenchOpts, mut f: impl FnMut() -> T) -> Sample {
+    let budget_start = Instant::now();
+    for _ in 0..opts.warmup {
+        std::hint::black_box(f());
+        if budget_start.elapsed() > opts.time_cap {
+            break;
+        }
+    }
+    let mut runs = Vec::with_capacity(opts.repeats);
+    for _ in 0..opts.repeats {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        runs.push(t0.elapsed().as_secs_f64());
+        if budget_start.elapsed() > opts.time_cap && !runs.is_empty() {
+            break;
+        }
+    }
+    Sample { label: label.to_string(), runs }
+}
+
+/// Print a sample row in the house bench format (parsed by EXPERIMENTS
+/// tooling; keep stable).
+pub fn report(s: &Sample) {
+    println!(
+        "BENCH  {:<44} median={:>10.6}s  mad={:>9.6}s  min={:>10.6}s  runs={}",
+        s.label,
+        s.median(),
+        s.mad(),
+        s.min(),
+        s.runs.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad() {
+        let s = Sample { label: "t".into(), runs: vec![1.0, 2.0, 100.0] };
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.mad(), 1.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.5);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn run_case_counts_repeats() {
+        let opts = BenchOpts { warmup: 1, repeats: 3, time_cap: Duration::from_secs(60) };
+        let mut calls = 0;
+        let s = run_case("x", &opts, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(s.runs.len(), 3);
+        assert_eq!(calls, 4); // 1 warmup + 3 timed
+    }
+
+    #[test]
+    fn time_cap_short_circuits() {
+        let opts = BenchOpts {
+            warmup: 0,
+            repeats: 1000,
+            time_cap: Duration::from_millis(30),
+        };
+        let s = run_case("slow", &opts, || std::thread::sleep(Duration::from_millis(20)));
+        assert!(s.runs.len() < 1000);
+        assert!(!s.runs.is_empty());
+    }
+}

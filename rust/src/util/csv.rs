@@ -1,0 +1,134 @@
+//! CSV writer/reader for figure series and dataset interchange.
+//!
+//! Deliberately minimal: comma separator, no quoting of numeric output,
+//! quote-aware reading for robustness. Figure data written here is what
+//! `EXPERIMENTS.md` references and what any plotting tool can consume.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Write rows of `f64` columns with a header line.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format_num(*v)).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write string rows (mixed-type tables).
+pub fn write_rows(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Read a numeric CSV (header returned separately). Quoted cells are
+/// unquoted; non-numeric cells become NaN.
+pub fn read_table(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => split_line(&h?),
+        None => return Ok((vec![], vec![])),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            split_line(&line)
+                .iter()
+                .map(|c| c.parse().unwrap_or(f64::NAN))
+                .collect(),
+        );
+    }
+    Ok((header, rows))
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parakm_csv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_numeric() {
+        let p = tmp("rt.csv");
+        write_table(&p, &["a", "b"], &[vec![1.0, 2.5], vec![3.0, -4.0]]).unwrap();
+        let (h, rows) = read_table(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec![1.0, 2.5], vec![3.0, -4.0]]);
+    }
+
+    #[test]
+    fn integers_written_without_dot() {
+        let p = tmp("ints.csv");
+        write_table(&p, &["x"], &[vec![100000.0]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("100000\n"), "{text}");
+    }
+
+    #[test]
+    fn quoted_cells() {
+        assert_eq!(split_line(r#"a,"b,c",d"#), vec!["a", "b,c", "d"]);
+        assert_eq!(split_line(r#""he said ""hi""",2"#), vec![r#"he said "hi""#, "2"]);
+    }
+
+    #[test]
+    fn empty_file() {
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "").unwrap();
+        let (h, rows) = read_table(&p).unwrap();
+        assert!(h.is_empty() && rows.is_empty());
+    }
+}

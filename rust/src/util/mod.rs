@@ -1,0 +1,12 @@
+//! Zero-dependency infrastructure: JSON, CLI args, CSV/SVG writers,
+//! and the benchmark harness.
+//!
+//! The offline image ships neither `serde` nor `clap` nor `criterion`
+//! (DESIGN.md §8), so these small, tested substitutes live here.
+
+pub mod args;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod svg;
+pub mod tables;

@@ -1,0 +1,332 @@
+//! SVG plot writer for the paper's figures.
+//!
+//! Two plot kinds cover Figures 1–12: scatter plots of clustered points
+//! (Figures 1–6) and line charts (speedup / efficiency / scaling,
+//! Figures 7–12). Self-contained SVG, no external assets, categorical
+//! palette stable across serial/parallel runs so side-by-side figures
+//! are visually comparable like the paper's.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Categorical palette (12 entries — enough for K=11 plus noise class).
+pub const PALETTE: [&str; 12] = [
+    "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc948",
+    "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac", "#2f4b7c", "#a05195",
+];
+
+const W: f64 = 720.0;
+const H: f64 = 540.0;
+const MARGIN: f64 = 56.0;
+
+struct Canvas {
+    body: String,
+    xmin: f64,
+    xmax: f64,
+    ymin: f64,
+    ymax: f64,
+}
+
+impl Canvas {
+    fn new(xmin: f64, xmax: f64, ymin: f64, ymax: f64) -> Canvas {
+        let pad_x = (xmax - xmin).max(1e-12) * 0.05;
+        let pad_y = (ymax - ymin).max(1e-12) * 0.05;
+        Canvas {
+            body: String::new(),
+            xmin: xmin - pad_x,
+            xmax: xmax + pad_x,
+            ymin: ymin - pad_y,
+            ymax: ymax + pad_y,
+        }
+    }
+
+    fn sx(&self, x: f64) -> f64 {
+        MARGIN + (x - self.xmin) / (self.xmax - self.xmin) * (W - 2.0 * MARGIN)
+    }
+
+    fn sy(&self, y: f64) -> f64 {
+        H - MARGIN - (y - self.ymin) / (self.ymax - self.ymin) * (H - 2.0 * MARGIN)
+    }
+
+    fn axes(&mut self, title: &str, xlabel: &str, ylabel: &str) {
+        let x0 = MARGIN;
+        let x1 = W - MARGIN;
+        let y0 = H - MARGIN;
+        let y1 = MARGIN;
+        let _ = write!(
+            self.body,
+            "<rect x='{x0}' y='{y1}' width='{}' height='{}' fill='none' stroke='#333'/>",
+            x1 - x0,
+            y0 - y1
+        );
+        let _ = write!(
+            self.body,
+            "<text x='{}' y='24' text-anchor='middle' font-size='16' font-family='sans-serif'>{}</text>",
+            W / 2.0,
+            esc(title)
+        );
+        let _ = write!(
+            self.body,
+            "<text x='{}' y='{}' text-anchor='middle' font-size='13' font-family='sans-serif'>{}</text>",
+            W / 2.0,
+            H - 12.0,
+            esc(xlabel)
+        );
+        let _ = write!(
+            self.body,
+            "<text x='16' y='{}' text-anchor='middle' font-size='13' font-family='sans-serif' transform='rotate(-90 16 {})'>{}</text>",
+            H / 2.0,
+            H / 2.0,
+            esc(ylabel)
+        );
+        // ticks: 5 per axis
+        for i in 0..=5 {
+            let fx = self.xmin + (self.xmax - self.xmin) * i as f64 / 5.0;
+            let px = self.sx(fx);
+            let _ = write!(
+                self.body,
+                "<line x1='{px}' y1='{y0}' x2='{px}' y2='{}' stroke='#333'/>",
+                y0 + 5.0
+            );
+            let _ = write!(
+                self.body,
+                "<text x='{px}' y='{}' text-anchor='middle' font-size='11' font-family='sans-serif'>{}</text>",
+                y0 + 18.0,
+                tick(fx)
+            );
+            let fy = self.ymin + (self.ymax - self.ymin) * i as f64 / 5.0;
+            let py = self.sy(fy);
+            let _ = write!(
+                self.body,
+                "<line x1='{}' y1='{py}' x2='{x0}' y2='{py}' stroke='#333'/>",
+                x0 - 5.0
+            );
+            let _ = write!(
+                self.body,
+                "<text x='{}' y='{}' text-anchor='end' font-size='11' font-family='sans-serif'>{}</text>",
+                x0 - 8.0,
+                py + 4.0,
+                tick(fy)
+            );
+        }
+    }
+
+    fn finish(self) -> String {
+        format!(
+            "<?xml version='1.0' encoding='UTF-8'?>\n<svg xmlns='http://www.w3.org/2000/svg' width='{W}' height='{H}' viewBox='0 0 {W} {H}'>\n<rect width='{W}' height='{H}' fill='white'/>\n{}\n</svg>\n",
+            self.body
+        )
+    }
+}
+
+fn tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 10000.0 || v.abs() < 0.01 {
+        format!("{v:.1e}")
+    } else if v.fract().abs() < 1e-9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Scatter plot of 2D points colored by label (Figures 1–6; 3D data is
+/// plotted as the paper does — a 2D projection of the first two axes,
+/// with the projection choice documented in the figure title).
+pub fn scatter(
+    path: &Path,
+    title: &str,
+    xs: &[f32],
+    ys: &[f32],
+    labels: &[i32],
+    max_points: usize,
+) -> Result<()> {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), labels.len());
+    let stride = (xs.len() / max_points.max(1)).max(1);
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for i in (0..xs.len()).step_by(stride) {
+        xmin = xmin.min(xs[i] as f64);
+        xmax = xmax.max(xs[i] as f64);
+        ymin = ymin.min(ys[i] as f64);
+        ymax = ymax.max(ys[i] as f64);
+    }
+    if !xmin.is_finite() {
+        xmin = 0.0;
+        xmax = 1.0;
+        ymin = 0.0;
+        ymax = 1.0;
+    }
+    let mut c = Canvas::new(xmin, xmax, ymin, ymax);
+    c.axes(title, "x", "y");
+    for i in (0..xs.len()).step_by(stride) {
+        let color = if labels[i] < 0 {
+            "#999999"
+        } else {
+            PALETTE[(labels[i] as usize) % PALETTE.len()]
+        };
+        let _ = write!(
+            c.body,
+            "<circle cx='{:.1}' cy='{:.1}' r='1.6' fill='{}' fill-opacity='0.55'/>",
+            c.sx(xs[i] as f64),
+            c.sy(ys[i] as f64),
+            color
+        );
+    }
+    write_file(path, &c.finish())
+}
+
+/// One line series.
+pub struct Series<'a> {
+    pub name: &'a str,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Line chart (Figures 7–12): one or more named series with markers
+/// and a legend.
+pub fn line_chart(
+    path: &Path,
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+) -> Result<()> {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        return write_file(path, &Canvas::new(0.0, 1.0, 0.0, 1.0).finish());
+    }
+    let xmin = all.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+    let xmax = all.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+    let ymin = all.iter().map(|p| p.1).fold(f64::INFINITY, f64::min).min(0.0);
+    let ymax = all.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let mut c = Canvas::new(xmin, xmax, ymin, ymax);
+    c.axes(title, xlabel, ylabel);
+    for (si, s) in series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let mut d = String::new();
+        for (i, (x, y)) in s.points.iter().enumerate() {
+            let _ = write!(d, "{}{:.1},{:.1} ", if i == 0 { "M" } else { "L" }, c.sx(*x), c.sy(*y));
+        }
+        let _ = write!(
+            c.body,
+            "<path d='{}' fill='none' stroke='{}' stroke-width='2'/>",
+            d.trim(),
+            color
+        );
+        for (x, y) in &s.points {
+            let _ = write!(
+                c.body,
+                "<circle cx='{:.1}' cy='{:.1}' r='3.5' fill='{}'/>",
+                c.sx(*x),
+                c.sy(*y),
+                color
+            );
+        }
+        // legend
+        let ly = MARGIN + 18.0 * si as f64 + 12.0;
+        let _ = write!(
+            c.body,
+            "<rect x='{}' y='{}' width='12' height='12' fill='{}'/><text x='{}' y='{}' font-size='12' font-family='sans-serif'>{}</text>",
+            W - MARGIN - 150.0,
+            ly - 10.0,
+            color,
+            W - MARGIN - 132.0,
+            ly,
+            esc(s.name)
+        );
+    }
+    write_file(path, &c.finish())
+}
+
+fn write_file(path: &Path, content: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parakm_svg_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn scatter_writes_valid_svg() {
+        let p = tmp("scatter.svg");
+        scatter(
+            &p,
+            "t",
+            &[0.0, 1.0, 2.0],
+            &[0.0, 1.0, 0.5],
+            &[0, 1, -1],
+            1000,
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("<?xml"));
+        assert!(s.contains("</svg>"));
+        assert_eq!(s.matches("<circle").count(), 3);
+        assert!(s.contains("#999999")); // noise color for label -1
+    }
+
+    #[test]
+    fn scatter_subsamples() {
+        let n = 10_000;
+        let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let ys = xs.clone();
+        let labels = vec![0i32; n];
+        let p = tmp("sub.svg");
+        scatter(&p, "t", &xs, &ys, &labels, 100).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.matches("<circle").count() <= 110);
+    }
+
+    #[test]
+    fn line_chart_series_and_legend() {
+        let p = tmp("line.svg");
+        line_chart(
+            &p,
+            "speedup",
+            "threads",
+            "psi",
+            &[
+                Series { name: "N=100k", points: vec![(2.0, 1.5), (4.0, 2.8)] },
+                Series { name: "N=1M", points: vec![(2.0, 1.9), (4.0, 3.6)] },
+            ],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s.matches("<path").count(), 2);
+        assert!(s.contains("N=100k") && s.contains("N=1M"));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let p = tmp("empty.svg");
+        line_chart(&p, "t", "x", "y", &[]).unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().contains("</svg>"));
+    }
+
+    #[test]
+    fn escapes_title() {
+        let p = tmp("esc.svg");
+        line_chart(&p, "a<b & c", "x", "y", &[Series { name: "s", points: vec![(0.0, 0.0)] }])
+            .unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("a&lt;b &amp; c"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Plain-text table rendering for paper-style console output.
+//!
+//! Every eval/bench target prints its rows through this so `cargo bench`
+//! output visually matches the paper's tables (EXPERIMENTS.md pastes
+//! these blocks verbatim).
+
+/// Render an aligned text table with a title.
+pub fn render(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let mut line = String::new();
+    for (i, h) in header.iter().enumerate() {
+        line.push_str(&format!("| {:<w$} ", h, w = widths[i]));
+    }
+    line.push('|');
+    let sep: String = line
+        .chars()
+        .map(|c| if c == '|' { '|' } else { '-' })
+        .collect();
+    out.push_str(&line);
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        let mut line = String::new();
+        for (i, cell) in row.iter().enumerate() {
+            line.push_str(&format!("| {:<w$} ", cell, w = widths[i]));
+        }
+        line.push('|');
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds like the paper's tables (6 decimals).
+pub fn secs(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+/// Format a ratio (speedup/efficiency) with 3 decimals.
+pub fn ratio(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            "TABLE X",
+            &["N", "p = 2"],
+            &[
+                vec!["100000".into(), "0.680664".into()],
+                vec!["500000".into(), "10.988341".into()],
+            ],
+        );
+        assert!(t.starts_with("TABLE X\n"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // all body lines equal width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+        assert!(lines[4].contains("10.988341"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(secs(1.5), "1.500000");
+        assert_eq!(ratio(0.98765), "0.988");
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: the `parakm` binary end-to-end — gen-data → run →
+//! assign-out round trip, info, and error paths. Exercises the CLI
+//! parser, dataset IO and engine plumbing the way a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn parakm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_parakm"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parakm_cli_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = parakm().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("usage: parakm"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = parakm().arg("explode").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn gen_data_then_run_serial() {
+    let data = tmp("cli_d3.pkd");
+    let out = parakm()
+        .args(["gen-data", "--dim", "3", "--n", "5000", "--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let assign = tmp("cli_assign.csv");
+    let out = parakm()
+        .args(["run", "--engine", "serial", "--k", "4", "--input"])
+        .arg(&data)
+        .arg("--assign-out")
+        .arg(&assign)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged: true"), "{text}");
+    assert!(text.contains("ARI vs truth"), "{text}");
+    // assignment file has 5000 rows + header
+    let lines = std::fs::read_to_string(&assign).unwrap().lines().count();
+    assert_eq!(lines, 5001);
+}
+
+#[test]
+fn run_synthetic_offload() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = parakm()
+        .args([
+            "run", "--synthetic", "3d:8000", "--engine", "offload", "--k", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("engine      : offload"), "{text}");
+    assert!(text.contains("iter loop"), "{text}");
+}
+
+#[test]
+fn run_rejects_bad_flags() {
+    // typo'd flag
+    let out = parakm()
+        .args(["run", "--synthetic", "3d:1000", "--engine", "serial", "--k", "4", "--wat", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+    // bad engine
+    let out = parakm()
+        .args(["run", "--synthetic", "3d:1000", "--engine", "gpu", "--k", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    // missing k
+    let out = parakm()
+        .args(["run", "--synthetic", "3d:1000", "--engine", "serial"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn info_lists_artifacts() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = parakm().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("stats_partial_d3_k4"), "{text}");
+    assert!(text.contains("assign_d3_k4"), "{text}");
+    assert!(text.contains("finalize_d2_k11"), "{text}");
+}
+
+#[test]
+fn gen_data_csv_roundtrip() {
+    let data = tmp("cli_d2.csv");
+    let out = parakm()
+        .args(["gen-data", "--dim", "2", "--n", "300", "--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = parakm()
+        .args(["run", "--engine", "hamerly", "--k", "4", "--input"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("300 points, 2D"));
+}

@@ -1,0 +1,150 @@
+//! Integration: every engine against every other, over the real AOT
+//! artifacts, on datasets sized to exercise multi-chunk planning,
+//! padded tails and ragged shards. These tests are the repo's
+//! "Figures 1–6" claim in executable form: all engines produce the
+//! same clustering as serial Lloyd from the same init.
+
+use parakmeans::config::{Engine, RunConfig};
+use parakmeans::coordinator::shared::MergePolicy;
+use parakmeans::coordinator::{offload, shared};
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::eval;
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::metrics;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn cfg(k: usize) -> RunConfig {
+    RunConfig { k, seed: 42, ..Default::default() }
+}
+
+/// All engines, one mid-size 3D workload, pairwise agreement.
+#[test]
+fn all_engines_agree_3d() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = MixtureSpec::paper_3d(4).generate(70_001, 3); // ragged
+    let kc = KmeansConfig::new(4).with_seed(42);
+    let mu0 = kmeans::init::initialize(&ds, 4, kc.init, kc.seed);
+
+    let serial = kmeans::serial::run_from(&ds, &kc, &mu0);
+    let threads = kmeans::parallel::run_from(&ds, &kc, 4, kmeans::parallel::MergeMode::Leader, &mu0);
+    let elkan = kmeans::elkan::run_from(&ds, &kc, &mu0);
+    let hamerly = kmeans::hamerly::run_from(&ds, &kc, &mu0);
+    let sh = shared::run(&ds, &cfg(4), 4).unwrap();
+    let off = offload::run(&ds, &cfg(4)).unwrap();
+
+    for (name, assign) in [
+        ("threads", &threads.assign),
+        ("elkan", &elkan.assign),
+        ("hamerly", &hamerly.assign),
+        ("shared", &sh.result.assign),
+        ("offload", &off.result.assign),
+    ] {
+        let ari = metrics::adjusted_rand_index(&serial.assign, assign);
+        assert!(ari > 0.999, "{name} diverged from serial: ARI {ari}");
+    }
+    assert_eq!(serial.iterations, sh.result.iterations, "AOT iteration count");
+    assert_eq!(serial.iterations, off.result.iterations);
+}
+
+/// 2D / K=11 (the Figures 5-6 workload): the K-padding path (11 -> 16
+/// lanes) through the kernel must not change results.
+#[test]
+fn k11_padding_path_2d() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = MixtureSpec::paper_2d(8).generate(50_000, 5);
+    let kc = KmeansConfig::new(11).with_seed(7);
+    let mu0 = kmeans::init::initialize(&ds, 11, kc.init, kc.seed);
+    let serial = kmeans::serial::run_from(&ds, &kc, &mu0);
+    let c = RunConfig { k: 11, seed: 7, ..Default::default() };
+    let off = offload::run(&ds, &c).unwrap();
+    let ari = metrics::adjusted_rand_index(&serial.assign, &off.result.assign);
+    assert!(ari > 0.999, "K=11 offload diverged: ARI {ari}");
+    assert_eq!(serial.iterations, off.result.iterations);
+}
+
+/// Merge policies must be numerically identical (only the virtual
+/// clock differs).
+#[test]
+fn merge_policies_identical_results() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = MixtureSpec::paper_3d(4).generate(30_000, 9);
+    let a = shared::run_opts(&ds, &cfg(4), 8, MergePolicy::Leader).unwrap();
+    let b = shared::run_opts(&ds, &cfg(4), 8, MergePolicy::Critical).unwrap();
+    assert_eq!(a.result.assign, b.result.assign);
+    assert_eq!(a.result.centroids, b.result.centroids);
+}
+
+/// Chunk configuration must not change results: auto vs pinned sizes.
+#[test]
+fn chunk_invariance() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = MixtureSpec::paper_3d(4).generate(20_000, 11);
+    let auto = offload::run(&ds, &cfg(4)).unwrap();
+    let pinned = offload::run(&ds, &RunConfig { chunk: 4096, ..cfg(4) }).unwrap();
+    assert_eq!(auto.result.assign, pinned.result.assign);
+    assert!(auto.exec_calls <= pinned.exec_calls, "auto plan should use fewer calls");
+}
+
+/// Engine selection through the eval dispatcher (what benches/CLI use).
+#[test]
+fn eval_dispatch_all_engines() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = eval::paper_dataset(3, 12_000);
+    let mut sses = Vec::new();
+    for engine in [
+        Engine::Serial,
+        Engine::Threads,
+        Engine::Elkan,
+        Engine::Hamerly,
+        Engine::Shared,
+        Engine::Offload,
+    ] {
+        let t = eval::run_engine(engine, &ds, 4, 4, 42).unwrap();
+        assert!(t.converged, "{engine} did not converge");
+        sses.push(t.sse);
+    }
+    // exact algorithms: all SSE equal within f32 slack
+    let base = sses[0];
+    for (i, s) in sses.iter().enumerate() {
+        assert!((s - base).abs() / base < 1e-3, "engine {i} sse {s} vs {base}");
+    }
+}
+
+/// Convergence-parameter plumbing: tol and max_iters are honored
+/// through the AOT engines.
+#[test]
+fn convergence_controls() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = MixtureSpec::paper_3d(4).generate(10_000, 13);
+    // max_iters = 2: must stop early, not converged
+    let c = RunConfig { max_iters: 2, tol: 0.0, ..cfg(4) };
+    let r = offload::run(&ds, &c).unwrap();
+    assert_eq!(r.result.iterations, 2);
+    assert!(!r.result.converged);
+    // huge tol: one iteration, converged
+    let c = RunConfig { tol: 1e12, ..cfg(4) };
+    let r = shared::run(&ds, &c, 2).unwrap();
+    assert_eq!(r.result.iterations, 1);
+    assert!(r.result.converged);
+}

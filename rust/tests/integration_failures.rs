@@ -1,0 +1,118 @@
+//! Failure injection: corrupted artifacts, bad manifests, and hostile
+//! inputs must surface as clean errors — never panics, hangs or wrong
+//! results.
+
+use std::path::{Path, PathBuf};
+
+use parakmeans::config::RunConfig;
+use parakmeans::coordinator::offload;
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::runtime::Runtime;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+/// Copy the real artifacts dir so tests can vandalize it safely.
+fn cloned_artifacts(name: &str) -> PathBuf {
+    let dst = std::env::temp_dir().join("parakm_failure_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir("artifacts").unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+    dst
+}
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let missing = std::env::temp_dir().join("parakm_no_such_artifacts");
+    let _ = std::fs::remove_dir_all(&missing);
+    match Runtime::new(&missing) {
+        Err(parakmeans::Error::Manifest(msg)) => {
+            assert!(msg.contains("make artifacts"), "{msg}");
+        }
+        Err(other) => panic!("expected manifest error, got {other}"),
+        Ok(_) => panic!("expected manifest error, got a runtime"),
+    }
+}
+
+#[test]
+fn corrupt_manifest_json_is_clean_error() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = cloned_artifacts("bad_json");
+    std::fs::write(dir.join("manifest.json"), "{ not json !!!").unwrap();
+    assert!(Runtime::new(&dir).is_err());
+}
+
+#[test]
+fn manifest_referencing_missing_file_fails_at_prepare() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = cloned_artifacts("missing_hlo");
+    // remove one HLO file the manifest still references
+    std::fs::remove_file(dir.join("finalize_d3_k4.hlo.txt")).unwrap();
+    let ds = MixtureSpec::paper_3d(4).generate(5000, 1);
+    let cfg = RunConfig { k: 4, artifacts_dir: dir, ..Default::default() };
+    let err = offload::run(&ds, &cfg).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("finalize") || msg.to_lowercase().contains("no such file"), "{msg}");
+}
+
+#[test]
+fn truncated_hlo_text_fails_to_compile_cleanly() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = cloned_artifacts("truncated_hlo");
+    let victim = dir.join("stats_partial_d3_k4_c4096.hlo.txt");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 3]).unwrap();
+    let ds = MixtureSpec::paper_3d(4).generate(3000, 1);
+    let cfg = RunConfig { k: 4, chunk: 4096, artifacts_dir: dir, ..Default::default() };
+    // shared engine prepares stats_partial first — must error, not crash
+    let res = parakmeans::coordinator::shared::run(&ds, &cfg, 2);
+    assert!(res.is_err(), "corrupted HLO must not compile");
+}
+
+#[test]
+fn garbage_hlo_body_is_clean_error() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = cloned_artifacts("garbage_hlo");
+    std::fs::write(
+        dir.join("fused_stats_d3_k4_c4096.hlo.txt"),
+        "HloModule junk\n\nENTRY main { ROOT x = f32[] wat() }\n",
+    )
+    .unwrap();
+    let ds = MixtureSpec::paper_3d(4).generate(3000, 1);
+    let cfg = RunConfig { k: 4, chunk: 4096, artifacts_dir: dir, ..Default::default() };
+    assert!(offload::run(&ds, &cfg).is_err());
+}
+
+#[test]
+fn zero_k_rejected_before_runtime_touched() {
+    let ds = MixtureSpec::paper_3d(4).generate(100, 1);
+    let cfg = RunConfig { k: 0, ..Default::default() };
+    assert!(offload::run(&ds, &cfg).is_err());
+}
+
+#[test]
+fn empty_dataset_rejected() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = parakmeans::data::Dataset::from_vec(vec![], 3).unwrap();
+    let cfg = RunConfig { k: 4, ..Default::default() };
+    assert!(offload::run(&ds, &cfg).is_err());
+}
