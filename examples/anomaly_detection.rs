@@ -15,7 +15,7 @@ use parakmeans::data::Dataset;
 use parakmeans::linalg;
 use parakmeans::rng::Pcg64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> parakmeans::Result<()> {
     // 1. Normal data: 4-component 3D mixture, 40k points.
     let spec = MixtureSpec::paper_3d(4);
     let normal = spec.generate(40_000, 11);

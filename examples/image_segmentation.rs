@@ -59,7 +59,7 @@ fn write_ppm(path: &Path, pixels: &[[f32; 3]]) -> std::io::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let pixels = render_scene();
     let out_dir = Path::new("results/examples");
     std::fs::create_dir_all(out_dir)?;

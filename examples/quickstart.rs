@@ -9,7 +9,7 @@ use parakmeans::data::gmm::MixtureSpec;
 use parakmeans::kmeans::{self, KmeansConfig};
 use parakmeans::metrics;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> parakmeans::Result<()> {
     // 1. A 3D mixture of 4 Gaussians, 50k points (the paper's small case).
     let ds = MixtureSpec::paper_3d(4).generate(50_000, 42);
     println!("dataset: {} points, {}D", ds.len(), ds.dim());

@@ -21,7 +21,7 @@ use parakmeans::kmeans::{self, KmeansConfig};
 use parakmeans::metrics;
 use parakmeans::util::tables;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> parakmeans::Result<()> {
     let scale = Scale::from_env();
     let k = workloads::K_3D;
     println!("scaling_benchmark: 3D family, K={k}, scale {scale:?}\n");
@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
         for p in workloads::THREADS {
             let run = shared::run(&ds, &cfg, p)?;
             let ari = metrics::adjusted_rand_index(&serial.assign, &run.result.assign);
-            anyhow::ensure!(ari > 0.99, "shared p={p} diverged: ARI {ari}");
-            anyhow::ensure!(
+            assert!(ari > 0.99, "shared p={p} diverged: ARI {ari}");
+            assert!(
                 run.result.iterations == serial.iterations,
                 "iteration mismatch at p={p}"
             );
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         // offload engine (Table 5 analog)
         let off = offload::run(&ds, &cfg)?;
         let ari = metrics::adjusted_rand_index(&serial.assign, &off.result.assign);
-        anyhow::ensure!(ari > 0.99, "offload diverged: ARI {ari}");
+        assert!(ari > 0.99, "offload diverged: ARI {ari}");
 
         let psi8 = metrics::speedup(shared_times[0], shared_times[2]); // p=2 -> p=8
         println!(

@@ -17,7 +17,9 @@ const CLIENTS: usize = 8;
 const REQUESTS_PER_CLIENT: usize = 50;
 const POINTS_PER_REQUEST: usize = 32;
 
-fn main() -> anyhow::Result<()> {
+type DynError = Box<dyn std::error::Error + Send + Sync>;
+
+fn main() -> Result<(), DynError> {
     // 1. train
     let ds = MixtureSpec::paper_3d(4).generate(50_000, 42);
     let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(7));
@@ -36,13 +38,15 @@ fn main() -> anyhow::Result<()> {
     };
     let server = serve(cfg, model.centroids.clone(), 3, 4)?;
     let addr = server.local_addr;
-    println!("serving on {addr}; driving {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests × {POINTS_PER_REQUEST} points");
+    println!(
+        "serving on {addr}; driving {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests × {POINTS_PER_REQUEST} points"
+    );
 
     // 3. drive concurrent clients, collecting per-request latency
     let t0 = Instant::now();
     let handles: Vec<_> = (0..CLIENTS)
         .map(|c| {
-            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            std::thread::spawn(move || -> Result<Vec<f64>, DynError> {
                 let mut rng = parakmeans::rng::Pcg64::new(c as u64, 0x10AD);
                 let mut conn = TcpStream::connect(addr)?;
                 conn.set_nodelay(true)?;
@@ -69,13 +73,19 @@ fn main() -> anyhow::Result<()> {
                     let mut resp = String::new();
                     reader.read_line(&mut resp)?;
                     latencies.push(t.elapsed().as_secs_f64());
-                    match Response::parse(resp.trim())
-                        .map_err(|e| anyhow::anyhow!("{e}"))?
-                    {
+                    match Response::parse(resp.trim())? {
                         Response::Ok { clusters, .. } => {
-                            anyhow::ensure!(clusters.len() == POINTS_PER_REQUEST);
+                            if clusters.len() != POINTS_PER_REQUEST {
+                                return Err(format!(
+                                    "short reply: {} clusters",
+                                    clusters.len()
+                                )
+                                .into());
+                            }
                         }
-                        Response::Err { error, .. } => anyhow::bail!("server error: {error}"),
+                        Response::Err { error, .. } => {
+                            return Err(format!("server error: {error}").into())
+                        }
                     }
                 }
                 Ok(latencies)
@@ -96,7 +106,11 @@ fn main() -> anyhow::Result<()> {
     let total_requests = CLIENTS * REQUESTS_PER_CLIENT;
     let total_points = total_requests * POINTS_PER_REQUEST;
     println!("requests    : {total_requests} ({total_points} points) in {wall:.3}s");
-    println!("throughput  : {:.0} req/s, {:.0} points/s", total_requests as f64 / wall, total_points as f64 / wall);
+    println!(
+        "throughput  : {:.0} req/s, {:.0} points/s",
+        total_requests as f64 / wall,
+        total_points as f64 / wall
+    );
     println!("latency p50 : {:.2} ms", pct(0.50));
     println!("latency p90 : {:.2} ms", pct(0.90));
     println!("latency p99 : {:.2} ms", pct(0.99));

@@ -56,7 +56,9 @@ fn serve_batching_ablation() {
             let mut rxs = Vec::new();
             for r in lo..hi {
                 let pts: Vec<Vec<f64>> = (0..points)
-                    .map(|i| ds.point((r * points + i) % ds.len()).iter().map(|&v| v as f64).collect())
+                    .map(|i| {
+                        ds.point((r * points + i) % ds.len()).iter().map(|&v| v as f64).collect()
+                    })
                     .collect();
                 let (tx, rx) = mpsc::channel();
                 jobs.push(Job { request: Request { id: r as u64, points: pts }, reply: tx });

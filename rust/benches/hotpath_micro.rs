@@ -2,18 +2,23 @@
 //!
 //! Isolates the pieces the profile showed matter:
 //!  - `assign_accumulate` (the per-shard inner loop) at d = 2/3,
-//!    K = 4/8/11 — points/sec;
-//!  - generic vs monomorphized inner loop (the d-specialization);
+//!    K = 4/8/11 — points/sec, on the active kernel tier;
 //!  - PartialStats merge (the leader's per-worker fold);
-//!  - one AOT `assign_partial` call per chunk size — XLA call overhead
-//!    + per-point device throughput.
+//!  - one `stats_partial` call per chunk size — executor call overhead
+//!    + per-point throughput (AOT artifacts when built, the native
+//!    backend otherwise);
+//!  - end-to-end shared engine on one workload.
 //!
 //!     cargo bench --bench hotpath_micro
+//!
+//! CI bench-smoke runs this with PARAKM_BENCH_WARMUP=0
+//! PARAKM_BENCH_REPEATS=1 (one iteration, no timing assertions).
 
 use parakmeans::config::RunConfig;
 use parakmeans::coordinator::shared::{run_with, MergePolicy};
 use parakmeans::data::gmm::MixtureSpec;
 use parakmeans::kmeans::step::{assign_accumulate, PartialStats};
+use parakmeans::linalg::kernel;
 use parakmeans::rng::Pcg64;
 use parakmeans::runtime::manifest::ExecKind;
 use parakmeans::runtime::Runtime;
@@ -22,9 +27,10 @@ use parakmeans::util::bench::{report, run_case, BenchOpts};
 fn main() {
     let opts = BenchOpts::from_env();
     println!("== hot-path microbench ==");
+    println!("kernel tier: {} (detected: {})", kernel::active_tier(), kernel::detect());
 
     // ---- assign_accumulate throughput ---------------------------------
-    let n = 200_000;
+    let n = opts.n;
     for (d, ks) in [(2usize, [4usize, 8, 11]), (3, [4, 8, 11])] {
         let mut rng = Pcg64::new(1, 0);
         let rows: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 20.0).collect();
@@ -33,7 +39,7 @@ fn main() {
             let mut assign = vec![0i32; n];
             let mut stats = PartialStats::zeros(k, d);
             let s = run_case(&format!("assign_accumulate d={d} k={k} n={n}"), &opts, || {
-                assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats);
+                assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats).unwrap();
             });
             report(&s);
             println!(
@@ -55,39 +61,40 @@ fn main() {
         report(&s);
     }
 
-    // ---- AOT call overhead + throughput per chunk ----------------------
+    // ---- executor call overhead + throughput per chunk ------------------
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        let mut rt = Runtime::new(dir).expect("runtime");
-        for chunk in [4096usize, 65536] {
-            let Ok(spec) = rt.find(ExecKind::StatsPartial, 3, 4, chunk) else {
-                continue;
-            };
-            let mut rng = Pcg64::new(2, 0);
-            let x: Vec<f32> = (0..chunk * 3).map(|_| rng.next_f32() * 20.0).collect();
-            let mu: Vec<f32> = (0..12).map(|_| rng.next_f32() * 20.0).collect();
-            let xb = rt.upload_f32(&x, &[chunk, 3]).unwrap();
-            let nvb = rt.upload_i32(&[chunk as i32], &[1]).unwrap();
-            rt.prepare(&spec).unwrap();
-            let mub = rt.upload_f32(&mu, &[4, 3]).unwrap();
-            let s = run_case(&format!("aot stats_partial d=3 k=4 chunk={chunk}"), &opts, || {
-                rt.execute_buffers(&spec, &[&xb, &mub, &nvb]).unwrap()
-            });
-            report(&s);
-            println!(
-                "         -> {:.1} Mpoints/s through XLA",
-                chunk as f64 / s.median() / 1e6
-            );
-        }
-
-        // ---- end-to-end shared engine, one workload ---------------------
-        let ds = MixtureSpec::paper_3d(4).generate(100_000, 9);
-        let cfg = RunConfig { k: 4, seed: 42, ..Default::default() };
-        let s = run_case("shared engine e2e n=100k p=4", &opts, || {
-            run_with(&mut rt, &ds, &cfg, 4, MergePolicy::Leader).unwrap()
+    let mut rt = Runtime::new_or_native(dir).expect("runtime");
+    println!(
+        "executor backend: {}",
+        if rt.is_native_fallback() { "native (synthetic manifest)" } else { "AOT artifacts" }
+    );
+    for chunk in [4096usize, 65536] {
+        let Ok(spec) = rt.find(ExecKind::StatsPartial, 3, 4, chunk) else {
+            continue;
+        };
+        let mut rng = Pcg64::new(2, 0);
+        let x: Vec<f32> = (0..chunk * 3).map(|_| rng.next_f32() * 20.0).collect();
+        let mu: Vec<f32> = (0..12).map(|_| rng.next_f32() * 20.0).collect();
+        let xb = rt.upload_f32(&x, &[chunk, 3]).unwrap();
+        let nvb = rt.upload_i32(&[chunk as i32], &[1]).unwrap();
+        rt.prepare(&spec).unwrap();
+        let mub = rt.upload_f32(&mu, &[4, 3]).unwrap();
+        let s = run_case(&format!("exec stats_partial d=3 k=4 chunk={chunk}"), &opts, || {
+            rt.execute_buffers(&spec, &[&xb, &mub, &nvb]).unwrap()
         });
         report(&s);
-    } else {
-        println!("(artifacts not built; skipping AOT microbenches)");
+        println!(
+            "         -> {:.1} Mpoints/s through the executor",
+            chunk as f64 / s.median() / 1e6
+        );
     }
+
+    // ---- end-to-end shared engine, one workload -------------------------
+    let e2e_n = n.min(100_000);
+    let ds = MixtureSpec::paper_3d(4).generate(e2e_n, 9);
+    let cfg = RunConfig { k: 4, seed: 42, ..Default::default() };
+    let s = run_case(&format!("shared engine e2e n={e2e_n} p=4"), &opts, || {
+        run_with(&mut rt, &ds, &cfg, 4, MergePolicy::Leader).unwrap()
+    });
+    report(&s);
 }

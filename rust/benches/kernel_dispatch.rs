@@ -1,0 +1,75 @@
+//! Kernel-dispatch bench: scalar vs SIMD tier per (n, d, k) — the
+//! Table 2/3 speedup analysis extended one level down, to the fused
+//! assign/accumulate kernel both the OpenMP-model and OpenACC-model
+//! engines execute per iteration.
+//!
+//!     cargo bench --bench kernel_dispatch
+//!
+//! Knobs (also used by CI bench-smoke):
+//!   PARAKM_BENCH_N        rows per case (default 200000)
+//!   PARAKM_BENCH_WARMUP / PARAKM_BENCH_REPEATS / PARAKM_BENCH_CAP_SECS
+//!
+//! Prints one `BENCH` row per (tier, n, d, k) plus a `SPEEDUP` row per
+//! (n, d, k) with SIMD-vs-scalar ratio. Also cross-checks (exactly, no
+//! timing assertions) that both tiers produce identical assignments.
+
+use parakmeans::linalg::kernel::{self, KernelTier};
+use parakmeans::rng::Pcg64;
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+
+fn run_tier(
+    rows: &[f32],
+    d: usize,
+    mu: &[f32],
+    k: usize,
+    tier: KernelTier,
+) -> (Vec<i32>, f64) {
+    let n = rows.len() / d;
+    let mut assign = vec![0i32; n];
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    let mut sse = 0.0f64;
+    kernel::assign_accumulate(rows, d, mu, k, &mut assign, &mut sums, &mut counts, &mut sse, tier);
+    (assign, sse)
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n = opts.n;
+    let simd = kernel::detect();
+    println!("== kernel dispatch bench (n={n}) ==");
+    println!("detected tier: {simd}");
+
+    for d in [2usize, 3, 4, 8, 16, 17, 32] {
+        let mut rng = Pcg64::new(0xD15 + d as u64, 0);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 20.0).collect();
+        for k in [4usize, 8, 16] {
+            let mu: Vec<f32> = (0..k * d).map(|_| rng.next_f32() * 20.0).collect();
+
+            // correctness cross-check first (cheap, exact)
+            let (a_scalar, sse_scalar) = run_tier(&rows, d, &mu, k, KernelTier::Scalar);
+            if simd != KernelTier::Scalar {
+                let (a_simd, sse_simd) = run_tier(&rows, d, &mu, k, simd);
+                assert_eq!(a_scalar, a_simd, "tier mismatch at d={d} k={k}");
+                // same tolerance the property tests grant: <= 1 ulp
+                let ulps = (sse_scalar.to_bits() as i64 - sse_simd.to_bits() as i64).abs();
+                assert!(ulps <= 1, "sse drift {ulps} ulps at d={d} k={k}");
+            }
+
+            let s_scalar = run_case(&format!("scalar  n={n} d={d:<2} k={k:<2}"), &opts, || {
+                run_tier(&rows, d, &mu, k, KernelTier::Scalar)
+            });
+            report(&s_scalar);
+            if simd != KernelTier::Scalar {
+                let s_simd = run_case(&format!("{simd:<7} n={n} d={d:<2} k={k:<2}"), &opts, || {
+                    run_tier(&rows, d, &mu, k, simd)
+                });
+                report(&s_simd);
+                println!(
+                    "SPEEDUP n={n} d={d:<2} k={k:<2}  {simd}/scalar = {:.2}x",
+                    s_scalar.median() / s_simd.median()
+                );
+            }
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! examples.
 
 use crate::error::{Error, Result};
+use crate::linalg::kernel::KernelChoice;
 
 /// Which engine executes the Lloyd iterations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,6 +108,12 @@ pub struct RunConfig {
     pub batch: usize,
     /// Artifacts directory (AOT engines only).
     pub artifacts_dir: std::path::PathBuf,
+    /// Assign/accumulate kernel tier request (`auto` resolves to the
+    /// best tier the host supports; see `linalg::kernel`). A non-auto
+    /// value is pinned process-wide by the coordinator engines at
+    /// entry; `auto` defers to `--kernel` / `PARAKM_KERNEL` /
+    /// detection.
+    pub kernel: KernelChoice,
 }
 
 impl Default for RunConfig {
@@ -122,11 +129,22 @@ impl Default for RunConfig {
             chunk: 0, // auto
             batch: 8192,
             artifacts_dir: "artifacts".into(),
+            kernel: KernelChoice::Auto,
         }
     }
 }
 
 impl RunConfig {
+    /// Pin a non-auto kernel tier process-wide. No-op for `Auto`,
+    /// which defers to `--kernel` / `PARAKM_KERNEL` / detection;
+    /// errors if a different tier is already fixed or unsupported.
+    pub fn pin_kernel(&self) -> Result<()> {
+        if self.kernel != KernelChoice::Auto {
+            crate::linalg::kernel::set_active(self.kernel)?;
+        }
+        Ok(())
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.k == 0 {
             return Err(Error::Config("k must be >= 1".into()));
@@ -186,5 +204,13 @@ mod tests {
         // chunk 0 is valid (auto)
         c = RunConfig { chunk: 0, ..Default::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_choice_defaults_to_auto_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.kernel, KernelChoice::Auto);
+        assert_eq!("scalar".parse::<KernelChoice>().unwrap(), KernelChoice::Scalar);
+        assert!("mmx".parse::<KernelChoice>().is_err());
     }
 }

@@ -49,7 +49,7 @@ pub fn device_parallelism() -> f64 {
 /// Run the offload engine (fresh runtime; compilation counts toward
 /// setup).
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> Result<EngineRun> {
-    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::new_or_native(&cfg.artifacts_dir)?;
     run_with(&mut rt, ds, cfg)
 }
 
@@ -57,6 +57,7 @@ pub fn run(ds: &Dataset, cfg: &RunConfig) -> Result<EngineRun> {
 /// across eval/bench sweeps — see `shared::run_with`).
 pub fn run_with(rt: &mut Runtime, ds: &Dataset, cfg: &RunConfig) -> Result<EngineRun> {
     cfg.validate()?;
+    cfg.pin_kernel()?;
     let d = ds.dim();
     let k = cfg.k;
     let n = ds.len();

@@ -53,7 +53,7 @@ pub fn run_opts(
     p: usize,
     policy: MergePolicy,
 ) -> Result<EngineRun> {
-    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::new_or_native(&cfg.artifacts_dir)?;
     run_with(&mut rt, ds, cfg, p, policy)
 }
 
@@ -68,6 +68,7 @@ pub fn run_with(
     policy: MergePolicy,
 ) -> Result<EngineRun> {
     cfg.validate()?;
+    cfg.pin_kernel()?;
     let d = ds.dim();
     let k = cfg.k;
     let n = ds.len();
@@ -249,6 +250,10 @@ pub(crate) fn resolve_chunk_sizes(
 ) -> crate::error::Result<Vec<usize>> {
     if configured != 0 {
         return Ok(vec![configured]);
+    }
+    if rt.is_native_fallback() {
+        // native executor: any chunk executes; offer the standard ladder
+        return Ok(crate::runtime::native::CHUNKS.to_vec());
     }
     let mut sizes: Vec<usize> = rt
         .manifest()

@@ -73,8 +73,8 @@ pub fn calibrate(k: usize, d: usize) -> SyncModel {
     // barrier cost: ping-pong a 2-party barrier (measures wake latency)
     let barrier = std::sync::Barrier::new(2);
     let rounds = 2_000;
-    let t_barrier = crossbeam_utils::thread::scope(|s| {
-        let h = s.spawn(|_| {
+    let t_barrier = std::thread::scope(|s| {
+        let h = s.spawn(|| {
             for _ in 0..rounds {
                 barrier.wait();
             }
@@ -86,8 +86,7 @@ pub fn calibrate(k: usize, d: usize) -> SyncModel {
         let dt = t0.elapsed().as_secs_f64() / rounds as f64;
         h.join().unwrap();
         dt
-    })
-    .unwrap();
+    });
 
     // lock handoff: uncontended mutex lock/unlock (contended handoff is
     // strictly worse; this is the optimistic floor, noted in DESIGN.md)

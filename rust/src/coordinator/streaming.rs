@@ -112,13 +112,14 @@ fn spawn_reader(
 /// pass (reservoir sampling), matching the paper's random-point init
 /// without loading the dataset.
 pub fn run_file(path: &Path, cfg: &RunConfig) -> Result<EngineRun> {
-    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::new_or_native(&cfg.artifacts_dir)?;
     run_file_with(&mut rt, path, cfg)
 }
 
 /// Run against a caller-owned runtime.
 pub fn run_file_with(rt: &mut Runtime, path: &Path, cfg: &RunConfig) -> Result<EngineRun> {
     cfg.validate()?;
+    cfg.pin_kernel()?;
     let info = probe(path)?;
     let (n, d) = (info.n, info.dim);
     let k = cfg.k;

@@ -1,48 +1,87 @@
 //! Crate-wide error type.
 //!
-//! Library modules return [`Result`]; binaries/examples may wrap it in
-//! `anyhow` for context chaining. The XLA runtime variant boxes the
-//! `xla` crate error to keep this enum `Send + Sync`.
-
-use thiserror::Error;
+//! Hand-rolled `Display`/`Error` impls — the offline image ships no
+//! `thiserror`/`anyhow` (DESIGN.md §8). The `Xla` variant is kept for
+//! a future real-PJRT backend; the in-crate native executor
+//! (`runtime::native`) reports through the other variants.
 
 /// All errors produced by parakmeans.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or missing AOT artifact manifest.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// JSON syntax error while parsing (path context in the message).
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// Shape/dimension mismatch between datasets, centroids, artifacts.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid configuration (CLI or programmatic).
-    #[error("invalid config: {0}")]
     Config(String),
 
-    /// Underlying XLA/PJRT failure.
-    #[error("xla runtime: {0}")]
+    /// Underlying XLA/PJRT failure (real-PJRT backend only).
     Xla(String),
 
     /// Dataset / file IO.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// A worker thread panicked or disconnected.
-    #[error("worker failure: {0}")]
     Worker(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Worker(m) => write!(f, "worker failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        assert_eq!(Error::Manifest("x".into()).to_string(), "manifest error: x");
+        assert_eq!(
+            Error::Json { offset: 7, message: "bad".into() }.to_string(),
+            "json parse error at byte 7: bad"
+        );
+        assert_eq!(Error::Config("k".into()).to_string(), "invalid config: k");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

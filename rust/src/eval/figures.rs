@@ -149,7 +149,9 @@ pub fn speedup_efficiency(dim: usize, scale: Scale) -> Result<Vec<ScalingPoint>>
     )?;
     let rows: Vec<Vec<f64>> = points
         .iter()
-        .map(|pt| vec![pt.n as f64, pt.p as f64, pt.t_serial, pt.t_parallel, pt.speedup, pt.efficiency])
+        .map(|pt| {
+            vec![pt.n as f64, pt.p as f64, pt.t_serial, pt.t_parallel, pt.speedup, pt.efficiency]
+        })
         .collect();
     crate::util::csv::write_table(
         &dir.join(format!("speedup_efficiency_{dim}d.csv")),

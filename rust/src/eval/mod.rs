@@ -92,7 +92,7 @@ pub fn with_runtime<T>(
             None => true,
         };
         if rebuild {
-            *slot = Some((dir.to_path_buf(), crate::runtime::Runtime::new(dir)?));
+            *slot = Some((dir.to_path_buf(), crate::runtime::Runtime::new_or_native(dir)?));
         }
         let (_, rt) = slot.as_mut().expect("just initialized");
         f(rt)

@@ -21,6 +21,14 @@ pub fn generate(results_dir: &Path) -> Result<String> {
         "Generated from the CSVs in `{}`. Shape checks follow DESIGN.md §5.\n",
         results_dir.display()
     );
+    let _ = writeln!(
+        out,
+        "Hot path: `linalg::kernel` tier **{}** (detected: {}) in this reporting \
+         process — per-experiment tiers are whatever was active when each CSV was \
+         produced.\n",
+        crate::linalg::kernel::active_tier(),
+        crate::linalg::kernel::detect()
+    );
 
     table1(results_dir, &mut out);
     thread_tables(results_dir, &mut out);
@@ -253,6 +261,7 @@ mod tests {
         .unwrap();
         let report = generate(&dir).unwrap();
         assert!(report.contains("# parakmeans — evaluation report"));
+        assert!(report.contains("Hot path: `linalg::kernel` tier"));
         assert!(report.contains("## Table 1"));
         assert!(report.contains("✔ **time grows with K"));
         // missing experiments noted, not fatal

@@ -41,7 +41,13 @@ pub fn table1(scale: Scale) -> Result<Vec<Cell>> {
         for k in workloads::TABLE1_KS {
             let t = run_engine(Engine::Serial, &ds, k, 1, 42)?;
             row.push(tables::secs(t.secs));
-            cells.push(Cell { n, param: k, secs: t.secs, raw_secs: t.raw_secs, iterations: t.iterations });
+            cells.push(Cell {
+                n,
+                param: k,
+                secs: t.secs,
+                raw_secs: t.raw_secs,
+                iterations: t.iterations,
+            });
         }
         printed.push(row);
     }
@@ -78,7 +84,13 @@ fn thread_table(
         for p in workloads::THREADS {
             let t = run_engine(Engine::Shared, &ds, k, p, 42)?;
             row.push(tables::secs(t.secs));
-            cells.push(Cell { n, param: p, secs: t.secs, raw_secs: t.raw_secs, iterations: t.iterations });
+            cells.push(Cell {
+                n,
+                param: p,
+                secs: t.secs,
+                raw_secs: t.raw_secs,
+                iterations: t.iterations,
+            });
         }
         printed.push(row);
     }
@@ -136,7 +148,13 @@ fn offload_table(
         let ds = paper_dataset(dim, n);
         let t = run_engine(Engine::Offload, &ds, k, 1, 42)?;
         printed.push(vec![n.to_string(), tables::secs(t.secs)]);
-        cells.push(Cell { n, param: 0, secs: t.secs, raw_secs: t.raw_secs, iterations: t.iterations });
+        cells.push(Cell {
+            n,
+            param: 0,
+            secs: t.secs,
+            raw_secs: t.raw_secs,
+            iterations: t.iterations,
+        });
     }
     let rendered = tables::render(title, &["N", "Time Taken"], &printed);
     println!("{rendered}");

@@ -51,7 +51,7 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         let mut best: Option<KmeansResult> = None;
         for t in 0..trials {
             let sub_cfg = KmeansConfig::new(2)
-                .with_seed(cfg.seed ^ (0xB15EC + t as u64 + (members.len() as u64) << 8))
+                .with_seed(cfg.seed ^ ((0xB15EC + t as u64 + members.len() as u64) << 8))
                 .with_tol(cfg.tol)
                 .with_max_iters(cfg.max_iters);
             let r = serial::run(&sub, &sub_cfg);

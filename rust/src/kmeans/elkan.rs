@@ -22,6 +22,7 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
+    assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
     let mut mu = centroids0.to_vec();
 
@@ -32,13 +33,16 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut counts = vec![0u64; k];
     let mut stats = PartialStats::zeros(k, d);
 
-    // initial exact assignment, seeding all bounds
+    // initial exact assignment, seeding all bounds: the dense n×k
+    // distance matrix comes from the SIMD kernel subsystem, then the
+    // (data-dependent) bound seeding stays scalar
+    linalg::kernel::sqdist_matrix(ds.raw(), d, &mu, k, &mut lower, linalg::kernel::active_tier());
     for i in 0..n {
         let p = ds.point(i);
         let mut best = 0usize;
         let mut best_d = f32::INFINITY;
         for c in 0..k {
-            let dist = linalg::sqdist(p, &mu[c * d..(c + 1) * d]).sqrt();
+            let dist = lower[i * k + c].sqrt();
             lower[i * k + c] = dist;
             if dist < best_d {
                 best_d = dist;

@@ -26,6 +26,7 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
+    assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
     let mut mu = centroids0.to_vec();
 
@@ -36,13 +37,23 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut sums = vec![0.0f64; k * d]; // running per-cluster sums
     let mut counts = vec![0u64; k];
 
-    // initial full assignment pass, seeding bounds and running sums
+    // initial full assignment pass, seeding bounds and running sums —
+    // the two-nearest scan runs on the SIMD kernel subsystem
+    linalg::kernel::assign_two_nearest(
+        ds.raw(),
+        d,
+        &mu,
+        k,
+        &mut assign,
+        &mut upper,
+        &mut lower,
+        linalg::kernel::active_tier(),
+    );
     for i in 0..n {
         let p = ds.point(i);
-        let (best, d1, d2) = two_nearest(p, &mu, k, d);
-        assign[i] = best as i32;
-        upper[i] = d1.sqrt();
-        lower[i] = d2.sqrt();
+        let best = assign[i] as usize;
+        upper[i] = upper[i].sqrt();
+        lower[i] = lower[i].sqrt();
         counts[best] += 1;
         for j in 0..d {
             sums[best * d + j] += p[j] as f64;

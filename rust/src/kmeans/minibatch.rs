@@ -33,6 +33,7 @@ pub fn run_from(
     let d = ds.dim();
     let k = cfg.k;
     let b = batch.max(1).min(n);
+    assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
     let mut mu = centroids0.to_vec();
     let mut rng = Pcg64::new(cfg.seed ^ 0xBA7C4, 0x31);
@@ -52,7 +53,8 @@ pub fn run_from(
             let src = rng.next_below(n as u64) as usize;
             batch_rows[bi * d..(bi + 1) * d].copy_from_slice(ds.point(src));
         }
-        assign_accumulate(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats);
+        assign_accumulate(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats)
+            .expect("shapes validated above");
 
         // per-centroid gradient step toward the batch mean
         let mut shift = 0.0f64;
@@ -86,7 +88,8 @@ pub fn run_from(
     // final full assignment pass for a comparable result/objective
     let mut assign = vec![-1i32; n];
     let mut full_stats = PartialStats::zeros(k, d);
-    assign_accumulate(ds.raw(), d, &mu, k, &mut assign, &mut full_stats);
+    assign_accumulate(ds.raw(), d, &mu, k, &mut assign, &mut full_stats)
+        .expect("shapes validated above");
     let sse = full_stats.sse;
     let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
     KmeansResult {

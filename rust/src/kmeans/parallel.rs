@@ -59,6 +59,7 @@ pub fn run_from(
     let p = threads.max(1).min(ds.len().max(1));
     let k = cfg.k;
     let d = ds.dim();
+    assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d, "bad initial centroids");
 
     let ranges = ds.shard_ranges(p);
@@ -86,7 +87,7 @@ pub fn run_from(
     let mut converged = false;
     let mut iterations = 0usize;
 
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         // ---- workers: spawned once, live across all iterations --------
         for (wid, shard) in assign_shards.into_iter().enumerate() {
             let (lo, hi) = ranges[wid];
@@ -96,7 +97,7 @@ pub fn run_from(
             let global = &global;
             let barrier = &barrier;
             let done = &done;
-            scope.spawn(move |_| {
+            scope.spawn(move || {
                 let mut local = PartialStats::zeros(k, d);
                 loop {
                     barrier.wait(); // (A) leader published centroids/done
@@ -104,7 +105,8 @@ pub fn run_from(
                         break;
                     }
                     let mu = centroids.read().unwrap().clone();
-                    assign_accumulate(rows, d, &mu, k, shard, &mut local);
+                    assign_accumulate(rows, d, &mu, k, shard, &mut local)
+                        .expect("shapes validated at run_from entry");
                     match merge {
                         MergeMode::Leader => {
                             *slots[wid].lock().unwrap() = local.clone();
@@ -150,8 +152,7 @@ pub fn run_from(
         }
         done.store(true, Ordering::Release);
         barrier.wait(); // release workers into the exit branch
-    })
-    .expect("worker thread panicked");
+    });
 
     let final_centroids = centroids.into_inner().unwrap();
     let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));

@@ -19,6 +19,7 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
 pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansResult {
     let k = cfg.k;
     let d = ds.dim();
+    assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d, "bad initial centroids");
     let mut centroids = centroids0.to_vec();
     let mut assign = vec![-1i32; ds.len()];
@@ -28,7 +29,8 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut iterations = 0;
 
     for _ in 0..cfg.max_iters {
-        let (mu_new, shift, sse) = lloyd_iteration(ds, &centroids, k, &mut assign, &mut stats);
+        let (mu_new, shift, sse) = lloyd_iteration(ds, &centroids, k, &mut assign, &mut stats)
+            .expect("shapes validated above");
         centroids = mu_new;
         iterations += 1;
         history.push((sse, shift));

@@ -3,13 +3,17 @@
 //!
 //! [`assign_accumulate`] fuses the reassignment step with local
 //! statistic accumulation (one pass over the rows), exactly the loop
-//! each of the paper's OpenMP threads runs on its shard. The inner loop
-//! is monomorphized per dimension (`D = 2, 3`) so the distance
-//! computation fully unrolls; other dims fall back to a generic loop.
-//! Sums accumulate in f64: at N = 1M, f32 accumulation loses enough
-//! precision to perturb centroids between engines.
+//! each of the paper's OpenMP threads runs on its shard. Since the
+//! kernel-subsystem rework it is a thin facade over
+//! [`crate::linalg::kernel`]: a blocked, SIMD-accelerated (AVX2/NEON
+//! with scalar fallback) implementation selected once per process —
+//! every engine, pure-rust or coordinator-driven, shares that one hot
+//! path. Sums accumulate in f64: at N = 1M, f32 accumulation loses
+//! enough precision to perturb centroids between engines.
 
 use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::kernel;
 
 /// Per-shard accumulation buffers (one per thread — the paper's "local
 /// cluster means" — merged by the leader).
@@ -53,8 +57,11 @@ impl PartialStats {
 /// centroid, writing assignments into `assign_out` and accumulating
 /// sums/counts/SSE into `stats` (which is reset first).
 ///
-/// `row_offset` is the global index of `rows[0]` — only used to address
-/// `assign_out`, which is the *global* assignment buffer.
+/// Thin facade over [`crate::linalg::kernel::assign_accumulate`] on the
+/// process-global tier ([`crate::linalg::kernel::active_tier`]).
+///
+/// Errors with [`Error::Config`] when `k == 0` (there is no nearest
+/// centroid to index) and [`Error::Shape`] on dimension mismatches.
 pub fn assign_accumulate(
     rows: &[f32],
     dim: usize,
@@ -62,78 +69,48 @@ pub fn assign_accumulate(
     k: usize,
     assign_out: &mut [i32],
     stats: &mut PartialStats,
-) {
-    debug_assert_eq!(rows.len() % dim, 0);
-    debug_assert_eq!(centroids.len(), k * dim);
-    debug_assert_eq!(assign_out.len() * dim, rows.len());
+) -> Result<()> {
+    if k == 0 {
+        return Err(Error::Config("assign_accumulate: k must be >= 1".into()));
+    }
+    if dim == 0 || rows.len() % dim != 0 {
+        return Err(Error::Shape(format!(
+            "assign_accumulate: rows len {} not divisible by dim {dim}",
+            rows.len()
+        )));
+    }
+    if centroids.len() != k * dim {
+        return Err(Error::Shape(format!(
+            "assign_accumulate: centroids len {} != k {k} × dim {dim}",
+            centroids.len()
+        )));
+    }
+    if assign_out.len() * dim != rows.len() {
+        return Err(Error::Shape(format!(
+            "assign_accumulate: assign buffer {} != rows {}",
+            assign_out.len(),
+            rows.len() / dim
+        )));
+    }
+    if stats.k != k || stats.dim != dim {
+        return Err(Error::Shape(format!(
+            "assign_accumulate: stats shaped {}×{}, expected {k}×{dim}",
+            stats.k, stats.dim
+        )));
+    }
     stats.reset();
-    match dim {
-        2 => assign_rows::<2>(rows, centroids, k, assign_out, stats),
-        3 => assign_rows::<3>(rows, centroids, k, assign_out, stats),
-        _ => assign_rows_generic(rows, dim, centroids, k, assign_out, stats),
-    }
-}
-
-/// Monomorphized hot loop: D known at compile time, distance unrolled.
-fn assign_rows<const D: usize>(
-    rows: &[f32],
-    centroids: &[f32],
-    k: usize,
-    assign_out: &mut [i32],
-    stats: &mut PartialStats,
-) {
-    let n = rows.len() / D;
-    for i in 0..n {
-        let p: &[f32; D] = rows[i * D..(i + 1) * D].try_into().unwrap();
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for c in 0..k {
-            let mu = &centroids[c * D..(c + 1) * D];
-            let mut d2 = 0.0f32;
-            for j in 0..D {
-                let diff = p[j] - mu[j];
-                d2 += diff * diff;
-            }
-            if d2 < best_d {
-                best_d = d2;
-                best = c;
-            }
-        }
-        assign_out[i] = best as i32;
-        stats.counts[best] += 1;
-        stats.sse += best_d as f64;
-        let s = &mut stats.sums[best * D..(best + 1) * D];
-        for j in 0..D {
-            s[j] += p[j] as f64;
-        }
-    }
-}
-
-fn assign_rows_generic(
-    rows: &[f32],
-    dim: usize,
-    centroids: &[f32],
-    k: usize,
-    assign_out: &mut [i32],
-    stats: &mut PartialStats,
-) {
-    let n = rows.len() / dim;
-    for i in 0..n {
-        let p = &rows[i * dim..(i + 1) * dim];
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for c in 0..k {
-            let d2 = crate::linalg::sqdist(p, &centroids[c * dim..(c + 1) * dim]);
-            if d2 < best_d {
-                best_d = d2;
-                best = c;
-            }
-        }
-        assign_out[i] = best as i32;
-        stats.counts[best] += 1;
-        stats.sse += best_d as f64;
-        crate::linalg::add_assign(&mut stats.sums[best * dim..(best + 1) * dim], p);
-    }
+    kernel::assign_accumulate(
+        rows,
+        dim,
+        centroids,
+        k,
+        assign_out,
+        &mut stats.sums,
+        &mut stats.counts,
+        &mut stats.sse,
+        kernel::active_tier(),
+    );
+    Ok(())
 }
 
 /// Mean-recomputation + convergence error: consumes merged stats,
@@ -169,10 +146,10 @@ pub fn lloyd_iteration(
     k: usize,
     assign_out: &mut [i32],
     stats: &mut PartialStats,
-) -> (Vec<f32>, f64, f64) {
-    assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats);
+) -> Result<(Vec<f32>, f64, f64)> {
+    assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats)?;
     let (mu_new, shift) = finalize(stats, centroids);
-    (mu_new, shift, stats.sse)
+    Ok((mu_new, shift, stats.sse))
 }
 
 #[cfg(test)]
@@ -197,7 +174,7 @@ mod tests {
         let (ds, mu) = toy();
         let mut assign = vec![0i32; 4];
         let mut stats = PartialStats::zeros(2, 2);
-        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats).unwrap();
         assert_eq!(assign, vec![0, 0, 1, 1]);
         assert_eq!(stats.counts, vec![2, 2]);
         assert!((stats.sums[0] - 0.2).abs() < 1e-6);
@@ -206,11 +183,35 @@ mod tests {
     }
 
     #[test]
+    fn zero_k_is_config_error_not_panic() {
+        let (ds, _) = toy();
+        let mut assign = vec![0i32; 4];
+        let mut stats = PartialStats::zeros(0, 2);
+        let err = assign_accumulate(ds.raw(), 2, &[], 0, &mut assign, &mut stats).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatches_are_errors() {
+        let (ds, mu) = toy();
+        let mut stats = PartialStats::zeros(2, 2);
+        // short assignment buffer
+        let mut short = vec![0i32; 3];
+        assert!(assign_accumulate(ds.raw(), 2, &mu, 2, &mut short, &mut stats).is_err());
+        // wrong centroid length
+        let mut assign = vec![0i32; 4];
+        assert!(assign_accumulate(ds.raw(), 2, &mu[..3], 2, &mut assign, &mut stats).is_err());
+        // mismatched stats buffer (must error in release builds too)
+        let mut wrong = PartialStats::zeros(1, 2);
+        assert!(assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut wrong).is_err());
+    }
+
+    #[test]
     fn finalize_means_and_shift() {
         let (ds, mu) = toy();
         let mut assign = vec![0i32; 4];
         let mut stats = PartialStats::zeros(2, 2);
-        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats).unwrap();
         let (mu_new, shift) = finalize(&stats, &mu);
         assert!((mu_new[0] - 0.1).abs() < 1e-6);
         assert!((mu_new[2] - 10.1).abs() < 1e-5);
@@ -224,7 +225,7 @@ mod tests {
         let mu = vec![0.0, 0.0, 99.0, 99.0];
         let mut assign = vec![0i32; 1];
         let mut stats = PartialStats::zeros(2, 2);
-        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats);
+        assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats).unwrap();
         let (mu_new, _) = finalize(&stats, &mu);
         assert_eq!(&mu_new[2..4], &[99.0, 99.0]);
     }
@@ -246,34 +247,32 @@ mod tests {
     }
 
     #[test]
-    fn specialized_matches_generic() {
-        // property: the D=2/3 monomorphized loops agree with the
-        // generic loop on identical inputs
-        prop::check("specialized == generic", 32, |g| {
-            let d = *g.choice(&[2usize, 3]);
+    fn facade_matches_reference_scan() {
+        // the facade (whatever tier is active) must agree with a plain
+        // per-point nearest-centroid scan
+        prop::check("facade == reference", 32, |g| {
+            let d = *g.choice(&[2usize, 3, 7]);
             let n = g.usize_in(1, 200);
             let k = g.usize_in(1, 12);
             let rows = g.points(n, d, 10.0);
             let mu = g.points(k, d, 10.0);
-            let mut a1 = vec![0i32; n];
-            let mut a2 = vec![0i32; n];
-            let mut s1 = PartialStats::zeros(k, d);
-            let mut s2 = PartialStats::zeros(k, d);
-            match d {
-                2 => assign_rows::<2>(&rows, &mu, k, &mut a1, &mut s1),
-                3 => assign_rows::<3>(&rows, &mu, k, &mut a1, &mut s1),
-                _ => unreachable!(),
+            let mut assign = vec![0i32; n];
+            let mut stats = PartialStats::zeros(k, d);
+            assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats).unwrap();
+            for i in 0..n {
+                let p = &rows[i * d..(i + 1) * d];
+                let mut best = 0i32;
+                let mut best_d = f32::INFINITY;
+                for c in 0..k {
+                    let dist = crate::linalg::sqdist(p, &mu[c * d..(c + 1) * d]);
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c as i32;
+                    }
+                }
+                prop::ensure(assign[i] == best, format!("point {i} misassigned"))?;
             }
-            assign_rows_generic(&rows, d, &mu, k, &mut a2, &mut s2);
-            prop::ensure(a1 == a2, "assignments differ")?;
-            prop::ensure(s1.counts == s2.counts, "counts differ")?;
-            let close = s1
-                .sums
-                .iter()
-                .zip(&s2.sums)
-                .all(|(x, y)| (x - y).abs() < 1e-9);
-            prop::ensure(close, "sums differ")?;
-            prop::ensure((s1.sse - s2.sse).abs() < 1e-6, "sse differs")
+            Ok(())
         });
     }
 
@@ -281,14 +280,14 @@ mod tests {
     fn stats_invariants_property() {
         // counts sum to n; sums-of-sums equals the column sums of data
         prop::check("partition invariants", 32, |g| {
-            let d = *g.choice(&[2usize, 3]);
+            let d = *g.choice(&[2usize, 3, 17]);
             let n = g.usize_in(1, 300);
             let k = g.usize_in(1, 8);
             let rows = g.points(n, d, 5.0);
             let mu = g.points(k, d, 5.0);
             let mut assign = vec![0i32; n];
             let mut stats = PartialStats::zeros(k, d);
-            assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats);
+            assign_accumulate(&rows, d, &mu, k, &mut assign, &mut stats).unwrap();
             let total: u64 = stats.counts.iter().sum();
             prop::ensure(total == n as u64, format!("counts {total} != n {n}"))?;
             for j in 0..d {
@@ -314,7 +313,7 @@ mod tests {
         let mut stats = PartialStats::zeros(k, d);
         let mut last_sse = f64::INFINITY;
         for _ in 0..10 {
-            let (mu_new, _, sse) = lloyd_iteration(&ds, &mu, k, &mut assign, &mut stats);
+            let (mu_new, _, sse) = lloyd_iteration(&ds, &mu, k, &mut assign, &mut stats).unwrap();
             assert!(sse <= last_sse * (1.0 + 1e-9), "sse increased: {sse} > {last_sse}");
             last_sse = sse;
             mu = mu_new;

@@ -14,9 +14,28 @@
 //! - **Layer 1** — the fused assign+accumulate Pallas kernel
 //!   (`python/compile/kernels/lloyd.py`).
 //!
-//! Python never runs at request time: [`runtime`] loads the AOT
-//! artifacts through the PJRT C API (`xla` crate) and the rust engines
-//! drive them directly.
+//! ## The one hot path
+//!
+//! Every engine's per-iteration cost is the fused assign+accumulate
+//! loop. [`linalg::kernel`] implements it once — blocked (points-tile
+//! × centroid-tile) and SIMD-vectorized with runtime dispatch (AVX2 /
+//! NEON via `std::arch`, portable scalar fallback) — and everything
+//! routes through it:
+//!
+//! - the pure-rust engines via the [`kmeans::step`] facade;
+//! - the coordinator engines and the serving batcher via the
+//!   [`runtime`] executor, which implements the AOT executable
+//!   contract (`stats_partial` / `assign` / `fused_stats` /
+//!   `finalize`, `n_valid` padding semantics) natively on the same
+//!   kernels. With compiled artifacts on disk the manifest is honored
+//!   verbatim; without, a synthetic shape matrix is used so every
+//!   engine runs artifact-free.
+//!
+//! The tier is selected once per process ([`linalg::kernel::active_tier`]),
+//! recorded in [`config::RunConfig`], forceable via `--kernel` /
+//! `PARAKM_KERNEL`, and surfaced by `eval::report`. All tiers produce
+//! bit-identical assignments (property-tested): dispatch changes speed,
+//! never results.
 //!
 //! ## Quickstart
 //!
@@ -29,6 +48,17 @@
 //! let result = kmeans::serial::run(&ds, &cfg);
 //! println!("converged in {} iters, sse={}", result.iterations, result.sse);
 //! ```
+
+// Lint policy: numeric hot-path code indexes flat row-major buffers by
+// design; these pedantic lints fight that idiom and are allowed
+// crate-wide so CI can hold `clippy -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::comparison_chain,
+    clippy::manual_memcpy
+)]
 
 pub mod config;
 pub mod coordinator;

@@ -1,0 +1,851 @@
+//! SIMD-dispatched assign/accumulate kernels — the crate-wide hot path.
+//!
+//! Every engine's per-iteration cost is dominated by one loop: for each
+//! point, the squared distance to every centroid, an argmin, and a
+//! statistics update. This module implements that loop once, blocked
+//! and vectorized, with runtime feature dispatch:
+//!
+//! - **tiling**: points are processed in blocks of [`POINTS_BLOCK`]
+//!   rows, transposed into a `d × POINTS_BLOCK` tile so the inner loop
+//!   vectorizes *across points* for arbitrary `d` (not just the old
+//!   d ∈ {2, 3} monomorphizations). Centroids are walked in blocks of
+//!   [`CENTROID_BLOCK`] so large-`k` models stay cache-resident.
+//! - **dispatch**: AVX2 (x86_64) and NEON (aarch64) tiers via
+//!   `std::arch`, selected once per process by [`active_tier`]; a
+//!   portable scalar tier is always available and is the reference
+//!   implementation.
+//! - **bit-identical results**: the SIMD tiers perform, per point, the
+//!   *same sequence* of f32 operations as the scalar tier (lane-per-
+//!   point layout, mul+add — never FMA — and strict `<` argmin with
+//!   ascending centroid index). Assignments, best distances, and the
+//!   f64-accumulated sums are therefore identical across tiers, which
+//!   the property tests assert exactly.
+//!
+//! See `rust/src/linalg/README.md` for the dispatch/tiling design and
+//! how to force a tier for debugging (`PARAKM_KERNEL`, `--kernel`).
+
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
+
+/// Rows per tile; 64 × 4 bytes per dimension keeps the transposed tile
+/// in L1 for any realistic `d`, and is a multiple of both SIMD widths.
+pub const POINTS_BLOCK: usize = 64;
+
+/// Centroids per inner sweep (cache tile over `k`).
+pub const CENTROID_BLOCK: usize = 32;
+
+/// An implementation tier the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable blocked scalar loop (reference semantics).
+    Scalar,
+    /// 8-lane f32 AVX2 (x86_64).
+    Avx2,
+    /// 4-lane f32 NEON (aarch64).
+    Neon,
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        })
+    }
+}
+
+/// A tier *request* (configuration surface): auto-detect or force one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Pick the best tier the host supports (the default).
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<KernelChoice> {
+        Ok(match s {
+            "auto" => KernelChoice::Auto,
+            "scalar" => KernelChoice::Scalar,
+            "avx2" => KernelChoice::Avx2,
+            "neon" => KernelChoice::Neon,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown kernel tier `{other}` (auto|scalar|avx2|neon)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelChoice::Auto => f.write_str("auto"),
+            KernelChoice::Scalar => f.write_str("scalar"),
+            KernelChoice::Avx2 => f.write_str("avx2"),
+            KernelChoice::Neon => f.write_str("neon"),
+        }
+    }
+}
+
+/// Best tier the running host supports.
+pub fn detect() -> KernelTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelTier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelTier::Neon;
+        }
+    }
+    KernelTier::Scalar
+}
+
+/// Resolve a request against the host, erroring on impossible forces.
+pub fn resolve(choice: KernelChoice) -> Result<KernelTier> {
+    match choice {
+        KernelChoice::Auto => Ok(detect()),
+        KernelChoice::Scalar => Ok(KernelTier::Scalar),
+        KernelChoice::Avx2 => {
+            if detect() == KernelTier::Avx2 {
+                Ok(KernelTier::Avx2)
+            } else {
+                Err(Error::Config("kernel tier avx2 not available on this host".into()))
+            }
+        }
+        KernelChoice::Neon => {
+            if detect() == KernelTier::Neon {
+                Ok(KernelTier::Neon)
+            } else {
+                Err(Error::Config("kernel tier neon not available on this host".into()))
+            }
+        }
+    }
+}
+
+/// Soundness gate for the safe pub entry points: the SIMD paths use
+/// `target_feature` code and raw-pointer loads, so an unsupported tier
+/// (freely constructible — `KernelTier` is a pub enum) must never
+/// reach them from safe code.
+fn assert_tier_supported(tier: KernelTier) {
+    assert!(
+        tier == KernelTier::Scalar || tier == detect(),
+        "kernel tier {tier} not supported on this host (detected: {})",
+        detect()
+    );
+}
+
+static ACTIVE: OnceLock<KernelTier> = OnceLock::new();
+
+/// The process-global tier used by every engine's hot path. Resolved
+/// once: an explicit [`set_active`] call wins, else the
+/// `PARAKM_KERNEL` env var (`auto|scalar|avx2|neon`), else detection.
+///
+/// Panics at first use when `PARAKM_KERNEL` is set to a value that
+/// cannot be parsed or that the host cannot execute — an explicitly
+/// forced tier must never be silently substituted.
+pub fn active_tier() -> KernelTier {
+    *ACTIVE.get_or_init(|| match std::env::var("PARAKM_KERNEL") {
+        Ok(v) => {
+            let choice = v
+                .parse::<KernelChoice>()
+                .unwrap_or_else(|e| panic!("PARAKM_KERNEL: {e}"));
+            resolve(choice).unwrap_or_else(|e| panic!("PARAKM_KERNEL: {e}"))
+        }
+        Err(_) => detect(),
+    })
+}
+
+/// Fix the process-global tier (CLI `--kernel`). Must be called before
+/// the first kernel use; errors if a different tier is already active
+/// or the host cannot satisfy the request.
+pub fn set_active(choice: KernelChoice) -> Result<KernelTier> {
+    let want = resolve(choice)?;
+    let got = *ACTIVE.get_or_init(|| want);
+    if got != want {
+        return Err(Error::Config(format!(
+            "kernel tier already fixed to {got}; cannot switch to {want}"
+        )));
+    }
+    Ok(got)
+}
+
+/// Transposed point tile: `xt[j * POINTS_BLOCK + i]` holds coordinate
+/// `j` of tile row `i`. Lanes past the tile's live row count hold stale
+/// (finite) values and are never read back.
+struct Tile {
+    xt: Vec<f32>,
+    dim: usize,
+}
+
+impl Tile {
+    fn new(dim: usize) -> Tile {
+        Tile { xt: vec![0.0f32; dim * POINTS_BLOCK], dim }
+    }
+
+    /// Load `bn` rows starting at `rows[lo * dim]`.
+    fn load(&mut self, rows: &[f32], lo: usize, bn: usize) {
+        for i in 0..bn {
+            let p = &rows[(lo + i) * self.dim..(lo + i + 1) * self.dim];
+            for (j, &v) in p.iter().enumerate() {
+                self.xt[j * POINTS_BLOCK + i] = v;
+            }
+        }
+    }
+}
+
+/// Fused assign + accumulate over `rows` (row-major, `dim` wide):
+/// nearest-centroid assignment into `assign_out`, per-cluster f64 sums
+/// and counts, and the f64 SSE — one pass, tiled, on the given tier.
+///
+/// The caller owns zeroing/resetting the accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_accumulate(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    sums: &mut [f64],
+    counts: &mut [u64],
+    sse: &mut f64,
+    tier: KernelTier,
+) {
+    // real asserts, not debug: the SIMD tiers read through raw
+    // pointers, so shape violations from safe callers must panic
+    // instead of reading out of bounds (checks are outside the loops)
+    assert_tier_supported(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    assert_eq!(assign_out.len() * dim, rows.len());
+    assert_eq!(sums.len(), k * dim);
+    assert_eq!(counts.len(), k);
+    let n = rows.len() / dim;
+    let mut tile = Tile::new(dim);
+    let mut best_d = [f32::INFINITY; POINTS_BLOCK];
+    let mut best_i = [0i32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        best_d.fill(f32::INFINITY);
+        best_i.fill(0);
+
+        let mut c0 = 0usize;
+        while c0 < k {
+            let c1 = (c0 + CENTROID_BLOCK).min(k);
+            match tier {
+                KernelTier::Scalar => {
+                    argmin_block_scalar(&tile.xt, dim, centroids, c0, c1, &mut best_d, &mut best_i)
+                }
+                #[cfg(target_arch = "x86_64")]
+                // safety: tier == Avx2 only when resolve()/detect()
+                // confirmed AVX2 support on this host
+                KernelTier::Avx2 => unsafe {
+                    x86::argmin_block(&tile.xt, dim, centroids, c0, c1, &mut best_d, &mut best_i)
+                },
+                #[cfg(target_arch = "aarch64")]
+                KernelTier::Neon => unsafe {
+                    arm::argmin_block(&tile.xt, dim, centroids, c0, c1, &mut best_d, &mut best_i)
+                },
+                #[allow(unreachable_patterns)]
+                _ => {
+                    argmin_block_scalar(&tile.xt, dim, centroids, c0, c1, &mut best_d, &mut best_i)
+                }
+            }
+            c0 = c1;
+        }
+
+        // scatter + accumulate in point order (identical across tiers)
+        for i in 0..bn {
+            let c = best_i[i] as usize;
+            assign_out[lo + i] = best_i[i];
+            counts[c] += 1;
+            *sse += best_d[i] as f64;
+            let p = &rows[(lo + i) * dim..(lo + i + 1) * dim];
+            let s = &mut sums[c * dim..(c + 1) * dim];
+            for j in 0..dim {
+                s[j] += p[j] as f64;
+            }
+        }
+        lo += bn;
+    }
+}
+
+/// Nearest-centroid assignment plus the squared distances to the two
+/// nearest centroids (Hamerly-style bound seeding), tiled + SIMD.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_two_nearest(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    d1_out: &mut [f32],
+    d2_out: &mut [f32],
+    tier: KernelTier,
+) {
+    assert_tier_supported(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(assign_out.len(), n);
+    assert_eq!(d1_out.len(), n);
+    assert_eq!(d2_out.len(), n);
+    let mut tile = Tile::new(dim);
+    let mut d1 = [f32::INFINITY; POINTS_BLOCK];
+    let mut d2 = [f32::INFINITY; POINTS_BLOCK];
+    let mut bi = [0i32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        d1.fill(f32::INFINITY);
+        d2.fill(f32::INFINITY);
+        bi.fill(0);
+        match tier {
+            KernelTier::Scalar => {
+                two_nearest_block_scalar(&tile.xt, dim, centroids, k, &mut d1, &mut d2, &mut bi)
+            }
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => unsafe {
+                x86::two_nearest_block(&tile.xt, dim, centroids, k, &mut d1, &mut d2, &mut bi)
+            },
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => unsafe {
+                arm::two_nearest_block(&tile.xt, dim, centroids, k, &mut d1, &mut d2, &mut bi)
+            },
+            #[allow(unreachable_patterns)]
+            _ => two_nearest_block_scalar(&tile.xt, dim, centroids, k, &mut d1, &mut d2, &mut bi),
+        }
+        assign_out[lo..lo + bn].copy_from_slice(&bi[..bn]);
+        d1_out[lo..lo + bn].copy_from_slice(&d1[..bn]);
+        d2_out[lo..lo + bn].copy_from_slice(&d2[..bn]);
+        lo += bn;
+    }
+}
+
+/// Dense squared-distance matrix `out[i * k + c] = ‖rowᵢ − μ_c‖²`
+/// (Elkan-style bound seeding), tiled + SIMD.
+pub fn sqdist_matrix(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    out: &mut [f32],
+    tier: KernelTier,
+) {
+    assert_tier_supported(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(out.len(), n * k);
+    let mut tile = Tile::new(dim);
+    let mut dist = [0.0f32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        for c in 0..k {
+            match tier {
+                KernelTier::Scalar => dist_block_scalar(&tile.xt, dim, centroids, c, &mut dist),
+                #[cfg(target_arch = "x86_64")]
+                KernelTier::Avx2 => unsafe {
+                    x86::dist_block(&tile.xt, dim, centroids, c, &mut dist)
+                },
+                #[cfg(target_arch = "aarch64")]
+                KernelTier::Neon => unsafe {
+                    arm::dist_block(&tile.xt, dim, centroids, c, &mut dist)
+                },
+                #[allow(unreachable_patterns)]
+                _ => dist_block_scalar(&tile.xt, dim, centroids, c, &mut dist),
+            }
+            for i in 0..bn {
+                out[(lo + i) * k + c] = dist[i];
+            }
+        }
+        lo += bn;
+    }
+}
+
+// ---- scalar tier (reference semantics for every other tier) ------------
+
+fn argmin_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    c0: usize,
+    c1: usize,
+    best_d: &mut [f32; POINTS_BLOCK],
+    best_i: &mut [i32; POINTS_BLOCK],
+) {
+    for c in c0..c1 {
+        let muc = &mu[c * dim..(c + 1) * dim];
+        for i in 0..POINTS_BLOCK {
+            let mut acc = 0.0f32;
+            for (j, &m) in muc.iter().enumerate() {
+                let diff = xt[j * POINTS_BLOCK + i] - m;
+                acc += diff * diff;
+            }
+            if acc < best_d[i] {
+                best_d[i] = acc;
+                best_i[i] = c as i32;
+            }
+        }
+    }
+}
+
+fn two_nearest_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    k: usize,
+    d1: &mut [f32; POINTS_BLOCK],
+    d2: &mut [f32; POINTS_BLOCK],
+    bi: &mut [i32; POINTS_BLOCK],
+) {
+    for c in 0..k {
+        let muc = &mu[c * dim..(c + 1) * dim];
+        for i in 0..POINTS_BLOCK {
+            let mut acc = 0.0f32;
+            for (j, &m) in muc.iter().enumerate() {
+                let diff = xt[j * POINTS_BLOCK + i] - m;
+                acc += diff * diff;
+            }
+            if acc < d1[i] {
+                d2[i] = d1[i];
+                d1[i] = acc;
+                bi[i] = c as i32;
+            } else if acc < d2[i] {
+                d2[i] = acc;
+            }
+        }
+    }
+}
+
+fn dist_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    c: usize,
+    dist: &mut [f32; POINTS_BLOCK],
+) {
+    let muc = &mu[c * dim..(c + 1) * dim];
+    for i in 0..POINTS_BLOCK {
+        let mut acc = 0.0f32;
+        for (j, &m) in muc.iter().enumerate() {
+            let diff = xt[j * POINTS_BLOCK + i] - m;
+            acc += diff * diff;
+        }
+        dist[i] = acc;
+    }
+}
+
+// ---- AVX2 tier (x86_64) ------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::POINTS_BLOCK;
+    use std::arch::x86_64::*;
+
+    const L: usize = 8;
+
+    /// Distance of one 8-point sub-column to centroid `muc`, mul+add
+    /// in ascending-`j` order — the scalar tier's exact f32 sequence.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn sqdist8(xt: &[f32], sub: usize, muc: *const f32, dim: usize) -> __m256 {
+        let mut acc = _mm256_setzero_ps();
+        for j in 0..dim {
+            let xv = _mm256_loadu_ps(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+            let mv = _mm256_set1_ps(*muc.add(j));
+            let diff = _mm256_sub_ps(xv, mv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(diff, diff));
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn argmin_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c0: usize,
+        c1: usize,
+        best_d: &mut [f32; POINTS_BLOCK],
+        best_i: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let mut bd = _mm256_loadu_ps(best_d.as_ptr().add(sub * L));
+            let mut bi = _mm256_loadu_si256(best_i.as_ptr().add(sub * L) as *const __m256i);
+            for c in c0..c1 {
+                let acc = sqdist8(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(acc, bd);
+                bd = _mm256_blendv_ps(bd, acc, lt);
+                let ci = _mm256_set1_epi32(c as i32);
+                bi = _mm256_blendv_epi8(bi, ci, _mm256_castps_si256(lt));
+            }
+            _mm256_storeu_ps(best_d.as_mut_ptr().add(sub * L), bd);
+            _mm256_storeu_si256(best_i.as_mut_ptr().add(sub * L) as *mut __m256i, bi);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn two_nearest_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        k: usize,
+        d1: &mut [f32; POINTS_BLOCK],
+        d2: &mut [f32; POINTS_BLOCK],
+        bi: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let mut v1 = _mm256_loadu_ps(d1.as_ptr().add(sub * L));
+            let mut v2 = _mm256_loadu_ps(d2.as_ptr().add(sub * L));
+            let mut vi = _mm256_loadu_si256(bi.as_ptr().add(sub * L) as *const __m256i);
+            for c in 0..k {
+                let acc = sqdist8(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let lt1 = _mm256_cmp_ps::<_CMP_LT_OQ>(acc, v1);
+                let lt2 = _mm256_cmp_ps::<_CMP_LT_OQ>(acc, v2);
+                // d2' = acc<d1 ? d1 : (acc<d2 ? acc : d2)
+                v2 = _mm256_blendv_ps(_mm256_blendv_ps(v2, acc, lt2), v1, lt1);
+                v1 = _mm256_blendv_ps(v1, acc, lt1);
+                let ci = _mm256_set1_epi32(c as i32);
+                vi = _mm256_blendv_epi8(vi, ci, _mm256_castps_si256(lt1));
+            }
+            _mm256_storeu_ps(d1.as_mut_ptr().add(sub * L), v1);
+            _mm256_storeu_ps(d2.as_mut_ptr().add(sub * L), v2);
+            _mm256_storeu_si256(bi.as_mut_ptr().add(sub * L) as *mut __m256i, vi);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dist_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c: usize,
+        dist: &mut [f32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let acc = sqdist8(xt, sub, mu.as_ptr().add(c * dim), dim);
+            _mm256_storeu_ps(dist.as_mut_ptr().add(sub * L), acc);
+        }
+    }
+}
+
+// ---- NEON tier (aarch64) -----------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::POINTS_BLOCK;
+    use std::arch::aarch64::*;
+
+    const L: usize = 4;
+
+    /// Scalar-identical mul+add chain (vmlaq would fuse; see module docs).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn sqdist4(xt: &[f32], sub: usize, muc: *const f32, dim: usize) -> float32x4_t {
+        let mut acc = vdupq_n_f32(0.0);
+        for j in 0..dim {
+            let xv = vld1q_f32(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+            let mv = vdupq_n_f32(*muc.add(j));
+            let diff = vsubq_f32(xv, mv);
+            acc = vaddq_f32(acc, vmulq_f32(diff, diff));
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn argmin_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c0: usize,
+        c1: usize,
+        best_d: &mut [f32; POINTS_BLOCK],
+        best_i: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let mut bd = vld1q_f32(best_d.as_ptr().add(sub * L));
+            let mut bi = vld1q_s32(best_i.as_ptr().add(sub * L));
+            for c in c0..c1 {
+                let acc = sqdist4(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let lt = vcltq_f32(acc, bd);
+                bd = vbslq_f32(lt, acc, bd);
+                bi = vbslq_s32(lt, vdupq_n_s32(c as i32), bi);
+            }
+            vst1q_f32(best_d.as_mut_ptr().add(sub * L), bd);
+            vst1q_s32(best_i.as_mut_ptr().add(sub * L), bi);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn two_nearest_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        k: usize,
+        d1: &mut [f32; POINTS_BLOCK],
+        d2: &mut [f32; POINTS_BLOCK],
+        bi: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let mut v1 = vld1q_f32(d1.as_ptr().add(sub * L));
+            let mut v2 = vld1q_f32(d2.as_ptr().add(sub * L));
+            let mut vi = vld1q_s32(bi.as_ptr().add(sub * L));
+            for c in 0..k {
+                let acc = sqdist4(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let lt1 = vcltq_f32(acc, v1);
+                let lt2 = vcltq_f32(acc, v2);
+                v2 = vbslq_f32(lt1, v1, vbslq_f32(lt2, acc, v2));
+                v1 = vbslq_f32(lt1, acc, v1);
+                vi = vbslq_s32(lt1, vdupq_n_s32(c as i32), vi);
+            }
+            vst1q_f32(d1.as_mut_ptr().add(sub * L), v1);
+            vst1q_f32(d2.as_mut_ptr().add(sub * L), v2);
+            vst1q_s32(bi.as_mut_ptr().add(sub * L), vi);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dist_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c: usize,
+        dist: &mut [f32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let acc = sqdist4(xt, sub, mu.as_ptr().add(c * dim), dim);
+            vst1q_f32(dist.as_mut_ptr().add(sub * L), acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    /// Every tier available on this host, scalar first.
+    fn tiers() -> Vec<KernelTier> {
+        let mut t = vec![KernelTier::Scalar];
+        if detect() != KernelTier::Scalar {
+            t.push(detect());
+        }
+        t
+    }
+
+    fn run_aa(
+        rows: &[f32],
+        dim: usize,
+        mu: &[f32],
+        k: usize,
+        tier: KernelTier,
+    ) -> (Vec<i32>, Vec<f64>, Vec<u64>, f64) {
+        let n = rows.len() / dim;
+        let mut assign = vec![-1i32; n];
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0u64; k];
+        let mut sse = 0.0f64;
+        assign_accumulate(rows, dim, mu, k, &mut assign, &mut sums, &mut counts, &mut sse, tier);
+        (assign, sums, counts, sse)
+    }
+
+    fn ulp_close(a: f64, b: f64) -> bool {
+        if a == b {
+            return true;
+        }
+        let (ba, bb) = (a.to_bits() as i64, b.to_bits() as i64);
+        (ba - bb).abs() <= 1
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for c in [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Avx2, KernelChoice::Neon]
+        {
+            assert_eq!(c.to_string().parse::<KernelChoice>().unwrap(), c);
+        }
+        assert!("sse9".parse::<KernelChoice>().is_err());
+        assert_eq!(resolve(KernelChoice::Scalar).unwrap(), KernelTier::Scalar);
+        assert_eq!(resolve(KernelChoice::Auto).unwrap(), detect());
+    }
+
+    #[test]
+    fn forcing_an_unsupported_tier_errors() {
+        // at most one SIMD tier exists per host; the other must error
+        let bad = match detect() {
+            KernelTier::Avx2 => KernelChoice::Neon,
+            _ => KernelChoice::Avx2,
+        };
+        if resolve(bad).is_ok() {
+            // (only possible if detect() returned the requested tier)
+            return;
+        }
+        assert!(resolve(bad).is_err());
+    }
+
+    #[test]
+    fn assigns_nearest_basic() {
+        let rows = vec![0.0, 0.0, 0.2, 0.0, 10.0, 0.0, 10.2, 0.0];
+        let mu = vec![0.0, 0.0, 10.0, 0.0];
+        for tier in tiers() {
+            let (assign, sums, counts, sse) = run_aa(&rows, 2, &mu, 2, tier);
+            assert_eq!(assign, vec![0, 0, 1, 1], "{tier}");
+            assert_eq!(counts, vec![2, 2]);
+            assert!((sums[0] - 0.2).abs() < 1e-6);
+            assert!((sums[2] - 20.2).abs() < 1e-5);
+            assert!((sse - 0.08).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tiers_bit_identical_property() {
+        // assignments identical; f64 sums within 1 ulp (in practice
+        // bit-identical: the SIMD lanes replay the scalar op sequence)
+        prop::check("simd == scalar", 24, |g| {
+            let d = *g.choice(&[1usize, 2, 3, 5, 8, 16, 17, 32]);
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 40);
+            let rows = g.points(n, d, 15.0);
+            let mu = g.points(k, d, 15.0);
+            let (a0, s0, c0, e0) = run_aa(&rows, d, &mu, k, KernelTier::Scalar);
+            for tier in tiers() {
+                let (a, s, c, e) = run_aa(&rows, d, &mu, k, tier);
+                prop::ensure(a == a0, format!("{tier}: assignments differ"))?;
+                prop::ensure(c == c0, format!("{tier}: counts differ"))?;
+                let sums_ok = s.iter().zip(&s0).all(|(x, y)| ulp_close(*x, *y));
+                prop::ensure(sums_ok, format!("{tier}: sums differ by > 1 ulp"))?;
+                prop::ensure(ulp_close(e, e0), format!("{tier}: sse differs"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn d17_non_lane_multiple_edge_case() {
+        // d = 17 exercises the any-d transposed-tile path (no lane
+        // remainder handling exists along d by construction)
+        let mut g = prop::Gen::new(0xD17);
+        let (n, k, d) = (131, 7, 17);
+        let rows = g.points(n, d, 8.0);
+        let mu = g.points(k, d, 8.0);
+        let (a0, s0, c0, e0) = run_aa(&rows, d, &mu, k, KernelTier::Scalar);
+        // reference: plain per-point sqdist scan
+        for i in 0..n {
+            let p = &rows[i * d..(i + 1) * d];
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dist = crate::linalg::sqdist(p, &mu[c * d..(c + 1) * d]);
+                if dist < best_d {
+                    best_d = dist;
+                    best = c as i32;
+                }
+            }
+            assert_eq!(a0[i], best, "point {i}");
+        }
+        for tier in tiers() {
+            let (a, s, c, e) = run_aa(&rows, d, &mu, k, tier);
+            assert_eq!(a, a0, "{tier}");
+            assert_eq!(c, c0, "{tier}");
+            assert!(s.iter().zip(&s0).all(|(x, y)| ulp_close(*x, *y)), "{tier}");
+            assert!(ulp_close(e, e0), "{tier}");
+        }
+    }
+
+    #[test]
+    fn paper_datasets_bit_identical_across_tiers() {
+        // acceptance: identical assignments on the paper's 2D/3D GMM
+        // families, every available tier vs scalar
+        for (dim, k) in [(2usize, 8usize), (3, 4)] {
+            let spec = if dim == 2 {
+                crate::data::MixtureSpec::paper_2d(k)
+            } else {
+                crate::data::MixtureSpec::paper_3d(k)
+            };
+            let ds = spec.generate(20_003, 42); // ragged tail block
+            let mu: Vec<f32> = ds.rows(0, k).to_vec();
+            let (a0, ..) = run_aa(ds.raw(), dim, &mu, k, KernelTier::Scalar);
+            for tier in tiers() {
+                let (a, ..) = run_aa(ds.raw(), dim, &mu, k, tier);
+                assert_eq!(a, a0, "tier {tier} diverged on paper {dim}D");
+            }
+        }
+    }
+
+    #[test]
+    fn two_nearest_matches_scalar_scan() {
+        prop::check("two-nearest == reference", 16, |g| {
+            let d = *g.choice(&[2usize, 3, 9, 17]);
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(2, 12);
+            let rows = g.points(n, d, 10.0);
+            let mu = g.points(k, d, 10.0);
+            for tier in tiers() {
+                let mut assign = vec![0i32; n];
+                let mut d1 = vec![0.0f32; n];
+                let mut d2 = vec![0.0f32; n];
+                assign_two_nearest(&rows, d, &mu, k, &mut assign, &mut d1, &mut d2, tier);
+                for i in 0..n {
+                    let p = &rows[i * d..(i + 1) * d];
+                    let (mut best, mut r1, mut r2) = (0i32, f32::INFINITY, f32::INFINITY);
+                    for c in 0..k {
+                        let dist = crate::linalg::sqdist(p, &mu[c * d..(c + 1) * d]);
+                        if dist < r1 {
+                            r2 = r1;
+                            r1 = dist;
+                            best = c as i32;
+                        } else if dist < r2 {
+                            r2 = dist;
+                        }
+                    }
+                    prop::ensure(assign[i] == best, format!("{tier}: argmin point {i}"))?;
+                    prop::ensure(d1[i] == r1, format!("{tier}: d1 point {i}"))?;
+                    prop::ensure(d2[i] == r2, format!("{tier}: d2 point {i}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqdist_matrix_matches_pointwise() {
+        let mut g = prop::Gen::new(7);
+        let (n, k, d) = (97, 6, 5);
+        let rows = g.points(n, d, 4.0);
+        let mu = g.points(k, d, 4.0);
+        for tier in tiers() {
+            let mut out = vec![0.0f32; n * k];
+            sqdist_matrix(&rows, d, &mu, k, &mut out, tier);
+            for i in 0..n {
+                for c in 0..k {
+                    let want =
+                        crate::linalg::sqdist(&rows[i * d..(i + 1) * d], &mu[c * d..(c + 1) * d]);
+                    assert_eq!(out[i * k + c], want, "{tier} ({i},{c})");
+                }
+            }
+        }
+    }
+}

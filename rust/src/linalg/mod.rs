@@ -1,7 +1,12 @@
-//! Small dense linear-algebra helpers shared by the generators,
-//! baselines and metrics. Everything operates on row-major `f32`/`f64`
-//! slices; dimensions here are tiny (d ≤ a few dozen), so clarity wins
-//! over blocking.
+//! Dense linear-algebra helpers plus the SIMD-dispatched assign/
+//! accumulate kernel subsystem ([`kernel`]).
+//!
+//! The scalar helpers below operate on row-major `f32`/`f64` slices
+//! and favor clarity; the [`kernel`] module is the blocked, runtime-
+//! dispatched (AVX2/NEON/scalar) hot path every engine shares — see
+//! `rust/src/linalg/README.md` for the design.
+
+pub mod kernel;
 
 /// Squared L2 distance between two d-vectors.
 #[inline(always)]

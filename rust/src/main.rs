@@ -9,41 +9,61 @@
 //! Examples:
 //!   parakm gen-data --dim 3 --n 100000 --out data/d3_100k.pkd
 //!   parakm run --input data/d3_100k.pkd --engine shared --k 4 --threads 8
-//!   parakm run --synthetic 3d:200000 --engine offload --k 4
+//!   parakm run --synthetic 3d:200000 --engine offload --k 4 --kernel scalar
 //!   parakm eval --exp t3 --scale smoke
 //!   parakm info
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Context};
 use parakmeans::config::{Engine, Init, RunConfig};
 use parakmeans::coordinator::{offload, shared};
 use parakmeans::data::{gmm::MixtureSpec, io, Dataset};
+use parakmeans::error::{Error, Result};
 use parakmeans::eval::{self, Scale};
 use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::linalg::kernel::{self, KernelChoice};
 use parakmeans::metrics;
 use parakmeans::util::args::Args;
+
+/// `anyhow::Context` stand-in (no third-party crates offline).
+trait OrConfig<T> {
+    fn or_config(self, msg: &str) -> Result<T>;
+}
+
+impl<T> OrConfig<T> for Option<T> {
+    fn or_config(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| Error::Config(msg.to_string()))
+    }
+}
+
+impl<T, E: std::fmt::Display> OrConfig<T> for std::result::Result<T, E> {
+    fn or_config(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error::Config(format!("{msg}: {e}")))
+    }
+}
 
 fn main() {
     let args = Args::from_env();
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             2
         }
     };
     std::process::exit(code);
 }
 
-fn dispatch(args: &Args) -> anyhow::Result<()> {
+fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("gen-data") => cmd_gen_data(args),
         Some("run") => cmd_run(args),
         Some("eval") => cmd_eval(args),
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(args),
-        Some(other) => bail!("unknown subcommand `{other}` (gen-data|run|eval|serve|info)"),
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand `{other}` (gen-data|run|eval|serve|info)"
+        ))),
         None => {
             print_usage();
             Ok(())
@@ -62,6 +82,7 @@ fn print_usage() {
          \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming\n\
          \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
          \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
+         \u{20}          [--kernel auto|scalar|avx2|neon]\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
          serve     --input <file> | --synthetic <2d|3d>:<N>  --k K [--addr HOST:PORT]\n\
          \u{20}          [--max-batch B] [--max-delay-ms T] [--artifacts DIR]\n\
@@ -69,10 +90,10 @@ fn print_usage() {
     );
 }
 
-fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+fn cmd_gen_data(args: &Args) -> Result<()> {
     let dim: usize = args.require("dim")?;
     let n: usize = args.require("n")?;
-    let out: PathBuf = PathBuf::from(args.get("out").context("missing --out")?.to_string());
+    let out: PathBuf = PathBuf::from(args.get("out").or_config("missing --out")?.to_string());
     let seed: u64 = args.get_or("seed", 42)?;
     let components: usize = args.get_or("components", if dim == 2 { 8 } else { 4 })?;
     args.finish()?;
@@ -95,7 +116,7 @@ fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn load_input(args: &Args) -> anyhow::Result<Dataset> {
+fn load_input(args: &Args) -> Result<Dataset> {
     if let Some(path) = args.get("input") {
         let p = PathBuf::from(path);
         let ds = match p.extension().and_then(|e| e.to_str()) {
@@ -107,19 +128,21 @@ fn load_input(args: &Args) -> anyhow::Result<Dataset> {
     if let Some(spec) = args.get("synthetic") {
         let (dim_s, n_s) = spec
             .split_once(':')
-            .context("--synthetic expects <2d|3d>:<N>")?;
+            .or_config("--synthetic expects <2d|3d>:<N>")?;
         let dim = match dim_s {
             "2d" => 2,
             "3d" => 3,
-            other => bail!("--synthetic dim `{other}` (2d|3d)"),
+            other => {
+                return Err(Error::Config(format!("--synthetic dim `{other}` (2d|3d)")))
+            }
         };
-        let n: usize = n_s.parse().context("--synthetic size")?;
+        let n: usize = n_s.parse().or_config("--synthetic size")?;
         return Ok(eval::paper_dataset(dim, n));
     }
-    bail!("provide --input <file> or --synthetic <2d|3d>:<N>")
+    Err(Error::Config("provide --input <file> or --synthetic <2d|3d>:<N>".into()))
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> Result<()> {
     let ds = load_input(args)?;
     let engine: Engine = args.require("engine")?;
     let k: usize = args.require("k")?;
@@ -130,10 +153,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let init: Init = args.get_or("init", Init::Random)?;
     let chunk: usize = args.get_or("chunk", 0)?; // 0 = auto
     let batch: usize = args.get_or("batch", 8192)?;
+    let kernel_flag: Option<KernelChoice> =
+        args.get("kernel").map(|v| v.parse()).transpose()?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     let assign_out = args.get("assign-out").map(PathBuf::from);
     args.finish()?;
+
+    // fix the process-global hot-path tier before any engine runs: an
+    // explicit --kernel wins; otherwise active_tier() honors the
+    // PARAKM_KERNEL env var before falling back to detection
+    let tier = match kernel_flag {
+        Some(choice) => kernel::set_active(choice)?,
+        None => kernel::active_tier(),
+    };
+    let kernel_choice = kernel_flag.unwrap_or(KernelChoice::Auto);
 
     let kc = KmeansConfig { k, tol, max_iters, seed, init };
     let t0 = std::time::Instant::now();
@@ -146,7 +180,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         Engine::Shared => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts,
+                artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = shared::run(&ds, &cfg, threads)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -154,7 +188,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         Engine::Offload => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts,
+                artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = offload::run(&ds, &cfg)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -162,10 +196,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         Engine::Streaming => {
             let path = args
                 .get("input")
-                .context("--engine streaming requires --input <file.pkd>")?;
+                .or_config("--engine streaming requires --input <file.pkd>")?;
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts,
+                artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run =
                 parakmeans::coordinator::streaming::run_file(std::path::Path::new(path), &cfg)?;
@@ -175,6 +209,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let total = t0.elapsed().as_secs_f64();
 
     println!("engine      : {engine}");
+    println!("kernel tier : {tier} (requested: {kernel_choice})");
     println!("dataset     : {} points, {}D", ds.len(), ds.dim());
     println!("k           : {k}   init: {init:?}   seed: {seed}");
     println!(
@@ -210,18 +245,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+fn cmd_eval(args: &Args) -> Result<()> {
     let exp = args.get("exp").unwrap_or("all").to_string();
     let scale = match args.get("scale") {
         Some("full") => Scale::Full,
         Some("smoke") | None => Scale::Smoke,
-        Some(other) => bail!("--scale `{other}` (full|smoke)"),
+        Some(other) => return Err(Error::Config(format!("--scale `{other}` (full|smoke)"))),
     };
     args.finish()?;
     run_eval(&exp, scale)
 }
 
-fn run_eval(exp: &str, scale: Scale) -> anyhow::Result<()> {
+fn run_eval(exp: &str, scale: Scale) -> Result<()> {
     use parakmeans::eval::{ablations, figures, tables};
     match exp {
         "t1" => drop(tables::table1(scale)?),
@@ -254,28 +289,41 @@ fn run_eval(exp: &str, scale: Scale) -> anyhow::Result<()> {
                 run_eval(e, scale)?;
             }
         }
-        other => bail!("unknown --exp `{other}`"),
+        other => return Err(Error::Config(format!("unknown --exp `{other}`"))),
     }
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     args.finish()?;
-    let manifest = parakmeans::runtime::Manifest::load(&dir)?;
-    println!("artifacts dir : {}", dir.display());
-    println!("default chunk : {}", manifest.default_chunk);
-    println!("executables   : {}", manifest.executables.len());
-    for e in &manifest.executables {
-        println!(
-            "  {:<36} kind={:<14?} d={} k={:<2} chunk={:<6} tile={}",
-            e.name, e.kind, e.d, e.k, e.chunk, e.tile_n
-        );
+    match parakmeans::runtime::Manifest::load(&dir) {
+        Ok(manifest) => {
+            println!("artifacts dir : {}", dir.display());
+            println!("default chunk : {}", manifest.default_chunk);
+            println!("executables   : {}", manifest.executables.len());
+            for e in &manifest.executables {
+                println!(
+                    "  {:<36} kind={:<14?} d={} k={:<2} chunk={:<6} tile={}",
+                    e.name, e.kind, e.d, e.k, e.chunk, e.tile_n
+                );
+            }
+        }
+        // a manifest that exists but fails to load would fail `run`
+        // the same way — report the error instead of claiming fallback
+        Err(e) if dir.join("manifest.json").exists() => return Err(e),
+        Err(_) => {
+            println!("artifacts dir : {} (no manifest)", dir.display());
+            println!("engines fall back to the native backend:");
+            for (key, val) in parakmeans::runtime::native::synthetic_summary() {
+                println!("  {key:<12}: {val}");
+            }
+        }
     }
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     use parakmeans::serve::{serve, BatcherConfig, ServeConfig};
     let ds = load_input(args)?;
     let k: usize = args.require("k")?;
@@ -306,7 +354,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let dim = ds.dim();
     let handle = serve(scfg, run.result.centroids, dim, k)?;
-    println!("serving on {} — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}", handle.local_addr);
+    println!(
+        "serving on {} — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}",
+        handle.local_addr
+    );
     // block forever (ctrl-c to stop)
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

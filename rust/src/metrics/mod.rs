@@ -34,7 +34,9 @@ pub fn sse(ds: &Dataset, centroids: &[f32], k: usize, assign: &[i32]) -> f64 {
 }
 
 /// Contingency table between two labelings (ignores negative labels).
-fn contingency(a: &[i32], b: &[i32]) -> (HashMap<(i32, i32), u64>, HashMap<i32, u64>, HashMap<i32, u64>, u64) {
+type Contingency = (HashMap<(i32, i32), u64>, HashMap<i32, u64>, HashMap<i32, u64>, u64);
+
+fn contingency(a: &[i32], b: &[i32]) -> Contingency {
     assert_eq!(a.len(), b.len());
     let mut joint: HashMap<(i32, i32), u64> = HashMap::new();
     let mut ma: HashMap<i32, u64> = HashMap::new();

@@ -1,15 +1,27 @@
-//! PJRT client wrapper: compile-once executable cache + typed execute.
+//! Runtime facade: resolve executable specs and run them.
 //!
-//! One [`Runtime`] per engine (the underlying `PjRtClient` is `Rc`-based
-//! and not `Send`). Executables compile lazily on first use and stay
-//! cached for the life of the runtime — compilation is setup cost, not
-//! request-path cost, and the engines report it separately.
+//! Historically this wrapped the PJRT C API through the `xla` crate.
+//! The offline image ships no `xla` crate, so execution now goes
+//! through the in-crate native backend ([`crate::runtime::native`]) —
+//! the same SIMD-dispatched kernels every pure-rust engine uses. The
+//! API shape (manifest-driven specs, `prepare` as the compile step,
+//! typed `execute`/`execute_buffers`, device-resident buffers) is kept
+//! so a real PJRT backend can slot back in behind it.
+//!
+//! Two construction modes:
+//! - [`Runtime::new`] requires `<dir>/manifest.json` (the python AOT
+//!   contract) and validates each referenced HLO artifact at
+//!   [`Runtime::prepare`] — missing/corrupt artifacts fail like a real
+//!   compile would.
+//! - [`Runtime::new_or_native`] falls back to the synthetic shape
+//!   matrix when no manifest exists, so engines run artifact-free.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::runtime::manifest::{DType, ExecKind, ExecSpec, Manifest, TensorSpec};
+use crate::runtime::manifest::{ExecKind, ExecSpec, Manifest};
+use crate::runtime::native::{self, ArgView};
 
 /// A typed host-side tensor heading into an executable.
 #[derive(Debug, Clone)]
@@ -55,189 +67,150 @@ impl TensorOut {
     }
 }
 
-/// PJRT CPU client + manifest + compiled-executable cache.
+/// A "device-resident" tensor: uploaded once, reused across calls (the
+/// OpenACC `data copyin` analog). The native backend keeps it host-side.
+#[derive(Debug, Clone)]
+pub struct DeviceBuffer {
+    data: TensorOut,
+    #[allow(dead_code)] // shape kept for a future real-PJRT backend
+    dims: Vec<usize>,
+}
+
+impl DeviceBuffer {
+    fn view(&self) -> ArgView<'_> {
+        match &self.data {
+            TensorOut::F32(v) => ArgView::F32(v),
+            TensorOut::I32(v) => ArgView::I32(v),
+        }
+    }
+}
+
+/// Manifest + prepared-executable cache over the native backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative compile time (reported as setup cost by the engines).
+    /// Loaded artifact manifest; `None` in native fallback mode, where
+    /// specs are synthesized on demand and [`Runtime::manifest`] serves
+    /// the shared lazily-built enumeration instead.
+    manifest: Option<Manifest>,
+    prepared: HashSet<String>,
+    /// Cumulative prepare/validation time (reported as setup cost by
+    /// the engines, the compile-time analog).
     pub compile_secs: f64,
 }
 
 impl Runtime {
-    /// Create a runtime over the artifacts in `dir`.
+    /// Create a runtime over the artifacts in `dir` (manifest required).
     pub fn new(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, cache: HashMap::new(), compile_secs: 0.0 })
+        Ok(Runtime {
+            manifest: Some(manifest),
+            prepared: HashSet::new(),
+            compile_secs: 0.0,
+        })
+    }
+
+    /// Like [`Runtime::new`], but when `dir` holds no manifest, fall
+    /// back to the synthetic shape matrix executed natively.
+    pub fn new_or_native(dir: &Path) -> Result<Runtime> {
+        if dir.join("manifest.json").exists() {
+            Runtime::new(dir)
+        } else {
+            Ok(Runtime::native())
+        }
+    }
+
+    /// Artifact-free runtime: specs are synthesized on demand.
+    pub fn native() -> Runtime {
+        Runtime { manifest: None, prepared: HashSet::new(), compile_secs: 0.0 }
+    }
+
+    /// Whether this runtime synthesizes its specs (no artifacts).
+    pub fn is_native_fallback(&self) -> bool {
+        self.manifest.is_none()
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        match &self.manifest {
+            Some(m) => m,
+            None => native::synthetic_manifest(),
+        }
     }
 
-    /// Resolve an executable spec (no compilation yet).
+    /// Resolve an executable spec (no preparation yet). In native
+    /// fallback mode specs are synthesized on demand, so any (d, k)
+    /// shape resolves — artifact-free operation has no model-size
+    /// ceiling beyond the dataset itself.
     pub fn find(&self, kind: ExecKind, d: usize, k: usize, chunk: usize) -> Result<ExecSpec> {
-        self.manifest.find(kind, d, k, chunk).cloned()
+        match &self.manifest {
+            Some(m) => m.find(kind, d, k, chunk).cloned(),
+            None => native::synthesize_spec(kind, d, k, chunk),
+        }
     }
 
-    /// Compile (or fetch cached) an executable.
+    /// Prepare an executable: for on-disk manifests this validates the
+    /// referenced HLO artifact (the compile step's failure surface);
+    /// results are cached per runtime like compiled executables were.
     pub fn prepare(&mut self, spec: &ExecSpec) -> Result<()> {
-        if self.cache.contains_key(&spec.name) {
+        if self.prepared.contains(&spec.name) {
             return Ok(());
         }
-        let path = self.manifest.hlo_path(spec);
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.compile_secs += t0.elapsed().as_secs_f64();
-        self.cache.insert(spec.name.clone(), exe);
+        if let Some(m) = &self.manifest {
+            native::validate_hlo_text(&m.hlo_path(spec))?;
+        }
+        self.compile_secs += t0.elapsed().as_secs_f64().max(1e-9);
+        self.prepared.insert(spec.name.clone());
         Ok(())
     }
 
-    /// Execute `spec` with `args`, validating the signature both ways.
-    ///
-    /// Returns host tensors in the manifest's output order. The AOT
-    /// programs are lowered with `return_tuple=True`; the single result
-    /// buffer decomposes into `spec.outputs.len()` literals. Keeping
-    /// iteration-loop outputs tiny is the engines' job (§Perf L2-1:
-    /// stats-only programs; assignments fetched once after
-    /// convergence via the separate `Assign` program).
+    /// Execute `spec` with host tensors, validating the signature both
+    /// ways. Returns host tensors in the manifest's output order.
     pub fn execute(&mut self, spec: &ExecSpec, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
         self.prepare(spec)?;
-        let literals = build_literals(spec, args)?;
-        let exe = self.cache.get(&spec.name).expect("prepared above");
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        read_tuple_outputs(&result[0][0], spec)
+        let views: Vec<ArgView> = args
+            .iter()
+            .map(|a| match a {
+                TensorArg::F32(v) => ArgView::F32(v),
+                TensorArg::I32(v) => ArgView::I32(v),
+            })
+            .collect();
+        native::validate_args(spec, &views)?;
+        native::execute(spec, &views)
     }
-}
 
-impl Runtime {
-    /// Upload an f32 tensor to the device once; reusable across many
-    /// `execute_buffers` calls. This is the OpenACC `data copyin`
-    /// analog: the engines upload immutable X chunks at setup so the
-    /// per-iteration transfer is only the (tiny) centroids.
-    pub fn upload_f32(&self, v: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer::<f32>(v, dims, None)?)
+    /// Upload an f32 tensor "to the device" once; reusable across many
+    /// [`Runtime::execute_buffers`] calls.
+    pub fn upload_f32(&self, v: &[f32], dims: &[usize]) -> Result<DeviceBuffer> {
+        if v.len() != dims.iter().product::<usize>() {
+            return Err(Error::Shape(format!(
+                "upload_f32: {} elements vs dims {dims:?}",
+                v.len()
+            )));
+        }
+        Ok(DeviceBuffer { data: TensorOut::F32(v.to_vec()), dims: dims.to_vec() })
     }
 
     /// Upload an i32 tensor to the device.
-    pub fn upload_i32(&self, v: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer::<i32>(v, dims, None)?)
+    pub fn upload_i32(&self, v: &[i32], dims: &[usize]) -> Result<DeviceBuffer> {
+        if v.len() != dims.iter().product::<usize>() {
+            return Err(Error::Shape(format!(
+                "upload_i32: {} elements vs dims {dims:?}",
+                v.len()
+            )));
+        }
+        Ok(DeviceBuffer { data: TensorOut::I32(v.to_vec()), dims: dims.to_vec() })
     }
 
-    /// Execute with device-resident inputs (X chunks uploaded once at
-    /// setup — the OpenACC `data copyin` analog), fetching the outputs
-    /// to the host.
+    /// Execute with device-resident inputs (uploaded once at setup).
     pub fn execute_buffers(
         &mut self,
         spec: &ExecSpec,
-        args: &[&xla::PjRtBuffer],
+        args: &[&DeviceBuffer],
     ) -> Result<Vec<TensorOut>> {
         self.prepare(spec)?;
-        if args.len() != spec.inputs.len() {
-            return Err(Error::Shape(format!(
-                "{}: expected {} inputs, got {}",
-                spec.name,
-                spec.inputs.len(),
-                args.len()
-            )));
-        }
-        let exe = self.cache.get(&spec.name).expect("prepared above");
-        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
-        read_tuple_outputs(&result[0][0], spec)
+        let views: Vec<ArgView> = args.iter().map(|b| b.view()).collect();
+        native::validate_args(spec, &views)?;
+        native::execute(spec, &views)
     }
-}
-
-/// Decompose the (tuple) result buffer and read each element, typed by
-/// the manifest signature.
-fn read_tuple_outputs(buf: &xla::PjRtBuffer, spec: &ExecSpec) -> Result<Vec<TensorOut>> {
-    let tuple = buf.to_literal_sync()?.to_tuple()?;
-    if tuple.len() != spec.outputs.len() {
-        return Err(Error::Shape(format!(
-            "{}: expected {} outputs, got {}",
-            spec.name,
-            spec.outputs.len(),
-            tuple.len()
-        )));
-    }
-    tuple
-        .into_iter()
-        .zip(&spec.outputs)
-        .map(|(lit, out_spec)| read_literal(&lit, out_spec, &spec.name))
-        .collect()
-}
-
-/// Typed host copy of one output literal.
-fn read_literal(lit: &xla::Literal, out: &TensorSpec, exe: &str) -> Result<TensorOut> {
-    let n = lit.element_count();
-    if n != out.elements() {
-        return Err(Error::Shape(format!(
-            "{exe}: output `{}` expects {} elements, got {n}",
-            out.name,
-            out.elements()
-        )));
-    }
-    Ok(match out.dtype {
-        DType::F32 => TensorOut::F32(lit.to_vec::<f32>()?),
-        DType::I32 => TensorOut::I32(lit.to_vec::<i32>()?),
-    })
-}
-
-fn build_literals(spec: &ExecSpec, args: &[TensorArg]) -> Result<Vec<xla::Literal>> {
-    if args.len() != spec.inputs.len() {
-        return Err(Error::Shape(format!(
-            "{}: expected {} inputs, got {}",
-            spec.name,
-            spec.inputs.len(),
-            args.len()
-        )));
-    }
-    args.iter()
-        .zip(&spec.inputs)
-        .map(|(arg, input)| build_literal(arg, input, &spec.name))
-        .collect()
-}
-
-fn build_literal(arg: &TensorArg, input: &TensorSpec, exe: &str) -> Result<xla::Literal> {
-    let (len, dtype) = match arg {
-        TensorArg::F32(v) => (v.len(), DType::F32),
-        TensorArg::I32(v) => (v.len(), DType::I32),
-    };
-    if dtype != input.dtype || len != input.elements() {
-        return Err(Error::Shape(format!(
-            "{exe}: input `{}` expects {:?}×{}, got {:?}×{}",
-            input.name,
-            input.dtype,
-            input.elements(),
-            dtype,
-            len
-        )));
-    }
-    // one copy host->literal; bytes reinterpreted in place
-    let lit = match arg {
-        TensorArg::F32(v) => xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &input.shape,
-            bytes_of_f32(v),
-        )?,
-        TensorArg::I32(v) => xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S32,
-            &input.shape,
-            bytes_of_i32(v),
-        )?,
-    };
-    Ok(lit)
-}
-
-fn bytes_of_f32(v: &[f32]) -> &[u8] {
-    // safety: f32 has no invalid bit patterns; alignment of u8 is 1
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-fn bytes_of_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 #[cfg(test)]
@@ -250,16 +223,16 @@ mod tests {
         dir.join("manifest.json").exists().then_some(dir)
     }
 
-    /// End-to-end: load real artifacts, execute them, compare against a
-    /// hand-computed expectation. This is the rust side of the python
-    /// kernel-vs-ref contract.
+    /// End-to-end over whichever backend is available: execute the
+    /// stats/assign contract and compare against a hand-computed
+    /// expectation. This is the rust side of the python kernel-vs-ref
+    /// contract.
     #[test]
     fn stats_and_assign_execute_correctly() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
+        let mut rt = match artifacts_dir() {
+            Some(dir) => Runtime::new(&dir).unwrap(),
+            None => Runtime::native(),
         };
-        let mut rt = Runtime::new(&dir).unwrap();
         let chunk = 4096;
         let stats = rt.find(ExecKind::StatsPartial, 2, 4, chunk).unwrap();
         let assign_spec = rt.find(ExecKind::Assign, 2, 4, chunk).unwrap();
@@ -292,13 +265,15 @@ mod tests {
 
     #[test]
     fn finalize_executes_correctly() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
+        let mut rt = match artifacts_dir() {
+            Some(dir) => Runtime::new(&dir).unwrap(),
+            None => Runtime::native(),
         };
-        let mut rt = Runtime::new(&dir).unwrap();
         let spec = rt.find(ExecKind::Finalize, 3, 4, 0).unwrap();
-        let sums = vec![2.0f32, 4.0, 6.0, /* c1 */ 0.0, 0.0, 0.0, /* c2 */ 3.0, 3.0, 3.0, /* c3 */ 8.0, 8.0, 8.0];
+        let sums = vec![
+            2.0f32, 4.0, 6.0, /* c1 */ 0.0, 0.0, 0.0, /* c2 */ 3.0, 3.0, 3.0,
+            /* c3 */ 8.0, 8.0, 8.0,
+        ];
         let counts = vec![2.0f32, 0.0, 3.0, 4.0];
         let mu_old = vec![1.0f32, 2.0, 3.0, 9.0, 9.0, 9.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0];
         let outs = rt
@@ -316,17 +291,13 @@ mod tests {
         assert_eq!(&mu_new[3..6], &[9.0, 9.0, 9.0]); // empty keeps old
         assert_eq!(&mu_new[6..9], &[1.0, 1.0, 1.0]); // sums/3
         assert_eq!(&mu_new[9..12], &[2.0, 2.0, 2.0]); // sums/4
-        let shift = outs[0 + 1].as_f32()[0];
+        let shift = outs[1].as_f32()[0];
         assert!(shift.abs() < 1e-6, "converged case: shift {shift}");
     }
 
     #[test]
     fn shape_validation_rejects_wrong_args() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let mut rt = Runtime::new(&dir).unwrap();
+        let mut rt = Runtime::native();
         let chunk = rt.manifest().default_chunk;
         let spec = rt.find(ExecKind::StatsPartial, 2, 4, chunk).unwrap();
         // wrong arity
@@ -354,12 +325,8 @@ mod tests {
 
     #[test]
     fn buffer_path_matches_literal_path() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let mut rt = Runtime::new(&dir).unwrap();
-        let chunk = rt.manifest().default_chunk;
+        let mut rt = Runtime::native();
+        let chunk = 4096;
         let spec = rt.find(ExecKind::StatsPartial, 3, 4, chunk).unwrap();
         let mut rng = crate::rng::Pcg64::new(5, 0);
         let x: Vec<f32> = (0..chunk * 3).map(|_| rng.next_f32() * 10.0).collect();
@@ -380,17 +347,30 @@ mod tests {
     }
 
     #[test]
+    fn upload_validates_dims() {
+        let rt = Runtime::native();
+        assert!(rt.upload_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(rt.upload_i32(&[1], &[1]).is_ok());
+    }
+
+    #[test]
     fn compile_cache_reused() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
+        let mut rt = match artifacts_dir() {
+            Some(dir) => Runtime::new(&dir).unwrap(),
+            None => Runtime::native(),
         };
-        let mut rt = Runtime::new(&dir).unwrap();
         let spec = rt.find(ExecKind::Finalize, 2, 4, 0).unwrap();
         rt.prepare(&spec).unwrap();
         let t_after_first = rt.compile_secs;
         assert!(t_after_first > 0.0);
         rt.prepare(&spec).unwrap();
         assert_eq!(rt.compile_secs, t_after_first, "second prepare must be cached");
+    }
+
+    #[test]
+    fn native_fallback_only_without_manifest() {
+        let rt = Runtime::new_or_native(std::path::Path::new("definitely/not/here")).unwrap();
+        assert!(rt.is_native_fallback());
+        assert!(Runtime::new(std::path::Path::new("definitely/not/here")).is_err());
     }
 }

@@ -1,15 +1,19 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: resolve AOT executable specs and run them.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin). The interchange
-//! format is HLO *text* — see `python/compile/aot.py` for why (the
-//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//! The manifest (`python/compile/aot.py`, HLO text interchange) remains
+//! the contract between the python compile path and the rust request
+//! path. Execution is handled by the in-crate [`native`] backend — the
+//! SIMD kernel subsystem — because the offline image ships no `xla`
+//! crate; [`client`] keeps the PJRT-shaped API (prepare/execute/
+//! device buffers) so a real PJRT backend can return behind it, and
+//! synthesizes the standard shape matrix when no artifacts exist.
 //!
-//! `PjRtClient` holds an `Rc` internally, so nothing here is `Send`:
-//! each engine (or worker) constructs its own [`Runtime`]. Compilation
+//! Each engine (or worker) constructs its own [`Runtime`]; preparation
 //! is cached per runtime keyed by executable name.
 
 pub mod client;
 pub mod manifest;
+pub mod native;
 
-pub use client::{Runtime, TensorArg, TensorOut};
+pub use client::{DeviceBuffer, Runtime, TensorArg, TensorOut};
 pub use manifest::{ExecSpec, Manifest, TensorSpec};

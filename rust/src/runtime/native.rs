@@ -1,0 +1,492 @@
+//! Native CPU executor for the AOT executable contract.
+//!
+//! The artifact manifest defines four executable kinds (`stats_partial`,
+//! `assign`, `fused_stats`, `finalize`) with fixed shapes and padding
+//! semantics (`n_valid` masks the tail of a chunk). This module
+//! implements those semantics directly on the
+//! [`crate::linalg::kernel`] subsystem, so every coordinator engine
+//! (shared / offload / streaming) and the serving batcher run the same
+//! SIMD-dispatched hot path as the pure-rust engines — with or without
+//! compiled XLA artifacts on disk.
+//!
+//! When no `manifest.json` exists, specs are synthesized on demand
+//! ([`synthesize_spec`] — any d/k shape), with [`synthetic_manifest`]
+//! enumerating the standard matrix (the families
+//! `python/compile/aot.py` lowers, up to [`MAX_D`]/[`MAX_K`]) for
+//! display and iteration; when a real manifest exists it is honored
+//! verbatim (names, shapes, chunk sizes).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::linalg::kernel;
+use crate::runtime::client::TensorOut;
+use crate::runtime::manifest::{DType, ExecKind, ExecSpec, Manifest, TensorSpec};
+
+/// Chunk sizes the synthetic manifest offers (superset of the AOT
+/// pipeline's `CHUNKS` + ablation sizes, so every pinned-chunk config
+/// keeps working without artifacts).
+pub const CHUNKS: [usize; 4] = [4096, 16384, 65536, 262144];
+
+/// Default chunk mirrored from `python/compile/aot.py`.
+pub const DEFAULT_CHUNK: usize = 65536;
+
+/// Largest dimensionality the synthetic manifest covers.
+pub const MAX_D: usize = 8;
+
+/// Largest cluster count the synthetic manifest covers.
+pub const MAX_K: usize = 16;
+
+fn tensor(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype }
+}
+
+fn chunked_spec(kind: ExecKind, d: usize, k: usize, chunk: usize) -> ExecSpec {
+    let (prefix, inputs, outputs): (&str, Vec<TensorSpec>, Vec<TensorSpec>) = match kind {
+        ExecKind::StatsPartial => (
+            "stats_partial",
+            vec![
+                tensor("x", &[chunk, d], DType::F32),
+                tensor("mu", &[k, d], DType::F32),
+                tensor("n_valid", &[1], DType::I32),
+            ],
+            vec![
+                tensor("sums", &[k, d], DType::F32),
+                tensor("counts", &[k], DType::F32),
+                tensor("sse", &[1], DType::F32),
+            ],
+        ),
+        ExecKind::Assign => (
+            "assign",
+            vec![
+                tensor("x", &[chunk, d], DType::F32),
+                tensor("mu", &[k, d], DType::F32),
+                tensor("n_valid", &[1], DType::I32),
+            ],
+            vec![tensor("assign", &[chunk], DType::I32)],
+        ),
+        ExecKind::FusedStats => (
+            "fused_stats",
+            vec![
+                tensor("x", &[chunk, d], DType::F32),
+                tensor("mu", &[k, d], DType::F32),
+                // accumulator names mirror python/compile/aot.py
+                tensor("acc_sums", &[k, d], DType::F32),
+                tensor("acc_counts", &[k], DType::F32),
+                tensor("acc_sse", &[1], DType::F32),
+                tensor("n_valid", &[1], DType::I32),
+            ],
+            vec![
+                tensor("sums", &[k, d], DType::F32),
+                tensor("counts", &[k], DType::F32),
+                tensor("sse", &[1], DType::F32),
+            ],
+        ),
+        ExecKind::Finalize => unreachable!("finalize has no chunk"),
+    };
+    ExecSpec {
+        name: format!("{prefix}_d{d}_k{k}_c{chunk}"),
+        file: String::new(), // no artifact on disk; executed natively
+        kind,
+        d,
+        k,
+        chunk,
+        tile_n: chunk.min(8192),
+        inputs,
+        outputs,
+    }
+}
+
+fn finalize_spec(d: usize, k: usize) -> ExecSpec {
+    ExecSpec {
+        name: format!("finalize_d{d}_k{k}"),
+        file: String::new(),
+        kind: ExecKind::Finalize,
+        d,
+        k,
+        chunk: 0,
+        tile_n: 0,
+        inputs: vec![
+            tensor("sums", &[k, d], DType::F32),
+            tensor("counts", &[k], DType::F32),
+            tensor("mu_old", &[k, d], DType::F32),
+        ],
+        outputs: vec![
+            tensor("mu_new", &[k, d], DType::F32),
+            tensor("shift", &[1], DType::F32),
+        ],
+    }
+}
+
+/// Synthesize a single executable spec on demand. The native executor
+/// supports any shape, so artifact-free operation is not capped by the
+/// pre-enumerated matrix below — [`crate::runtime::Runtime::find`]
+/// calls this directly in fallback mode.
+pub fn synthesize_spec(kind: ExecKind, d: usize, k: usize, chunk: usize) -> Result<ExecSpec> {
+    if d == 0 || k == 0 {
+        return Err(Error::Config(format!("degenerate executable shape d={d} k={k}")));
+    }
+    if kind == ExecKind::Finalize {
+        return Ok(finalize_spec(d, k));
+    }
+    if chunk == 0 {
+        return Err(Error::Config(format!("{kind:?} requires a chunk size >= 1")));
+    }
+    Ok(chunked_spec(kind, d, k, chunk))
+}
+
+/// The standard shape matrix for artifact-free operation — an
+/// enumeration surface for manifest iteration only (lookups go through
+/// [`synthesize_spec`] and are not bounded by it). Built lazily, once
+/// per process: the ~1.6k-spec enumeration is never allocated on the
+/// engines' fallback path.
+pub fn synthetic_manifest() -> &'static Manifest {
+    static SYNTH: std::sync::OnceLock<Manifest> = std::sync::OnceLock::new();
+    SYNTH.get_or_init(|| {
+        let mut executables = Vec::new();
+        for d in 1..=MAX_D {
+            for k in 1..=MAX_K {
+                for &chunk in &CHUNKS {
+                    executables.push(chunked_spec(ExecKind::StatsPartial, d, k, chunk));
+                    executables.push(chunked_spec(ExecKind::Assign, d, k, chunk));
+                    executables.push(chunked_spec(ExecKind::FusedStats, d, k, chunk));
+                }
+                executables.push(finalize_spec(d, k));
+            }
+        }
+        Manifest {
+            dir: PathBuf::from("<native>"),
+            default_chunk: DEFAULT_CHUNK,
+            executables,
+        }
+    })
+}
+
+/// A typed, borrowed executable input.
+pub enum ArgView<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> ArgView<'a> {
+    fn dtype(&self) -> DType {
+        match self {
+            ArgView::F32(_) => DType::F32,
+            ArgView::I32(_) => DType::I32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ArgView::F32(v) => v.len(),
+            ArgView::I32(v) => v.len(),
+        }
+    }
+
+    fn as_f32(&self) -> &'a [f32] {
+        match self {
+            ArgView::F32(v) => v,
+            ArgView::I32(_) => unreachable!("dtype validated against spec"),
+        }
+    }
+
+    fn as_i32(&self) -> &'a [i32] {
+        match self {
+            ArgView::I32(v) => v,
+            ArgView::F32(_) => unreachable!("dtype validated against spec"),
+        }
+    }
+}
+
+/// Validate `args` against the spec signature (arity, dtype, length).
+pub fn validate_args(spec: &ExecSpec, args: &[ArgView]) -> Result<()> {
+    if args.len() != spec.inputs.len() {
+        return Err(Error::Shape(format!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            args.len()
+        )));
+    }
+    for (arg, input) in args.iter().zip(&spec.inputs) {
+        if arg.dtype() != input.dtype || arg.len() != input.elements() {
+            return Err(Error::Shape(format!(
+                "{}: input `{}` expects {:?}×{}, got {:?}×{}",
+                spec.name,
+                input.name,
+                input.dtype,
+                input.elements(),
+                arg.dtype(),
+                arg.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Index of the input named `name` (positional fallback for manifests
+/// with differing names but the canonical order).
+fn input_idx(spec: &ExecSpec, name: &str, fallback: usize) -> usize {
+    spec.inputs
+        .iter()
+        .position(|t| t.name == name)
+        .unwrap_or(fallback)
+}
+
+/// Execute `spec` natively. `args` must already be validated.
+pub fn execute(spec: &ExecSpec, args: &[ArgView]) -> Result<Vec<TensorOut>> {
+    let (d, k, chunk) = (spec.d, spec.k, spec.chunk);
+    if k == 0 || d == 0 {
+        return Err(Error::Config(format!("{}: degenerate shape d={d} k={k}", spec.name)));
+    }
+    match spec.kind {
+        ExecKind::StatsPartial | ExecKind::FusedStats | ExecKind::Assign => {
+            let x = args[input_idx(spec, "x", 0)].as_f32();
+            let mu = args[input_idx(spec, "mu", 1)].as_f32();
+            let nv_pos = if spec.kind == ExecKind::FusedStats { 5 } else { 2 };
+            let nv = args[input_idx(spec, "n_valid", nv_pos)].as_i32();
+            let n_valid = (nv[0].max(0) as usize).min(chunk);
+            let rows = &x[..n_valid * d];
+
+            // assign output is chunk-shaped only for the Assign kind
+            // (padding lanes stay -1); the stats kinds drop it, so
+            // scratch is sized to the valid rows
+            let out_len = if spec.kind == ExecKind::Assign { chunk } else { n_valid };
+            let mut assign = vec![-1i32; out_len];
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0u64; k];
+            let mut sse = 0.0f64;
+            kernel::assign_accumulate(
+                rows,
+                d,
+                mu,
+                k,
+                &mut assign[..n_valid],
+                &mut sums,
+                &mut counts,
+                &mut sse,
+                kernel::active_tier(),
+            );
+
+            if spec.kind == ExecKind::Assign {
+                return Ok(vec![TensorOut::I32(assign)]);
+            }
+
+            let (mut sums_f, mut counts_f, mut sse_f) =
+                (vec![0.0f32; k * d], vec![0.0f32; k], 0.0f32);
+            if spec.kind == ExecKind::FusedStats {
+                // thread the device-resident accumulators through
+                sums_f.copy_from_slice(args[input_idx(spec, "acc_sums", 2)].as_f32());
+                counts_f.copy_from_slice(args[input_idx(spec, "acc_counts", 3)].as_f32());
+                sse_f = args[input_idx(spec, "acc_sse", 4)].as_f32()[0];
+            }
+            for (o, &v) in sums_f.iter_mut().zip(&sums) {
+                *o += v as f32;
+            }
+            for (o, &v) in counts_f.iter_mut().zip(&counts) {
+                *o += v as f32;
+            }
+            sse_f += sse as f32;
+            Ok(vec![
+                TensorOut::F32(sums_f),
+                TensorOut::F32(counts_f),
+                TensorOut::F32(vec![sse_f]),
+            ])
+        }
+        ExecKind::Finalize => {
+            let sums = args[input_idx(spec, "sums", 0)].as_f32();
+            let counts = args[input_idx(spec, "counts", 1)].as_f32();
+            let mu_old = args[input_idx(spec, "mu_old", 2)].as_f32();
+            let mut mu_new = vec![0.0f32; k * d];
+            let mut shift = 0.0f64;
+            for c in 0..k {
+                let cnt = counts[c];
+                for j in 0..d {
+                    let idx = c * d + j;
+                    let v = if cnt > 0.0 { sums[idx] / cnt } else { mu_old[idx] };
+                    mu_new[idx] = v;
+                    let diff = (v - mu_old[idx]) as f64;
+                    shift += diff * diff;
+                }
+            }
+            Ok(vec![TensorOut::F32(mu_new), TensorOut::F32(vec![shift as f32])])
+        }
+    }
+}
+
+/// Light structural validation of an HLO text artifact (real-manifest
+/// mode): the native executor does not interpret HLO, but a missing or
+/// visibly truncated file must still fail at `prepare`, like a real
+/// compile would.
+pub fn validate_hlo_text(path: &std::path::Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let mut depth: i64 = 0;
+    for b in text.bytes() {
+        match b {
+            b'{' => depth += 1,
+            b'}' => depth -= 1,
+            _ => {}
+        }
+    }
+    if !text.starts_with("HloModule")
+        || !text.contains("ENTRY")
+        || !text.contains("ROOT")
+        || depth != 0
+    {
+        return Err(Error::Manifest(format!(
+            "{}: malformed HLO text (truncated or corrupted artifact)",
+            path.display()
+        )));
+    }
+    Ok(())
+}
+
+/// Group the native-fallback capabilities for display (`parakm info`).
+pub fn synthetic_summary() -> BTreeMap<&'static str, String> {
+    let mut m = BTreeMap::new();
+    m.insert("backend", "native (in-process SIMD kernels)".to_string());
+    m.insert("shapes", "any d/k (specs synthesized on demand)".to_string());
+    m.insert("chunks", format!("{CHUNKS:?}"));
+    m.insert("kernel tier", kernel::active_tier().to_string());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_covers_paper_matrix() {
+        let m = synthetic_manifest();
+        for (d, k) in [(2usize, 4usize), (2, 8), (2, 11), (3, 4), (3, 8), (3, 11)] {
+            for kind in [ExecKind::StatsPartial, ExecKind::Assign, ExecKind::FusedStats] {
+                for &c in &CHUNKS {
+                    m.find(kind, d, k, c).unwrap();
+                }
+            }
+            m.find(ExecKind::Finalize, d, k, 0).unwrap();
+        }
+        assert!(m.find(ExecKind::StatsPartial, 2, MAX_K + 1, DEFAULT_CHUNK).is_err());
+    }
+
+    #[test]
+    fn stats_partial_matches_python_contract() {
+        // mirror of runtime::client::tests::stats_and_assign_execute_correctly
+        let spec = chunked_spec(ExecKind::StatsPartial, 2, 4, 4096);
+        let mut x = vec![0.0f32; 4096 * 2];
+        x[0..2].copy_from_slice(&[0.1, 0.0]);
+        x[2..4].copy_from_slice(&[10.0, 9.9]);
+        x[4..6].copy_from_slice(&[0.0, 0.2]);
+        let mu = vec![0.0f32, 0.0, 10.0, 10.0, -50.0, -50.0, 50.0, 50.0];
+        let nv = [3i32];
+        let args = [ArgView::F32(&x), ArgView::F32(&mu), ArgView::I32(&nv)];
+        validate_args(&spec, &args).unwrap();
+        let outs = execute(&spec, &args).unwrap();
+        let sums = outs[0].as_f32();
+        assert!((sums[0] - 0.1).abs() < 1e-5);
+        assert!((sums[1] - 0.2).abs() < 1e-5);
+        assert!((sums[2] - 10.0).abs() < 1e-4);
+        assert_eq!(outs[1].as_f32(), &[2.0, 1.0, 0.0, 0.0]);
+        let sse = outs[2].as_f32()[0];
+        assert!((sse - 0.06).abs() < 1e-4, "sse {sse}");
+
+        let aspec = chunked_spec(ExecKind::Assign, 2, 4, 4096);
+        let outs = execute(&aspec, &args).unwrap();
+        let assign = outs[0].as_i32();
+        assert_eq!(&assign[0..3], &[0, 1, 0]);
+        assert!(assign[3..].iter().all(|&a| a == -1));
+    }
+
+    #[test]
+    fn fused_stats_accumulates_through_calls() {
+        let spec = chunked_spec(ExecKind::FusedStats, 2, 2, 4096);
+        let mut x = vec![0.0f32; 4096 * 2];
+        x[0..2].copy_from_slice(&[1.0, 0.0]);
+        let mu = vec![0.0f32, 0.0, 10.0, 10.0];
+        let nv = [1i32];
+        let zero_s = vec![0.0f32; 4];
+        let zero_c = vec![0.0f32; 2];
+        let zero_e = vec![0.0f32; 1];
+        let args = [
+            ArgView::F32(&x),
+            ArgView::F32(&mu),
+            ArgView::F32(&zero_s),
+            ArgView::F32(&zero_c),
+            ArgView::F32(&zero_e),
+            ArgView::I32(&nv),
+        ];
+        let outs = execute(&spec, &args).unwrap();
+        let (s1, c1, e1) =
+            (outs[0].as_f32().to_vec(), outs[1].as_f32().to_vec(), outs[2].as_f32().to_vec());
+        assert_eq!(c1, vec![1.0, 0.0]);
+        // second call seeded with the first call's accumulators
+        let args2 = [
+            ArgView::F32(&x),
+            ArgView::F32(&mu),
+            ArgView::F32(&s1),
+            ArgView::F32(&c1),
+            ArgView::F32(&e1),
+            ArgView::I32(&nv),
+        ];
+        let outs2 = execute(&spec, &args2).unwrap();
+        assert_eq!(outs2[1].as_f32(), &[2.0, 0.0]);
+        assert!((outs2[0].as_f32()[0] - 2.0).abs() < 1e-6);
+        assert!((outs2[2].as_f32()[0] - 2.0 * e1[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finalize_matches_step_semantics() {
+        let spec = finalize_spec(3, 4);
+        let sums = vec![
+            2.0f32, 4.0, 6.0, 0.0, 0.0, 0.0, 3.0, 3.0, 3.0, 8.0, 8.0, 8.0,
+        ];
+        let counts = vec![2.0f32, 0.0, 3.0, 4.0];
+        let mu_old = vec![
+            1.0f32, 2.0, 3.0, 9.0, 9.0, 9.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0,
+        ];
+        let outs = execute(
+            &spec,
+            &[ArgView::F32(&sums), ArgView::F32(&counts), ArgView::F32(&mu_old)],
+        )
+        .unwrap();
+        let mu_new = outs[0].as_f32();
+        assert_eq!(&mu_new[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&mu_new[3..6], &[9.0, 9.0, 9.0]); // empty keeps old
+        assert_eq!(&mu_new[6..9], &[1.0, 1.0, 1.0]);
+        assert_eq!(&mu_new[9..12], &[2.0, 2.0, 2.0]);
+        assert!(outs[1].as_f32()[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_rejects_wrong_shapes() {
+        let spec = chunked_spec(ExecKind::StatsPartial, 2, 4, 4096);
+        let x = vec![0.0f32; 10]; // wrong length
+        let mu = vec![0.0f32; 8];
+        let nv = [1i32];
+        assert!(validate_args(&spec, &[ArgView::F32(&x), ArgView::F32(&mu), ArgView::I32(&nv)])
+            .is_err());
+        assert!(validate_args(&spec, &[]).is_err());
+        // wrong dtype for n_valid
+        let big_x = vec![0.0f32; 4096 * 2];
+        let bad_nv = [1.0f32];
+        assert!(validate_args(
+            &spec,
+            &[ArgView::F32(&big_x), ArgView::F32(&mu), ArgView::F32(&bad_nv)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hlo_validation_flags_truncation() {
+        let dir = std::env::temp_dir().join("parakm_native_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, "HloModule m\n\nENTRY main {\n ROOT t = () tuple()\n}\n").unwrap();
+        assert!(validate_hlo_text(&good).is_ok());
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "HloModule m\n\nENTRY main {\n ROOT t = (").unwrap();
+        assert!(validate_hlo_text(&bad).is_err());
+        assert!(validate_hlo_text(&dir.join("missing.hlo.txt")).is_err());
+    }
+}

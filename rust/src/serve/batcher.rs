@@ -74,7 +74,7 @@ impl Batcher {
                 centroids.len()
             )));
         }
-        let mut rt = Runtime::new(artifacts_dir)?;
+        let mut rt = Runtime::new_or_native(artifacts_dir)?;
         // smallest artifact chunk that covers max_batch (latency first)
         let mut sizes = crate::coordinator::shared::resolve_chunk_sizes(
             &rt,

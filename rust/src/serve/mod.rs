@@ -18,10 +18,12 @@
 //!                              responses routed back per request
 //! ```
 //!
-//! The batcher owns the (non-`Send`) [`Runtime`], so it lives on one
-//! dedicated thread; acceptors communicate via `mpsc`. No tokio in the
-//! offline image (DESIGN.md §8): blocking IO + threads, which is also
-//! the right shape for a CPU PJRT backend.
+//! The batcher owns the [`Runtime`] and lives on one dedicated thread
+//! (the PJRT-era contract — a real PJRT client is not `Send`; the
+//! native executor keeps the same single-owner shape). Acceptors
+//! communicate via `mpsc`. No tokio in the offline image (DESIGN.md
+//! §8): blocking IO + threads, which is also the right shape for a CPU
+//! backend.
 
 pub mod batcher;
 pub mod protocol;

@@ -106,12 +106,16 @@ impl Response {
         let clusters = j
             .arr_field("clusters")?
             .iter()
-            .map(|v| v.as_f64().map(|f| f as i32).ok_or_else(|| Error::Config("bad cluster".into())))
+            .map(|v| {
+                v.as_f64().map(|f| f as i32).ok_or_else(|| Error::Config("bad cluster".into()))
+            })
             .collect::<Result<Vec<i32>>>()?;
         let distances = j
             .arr_field("distances")?
             .iter()
-            .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| Error::Config("bad distance".into())))
+            .map(|v| {
+                v.as_f64().map(|f| f as f32).ok_or_else(|| Error::Config("bad distance".into()))
+            })
             .collect::<Result<Vec<f32>>>()?;
         Ok(Response::Ok { id, clusters, distances })
     }

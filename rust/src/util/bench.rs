@@ -58,6 +58,9 @@ fn percentile(xs: &[f64], q: f64) -> f64 {
 pub struct BenchOpts {
     pub warmup: usize,
     pub repeats: usize,
+    /// Rows per bench case (`PARAKM_BENCH_N`); benches that scale
+    /// with dataset size read this so CI can shrink the workload.
+    pub n: usize,
     /// Hard cap on total time per case; once exceeded (and >= 1 timed
     /// run exists) remaining repeats are skipped. Keeps the 1M-point
     /// cases from blowing the bench budget.
@@ -66,15 +69,20 @@ pub struct BenchOpts {
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { warmup: 1, repeats: 5, time_cap: Duration::from_secs(120) }
+        BenchOpts { warmup: 1, repeats: 5, n: 200_000, time_cap: Duration::from_secs(120) }
     }
 }
 
 impl BenchOpts {
-    /// Read overrides from env: PARAKM_BENCH_WARMUP / _REPEATS / _CAP_SECS.
-    /// Lets CI shrink the matrix without code edits.
+    /// Read overrides from env: PARAKM_BENCH_WARMUP / _REPEATS /
+    /// _CAP_SECS / _N. Lets CI shrink the matrix without code edits.
     pub fn from_env() -> Self {
         let mut o = BenchOpts::default();
+        if let Ok(v) = std::env::var("PARAKM_BENCH_N") {
+            if let Ok(n) = v.parse() {
+                o.n = n;
+            }
+        }
         if let Ok(v) = std::env::var("PARAKM_BENCH_WARMUP") {
             if let Ok(n) = v.parse() {
                 o.warmup = n;
@@ -149,7 +157,12 @@ mod tests {
 
     #[test]
     fn run_case_counts_repeats() {
-        let opts = BenchOpts { warmup: 1, repeats: 3, time_cap: Duration::from_secs(60) };
+        let opts = BenchOpts {
+            warmup: 1,
+            repeats: 3,
+            time_cap: Duration::from_secs(60),
+            ..Default::default()
+        };
         let mut calls = 0;
         let s = run_case("x", &opts, || {
             calls += 1;
@@ -165,6 +178,7 @@ mod tests {
             warmup: 0,
             repeats: 1000,
             time_cap: Duration::from_millis(30),
+            ..Default::default()
         };
         let s = run_case("slow", &opts, || std::thread::sleep(Duration::from_millis(20)));
         assert!(s.runs.len() < 1000);

@@ -32,7 +32,8 @@ fn all_engines_agree_3d() {
     let mu0 = kmeans::init::initialize(&ds, 4, kc.init, kc.seed);
 
     let serial = kmeans::serial::run_from(&ds, &kc, &mu0);
-    let threads = kmeans::parallel::run_from(&ds, &kc, 4, kmeans::parallel::MergeMode::Leader, &mu0);
+    let threads =
+        kmeans::parallel::run_from(&ds, &kc, 4, kmeans::parallel::MergeMode::Leader, &mu0);
     let elkan = kmeans::elkan::run_from(&ds, &kc, &mu0);
     let hamerly = kmeans::hamerly::run_from(&ds, &kc, &mu0);
     let sh = shared::run(&ds, &cfg(4), 4).unwrap();
