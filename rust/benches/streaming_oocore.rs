@@ -1,0 +1,93 @@
+//! Out-of-core streaming sweep: chunk size × shard count on the
+//! paper's 3D GMM family, file-backed — the memory/parallelism trade
+//! of `kmeans::streaming` quantified, with the determinism contract
+//! cross-checked exactly on every cell.
+//!
+//!     cargo bench --bench streaming_oocore
+//!
+//! Knobs (also used by CI bench-smoke):
+//!   PARAKM_BENCH_N        dataset rows (default 200000)
+//!   PARAKM_BENCH_WARMUP / PARAKM_BENCH_REPEATS / PARAKM_BENCH_CAP_SECS
+//!
+//! Every cell is cross-checked exactly against its in-memory twin (no
+//! timing assertions): shards = 1 must be bit-identical to the serial
+//! engine, shards = S to the threaded engine at p = S — the two
+//! guarantees of the chunked-accumulation contract (DESIGN.md §4).
+//! Writes `results/tables/oocore.csv` (columns: shards, chunk_rows,
+//! buffer_bytes, secs, iters, sse) for `eval::report`.
+
+use parakmeans::data::source::FileSource;
+use parakmeans::data::{gmm::workloads, io};
+use parakmeans::eval;
+use parakmeans::kmeans::streaming::{run_from, StreamOpts};
+use parakmeans::kmeans::{self, init, KmeansConfig};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+use parakmeans::util::csv;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n = opts.n;
+    let k = workloads::K_3D;
+    println!("== streaming oocore bench (3D, n={n}, K={k}) ==");
+
+    // dataset on disk: the engine under test streams it; the serial
+    // reference gets the same rows resident
+    let ds = eval::paper_dataset(3, n);
+    let path = std::env::temp_dir().join(format!("parakm_oocore_bench_{n}.pkd"));
+    io::write_binary(&path, &ds).expect("write bench dataset");
+    let src = FileSource::open(&path).expect("open bench dataset");
+
+    let cfg = KmeansConfig::new(k).with_seed(42);
+    let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+    let reference = kmeans::serial::run_from(&ds, &cfg, &mu0);
+    println!(
+        "serial reference: {} iters (converged: {}), sse {:.6e}",
+        reference.iterations, reference.converged, reference.sse
+    );
+
+    let payload_bytes = n * 3 * 4;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        // the in-memory twin of this shard count: serial at 1 shard,
+        // threads(p = shards) otherwise — bit-identical by contract
+        let twin = if shards == 1 {
+            reference.clone()
+        } else {
+            kmeans::parallel::run_from(&ds, &cfg, shards, kmeans::parallel::MergeMode::Leader, &mu0)
+        };
+        for chunk_rows in [4096usize, 16384, 65536] {
+            let so = StreamOpts { shards, chunk_rows };
+            let buffer = so.buffer_bytes(3);
+
+            // determinism cross-check (exact, once per cell)
+            let r = run_from(&src, &cfg, &so, &mu0).expect("oocore run");
+            assert_bit_identical(&r, &twin, &format!("s={shards} c={chunk_rows}"));
+
+            let label = format!(
+                "oocore n={n} shards={shards} chunk={chunk_rows:<6} buf={:>7}B",
+                buffer
+            );
+            let s = run_case(&label, &opts, || run_from(&src, &cfg, &so, &mu0).expect("run"));
+            report(&s);
+            println!(
+                "         -> residency {:.2}% of payload ({buffer} / {payload_bytes} B)",
+                100.0 * buffer as f64 / payload_bytes as f64
+            );
+            rows.push(vec![
+                shards as f64,
+                chunk_rows as f64,
+                buffer as f64,
+                s.median(),
+                r.iterations as f64,
+                r.sse,
+            ]);
+        }
+    }
+
+    let out = eval::results_dir().join("tables/oocore.csv");
+    csv::write_table(&out, &["shards", "chunk_rows", "buffer_bytes", "secs", "iters", "sse"], &rows)
+        .expect("write oocore.csv");
+    println!("wrote {}", out.display());
+    let _ = std::fs::remove_file(&path);
+}

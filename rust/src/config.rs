@@ -21,8 +21,15 @@ pub enum Engine {
     Hamerly,
     /// Mini-batch extension.
     MiniBatch,
-    /// Out-of-core streaming engine (reads a .pkd file directly).
+    /// Out-of-core streaming over the AOT runtime (reads a .pkd file
+    /// through the `stats_partial` executables —
+    /// [`crate::coordinator::streaming`]).
     Streaming,
+    /// Sharded out-of-core pure-rust engine over any
+    /// [`crate::data::DataSource`] ([`crate::kmeans::streaming`]):
+    /// bounded memory (`--memory-budget` / `--chunk`), bit-identical
+    /// to the in-memory engines.
+    OutOfCore,
 }
 
 impl std::str::FromStr for Engine {
@@ -38,9 +45,10 @@ impl std::str::FromStr for Engine {
             "hamerly" => Engine::Hamerly,
             "minibatch" => Engine::MiniBatch,
             "streaming" => Engine::Streaming,
+            "oocore" => Engine::OutOfCore,
             other => {
                 return Err(Error::Config(format!(
-                    "unknown engine `{other}` (serial|threads|shared|offload|elkan|hamerly|minibatch|streaming)"
+                    "unknown engine `{other}` (serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore)"
                 )))
             }
         })
@@ -58,6 +66,7 @@ impl std::fmt::Display for Engine {
             Engine::Hamerly => "hamerly",
             Engine::MiniBatch => "minibatch",
             Engine::Streaming => "streaming",
+            Engine::OutOfCore => "oocore",
         };
         f.write_str(s)
     }
@@ -100,10 +109,16 @@ pub struct RunConfig {
     pub init: Init,
     /// Worker/thread count (Threads/Shared engines).
     pub threads: usize,
-    /// Streaming chunk size for the AOT engines. 0 = auto: the planner
-    /// combines every artifact size available for (d, k); a nonzero
-    /// value pins one artifact (used by the A1 ablation).
+    /// Streaming chunk size, in rows. For the AOT engines 0 = auto
+    /// (the planner combines every artifact size available for (d, k);
+    /// a nonzero value pins one artifact — the A1 ablation). For the
+    /// out-of-core engine this is the per-shard chunk buffer; 0 defers
+    /// to [`memory_budget`](RunConfig::memory_budget) or the default.
     pub chunk: usize,
+    /// Resident-memory budget in bytes for the out-of-core engine's
+    /// chunk buffers (`--memory-budget`, parsed by [`parse_bytes`]).
+    /// 0 = unbounded. Ignored by the in-memory engines.
+    pub memory_budget: usize,
     /// Mini-batch size (MiniBatch engine only).
     pub batch: usize,
     /// Artifacts directory (AOT engines only).
@@ -127,11 +142,43 @@ impl Default for RunConfig {
             init: Init::Random,
             threads: 4,
             chunk: 0, // auto
+            memory_budget: 0, // unbounded
             batch: 8192,
             artifacts_dir: "artifacts".into(),
             kernel: KernelChoice::Auto,
         }
     }
+}
+
+/// Parse a byte count with an optional binary-unit suffix: `"65536"`,
+/// `"64K"`, `"8M"`, `"1G"` (case-insensitive; a trailing `B`/`iB` is
+/// accepted, so `64KiB` and `8mb` work). Used by `--memory-budget`.
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim();
+    let lower = t.to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = strip_unit(&lower, 'k') {
+        (d, 1usize << 10)
+    } else if let Some(d) = strip_unit(&lower, 'm') {
+        (d, 1usize << 20)
+    } else if let Some(d) = strip_unit(&lower, 'g') {
+        (d, 1usize << 30)
+    } else {
+        // plain bytes, with or without a bare B suffix ("1024B")
+        let body = lower.strip_suffix("ib").or_else(|| lower.strip_suffix('b')).unwrap_or(&lower);
+        (body, 1usize)
+    };
+    let n: usize = digits
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("cannot parse byte count `{s}` (use N, NK, NM, NG)")))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| Error::Config(format!("byte count `{s}` overflows")))
+}
+
+/// Strip a `<digits><unit>[b|ib]` suffix, returning the digit part.
+fn strip_unit<'a>(lower: &'a str, unit: char) -> Option<&'a str> {
+    let body = lower.strip_suffix("ib").or_else(|| lower.strip_suffix('b')).unwrap_or(lower);
+    body.strip_suffix(unit)
 }
 
 impl RunConfig {
@@ -177,6 +224,7 @@ mod tests {
             Engine::Hamerly,
             Engine::MiniBatch,
             Engine::Streaming,
+            Engine::OutOfCore,
         ] {
             let s = e.to_string();
             assert_eq!(s.parse::<Engine>().unwrap(), e);
@@ -204,6 +252,28 @@ mod tests {
         // chunk 0 is valid (auto)
         c = RunConfig { chunk: 0, ..Default::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("65536").unwrap(), 65536);
+        assert_eq!(parse_bytes("1024B").unwrap(), 1024);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("64KiB").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("8m").unwrap(), 8 << 20);
+        assert_eq!(parse_bytes("8MB").unwrap(), 8 << 20);
+        assert_eq!(parse_bytes("1G").unwrap(), 1 << 30);
+        assert_eq!(parse_bytes(" 2g ").unwrap(), 2 << 30);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("lots").is_err());
+        assert!(parse_bytes("12T").is_err());
+        assert!(parse_bytes("999999999999999999G").is_err());
+    }
+
+    #[test]
+    fn memory_budget_defaults_unbounded() {
+        assert_eq!(RunConfig::default().memory_budget, 0);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::kmeans::KmeansResult;
 /// Result + timing telemetry of one engine run.
 #[derive(Debug, Clone)]
 pub struct EngineRun {
+    /// The clustering itself (same shape every engine returns).
     pub result: KmeansResult,
     /// One-time setup: client creation + artifact compilation + data
     /// upload. Reported separately — the paper times the algorithm, and

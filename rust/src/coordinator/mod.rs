@@ -12,8 +12,14 @@
 //!   the host only shuttles centroids and checks convergence
 //!   (per-iteration fork/join onto the device).
 //!
-//! [`simtime`] provides the simulated-testbed clock used to report
-//! multi-core numbers from this 1-core container (DESIGN.md §8).
+//! [`streaming`] extends the offload model out of core: it pulls a
+//! `.pkd` file through the same executables chunk by chunk, keeping
+//! O(chunk + K·d) host memory (its pure-rust, sharded counterpart over
+//! any [`crate::data::DataSource`] is [`crate::kmeans::streaming`]).
+//! [`plan`] maps rows onto workers and shape-specialized executable
+//! calls; [`driver`] defines the [`EngineRun`] telemetry each engine
+//! returns; [`simtime`] provides the simulated-testbed clock used to
+//! report multi-core numbers from this 1-core container (DESIGN.md §8).
 
 pub mod driver;
 pub mod offload;

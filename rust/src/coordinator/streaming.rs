@@ -12,6 +12,10 @@
 //! iterations (it would defeat the memory bound), so every iteration
 //! re-uploads each chunk — exactly the regime where the paper's GPU
 //! streaming comparison lives. The A1 chunk ablation applies directly.
+//!
+//! The pure-rust counterpart (no AOT runtime, sharded workers, any
+//! [`crate::data::DataSource`]) is [`crate::kmeans::streaming`]; both
+//! share the `.pkd` header probe in [`crate::data::io`].
 
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -21,6 +25,7 @@ use std::time::Instant;
 use crate::config::RunConfig;
 use crate::coordinator::driver::EngineRun;
 use crate::coordinator::plan::chunk_calls;
+use crate::data::io::probe_binary;
 use crate::error::{Error, Result};
 use crate::kmeans::KmeansResult;
 use crate::rng::Pcg64;
@@ -36,28 +41,16 @@ pub struct FileInfo {
     payload_offset: u64,
 }
 
-const MAGIC: &[u8; 8] = b"PARAKMD1";
-
-/// Probe a `.pkd` file's header.
+/// Probe a `.pkd` file's header (validating facade over
+/// [`crate::data::io::probe_binary`]).
 pub fn probe(path: &Path) -> Result<FileInfo> {
-    let mut f = std::fs::File::open(path)?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Manifest(format!(
-            "{}: not a parakmeans dataset",
-            path.display()
-        )));
-    }
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let dim = u32::from_le_bytes(b4) as usize;
-    let mut b8 = [0u8; 8];
-    f.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    let mut b1 = [0u8; 1];
-    f.read_exact(&mut b1)?;
-    Ok(FileInfo { path: path.to_path_buf(), dim, n, payload_offset: 21 })
+    let h = probe_binary(path)?;
+    Ok(FileInfo {
+        path: path.to_path_buf(),
+        dim: h.dim,
+        n: h.n,
+        payload_offset: h.payload_offset,
+    })
 }
 
 /// One prefetched block: rows `[lo, hi)` padded to `chunk`.

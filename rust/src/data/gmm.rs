@@ -4,7 +4,7 @@
 //! using a mixture of Bivariate Gaussian Distributions of some mean and
 //! covariance"*, 2D sizes {100k, 200k, 500k} and 3D sizes
 //! {100k, 200k, 400k, 800k, 1M}. Exact parameters are unspecified
-//! (DESIGN.md §8), so [`MixtureSpec::paper_2d`]/[`paper_3d`] fix a
+//! (DESIGN.md §8), so [`MixtureSpec::paper_2d`]/[`MixtureSpec::paper_3d`] fix a
 //! deterministic family: component means on a jittered grid scaled to
 //! keep components distinguishable-but-overlapping (like the paper's
 //! Figure 5 clustering), random SPD covariances via Cholesky, equal
@@ -90,30 +90,92 @@ impl MixtureSpec {
         self.components.len()
     }
 
+    /// Stateful sequential row sampler seeded by `seed` — the
+    /// incremental form of [`MixtureSpec::generate`]. Drawing `n` rows
+    /// through a sampler yields exactly the bytes `generate(n, seed)`
+    /// would (the CLI's `gen-data --chunk` streaming path relies on
+    /// this to write files larger than RAM without changing content).
+    pub fn sampler(&self, seed: u64) -> MixtureSampler<'_> {
+        MixtureSampler {
+            spec: self,
+            rng: Pcg64::new(seed, 0xDA7A),
+            weights: self.components.iter().map(|c| c.weight).collect(),
+            scratch: SampleScratch::new(self.dim),
+        }
+    }
+
     /// Generate `n` points. Component choice and noise are both driven
     /// by `seed`; ground-truth labels are stored on the dataset.
     pub fn generate(&self, n: usize, seed: u64) -> Dataset {
-        let mut rng = Pcg64::new(seed, 0xDA7A);
-        let weights: Vec<f64> = self.components.iter().map(|c| c.weight).collect();
+        let mut sampler = self.sampler(seed);
         let mut ds = Dataset::with_capacity(self.dim, n);
         let mut truth = Vec::with_capacity(n);
-        let mut z = vec![0.0f64; self.dim];
         let mut pt = vec![0.0f32; self.dim];
         for _ in 0..n {
-            let ci = rng.next_weighted(&weights);
-            let comp = &self.components[ci];
-            for v in z.iter_mut() {
-                *v = rng.next_normal();
-            }
-            let noise = linalg::tril_matvec(&comp.chol, &z, self.dim);
-            for j in 0..self.dim {
-                pt[j] = (comp.mean[j] + noise[j]) as f32;
-            }
+            truth.push(sampler.next_row(&mut pt) as i32);
             ds.push(&pt);
-            truth.push(ci as i32);
         }
         ds.truth = Some(truth);
         ds
+    }
+}
+
+/// Sequential mixture sampler (see [`MixtureSpec::sampler`]). One RNG
+/// stream drives all rows, so rows must be drawn in order — for O(1)
+/// random access use [`crate::data::source::GmmSource`] instead.
+pub struct MixtureSampler<'a> {
+    spec: &'a MixtureSpec,
+    rng: Pcg64,
+    weights: Vec<f64>,
+    scratch: SampleScratch,
+}
+
+impl MixtureSampler<'_> {
+    /// Draw the next row into `pt` (`pt.len() == dim`), returning the
+    /// ground-truth component index.
+    pub fn next_row(&mut self, pt: &mut [f32]) -> usize {
+        self.spec.sample_row(&mut self.rng, &self.weights, &mut self.scratch, pt)
+    }
+}
+
+/// Caller-owned scratch for [`MixtureSpec::sample_row`] (`z` normals,
+/// `noise` = chol·z), so per-row sampling allocates nothing.
+pub(crate) struct SampleScratch {
+    z: Vec<f64>,
+    noise: Vec<f64>,
+}
+
+impl SampleScratch {
+    pub(crate) fn new(dim: usize) -> SampleScratch {
+        SampleScratch { z: vec![0.0f64; dim], noise: vec![0.0f64; dim] }
+    }
+}
+
+impl MixtureSpec {
+    /// The one row-sampling kernel both generator families share
+    /// (sequential [`MixtureSampler`] and the per-row-seeded
+    /// [`crate::data::source::GmmSource`]): weighted component pick,
+    /// `dim` standard normals through the component's Cholesky factor,
+    /// mean + noise narrowed to f32. `weights` and `scratch` are
+    /// caller-owned so the per-row hot loop allocates nothing.
+    pub(crate) fn sample_row(
+        &self,
+        rng: &mut Pcg64,
+        weights: &[f64],
+        scratch: &mut SampleScratch,
+        pt: &mut [f32],
+    ) -> usize {
+        debug_assert_eq!(pt.len(), self.dim);
+        let ci = rng.next_weighted(weights);
+        let comp = &self.components[ci];
+        for v in scratch.z.iter_mut() {
+            *v = rng.next_normal();
+        }
+        linalg::tril_matvec_into(&comp.chol, &scratch.z, self.dim, &mut scratch.noise);
+        for j in 0..self.dim {
+            pt[j] = (comp.mean[j] + scratch.noise[j]) as f32;
+        }
+        ci
     }
 }
 
@@ -146,6 +208,19 @@ pub mod workloads {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sampler_matches_generate_bitwise() {
+        let spec = MixtureSpec::paper_3d(4);
+        let ds = spec.generate(501, 9);
+        let mut sampler = spec.sampler(9);
+        let mut pt = vec![0.0f32; 3];
+        for i in 0..501 {
+            let ci = sampler.next_row(&mut pt);
+            assert_eq!(&pt[..], ds.point(i), "row {i}");
+            assert_eq!(ci as i32, ds.truth.as_ref().unwrap()[i], "label {i}");
+        }
+    }
 
     #[test]
     fn deterministic() {

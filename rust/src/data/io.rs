@@ -3,8 +3,14 @@
 //! Two formats:
 //! - **binary** (`.pkd`): little-endian, magic + dim + n + f32 payload
 //!   (+ optional truth labels). Fast path used by the CLI `gen-data` /
-//!   `run` round trip for the 1M-point workloads.
+//!   `run` round trip for the 1M-point workloads, and the format the
+//!   out-of-core [`crate::data::source::FileSource`] streams from.
 //! - **CSV**: one point per row, interchange with external tools.
+//!
+//! All readers return typed errors (DESIGN.md §8 error taxonomy):
+//! [`Error::Data`] for content that is present but wrong (bad magic,
+//! truncated payload, ragged or non-numeric CSV rows), [`Error::Io`]
+//! only when the OS itself fails to read.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -14,59 +20,226 @@ use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"PARAKMD1";
 
-/// Write the binary format.
-pub fn write_binary(path: &Path, ds: &Dataset) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(ds.dim() as u32).to_le_bytes())?;
-    w.write_all(&(ds.len() as u64).to_le_bytes())?;
-    let has_truth = ds.truth.is_some() as u8;
-    w.write_all(&[has_truth])?;
-    for v in ds.raw() {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    if let Some(truth) = &ds.truth {
-        for t in truth {
-            w.write_all(&t.to_le_bytes())?;
-        }
-    }
-    Ok(())
+/// Fixed size of the `.pkd` header: magic (8) + dim (4) + n (8) +
+/// has_truth (1).
+pub const BIN_HEADER_BYTES: u64 = 21;
+
+/// Parsed `.pkd` header — everything needed to stream the payload
+/// without loading it (see [`probe_binary`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinHeader {
+    /// Point dimensionality.
+    pub dim: usize,
+    /// Number of points in the payload.
+    pub n: usize,
+    /// Whether `n` i32 ground-truth labels follow the payload.
+    pub has_truth: bool,
+    /// Byte offset of the first payload row.
+    pub payload_offset: u64,
 }
 
-/// Read the binary format.
-pub fn read_binary(path: &Path) -> Result<Dataset> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Manifest(format!(
-            "{}: not a parakmeans dataset (bad magic)",
-            path.display()
-        )));
+impl BinHeader {
+    /// Byte offset of row `i` (row-major f32 payload).
+    pub fn row_offset(&self, i: usize) -> u64 {
+        self.payload_offset + (i * self.dim * 4) as u64
     }
-    let mut b4 = [0u8; 4];
-    r.read_exact(&mut b4)?;
-    let dim = u32::from_le_bytes(b4) as usize;
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    let mut b1 = [0u8; 1];
-    r.read_exact(&mut b1)?;
-    let has_truth = b1[0] != 0;
 
-    let mut payload = vec![0u8; n * dim * 4];
-    r.read_exact(&mut payload)?;
-    let mut data = Vec::with_capacity(n * dim);
+    /// Byte offset of the truth-label section (just past the payload).
+    pub fn truth_offset(&self) -> u64 {
+        self.row_offset(self.n)
+    }
+}
+
+/// Read and validate a `.pkd` header without touching the payload —
+/// the entry point for out-of-core streaming (O(1) memory regardless
+/// of file size).
+pub fn probe_binary(path: &Path) -> Result<BinHeader> {
+    let mut r = std::fs::File::open(path)?;
+    let mut head = [0u8; BIN_HEADER_BYTES as usize];
+    r.read_exact(&mut head).map_err(|e| {
+        data_err(path, format!("file too short for a dataset header: {e}"))
+    })?;
+    if &head[..8] != MAGIC {
+        return Err(data_err(path, "not a parakmeans dataset (bad magic)".into()));
+    }
+    let dim = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize;
+    let n_u64 = u64::from_le_bytes([
+        head[12], head[13], head[14], head[15], head[16], head[17], head[18], head[19],
+    ]);
+    // validate in u64 BEFORE narrowing: on a 32-bit target an `as`
+    // cast would truncate a lying header right past the guards below
+    let n = usize::try_from(n_u64)
+        .map_err(|_| data_err(path, format!("implausible header: n={n_u64}")))?;
+    let has_truth = head[20] != 0;
+    if dim == 0 {
+        return Err(data_err(path, "header declares dim = 0".into()));
+    }
+    // implausible (n, dim) combinations would overflow the payload size
+    // computation and panic on allocation — reject them as corrupt
+    if n.checked_mul(dim).and_then(|v| v.checked_mul(4)).is_none() {
+        return Err(data_err(path, format!("implausible header: n={n} dim={dim}")));
+    }
+    // the declared content must actually be on disk: catching a huge
+    // (but representable) lying n here turns an attacker-sized
+    // allocation or a mid-stream surprise into a typed error up front
+    let file_len = r.metadata()?.len() as u128;
+    let need = BIN_HEADER_BYTES as u128
+        + n as u128 * dim as u128 * 4
+        + if has_truth { n as u128 * 4 } else { 0 };
+    if file_len < need {
+        return Err(data_err(
+            path,
+            format!("truncated or corrupt: file is {file_len} B, header declares {need} B"),
+        ));
+    }
+    Ok(BinHeader { dim, n, has_truth, payload_offset: BIN_HEADER_BYTES })
+}
+
+fn data_err(path: &Path, msg: String) -> Error {
+    Error::Data(format!("{}: {msg}", path.display()))
+}
+
+/// Incremental `.pkd` writer: header up front, rows appended in chunks,
+/// truth labels (if promised) on [`BinWriter::finish`]. Memory is
+/// O(one chunk) — how `gen-data --chunk` synthesizes files larger than
+/// RAM. [`write_binary`] is the whole-dataset convenience over this.
+pub struct BinWriter {
+    w: BufWriter<std::fs::File>,
+    dim: usize,
+    n: usize,
+    has_truth: bool,
+    rows_written: usize,
+    truth_written: usize,
+}
+
+impl BinWriter {
+    /// Create `path` (and parent dirs) and write the header for `n`
+    /// points of `dim` coordinates.
+    pub fn create(path: &Path, dim: usize, n: usize, has_truth: bool) -> Result<BinWriter> {
+        if dim == 0 {
+            return Err(Error::Shape("dim must be > 0".into()));
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(dim as u32).to_le_bytes())?;
+        w.write_all(&(n as u64).to_le_bytes())?;
+        w.write_all(&[has_truth as u8])?;
+        Ok(BinWriter { w, dim, n, has_truth, rows_written: 0, truth_written: 0 })
+    }
+
+    /// Append a row-major block of points (`rows.len() % dim == 0`).
+    pub fn write_rows(&mut self, rows: &[f32]) -> Result<()> {
+        if rows.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "block len {} not divisible by dim {}",
+                rows.len(),
+                self.dim
+            )));
+        }
+        let nrows = rows.len() / self.dim;
+        if self.rows_written + nrows > self.n {
+            return Err(Error::Shape(format!(
+                "writing {} rows past the declared n = {}",
+                self.rows_written + nrows - self.n,
+                self.n
+            )));
+        }
+        for v in rows {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        self.rows_written += nrows;
+        Ok(())
+    }
+
+    /// Append a block of truth labels (iff promised at creation). Only
+    /// valid once all `n` rows are written — the truth section follows
+    /// the payload on disk. Incremental, so label memory stays
+    /// O(block) for streamed writes.
+    pub fn write_truth(&mut self, labels: &[i32]) -> Result<()> {
+        if !self.has_truth {
+            return Err(Error::Shape("truth labels given but header says none".into()));
+        }
+        if self.rows_written != self.n {
+            return Err(Error::Shape(format!(
+                "truth written after only {} of {} rows",
+                self.rows_written, self.n
+            )));
+        }
+        if self.truth_written + labels.len() > self.n {
+            return Err(Error::Shape(format!(
+                "writing {} truth labels past the declared n = {}",
+                self.truth_written + labels.len() - self.n,
+                self.n
+            )));
+        }
+        for t in labels {
+            self.w.write_all(&t.to_le_bytes())?;
+        }
+        self.truth_written += labels.len();
+        Ok(())
+    }
+
+    /// Write any remaining truth labels and flush. Errors if the row
+    /// count or label count does not match the header.
+    pub fn finish(mut self, truth: Option<&[i32]>) -> Result<()> {
+        if self.rows_written != self.n {
+            return Err(Error::Shape(format!(
+                "wrote {} rows, header declares {}",
+                self.rows_written, self.n
+            )));
+        }
+        if let Some(labels) = truth {
+            self.write_truth(labels)?;
+        }
+        if self.has_truth && self.truth_written != self.n {
+            return Err(Error::Shape(format!(
+                "{} truth labels for {} points",
+                self.truth_written, self.n
+            )));
+        }
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Write the binary format.
+pub fn write_binary(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut w = BinWriter::create(path, ds.dim(), ds.len(), ds.truth.is_some())?;
+    w.write_rows(ds.raw())?;
+    w.finish(ds.truth.as_deref())
+}
+
+/// Read the binary format into memory. For files that must not be
+/// loaded whole, stream via [`crate::data::source::FileSource`] instead.
+pub fn read_binary(path: &Path) -> Result<Dataset> {
+    let header = probe_binary(path)?;
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut skip = [0u8; BIN_HEADER_BYTES as usize];
+    r.read_exact(&mut skip)?;
+
+    let mut payload = vec![0u8; header.n * header.dim * 4];
+    r.read_exact(&mut payload).map_err(|e| {
+        data_err(
+            path,
+            format!(
+                "truncated payload: header declares {} × {}D points ({e})",
+                header.n, header.dim
+            ),
+        )
+    })?;
+    let mut data = Vec::with_capacity(header.n * header.dim);
     for c in payload.chunks_exact(4) {
         data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
     }
-    let mut ds = Dataset::from_vec(data, dim)?;
-    if has_truth {
-        let mut tbuf = vec![0u8; n * 4];
-        r.read_exact(&mut tbuf)?;
+    let mut ds = Dataset::from_vec(data, header.dim)?;
+    if header.has_truth {
+        let mut tbuf = vec![0u8; header.n * 4];
+        r.read_exact(&mut tbuf).map_err(|e| {
+            data_err(path, format!("truncated truth section: expected {} labels ({e})", header.n))
+        })?;
         let truth: Vec<i32> = tbuf
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -76,37 +249,61 @@ pub fn read_binary(path: &Path) -> Result<Dataset> {
     Ok(ds)
 }
 
+/// CSV header line for `dim` columns (`x0,x1,...`) — shared with the
+/// CLI's streamed generator path so the two writers cannot drift.
+pub fn csv_header(dim: usize) -> String {
+    (0..dim).map(|j| format!("x{j}")).collect::<Vec<_>>().join(",")
+}
+
+/// One CSV data row (same formatting as [`write_csv`]).
+pub fn csv_row(point: &[f32]) -> String {
+    point.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+}
+
 /// Write CSV (no truth labels; header `x0,x1,...`).
 pub fn write_csv(path: &Path, ds: &Dataset) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut w = BufWriter::new(std::fs::File::create(path)?);
-    let header: Vec<String> = (0..ds.dim()).map(|j| format!("x{j}")).collect();
-    writeln!(w, "{}", header.join(","))?;
+    writeln!(w, "{}", csv_header(ds.dim()))?;
     for i in 0..ds.len() {
-        let cells: Vec<String> = ds.point(i).iter().map(|v| format!("{v}")).collect();
-        writeln!(w, "{}", cells.join(","))?;
+        writeln!(w, "{}", csv_row(ds.point(i)))?;
     }
     Ok(())
 }
 
 /// Read CSV produced by [`write_csv`] (or any numeric CSV with header).
+///
+/// Rejects ragged rows (cell count ≠ header width) and non-numeric or
+/// non-finite cells with [`Error::Data`] naming the offending row — a
+/// dataset with silent `NaN` points would poison every distance.
 pub fn read_csv(path: &Path) -> Result<Dataset> {
     let (header, rows) = crate::util::csv::read_table(path)?;
     let dim = header.len();
     if dim == 0 {
-        return Err(Error::Shape("csv has no columns".into()));
+        return Err(data_err(path, "csv has no columns".into()));
     }
     let mut data = Vec::with_capacity(rows.len() * dim);
     for (i, row) in rows.iter().enumerate() {
         if row.len() != dim {
-            return Err(Error::Shape(format!(
-                "csv row {i} has {} cells, expected {dim}",
-                row.len()
-            )));
+            return Err(data_err(
+                path,
+                format!("csv row {i} has {} cells, expected {dim}", row.len()),
+            ));
         }
-        data.extend(row.iter().map(|&v| v as f32));
+        for (j, &v) in row.iter().enumerate() {
+            // check after the f32 narrowing: a cell like 1e39 is
+            // finite in f64 but saturates to inf as f32
+            let f = v as f32;
+            if !f.is_finite() {
+                return Err(data_err(
+                    path,
+                    format!("csv row {i}, column {j}: non-numeric, non-finite or out-of-range"),
+                ));
+            }
+            data.push(f);
+        }
     }
     Dataset::from_vec(data, dim)
 }
@@ -144,10 +341,78 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn probe_reads_header_without_payload() {
+        let ds = MixtureSpec::paper_3d(4).generate(1234, 7);
+        let p = tmp("probe.pkd");
+        write_binary(&p, &ds).unwrap();
+        let h = probe_binary(&p).unwrap();
+        assert_eq!(h.dim, 3);
+        assert_eq!(h.n, 1234);
+        assert!(h.has_truth);
+        assert_eq!(h.payload_offset, BIN_HEADER_BYTES);
+        assert_eq!(h.row_offset(10), BIN_HEADER_BYTES + 120);
+        assert_eq!(h.truth_offset(), BIN_HEADER_BYTES + 1234 * 12);
+    }
+
+    #[test]
+    fn rejects_bad_magic_typed() {
         let p = tmp("bad.pkd");
-        std::fs::write(&p, b"NOTMAGIC123456").unwrap();
-        assert!(read_binary(&p).is_err());
+        std::fs::write(&p, b"NOTMAGIC123456789012345").unwrap();
+        let err = read_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_short_header_typed() {
+        let p = tmp("short.pkd");
+        std::fs::write(&p, b"PARA").unwrap();
+        let err = probe_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+    }
+
+    #[test]
+    fn rejects_zero_dim_header() {
+        let p = tmp("zdim.pkd");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = probe_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+    }
+
+    #[test]
+    fn rejects_implausible_header() {
+        let p = tmp("huge.pkd");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = probe_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn rejects_lying_header_before_allocation() {
+        // representable but false n: the declared payload must be on
+        // disk, or probe fails typed instead of read_binary attempting
+        // a header-sized allocation
+        let p = tmp("liar.pkd");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = probe_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("truncated or corrupt"), "{err}");
     }
 
     #[test]
@@ -167,12 +432,110 @@ mod tests {
     }
 
     #[test]
-    fn truncated_binary_errors() {
+    fn truncated_binary_errors_typed() {
         let ds = MixtureSpec::paper_2d(4).generate(64, 3);
         let p = tmp("trunc.pkd");
         write_binary(&p, &ds).unwrap();
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(read_binary(&p).is_err());
+        let err = read_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn truncated_truth_section_errors_typed() {
+        let ds = MixtureSpec::paper_2d(4).generate(64, 3);
+        let p = tmp("trunc_truth.pkd");
+        write_binary(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // keep the payload intact, cut the truth labels short
+        let keep = BIN_HEADER_BYTES as usize + 64 * 2 * 4 + 10;
+        std::fs::write(&p, &bytes[..keep]).unwrap();
+        let err = read_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn ragged_csv_row_errors_typed() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "x0,x1\n1.0,2.0\n3.0\n").unwrap();
+        let err = read_csv(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("row 1"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_csv_cell_errors_typed() {
+        let p = tmp("garbage.csv");
+        std::fs::write(&p, "x0,x1\n1.0,2.0\n3.0,banana\n").unwrap();
+        let err = read_csv(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("row 1"), "{err}");
+    }
+
+    #[test]
+    fn f32_overflowing_csv_cell_errors_typed() {
+        // finite in f64, +inf after the f32 narrowing — must not pass
+        let p = tmp("overflow.csv");
+        std::fs::write(&p, "x0,x1\n1.0,2.0\n3.0,1e39\n").unwrap();
+        let err = read_csv(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("row 1, column 1"), "{err}");
+    }
+
+    #[test]
+    fn bin_writer_streams_in_chunks() {
+        let ds = MixtureSpec::paper_3d(4).generate(301, 5);
+        let p = tmp("chunked.pkd");
+        let mut w = BinWriter::create(&p, 3, 301, true).unwrap();
+        // ragged chunking: 100 + 100 + 101 rows
+        w.write_rows(ds.rows(0, 100)).unwrap();
+        w.write_rows(ds.rows(100, 200)).unwrap();
+        w.write_rows(ds.rows(200, 301)).unwrap();
+        w.finish(ds.truth.as_deref()).unwrap();
+        // byte-identical to the whole-dataset writer
+        let p2 = tmp("whole.pkd");
+        write_binary(&p2, &ds).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn bin_writer_incremental_truth_matches_one_shot() {
+        let ds = MixtureSpec::paper_2d(4).generate(100, 7);
+        let truth = ds.truth.clone().unwrap();
+        let one_shot = tmp("truth_oneshot.pkd");
+        write_binary(&one_shot, &ds).unwrap();
+
+        let streamed = tmp("truth_streamed.pkd");
+        let mut w = BinWriter::create(&streamed, 2, 100, true).unwrap();
+        w.write_rows(ds.raw()).unwrap();
+        w.write_truth(&truth[..40]).unwrap();
+        w.write_truth(&truth[40..]).unwrap();
+        w.finish(None).unwrap();
+        assert_eq!(std::fs::read(&one_shot).unwrap(), std::fs::read(&streamed).unwrap());
+
+        // truth before the payload completes is rejected
+        let mut w = BinWriter::create(&tmp("early.pkd"), 2, 2, true).unwrap();
+        assert!(w.write_truth(&[0]).is_err());
+        // overrunning the label count is rejected
+        let mut w = BinWriter::create(&tmp("over.pkd"), 2, 1, true).unwrap();
+        w.write_rows(&[1.0, 2.0]).unwrap();
+        assert!(w.write_truth(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn bin_writer_validates_counts() {
+        let p = tmp("wv.pkd");
+        let mut w = BinWriter::create(&p, 2, 3, false).unwrap();
+        w.write_rows(&[1.0, 2.0]).unwrap();
+        assert!(w.write_rows(&[1.0, 2.0, 3.0]).is_err()); // ragged block
+        assert!(w.write_rows(&[0.0; 8]).is_err()); // past declared n
+        assert!(w.finish(None).is_err()); // short: 1 of 3 rows written
+
+        let mut w = BinWriter::create(&p, 2, 1, false).unwrap();
+        w.write_rows(&[1.0, 2.0]).unwrap();
+        assert!(w.finish(Some(&[0])).is_err()); // unpromised truth
     }
 }

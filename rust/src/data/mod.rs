@@ -1,9 +1,19 @@
 //! Datasets: container, synthetic Gaussian-mixture generation (the
-//! paper's 2D/3D dataset families), and binary/CSV interchange.
+//! paper's 2D/3D dataset families), binary/CSV interchange, and the
+//! out-of-core [`source::DataSource`] abstraction that lets engines
+//! stream data larger than RAM (DESIGN.md §4).
+//!
+//! Layering: [`Dataset`] is the resident container every in-memory
+//! engine consumes; [`source`] generalizes it to chunked streams
+//! (memory, `.pkd` file, on-the-fly generator); [`io`] is the disk
+//! format shared by the CLI, the eval harness and [`source::FileSource`];
+//! [`gmm`] synthesizes the paper's dataset families.
 
 pub mod dataset;
 pub mod gmm;
 pub mod io;
+pub mod source;
 
 pub use dataset::Dataset;
 pub use gmm::MixtureSpec;
+pub use source::{DataSource, FileSource, GmmSource, MemorySource};

@@ -1,0 +1,728 @@
+//! Out-of-core data sources (DESIGN.md §4).
+//!
+//! The in-memory [`Dataset`] caps `n` at physical RAM — far below the
+//! "big data" scale the paper's title claims. A [`DataSource`] removes
+//! that cap: it describes `n × dim` rows that engines *stream* in
+//! fixed-size chunks instead of holding resident, so a clustering
+//! run's working set is O(chunk), not O(n). Three implementations:
+//!
+//! - [`MemorySource`] — wraps a [`Dataset`]; chunks are zero-copy
+//!   subslices of the resident buffer (the degenerate case, used to
+//!   run the streaming engine against in-memory references).
+//! - [`FileSource`] — buffered streaming over the `.pkd` binary format
+//!   ([`crate::data::io`]); each reader owns an independent file
+//!   handle, so shard workers stream concurrently.
+//! - [`GmmSource`] — synthesizes rows on the fly from a seeded
+//!   [`MixtureSpec`]. Row `i` is derived from an `i`-indexed RNG
+//!   stream, so any chunking (and any shard decomposition) yields
+//!   bit-identical bytes — and `n` can exceed not just RAM but disk.
+//!
+//! ## The chunk contract
+//!
+//! A reader obtained from [`DataSource::reader`]`(lo, hi, chunk_rows)`
+//! yields non-empty chunks that tile `[lo, hi)` contiguously in
+//! ascending row order, each at most `chunk_rows` rows. Consumers rely
+//! on this for the chunked-accumulation guarantee (see
+//! [`crate::kmeans::streaming`]): folding chunks in arrival order is
+//! bit-identical to processing the whole range at once. The engine
+//! verifies the tiling at runtime and reports [`Error::Data`] on a
+//! source that violates it.
+//!
+//! ```
+//! use parakmeans::data::gmm::MixtureSpec;
+//! use parakmeans::data::source::{ChunkReader, DataSource, GmmSource, MemorySource};
+//!
+//! // a generator-backed source: rows are synthesized on the fly
+//! let src = GmmSource::new(MixtureSpec::paper_2d(4), 10_000, 7);
+//! assert_eq!((src.len(), src.dim()), (10_000, 2));
+//!
+//! // stream rows [100, 300) in chunks of at most 128 rows
+//! let mut reader = src.reader(100, 300, 128).unwrap();
+//! let mut rows_seen = 0;
+//! while let Some(chunk) = reader.next_chunk().unwrap() {
+//!     rows_seen += chunk.rows.len() / src.dim();
+//! }
+//! assert_eq!(rows_seen, 200);
+//!
+//! // the same rows materialized: in-memory zero-copy access
+//! let ds = src.materialize();
+//! let mem = MemorySource::new(&ds);
+//! assert_eq!(mem.len(), 10_000);
+//! ```
+
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::data::gmm::MixtureSpec;
+use crate::data::io::{self, BinHeader};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::rng::Pcg64;
+
+/// Rows per pass used by the default [`DataSource::gather`].
+const GATHER_CHUNK_ROWS: usize = 8192;
+
+/// One block of rows handed out by a [`ChunkReader`].
+#[derive(Debug)]
+pub struct Chunk<'a> {
+    /// Global index of the first row in this chunk.
+    pub lo: usize,
+    /// Row-major data, `dim` wide (`rows.len() / dim` rows). Valid
+    /// until the next [`ChunkReader::next_chunk`] call.
+    pub rows: &'a [f32],
+}
+
+/// Sequential chunk iterator over a row range (see the module-level
+/// chunk contract).
+pub trait ChunkReader {
+    /// The next chunk in ascending row order, or `None` once the range
+    /// is exhausted. The returned slice borrows the reader's internal
+    /// buffer and is valid until the next call.
+    fn next_chunk(&mut self) -> Result<Option<Chunk<'_>>>;
+}
+
+/// A dataset that engines stream in fixed-size chunks instead of
+/// holding resident (module docs: the chunk contract, implementations).
+pub trait DataSource: Sync {
+    /// Point dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Total number of rows.
+    fn len(&self) -> usize;
+
+    /// `true` iff the source has no rows.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Open an independent reader over rows `[lo, hi)` yielding chunks
+    /// of at most `chunk_rows` rows. Readers are independent: engines
+    /// open one per shard worker and per pass, concurrently.
+    fn reader(&self, lo: usize, hi: usize, chunk_rows: usize) -> Result<Box<dyn ChunkReader + '_>>;
+
+    /// Whether [`DataSource::truth`] would return labels — an O(1)
+    /// probe so callers can decide against the O(n) fetch.
+    fn has_truth(&self) -> bool {
+        false
+    }
+
+    /// Ground-truth component labels when the source carries them
+    /// (synthetic data), `None` otherwise. O(n·4) bytes — the same
+    /// order as the assignment vector every engine already returns,
+    /// but check your memory budget before asking (see
+    /// [`DataSource::has_truth`]).
+    fn truth(&self) -> Result<Option<Vec<i32>>> {
+        Ok(None)
+    }
+
+    /// One-line description for run reports.
+    fn describe(&self) -> String;
+
+    /// Fetch `indices` (any order, duplicates allowed) in one bounded-
+    /// memory pass, returning the rows concatenated *in the order of
+    /// `indices`* — what seeded random initialization needs.
+    fn gather(&self, indices: &[usize]) -> Result<Vec<f32>> {
+        let d = self.dim();
+        let n = self.len();
+        let mut order: Vec<(usize, usize)> =
+            indices.iter().copied().enumerate().map(|(pos, idx)| (idx, pos)).collect();
+        for &(idx, _) in &order {
+            if idx >= n {
+                return Err(Error::Config(format!("gather: row {idx} out of range (n = {n})")));
+            }
+        }
+        order.sort_unstable();
+        let mut out = vec![0.0f32; indices.len() * d];
+        let mut pending = order.into_iter().peekable();
+        let mut reader = self.reader(0, n, GATHER_CHUNK_ROWS)?;
+        let mut next = 0usize;
+        while let Some(chunk) = reader.next_chunk()? {
+            // verify the tiling contract so a misbehaving reader is a
+            // typed error, not an index underflow
+            if chunk.lo != next || chunk.rows.is_empty() || chunk.rows.len() % d != 0 {
+                return Err(Error::Data(format!(
+                    "{}: reader broke the chunk contract at row {next} (chunk lo {}, len {})",
+                    self.describe(),
+                    chunk.lo,
+                    chunk.rows.len()
+                )));
+            }
+            let chunk_end = chunk.lo + chunk.rows.len() / d;
+            next = chunk_end;
+            while let Some(&(idx, pos)) = pending.peek() {
+                if idx >= chunk_end {
+                    break;
+                }
+                let r = idx - chunk.lo;
+                out[pos * d..(pos + 1) * d].copy_from_slice(&chunk.rows[r * d..(r + 1) * d]);
+                pending.next();
+            }
+            if pending.peek().is_none() {
+                break;
+            }
+        }
+        if pending.peek().is_some() {
+            return Err(Error::Data(format!(
+                "{}: reader ended before all gathered rows were seen",
+                self.describe()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+fn check_reader_args(lo: usize, hi: usize, n: usize, chunk_rows: usize) -> Result<()> {
+    if chunk_rows == 0 {
+        return Err(Error::Config("reader: chunk_rows must be >= 1".into()));
+    }
+    if lo > hi || hi > n {
+        return Err(Error::Shape(format!("reader: range [{lo}, {hi}) out of bounds for n = {n}")));
+    }
+    Ok(())
+}
+
+// ---- in-memory (zero-copy) ---------------------------------------------
+
+/// Zero-copy [`DataSource`] over a resident [`Dataset`]: chunks are
+/// subslices of the dataset's own buffer.
+pub struct MemorySource<'a> {
+    ds: &'a Dataset,
+}
+
+impl<'a> MemorySource<'a> {
+    pub fn new(ds: &'a Dataset) -> MemorySource<'a> {
+        MemorySource { ds }
+    }
+}
+
+struct MemReader<'a> {
+    ds: &'a Dataset,
+    cur: usize,
+    hi: usize,
+    chunk_rows: usize,
+}
+
+impl ChunkReader for MemReader<'_> {
+    fn next_chunk(&mut self) -> Result<Option<Chunk<'_>>> {
+        if self.cur >= self.hi {
+            return Ok(None);
+        }
+        let hi = (self.cur + self.chunk_rows).min(self.hi);
+        let chunk = Chunk { lo: self.cur, rows: self.ds.rows(self.cur, hi) };
+        self.cur = hi;
+        Ok(Some(chunk))
+    }
+}
+
+impl DataSource for MemorySource<'_> {
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    fn reader(&self, lo: usize, hi: usize, chunk_rows: usize) -> Result<Box<dyn ChunkReader + '_>> {
+        check_reader_args(lo, hi, self.len(), chunk_rows)?;
+        Ok(Box::new(MemReader { ds: self.ds, cur: lo, hi, chunk_rows }))
+    }
+
+    fn has_truth(&self) -> bool {
+        self.ds.truth.is_some()
+    }
+
+    fn truth(&self) -> Result<Option<Vec<i32>>> {
+        Ok(self.ds.truth.clone())
+    }
+
+    fn describe(&self) -> String {
+        format!("memory({} × {}D)", self.ds.len(), self.ds.dim())
+    }
+}
+
+// ---- file-backed (.pkd streaming) --------------------------------------
+
+/// Buffered streaming [`DataSource`] over a `.pkd` binary file
+/// ([`crate::data::io`] format). Holds only the parsed header; every
+/// reader opens its own handle, so shards stream concurrently and a
+/// run's resident set is O(shards × chunk × dim).
+pub struct FileSource {
+    path: PathBuf,
+    header: BinHeader,
+}
+
+impl FileSource {
+    /// Probe `path`'s header ([`io::probe_binary`]) without reading the
+    /// payload.
+    pub fn open(path: &Path) -> Result<FileSource> {
+        let header = io::probe_binary(path)?;
+        Ok(FileSource { path: path.to_path_buf(), header })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+struct FileReader {
+    path: PathBuf,
+    r: BufReader<std::fs::File>,
+    dim: usize,
+    cur: usize,
+    hi: usize,
+    chunk_rows: usize,
+    byte_buf: Vec<u8>,
+    row_buf: Vec<f32>,
+}
+
+impl ChunkReader for FileReader {
+    fn next_chunk(&mut self) -> Result<Option<Chunk<'_>>> {
+        if self.cur >= self.hi {
+            return Ok(None);
+        }
+        let nrows = (self.hi - self.cur).min(self.chunk_rows);
+        self.byte_buf.resize(nrows * self.dim * 4, 0);
+        self.r.read_exact(&mut self.byte_buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Error::Data(format!(
+                    "{}: truncated payload at row {} (header promises more)",
+                    self.path.display(),
+                    self.cur
+                ))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        self.row_buf.clear();
+        self.row_buf.extend(
+            self.byte_buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        let lo = self.cur;
+        self.cur += nrows;
+        Ok(Some(Chunk { lo, rows: &self.row_buf }))
+    }
+}
+
+impl DataSource for FileSource {
+    fn dim(&self) -> usize {
+        self.header.dim
+    }
+
+    fn len(&self) -> usize {
+        self.header.n
+    }
+
+    fn reader(&self, lo: usize, hi: usize, chunk_rows: usize) -> Result<Box<dyn ChunkReader + '_>> {
+        check_reader_args(lo, hi, self.len(), chunk_rows)?;
+        let f = std::fs::File::open(&self.path)?;
+        // IO buffer at most one chunk payload (capped at 1 MiB) so a
+        // small --memory-budget is never exceeded by buffering — the
+        // ×3 overhead (IO buffer + raw bytes + decoded rows) is
+        // exactly what StreamOpts::resolve budgets for
+        let cap = (chunk_rows * self.header.dim * 4).min(1 << 20);
+        let mut r = BufReader::with_capacity(cap, f);
+        r.seek(SeekFrom::Start(self.header.row_offset(lo)))?;
+        Ok(Box::new(FileReader {
+            path: self.path.clone(),
+            r,
+            dim: self.header.dim,
+            cur: lo,
+            hi,
+            chunk_rows,
+            byte_buf: Vec::new(),
+            row_buf: Vec::new(),
+        }))
+    }
+
+    fn has_truth(&self) -> bool {
+        self.header.has_truth
+    }
+
+    fn truth(&self) -> Result<Option<Vec<i32>>> {
+        if !self.header.has_truth {
+            return Ok(None);
+        }
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(self.header.truth_offset()))?;
+        let mut buf = vec![0u8; self.header.n * 4];
+        f.read_exact(&mut buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Error::Data(format!("{}: truncated truth section", self.path.display()))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        Ok(Some(
+            buf.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+        ))
+    }
+
+    fn describe(&self) -> String {
+        format!("file({}, {} × {}D)", self.path.display(), self.header.n, self.header.dim)
+    }
+
+    /// O(k) seeks instead of the default full-stream pass.
+    fn gather(&self, indices: &[usize]) -> Result<Vec<f32>> {
+        let d = self.header.dim;
+        let mut out = vec![0.0f32; indices.len() * d];
+        let mut f = std::fs::File::open(&self.path)?;
+        let mut buf = vec![0u8; d * 4];
+        for (pos, &idx) in indices.iter().enumerate() {
+            if idx >= self.header.n {
+                return Err(Error::Config(format!(
+                    "gather: row {idx} out of range (n = {})",
+                    self.header.n
+                )));
+            }
+            f.seek(SeekFrom::Start(self.header.row_offset(idx)))?;
+            f.read_exact(&mut buf).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    Error::Data(format!("{}: truncated payload at row {idx}", self.path.display()))
+                } else {
+                    Error::Io(e)
+                }
+            })?;
+            for (j, c) in buf.chunks_exact(4).enumerate() {
+                out[pos * d + j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---- generator-backed (unbounded n) ------------------------------------
+
+/// On-the-fly seeded GMM [`DataSource`]: row `i` is a pure function of
+/// `(spec, seed, i)` via an `i`-indexed RNG stream, so any chunk size
+/// and any shard decomposition observe bit-identical bytes — and `n`
+/// is bounded by neither RAM nor disk.
+///
+/// Note this *streamed* family draws a different (equally distributed)
+/// sample sequence than [`MixtureSpec::generate`], whose single
+/// sequential RNG cannot be entered mid-stream in O(1). The two
+/// families share specs, and [`GmmSource::materialize`] produces the
+/// streamed family's exact rows in memory for cross-checking.
+pub struct GmmSource {
+    spec: MixtureSpec,
+    n: usize,
+    seed: u64,
+    /// Unnormalized component weights, precomputed from the spec.
+    weights: Vec<f64>,
+}
+
+impl GmmSource {
+    pub fn new(spec: MixtureSpec, n: usize, seed: u64) -> GmmSource {
+        let weights = spec.components.iter().map(|c| c.weight).collect();
+        GmmSource { spec, n, seed, weights }
+    }
+
+    /// Paper-family source: the 2D/3D specs of
+    /// [`MixtureSpec::paper_2d`]/[`MixtureSpec::paper_3d`] with their
+    /// generator component counts.
+    pub fn paper(dim: usize, n: usize, seed: u64) -> Result<GmmSource> {
+        use crate::data::gmm::workloads;
+        let spec = match dim {
+            2 => MixtureSpec::paper_2d(workloads::GEN_K_2D),
+            3 => MixtureSpec::paper_3d(workloads::GEN_K_3D),
+            d => return Err(Error::Config(format!("paper GMM families are 2D/3D, got {d}D"))),
+        };
+        Ok(GmmSource::new(spec, n, seed))
+    }
+
+    fn row_rng(&self, i: usize) -> Pcg64 {
+        Pcg64::new(
+            self.seed.wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            0x6A11 ^ i as u64,
+        )
+    }
+
+    /// Ground-truth component of row `i` (the row's first RNG draw, so
+    /// no coordinates are synthesized).
+    pub fn label_of(&self, i: usize) -> i32 {
+        self.row_rng(i).next_weighted(&self.weights) as i32
+    }
+
+    /// Append rows `[lo, hi)` (and their labels, if asked) to `out`.
+    pub fn generate_into(
+        &self,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+        mut labels: Option<&mut Vec<i32>>,
+    ) {
+        let d = self.spec.dim;
+        let mut scratch = crate::data::gmm::SampleScratch::new(d);
+        let mut pt = vec![0.0f32; d];
+        for i in lo..hi {
+            let mut rng = self.row_rng(i);
+            let ci = self.spec.sample_row(&mut rng, &self.weights, &mut scratch, &mut pt);
+            out.extend_from_slice(&pt);
+            if let Some(lbls) = labels.as_mut() {
+                lbls.push(ci as i32);
+            }
+        }
+    }
+
+    /// Generate all rows into a resident [`Dataset`] (with truth
+    /// labels) — for tests and cross-checks against in-memory engines.
+    pub fn materialize(&self) -> Dataset {
+        let mut data = Vec::with_capacity(self.n * self.spec.dim);
+        let mut labels = Vec::with_capacity(self.n);
+        self.generate_into(0, self.n, &mut data, Some(&mut labels));
+        let mut ds =
+            Dataset::from_vec(data, self.spec.dim).expect("generator rows are rectangular");
+        ds.truth = Some(labels);
+        ds
+    }
+}
+
+struct GmmReader<'a> {
+    src: &'a GmmSource,
+    cur: usize,
+    hi: usize,
+    chunk_rows: usize,
+    buf: Vec<f32>,
+}
+
+impl ChunkReader for GmmReader<'_> {
+    fn next_chunk(&mut self) -> Result<Option<Chunk<'_>>> {
+        if self.cur >= self.hi {
+            return Ok(None);
+        }
+        let hi = (self.cur + self.chunk_rows).min(self.hi);
+        self.buf.clear();
+        self.src.generate_into(self.cur, hi, &mut self.buf, None);
+        let lo = self.cur;
+        self.cur = hi;
+        Ok(Some(Chunk { lo, rows: &self.buf }))
+    }
+}
+
+impl DataSource for GmmSource {
+    fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn reader(&self, lo: usize, hi: usize, chunk_rows: usize) -> Result<Box<dyn ChunkReader + '_>> {
+        check_reader_args(lo, hi, self.n, chunk_rows)?;
+        Ok(Box::new(GmmReader { src: self, cur: lo, hi, chunk_rows, buf: Vec::new() }))
+    }
+
+    fn has_truth(&self) -> bool {
+        true
+    }
+
+    fn truth(&self) -> Result<Option<Vec<i32>>> {
+        Ok(Some((0..self.n).map(|i| self.label_of(i)).collect()))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "gmm({}D × {} components, n = {}, seed = {})",
+            self.spec.dim,
+            self.spec.components.len(),
+            self.n,
+            self.seed
+        )
+    }
+
+    /// Row `i` is an O(1) function of `i` — synthesize exactly the
+    /// requested rows instead of the default full-stream pass.
+    fn gather(&self, indices: &[usize]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(indices.len() * self.spec.dim);
+        for &i in indices {
+            if i >= self.n {
+                return Err(Error::Config(format!(
+                    "gather: row {i} out of range (n = {})",
+                    self.n
+                )));
+            }
+            self.generate_into(i, i + 1, &mut out, None);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("parakm_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Drain a reader, checking the tiling contract, returning all rows.
+    fn drain(src: &dyn DataSource, lo: usize, hi: usize, chunk: usize) -> Vec<f32> {
+        let d = src.dim();
+        let mut reader = src.reader(lo, hi, chunk).unwrap();
+        let mut all = Vec::new();
+        let mut next = lo;
+        while let Some(c) = reader.next_chunk().unwrap() {
+            assert_eq!(c.lo, next, "chunks not contiguous");
+            let nrows = c.rows.len() / d;
+            assert!(nrows >= 1 && nrows <= chunk, "chunk size {nrows} out of [1, {chunk}]");
+            all.extend_from_slice(c.rows);
+            next += nrows;
+        }
+        assert_eq!(next, hi, "reader did not cover the range");
+        all
+    }
+
+    #[test]
+    fn memory_source_is_zero_copy_view() {
+        let ds = MixtureSpec::paper_2d(4).generate(503, 1);
+        let src = MemorySource::new(&ds);
+        assert_eq!(src.len(), 503);
+        assert_eq!(src.dim(), 2);
+        for chunk in [1usize, 64, 100, 503, 10_000] {
+            assert_eq!(drain(&src, 0, 503, chunk), ds.raw());
+        }
+        // sub-range
+        assert_eq!(drain(&src, 17, 200, 50), ds.rows(17, 200));
+        assert_eq!(src.truth().unwrap(), ds.truth);
+    }
+
+    #[test]
+    fn file_source_streams_exact_bytes() {
+        let ds = MixtureSpec::paper_3d(4).generate(777, 5);
+        let p = tmp("stream.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let src = FileSource::open(&p).unwrap();
+        assert_eq!((src.len(), src.dim()), (777, 3));
+        for chunk in [1usize, 100, 777, 4096] {
+            assert_eq!(drain(&src, 0, 777, chunk), ds.raw());
+        }
+        assert_eq!(drain(&src, 300, 500, 64), ds.rows(300, 500));
+        assert_eq!(src.truth().unwrap(), ds.truth);
+    }
+
+    #[test]
+    fn file_source_truncation_is_typed_error() {
+        let ds = MixtureSpec::paper_3d(4).generate(500, 5);
+        let p = tmp("trunc.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        // a file already truncated at open is rejected by the probe
+        let cut = tmp("trunc_at_open.pkd");
+        std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+        let err = FileSource::open(&cut).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+
+        // a file that shrinks AFTER open (external race) errors at the
+        // reader, typed, instead of hanging or panicking
+        let src = FileSource::open(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let mut r = src.reader(0, 500, 200).unwrap();
+        let mut err = None;
+        for _ in 0..3 {
+            match r.next_chunk() {
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let err = err.expect("truncated stream must error");
+        assert!(matches!(err, Error::Data(_)), "{err}");
+    }
+
+    #[test]
+    fn gmm_source_chunking_is_bit_invariant() {
+        let src = GmmSource::new(MixtureSpec::paper_2d(4), 1001, 42);
+        let whole = drain(&src, 0, 1001, 1001);
+        for chunk in [1usize, 37, 256, 1000] {
+            assert_eq!(drain(&src, 0, 1001, chunk), whole);
+        }
+        // shard decomposition is also invariant
+        let mut sharded = drain(&src, 0, 400, 128);
+        sharded.extend(drain(&src, 400, 1001, 128));
+        assert_eq!(sharded, whole);
+        // materialize matches the streamed bytes and labels
+        let ds = src.materialize();
+        assert_eq!(ds.raw(), &whole[..]);
+        assert_eq!(src.truth().unwrap(), ds.truth);
+    }
+
+    #[test]
+    fn gmm_source_recovers_component_structure() {
+        // one far-apart spec: labels must correspond to nearest means
+        let spec = MixtureSpec::random(2, 4, 100.0, 0.1, 3);
+        let src = GmmSource::new(spec, 2000, 9);
+        let ds = src.materialize();
+        let truth = ds.truth.as_ref().unwrap();
+        let mut seen = [false; 4];
+        for i in 0..ds.len() {
+            seen[truth[i] as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some component emitted no rows");
+    }
+
+    #[test]
+    fn gather_preserves_index_order() {
+        let ds = MixtureSpec::paper_2d(4).generate(300, 2);
+        let src = MemorySource::new(&ds);
+        let idx = [250usize, 3, 3, 299, 0];
+        let rows = src.gather(&idx).unwrap();
+        assert_eq!(rows.len(), idx.len() * 2);
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(&rows[pos * 2..(pos + 1) * 2], ds.point(i), "pos {pos}");
+        }
+        // same through the file-backed seek override
+        let p = tmp("gather.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let fsrc = FileSource::open(&p).unwrap();
+        assert_eq!(fsrc.gather(&idx).unwrap(), rows);
+
+        // the generator's O(1)-per-row override matches its own
+        // materialized rows
+        let gmm = GmmSource::new(MixtureSpec::paper_2d(4), 300, 2);
+        let gds = gmm.materialize();
+        let grows = gmm.gather(&idx).unwrap();
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(&grows[pos * 2..(pos + 1) * 2], gds.point(i), "gmm pos {pos}");
+        }
+    }
+
+    #[test]
+    fn gather_rejects_out_of_range() {
+        let ds = MixtureSpec::paper_2d(4).generate(10, 2);
+        let src = MemorySource::new(&ds);
+        assert!(matches!(src.gather(&[5, 10]).unwrap_err(), Error::Config(_)));
+        let p = tmp("gather_oor.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let fsrc = FileSource::open(&p).unwrap();
+        assert!(matches!(fsrc.gather(&[10]).unwrap_err(), Error::Config(_)));
+        let gmm = GmmSource::new(MixtureSpec::paper_2d(4), 10, 2);
+        assert!(matches!(gmm.gather(&[10]).unwrap_err(), Error::Config(_)));
+    }
+
+    #[test]
+    fn reader_arg_validation() {
+        let ds = MixtureSpec::paper_2d(4).generate(10, 2);
+        let src = MemorySource::new(&ds);
+        assert!(src.reader(0, 10, 0).is_err()); // zero chunk
+        assert!(src.reader(5, 3, 4).is_err()); // inverted range
+        assert!(src.reader(0, 11, 4).is_err()); // past n
+        assert!(src.reader(10, 10, 4).unwrap().next_chunk().unwrap().is_none()); // empty ok
+    }
+
+    #[test]
+    fn paper_source_matches_eval_families() {
+        let s2 = GmmSource::paper(2, 100, 1).unwrap();
+        assert_eq!(s2.dim(), 2);
+        let s3 = GmmSource::paper(3, 100, 1).unwrap();
+        assert_eq!(s3.dim(), 3);
+        assert!(GmmSource::paper(5, 100, 1).is_err());
+    }
+}

@@ -20,6 +20,12 @@ pub enum Error {
     /// Invalid configuration (CLI or programmatic).
     Config(String),
 
+    /// Malformed dataset content: bad magic bytes, a truncated binary
+    /// payload or truth section, a ragged or non-numeric CSV row, or a
+    /// source that violated its chunk contract. Distinct from [`Error::Io`]
+    /// (the OS failed to read) — here the bytes arrived but are wrong.
+    Data(String),
+
     /// Underlying XLA/PJRT failure (real-PJRT backend only).
     Xla(String),
 
@@ -39,6 +45,7 @@ impl std::fmt::Display for Error {
             }
             Error::Shape(m) => write!(f, "shape mismatch: {m}"),
             Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Data(m) => write!(f, "malformed data: {m}"),
             Error::Xla(m) => write!(f, "xla runtime: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Worker(m) => write!(f, "worker failure: {m}"),
@@ -76,6 +83,7 @@ mod tests {
             "json parse error at byte 7: bad"
         );
         assert_eq!(Error::Config("k".into()).to_string(), "invalid config: k");
+        assert_eq!(Error::Data("short".into()).to_string(), "malformed data: short");
     }
 
     #[test]

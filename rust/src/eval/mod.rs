@@ -116,7 +116,9 @@ pub struct Timed {
 }
 
 /// Run one engine on a dataset with paper-standard settings.
-/// `threads` is the worker count for Threads/Shared; ignored otherwise.
+/// `threads` is the worker count for Threads/Shared and the shard
+/// count for OutOfCore (which requires `threads >= 1`); ignored by the
+/// other engines.
 pub fn run_engine(
     engine: Engine,
     ds: &Dataset,
@@ -181,6 +183,17 @@ pub fn run_engine(
             })?;
             let _ = std::fs::remove_file(&path);
             (run.table_secs(), run.wall_secs, run.result)
+        }
+        Engine::OutOfCore => {
+            use crate::kmeans::streaming::{self, StreamOpts};
+            let src = crate::data::MemorySource::new(ds);
+            // paper-standard settings: default chunk, no budget —
+            // `threads` shards (chunk/budget sweeps live in
+            // benches/streaming_oocore.rs)
+            let opts = StreamOpts::resolve(ds.dim(), threads, 0, 0)?;
+            let r = streaming::run(&src, &kc, &opts)?;
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, r)
         }
     };
     Ok(Timed {

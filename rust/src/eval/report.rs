@@ -36,6 +36,7 @@ pub fn generate(results_dir: &Path) -> Result<String> {
     speedup(results_dir, &mut out);
     scaling(results_dir, &mut out);
     ablations(results_dir, &mut out);
+    oocore(results_dir, &mut out);
 
     let path = results_dir.join("REPORT.md");
     std::fs::create_dir_all(results_dir)?;
@@ -234,6 +235,51 @@ fn ablations(dir: &Path, out: &mut String) {
     }
 }
 
+fn oocore(dir: &Path, out: &mut String) {
+    let _ = writeln!(out, "## Out-of-core streaming — chunk × shard sweep\n");
+    let Some((_, rows)) = load(dir, "tables/oocore.csv") else {
+        let _ = writeln!(out, "_not run_ (`cargo bench --bench streaming_oocore`)\n");
+        return;
+    };
+    // rows: shards, chunk_rows, buffer_bytes, secs, iters, sse
+    if rows.iter().any(|r| r.len() < 6) {
+        let _ = writeln!(out, "_malformed oocore.csv (expected 6 columns)_\n");
+        return;
+    }
+    let md: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                (r[0] as u64).to_string(),
+                (r[1] as u64).to_string(),
+                format!("{:.1}", r[2] / 1024.0),
+                format!("{:.4}", r[3]),
+                (r[4] as u64).to_string(),
+            ]
+        })
+        .collect();
+    md_table(out, &["shards", "chunk rows", "buffer KiB", "secs", "iters"], &md);
+    // the contract's observable: chunk size can never change results,
+    // so within each shard count every cell must land on identical f64
+    // SSE bits and iteration count. Across shard counts the f64 merge
+    // grouping differs legitimately, so nothing is compared here —
+    // cross-shard agreement is checked exactly against the in-memory
+    // twins inside the bench itself.
+    let mut by_shards: std::collections::BTreeMap<u64, Vec<&Vec<f64>>> = Default::default();
+    for r in &rows {
+        by_shards.entry(r[0] as u64).or_default().push(r);
+    }
+    let same_sse = by_shards
+        .values()
+        .all(|grp| grp.windows(2).all(|w| w[0][5] == w[1][5]));
+    let same_iters = by_shards
+        .values()
+        .all(|grp| grp.windows(2).all(|w| w[0][4] == w[1][4]));
+    check(out, "identical SSE across every chunk size (per shard count)", same_sse);
+    check(out, "identical iteration count across every chunk size (per shard count)", same_iters);
+    let _ = writeln!(out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +329,41 @@ mod tests {
         .unwrap();
         let report = generate(&dir).unwrap();
         assert!(report.contains("✘ **ψ(n,p) > 1 everywhere**"), "{report}");
+    }
+
+    #[test]
+    fn oocore_determinism_check() {
+        let dir = fixture_dir();
+        // SSE may differ BETWEEN shard counts (f64 merge grouping) but
+        // never within one — this fixture exercises exactly that
+        csv::write_table(
+            &dir.join("tables/oocore.csv"),
+            &["shards", "chunk_rows", "buffer_bytes", "secs", "iters", "sse"],
+            &[
+                vec![1.0, 4096.0, 49152.0, 1.0, 23.0, 5.5000001],
+                vec![4.0, 4096.0, 196608.0, 0.4, 23.0, 5.5],
+                vec![4.0, 65536.0, 3145728.0, 0.3, 23.0, 5.5],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("## Out-of-core streaming"), "{report}");
+        let ok = "✔ **identical SSE across every chunk size (per shard count)**";
+        assert!(report.contains(ok), "{report}");
+
+        // a chunk-size-dependent SSE within one shard count flips it
+        csv::write_table(
+            &dir.join("tables/oocore.csv"),
+            &["shards", "chunk_rows", "buffer_bytes", "secs", "iters", "sse"],
+            &[
+                vec![4.0, 4096.0, 196608.0, 0.4, 23.0, 5.5],
+                vec![4.0, 65536.0, 3145728.0, 0.3, 23.0, 5.6],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        let bad = "✘ **identical SSE across every chunk size (per shard count)**";
+        assert!(report.contains(bad), "{report}");
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! [`serial`] is the serial C program, [`parallel`] the OpenMP program
 //! (spawn-once threads, local accumulation, critical-section merge).
 //! [`elkan`]/[`hamerly`] implement the triangle-inequality acceleration
-//! of the paper's reference [4]; [`minibatch`] is the big-data
-//! extension motivated in the conclusion. The AOT-backed engines live
-//! in [`crate::coordinator`] and share these types.
+//! of the paper's reference [4]; [`minibatch`] and the out-of-core
+//! [`streaming`] engine are the big-data extensions motivated in the
+//! conclusion — [`streaming`] clusters any [`crate::data::DataSource`]
+//! with O(shards × chunk) resident memory, bit-identical to the
+//! in-memory engines (see its module docs). The AOT-backed engines
+//! live in [`crate::coordinator`] and share these types.
 
 pub mod bisecting;
 pub mod elkan;
@@ -17,6 +20,7 @@ pub mod minibatch;
 pub mod parallel;
 pub mod serial;
 pub mod step;
+pub mod streaming;
 
 use crate::config::Init;
 

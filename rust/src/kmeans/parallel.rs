@@ -7,10 +7,12 @@
 //!   the iteration count is unknown);
 //! - the dataset is sharded contiguously across `p` threads;
 //! - each thread reassigns its shard and accumulates *local* stats;
-//! - locals reach the leader either per-thread-slot (leader merges —
-//!   the default, lock-free) or through a single mutex the workers
-//!   serialize on (the paper's `critical` directive — kept as
-//!   [`MergeMode::Critical`] for the A2 ablation);
+//! - locals reach the leader either per-thread-slot (leader merges via
+//!   the canonical [`merge_ordered`] fold of the chunked-accumulation
+//!   contract — the default, lock-free, shared bit-for-bit with the
+//!   out-of-core engine [`crate::kmeans::streaming`]) or through a
+//!   single mutex the workers serialize on (the paper's `critical`
+//!   directive — kept as [`MergeMode::Critical`] for the A2 ablation);
 //! - two barriers per iteration mirror the paper's `barrier`: one
 //!   after centroid publication, one after stat accumulation.
 
@@ -18,7 +20,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
 use crate::data::Dataset;
-use crate::kmeans::step::{assign_accumulate, finalize, PartialStats};
+use crate::kmeans::step::{assign_accumulate, finalize, merge_ordered, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 
 /// How worker-local statistics reach the leader (DESIGN.md A2).
@@ -109,7 +111,7 @@ pub fn run_from(
                         .expect("shapes validated at run_from entry");
                     match merge {
                         MergeMode::Leader => {
-                            *slots[wid].lock().unwrap() = local.clone();
+                            slots[wid].lock().unwrap().copy_from(&local);
                         }
                         MergeMode::Critical => {
                             // the paper's critical section
@@ -129,17 +131,18 @@ pub fn run_from(
             barrier.wait(); // (A)
             barrier.wait(); // (B) workers finished this iteration
 
-            let mut merged = PartialStats::zeros(k, d);
-            match merge {
-                MergeMode::Leader => {
-                    for slot in &slots {
-                        merged.merge(&slot.lock().unwrap());
-                    }
-                }
+            let merged = match merge {
+                // canonical ascending-shard fold (step.rs contract),
+                // straight from the lock guards: identical merged f64
+                // stats as the out-of-core engine at the same shard
+                // count, no per-iteration copies
+                MergeMode::Leader => merge_ordered(slots.iter().map(|s| s.lock().unwrap())),
                 MergeMode::Critical => {
-                    merged.merge(&global.lock().unwrap());
+                    let mut m = PartialStats::zeros(k, d);
+                    m.merge(&global.lock().unwrap());
+                    m
                 }
-            }
+            };
             let mu_old = centroids.read().unwrap().clone();
             let (mu_new, shift) = finalize(&merged, &mu_old);
             *centroids.write().unwrap() = mu_new;

@@ -10,6 +10,28 @@
 //! every engine, pure-rust or coordinator-driven, shares that one hot
 //! path. Sums accumulate in f64: at N = 1M, f32 accumulation loses
 //! enough precision to perturb centroids between engines.
+//!
+//! ## The chunked-accumulation contract (DESIGN.md §4)
+//!
+//! The kernel folds sums/counts/SSE in strict ascending-row order and
+//! *continues* from whatever values its accumulators hold — resetting
+//! is the caller's job. Two facades expose that split:
+//!
+//! - [`assign_accumulate`] resets `stats` first (whole-buffer call);
+//! - [`assign_accumulate_into`] does not — streaming a shard's chunks
+//!   through it in ascending row order replays the exact `+=` chain a
+//!   single whole-shard call would execute, so **per-shard partials
+//!   are bit-identical for every chunk size** (including "one chunk =
+//!   the whole shard").
+//!
+//! Per-shard partials then combine through [`merge_ordered`] — the
+//! zeros-seeded ascending-shard fold (the threaded engine's historical
+//! order), independent of worker timing. Consequently results depend
+//! only on the shard *count*, never on chunk size, memory budget or
+//! scheduling; one shard reproduces the serial engine bit-for-bit;
+//! and the threaded and out-of-core engines coincide bit-for-bit at
+//! equal shard counts. The tests here and
+//! `rust/tests/integration_streaming.rs` pin each guarantee.
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -38,6 +60,17 @@ impl PartialStats {
         self.sse = 0.0;
     }
 
+    /// Overwrite with another stats set of the same shape, reusing
+    /// this one's buffers (workers publishing into their slot each
+    /// iteration — no per-iteration allocation).
+    pub fn copy_from(&mut self, other: &PartialStats) {
+        debug_assert_eq!(self.k, other.k);
+        debug_assert_eq!(self.dim, other.dim);
+        self.sums.copy_from_slice(&other.sums);
+        self.counts.copy_from_slice(&other.counts);
+        self.sse = other.sse;
+    }
+
     /// Merge another shard's stats into this one (the paper's critical
     /// section; in rust the leader owns the merge so no lock is needed).
     pub fn merge(&mut self, other: &PartialStats) {
@@ -63,6 +96,24 @@ impl PartialStats {
 /// Errors with [`Error::Config`] when `k == 0` (there is no nearest
 /// centroid to index) and [`Error::Shape`] on dimension mismatches.
 pub fn assign_accumulate(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+) -> Result<()> {
+    stats.reset();
+    assign_accumulate_into(rows, dim, centroids, k, assign_out, stats)
+}
+
+/// [`assign_accumulate`] without the reset: accumulation *continues*
+/// into `stats`. This is the chunked-accumulation entry point (module
+/// docs) — streaming a shard's chunks through it in ascending row
+/// order is bit-identical to one call over the whole shard, because
+/// the kernel's f64 `+=` chain simply resumes. Same validation and
+/// error taxonomy as [`assign_accumulate`].
+pub fn assign_accumulate_into(
     rows: &[f32],
     dim: usize,
     centroids: &[f32],
@@ -98,7 +149,6 @@ pub fn assign_accumulate(
             stats.k, stats.dim
         )));
     }
-    stats.reset();
     kernel::assign_accumulate(
         rows,
         dim,
@@ -111,6 +161,37 @@ pub fn assign_accumulate(
         kernel::active_tier(),
     );
     Ok(())
+}
+
+/// The canonical reduction over per-shard partials — the merge order
+/// of the chunked-accumulation contract (module docs): a zeros-seeded
+/// sequential fold in ascending shard index.
+///
+/// The order is a pure function of `parts.len()`, so merged f64 stats
+/// are reproducible regardless of which worker finished first. This
+/// is deliberately the threaded engine's historical order (preserved
+/// bit-for-bit): a balanced allreduce tree would be equally
+/// deterministic but would change the f64 grouping for p ≥ 4 and
+/// re-roll every established threads-vs-serial result, buying nothing
+/// at K·d-sized accumulators where merge depth is irrelevant.
+///
+/// Accepts anything that derefs to [`PartialStats`] — `&PartialStats`
+/// or a `MutexGuard` — so leaders fold straight from their worker
+/// slots without cloning. Panics when `parts` is empty (there is
+/// nothing to merge).
+pub fn merge_ordered<I>(parts: I) -> PartialStats
+where
+    I: IntoIterator,
+    I::Item: std::ops::Deref<Target = PartialStats>,
+{
+    let mut it = parts.into_iter();
+    let first = it.next().expect("merge_ordered: no partials");
+    let mut merged = PartialStats::zeros(first.k, first.dim);
+    merged.merge(&first);
+    for p in it {
+        merged.merge(&p);
+    }
+    merged
 }
 
 /// Mean-recomputation + convergence error: consumes merged stats,
@@ -228,6 +309,128 @@ mod tests {
         assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats).unwrap();
         let (mu_new, _) = finalize(&stats, &mu);
         assert_eq!(&mu_new[2..4], &[99.0, 99.0]);
+    }
+
+    #[test]
+    fn chunked_fold_is_bit_identical_to_whole_call() {
+        // the contract the out-of-core engine is built on: streaming
+        // chunks through assign_accumulate_into == one whole-range call,
+        // bit for bit, for ANY chunk boundaries (aligned or not)
+        prop::check("chunked fold == whole fold", 24, |g| {
+            let d = *g.choice(&[2usize, 3, 17]);
+            let n = g.usize_in(1, 500);
+            let k = g.usize_in(1, 9);
+            let rows = g.points(n, d, 12.0);
+            let mu = g.points(k, d, 12.0);
+
+            let mut whole_assign = vec![0i32; n];
+            let mut whole = PartialStats::zeros(k, d);
+            assign_accumulate(&rows, d, &mu, k, &mut whole_assign, &mut whole).unwrap();
+
+            let chunk = g.usize_in(1, n.max(2));
+            let mut part_assign = vec![0i32; n];
+            let mut part = PartialStats::zeros(k, d);
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                assign_accumulate_into(
+                    &rows[lo * d..hi * d],
+                    d,
+                    &mu,
+                    k,
+                    &mut part_assign[lo..hi],
+                    &mut part,
+                )
+                .unwrap();
+                lo = hi;
+            }
+            prop::ensure(part_assign == whole_assign, "assignments differ")?;
+            prop::ensure(part.counts == whole.counts, "counts differ")?;
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            prop::ensure(bits(&part.sums) == bits(&whole.sums), "sums differ in bits")?;
+            prop::ensure(part.sse.to_bits() == whole.sse.to_bits(), "sse differs in bits")
+        });
+    }
+
+    fn stats_with(seed: u64, k: usize, d: usize) -> PartialStats {
+        let mut g = prop::Gen::new(seed);
+        let mut s = PartialStats::zeros(k, d);
+        for v in s.sums.iter_mut() {
+            *v = g.points(1, 1, 100.0)[0] as f64;
+        }
+        for c in s.counts.iter_mut() {
+            *c = g.usize_in(0, 50) as u64;
+        }
+        s.sse = g.points(1, 1, 10.0)[0].abs() as f64;
+        s
+    }
+
+    #[test]
+    fn merge_ordered_is_the_zeros_seeded_left_fold() {
+        // bitwise the historical leader-merge order: zeros, then each
+        // shard ascending — pinned so refactors cannot re-roll
+        // established threads-vs-serial results
+        for p in [1usize, 2, 3, 4, 5, 8, 16] {
+            let parts: Vec<PartialStats> = (0..p).map(|i| stats_with(i as u64, 2, 3)).collect();
+            let mut seq = PartialStats::zeros(2, 3);
+            for s in &parts {
+                seq.merge(s);
+            }
+            let merged = merge_ordered(&parts);
+            assert_eq!(merged.counts, seq.counts, "p={p}");
+            assert_eq!(
+                merged.sums.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                seq.sums.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "p={p}"
+            );
+            assert_eq!(merged.sse.to_bits(), seq.sse.to_bits(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn merge_ordered_totals_conserved_any_p() {
+        for p in [1usize, 2, 3, 4, 5, 8, 13, 16] {
+            let parts: Vec<PartialStats> =
+                (0..p).map(|i| stats_with(100 + i as u64, 3, 2)).collect();
+            let want_counts: Vec<u64> = (0..3)
+                .map(|c| parts.iter().map(|s| s.counts[c]).sum())
+                .collect();
+            let want_sums: Vec<f64> = (0..6)
+                .map(|j| parts.iter().map(|s| s.sums[j]).sum::<f64>())
+                .collect();
+            let merged = merge_ordered(&parts);
+            assert_eq!(merged.counts, want_counts, "p={p}");
+            for (a, b) in merged.sums.iter().zip(&want_sums) {
+                assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_ordered_is_deterministic() {
+        let mk = || -> Vec<PartialStats> { (0..7).map(|i| stats_with(7 + i, 2, 2)).collect() };
+        let a = merge_ordered(&mk());
+        let b = merge_ordered(&mk());
+        assert_eq!(
+            a.sums.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.sums.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.sse.to_bits(), b.sse.to_bits());
+    }
+
+    #[test]
+    fn copy_from_overwrites_reusing_buffers() {
+        let a = stats_with(1, 2, 2);
+        let mut b = PartialStats::zeros(2, 2);
+        let sums_ptr = b.sums.as_ptr();
+        let counts_ptr = b.counts.as_ptr();
+        b.copy_from(&a);
+        assert_eq!(b.sums, a.sums);
+        assert_eq!(b.counts, a.counts);
+        assert_eq!(b.sse, a.sse);
+        assert_eq!(b.sums.as_ptr(), sums_ptr);
+        assert_eq!(b.counts.as_ptr(), counts_ptr);
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! Sharded out-of-core Lloyd — clustering data that never fits in RAM
+//! (DESIGN.md §4), over any [`DataSource`].
+//!
+//! Structurally this is [`crate::kmeans::parallel`] with the resident
+//! dataset replaced by chunked streams: `shards` worker threads each
+//! own a contiguous row range; every iteration each worker opens a
+//! fresh reader over its range and pulls `chunk_rows`-sized chunks
+//! through the fused [`step::assign_accumulate_into`] facade into one
+//! *continuing* per-shard f64 accumulator; at the iteration barrier
+//! the leader combines shard partials with the canonical
+//! [`step::merge_ordered`] fold and finalizes centroids. Resident
+//! memory is `shards × chunk_rows × dim × 4` bytes of row buffers
+//! (plus the `n × 4`-byte assignment output every engine returns).
+//!
+//! ## Determinism and bit-identity (the contract, proven by tests)
+//!
+//! Because the kernel folds f64 statistics in ascending row order and
+//! chunked folds simply resume that chain (see
+//! [`crate::kmeans::step`] module docs):
+//!
+//! - **chunk size and memory budget never affect results** — any
+//!   `chunk_rows`, and therefore any `--memory-budget`, produces
+//!   bit-identical assignments, centroids, SSE and iteration history;
+//! - **one shard reproduces the serial engine bit-for-bit** — the
+//!   single worker replays exactly the serial fold;
+//! - **`S` shards reproduce the threaded engine at `p = S`
+//!   bit-for-bit** — identical per-shard partials, identical
+//!   canonical merge order.
+//!
+//! `rust/tests/integration_streaming.rs` pins all three on the paper's
+//! 2D/3D GMM datasets with file- and generator-backed sources whose
+//! memory budget is far below the dataset size.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
+
+use crate::config::Init;
+use crate::data::dataset::shard_ranges;
+use crate::data::source::{ChunkReader as _, DataSource};
+use crate::error::{Error, Result};
+use crate::kmeans::step::{self, finalize, merge_ordered, PartialStats};
+use crate::kmeans::{KmeansConfig, KmeansResult};
+use crate::linalg::kernel;
+use crate::rng::Pcg64;
+
+/// Execution shape of an out-of-core run: how many shard workers, and
+/// how many rows each buffers at a time. Neither affects results
+/// beyond the shard count (module docs) — they trade memory for
+/// parallelism and IO efficiency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamOpts {
+    /// Worker thread count; the source is split into this many
+    /// contiguous row ranges.
+    pub shards: usize,
+    /// Rows per chunk buffer each worker streams.
+    pub chunk_rows: usize,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts { shards: 4, chunk_rows: StreamOpts::DEFAULT_CHUNK_ROWS }
+    }
+}
+
+impl StreamOpts {
+    /// Default chunk when neither `--chunk` nor `--memory-budget`
+    /// constrains it (64Ki rows ≈ 768 KiB/shard at d = 3).
+    pub const DEFAULT_CHUNK_ROWS: usize = 65_536;
+
+    /// Per-row budget multiplier: the file-backed reader holds up to
+    /// ~3× a chunk's payload (IO buffer + raw bytes + decoded f32
+    /// rows), so a memory budget is divided by this worst case —
+    /// memory and generator sources simply run further under budget.
+    pub const ROW_BUDGET_FACTOR: usize = 3;
+
+    /// Resolve the CLI surface: an explicit `chunk` (rows) wins, else a
+    /// `memory_budget` (bytes, 0 = unbounded) is divided across shard
+    /// buffers at the worst-case [`StreamOpts::ROW_BUDGET_FACTOR`],
+    /// else the default. Errors when the two contradict or the budget
+    /// cannot fit one row per shard.
+    pub fn resolve(
+        dim: usize,
+        shards: usize,
+        chunk: usize,
+        memory_budget: usize,
+    ) -> Result<StreamOpts> {
+        if dim == 0 {
+            return Err(Error::Config("streaming: dim must be >= 1".into()));
+        }
+        if shards == 0 {
+            return Err(Error::Config("streaming: shards must be >= 1".into()));
+        }
+        let row_bytes = dim * 4 * StreamOpts::ROW_BUDGET_FACTOR;
+        let chunk_rows = if chunk > 0 {
+            // checked: a hostile --chunk must be a typed error, not an
+            // overflow (same convention as io::probe_binary)
+            let total = shards
+                .checked_mul(chunk)
+                .and_then(|v| v.checked_mul(row_bytes))
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "--chunk {chunk} × {shards} shards overflows a byte count"
+                    ))
+                })?;
+            if memory_budget > 0 && total > memory_budget {
+                return Err(Error::Config(format!(
+                    "--chunk {chunk} × {shards} shards × {row_bytes} B/row = {total} B \
+                     exceeds --memory-budget {memory_budget} B"
+                )));
+            }
+            chunk
+        } else if memory_budget > 0 {
+            let per_shard = shards.checked_mul(row_bytes).ok_or_else(|| {
+                Error::Config(format!("{shards} shards × {row_bytes} B/row overflows"))
+            })?;
+            let rows = memory_budget / per_shard;
+            if rows == 0 {
+                return Err(Error::Config(format!(
+                    "--memory-budget {memory_budget} B too small: {shards} shards × \
+                     {row_bytes} B/row needs at least {} B",
+                    shards * row_bytes
+                )));
+            }
+            rows
+        } else {
+            StreamOpts::DEFAULT_CHUNK_ROWS
+        };
+        Ok(StreamOpts { shards, chunk_rows })
+    }
+
+    /// Bytes of chunk buffers a run with these options keeps resident.
+    pub fn buffer_bytes(&self, dim: usize) -> usize {
+        self.shards * self.chunk_rows * dim * 4
+    }
+
+    /// Resolve from a [`crate::config::RunConfig`]: `threads` is the
+    /// shard count; `chunk` and `memory_budget` feed
+    /// [`StreamOpts::resolve`].
+    pub fn from_run_config(cfg: &crate::config::RunConfig, dim: usize) -> Result<StreamOpts> {
+        StreamOpts::resolve(dim, cfg.threads, cfg.chunk, cfg.memory_budget)
+    }
+}
+
+/// Sample K distinct rows uniformly — the *same* index sequence as
+/// [`crate::kmeans::init::random`] (identical RNG stream), gathered
+/// from the source in one bounded-memory pass. Streaming runs
+/// therefore start from the exact centroids an in-memory run with the
+/// same seed starts from.
+pub fn init_random(src: &dyn DataSource, k: usize, seed: u64) -> Result<Vec<f32>> {
+    let n = src.len();
+    if k > n {
+        return Err(Error::Config(format!("init: k {k} > n {n}")));
+    }
+    let mut rng = Pcg64::new(seed, 0x1417);
+    let idx = rng.sample_indices(n, k);
+    src.gather(&idx)
+}
+
+/// Run out-of-core Lloyd on `src`, initializing per `cfg.init`.
+///
+/// Only [`Init::Random`] is streamable (k-means++ D² seeding needs
+/// every point resident per round); requesting k-means++ is a
+/// [`Error::Config`] — precompute centroids and use [`run_from`].
+pub fn run(src: &dyn DataSource, cfg: &KmeansConfig, opts: &StreamOpts) -> Result<KmeansResult> {
+    let centroids0 = match cfg.init {
+        Init::Random => init_random(src, cfg.k, cfg.seed)?,
+        Init::KmeansPlusPlus => {
+            return Err(Error::Config(
+                "streaming: kmeans++ init needs a resident dataset; \
+                 precompute centroids (kmeans::init) and call run_from"
+                    .into(),
+            ))
+        }
+    };
+    run_from(src, cfg, opts, &centroids0)
+}
+
+/// Run out-of-core Lloyd from explicit initial centroids.
+pub fn run_from(
+    src: &dyn DataSource,
+    cfg: &KmeansConfig,
+    opts: &StreamOpts,
+    centroids0: &[f32],
+) -> Result<KmeansResult> {
+    let n = src.len();
+    let d = src.dim();
+    let k = cfg.k;
+    if k == 0 {
+        return Err(Error::Config("streaming: k must be >= 1".into()));
+    }
+    if n == 0 {
+        return Err(Error::Shape(format!("streaming: empty data source ({})", src.describe())));
+    }
+    if d == 0 {
+        return Err(Error::Shape("streaming: source dim must be >= 1".into()));
+    }
+    if centroids0.len() != k * d {
+        return Err(Error::Shape(format!(
+            "streaming: initial centroids len {} != k {k} × dim {d}",
+            centroids0.len()
+        )));
+    }
+    if opts.shards == 0 || opts.chunk_rows == 0 {
+        return Err(Error::Config("streaming: shards and chunk_rows must be >= 1".into()));
+    }
+    // resolve the hot-path tier on the main thread so a bad
+    // PARAKM_KERNEL aborts here, not inside a worker
+    let _ = kernel::active_tier();
+
+    let p = opts.shards.min(n);
+    let chunk_rows = opts.chunk_rows;
+    let ranges = shard_ranges(n, p);
+    let mut assign = vec![-1i32; n];
+
+    // split the global assignment buffer into per-shard &mut slices
+    let mut assign_shards: Vec<&mut [i32]> = Vec::with_capacity(p);
+    {
+        let mut rest: &mut [i32] = &mut assign;
+        for (lo, hi) in &ranges {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            assign_shards.push(head);
+            rest = tail;
+        }
+    }
+
+    let centroids = RwLock::new(centroids0.to_vec());
+    let slots: Vec<Mutex<PartialStats>> =
+        (0..p).map(|_| Mutex::new(PartialStats::zeros(k, d))).collect();
+    let fail: Mutex<Option<Error>> = Mutex::new(None);
+    let barrier = Barrier::new(p + 1); // workers + leader
+    let done = AtomicBool::new(false);
+
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut worker_err: Option<Error> = None;
+
+    std::thread::scope(|scope| {
+        // ---- workers: spawned once, one reader pass per iteration -----
+        for (wid, shard) in assign_shards.into_iter().enumerate() {
+            let (lo, hi) = ranges[wid];
+            let centroids = &centroids;
+            let slots = &slots;
+            let fail = &fail;
+            let barrier = &barrier;
+            let done = &done;
+            scope.spawn(move || {
+                let mut local = PartialStats::zeros(k, d);
+                loop {
+                    barrier.wait(); // (A) leader published centroids/done
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mu = centroids.read().unwrap().clone();
+                    local.reset();
+                    // a fresh reader per iteration: a new pass needs a
+                    // seek anyway, and the per-iteration cost (one
+                    // open + O(chunk) buffer allocs per shard) is
+                    // negligible against the O(n·k·d) scan it feeds
+                    match stream_shard(src, lo, hi, chunk_rows, d, &mu, k, shard, &mut local) {
+                        Ok(()) => {
+                            slots[wid].lock().unwrap().copy_from(&local);
+                        }
+                        Err(e) => {
+                            let mut slot = fail.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                        }
+                    }
+                    barrier.wait(); // (B) stats complete
+                }
+            });
+        }
+
+        // ---- leader ---------------------------------------------------
+        for _ in 0..cfg.max_iters {
+            barrier.wait(); // (A)
+            barrier.wait(); // (B) workers finished this iteration
+            if let Some(e) = fail.lock().unwrap().take() {
+                worker_err = Some(e);
+                break;
+            }
+            let merged = merge_ordered(slots.iter().map(|s| s.lock().unwrap()));
+            let mu_old = centroids.read().unwrap().clone();
+            let (mu_new, shift) = finalize(&merged, &mu_old);
+            *centroids.write().unwrap() = mu_new;
+            iterations += 1;
+            history.push((merged.sse, shift));
+            if shift < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+        done.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the exit branch
+    });
+
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    let final_centroids = centroids.into_inner().unwrap();
+    let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
+    Ok(KmeansResult {
+        centroids: final_centroids,
+        assign,
+        k,
+        dim: d,
+        iterations,
+        sse,
+        shift,
+        converged,
+        history,
+    })
+}
+
+/// One worker's pass: stream rows `[lo, hi)` in chunks, assigning into
+/// `assign_shard` and folding statistics into the *continuing* `stats`
+/// accumulator (bit-identical to a single whole-shard call — the
+/// chunked-accumulation contract). Verifies the source honors its
+/// chunk tiling, reporting [`Error::Data`] when it does not.
+#[allow(clippy::too_many_arguments)]
+fn stream_shard(
+    src: &dyn DataSource,
+    lo: usize,
+    hi: usize,
+    chunk_rows: usize,
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_shard: &mut [i32],
+    stats: &mut PartialStats,
+) -> Result<()> {
+    let mut reader = src.reader(lo, hi, chunk_rows)?;
+    let mut next = lo;
+    while let Some(chunk) = reader.next_chunk()? {
+        if chunk.lo != next || chunk.rows.is_empty() || chunk.rows.len() % dim != 0 {
+            return Err(Error::Data(format!(
+                "{}: reader broke the chunk contract at row {next} \
+                 (chunk lo {}, len {})",
+                src.describe(),
+                chunk.lo,
+                chunk.rows.len()
+            )));
+        }
+        let nrows = chunk.rows.len() / dim;
+        if next + nrows > hi {
+            return Err(Error::Data(format!(
+                "{}: reader overran its range: [{lo}, {hi}) got row {}",
+                src.describe(),
+                next + nrows
+            )));
+        }
+        let out = &mut assign_shard[next - lo..next - lo + nrows];
+        step::assign_accumulate_into(chunk.rows, dim, centroids, k, out, stats)?;
+        next += nrows;
+    }
+    if next != hi {
+        return Err(Error::Data(format!(
+            "{}: reader ended early: covered [{lo}, {next}) of [{lo}, {hi})",
+            src.describe()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::{FileSource, GmmSource, MemorySource};
+    use crate::data::{io, MixtureSpec};
+    use crate::kmeans::{init, parallel, serial};
+    use crate::testutil::assert_bit_identical;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parakm_streaming_engine_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn one_shard_is_bit_identical_to_serial() {
+        let ds = MixtureSpec::paper_2d(8).generate(4003, 11);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let reference = serial::run_from(&ds, &cfg, &mu0);
+
+        let src = MemorySource::new(&ds);
+        for chunk in [64usize, 333, 4003, 100_000] {
+            let opts = StreamOpts { shards: 1, chunk_rows: chunk };
+            let run = run_from(&src, &cfg, &opts, &mu0).unwrap();
+            assert_bit_identical(&run, &reference, &format!("chunk={chunk}"));
+        }
+    }
+
+    #[test]
+    fn s_shards_bit_identical_to_threads_p() {
+        let ds = MixtureSpec::paper_3d(4).generate(3001, 7);
+        let cfg = KmeansConfig::new(4).with_seed(2);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let src = MemorySource::new(&ds);
+        for p in [2usize, 3, 5, 8] {
+            let threads = parallel::run_from(&ds, &cfg, p, parallel::MergeMode::Leader, &mu0);
+            let opts = StreamOpts { shards: p, chunk_rows: 256 };
+            let run = run_from(&src, &cfg, &opts, &mu0).unwrap();
+            assert_bit_identical(&run, &threads, &format!("p={p}"));
+        }
+    }
+
+    #[test]
+    fn chunk_size_never_changes_results() {
+        let ds = MixtureSpec::paper_2d(8).generate(2500, 3);
+        let cfg = KmeansConfig::new(8).with_seed(9);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let src = MemorySource::new(&ds);
+        let baseline =
+            run_from(&src, &cfg, &StreamOpts { shards: 3, chunk_rows: 1000 }, &mu0).unwrap();
+        for chunk in [1usize, 7, 64, 2500] {
+            let run =
+                run_from(&src, &cfg, &StreamOpts { shards: 3, chunk_rows: chunk }, &mu0).unwrap();
+            assert_bit_identical(&run, &baseline, &format!("chunk={chunk}"));
+        }
+    }
+
+    #[test]
+    fn file_and_generator_sources_match_memory() {
+        let gmm = GmmSource::new(MixtureSpec::paper_3d(4), 2001, 13);
+        let ds = gmm.materialize();
+        let cfg = KmeansConfig::new(4).with_seed(4);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let opts = StreamOpts { shards: 2, chunk_rows: 128 };
+
+        let mem = run_from(&MemorySource::new(&ds), &cfg, &opts, &mu0).unwrap();
+
+        let p = tmp("fg.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let file = run_from(&FileSource::open(&p).unwrap(), &cfg, &opts, &mu0).unwrap();
+        assert_bit_identical(&file, &mem, "file vs memory");
+
+        let gen = run_from(&gmm, &cfg, &opts, &mu0).unwrap();
+        assert_bit_identical(&gen, &mem, "generator vs memory");
+    }
+
+    #[test]
+    fn init_random_matches_in_memory_init() {
+        let ds = MixtureSpec::paper_2d(4).generate(1200, 6);
+        let src = MemorySource::new(&ds);
+        let streamed = init_random(&src, 8, 42).unwrap();
+        let resident = init::random(&ds, 8, 42);
+        assert_eq!(streamed, resident);
+    }
+
+    #[test]
+    fn full_run_equals_serial_full_run() {
+        // run() (source-side init) == serial::run (resident init):
+        // identical index sampling makes the whole pipelines coincide
+        let ds = MixtureSpec::paper_3d(4).generate(1500, 8);
+        let cfg = KmeansConfig::new(4).with_seed(21);
+        let reference = serial::run(&ds, &cfg);
+        let run = run(&MemorySource::new(&ds), &cfg, &StreamOpts { shards: 1, chunk_rows: 100 })
+            .unwrap();
+        assert_bit_identical(&run, &reference, "run vs serial::run");
+    }
+
+    #[test]
+    fn opts_resolution() {
+        // explicit chunk wins
+        let o = StreamOpts::resolve(3, 4, 1000, 0).unwrap();
+        assert_eq!(o.chunk_rows, 1000);
+        // budget divides across shards: 4 shards × 12 B/row × factor 3
+        let o = StreamOpts::resolve(3, 4, 0, 144_000).unwrap();
+        assert_eq!(o.chunk_rows, 1000);
+        // decoded-chunk bytes stay a third of the budget (worst-case
+        // file-path overhead is budgeted at ROW_BUDGET_FACTOR)
+        assert_eq!(o.buffer_bytes(3) * StreamOpts::ROW_BUDGET_FACTOR, 144_000);
+        // default
+        let o = StreamOpts::resolve(3, 2, 0, 0).unwrap();
+        assert_eq!(o.chunk_rows, StreamOpts::DEFAULT_CHUNK_ROWS);
+        // contradiction, starvation and overflow are typed errors
+        assert!(StreamOpts::resolve(3, 4, 1000, 100).is_err());
+        assert!(StreamOpts::resolve(3, 4, 0, 100).is_err());
+        assert!(StreamOpts::resolve(3, 0, 0, 0).is_err());
+        let err = StreamOpts::resolve(3, 4, usize::MAX / 2, 1 << 30).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn opts_from_run_config_reads_budget() {
+        use crate::config::RunConfig;
+        let cfg = RunConfig { threads: 4, memory_budget: 144_000, ..Default::default() };
+        let o = StreamOpts::from_run_config(&cfg, 3).unwrap();
+        assert_eq!(o, StreamOpts { shards: 4, chunk_rows: 1000 });
+        let cfg = RunConfig { threads: 2, chunk: 123, ..Default::default() };
+        assert_eq!(StreamOpts::from_run_config(&cfg, 3).unwrap().chunk_rows, 123);
+    }
+
+    #[test]
+    fn error_paths_are_typed() {
+        let ds = MixtureSpec::paper_2d(4).generate(50, 1);
+        let src = MemorySource::new(&ds);
+        let opts = StreamOpts { shards: 2, chunk_rows: 16 };
+        // k == 0
+        let err = run_from(&src, &KmeansConfig::new(0), &opts, &[]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // bad centroid shape
+        let err = run_from(&src, &KmeansConfig::new(2), &opts, &[0.0; 3]).unwrap_err();
+        assert!(matches!(err, Error::Shape(_)), "{err}");
+        // kmeans++ init not streamable
+        let cfg = KmeansConfig::new(2).with_init(Init::KmeansPlusPlus);
+        let err = run(&src, &cfg, &opts).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // k > n through run()
+        let err = run(&src, &KmeansConfig::new(51), &opts).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // empty source
+        let empty = crate::data::Dataset::from_vec(vec![], 2).unwrap();
+        let esrc = MemorySource::new(&empty);
+        let err = run_from(&esrc, &KmeansConfig::new(1), &opts, &[0.0, 0.0]).unwrap_err();
+        assert!(matches!(err, Error::Shape(_)), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_fails_cleanly_not_hangs() {
+        let ds = MixtureSpec::paper_3d(4).generate(3000, 5);
+        let p = tmp("engine_trunc.pkd");
+        io::write_binary(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // open while intact, then truncate on disk: the mid-run IO
+        // failure must surface as a typed error from run_from, with
+        // every worker released (no barrier deadlock)
+        let src = FileSource::open(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let cfg = KmeansConfig::new(4).with_seed(1);
+        let mu0: Vec<f32> = ds.rows(0, 4).to_vec();
+        let err = run_from(&src, &cfg, &StreamOpts { shards: 3, chunk_rows: 256 }, &mu0)
+            .unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+    }
+
+    #[test]
+    fn more_shards_than_rows() {
+        let ds = MixtureSpec::paper_2d(4).generate(10, 1);
+        let src = MemorySource::new(&ds);
+        let cfg = KmeansConfig::new(2).with_seed(1);
+        let r = run(&src, &cfg, &StreamOpts { shards: 64, chunk_rows: 4 }).unwrap();
+        assert_eq!(r.assign.len(), 10);
+        assert!(r.assign.iter().all(|&a| a >= 0));
+    }
+}

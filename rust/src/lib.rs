@@ -37,6 +37,21 @@
 //! bit-identical assignments (property-tested): dispatch changes speed,
 //! never results.
 //!
+//! ## Out of core: clustering past RAM
+//!
+//! [`data::source::DataSource`] streams rows in fixed-size chunks —
+//! from memory (zero-copy), a `.pkd` file, or an on-the-fly seeded GMM
+//! generator — and [`kmeans::streaming`] runs sharded Lloyd over any
+//! of them with `shards × chunk × dim × 4` bytes of row buffers.
+//! The **chunked-accumulation contract** (DESIGN.md §4; details in
+//! `rust/src/linalg/README.md`) makes this exact, not approximate:
+//! the kernel folds f64 statistics in ascending row order and resumes
+//! from the caller's accumulators, so per-shard partials are
+//! bit-identical for every chunk size; partials merge in the fixed
+//! [`kmeans::step::merge_ordered`] fold, so results depend only on
+//! the shard count — one shard reproduces [`kmeans::serial`] bit-for-bit,
+//! `S` shards reproduce [`kmeans::parallel`] at `p = S` bit-for-bit.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -47,6 +62,19 @@
 //! let cfg = KmeansConfig::new(4).with_seed(7);
 //! let result = kmeans::serial::run(&ds, &cfg);
 //! println!("converged in {} iters, sse={}", result.iterations, result.sse);
+//! ```
+//!
+//! Out of core, streaming from a generator source (no resident data):
+//!
+//! ```
+//! use parakmeans::data::gmm::MixtureSpec;
+//! use parakmeans::data::source::GmmSource;
+//! use parakmeans::kmeans::{streaming, KmeansConfig};
+//!
+//! let src = GmmSource::new(MixtureSpec::paper_3d(4), 5_000, 42);
+//! let opts = streaming::StreamOpts { shards: 2, chunk_rows: 512 };
+//! let result = streaming::run(&src, &KmeansConfig::new(4), &opts).unwrap();
+//! assert_eq!(result.assign.len(), 5_000);
 //! ```
 
 // Lint policy: numeric hot-path code indexes flat row-major buffers by

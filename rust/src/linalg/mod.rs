@@ -80,6 +80,14 @@ pub fn cholesky(a: &[f64], d: usize) -> Option<Vec<f64>> {
 /// `y = L·x` for lower-triangular `L` (d×d row-major).
 pub fn tril_matvec(l: &[f64], x: &[f64], d: usize) -> Vec<f64> {
     let mut y = vec![0.0f64; d];
+    tril_matvec_into(l, x, d, &mut y);
+    y
+}
+
+/// [`tril_matvec`] into a caller-owned buffer — the allocation-free
+/// form for per-row hot loops (GMM sampling).
+pub fn tril_matvec_into(l: &[f64], x: &[f64], d: usize, y: &mut [f64]) {
+    assert_eq!(y.len(), d);
     for i in 0..d {
         let mut acc = 0.0;
         for j in 0..=i {
@@ -87,7 +95,6 @@ pub fn tril_matvec(l: &[f64], x: &[f64], d: usize) -> Vec<f64> {
         }
         y[i] = acc;
     }
-    y
 }
 
 #[cfg(test)]

@@ -2,21 +2,27 @@
 //!
 //! Subcommands:
 //!   gen-data   generate a paper-family GMM dataset to a .pkd/.csv file
+//!              (`--chunk` streams the write with O(chunk) memory)
 //!   run        cluster a dataset with any engine, print a report
+//!              (`--engine oocore` streams with `--memory-budget`)
 //!   eval       regenerate paper tables/figures (t1..t5, f*, a1..a3, all)
+//!   serve      nearest-centroid assignment as a line-JSON TCP service
 //!   info       show AOT artifact manifest + runtime info
 //!
 //! Examples:
 //!   parakm gen-data --dim 3 --n 100000 --out data/d3_100k.pkd
 //!   parakm run --input data/d3_100k.pkd --engine shared --k 4 --threads 8
 //!   parakm run --synthetic 3d:200000 --engine offload --k 4 --kernel scalar
+//!   parakm run --input data/d3_100k.pkd --engine oocore --k 4 --memory-budget 1M
+//!   parakm run --synthetic 3d:100000000 --engine oocore --k 4 --memory-budget 64M
 //!   parakm eval --exp t3 --scale smoke
 //!   parakm info
 
 use std::path::PathBuf;
 
-use parakmeans::config::{Engine, Init, RunConfig};
+use parakmeans::config::{parse_bytes, Engine, Init, RunConfig};
 use parakmeans::coordinator::{offload, shared};
+use parakmeans::data::source::{DataSource, FileSource, GmmSource};
 use parakmeans::data::{gmm::MixtureSpec, io, Dataset};
 use parakmeans::error::{Error, Result};
 use parakmeans::eval::{self, Scale};
@@ -75,14 +81,16 @@ fn print_usage() {
     println!(
         "parakm — parallel K-Means (rust + JAX/Pallas AOT)\n\
          \n\
-         usage: parakm <gen-data|run|eval|info> [flags]\n\
+         usage: parakm <gen-data|run|eval|serve|info> [flags]\n\
          \n\
          gen-data  --dim <2|3> --n <N> --out <file.pkd|file.csv> [--components K] [--seed S]\n\
+         \u{20}          [--chunk C]   (stream the write, O(C) memory)\n\
          run       --input <file> | --synthetic <2d|3d>:<N>\n\
-         \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming\n\
+         \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore\n\
          \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
          \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
          \u{20}          [--kernel auto|scalar|avx2|neon]\n\
+         \u{20}          [--memory-budget BYTES[K|M|G]]   (oocore: bound resident chunk buffers)\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
          serve     --input <file> | --synthetic <2d|3d>:<N>  --k K [--addr HOST:PORT]\n\
          \u{20}          [--max-batch B] [--max-delay-ms T] [--artifacts DIR]\n\
@@ -96,6 +104,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     let out: PathBuf = PathBuf::from(args.get("out").or_config("missing --out")?.to_string());
     let seed: u64 = args.get_or("seed", 42)?;
     let components: usize = args.get_or("components", if dim == 2 { 8 } else { 4 })?;
+    let chunk: usize = args.get_or("chunk", 0)?; // 0 = whole dataset in memory
     args.finish()?;
 
     let spec = match dim {
@@ -103,10 +112,16 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         3 => MixtureSpec::paper_3d(components),
         d => MixtureSpec::random(d, components, 12.0, 1.5, 0x9e0 + d as u64),
     };
-    let ds = spec.generate(n, seed);
-    match out.extension().and_then(|e| e.to_str()) {
-        Some("csv") => io::write_csv(&out, &ds)?,
-        _ => io::write_binary(&out, &ds)?,
+    let is_csv = out.extension().and_then(|e| e.to_str()) == Some("csv");
+    if chunk > 0 {
+        gen_data_streamed(&spec, n, seed, &out, chunk, dim, is_csv)?;
+    } else {
+        let ds = spec.generate(n, seed);
+        if is_csv {
+            io::write_csv(&out, &ds)?;
+        } else {
+            io::write_binary(&out, &ds)?;
+        }
     }
     println!(
         "wrote {} points ({dim}D, {components} components, seed {seed}) to {}",
@@ -114,6 +129,70 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         out.display()
     );
     Ok(())
+}
+
+/// `gen-data --chunk`: stream the write with O(chunk) resident memory.
+/// The sequential sampler draws the exact bytes `generate(n, seed)`
+/// would, so output is byte-identical to the unstreamed path. For
+/// `.pkd`, truth labels follow the payload on disk, so a second
+/// sampler replay streams them too — label memory stays O(chunk) at
+/// the cost of generating twice. CSV carries no labels (one pass).
+fn gen_data_streamed(
+    spec: &MixtureSpec,
+    n: usize,
+    seed: u64,
+    out: &std::path::Path,
+    chunk: usize,
+    dim: usize,
+    is_csv: bool,
+) -> Result<()> {
+    use std::io::Write as _;
+
+    if is_csv {
+        // CSV is row-at-a-time through the BufWriter — no chunk
+        // staging needed, the flag only bounds the (absent) buffering
+        if let Some(dir) = out.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        writeln!(w, "{}", io::csv_header(dim))?;
+        let mut sampler = spec.sampler(seed);
+        let mut row = vec![0.0f32; dim];
+        for _ in 0..n {
+            sampler.next_row(&mut row);
+            writeln!(w, "{}", io::csv_row(&row))?;
+        }
+        w.flush()?;
+        return Ok(());
+    }
+
+    let mut block = vec![0.0f32; chunk.min(n.max(1)) * dim];
+    let mut w = io::BinWriter::create(out, dim, n, true)?;
+    let mut sampler = spec.sampler(seed);
+    let mut written = 0usize;
+    while written < n {
+        let rows = chunk.min(n - written);
+        for row in block[..rows * dim].chunks_exact_mut(dim) {
+            sampler.next_row(row);
+        }
+        w.write_rows(&block[..rows * dim])?;
+        written += rows;
+    }
+    // second pass: replay the sampler for the trailing truth section
+    let mut sampler = spec.sampler(seed);
+    let mut labels = Vec::with_capacity(chunk.min(n.max(1)));
+    let mut row = vec![0.0f32; dim];
+    let mut written = 0usize;
+    while written < n {
+        let rows = chunk.min(n - written);
+        labels.clear();
+        for _ in 0..rows {
+            labels.push(sampler.next_row(&mut row) as i32);
+        }
+        w.write_truth(&labels)?;
+        written += rows;
+    }
+    w.finish(None)
 }
 
 fn load_input(args: &Args) -> Result<Dataset> {
@@ -126,25 +205,34 @@ fn load_input(args: &Args) -> Result<Dataset> {
         return Ok(ds);
     }
     if let Some(spec) = args.get("synthetic") {
-        let (dim_s, n_s) = spec
-            .split_once(':')
-            .or_config("--synthetic expects <2d|3d>:<N>")?;
-        let dim = match dim_s {
-            "2d" => 2,
-            "3d" => 3,
-            other => {
-                return Err(Error::Config(format!("--synthetic dim `{other}` (2d|3d)")))
-            }
-        };
-        let n: usize = n_s.parse().or_config("--synthetic size")?;
+        let (dim, n) = parse_synthetic(spec)?;
         return Ok(eval::paper_dataset(dim, n));
     }
     Err(Error::Config("provide --input <file> or --synthetic <2d|3d>:<N>".into()))
 }
 
+/// Parse a `--synthetic <2d|3d>:<N>` spec into `(dim, n)`.
+fn parse_synthetic(spec: &str) -> Result<(usize, usize)> {
+    let (dim_s, n_s) = spec
+        .split_once(':')
+        .or_config("--synthetic expects <2d|3d>:<N>")?;
+    let dim = match dim_s {
+        "2d" => 2,
+        "3d" => 3,
+        other => return Err(Error::Config(format!("--synthetic dim `{other}` (2d|3d)"))),
+    };
+    let n: usize = n_s.parse().or_config("--synthetic size")?;
+    Ok((dim, n))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
-    let ds = load_input(args)?;
     let engine: Engine = args.require("engine")?;
+    if engine == Engine::OutOfCore {
+        // the point of oocore is that the dataset is never resident —
+        // it gets its own path that opens a source instead of loading
+        return cmd_run_oocore(args);
+    }
+    let ds = load_input(args)?;
     let k: usize = args.require("k")?;
     let threads: usize = args.get_or("threads", 4)?;
     let tol: f64 = args.get_or("tol", 1e-6)?;
@@ -180,7 +268,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         Engine::Shared => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = shared::run(&ds, &cfg, threads)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -188,7 +276,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         Engine::Offload => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = offload::run(&ds, &cfg)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -199,12 +287,13 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .or_config("--engine streaming requires --input <file.pkd>")?;
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, chunk, batch,
-                artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run =
                 parakmeans::coordinator::streaming::run_file(std::path::Path::new(path), &cfg)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
         }
+        Engine::OutOfCore => unreachable!("dispatched to cmd_run_oocore above"),
     };
     let total = t0.elapsed().as_secs_f64();
 
@@ -240,6 +329,139 @@ fn cmd_run(args: &Args) -> Result<()> {
             .map(|(i, &a)| vec![i as f64, a as f64])
             .collect();
         parakmeans::util::csv::write_table(&path, &["index", "cluster"], &rows)?;
+        println!("assignments : {}", path.display());
+    }
+    Ok(())
+}
+
+/// `run --engine oocore`: cluster through a [`DataSource`] with
+/// bounded resident memory — `--input file.pkd` streams from disk,
+/// `--synthetic` streams from the on-the-fly GMM generator (so `n` can
+/// exceed both RAM and disk).
+fn cmd_run_oocore(args: &Args) -> Result<()> {
+    use parakmeans::kmeans::streaming::{self, StreamOpts};
+
+    let k: usize = args.require("k")?;
+    let threads: usize = args.get_or("threads", 4)?;
+    let tol: f64 = args.get_or("tol", 1e-6)?;
+    let max_iters: usize = args.get_or("max-iters", 300)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let init: Init = args.get_or("init", Init::Random)?;
+    let chunk: usize = args.get_or("chunk", 0)?;
+    let memory_budget: usize = match args.get("memory-budget") {
+        Some(raw) => parse_bytes(raw)?,
+        None => 0,
+    };
+    let kernel_flag: Option<KernelChoice> =
+        args.get("kernel").map(|v| v.parse()).transpose()?;
+    let assign_out = args.get("assign-out").map(PathBuf::from);
+
+    // build the source without materializing anything
+    let source: Box<dyn DataSource> = if let Some(path) = args.get("input") {
+        let p = PathBuf::from(path);
+        match p.extension().and_then(|e| e.to_str()) {
+            Some(e) if e.eq_ignore_ascii_case("csv") => {
+                return Err(Error::Config(
+                    "--engine oocore streams .pkd files, not csv; \
+                     convert with gen-data or use an in-memory engine"
+                        .into(),
+                ))
+            }
+            // anything else: let the magic-number probe decide (same
+            // policy as the in-memory loader)
+            _ => Box::new(FileSource::open(&p)?),
+        }
+    } else if let Some(spec) = args.get("synthetic") {
+        // NOTE: streams the per-row-seeded generator family — a
+        // different (equally distributed) sample sequence than the
+        // in-memory engines' --synthetic datasets, which no O(1)-seek
+        // generator can reproduce. For cross-engine bit-identity
+        // comparisons use a shared --input file.
+        let (dim, n) = parse_synthetic(spec)?;
+        Box::new(GmmSource::paper(dim, n, parakmeans::data::gmm::workloads::seed_for(dim, n))?)
+    } else {
+        return Err(Error::Config("provide --input <file.pkd> or --synthetic <2d|3d>:<N>".into()));
+    };
+    args.finish()?;
+
+    let tier = match kernel_flag {
+        Some(choice) => kernel::set_active(choice)?,
+        None => kernel::active_tier(),
+    };
+    let kernel_choice = kernel_flag.unwrap_or(KernelChoice::Auto);
+    let cfg = RunConfig {
+        engine: Engine::OutOfCore,
+        k,
+        tol,
+        max_iters,
+        seed,
+        init,
+        threads,
+        chunk,
+        memory_budget,
+        batch: 8192,
+        artifacts_dir: "artifacts".into(),
+        kernel: kernel_choice,
+    };
+    cfg.validate()?;
+    let opts = StreamOpts::from_run_config(&cfg, source.dim())?;
+    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+
+    let t0 = std::time::Instant::now();
+    let result = streaming::run(source.as_ref(), &kc, &opts)?;
+    let total = t0.elapsed().as_secs_f64();
+
+    let payload_bytes = source.len() * source.dim() * 4;
+    println!("engine      : oocore");
+    println!("kernel tier : {tier} (requested: {kernel_choice})");
+    println!("source      : {}", source.describe());
+    println!(
+        "residency   : {} chunk-buffer bytes ({} shards × {} rows) + {} assignment bytes; \
+         payload {} bytes never resident",
+        opts.buffer_bytes(source.dim()),
+        opts.shards,
+        opts.chunk_rows,
+        source.len() * 4,
+        payload_bytes
+    );
+    println!("k           : {k}   init: {init:?}   seed: {seed}");
+    println!(
+        "iterations  : {} (converged: {})",
+        result.iterations, result.converged
+    );
+    println!("sse         : {:.6e}", result.sse);
+    println!("final shift : {:.3e}", result.shift);
+    println!("time        : {total:.4}s");
+    println!("cluster sizes: {:?}", result.cluster_sizes());
+    if source.has_truth() {
+        // honor the budget: truth labels are another O(n·4) bytes on
+        // top of the assignment vector
+        let truth_bytes = source.len() * 4;
+        if memory_budget > 0 && truth_bytes > memory_budget {
+            println!(
+                "ARI vs truth: skipped ({truth_bytes} label bytes exceed \
+                 --memory-budget {memory_budget}; rerun without a budget to compute)"
+            );
+        } else if let Some(truth) = source.truth()? {
+            println!(
+                "ARI vs truth: {:.4}",
+                metrics::adjusted_rand_index(&result.assign, &truth)
+            );
+        }
+    }
+    if let Some(path) = assign_out {
+        // stream straight to disk: a Vec-of-rows staging table would
+        // be O(n·56 B) — unacceptable for the engine built for big n
+        use std::io::Write as _;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(w, "index,cluster")?;
+        for (i, &a) in result.assign.iter().enumerate() {
+            writeln!(w, "{i},{a}")?;
+        }
+        w.flush()?;
         println!("assignments : {}", path.display());
     }
     Ok(())

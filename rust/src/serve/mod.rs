@@ -18,12 +18,12 @@
 //!                              responses routed back per request
 //! ```
 //!
-//! The batcher owns the [`Runtime`] and lives on one dedicated thread
-//! (the PJRT-era contract — a real PJRT client is not `Send`; the
-//! native executor keeps the same single-owner shape). Acceptors
-//! communicate via `mpsc`. No tokio in the offline image (DESIGN.md
-//! §8): blocking IO + threads, which is also the right shape for a CPU
-//! backend.
+//! The batcher owns the [`crate::runtime::Runtime`] and lives on one
+//! dedicated thread (the PJRT-era contract — a real PJRT client is not
+//! `Send`; the native executor keeps the same single-owner shape).
+//! Acceptors communicate via `mpsc`. No tokio in the offline image
+//! (DESIGN.md §8, "Offline-image constraints"): blocking IO + threads,
+//! which is also the right shape for a CPU backend.
 
 pub mod batcher;
 pub mod protocol;

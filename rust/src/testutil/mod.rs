@@ -13,6 +13,29 @@
 //! });
 //! ```
 
+use crate::kmeans::KmeansResult;
+
+/// Assert two engine results are bit-identical — the chunked-
+/// accumulation contract's definition of equality, single-sourced for
+/// the unit, integration and bench cross-checks: assignments, centroid
+/// bits, SSE bits, convergence telemetry and the full per-iteration
+/// history.
+///
+/// Panics with `what` context on the first divergence.
+pub fn assert_bit_identical(a: &KmeansResult, b: &KmeansResult, what: &str) {
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(a.assign, b.assign, "{what}: assignments");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.centroids), bits(&b.centroids), "{what}: centroid bits");
+    assert_eq!(a.sse.to_bits(), b.sse.to_bits(), "{what}: sse bits");
+    assert_eq!(a.history.len(), b.history.len(), "{what}: history length");
+    for (i, (x, y)) in a.history.iter().zip(&b.history).enumerate() {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{what}: history[{i}].sse");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{what}: history[{i}].shift");
+    }
+}
+
 pub mod prop {
     use crate::rng::Pcg64;
 

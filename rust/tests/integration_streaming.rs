@@ -1,0 +1,236 @@
+//! Integration: the out-of-core streaming engine against the in-memory
+//! engines on the paper's 2D/3D GMM datasets — the acceptance claim of
+//! the chunked-accumulation contract in executable form:
+//!
+//! - a streaming run whose memory budget is far smaller than the
+//!   dataset (file-backed and generator-backed) completes and is
+//!   **bit-identical** to the in-memory serial engine (one shard
+//!   replays the serial fold exactly);
+//! - a sharded streaming run is **bit-identical** to the threaded
+//!   engine at the same shard count, for every chunk size;
+//! - the `parakm` binary round-trips `gen-data --chunk` →
+//!   `run --engine oocore --memory-budget` end to end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use parakmeans::data::source::{DataSource, FileSource, GmmSource, MemorySource};
+use parakmeans::data::{io, Dataset};
+use parakmeans::eval;
+use parakmeans::kmeans::streaming::{run_from, StreamOpts};
+use parakmeans::kmeans::{self, init, KmeansConfig};
+use parakmeans::metrics;
+use parakmeans::testutil::assert_bit_identical;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parakm_integration_streaming");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Resolve a budget that is a small fraction of the dataset payload,
+/// asserting it really is smaller (the acceptance premise).
+fn tight_opts(ds: &Dataset, shards: usize, divisor: usize) -> StreamOpts {
+    let payload = ds.len() * ds.dim() * 4;
+    let budget = payload / divisor;
+    let opts = StreamOpts::resolve(ds.dim(), shards, 0, budget).unwrap();
+    assert!(
+        opts.buffer_bytes(ds.dim()) <= budget && budget < payload,
+        "budget {budget} not below payload {payload}"
+    );
+    opts
+}
+
+/// The acceptance criterion: file-backed streaming under a memory
+/// budget ~10× smaller than the dataset, bit-identical to serial on
+/// both paper families.
+#[test]
+fn file_backed_budgeted_run_is_bit_identical_to_serial() {
+    for (dim, n, k) in [(2usize, 20_003usize, 8usize), (3, 30_001, 4)] {
+        let ds = eval::paper_dataset(dim, n);
+        let path = tmp(&format!("paper_{dim}d.pkd"));
+        io::write_binary(&path, &ds).unwrap();
+
+        let cfg = KmeansConfig::new(k).with_seed(42);
+        let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+        let serial = kmeans::serial::run_from(&ds, &cfg, &mu0);
+        assert!(serial.iterations > 1, "degenerate reference ({dim}D)");
+
+        let src = FileSource::open(&path).unwrap();
+        let opts = tight_opts(&ds, 1, 10);
+        assert!(opts.chunk_rows < n, "budget must force multiple chunks");
+        let streamed = run_from(&src, &cfg, &opts, &mu0).unwrap();
+        assert_bit_identical(&streamed, &serial, &format!("paper {dim}D file-backed"));
+    }
+}
+
+/// Generator-backed: the dataset is never on disk either — n is
+/// bounded by neither RAM nor storage. Bit-identical to serial run on
+/// the materialized rows.
+#[test]
+fn generator_backed_budgeted_run_is_bit_identical_to_serial() {
+    for (dim, n, k) in [(2usize, 15_000usize, 8usize), (3, 15_000, 4)] {
+        let gmm = GmmSource::paper(dim, n, 7).unwrap();
+        let ds = gmm.materialize();
+
+        let cfg = KmeansConfig::new(k).with_seed(3);
+        let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+        let serial = kmeans::serial::run_from(&ds, &cfg, &mu0);
+
+        let opts = tight_opts(&ds, 1, 8);
+        let streamed = run_from(&gmm, &cfg, &opts, &mu0).unwrap();
+        assert_bit_identical(&streamed, &serial, &format!("paper {dim}D generator-backed"));
+    }
+}
+
+/// Sharded: S streaming shards == threaded engine at p = S, bit for
+/// bit, for every chunk size — and the clustering agrees with serial.
+#[test]
+fn sharded_budgeted_run_matches_threads_exactly() {
+    let ds = eval::paper_dataset(3, 24_001);
+    let k = 4;
+    let cfg = KmeansConfig::new(k).with_seed(42);
+    let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+    let serial = kmeans::serial::run_from(&ds, &cfg, &mu0);
+    let path = tmp("paper_3d_sharded.pkd");
+    io::write_binary(&path, &ds).unwrap();
+    let src = FileSource::open(&path).unwrap();
+
+    for shards in [2usize, 4, 7] {
+        let threads = kmeans::parallel::run_from(
+            &ds,
+            &cfg,
+            shards,
+            kmeans::parallel::MergeMode::Leader,
+            &mu0,
+        );
+        for divisor in [5usize, 50] {
+            let opts = tight_opts(&ds, shards, divisor);
+            let streamed = run_from(&src, &cfg, &opts, &mu0).unwrap();
+            assert_bit_identical(
+                &streamed,
+                &threads,
+                &format!("shards={shards} divisor={divisor}"),
+            );
+        }
+        // and the sharded clustering matches serial's partition
+        let ari = metrics::adjusted_rand_index(&threads.assign, &serial.assign);
+        assert!(ari > 0.9999, "shards={shards} diverged from serial: ARI {ari}");
+    }
+}
+
+/// Same data via memory, file and generator sources: identical results.
+#[test]
+fn all_sources_agree_bitwise() {
+    let gmm = GmmSource::paper(2, 8_000, 19).unwrap();
+    let ds = gmm.materialize();
+    let path = tmp("sources_2d.pkd");
+    io::write_binary(&path, &ds).unwrap();
+    let file = FileSource::open(&path).unwrap();
+
+    let cfg = KmeansConfig::new(8).with_seed(1);
+    let mu0 = init::initialize(&ds, 8, cfg.init, cfg.seed);
+    let opts = StreamOpts { shards: 3, chunk_rows: 512 };
+
+    let mem = run_from(&MemorySource::new(&ds), &cfg, &opts, &mu0).unwrap();
+    let fil = run_from(&file, &cfg, &opts, &mu0).unwrap();
+    let gen = run_from(&gmm, &cfg, &opts, &mu0).unwrap();
+    assert_bit_identical(&fil, &mem, "file vs memory");
+    assert_bit_identical(&gen, &mem, "generator vs memory");
+    // truth labels travel through all three sources identically
+    assert_eq!(file.truth().unwrap(), ds.truth);
+    assert_eq!(gmm.truth().unwrap(), ds.truth);
+}
+
+// ---- CLI round trip -----------------------------------------------------
+
+fn parakm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_parakm"))
+}
+
+#[test]
+fn cli_gen_data_chunked_write_is_byte_identical() {
+    for ext in ["pkd", "csv"] {
+        let whole = tmp(&format!("cli_whole.{ext}"));
+        let chunked = tmp(&format!("cli_chunked.{ext}"));
+        for (out, extra) in [(&whole, None), (&chunked, Some(["--chunk", "997"]))] {
+            let mut cmd = parakm();
+            cmd.args(["gen-data", "--dim", "3", "--n", "10000", "--out"]).arg(out);
+            if let Some(flags) = extra {
+                cmd.args(flags);
+            }
+            let o = cmd.output().unwrap();
+            assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+        }
+        assert_eq!(
+            std::fs::read(&whole).unwrap(),
+            std::fs::read(&chunked).unwrap(),
+            "streamed gen-data changed the .{ext} bytes"
+        );
+    }
+}
+
+#[test]
+fn cli_oocore_run_under_memory_budget() {
+    let data = tmp("cli_oocore.pkd");
+    let o = parakm()
+        .args(["gen-data", "--dim", "3", "--n", "20000", "--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+
+    // payload is 240 KB; a 128K budget forces chunked streaming while
+    // still affording the 80 KB truth fetch, so ARI must be computed
+    let o = parakm()
+        .args(["run", "--engine", "oocore", "--k", "4", "--memory-budget", "128K", "--input"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let text = String::from_utf8_lossy(&o.stdout);
+    assert!(text.contains("engine      : oocore"), "{text}");
+    assert!(text.contains("converged: true"), "{text}");
+    assert!(text.contains("never resident"), "{text}");
+    assert!(text.contains("ARI vs truth: "), "{text}");
+    assert!(!text.contains("skipped"), "{text}");
+
+    // a budget below the truth-label bytes skips ARI, visibly
+    let o = parakm()
+        .args(["run", "--engine", "oocore", "--k", "4", "--memory-budget", "24K", "--input"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let text = String::from_utf8_lossy(&o.stdout);
+    assert!(text.contains("ARI vs truth: skipped"), "{text}");
+}
+
+#[test]
+fn cli_oocore_synthetic_source() {
+    let o = parakm()
+        .args([
+            "run", "--engine", "oocore", "--k", "4", "--synthetic", "3d:12000",
+            "--memory-budget", "64K", "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let text = String::from_utf8_lossy(&o.stdout);
+    assert!(text.contains("gmm(3D"), "{text}");
+    assert!(text.contains("converged: true"), "{text}");
+}
+
+#[test]
+fn cli_oocore_rejects_contradictory_budget() {
+    let o = parakm()
+        .args([
+            "run", "--engine", "oocore", "--k", "4", "--synthetic", "3d:10000",
+            "--chunk", "100000", "--memory-budget", "1K",
+        ])
+        .output()
+        .unwrap();
+    assert!(!o.status.success());
+    let err = String::from_utf8_lossy(&o.stderr);
+    assert!(err.contains("exceeds --memory-budget"), "{err}");
+}
