@@ -1,0 +1,160 @@
+//! Pruned × parallel sweep: (engine × threads × K × scheduler) on the
+//! paper's 3D GMM family — the A3 ablation extended with the chunk
+//! scheduler and the pruning counters (DESIGN.md §9).
+//!
+//!     cargo bench --bench pruned_parallel
+//!
+//! Knobs (also used by CI bench-smoke):
+//!   PARAKM_BENCH_N        dataset rows (default 200000)
+//!   PARAKM_BENCH_WARMUP / PARAKM_BENCH_REPEATS / PARAKM_BENCH_CAP_SECS
+//!
+//! Per cell: wall-clock median, speedup ψ vs the same engine at p = 1,
+//! efficiency ε = ψ/p, and the distance-computation skip rate from
+//! `KmeansResult::pruning`. Every pruned cell is cross-checked
+//! bit-identical against its p = 1 twin (the DESIGN.md §9 contract)
+//! before timing — no timing assertions, shape only. Writes
+//! `results/tables/pruned.csv` for `eval::report`.
+
+use parakmeans::config::SchedMode;
+use parakmeans::data::gmm::workloads;
+use parakmeans::data::Dataset;
+use parakmeans::eval;
+use parakmeans::kmeans::{self, elkan, hamerly, init, parallel, KmeansConfig, KmeansResult};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+use parakmeans::util::csv;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Eng {
+    Threads,
+    Elkan,
+    Hamerly,
+}
+
+impl Eng {
+    fn name(self) -> &'static str {
+        match self {
+            Eng::Threads => "threads",
+            Eng::Elkan => "elkan",
+            Eng::Hamerly => "hamerly",
+        }
+    }
+
+    fn run(
+        self,
+        ds: &Dataset,
+        cfg: &KmeansConfig,
+        mu0: &[f32],
+        p: usize,
+        mode: SchedMode,
+    ) -> KmeansResult {
+        match self {
+            Eng::Threads => {
+                parallel::run_from_sched(ds, cfg, p, parallel::MergeMode::Leader, mode, mu0)
+            }
+            Eng::Elkan => elkan::run_from_threads(ds, cfg, p, mode, mu0),
+            Eng::Hamerly => hamerly::run_from_threads(ds, cfg, p, mode, mu0),
+        }
+    }
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n = opts.n;
+    println!("== pruned × parallel bench (3D, n={n}) ==");
+
+    let ds = eval::paper_dataset(3, n);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    for k in [workloads::K_3D, 8] {
+        let cfg = KmeansConfig::new(k).with_seed(42);
+        let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+        let lloyd = kmeans::serial::run_from(&ds, &cfg, &mu0);
+        println!(
+            "K={k}: serial Lloyd reference {} iters (converged: {}), sse {:.6e}",
+            lloyd.iterations, lloyd.converged, lloyd.sse
+        );
+
+        for eng in [Eng::Threads, Eng::Elkan, Eng::Hamerly] {
+            let name = eng.name();
+            // speedup base: the same engine, one worker, steal mode
+            let base_result = eng.run(&ds, &cfg, &mu0, 1, SchedMode::Steal);
+            assert_eq!(
+                base_result.assign, lloyd.assign,
+                "K={k} {name}: diverged from serial Lloyd labels"
+            );
+            let base = run_case(&format!("{name} K={k} p=1 base"), &opts, || {
+                eng.run(&ds, &cfg, &mu0, 1, SchedMode::Steal)
+            });
+            let t1 = base.median();
+
+            for p in [1usize, 2, 4] {
+                for mode in [SchedMode::Static, SchedMode::Steal] {
+                    let label = format!("{name:<8} K={k} p={p} {mode}");
+                    let (r, s) = if p == 1 && mode == SchedMode::Steal {
+                        // this cell IS the base configuration — reuse
+                        // its result and timing instead of re-running
+                        let s = parakmeans::util::bench::Sample {
+                            label: label.clone(),
+                            runs: base.runs.clone(),
+                        };
+                        (base_result.clone(), s)
+                    } else {
+                        let r = eng.run(&ds, &cfg, &mu0, p, mode);
+                        // determinism cross-check (exact, once per
+                        // cell): pruned engines are bit-identical to
+                        // p = 1 in BOTH modes; the dense engine only
+                        // within steal mode (static keeps the
+                        // historical per-shard grouping)
+                        if eng != Eng::Threads {
+                            assert_bit_identical(
+                                &r,
+                                &base_result,
+                                &format!("{name} K={k} p={p} {mode}"),
+                            );
+                        } else if mode == SchedMode::Steal {
+                            assert_bit_identical(
+                                &r,
+                                &base_result,
+                                &format!("{name} K={k} p={p} steal"),
+                            );
+                        } else {
+                            assert_eq!(r.assign, base_result.assign, "{name} K={k} p={p} static");
+                        }
+                        let s = run_case(&label, &opts, || eng.run(&ds, &cfg, &mu0, p, mode));
+                        (r, s)
+                    };
+                    let skip = r.pruning.as_ref().map(|s| s.skip_rate()).unwrap_or(0.0);
+                    report(&s);
+                    let secs = s.median();
+                    let speedup = t1 / secs.max(1e-12);
+                    println!(
+                        "         -> speedup {speedup:.2}x  efficiency {:.2}  skip rate {:.1}%",
+                        speedup / p as f64,
+                        100.0 * skip
+                    );
+                    rows.push(vec![
+                        name.to_string(),
+                        k.to_string(),
+                        p.to_string(),
+                        mode.to_string(),
+                        format!("{secs}"),
+                        format!("{speedup}"),
+                        format!("{}", speedup / p as f64),
+                        format!("{skip}"),
+                        r.iterations.to_string(),
+                    ]);
+                }
+            }
+        }
+    }
+
+    let out = eval::results_dir().join("tables/pruned.csv");
+    csv::write_rows(
+        &out,
+        &["engine", "k", "threads", "sched", "secs", "speedup", "efficiency", "skip_rate", "iters"],
+        &rows,
+    )
+    .expect("write pruned.csv");
+    println!("wrote {}", out.display());
+}

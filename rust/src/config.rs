@@ -72,6 +72,50 @@ impl std::fmt::Display for Engine {
     }
 }
 
+/// How the multi-threaded engines hand row chunks to workers
+/// (DESIGN.md §9). Both modes are deterministic for the engines that
+/// honor the chunk-granular statistics contract; `Static` is the
+/// paper's contiguous decomposition, kept as the ablation baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Contiguous per-worker shards fixed up front (the paper's OpenMP
+    /// decomposition); no load balancing.
+    Static,
+    /// Chunk-granular work stealing: idle workers pull
+    /// `POINTS_BLOCK`-aligned chunks from the tails of other workers'
+    /// deques ([`crate::kmeans::sched`]). The default here and for the
+    /// pruned engines (bit-identical either way); the CLI defaults the
+    /// dense `threads` engine to `Static` to preserve the DESIGN.md §4
+    /// `oocore ≡ threads` bit-identity.
+    #[default]
+    Steal,
+}
+
+impl std::str::FromStr for SchedMode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<SchedMode> {
+        Ok(match s {
+            "static" => SchedMode::Static,
+            "steal" => SchedMode::Steal,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown scheduler `{other}` (static|steal)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for SchedMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SchedMode::Static => "static",
+            SchedMode::Steal => "steal",
+        })
+    }
+}
+
 /// Centroid initialization strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Init {
@@ -107,8 +151,13 @@ pub struct RunConfig {
     pub max_iters: usize,
     pub seed: u64,
     pub init: Init,
-    /// Worker/thread count (Threads/Shared engines).
+    /// Worker/thread count (Threads/Shared/Elkan/Hamerly engines).
     pub threads: usize,
+    /// Chunk scheduler for the multi-threaded pure-rust engines
+    /// (`--sched static|steal`, DESIGN.md §9). Results never depend on
+    /// it for the engines under the chunk-granular contract; it is the
+    /// load-balancing ablation knob.
+    pub sched: SchedMode,
     /// Streaming chunk size, in rows. For the AOT engines 0 = auto
     /// (the planner combines every artifact size available for (d, k);
     /// a nonzero value pins one artifact — the A1 ablation). For the
@@ -141,6 +190,7 @@ impl Default for RunConfig {
             seed: 42,
             init: Init::Random,
             threads: 4,
+            sched: SchedMode::Steal,
             chunk: 0, // auto
             memory_budget: 0, // unbounded
             batch: 8192,
@@ -274,6 +324,15 @@ mod tests {
     #[test]
     fn memory_budget_defaults_unbounded() {
         assert_eq!(RunConfig::default().memory_budget, 0);
+    }
+
+    #[test]
+    fn sched_mode_parses_and_defaults_to_steal() {
+        assert_eq!(RunConfig::default().sched, SchedMode::Steal);
+        for m in [SchedMode::Static, SchedMode::Steal] {
+            assert_eq!(m.to_string().parse::<SchedMode>().unwrap(), m);
+        }
+        assert!("greedy".parse::<SchedMode>().is_err());
     }
 
     #[test]

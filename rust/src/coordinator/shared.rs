@@ -224,6 +224,7 @@ pub fn run_with(
             shift,
             converged,
             history,
+            pruning: None,
         },
         setup_secs,
         wall_secs,

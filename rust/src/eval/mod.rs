@@ -19,7 +19,7 @@ pub mod tables;
 
 use std::path::PathBuf;
 
-use crate::config::{Engine, RunConfig};
+use crate::config::{Engine, RunConfig, SchedMode};
 use crate::coordinator::{offload, shared};
 use crate::data::gmm::{workloads, MixtureSpec};
 use crate::data::Dataset;
@@ -116,9 +116,9 @@ pub struct Timed {
 }
 
 /// Run one engine on a dataset with paper-standard settings.
-/// `threads` is the worker count for Threads/Shared and the shard
-/// count for OutOfCore (which requires `threads >= 1`); ignored by the
-/// other engines.
+/// `threads` is the worker count for Threads/Shared/Elkan/Hamerly and
+/// the shard count for OutOfCore (which requires `threads >= 1`);
+/// ignored by the other engines.
 pub fn run_engine(
     engine: Engine,
     ds: &Dataset,
@@ -140,12 +140,14 @@ pub fn run_engine(
             (dt, dt, r)
         }
         Engine::Elkan => {
-            let r = kmeans::elkan::run(ds, &kc);
+            // results are bit-identical for every worker count, so
+            // threads only changes wall-clock here
+            let r = kmeans::elkan::run_threads(ds, &kc, threads, SchedMode::Steal);
             let dt = t0.elapsed().as_secs_f64();
             (dt, dt, r)
         }
         Engine::Hamerly => {
-            let r = kmeans::hamerly::run(ds, &kc);
+            let r = kmeans::hamerly::run_threads(ds, &kc, threads, SchedMode::Steal);
             let dt = t0.elapsed().as_secs_f64();
             (dt, dt, r)
         }

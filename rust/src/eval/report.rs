@@ -37,6 +37,7 @@ pub fn generate(results_dir: &Path) -> Result<String> {
     scaling(results_dir, &mut out);
     ablations(results_dir, &mut out);
     oocore(results_dir, &mut out);
+    pruned(results_dir, &mut out);
 
     let path = results_dir.join("REPORT.md");
     std::fs::create_dir_all(results_dir)?;
@@ -280,6 +281,63 @@ fn oocore(dir: &Path, out: &mut String) {
     let _ = writeln!(out);
 }
 
+fn pruned(dir: &Path, out: &mut String) {
+    let _ = writeln!(out, "## Pruned × parallel — engine × threads × K sweep\n");
+    let p = dir.join("tables/pruned.csv");
+    if !p.exists() {
+        let _ = writeln!(out, "_not run_ (`cargo bench --bench pruned_parallel`)\n");
+        return;
+    }
+    // columns: engine, k, threads, sched, secs, speedup, efficiency,
+    // skip_rate, iters — engine/sched are strings, so the string reader
+    let Ok((_, rows)) = csv::read_rows(&p) else {
+        let _ = writeln!(out, "_unreadable pruned.csv_\n");
+        return;
+    };
+    if rows.iter().any(|r| r.len() < 9) {
+        let _ = writeln!(out, "_malformed pruned.csv (expected 9 columns)_\n");
+        return;
+    }
+    let num = |s: &str| s.parse::<f64>().unwrap_or(f64::NAN);
+    let md: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r[0].clone(),
+                r[1].clone(),
+                r[2].clone(),
+                r[3].clone(),
+                format!("{:.4}", num(&r[4])),
+                format!("{:.2}", num(&r[5])),
+                format!("{:.2}", num(&r[6])),
+                format!("{:.1}%", 100.0 * num(&r[7])),
+                r[8].clone(),
+            ]
+        })
+        .collect();
+    md_table(out, &["engine", "K", "p", "sched", "secs", "ψ", "ε", "skip rate", "iters"], &md);
+    // shape checks: skip rates are sane; pruned engines actually prune;
+    // the pruned-engine iteration count never depends on p or sched
+    let pruned_rows: Vec<&Vec<String>> =
+        rows.iter().filter(|r| r[0] == "elkan" || r[0] == "hamerly").collect();
+    let rates_sane = rows.iter().all(|r| {
+        let s = num(&r[7]);
+        (0.0..=1.0).contains(&s)
+    });
+    check(out, "skip rate in [0, 1] for every cell", rates_sane);
+    let prunes = pruned_rows.iter().all(|r| num(&r[7]) > 0.0);
+    check(out, "elkan/hamerly skip rate > 0 everywhere", prunes && !pruned_rows.is_empty());
+    let mut iters_by_cfg: std::collections::BTreeMap<(String, String), f64> = Default::default();
+    let mut iters_stable = true;
+    for r in &pruned_rows {
+        let key = (r[0].clone(), r[1].clone()); // (engine, k)
+        let it = num(&r[8]);
+        iters_stable &= *iters_by_cfg.entry(key).or_insert(it) == it;
+    }
+    check(out, "pruned-engine iterations independent of p and sched", iters_stable);
+    let _ = writeln!(out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,6 +422,54 @@ mod tests {
         let report = generate(&dir).unwrap();
         let bad = "✘ **identical SSE across every chunk size (per shard count)**";
         assert!(report.contains(bad), "{report}");
+    }
+
+    #[test]
+    fn pruned_section_checks_and_renders() {
+        let dir = fixture_dir();
+        let header = [
+            "engine", "k", "threads", "sched", "secs", "speedup", "efficiency", "skip_rate",
+            "iters",
+        ];
+        csv::write_rows(
+            &dir.join("tables/pruned.csv"),
+            &header,
+            &[
+                svec(["threads", "4", "1", "steal", "1.0", "1.0", "1.0", "0", "23"]),
+                svec(["elkan", "4", "1", "steal", "0.4", "1.0", "1.0", "0.8", "23"]),
+                svec(["elkan", "4", "4", "static", "0.15", "2.7", "0.67", "0.8", "23"]),
+                svec(["hamerly", "4", "4", "steal", "0.1", "3.1", "0.78", "0.9", "23"]),
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("## Pruned × parallel"), "{report}");
+        assert!(report.contains("✔ **skip rate in [0, 1] for every cell**"), "{report}");
+        assert!(report.contains("✔ **elkan/hamerly skip rate > 0 everywhere**"), "{report}");
+        assert!(
+            report.contains("✔ **pruned-engine iterations independent of p and sched**"),
+            "{report}"
+        );
+
+        // an iteration count that shifts with p must flip the check
+        csv::write_rows(
+            &dir.join("tables/pruned.csv"),
+            &header,
+            &[
+                svec(["elkan", "4", "1", "steal", "0.4", "1.0", "1.0", "0.8", "23"]),
+                svec(["elkan", "4", "4", "steal", "0.15", "2.7", "0.67", "0.8", "24"]),
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(
+            report.contains("✘ **pruned-engine iterations independent of p and sched**"),
+            "{report}"
+        );
+    }
+
+    fn svec<const N: usize>(cells: [&str; N]) -> Vec<String> {
+        cells.iter().map(|s| s.to_string()).collect()
     }
 
     #[test]

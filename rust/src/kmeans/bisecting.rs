@@ -117,6 +117,7 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         shift: 0.0,
         converged: true,
         history: vec![(sse, 0.0)],
+        pruning: None,
     }
 }
 

@@ -5,26 +5,130 @@
 //! Memory trade-off: O(n·k) bounds vs Hamerly's O(n) — the A3 ablation
 //! bench shows where each wins on the paper's workloads (low-d, modest
 //! k: Hamerly usually does).
+//!
+//! ## Parallel structure (DESIGN.md §9)
+//!
+//! The run is decomposed into fixed [`sched::CHUNK_ROWS`]-row chunks
+//! (a pure function of `n`, never of the worker count) handed to
+//! spawn-once workers through the [`sched::ChunkQueue`] work-stealing
+//! scheduler. Per chunk, a worker:
+//!
+//! 1. maintains bounds and builds a per-block candidate mask;
+//! 2. batch-refreshes the masked distances through the SIMD
+//!    [`kernel::sqdist_pruned`] kernel (bit-identical to
+//!    [`crate::linalg::sqdist`] per entry);
+//! 3. replays the serial per-point candidate loop against the buffer,
+//!    recording reassignments as events instead of touching the global
+//!    f64 running sums.
+//!
+//! The leader then applies the events in ascending row order — exactly
+//! the serial engine's `-=`/`+=` chain — so results are **bit-identical
+//! to the single-threaded run for every worker count, both scheduler
+//! modes, and any steal schedule** (`rust/tests/integration_pruned.rs`
+//! pins this). Pruning effectiveness is recorded per iteration in
+//! [`KmeansResult::pruning`].
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
+
+use crate::config::SchedMode;
 use crate::data::Dataset;
+use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{finalize, PartialStats};
-use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
+use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
 
-/// Run Elkan-accelerated Lloyd.
+/// Run Elkan-accelerated Lloyd (single worker).
 pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
-    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
-    run_from(ds, cfg, &centroids0)
+    run_threads(ds, cfg, 1, SchedMode::Steal)
 }
 
-/// Run from explicit initial centroids.
+/// Run from explicit initial centroids (single worker).
 pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansResult {
+    run_from_threads(ds, cfg, 1, SchedMode::Steal, centroids0)
+}
+
+/// Run with `threads` workers over the chunk scheduler. Bit-identical
+/// to `threads = 1` for every worker count and scheduler mode.
+pub fn run_threads(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from_threads(ds, cfg, threads, sched_mode, &centroids0)
+}
+
+/// A deferred reassignment: the worker records it, the leader replays
+/// it into the global f64 running sums in ascending row order — the
+/// serial engine's exact update chain.
+#[derive(Debug, Clone, Copy)]
+struct Reassign {
+    row: u32,
+    from: u32,
+    to: u32,
+}
+
+/// One chunk's share of the row-indexed state. Locked by whichever
+/// worker pops the chunk (exactly one per round), and by the leader
+/// between barriers.
+struct ChunkSlot<'a> {
+    lo: usize,
+    assign: &'a mut [i32],
+    upper: &'a mut [f32],
+    /// `rows × k` lower bounds (this chunk's slice of the global array).
+    lower: &'a mut [f32],
+    events: Vec<Reassign>,
+    computed: u64,
+}
+
+/// Read-only per-iteration context the leader publishes to workers.
+struct Ctx {
+    mu: Vec<f32>,
+    moved: Vec<f32>,
+    s_half: Vec<f32>,
+    /// k×k inter-centroid distances.
+    cc: Vec<f32>,
+}
+
+/// Per-worker scratch: the chunk-sized distance buffer and per-block
+/// candidate mask (validity map for the buffer — unmasked entries are
+/// stale and never read).
+struct Scratch {
+    dist: Vec<f32>,
+    mask: Vec<bool>,
+}
+
+impl Scratch {
+    fn new(k: usize) -> Scratch {
+        Scratch {
+            dist: vec![0.0; sched::CHUNK_ROWS * k],
+            mask: vec![false; (sched::CHUNK_ROWS / POINTS_BLOCK) * k],
+        }
+    }
+}
+
+/// Run from explicit initial centroids with `threads` workers.
+pub fn run_from_threads(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    centroids0: &[f32],
+) -> KmeansResult {
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
-    let mut mu = centroids0.to_vec();
+    // resolve the hot-path tier on the main thread so a bad
+    // PARAKM_KERNEL aborts here, not inside a worker
+    let tier = kernel::active_tier();
+
+    let nchunks = sched::chunk_count(n);
+    let p = threads.max(1).min(nchunks);
 
     let mut assign = vec![0i32; n];
     let mut upper = vec![0.0f32; n];
@@ -33,121 +137,170 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut counts = vec![0u64; k];
     let mut stats = PartialStats::zeros(k, d);
 
-    // initial exact assignment, seeding all bounds: the dense n×k
-    // distance matrix comes from the SIMD kernel subsystem, then the
-    // (data-dependent) bound seeding stays scalar
-    linalg::kernel::sqdist_matrix(ds.raw(), d, &mu, k, &mut lower, linalg::kernel::active_tier());
-    for i in 0..n {
-        let p = ds.point(i);
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for c in 0..k {
-            let dist = lower[i * k + c].sqrt();
-            lower[i * k + c] = dist;
-            if dist < best_d {
-                best_d = dist;
-                best = c;
-            }
-        }
-        assign[i] = best as i32;
-        upper[i] = best_d;
-        counts[best] += 1;
-        for j in 0..d {
-            sums[best * d + j] += p[j] as f64;
+    // split the row-indexed state into per-chunk exclusive slices
+    let mut slots: Vec<Mutex<ChunkSlot>> = Vec::with_capacity(nchunks);
+    {
+        let mut ra: &mut [i32] = &mut assign;
+        let mut ru: &mut [f32] = &mut upper;
+        let mut rl: &mut [f32] = &mut lower;
+        for ci in 0..nchunks {
+            let (lo, hi) = sched::chunk_range(ci, n);
+            let rows = hi - lo;
+            let (a, ta) = ra.split_at_mut(rows);
+            let (u, tu) = ru.split_at_mut(rows);
+            let (l, tl) = rl.split_at_mut(rows * k);
+            ra = ta;
+            ru = tu;
+            rl = tl;
+            slots.push(Mutex::new(ChunkSlot {
+                lo,
+                assign: a,
+                upper: u,
+                lower: l,
+                events: Vec::new(),
+                computed: 0,
+            }));
         }
     }
 
-    let mut cc = vec![0.0f32; k * k]; // inter-centroid distances
-    let mut s_half = vec![0.0f32; k];
-    let mut history = Vec::new();
+    let queue = ChunkQueue::new(p, sched_mode);
+    let ctx = RwLock::new(Ctx {
+        mu: centroids0.to_vec(),
+        moved: vec![0.0f32; k],
+        s_half: vec![0.0f32; k],
+        cc: vec![0.0f32; k * k],
+    });
+    let barrier = Barrier::new(p + 1);
+    let done = AtomicBool::new(false);
+    let seeding = AtomicBool::new(true);
+
+    let mut mu = centroids0.to_vec();
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut prune = PruneStats {
+        seed_computed: n as u64 * k as u64,
+        per_iter: Vec::new(),
+    };
     let mut converged = false;
     let mut iterations = 0usize;
 
-    for _ in 0..cfg.max_iters {
-        stats.reset();
-        stats.sums.copy_from_slice(&sums);
-        stats.counts.copy_from_slice(&counts);
-        let (mu_new, shift) = finalize(&stats, &mu);
-
-        let mut moved = vec![0.0f32; k];
-        for c in 0..k {
-            moved[c] =
-                linalg::sqdist(&mu_new[c * d..(c + 1) * d], &mu[c * d..(c + 1) * d]).sqrt();
+    std::thread::scope(|scope| {
+        // ---- workers: spawned once, live across all rounds ------------
+        for wid in 0..p {
+            let queue = &queue;
+            let ctx = &ctx;
+            let slots = &slots;
+            let barrier = &barrier;
+            let done = &done;
+            let seeding = &seeding;
+            scope.spawn(move || {
+                let mut scratch = Scratch::new(k);
+                loop {
+                    barrier.wait(); // (A) leader published ctx/done
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let c = ctx.read().unwrap();
+                    if seeding.load(Ordering::Acquire) {
+                        while let Some(ci) = queue.pop(wid) {
+                            seed_chunk(ds, k, &c.mu, tier, &mut slots[ci].lock().unwrap());
+                        }
+                    } else {
+                        while let Some(ci) = queue.pop(wid) {
+                            let mut slot = slots[ci].lock().unwrap();
+                            iterate_chunk(ds, k, &c, tier, &mut slot, &mut scratch);
+                        }
+                    }
+                    drop(c);
+                    barrier.wait(); // (B) round complete
+                }
+            });
         }
-        mu = mu_new;
-        iterations += 1;
-        history.push((f64::NAN, shift));
-        if shift < cfg.tol {
-            converged = true;
-            break;
-        }
 
-        // bound maintenance
-        for i in 0..n {
-            let a = assign[i] as usize;
-            upper[i] += moved[a];
-            for c in 0..k {
-                lower[i * k + c] = (lower[i * k + c] - moved[c]).max(0.0);
+        // ---- leader ----------------------------------------------------
+        // seeding round: dense n×k bound seeding, chunk-parallel
+        queue.fill(nchunks);
+        barrier.wait(); // (A)
+        barrier.wait(); // (B)
+        seeding.store(false, Ordering::Release);
+        // fold counts/sums in ascending row order — the serial chain
+        for slot in &slots {
+            let s = slot.lock().unwrap();
+            for (r, &a) in s.assign.iter().enumerate() {
+                let best = a as usize;
+                counts[best] += 1;
+                let pt = ds.point(s.lo + r);
+                for j in 0..d {
+                    sums[best * d + j] += pt[j] as f64;
+                }
             }
         }
 
-        // inter-centroid distances and s(c)
-        for c in 0..k {
-            let mut nearest = f32::INFINITY;
-            for o in 0..k {
-                if o == c {
-                    cc[c * k + o] = 0.0;
-                    continue;
-                }
-                let dist =
-                    linalg::sqdist(&mu[c * d..(c + 1) * d], &mu[o * d..(o + 1) * d]).sqrt();
-                cc[c * k + o] = dist;
-                nearest = nearest.min(dist);
-            }
-            s_half[c] = nearest * 0.5;
-        }
+        for _ in 0..cfg.max_iters {
+            stats.reset();
+            stats.sums.copy_from_slice(&sums);
+            stats.counts.copy_from_slice(&counts);
+            let (mu_new, shift) = finalize(&stats, &mu);
 
-        for i in 0..n {
-            let mut a = assign[i] as usize;
-            if upper[i] <= s_half[a] {
-                continue; // lemma 1: no other centroid can be closer
+            let mut c = ctx.write().unwrap();
+            for ci in 0..k {
+                let (new, old) = (&mu_new[ci * d..(ci + 1) * d], &mu[ci * d..(ci + 1) * d]);
+                c.moved[ci] = linalg::sqdist(new, old).sqrt();
             }
-            let p = ds.point(i);
-            let mut u_exact = false;
-            for c in 0..k {
-                if c == a {
-                    continue;
-                }
-                // candidate filter: both conditions must pass
-                if upper[i] <= lower[i * k + c] || upper[i] <= 0.5 * cc[a * k + c] {
-                    continue;
-                }
-                if !u_exact {
-                    upper[i] = linalg::sqdist(p, &mu[a * d..(a + 1) * d]).sqrt();
-                    lower[i * k + a] = upper[i];
-                    u_exact = true;
-                    if upper[i] <= lower[i * k + c] || upper[i] <= 0.5 * cc[a * k + c] {
+            mu = mu_new;
+            c.mu.copy_from_slice(&mu);
+            iterations += 1;
+            history.push((f64::NAN, shift));
+            if shift < cfg.tol {
+                converged = true;
+                prune.per_iter.push((0, 0)); // no reassignment phase ran
+                break;
+            }
+
+            // inter-centroid distances and s(c)
+            for a in 0..k {
+                let mut nearest = f32::INFINITY;
+                for o in 0..k {
+                    if o == a {
+                        c.cc[a * k + o] = 0.0;
                         continue;
                     }
+                    let dist =
+                        linalg::sqdist(&mu[a * d..(a + 1) * d], &mu[o * d..(o + 1) * d]).sqrt();
+                    c.cc[a * k + o] = dist;
+                    nearest = nearest.min(dist);
                 }
-                let dist = linalg::sqdist(p, &mu[c * d..(c + 1) * d]).sqrt();
-                lower[i * k + c] = dist;
-                if dist < upper[i] {
-                    // reassign: update running sums
-                    counts[a] -= 1;
-                    counts[c] += 1;
+                c.s_half[a] = nearest * 0.5;
+            }
+            drop(c);
+
+            queue.fill(nchunks);
+            barrier.wait(); // (A)
+            barrier.wait(); // (B)
+
+            // replay reassignment events: ascending chunk, emission
+            // order within — bitwise the serial engine's update chain
+            let mut computed = 0u64;
+            for slot in &slots {
+                let mut s = slot.lock().unwrap();
+                computed += s.computed;
+                s.computed = 0;
+                for ev in s.events.drain(..) {
+                    let (from, to) = (ev.from as usize, ev.to as usize);
+                    counts[from] -= 1;
+                    counts[to] += 1;
+                    let pt = ds.point(ev.row as usize);
                     for j in 0..d {
-                        sums[a * d + j] -= p[j] as f64;
-                        sums[c * d + j] += p[j] as f64;
+                        sums[from * d + j] -= pt[j] as f64;
+                        sums[to * d + j] += pt[j] as f64;
                     }
-                    a = c;
-                    assign[i] = c as i32;
-                    upper[i] = dist;
-                    u_exact = true;
                 }
             }
+            prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
         }
-    }
+        done.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the exit branch
+    });
+    drop(slots); // release the per-chunk borrows of assign/upper/lower
 
     let sse = crate::metrics::sse(ds, &mu, k, &assign);
     if let Some(last) = history.last_mut() {
@@ -164,7 +317,147 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
         shift,
         converged,
         history,
+        pruning: Some(prune),
     }
+}
+
+/// Seeding pass over one chunk: dense squared-distance matrix through
+/// the SIMD kernel, then scalar sqrt/argmin bound seeding — the exact
+/// values the serial seeding computes (per-row pure functions).
+fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut ChunkSlot) {
+    let d = ds.dim();
+    let rows = slot.assign.len();
+    if rows == 0 {
+        return;
+    }
+    kernel::sqdist_matrix(ds.rows(slot.lo, slot.lo + rows), d, mu, k, slot.lower, tier);
+    for r in 0..rows {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dist = slot.lower[r * k + c].sqrt();
+            slot.lower[r * k + c] = dist;
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        slot.assign[r] = best as i32;
+        slot.upper[r] = best_d;
+    }
+}
+
+/// One iteration's work on one chunk: bound maintenance, batched
+/// bound refresh, and an exact replay of the serial candidate loop.
+fn iterate_chunk(
+    ds: &Dataset,
+    k: usize,
+    ctx: &Ctx,
+    tier: KernelTier,
+    slot: &mut ChunkSlot,
+    scratch: &mut Scratch,
+) {
+    let d = ds.dim();
+    let rows = slot.assign.len();
+    if rows == 0 {
+        return;
+    }
+    let lo = slot.lo;
+    let nblocks = rows.div_ceil(POINTS_BLOCK);
+    let mask = &mut scratch.mask[..nblocks * k];
+    mask.fill(false);
+
+    // pass 1: bound maintenance + per-block candidate mask. The mask is
+    // built from the pre-tightening bounds, which only shrink during
+    // the replay, so it covers a superset of the candidates the serial
+    // loop evaluates — except after a mid-loop reassignment changes the
+    // cc row, which the replay covers with a scalar fallback.
+    for r in 0..rows {
+        let a = slot.assign[r] as usize;
+        slot.upper[r] += ctx.moved[a];
+        for c in 0..k {
+            slot.lower[r * k + c] = (slot.lower[r * k + c] - ctx.moved[c]).max(0.0);
+        }
+        if slot.upper[r] <= ctx.s_half[a] {
+            continue; // lemma 1: no other centroid can be closer
+        }
+        let b = r / POINTS_BLOCK;
+        let mut any = false;
+        for c in 0..k {
+            if c == a {
+                continue;
+            }
+            if slot.upper[r] > slot.lower[r * k + c] && slot.upper[r] > 0.5 * ctx.cc[a * k + c] {
+                mask[b * k + c] = true;
+                any = true;
+            }
+        }
+        if any {
+            mask[b * k + a] = true; // the lazy upper-tightening distance
+        }
+    }
+
+    // batched bound refresh: one SIMD pass over the masked pairs
+    let dist = &mut scratch.dist[..rows * k];
+    let mut computed =
+        kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask, dist, tier);
+
+    // pass 2: the serial candidate loop, verbatim, reading exact
+    // distances from the buffer (scalar fallback off-mask)
+    let mut fallback = 0u64;
+    let exact = |r: usize, c: usize, fallback: &mut u64| -> f32 {
+        if mask[(r / POINTS_BLOCK) * k + c] {
+            dist[r * k + c].sqrt()
+        } else {
+            *fallback += 1;
+            linalg::sqdist(ds.point(lo + r), &ctx.mu[c * d..(c + 1) * d]).sqrt()
+        }
+    };
+    for r in 0..rows {
+        let mut a = slot.assign[r] as usize;
+        if slot.upper[r] <= ctx.s_half[a] {
+            continue;
+        }
+        let mut u_exact = false;
+        for c in 0..k {
+            if c == a {
+                continue;
+            }
+            // candidate filter: both conditions must pass
+            if slot.upper[r] <= slot.lower[r * k + c]
+                || slot.upper[r] <= 0.5 * ctx.cc[a * k + c]
+            {
+                continue;
+            }
+            if !u_exact {
+                let du = exact(r, a, &mut fallback);
+                slot.upper[r] = du;
+                slot.lower[r * k + a] = du;
+                u_exact = true;
+                if slot.upper[r] <= slot.lower[r * k + c]
+                    || slot.upper[r] <= 0.5 * ctx.cc[a * k + c]
+                {
+                    continue;
+                }
+            }
+            let dc = exact(r, c, &mut fallback);
+            slot.lower[r * k + c] = dc;
+            if dc < slot.upper[r] {
+                // reassign: defer the running-sum update to the leader
+                slot.events.push(Reassign {
+                    row: (lo + r) as u32,
+                    from: a as u32,
+                    to: c as u32,
+                });
+                a = c;
+                slot.assign[r] = c as i32;
+                slot.upper[r] = dc;
+                u_exact = true;
+            }
+        }
+    }
+    computed += fallback;
+    slot.computed += computed;
 }
 
 #[cfg(test)]
@@ -172,6 +465,7 @@ mod tests {
     use super::*;
     use crate::data::MixtureSpec;
     use crate::kmeans::serial;
+    use crate::testutil::assert_bit_identical;
 
     #[test]
     fn matches_lloyd_clustering_2d() {
@@ -221,5 +515,41 @@ mod tests {
         assert!(r.converged);
         let ari = crate::metrics::adjusted_rand_index(&r.assign, ds.truth.as_ref().unwrap());
         assert!(ari > 0.99);
+    }
+
+    #[test]
+    fn threads_bit_identical_to_single_worker_both_modes() {
+        let ds = MixtureSpec::paper_2d(8).generate(4003, 9); // ragged tail chunk
+        let cfg = KmeansConfig::new(8).with_seed(3);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let one = run_from_threads(&ds, &cfg, 1, SchedMode::Steal, &mu0);
+        for p in [2usize, 3, 4, 8] {
+            for mode in [SchedMode::Static, SchedMode::Steal] {
+                let r = run_from_threads(&ds, &cfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("elkan p={p} {mode}"));
+                assert_eq!(r.pruning, one.pruning, "p={p} {mode}: prune counters");
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_counters_recorded_and_bounded() {
+        let ds = MixtureSpec::paper_3d(4).generate(3000, 5);
+        let cfg = KmeansConfig::new(4).with_seed(11);
+        let r = run(&ds, &cfg);
+        let prune = r.pruning.as_ref().expect("elkan records pruning");
+        assert_eq!(prune.seed_computed, 3000 * 4);
+        assert_eq!(prune.per_iter.len(), r.iterations);
+        for &(c, s) in &prune.per_iter {
+            // each (point, centroid) pair is evaluated at most once per
+            // iteration (kernel pairs and scalar fallbacks are disjoint),
+            // so computed never exceeds the dense n·k cost and every
+            // phase that ran accounts for exactly n·k pairs; the
+            // convergence-break iteration records (0, 0)
+            assert!(c <= 3000 * 4, "computed {c} exceeds the dense cost");
+            assert!(c + s == 3000 * 4 || (c, s) == (0, 0), "computed {c} + skipped {s} != n·k");
+        }
+        // an easy mixture prunes most of the dense work
+        assert!(prune.skip_rate() > 0.3, "skip rate {}", prune.skip_rate());
     }
 }

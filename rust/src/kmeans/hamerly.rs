@@ -7,139 +7,302 @@
 //! when `upper ≤ max(lower, s(a))`, where `s(c)` is half the distance
 //! from centroid c to its nearest other centroid. Produces the exact
 //! same sequence of clusterings as Lloyd from the same init.
+//!
+//! ## Parallel structure (DESIGN.md §9)
+//!
+//! Same chunk-granular decomposition as [`crate::kmeans::elkan`]:
+//! fixed [`sched::CHUNK_ROWS`]-row chunks through the
+//! [`sched::ChunkQueue`] work-stealing scheduler, batched bound refresh
+//! through [`kernel::sqdist_pruned`] (tighten pass masks each point's
+//! own centroid; the full-scan pass masks the complement), and
+//! reassignments deferred as events the leader replays in ascending
+//! row order. Results are bit-identical to the single-threaded run for
+//! every worker count, both scheduler modes, and any steal schedule.
+//! Distance-pruning effectiveness is recorded per iteration in
+//! [`KmeansResult::pruning`] — first-class, not a bench-side estimate.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
+
+use crate::config::SchedMode;
 use crate::data::Dataset;
+use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{finalize, PartialStats};
-use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
+use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
 
-/// Run Hamerly-accelerated Lloyd.
+/// Run Hamerly-accelerated Lloyd (single worker).
 pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
-    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
-    run_from(ds, cfg, &centroids0)
+    run_threads(ds, cfg, 1, SchedMode::Steal)
 }
 
-/// Run from explicit initial centroids. Also returns statistics about
-/// skipped distance computations through [`KmeansResult::history`]
-/// (full scans are counted by the bench harness separately).
+/// Run from explicit initial centroids (single worker).
 pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansResult {
+    run_from_threads(ds, cfg, 1, SchedMode::Steal, centroids0)
+}
+
+/// Run with `threads` workers over the chunk scheduler. Bit-identical
+/// to `threads = 1` for every worker count and scheduler mode.
+pub fn run_threads(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from_threads(ds, cfg, threads, sched_mode, &centroids0)
+}
+
+/// A deferred reassignment, replayed by the leader in ascending row
+/// order — the serial engine's exact f64 update chain.
+#[derive(Debug, Clone, Copy)]
+struct Reassign {
+    row: u32,
+    from: u32,
+    to: u32,
+}
+
+/// One chunk's share of the row-indexed state.
+struct ChunkSlot<'a> {
+    lo: usize,
+    assign: &'a mut [i32],
+    upper: &'a mut [f32],
+    lower: &'a mut [f32],
+    events: Vec<Reassign>,
+    computed: u64,
+}
+
+/// Read-only per-iteration context the leader publishes to workers.
+struct Ctx {
+    mu: Vec<f32>,
+    moved: Vec<f32>,
+    s_half: Vec<f32>,
+    max_move: f32,
+    second_move: f32,
+}
+
+/// Per-worker scratch: chunk-sized distance buffer, the two per-block
+/// masks (tighten pass / full-scan complement), and the scan-row list.
+struct Scratch {
+    dist: Vec<f32>,
+    mask_a: Vec<bool>,
+    mask_b: Vec<bool>,
+    scan_rows: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(k: usize) -> Scratch {
+        let blocks = sched::CHUNK_ROWS / POINTS_BLOCK;
+        Scratch {
+            dist: vec![0.0; sched::CHUNK_ROWS * k],
+            mask_a: vec![false; blocks * k],
+            mask_b: vec![false; blocks * k],
+            scan_rows: Vec::new(),
+        }
+    }
+}
+
+/// Run from explicit initial centroids with `threads` workers.
+pub fn run_from_threads(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    centroids0: &[f32],
+) -> KmeansResult {
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
-    let mut mu = centroids0.to_vec();
+    let tier = kernel::active_tier();
+
+    let nchunks = sched::chunk_count(n);
+    let p = threads.max(1).min(nchunks);
 
     let mut assign = vec![0i32; n];
     let mut upper = vec![f32::INFINITY; n];
     let mut lower = vec![0.0f32; n];
-    let mut stats = PartialStats::zeros(k, d);
-    let mut sums = vec![0.0f64; k * d]; // running per-cluster sums
+    let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0u64; k];
+    let mut stats = PartialStats::zeros(k, d);
 
-    // initial full assignment pass, seeding bounds and running sums —
-    // the two-nearest scan runs on the SIMD kernel subsystem
-    linalg::kernel::assign_two_nearest(
-        ds.raw(),
-        d,
-        &mu,
-        k,
-        &mut assign,
-        &mut upper,
-        &mut lower,
-        linalg::kernel::active_tier(),
-    );
-    for i in 0..n {
-        let p = ds.point(i);
-        let best = assign[i] as usize;
-        upper[i] = upper[i].sqrt();
-        lower[i] = lower[i].sqrt();
-        counts[best] += 1;
-        for j in 0..d {
-            sums[best * d + j] += p[j] as f64;
+    let mut slots: Vec<Mutex<ChunkSlot>> = Vec::with_capacity(nchunks);
+    {
+        let mut ra: &mut [i32] = &mut assign;
+        let mut ru: &mut [f32] = &mut upper;
+        let mut rl: &mut [f32] = &mut lower;
+        for ci in 0..nchunks {
+            let (lo, hi) = sched::chunk_range(ci, n);
+            let rows = hi - lo;
+            let (a, ta) = ra.split_at_mut(rows);
+            let (u, tu) = ru.split_at_mut(rows);
+            let (l, tl) = rl.split_at_mut(rows);
+            ra = ta;
+            ru = tu;
+            rl = tl;
+            slots.push(Mutex::new(ChunkSlot {
+                lo,
+                assign: a,
+                upper: u,
+                lower: l,
+                events: Vec::new(),
+                computed: 0,
+            }));
         }
     }
 
-    let mut history = Vec::new();
+    let queue = ChunkQueue::new(p, sched_mode);
+    let ctx = RwLock::new(Ctx {
+        mu: centroids0.to_vec(),
+        moved: vec![0.0f32; k],
+        s_half: vec![0.0f32; k],
+        max_move: 0.0,
+        second_move: 0.0,
+    });
+    let barrier = Barrier::new(p + 1);
+    let done = AtomicBool::new(false);
+    let seeding = AtomicBool::new(true);
+
+    let mut mu = centroids0.to_vec();
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut prune = PruneStats {
+        seed_computed: n as u64 * k as u64,
+        per_iter: Vec::new(),
+    };
     let mut converged = false;
     let mut iterations = 0usize;
-    let mut s_half = vec![0.0f32; k];
 
-    for _ in 0..cfg.max_iters {
-        // means from running sums
-        stats.reset();
-        stats.sums.copy_from_slice(&sums);
-        stats.counts.copy_from_slice(&counts);
-        let (mu_new, shift) = finalize(&stats, &mu);
-
-        // per-centroid movement; adjust bounds
-        let mut moved = vec![0.0f32; k];
-        let mut max_move = 0.0f32;
-        let mut second_move = 0.0f32;
-        for c in 0..k {
-            let m = linalg::sqdist(&mu_new[c * d..(c + 1) * d], &mu[c * d..(c + 1) * d]).sqrt();
-            moved[c] = m;
-            if m > max_move {
-                second_move = max_move;
-                max_move = m;
-            } else if m > second_move {
-                second_move = m;
-            }
-        }
-        mu = mu_new;
-        iterations += 1;
-
-        // SSE bookkeeping for parity with other engines: compute from
-        // upper bounds only when exact (skipped otherwise — the bench
-        // reports SSE from a final exact pass below).
-        history.push((f64::NAN, shift));
-        if shift < cfg.tol {
-            converged = true;
-            break;
-        }
-
-        // update s(c): half min distance between centroids
-        for c in 0..k {
-            let mut best = f32::INFINITY;
-            for o in 0..k {
-                if o != c {
-                    let dist = linalg::sqdist(&mu[c * d..(c + 1) * d], &mu[o * d..(o + 1) * d]);
-                    best = best.min(dist);
+    std::thread::scope(|scope| {
+        // ---- workers: spawned once, live across all rounds ------------
+        for wid in 0..p {
+            let queue = &queue;
+            let ctx = &ctx;
+            let slots = &slots;
+            let barrier = &barrier;
+            let done = &done;
+            let seeding = &seeding;
+            scope.spawn(move || {
+                let mut scratch = Scratch::new(k);
+                loop {
+                    barrier.wait(); // (A) leader published ctx/done
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let c = ctx.read().unwrap();
+                    if seeding.load(Ordering::Acquire) {
+                        while let Some(ci) = queue.pop(wid) {
+                            seed_chunk(ds, k, &c.mu, tier, &mut slots[ci].lock().unwrap());
+                        }
+                    } else {
+                        while let Some(ci) = queue.pop(wid) {
+                            let mut slot = slots[ci].lock().unwrap();
+                            iterate_chunk(ds, k, &c, tier, &mut slot, &mut scratch);
+                        }
+                    }
+                    drop(c);
+                    barrier.wait(); // (B) round complete
                 }
-            }
-            s_half[c] = best.sqrt() * 0.5;
+            });
         }
 
-        // bound maintenance + conditional reassignment
-        for i in 0..n {
-            let a = assign[i] as usize;
-            upper[i] += moved[a];
-            lower[i] -= if moved[a] == max_move { second_move } else { max_move };
-            let bound = lower[i].max(s_half[a]);
-            if upper[i] <= bound {
-                continue; // pruned: assignment provably unchanged
-            }
-            // tighten upper with one exact distance
-            let p = ds.point(i);
-            upper[i] = linalg::sqdist(p, &mu[a * d..(a + 1) * d]).sqrt();
-            if upper[i] <= bound {
-                continue;
-            }
-            // full scan
-            let (best, d1, d2) = two_nearest(p, &mu, k, d);
-            if best != a {
-                counts[a] -= 1;
+        // ---- leader ----------------------------------------------------
+        // seeding round: two-nearest scan through the SIMD kernel
+        queue.fill(nchunks);
+        barrier.wait(); // (A)
+        barrier.wait(); // (B)
+        seeding.store(false, Ordering::Release);
+        for slot in &slots {
+            let s = slot.lock().unwrap();
+            for (r, &a) in s.assign.iter().enumerate() {
+                let best = a as usize;
                 counts[best] += 1;
+                let pt = ds.point(s.lo + r);
                 for j in 0..d {
-                    sums[a * d + j] -= p[j] as f64;
-                    sums[best * d + j] += p[j] as f64;
+                    sums[best * d + j] += pt[j] as f64;
                 }
-                assign[i] = best as i32;
             }
-            upper[i] = d1.sqrt();
-            lower[i] = d2.sqrt();
         }
-    }
+
+        for _ in 0..cfg.max_iters {
+            // means from running sums
+            stats.reset();
+            stats.sums.copy_from_slice(&sums);
+            stats.counts.copy_from_slice(&counts);
+            let (mu_new, shift) = finalize(&stats, &mu);
+
+            // per-centroid movement; the two largest drive the bounds
+            let mut c = ctx.write().unwrap();
+            let mut max_move = 0.0f32;
+            let mut second_move = 0.0f32;
+            for ci in 0..k {
+                let (new, old) = (&mu_new[ci * d..(ci + 1) * d], &mu[ci * d..(ci + 1) * d]);
+                let m = linalg::sqdist(new, old).sqrt();
+                c.moved[ci] = m;
+                if m > max_move {
+                    second_move = max_move;
+                    max_move = m;
+                } else if m > second_move {
+                    second_move = m;
+                }
+            }
+            c.max_move = max_move;
+            c.second_move = second_move;
+            mu = mu_new;
+            c.mu.copy_from_slice(&mu);
+            iterations += 1;
+
+            // SSE bookkeeping for parity with other engines: the final
+            // exact pass below fills the last entry.
+            history.push((f64::NAN, shift));
+            if shift < cfg.tol {
+                converged = true;
+                prune.per_iter.push((0, 0)); // no reassignment phase ran
+                break;
+            }
+
+            // update s(c): half min distance between centroids
+            for ci in 0..k {
+                let mut best = f32::INFINITY;
+                for o in 0..k {
+                    if o != ci {
+                        let dist =
+                            linalg::sqdist(&mu[ci * d..(ci + 1) * d], &mu[o * d..(o + 1) * d]);
+                        best = best.min(dist);
+                    }
+                }
+                c.s_half[ci] = best.sqrt() * 0.5;
+            }
+            drop(c);
+
+            queue.fill(nchunks);
+            barrier.wait(); // (A)
+            barrier.wait(); // (B)
+
+            // replay reassignment events in ascending row order
+            let mut computed = 0u64;
+            for slot in &slots {
+                let mut s = slot.lock().unwrap();
+                computed += s.computed;
+                s.computed = 0;
+                for ev in s.events.drain(..) {
+                    let (from, to) = (ev.from as usize, ev.to as usize);
+                    counts[from] -= 1;
+                    counts[to] += 1;
+                    let pt = ds.point(ev.row as usize);
+                    for j in 0..d {
+                        sums[from * d + j] -= pt[j] as f64;
+                        sums[to * d + j] += pt[j] as f64;
+                    }
+                }
+            }
+            prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
+        }
+        done.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the exit branch
+    });
+    drop(slots); // release the per-chunk borrows of assign/upper/lower
 
     // final exact SSE pass (the objective the paper reports)
     let sse = crate::metrics::sse(ds, &mu, k, &assign);
@@ -157,25 +320,130 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
         shift,
         converged,
         history,
+        pruning: Some(prune),
     }
 }
 
-/// Nearest and second-nearest centroid of `p`; returns (argmin, d²₁, d²₂).
-fn two_nearest(p: &[f32], mu: &[f32], k: usize, d: usize) -> (usize, f32, f32) {
-    let mut best = 0usize;
-    let mut d1 = f32::INFINITY;
-    let mut d2 = f32::INFINITY;
-    for c in 0..k {
-        let dist = linalg::sqdist(p, &mu[c * d..(c + 1) * d]);
-        if dist < d1 {
-            d2 = d1;
-            d1 = dist;
-            best = c;
-        } else if dist < d2 {
-            d2 = dist;
+/// Seeding pass over one chunk: the two-nearest scan runs on the SIMD
+/// kernel subsystem, then the (row-local) sqrt bound seeding.
+fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut ChunkSlot) {
+    let d = ds.dim();
+    let rows = slot.assign.len();
+    if rows == 0 {
+        return;
+    }
+    kernel::assign_two_nearest(
+        ds.rows(slot.lo, slot.lo + rows),
+        d,
+        mu,
+        k,
+        slot.assign,
+        slot.upper,
+        slot.lower,
+        tier,
+    );
+    for r in 0..rows {
+        slot.upper[r] = slot.upper[r].sqrt();
+        slot.lower[r] = slot.lower[r].sqrt();
+    }
+}
+
+/// One iteration's work on one chunk: bound maintenance, batched upper
+/// tightening, batched full-scan refresh, and the exact serial replay.
+fn iterate_chunk(
+    ds: &Dataset,
+    k: usize,
+    ctx: &Ctx,
+    tier: KernelTier,
+    slot: &mut ChunkSlot,
+    scratch: &mut Scratch,
+) {
+    let d = ds.dim();
+    let rows = slot.assign.len();
+    if rows == 0 {
+        return;
+    }
+    let lo = slot.lo;
+    let nblocks = rows.div_ceil(POINTS_BLOCK);
+    let mask_a = &mut scratch.mask_a[..nblocks * k];
+    let mask_b = &mut scratch.mask_b[..nblocks * k];
+    mask_a.fill(false);
+    mask_b.fill(false);
+    let dist = &mut scratch.dist[..rows * k];
+    let scan_rows = &mut scratch.scan_rows;
+    scan_rows.clear();
+
+    // pass 1: bound maintenance; unpruned points mask their own
+    // centroid's column for the batched upper-tightening refresh
+    for r in 0..rows {
+        let a = slot.assign[r] as usize;
+        slot.upper[r] += ctx.moved[a];
+        slot.lower[r] -= if ctx.moved[a] == ctx.max_move {
+            ctx.second_move
+        } else {
+            ctx.max_move
+        };
+        let bound = slot.lower[r].max(ctx.s_half[a]);
+        if slot.upper[r] > bound {
+            mask_a[(r / POINTS_BLOCK) * k + a] = true;
         }
     }
-    (best, d1, d2)
+    let mut computed =
+        kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_a, dist, tier);
+
+    // pass 2: tighten upper with the exact distance; points still past
+    // their bound need the full scan — mask the complement columns so
+    // the buffer holds the whole dense row for those blocks
+    for r in 0..rows {
+        let a = slot.assign[r] as usize;
+        let bound = slot.lower[r].max(ctx.s_half[a]);
+        if slot.upper[r] <= bound {
+            continue; // pruned: assignment provably unchanged
+        }
+        slot.upper[r] = dist[r * k + a].sqrt();
+        if slot.upper[r] <= bound {
+            continue;
+        }
+        scan_rows.push(r as u32);
+        let b = r / POINTS_BLOCK;
+        for c in 0..k {
+            if !mask_a[b * k + c] {
+                mask_b[b * k + c] = true;
+            }
+        }
+    }
+    computed += kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_b, dist, tier);
+
+    // pass 3: full scan replay from the (now dense) buffer rows — the
+    // serial `two_nearest` comparison sequence, verbatim
+    for &r32 in scan_rows.iter() {
+        let r = r32 as usize;
+        let a = slot.assign[r] as usize;
+        let mut best = 0usize;
+        let mut d1 = f32::INFINITY;
+        let mut d2 = f32::INFINITY;
+        for c in 0..k {
+            let dc = dist[r * k + c];
+            if dc < d1 {
+                d2 = d1;
+                d1 = dc;
+                best = c;
+            } else if dc < d2 {
+                d2 = dc;
+            }
+        }
+        if best != a {
+            slot.events.push(Reassign {
+                row: (lo + r) as u32,
+                from: a as u32,
+                to: best as u32,
+            });
+            slot.assign[r] = best as i32;
+        }
+        slot.upper[r] = d1.sqrt();
+        slot.lower[r] = d2.sqrt();
+    }
+    slot.computed += computed;
 }
 
 #[cfg(test)]
@@ -183,6 +451,7 @@ mod tests {
     use super::*;
     use crate::data::MixtureSpec;
     use crate::kmeans::serial;
+    use crate::testutil::assert_bit_identical;
 
     #[test]
     fn matches_lloyd_clustering() {
@@ -208,15 +477,6 @@ mod tests {
     }
 
     #[test]
-    fn two_nearest_basic() {
-        let mu = vec![0.0, 0.0, 10.0, 0.0, 5.0, 0.0];
-        let (b, d1, d2) = two_nearest(&[1.0, 0.0], &mu, 3, 2);
-        assert_eq!(b, 0);
-        assert_eq!(d1, 1.0);
-        assert_eq!(d2, 16.0);
-    }
-
-    #[test]
     fn converges() {
         // kmeans++ init — see elkan::tests::converges for why.
         let ds = MixtureSpec::random(2, 4, 70.0, 0.4, 2).generate(2000, 4);
@@ -227,5 +487,43 @@ mod tests {
         assert!(r.converged);
         let ari = crate::metrics::adjusted_rand_index(&r.assign, ds.truth.as_ref().unwrap());
         assert!(ari > 0.99);
+    }
+
+    #[test]
+    fn threads_bit_identical_to_single_worker_both_modes() {
+        let ds = MixtureSpec::paper_3d(4).generate(5001, 7); // ragged tail chunk
+        let cfg = KmeansConfig::new(4).with_seed(2);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let one = run_from_threads(&ds, &cfg, 1, SchedMode::Steal, &mu0);
+        for p in [2usize, 3, 4, 8] {
+            for mode in [SchedMode::Static, SchedMode::Steal] {
+                let r = run_from_threads(&ds, &cfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("hamerly p={p} {mode}"));
+                assert_eq!(r.pruning, one.pruning, "p={p} {mode}: prune counters");
+            }
+        }
+    }
+
+    #[test]
+    fn k1_degenerate_prunes_everything() {
+        // k = 1: s(c) is infinite, every point group-prunes forever
+        let ds = MixtureSpec::paper_2d(4).generate(500, 3);
+        let cfg = KmeansConfig::new(1).with_seed(1);
+        let r = run(&ds, &cfg);
+        assert!(r.converged);
+        assert!(r.assign.iter().all(|&a| a == 0));
+        let prune = r.pruning.unwrap();
+        assert!(prune.per_iter.iter().skip(1).all(|&(c, _)| c == 0), "{:?}", prune.per_iter);
+    }
+
+    #[test]
+    fn pruning_counters_recorded() {
+        let ds = MixtureSpec::paper_2d(8).generate(2500, 5);
+        let cfg = KmeansConfig::new(8).with_seed(9);
+        let r = run(&ds, &cfg);
+        let prune = r.pruning.as_ref().expect("hamerly records pruning");
+        assert_eq!(prune.seed_computed, 2500 * 8);
+        assert_eq!(prune.per_iter.len(), r.iterations);
+        assert!(prune.skip_rate() > 0.3, "skip rate {}", prune.skip_rate());
     }
 }

@@ -102,6 +102,7 @@ pub fn run_from(
         shift,
         converged,
         history,
+        pruning: None,
     }
 }
 

@@ -18,6 +18,7 @@ pub mod init;
 pub mod kselect;
 pub mod minibatch;
 pub mod parallel;
+pub mod sched;
 pub mod serial;
 pub mod step;
 pub mod streaming;
@@ -62,6 +63,45 @@ impl KmeansConfig {
     }
 }
 
+/// Pruning-effectiveness counters for the triangle-inequality engines
+/// ([`elkan`], [`hamerly`]): how many point–centroid distance pairs
+/// each Lloyd iteration actually evaluated vs. what a dense scan
+/// (`n · k`) would have cost. First-class here (not a bench-side
+/// estimate) so every run can report its skip rate.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PruneStats {
+    /// Distance pairs the dense seeding pass evaluated (always `n·k`).
+    pub seed_computed: u64,
+    /// Per Lloyd iteration `(computed, skipped)` distance pairs,
+    /// aligned with [`KmeansResult::history`]. `computed + skipped`
+    /// is the `n·k` dense cost; the final (convergence-detection)
+    /// iteration runs no reassignment phase and records `(0, 0)`.
+    pub per_iter: Vec<(u64, u64)>,
+}
+
+impl PruneStats {
+    /// Total distance pairs evaluated, seeding included.
+    pub fn computed(&self) -> u64 {
+        self.seed_computed + self.per_iter.iter().map(|&(c, _)| c).sum::<u64>()
+    }
+
+    /// Total distance pairs pruning avoided.
+    pub fn skipped(&self) -> u64 {
+        self.per_iter.iter().map(|&(_, s)| s).sum::<u64>()
+    }
+
+    /// Fraction of the dense distance work that pruning skipped,
+    /// seeding included: `skipped / (computed + skipped)` in `[0, 1]`.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.computed() + self.skipped();
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped() as f64 / total as f64
+        }
+    }
+}
+
 /// Result of any engine: centroids (k×d row-major), hard assignments,
 /// and convergence telemetry.
 #[derive(Debug, Clone)]
@@ -80,6 +120,9 @@ pub struct KmeansResult {
     pub converged: bool,
     /// Per-iteration (sse, shift) history for convergence tests/plots.
     pub history: Vec<(f64, f64)>,
+    /// Distance-pruning counters — `Some` for the triangle-inequality
+    /// engines ([`elkan`], [`hamerly`]), `None` for dense engines.
+    pub pruning: Option<PruneStats>,
 }
 
 impl KmeansResult {
@@ -125,8 +168,21 @@ mod tests {
             shift: 0.0,
             converged: true,
             history: vec![],
+            pruning: None,
         };
         assert_eq!(r.centroid(1), &[1.0, 1.0]);
         assert_eq!(r.cluster_sizes(), vec![1, 2]);
+    }
+
+    #[test]
+    fn prune_stats_totals_and_rate() {
+        let s = PruneStats {
+            seed_computed: 40,
+            per_iter: vec![(10, 30), (5, 35), (0, 0)],
+        };
+        assert_eq!(s.computed(), 55);
+        assert_eq!(s.skipped(), 65);
+        assert!((s.skip_rate() - 65.0 / 120.0).abs() < 1e-12);
+        assert_eq!(PruneStats::default().skip_rate(), 0.0);
     }
 }

@@ -15,11 +15,27 @@
 //!   directive — kept as [`MergeMode::Critical`] for the A2 ablation);
 //! - two barriers per iteration mirror the paper's `barrier`: one
 //!   after centroid publication, one after stat accumulation.
+//!
+//! ## Scheduler modes (DESIGN.md §9)
+//!
+//! [`run_sched`] selects how rows reach workers. `Static` is the
+//! paper-faithful path above — contiguous shards, per-shard continuing
+//! accumulators, the decomposition the chunked-accumulation contract's
+//! `oocore(S) ≡ threads(p = S)` guarantee is defined against. `Steal`
+//! re-keys accumulation by fixed [`sched::CHUNK_ROWS`]-row chunk (a
+//! pure function of `n`) and lets idle workers steal chunks; per-chunk
+//! [`PartialStats`] fold through [`merge_ordered`] in ascending chunk
+//! index, so steal-mode results are deterministic for any steal
+//! schedule *and identical for every worker count* — a different (but
+//! fixed) f64 grouping than static mode, with bit-identical
+//! assignments either way.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
+use crate::config::SchedMode;
 use crate::data::Dataset;
+use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{assign_accumulate, finalize, merge_ordered, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 
@@ -37,6 +53,35 @@ pub enum MergeMode {
 /// Run threaded Lloyd with `threads` workers.
 pub fn run(ds: &Dataset, cfg: &KmeansConfig, threads: usize) -> KmeansResult {
     run_opts(ds, cfg, threads, MergeMode::Leader)
+}
+
+/// Run with an explicit scheduler mode (the `--sched` CLI surface).
+pub fn run_sched(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    sched_mode: SchedMode,
+) -> KmeansResult {
+    let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+    run_from_sched(ds, cfg, threads, merge, sched_mode, &centroids0)
+}
+
+/// [`run_from`] with an explicit scheduler mode. `Static` is the
+/// historical contiguous-shard path (all its bitwise contracts
+/// preserved); `Steal` is the chunk-granular work-stealing path.
+pub fn run_from_sched(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    sched_mode: SchedMode,
+    centroids0: &[f32],
+) -> KmeansResult {
+    match sched_mode {
+        SchedMode::Static => run_from(ds, cfg, threads, merge, centroids0),
+        SchedMode::Steal => run_from_steal(ds, cfg, threads, merge, centroids0),
+    }
 }
 
 /// Run with an explicit merge mode (ablation entry point).
@@ -169,6 +214,152 @@ pub fn run_from(
         shift,
         converged,
         history,
+        pruning: None,
+    }
+}
+
+/// The work-stealing dense engine: statistics keyed by chunk (never by
+/// worker), folded through [`merge_ordered`] in ascending chunk index.
+/// Deterministic for any steal schedule and any worker count; the
+/// `Critical` merge stays arrival-ordered (outside the determinism
+/// contract, as in static mode).
+fn run_from_steal(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    centroids0: &[f32],
+) -> KmeansResult {
+    let n = ds.len();
+    let k = cfg.k;
+    let d = ds.dim();
+    assert!(k >= 1, "k must be >= 1");
+    assert_eq!(centroids0.len(), k * d, "bad initial centroids");
+
+    let nchunks = sched::chunk_count(n);
+    let p = threads.max(1).min(nchunks);
+    let mut assign = vec![-1i32; n];
+
+    // per-chunk assignment slices + stats slots
+    let mut chunk_assign: Vec<Mutex<&mut [i32]>> = Vec::with_capacity(nchunks);
+    {
+        let mut rest: &mut [i32] = &mut assign;
+        for ci in 0..nchunks {
+            let (lo, hi) = sched::chunk_range(ci, n);
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            chunk_assign.push(Mutex::new(head));
+            rest = tail;
+        }
+    }
+    let chunk_stats: Vec<Mutex<PartialStats>> =
+        (0..nchunks).map(|_| Mutex::new(PartialStats::zeros(k, d))).collect();
+
+    let queue = ChunkQueue::new(p, SchedMode::Steal);
+    let centroids = RwLock::new(centroids0.to_vec());
+    let global = Mutex::new(PartialStats::zeros(k, d)); // Critical mode
+    let barrier = Barrier::new(p + 1);
+    let done = AtomicBool::new(false);
+
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+
+    std::thread::scope(|scope| {
+        // ---- workers: spawned once, live across all iterations --------
+        for wid in 0..p {
+            let queue = &queue;
+            let chunk_assign = &chunk_assign;
+            let chunk_stats = &chunk_stats;
+            let centroids = &centroids;
+            let global = &global;
+            let barrier = &barrier;
+            let done = &done;
+            scope.spawn(move || {
+                let mut local = PartialStats::zeros(k, d); // Critical mode
+                loop {
+                    barrier.wait(); // (A) leader published centroids/done
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mu = centroids.read().unwrap().clone();
+                    if merge == MergeMode::Critical {
+                        local.reset();
+                    }
+                    while let Some(ci) = queue.pop(wid) {
+                        let (lo, hi) = sched::chunk_range(ci, n);
+                        let rows = ds.rows(lo, hi);
+                        let mut out = chunk_assign[ci].lock().unwrap();
+                        match merge {
+                            MergeMode::Leader => {
+                                let mut st = chunk_stats[ci].lock().unwrap();
+                                assign_accumulate(rows, d, &mu, k, &mut **out, &mut st)
+                                    .expect("shapes validated at entry");
+                            }
+                            MergeMode::Critical => {
+                                crate::kmeans::step::assign_accumulate_into(
+                                    rows, d, &mu, k, &mut **out, &mut local,
+                                )
+                                .expect("shapes validated at entry");
+                            }
+                        }
+                    }
+                    if merge == MergeMode::Critical {
+                        // the paper's critical section
+                        global.lock().unwrap().merge(&local);
+                    }
+                    barrier.wait(); // (B) stats complete
+                }
+            });
+        }
+
+        // ---- leader ----------------------------------------------------
+        for _ in 0..cfg.max_iters {
+            if merge == MergeMode::Critical {
+                global.lock().unwrap().reset();
+            }
+            queue.fill(nchunks);
+            barrier.wait(); // (A)
+            barrier.wait(); // (B) workers finished this iteration
+
+            let merged = match merge {
+                // canonical zeros-seeded ascending-chunk fold: the
+                // chunk grid depends only on n, so merged f64 stats are
+                // identical for every p and steal schedule
+                MergeMode::Leader => merge_ordered(chunk_stats.iter().map(|s| s.lock().unwrap())),
+                MergeMode::Critical => {
+                    let mut m = PartialStats::zeros(k, d);
+                    m.merge(&global.lock().unwrap());
+                    m
+                }
+            };
+            let mu_old = centroids.read().unwrap().clone();
+            let (mu_new, shift) = finalize(&merged, &mu_old);
+            *centroids.write().unwrap() = mu_new;
+            iterations += 1;
+            history.push((merged.sse, shift));
+            if shift < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+        done.store(true, Ordering::Release);
+        barrier.wait(); // release workers into the exit branch
+    });
+    drop(chunk_assign); // release the per-chunk borrows of assign
+
+    let final_centroids = centroids.into_inner().unwrap();
+    let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
+    KmeansResult {
+        centroids: final_centroids,
+        assign,
+        k,
+        dim: d,
+        iterations,
+        sse,
+        shift,
+        converged,
+        history,
+        pruning: None,
     }
 }
 
@@ -229,6 +420,50 @@ mod tests {
         let r = run(&ds, &KmeansConfig::new(2).with_seed(1), 64);
         assert_eq!(r.assign.len(), 10);
         assert!(r.assign.iter().all(|&a| a >= 0));
+    }
+
+    #[test]
+    fn steal_mode_results_independent_of_worker_count() {
+        // chunk-granular stats: the merged f64 grouping is a pure
+        // function of n, so ANY p (and any steal schedule) lands on the
+        // same bits — stronger than static mode can promise
+        let ds = MixtureSpec::paper_2d(8).generate(5003, 3);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let one = run_from_sched(&ds, &cfg, 1, MergeMode::Leader, SchedMode::Steal, &mu0);
+        for p in [2usize, 3, 4, 8] {
+            let r = run_from_sched(&ds, &cfg, p, MergeMode::Leader, SchedMode::Steal, &mu0);
+            crate::testutil::assert_bit_identical(&r, &one, &format!("steal p={p}"));
+        }
+        // and the assignments agree with the static path exactly
+        // (argmin is a pure per-row function of the centroids)
+        let stat = run_from(&ds, &cfg, 4, MergeMode::Leader, &mu0);
+        assert_eq!(one.assign, stat.assign);
+        assert_eq!(one.iterations, stat.iterations);
+    }
+
+    #[test]
+    fn steal_critical_matches_steal_leader_clustering() {
+        let ds = MixtureSpec::paper_3d(4).generate(4001, 7);
+        let cfg = KmeansConfig::new(4).with_seed(2);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let a = run_from_sched(&ds, &cfg, 4, MergeMode::Leader, SchedMode::Steal, &mu0);
+        let b = run_from_sched(&ds, &cfg, 4, MergeMode::Critical, SchedMode::Steal, &mu0);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.iterations, b.iterations);
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn run_sched_static_is_the_historical_path() {
+        let ds = MixtureSpec::paper_2d(8).generate(3001, 11);
+        let cfg = KmeansConfig::new(8).with_seed(4);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let via_sched = run_from_sched(&ds, &cfg, 3, MergeMode::Leader, SchedMode::Static, &mu0);
+        let direct = run_from(&ds, &cfg, 3, MergeMode::Leader, &mu0);
+        crate::testutil::assert_bit_identical(&via_sched, &direct, "static == run_from");
     }
 
     #[test]

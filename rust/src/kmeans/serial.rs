@@ -51,6 +51,7 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
         shift,
         converged,
         history,
+        pruning: None,
     }
 }
 

@@ -311,6 +311,7 @@ pub fn run_from(
         shift,
         converged,
         history,
+        pruning: None,
     })
 }
 

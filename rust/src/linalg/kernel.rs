@@ -386,6 +386,81 @@ pub fn sqdist_matrix(
     }
 }
 
+/// Batched bound-refresh kernel: squared distances for a *masked*
+/// subset of (point-block, centroid) pairs — the hot path of the
+/// Elkan/Hamerly reassignment phase, where pruning leaves an irregular
+/// candidate set (DESIGN.md §9).
+///
+/// `mask` holds one flag per `(block, centroid)`: `mask[b * k + c]`
+/// with `b = row / POINTS_BLOCK` (so `ceil(n / POINTS_BLOCK) * k`
+/// entries). When set, `out[i * k + c]` is written with
+/// `‖rowᵢ − μ_c‖²` for every row `i` of block `b` — the same
+/// lane-per-point tile and f32 op sequence as [`sqdist_matrix`], so a
+/// masked entry is bit-identical to the dense matrix entry on every
+/// tier (and to [`crate::linalg::sqdist`]). Unmasked entries are left
+/// **untouched** — callers own staleness tracking (the mask itself is
+/// the validity map). Blocks with no masked centroid are never loaded.
+///
+/// Returns the number of (point, centroid) pairs evaluated:
+/// `Σ_masked(b,c) live_rows(b)` — the "distances computed" counter the
+/// pruned engines report ([`crate::kmeans::PruneStats`]).
+pub fn sqdist_pruned(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    mask: &[bool],
+    out: &mut [f32],
+    tier: KernelTier,
+) -> u64 {
+    assert_tier_supported(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    let nblocks = n.div_ceil(POINTS_BLOCK);
+    assert_eq!(mask.len(), nblocks * k);
+    assert_eq!(out.len(), n * k);
+    let mut tile = Tile::new(dim);
+    let mut dist = [0.0f32; POINTS_BLOCK];
+    let mut computed = 0u64;
+
+    for b in 0..nblocks {
+        let bmask = &mask[b * k..(b + 1) * k];
+        if !bmask.iter().any(|&m| m) {
+            continue;
+        }
+        let lo = b * POINTS_BLOCK;
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        for c in 0..k {
+            if !bmask[c] {
+                continue;
+            }
+            match tier {
+                KernelTier::Scalar => dist_block_scalar(&tile.xt, dim, centroids, c, &mut dist),
+                #[cfg(target_arch = "x86_64")]
+                // safety: tier == Avx2 only when resolve()/detect()
+                // confirmed AVX2 support on this host
+                KernelTier::Avx2 => unsafe {
+                    x86::dist_block(&tile.xt, dim, centroids, c, &mut dist)
+                },
+                #[cfg(target_arch = "aarch64")]
+                KernelTier::Neon => unsafe {
+                    arm::dist_block(&tile.xt, dim, centroids, c, &mut dist)
+                },
+                #[allow(unreachable_patterns)]
+                _ => dist_block_scalar(&tile.xt, dim, centroids, c, &mut dist),
+            }
+            for i in 0..bn {
+                out[(lo + i) * k + c] = dist[i];
+            }
+            computed += bn as u64;
+        }
+    }
+    computed
+}
+
 // ---- scalar tier (reference semantics for every other tier) ------------
 
 fn argmin_block_scalar(
@@ -824,6 +899,77 @@ mod tests {
                     prop::ensure(assign[i] == best, format!("{tier}: argmin point {i}"))?;
                     prop::ensure(d1[i] == r1, format!("{tier}: d1 point {i}"))?;
                     prop::ensure(d2[i] == r2, format!("{tier}: d2 point {i}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqdist_pruned_all_true_mask_equals_sqdist_matrix_bitwise() {
+        // the pruned kernel's contract: a masked entry is the dense
+        // matrix entry, bit for bit, on every available tier
+        prop::check("pruned(all-true) == matrix", 24, |g| {
+            let d = *g.choice(&[1usize, 2, 3, 7, 17]);
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 12);
+            let rows = g.points(n, d, 9.0);
+            let mu = g.points(k, d, 9.0);
+            let nblocks = n.div_ceil(POINTS_BLOCK);
+            let mask = vec![true; nblocks * k];
+            for tier in tiers() {
+                let mut dense = vec![0.0f32; n * k];
+                sqdist_matrix(&rows, d, &mu, k, &mut dense, tier);
+                let mut pruned = vec![f32::NAN; n * k];
+                let computed = sqdist_pruned(&rows, d, &mu, k, &mask, &mut pruned, tier);
+                prop::ensure(
+                    computed == (n * k) as u64,
+                    format!("{tier}: computed {computed} != n*k {}", n * k),
+                )?;
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                prop::ensure(bits(&pruned) == bits(&dense), format!("{tier}: bits differ"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqdist_pruned_partial_mask_touches_only_masked_entries() {
+        prop::check("pruned partial mask", 16, |g| {
+            let d = *g.choice(&[2usize, 3, 17]);
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(1, 9);
+            let rows = g.points(n, d, 6.0);
+            let mu = g.points(k, d, 6.0);
+            let nblocks = n.div_ceil(POINTS_BLOCK);
+            let mask: Vec<bool> = (0..nblocks * k).map(|_| g.bool()).collect();
+            let want: u64 = (0..nblocks)
+                .flat_map(|b| (0..k).map(move |c| (b, c)))
+                .filter(|&(b, c)| mask[b * k + c])
+                .map(|(b, _)| (n - b * POINTS_BLOCK).min(POINTS_BLOCK) as u64)
+                .sum();
+            for tier in tiers() {
+                let sentinel = -1.0f32;
+                let mut out = vec![sentinel; n * k];
+                let computed = sqdist_pruned(&rows, d, &mu, k, &mask, &mut out, tier);
+                prop::ensure(computed == want, format!("{tier}: count {computed} != {want}"))?;
+                for i in 0..n {
+                    for c in 0..k {
+                        let m = mask[(i / POINTS_BLOCK) * k + c];
+                        let got = out[i * k + c];
+                        if m {
+                            let r = crate::linalg::sqdist(
+                                &rows[i * d..(i + 1) * d],
+                                &mu[c * d..(c + 1) * d],
+                            );
+                            prop::ensure(got == r, format!("{tier}: ({i},{c}) wrong value"))?;
+                        } else {
+                            prop::ensure(
+                                got == sentinel,
+                                format!("{tier}: ({i},{c}) written but unmasked"),
+                            )?;
+                        }
+                    }
                 }
             }
             Ok(())

@@ -20,7 +20,7 @@
 
 use std::path::PathBuf;
 
-use parakmeans::config::{parse_bytes, Engine, Init, RunConfig};
+use parakmeans::config::{parse_bytes, Engine, Init, RunConfig, SchedMode};
 use parakmeans::coordinator::{offload, shared};
 use parakmeans::data::source::{DataSource, FileSource, GmmSource};
 use parakmeans::data::{gmm::MixtureSpec, io, Dataset};
@@ -90,10 +90,11 @@ fn print_usage() {
          \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
          \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
          \u{20}          [--kernel auto|scalar|avx2|neon]\n\
+         \u{20}          [--sched static|steal]   (threads/elkan/hamerly chunk scheduler)\n\
          \u{20}          [--memory-budget BYTES[K|M|G]]   (oocore: bound resident chunk buffers)\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
          serve     --input <file> | --synthetic <2d|3d>:<N>  --k K [--addr HOST:PORT]\n\
-         \u{20}          [--max-batch B] [--max-delay-ms T] [--artifacts DIR]\n\
+         \u{20}          [--max-batch B] [--max-delay-ms T] [--max-conns C] [--artifacts DIR]\n\
          info      [--artifacts DIR]"
     );
 }
@@ -241,6 +242,23 @@ fn cmd_run(args: &Args) -> Result<()> {
     let init: Init = args.get_or("init", Init::Random)?;
     let chunk: usize = args.get_or("chunk", 0)?; // 0 = auto
     let batch: usize = args.get_or("batch", 8192)?;
+    let sched_flag: Option<SchedMode> = args.get("sched").map(|v| v.parse()).transpose()?;
+    // the knob only reaches the chunk-scheduled engines — reject it
+    // elsewhere so an ablation script cannot silently no-op
+    if sched_flag.is_some() && !matches!(engine, Engine::Threads | Engine::Elkan | Engine::Hamerly)
+    {
+        return Err(Error::Config(format!(
+            "--sched applies to threads|elkan|hamerly, not `{engine}`"
+        )));
+    }
+    // dense threads defaults to the static shards so the documented
+    // `oocore --threads S` ≡ `threads --threads S` bit-identity
+    // (DESIGN.md §4) holds out of the box; the pruned engines default
+    // to stealing, where results are bit-identical either way
+    let sched = sched_flag.unwrap_or(match engine {
+        Engine::Threads => SchedMode::Static,
+        _ => SchedMode::Steal,
+    });
     let kernel_flag: Option<KernelChoice> =
         args.get("kernel").map(|v| v.parse()).transpose()?;
     let artifacts: PathBuf =
@@ -261,13 +279,23 @@ fn cmd_run(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let (result, setup, engine_wall) = match engine {
         Engine::Serial => (kmeans::serial::run(&ds, &kc), 0.0, None),
-        Engine::Threads => (kmeans::parallel::run(&ds, &kc, threads), 0.0, None),
-        Engine::Elkan => (kmeans::elkan::run(&ds, &kc), 0.0, None),
-        Engine::Hamerly => (kmeans::hamerly::run(&ds, &kc), 0.0, None),
+        Engine::Threads => (
+            kmeans::parallel::run_sched(
+                &ds,
+                &kc,
+                threads,
+                kmeans::parallel::MergeMode::Leader,
+                sched,
+            ),
+            0.0,
+            None,
+        ),
+        Engine::Elkan => (kmeans::elkan::run_threads(&ds, &kc, threads, sched), 0.0, None),
+        Engine::Hamerly => (kmeans::hamerly::run_threads(&ds, &kc, threads, sched), 0.0, None),
         Engine::MiniBatch => (kmeans::minibatch::run(&ds, &kc, batch), 0.0, None),
         Engine::Shared => {
             let cfg = RunConfig {
-                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = shared::run(&ds, &cfg, threads)?;
@@ -275,7 +303,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         Engine::Offload => {
             let cfg = RunConfig {
-                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run = offload::run(&ds, &cfg)?;
@@ -286,7 +314,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .get("input")
                 .or_config("--engine streaming requires --input <file.pkd>")?;
             let cfg = RunConfig {
-                engine, k, tol, max_iters, seed, init, threads, chunk, batch,
+                engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
             };
             let run =
@@ -315,6 +343,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => println!("time        : {total:.4}s"),
     }
     println!("cluster sizes: {:?}", result.cluster_sizes());
+    if let Some(prune) = &result.pruning {
+        println!(
+            "pruning     : {:.1}% of dense distance work skipped ({} computed, {} skipped)",
+            100.0 * prune.skip_rate(),
+            prune.computed(),
+            prune.skipped()
+        );
+    }
     if let Some(truth) = &ds.truth {
         println!(
             "ARI vs truth: {:.4}",
@@ -397,6 +433,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         seed,
         init,
         threads,
+        sched: SchedMode::Static, // oocore shards contiguously by design
         chunk,
         memory_budget,
         batch: 8192,
@@ -553,6 +590,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let max_batch: usize = args.get_or("max-batch", 4096)?;
     let max_delay_ms: u64 = args.get_or("max-delay-ms", 2)?;
+    let max_conns: usize = args.get_or("max-conns", 64)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     args.finish()?;
@@ -573,6 +611,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_delay: std::time::Duration::from_millis(max_delay_ms),
         },
         queue_depth: 256,
+        max_conns,
     };
     let dim = ds.dim();
     let handle = serve(scfg, run.result.centroids, dim, k)?;

@@ -30,5 +30,5 @@ pub mod protocol;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
-pub use protocol::{Request, Response};
+pub use protocol::{Request, Response, ERR_SATURATED};
 pub use server::{serve, ServeConfig};

@@ -52,6 +52,12 @@ impl Request {
     }
 }
 
+/// Error string of the typed saturation rejection: sent (with id 0 —
+/// no request line was read) when the server is at its concurrent-
+/// connection cap, right before the connection is closed. A constant
+/// so clients and tests can match on it instead of scraping prose.
+pub const ERR_SATURATED: &str = "saturated: concurrent connection limit reached";
+
 /// A server response (success or error).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -68,6 +74,16 @@ pub enum Response {
 }
 
 impl Response {
+    /// The typed rejection a saturated server sends before closing.
+    pub fn saturated() -> Response {
+        Response::Err { id: 0, error: ERR_SATURATED.to_string() }
+    }
+
+    /// Does this response signal server saturation?
+    pub fn is_saturated(&self) -> bool {
+        matches!(self, Response::Err { error, .. } if error == ERR_SATURATED)
+    }
+
     /// Serialize to one JSON line (no trailing newline).
     pub fn to_line(&self) -> String {
         match self {
@@ -140,6 +156,17 @@ mod tests {
         assert!(Request::parse(r#"{"id": 1, "points": []}"#).is_err());
         assert!(Request::parse(r#"{"id": 1, "points": [["a"]]}"#).is_err());
         assert!(Request::parse(r#"{"id": -3, "points": [[1]]}"#).is_err());
+    }
+
+    #[test]
+    fn saturated_is_typed_and_roundtrips() {
+        let r = Response::saturated();
+        assert!(r.is_saturated());
+        let parsed = Response::parse(&r.to_line()).unwrap();
+        assert!(parsed.is_saturated());
+        let other = Response::Err { id: 0, error: "dim mismatch".into() };
+        assert!(!other.is_saturated());
+        assert!(!Response::Ok { id: 1, clusters: vec![], distances: vec![] }.is_saturated());
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //! One OS thread per connection (blocking reads), one batcher thread
 //! owning the runtime; a bounded `sync_channel` between them provides
 //! backpressure: when the device falls behind, acceptors block instead
-//! of buffering unboundedly.
+//! of buffering unboundedly. Connection threads themselves are capped
+//! by [`ServeConfig::max_conns`]: past the cap the acceptor answers
+//! with the typed [`Response::saturated`] rejection and closes, so a
+//! connection flood cannot spawn unbounded OS threads.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
 use crate::error::Result;
@@ -25,6 +28,10 @@ pub struct ServeConfig {
     pub batcher: BatcherConfig,
     /// Queue capacity (requests) between acceptors and the batcher.
     pub queue_depth: usize,
+    /// Maximum concurrent connection-handler threads. Connections past
+    /// the cap receive the typed [`Response::saturated`] rejection and
+    /// are closed instead of spawning a thread.
+    pub max_conns: usize,
 }
 
 impl Default for ServeConfig {
@@ -34,7 +41,30 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             batcher: BatcherConfig::default(),
             queue_depth: 256,
+            max_conns: 64,
         }
+    }
+}
+
+/// RAII share of the connection cap: decrements the live-connection
+/// counter when the handler thread exits (however it exits).
+struct ConnPermit(Arc<AtomicUsize>);
+
+impl ConnPermit {
+    /// Try to take a slot under `cap`; `None` when saturated.
+    fn acquire(active: &Arc<AtomicUsize>, cap: usize) -> Option<ConnPermit> {
+        active
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |c| {
+                (c < cap).then_some(c + 1)
+            })
+            .ok()
+            .map(|_| ConnPermit(active.clone()))
+    }
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -100,6 +130,8 @@ pub fn serve(
 
     // acceptor thread
     let stop2 = stop.clone();
+    let max_conns = cfg.max_conns;
+    let active = Arc::new(AtomicUsize::new(0));
     let accept_thread = std::thread::Builder::new()
         .name("parakm-accept".into())
         .spawn(move || {
@@ -112,8 +144,22 @@ pub fn serve(
                         // small request/response lines: Nagle + delayed
                         // ACK would add ~40 ms stalls per round trip
                         let _ = stream.set_nodelay(true);
-                        let q = queue_tx.clone();
-                        std::thread::spawn(move || handle_conn(stream, q));
+                        match ConnPermit::acquire(&active, max_conns) {
+                            Some(permit) => {
+                                let q = queue_tx.clone();
+                                std::thread::spawn(move || {
+                                    let _permit = permit; // released on exit
+                                    handle_conn(stream, q);
+                                });
+                            }
+                            None => {
+                                // typed rejection, written inline: one
+                                // short line into an empty socket
+                                // buffer cannot block the acceptor
+                                let mut stream = stream;
+                                let _ = writeln!(stream, "{}", Response::saturated().to_line());
+                            }
+                        }
                     }
                     Err(e) => eprintln!("accept error: {e}"),
                 }
@@ -249,6 +295,86 @@ mod tests {
         assert!(matches!(first, Response::Err { .. }), "{first:?}");
         let second = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
         assert!(matches!(second, Response::Ok { id: 1, .. }), "{second:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_cap_rejects_every_connection_with_typed_error() {
+        // the rejection path never touches the batcher, so this runs
+        // artifact-free (the batcher falls back to the native runtime
+        // or dies; the acceptor does not care)
+        let ds = MixtureSpec::paper_3d(4).generate(200, 3);
+        let model = kmeans::serial::run(&ds, &KmeansConfig::new(2).with_seed(1));
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 0,
+            ..Default::default()
+        };
+        let server = serve(cfg, model.centroids.clone(), 3, 2).unwrap();
+        for _ in 0..3 {
+            let conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Response::parse(&line).unwrap();
+            assert!(resp.is_saturated(), "{resp:?}");
+            // and the connection is closed, not left dangling
+            line.clear();
+            assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn capacity_frees_when_connection_closes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ds = MixtureSpec::paper_3d(4).generate(3000, 3);
+        let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            artifacts_dir: dir,
+            max_conns: 1,
+            ..Default::default()
+        };
+        let server = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
+
+        // first client occupies the only slot (round-trip proves the
+        // handler thread is live, not just queued in the accept loop)
+        let mut c1 = TcpStream::connect(server.local_addr).unwrap();
+        writeln!(c1, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0]]}}"#).unwrap();
+        let mut r1 = BufReader::new(c1.try_clone().unwrap());
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }));
+
+        // second client is rejected with the typed error
+        let c2 = TcpStream::connect(server.local_addr).unwrap();
+        let mut r2 = BufReader::new(c2);
+        line.clear();
+        r2.read_line(&mut line).unwrap();
+        assert!(Response::parse(&line).unwrap().is_saturated(), "{line}");
+
+        // slot frees once c1 hangs up (poll: the handler thread needs
+        // a moment to observe the close and drop its permit)
+        drop(r1);
+        drop(c1);
+        let mut ok = false;
+        for _ in 0..100 {
+            let mut c3 = TcpStream::connect(server.local_addr).unwrap();
+            writeln!(c3, r#"{{"id": 3, "points": [[1.0, 1.0, 1.0]]}}"#).unwrap();
+            let mut r3 = BufReader::new(c3);
+            line.clear();
+            r3.read_line(&mut line).unwrap();
+            if matches!(Response::parse(&line).unwrap(), Response::Ok { id: 3, .. }) {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(ok, "slot never freed after client disconnect");
         server.shutdown();
     }
 

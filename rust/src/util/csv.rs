@@ -69,6 +69,27 @@ pub fn read_table(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
     Ok((header, rows))
 }
 
+/// Read a mixed-type CSV as strings (header returned separately) —
+/// the reader dual of [`write_rows`], for tables with non-numeric
+/// columns (e.g. engine names in `tables/pruned.csv`).
+pub fn read_rows(path: &Path) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => split_line(&h?),
+        None => return Ok((vec![], vec![])),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(split_line(&line));
+    }
+    Ok((header, rows))
+}
+
 fn split_line(line: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut cur = String::new();
@@ -116,6 +137,21 @@ mod tests {
         write_table(&p, &["x"], &[vec![100000.0]]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.contains("100000\n"), "{text}");
+    }
+
+    #[test]
+    fn read_rows_preserves_strings() {
+        let p = tmp("mixed.csv");
+        write_rows(
+            &p,
+            &["engine", "secs"],
+            &[vec!["elkan".into(), "0.5".into()], vec!["hamerly".into(), "0.25".into()]],
+        )
+        .unwrap();
+        let (h, rows) = read_rows(&p).unwrap();
+        assert_eq!(h, vec!["engine", "secs"]);
+        assert_eq!(rows[0], vec!["elkan", "0.5"]);
+        assert_eq!(rows[1][1], "0.25");
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Integration: the parallel pruned engines' determinism contract
+//! (DESIGN.md §9) on the paper's GMM datasets.
+//!
+//! Pins the PR's acceptance criteria: `elkan`/`hamerly` with
+//! `--threads p` are **bit-identical** to their single-worker runs for
+//! p ∈ {1, 2, 4} and both `--sched` modes; both track serial Lloyd's
+//! label trajectory exactly (they are exact accelerations); and the
+//! dense threaded engine's steal mode is bit-identical across worker
+//! counts. Run with `PARAKM_KERNEL=scalar` in CI so a SIMD-tier
+//! divergence cannot hide behind dispatch.
+
+use parakmeans::config::SchedMode;
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::{self, elkan, hamerly, parallel, KmeansConfig};
+use parakmeans::testutil::assert_bit_identical;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const MODES: [SchedMode; 2] = [SchedMode::Static, SchedMode::Steal];
+
+fn paper_cases() -> Vec<(&'static str, parakmeans::data::Dataset, usize)> {
+    vec![
+        // ragged sizes: the tail chunk is shorter than CHUNK_ROWS and
+        // the tail block shorter than POINTS_BLOCK
+        ("2d", MixtureSpec::paper_2d(8).generate(20_003, 42), 8),
+        ("3d", MixtureSpec::paper_3d(4).generate(15_001, 7), 4),
+    ]
+}
+
+#[test]
+fn elkan_threads_bit_identical_and_tracks_lloyd() {
+    for (name, ds, k) in paper_cases() {
+        let cfg = KmeansConfig::new(k).with_seed(5);
+        let mu0 = kmeans::init::initialize(&ds, k, cfg.init, cfg.seed);
+        let lloyd = kmeans::serial::run_from(&ds, &cfg, &mu0);
+        let one = elkan::run_from_threads(&ds, &cfg, 1, SchedMode::Steal, &mu0);
+
+        // exact acceleration: the label trajectory is serial Lloyd's
+        assert_eq!(one.assign, lloyd.assign, "{name}: elkan vs lloyd labels");
+        assert_eq!(one.iterations, lloyd.iterations, "{name}: iteration trajectory");
+        assert!(
+            (one.sse - lloyd.sse).abs() / lloyd.sse.max(1.0) < 1e-6,
+            "{name}: sse {} vs {}",
+            one.sse,
+            lloyd.sse
+        );
+        for (a, b) in one.centroids.iter().zip(&lloyd.centroids) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{name}: centroid {a} vs {b}");
+        }
+
+        for p in THREADS {
+            for mode in MODES {
+                let r = elkan::run_from_threads(&ds, &cfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("{name}: elkan p={p} {mode}"));
+                assert_eq!(r.pruning, one.pruning, "{name}: elkan p={p} {mode} counters");
+            }
+        }
+    }
+}
+
+#[test]
+fn hamerly_threads_bit_identical_and_tracks_lloyd() {
+    for (name, ds, k) in paper_cases() {
+        let cfg = KmeansConfig::new(k).with_seed(5);
+        let mu0 = kmeans::init::initialize(&ds, k, cfg.init, cfg.seed);
+        let lloyd = kmeans::serial::run_from(&ds, &cfg, &mu0);
+        let one = hamerly::run_from_threads(&ds, &cfg, 1, SchedMode::Steal, &mu0);
+
+        assert_eq!(one.assign, lloyd.assign, "{name}: hamerly vs lloyd labels");
+        assert_eq!(one.iterations, lloyd.iterations, "{name}: iteration trajectory");
+        for (a, b) in one.centroids.iter().zip(&lloyd.centroids) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{name}: centroid {a} vs {b}");
+        }
+
+        for p in THREADS {
+            for mode in MODES {
+                let r = hamerly::run_from_threads(&ds, &cfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("{name}: hamerly p={p} {mode}"));
+                assert_eq!(r.pruning, one.pruning, "{name}: hamerly p={p} {mode} counters");
+            }
+        }
+    }
+}
+
+#[test]
+fn elkan_and_hamerly_agree_exactly() {
+    for (name, ds, k) in paper_cases() {
+        let cfg = KmeansConfig::new(k).with_seed(5);
+        let mu0 = kmeans::init::initialize(&ds, k, cfg.init, cfg.seed);
+        let elk = elkan::run_from_threads(&ds, &cfg, 4, SchedMode::Steal, &mu0);
+        let ham = hamerly::run_from_threads(&ds, &cfg, 4, SchedMode::Steal, &mu0);
+        assert_eq!(elk.assign, ham.assign, "{name}: elkan vs hamerly labels");
+        assert_eq!(elk.iterations, ham.iterations, "{name}");
+        // Elkan's k bounds prune harder than Hamerly's one
+        let (es, hs) = (elk.pruning.unwrap(), ham.pruning.unwrap());
+        assert!(es.skip_rate() > 0.0, "{name}: elkan skipped nothing");
+        assert!(hs.skip_rate() > 0.0, "{name}: hamerly skipped nothing");
+    }
+}
+
+#[test]
+fn dense_threads_steal_mode_bit_identical_across_p() {
+    let ds = MixtureSpec::paper_3d(4).generate(15_001, 7);
+    let cfg = KmeansConfig::new(4).with_seed(5);
+    let mu0 = kmeans::init::initialize(&ds, 4, cfg.init, cfg.seed);
+    let one = parallel::run_from_sched(
+        &ds,
+        &cfg,
+        1,
+        parallel::MergeMode::Leader,
+        SchedMode::Steal,
+        &mu0,
+    );
+    let stat = parallel::run_from(&ds, &cfg, 4, parallel::MergeMode::Leader, &mu0);
+    assert_eq!(one.assign, stat.assign, "steal vs static assignments");
+    assert_eq!(one.iterations, stat.iterations);
+    for p in [2usize, 4, 8] {
+        let r = parallel::run_from_sched(
+            &ds,
+            &cfg,
+            p,
+            parallel::MergeMode::Leader,
+            SchedMode::Steal,
+            &mu0,
+        );
+        assert_bit_identical(&r, &one, &format!("threads steal p={p}"));
+    }
+}
+
+#[test]
+fn pruned_engines_report_skip_rate_through_run() {
+    // the KmeansResult surface (what the CLI prints and the bench CSV
+    // records): counters present, aligned with history, rates sane
+    let ds = MixtureSpec::paper_2d(8).generate(10_000, 3);
+    let cfg = KmeansConfig::new(8).with_seed(9);
+    for (name, r) in [
+        ("elkan", elkan::run_threads(&ds, &cfg, 2, SchedMode::Steal)),
+        ("hamerly", hamerly::run_threads(&ds, &cfg, 2, SchedMode::Steal)),
+    ] {
+        let prune = r.pruning.as_ref().unwrap_or_else(|| panic!("{name}: no counters"));
+        assert_eq!(prune.seed_computed, 10_000 * 8, "{name}");
+        assert_eq!(prune.per_iter.len(), r.iterations, "{name}");
+        let rate = prune.skip_rate();
+        assert!((0.0..=1.0).contains(&rate), "{name}: rate {rate}");
+        assert!(rate > 0.3, "{name}: paper GMMs should prune well, got {rate}");
+    }
+    // dense engines report none
+    let dense = kmeans::serial::run(&ds, &cfg);
+    assert!(dense.pruning.is_none());
+}
