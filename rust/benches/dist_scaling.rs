@@ -1,0 +1,106 @@
+//! Distributed loopback sweep: (dim × K × workers) over the paper's
+//! 2D/3D GMM families — the scale axis of DESIGN.md §10.
+//!
+//!     cargo bench --bench dist_scaling
+//!
+//! Knobs (also used by CI bench-smoke):
+//!   PARAKM_BENCH_N        dataset rows (default 200000)
+//!   PARAKM_BENCH_WARMUP / PARAKM_BENCH_REPEATS / PARAKM_BENCH_CAP_SECS
+//!
+//! Per cell: wall-clock median (loopback worker spawn + full run —
+//! process-boundary overhead is the thing being measured), speedup ψ vs
+//! S = 1, efficiency ε = ψ/S, and per-iteration wire bytes from the
+//! leader's NetStats. Every cell is cross-checked bit-identical against
+//! `threads(p = S)` before timing (the DESIGN.md §10 contract) — the
+//! verdict lands in the CSV's `identical` column so `eval::report`
+//! refuses to bless a sweep whose check was skipped. Writes
+//! `results/tables/dist.csv`.
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::data::gmm::workloads;
+use parakmeans::eval;
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::{init, parallel, KmeansConfig};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::util::bench::{report, run_case, BenchOpts};
+use parakmeans::util::csv;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n = opts.n;
+    println!("== dist scaling bench (loopback workers, n={n}) ==");
+
+    let net = DistOpts::default();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+
+    for (dim, ks) in [(2usize, vec![workloads::K_2D]), (3usize, vec![workloads::K_3D, 8])] {
+        let ds = eval::paper_dataset(dim, n);
+        for k in ks {
+            let cfg = KmeansConfig::new(k).with_seed(42);
+            let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+            let mut t1 = f64::NAN;
+
+            for s in [1usize, 2, 4] {
+                // identity cross-check once per cell, before timing:
+                // dist(S) must equal threads(p=S) bit-for-bit
+                let cluster = LoopbackCluster::spawn_dataset(&ds, s, 65_536)
+                    .expect("spawn loopback cluster");
+                let run = dist::run_from(&cluster.addrs, &cfg, &net, &mu0)
+                    .expect("distributed run");
+                cluster.join().expect("workers exit cleanly");
+                let threads = parallel::run_from(&ds, &cfg, s, parallel::MergeMode::Leader, &mu0);
+                assert_bit_identical(&run.result, &threads, &format!("{dim}D K={k} S={s}"));
+                let bytes_per_iter = run.net.bytes_per_iter();
+                let iters = run.result.iterations;
+                let sse = run.result.sse;
+
+                // timed runs: spawn + run, the full process-boundary
+                // cost a real deployment pays per job
+                let label = format!("{dim}D K={k} S={s}");
+                let sample = run_case(&label, &opts, || {
+                    let cluster = LoopbackCluster::spawn_dataset(&ds, s, 65_536)
+                        .expect("spawn loopback cluster");
+                    let run = dist::run_from(&cluster.addrs, &cfg, &net, &mu0)
+                        .expect("distributed run");
+                    cluster.join().expect("workers exit cleanly");
+                    run
+                });
+                report(&sample);
+                let secs = sample.median();
+                if s == 1 {
+                    t1 = secs;
+                }
+                let speedup = t1 / secs.max(1e-12);
+                println!(
+                    "         -> speedup {speedup:.2}x  efficiency {:.2}  wire {:.1} KiB/iter",
+                    speedup / s as f64,
+                    bytes_per_iter / 1024.0
+                );
+                rows.push(vec![
+                    dim as f64,
+                    k as f64,
+                    s as f64,
+                    secs,
+                    speedup,
+                    speedup / s as f64,
+                    bytes_per_iter,
+                    iters as f64,
+                    sse,
+                    1.0, // identity check passed (assert above)
+                ]);
+            }
+        }
+    }
+
+    let out = eval::results_dir().join("tables/dist.csv");
+    csv::write_table(
+        &out,
+        &[
+            "dim", "k", "workers", "secs", "speedup", "efficiency", "bytes_per_iter", "iters",
+            "sse", "identical",
+        ],
+        &rows,
+    )
+    .expect("write dist.csv");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,128 @@
+//! In-process loopback cluster: spawn shard workers as threads on
+//! `127.0.0.1:0` so the full wire protocol — sockets, frames, timeouts
+//! — is exercised inside `cargo test` and `cargo bench` with no
+//! multi-machine infrastructure (DESIGN.md §10).
+//!
+//! Each worker thread serves exactly one leader session and exits; the
+//! harness is therefore single-shot — spawn, run the leader, [`join`]
+//! to propagate worker-side errors. Shards are the contiguous
+//! [`shard_ranges`] decomposition, the same one `oocore` and the static
+//! threaded engine use, so a loopback `dist(S)` run is comparable
+//! bit-for-bit with `threads(p = S)` and `oocore(shards = S)`.
+//!
+//! [`join`]: LoopbackCluster::join
+
+use std::net::TcpListener;
+
+use crate::cluster::worker::ShardWorker;
+use crate::data::dataset::shard_ranges;
+use crate::data::source::OwnedMemorySource;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// Handle to a set of loopback worker threads.
+pub struct LoopbackCluster {
+    /// Worker addresses in ascending shard order — pass to
+    /// [`crate::kmeans::dist::run`] as-is.
+    pub addrs: Vec<String>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl LoopbackCluster {
+    /// Bind each worker to an ephemeral localhost port and serve one
+    /// leader session on its own thread. `workers[i]` is shard `i`.
+    pub fn spawn(workers: Vec<ShardWorker>) -> Result<LoopbackCluster> {
+        if workers.is_empty() {
+            return Err(Error::Config("loopback: need at least one worker".into()));
+        }
+        // bind every listener BEFORE spawning any thread: addresses are
+        // known up front, the leader cannot race a listener into
+        // existence, and a bind failure (port exhaustion) errors out
+        // cleanly instead of leaking already-spawned accept() threads
+        let mut addrs = Vec::with_capacity(workers.len());
+        let mut listeners = Vec::with_capacity(workers.len());
+        for _ in &workers {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            listeners.push(listener);
+        }
+        let handles = workers
+            .into_iter()
+            .zip(listeners)
+            .map(|(w, listener)| std::thread::spawn(move || w.serve_listener(&listener, true)))
+            .collect();
+        Ok(LoopbackCluster { addrs, handles })
+    }
+
+    /// Spawn `shards` workers over contiguous [`shard_ranges`] slices
+    /// of `ds` (each worker owns a copy of its rows — process-boundary
+    /// semantics, even in-process). `chunk_rows` never affects results.
+    pub fn spawn_dataset(
+        ds: &Dataset,
+        shards: usize,
+        chunk_rows: usize,
+    ) -> Result<LoopbackCluster> {
+        if shards == 0 {
+            return Err(Error::Config("loopback: shards must be >= 1".into()));
+        }
+        let mut workers = Vec::with_capacity(shards);
+        for (lo, hi) in shard_ranges(ds.len(), shards) {
+            let shard = Dataset::from_vec(ds.rows(lo, hi).to_vec(), ds.dim())?;
+            workers.push(ShardWorker::new(Box::new(OwnedMemorySource::new(shard)), chunk_rows)?);
+        }
+        LoopbackCluster::spawn(workers)
+    }
+
+    /// Wait for every worker thread, propagating the first worker-side
+    /// error (a panic becomes [`Error::Worker`]). Call after the leader
+    /// finishes; a leader that errored out closed its connections, so
+    /// workers observe end-of-session and exit rather than hang.
+    pub fn join(self) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        for (i, h) in self.handles.into_iter().enumerate() {
+            let outcome = match h.join() {
+                Ok(outcome) => outcome,
+                Err(_) => Err(Error::Worker(format!("loopback worker {i} panicked"))),
+            };
+            if first_err.is_none() {
+                if let Err(e) = outcome {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureSpec;
+
+    #[test]
+    fn spawn_validates() {
+        assert!(LoopbackCluster::spawn(Vec::new()).is_err());
+        let ds = MixtureSpec::paper_2d(4).generate(10, 1);
+        assert!(LoopbackCluster::spawn_dataset(&ds, 0, 8).is_err());
+    }
+
+    #[test]
+    fn addrs_are_distinct_localhost_ports() {
+        let ds = MixtureSpec::paper_2d(4).generate(30, 1);
+        let c = LoopbackCluster::spawn_dataset(&ds, 3, 8).unwrap();
+        assert_eq!(c.addrs.len(), 3);
+        let mut uniq = c.addrs.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3);
+        assert!(c.addrs.iter().all(|a| a.starts_with("127.0.0.1:")));
+        // connect-and-close each so the single-session workers exit
+        for a in &c.addrs {
+            drop(std::net::TcpStream::connect(a).unwrap());
+        }
+        c.join().unwrap();
+    }
+}

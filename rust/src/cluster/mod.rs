@@ -1,0 +1,36 @@
+//! Distributed K-Means over TCP shard workers (DESIGN.md §10).
+//!
+//! This is the paper's decomposition taken across the process/machine
+//! boundary: the E-step shards cleanly once centroid updates are
+//! race-free, so each worker process owns one data shard (any
+//! [`crate::data::source::DataSource`]) and the leader only ever sees
+//! `K × d`-sized statistics — the PKMeans-style structure of
+//! arXiv:1608.06347, where nodes compute partial sums and a coordinator
+//! merges them.
+//!
+//! Three pieces:
+//!
+//! - [`wire`] — length-prefixed binary frames (`Hello`/`ShardSpec`,
+//!   `Assign` → `Partials`, `Gather` → `Rows`, `FetchAssign` →
+//!   `AssignShard`, `Shutdown`, `ErrMsg`); floats travel as IEEE bits,
+//!   so nothing is lost in transit.
+//! - [`worker`] — the `parakm worker` server: owns a shard, replays the
+//!   out-of-core shard fold per `Assign`, answers with partials.
+//! - [`loopback`] — in-process harness spawning worker threads on
+//!   `127.0.0.1:0`, so `cargo test` exercises the full protocol.
+//!
+//! The leader engine lives in [`crate::kmeans::dist`] with the other
+//! engines. Determinism: workers fold their rows in ascending order
+//! through the chunked-accumulation contract and the leader merges
+//! per-shard partials with [`crate::kmeans::step::merge_ordered`] in
+//! ascending shard index — never in arrival order — so `dist(S)` is
+//! bit-identical to `oocore(shards = S)` and `threads(p = S)` for any
+//! worker count, any reply timing, and any mix of kernel tiers across
+//! the cluster.
+
+pub mod loopback;
+pub mod wire;
+pub mod worker;
+
+pub use loopback::LoopbackCluster;
+pub use worker::ShardWorker;

@@ -1,0 +1,526 @@
+//! Length-prefixed binary frames for the distributed Lloyd protocol
+//! (DESIGN.md §10).
+//!
+//! One frame = `len: u32 LE` (type byte + payload), `type: u8`,
+//! payload. All multi-byte values are little-endian; f32/f64 travel as
+//! their IEEE-754 bit patterns, so centroids and partial statistics
+//! cross the wire losslessly — the foundation of the `dist ≡ threads ≡
+//! oocore` bit-identity contract.
+//!
+//! The conversation (leader drives, worker answers):
+//!
+//! ```text
+//! leader                          worker
+//!   Hello{version}        ──►
+//!                         ◄──    ShardSpec{rows, dim}
+//!   Gather{indices}       ──►                        (init only)
+//!                         ◄──    Rows{dim, rows}
+//!   ┌ per iteration ───────────────────────────────┐
+//!   │ Assign{k, dim, centroids}  ──►               │
+//!   │                    ◄──  Partials{counts,     │
+//!   │                          sums, sse}          │
+//!   └──────────────────────────────────────────────┘
+//!   FetchAssign           ──►
+//!                         ◄──    AssignShard{assign}
+//!   Shutdown              ──►                        (session ends)
+//! ```
+//!
+//! A worker that cannot satisfy a request answers `ErrMsg{..}` instead;
+//! the leader converts it to [`ClusterError::Protocol`] and fails fast.
+//! Readers enforce [`MAX_FRAME_BYTES`] and reject unknown types or
+//! short payloads with [`ClusterError::Frame`] — corrupt bytes are a
+//! typed error, never a hang or an attacker-sized allocation.
+
+use std::io::{Read, Write};
+
+use crate::error::{ClusterError, Error, Result};
+
+/// Protocol version carried in [`Frame::Hello`]; bumped on any frame
+/// layout change so mismatched binaries fail the handshake typed.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on `len` a reader will accept (1 GiB): a corrupt or
+/// hostile length prefix becomes [`ClusterError::Frame`] instead of a
+/// giant allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+const T_HELLO: u8 = 1;
+const T_SHARD_SPEC: u8 = 2;
+const T_ASSIGN: u8 = 3;
+const T_PARTIALS: u8 = 4;
+const T_GATHER: u8 = 5;
+const T_ROWS: u8 = 6;
+const T_FETCH_ASSIGN: u8 = 7;
+const T_ASSIGN_SHARD: u8 = 8;
+const T_SHUTDOWN: u8 = 9;
+const T_ERR_MSG: u8 = 10;
+
+/// One protocol message (module docs: the conversation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Leader → worker: opens a session.
+    Hello { version: u16 },
+    /// Worker → leader: shard size and dimensionality.
+    ShardSpec { rows: u64, dim: u32 },
+    /// Leader → worker: compute one E-step against these centroids
+    /// (`k × dim` row-major f32).
+    Assign { k: u32, dim: u32, centroids: Vec<f32> },
+    /// Worker → leader: the shard's partial statistics for the last
+    /// `Assign` (`k` counts, `k × dim` f64 sums, shard SSE).
+    Partials { k: u32, dim: u32, counts: Vec<u64>, sums: Vec<f64>, sse: f64 },
+    /// Leader → worker: fetch these shard-local rows (init gather).
+    Gather { indices: Vec<u64> },
+    /// Worker → leader: the gathered rows, request order.
+    Rows { dim: u32, rows: Vec<f32> },
+    /// Leader → worker: send the shard's current assignment vector.
+    FetchAssign,
+    /// Worker → leader: shard-local assignments in row order.
+    AssignShard { assign: Vec<i32> },
+    /// Leader → worker: end the session.
+    Shutdown,
+    /// Worker → leader: a request could not be satisfied.
+    ErrMsg { message: String },
+}
+
+fn frame_err(msg: impl Into<String>) -> Error {
+    Error::Cluster(ClusterError::Frame(msg.into()))
+}
+
+fn conn_err(msg: impl Into<String>) -> Error {
+    Error::Cluster(ClusterError::Connection(msg.into()))
+}
+
+/// Map an IO failure during a frame read/write to the cluster taxonomy:
+/// timeouts and resets are [`ClusterError::Connection`]. `what` names
+/// the operation and direction ("sending Assign", "reading frame
+/// body") so a stalled write is not misreported as a read stall.
+fn io_err(e: std::io::Error, what: &str) -> Error {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => conn_err(format!("{what}: timed out")),
+        _ => conn_err(format!("{what}: {e}")),
+    }
+}
+
+// ---- payload encoding helpers ------------------------------------------
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounded-payload cursor: every `take_*` is a typed frame error when
+/// the payload runs short, so a truncated frame can never panic.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(frame_err(format!(
+                "payload too short: wanted {n} more bytes at offset {}, have {}",
+                self.i,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| frame_err("f32 count overflows"))?)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let s = self.take(n.checked_mul(8).ok_or_else(|| frame_err("f64 count overflows"))?)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let s = self.take(n.checked_mul(8).ok_or_else(|| frame_err("u64 count overflows"))?)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| frame_err("i32 count overflows"))?)?;
+        Ok(s.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(frame_err(format!(
+                "{} trailing payload bytes after a complete frame",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => T_HELLO,
+            Frame::ShardSpec { .. } => T_SHARD_SPEC,
+            Frame::Assign { .. } => T_ASSIGN,
+            Frame::Partials { .. } => T_PARTIALS,
+            Frame::Gather { .. } => T_GATHER,
+            Frame::Rows { .. } => T_ROWS,
+            Frame::FetchAssign => T_FETCH_ASSIGN,
+            Frame::AssignShard { .. } => T_ASSIGN_SHARD,
+            Frame::Shutdown => T_SHUTDOWN,
+            Frame::ErrMsg { .. } => T_ERR_MSG,
+        }
+    }
+
+    /// Human name for error messages ("expected Partials, got X").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::ShardSpec { .. } => "ShardSpec",
+            Frame::Assign { .. } => "Assign",
+            Frame::Partials { .. } => "Partials",
+            Frame::Gather { .. } => "Gather",
+            Frame::Rows { .. } => "Rows",
+            Frame::FetchAssign => "FetchAssign",
+            Frame::AssignShard { .. } => "AssignShard",
+            Frame::Shutdown => "Shutdown",
+            Frame::ErrMsg { .. } => "ErrMsg",
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Frame::Hello { version } => push_u16(&mut b, *version),
+            Frame::ShardSpec { rows, dim } => {
+                push_u64(&mut b, *rows);
+                push_u32(&mut b, *dim);
+            }
+            Frame::Assign { k, dim, centroids } => {
+                push_u32(&mut b, *k);
+                push_u32(&mut b, *dim);
+                for v in centroids {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Partials { k, dim, counts, sums, sse } => {
+                push_u32(&mut b, *k);
+                push_u32(&mut b, *dim);
+                for c in counts {
+                    push_u64(&mut b, *c);
+                }
+                for s in sums {
+                    push_u64(&mut b, s.to_bits());
+                }
+                push_u64(&mut b, sse.to_bits());
+            }
+            Frame::Gather { indices } => {
+                push_u32(&mut b, indices.len() as u32);
+                for i in indices {
+                    push_u64(&mut b, *i);
+                }
+            }
+            Frame::Rows { dim, rows } => {
+                push_u32(&mut b, *dim);
+                push_u32(&mut b, (rows.len() / (*dim).max(1) as usize) as u32);
+                for v in rows {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::FetchAssign | Frame::Shutdown => {}
+            Frame::AssignShard { assign } => {
+                push_u64(&mut b, assign.len() as u64);
+                for a in assign {
+                    b.extend_from_slice(&a.to_le_bytes());
+                }
+            }
+            Frame::ErrMsg { message } => b.extend_from_slice(message.as_bytes()),
+        }
+        b
+    }
+
+    fn parse(ty: u8, payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor::new(payload);
+        let f = match ty {
+            T_HELLO => Frame::Hello { version: c.u16()? },
+            T_SHARD_SPEC => Frame::ShardSpec { rows: c.u64()?, dim: c.u32()? },
+            T_ASSIGN => {
+                let k = c.u32()?;
+                let dim = c.u32()?;
+                let want = (k as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| frame_err("Assign: k × dim overflows"))?;
+                Frame::Assign { k, dim, centroids: c.f32s(want)? }
+            }
+            T_PARTIALS => {
+                let k = c.u32()?;
+                let dim = c.u32()?;
+                let kd = (k as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| frame_err("Partials: k × dim overflows"))?;
+                let counts = c.u64s(k as usize)?;
+                let sums = c.f64s(kd)?;
+                let sse = c.f64()?;
+                Frame::Partials { k, dim, counts, sums, sse }
+            }
+            T_GATHER => {
+                let m = c.u32()? as usize;
+                Frame::Gather { indices: c.u64s(m)? }
+            }
+            T_ROWS => {
+                let dim = c.u32()?;
+                let m = c.u32()? as usize;
+                let want = m
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| frame_err("Rows: m × dim overflows"))?;
+                Frame::Rows { dim, rows: c.f32s(want)? }
+            }
+            T_FETCH_ASSIGN => Frame::FetchAssign,
+            T_ASSIGN_SHARD => {
+                let n = c.u64()?;
+                let n = usize::try_from(n)
+                    .map_err(|_| frame_err(format!("AssignShard: implausible n = {n}")))?;
+                Frame::AssignShard { assign: c.i32s(n)? }
+            }
+            T_SHUTDOWN => Frame::Shutdown,
+            T_ERR_MSG => Frame::ErrMsg {
+                message: String::from_utf8_lossy(c.take(payload.len())?).into_owned(),
+            },
+            other => return Err(frame_err(format!("unknown frame type {other}"))),
+        };
+        c.finish()?;
+        Ok(f)
+    }
+}
+
+/// Write one frame, returning the wire bytes it occupied (length prefix
+/// included). Assembles the frame in one buffer so the OS sees a single
+/// write — no interleaving hazards, one syscall for small frames.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
+    let payload = frame.payload();
+    let len = 1u64 + payload.len() as u64;
+    if len > MAX_FRAME_BYTES as u64 {
+        return Err(frame_err(format!("frame of {len} bytes exceeds MAX_FRAME_BYTES")));
+    }
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    push_u32(&mut buf, len as u32);
+    buf.push(frame.type_byte());
+    buf.extend_from_slice(&payload);
+    let what = format!("sending {}", frame.name());
+    w.write_all(&buf).map_err(|e| io_err(e, &what))?;
+    w.flush().map_err(|e| io_err(e, &what))?;
+    Ok(buf.len() as u64)
+}
+
+/// Read one frame, returning it with the wire bytes it occupied.
+/// A peer that closes the stream *between* frames yields `Ok(None)`
+/// (clean end of session); EOF inside a frame, a bad length prefix, an
+/// unknown type or a short payload are typed [`Error::Cluster`] errors.
+pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..]).map_err(|e| io_err(e, "reading frame header"))?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean close at a frame boundary
+            }
+            return Err(frame_err("eof inside a frame length prefix"));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(frame_err(format!("implausible frame length {len}")));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            frame_err(format!("truncated frame: length prefix promises {len} bytes"))
+        } else {
+            io_err(e, "reading frame body")
+        }
+    })?;
+    let frame = Frame::parse(body[0], &body[1..])?;
+    Ok(Some((frame, 4 + len as u64)))
+}
+
+/// [`read_frame_opt`] for callers mid-conversation, where a clean close
+/// is itself a failure (the peer vanished while a reply was owed).
+pub fn read_frame(r: &mut impl Read, expect: &str) -> Result<(Frame, u64)> {
+    read_frame_opt(r)?
+        .ok_or_else(|| conn_err(format!("peer closed the connection while {expect}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::ClusterError;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        let wrote = write_frame(&mut buf, &f).unwrap();
+        assert_eq!(wrote as usize, buf.len());
+        let mut r = &buf[..];
+        let (back, read) = read_frame(&mut r, "roundtrip").unwrap();
+        assert_eq!(read, wrote);
+        assert_eq!(back, f);
+        assert!(r.is_empty(), "reader consumed exactly one frame");
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        roundtrip(Frame::Hello { version: WIRE_VERSION });
+        roundtrip(Frame::ShardSpec { rows: 12345, dim: 3 });
+        roundtrip(Frame::Assign { k: 2, dim: 3, centroids: vec![1.5, -2.0, 0.0, 3.25, 4.0, 5.0] });
+        roundtrip(Frame::Partials {
+            k: 2,
+            dim: 2,
+            counts: vec![7, 0],
+            sums: vec![1.0, -0.5, 0.0, 1e300],
+            sse: 42.0625,
+        });
+        roundtrip(Frame::Gather { indices: vec![0, 99, 3] });
+        roundtrip(Frame::Rows { dim: 2, rows: vec![1.0, 2.0, 3.0, 4.0] });
+        roundtrip(Frame::FetchAssign);
+        roundtrip(Frame::AssignShard { assign: vec![0, -1, 3, i32::MAX] });
+        roundtrip(Frame::Shutdown);
+        roundtrip(Frame::ErrMsg { message: "shard is 2D, leader sent 3D".into() });
+    }
+
+    #[test]
+    fn float_bits_survive_the_wire() {
+        // the bit-identity contract depends on lossless float transport
+        let weird = vec![f32::MIN_POSITIVE, -0.0, f32::NAN, 1.0000001];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Assign { k: 1, dim: 4, centroids: weird.clone() }).unwrap();
+        let (f, _) = read_frame(&mut &buf[..], "bits").unwrap();
+        match f {
+            Frame::Assign { centroids, .. } => {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&centroids), bits(&weird));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_close_is_none_mid_frame_is_error() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame_opt(&mut empty).unwrap().is_none());
+        // a reply owed: clean close becomes a Connection error
+        let mut empty2: &[u8] = &[];
+        let err = read_frame(&mut empty2, "waiting for Partials").unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+
+        // partial length prefix
+        let mut short: &[u8] = &[1, 0];
+        let err = read_frame_opt(&mut short).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ShardSpec { rows: 10, dim: 2 }).unwrap();
+        let cut = &buf[..buf.len() - 3];
+        let err = read_frame_opt(&mut &cut[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_type_and_length_are_typed() {
+        // unknown type byte
+        let buf = [1u8, 0, 0, 0, 0xEE];
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("unknown frame type"), "{err}");
+
+        // zero length
+        let buf = [0u8, 0, 0, 0];
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+
+        // absurd length — must error before allocating
+        let mut buf = Vec::new();
+        push_u32(&mut buf, MAX_FRAME_BYTES + 1);
+        buf.push(T_SHUTDOWN);
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn short_and_overlong_payloads_are_typed() {
+        // Partials declaring k=2 but carrying bytes for k=1
+        let mut payload = Vec::new();
+        push_u32(&mut payload, 2); // k
+        push_u32(&mut payload, 1); // dim
+        push_u64(&mut payload, 5); // one count (of two)
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 1 + payload.len() as u32);
+        buf.push(T_PARTIALS);
+        buf.extend_from_slice(&payload);
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+
+        // Shutdown with trailing garbage
+        let buf = [3u8, 0, 0, 0, T_SHUTDOWN, 0xAB, 0xCD];
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn two_frames_stream_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello { version: 1 }).unwrap();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut r = &buf[..];
+        let (a, _) = read_frame(&mut r, "first").unwrap();
+        let (b, _) = read_frame(&mut r, "second").unwrap();
+        assert_eq!(a, Frame::Hello { version: 1 });
+        assert_eq!(b, Frame::Shutdown);
+        assert!(read_frame_opt(&mut r).unwrap().is_none());
+    }
+}

@@ -1,0 +1,387 @@
+//! The shard worker: one process (or loopback thread) that owns one
+//! data shard and answers a leader's frames (DESIGN.md §10).
+//!
+//! A worker wraps any [`DataSource`] — resident memory, a streamed
+//! `.pkd` file, or a seeded GMM generator — optionally restricted to a
+//! row range (`parakm worker --shard i/S` points every worker at the
+//! same file and gives each its [`shard_ranges`] slice). Per `Assign`
+//! frame it replays the exact out-of-core shard fold
+//! ([`crate::kmeans::streaming`]'s `stream_shard`): chunks in ascending
+//! row order through the continuing f64 accumulator. The worker's
+//! partials are therefore bit-identical to the thread the `oocore`
+//! engine would have run over the same rows — chunk size, kernel tier
+//! and even a mixed-tier cluster (every tier is bit-identical by the
+//! kernel contract) cannot perturb them.
+//!
+//! A session serves exactly one leader: `Hello` through `Shutdown` (or
+//! the leader closing the connection — workers treat a close at a frame
+//! boundary as the end of the session, so a dying leader never wedges a
+//! worker). Requests the worker cannot satisfy (dimension mismatch,
+//! out-of-range gather) are answered with `ErrMsg` frames — the leader
+//! fails fast; the worker keeps serving.
+
+use std::net::{TcpListener, TcpStream};
+
+use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+use crate::data::dataset::shard_ranges;
+use crate::data::source::DataSource;
+use crate::error::{ClusterError, Error, Result};
+use crate::kmeans::step::PartialStats;
+use crate::kmeans::streaming::stream_shard;
+use crate::linalg::kernel;
+
+/// A leader-facing server over one shard of rows.
+pub struct ShardWorker {
+    source: Box<dyn DataSource + Send + Sync>,
+    /// Global row range this worker owns within `source`.
+    lo: usize,
+    hi: usize,
+    /// Rows per streamed chunk (never affects results — the
+    /// chunked-accumulation contract).
+    chunk_rows: usize,
+}
+
+impl ShardWorker {
+    /// A worker owning the whole source.
+    pub fn new(
+        source: Box<dyn DataSource + Send + Sync>,
+        chunk_rows: usize,
+    ) -> Result<ShardWorker> {
+        let hi = source.len();
+        ShardWorker::with_range(source, 0, hi, chunk_rows)
+    }
+
+    /// A worker owning rows `[lo, hi)` of `source` — how S workers
+    /// share one `.pkd` file (`--shard i/S`).
+    pub fn with_range(
+        source: Box<dyn DataSource + Send + Sync>,
+        lo: usize,
+        hi: usize,
+        chunk_rows: usize,
+    ) -> Result<ShardWorker> {
+        if chunk_rows == 0 {
+            return Err(Error::Config("worker: chunk_rows must be >= 1".into()));
+        }
+        if lo > hi || hi > source.len() {
+            return Err(Error::Config(format!(
+                "worker: shard range [{lo}, {hi}) out of bounds for n = {}",
+                source.len()
+            )));
+        }
+        if source.dim() == 0 {
+            return Err(Error::Shape("worker: source dim must be >= 1".into()));
+        }
+        // resolve the hot-path tier up front so a bad PARAKM_KERNEL
+        // aborts at worker start, not mid-session
+        let _ = kernel::active_tier();
+        Ok(ShardWorker { source, lo, hi, chunk_rows })
+    }
+
+    /// Rows this worker owns.
+    pub fn rows(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Shard slice of `source` a `--shard idx/total` worker owns.
+    pub fn shard_slice(n: usize, idx: usize, total: usize) -> Result<(usize, usize)> {
+        if total == 0 || idx >= total {
+            return Err(Error::Config(format!(
+                "worker: shard {idx}/{total} is not a valid slice (want idx < total >= 1)"
+            )));
+        }
+        Ok(shard_ranges(n, total)[idx])
+    }
+
+    /// One-line description for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} rows [{}, {}) of {} ({}D, chunk {})",
+            self.rows(),
+            self.lo,
+            self.hi,
+            self.source.describe(),
+            self.source.dim(),
+            self.chunk_rows
+        )
+    }
+
+    /// Accept-and-serve loop over `listener`: one leader session at a
+    /// time; `once` stops after the first session (loopback harness,
+    /// CI smoke). Per-session errors are logged and the loop continues
+    /// — a misbehaving leader (or a transient accept failure such as
+    /// ECONNABORTED from a connection reset mid-accept) must not kill
+    /// a long-running worker.
+    pub fn serve_listener(&self, listener: &TcpListener, once: bool) -> Result<()> {
+        loop {
+            let (stream, peer) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if once => return Err(e.into()),
+                Err(e) => {
+                    eprintln!("worker: accept failed: {e}");
+                    continue;
+                }
+            };
+            let outcome = self.serve_conn(stream);
+            match &outcome {
+                Ok(()) => eprintln!("worker: session with {peer} ended"),
+                Err(e) => eprintln!("worker: session with {peer} failed: {e}"),
+            }
+            if once {
+                return outcome;
+            }
+        }
+    }
+
+    /// Serve one leader session on an accepted connection until
+    /// `Shutdown` or a clean close. Frame/IO corruption from the leader
+    /// is a typed error (the session dies, the worker may accept the
+    /// next).
+    pub fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        // small frames dominate the conversation: Nagle + delayed ACK
+        // would add ~40 ms stalls per iteration round trip
+        let _ = stream.set_nodelay(true);
+        let mut stream = stream;
+        let n = self.rows();
+        let d = self.source.dim();
+        let mut assign = vec![-1i32; n];
+        let mut stats: Option<PartialStats> = None;
+
+        loop {
+            let frame = match wire::read_frame_opt(&mut stream)? {
+                Some((f, _)) => f,
+                None => return Ok(()), // leader closed at a frame boundary
+            };
+            match frame {
+                Frame::Hello { version } => {
+                    if version != WIRE_VERSION {
+                        let msg = format!(
+                            "protocol version mismatch: leader {version}, worker {WIRE_VERSION}"
+                        );
+                        wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg.clone() })?;
+                        return Err(Error::Cluster(ClusterError::Protocol(msg)));
+                    }
+                    wire::write_frame(
+                        &mut stream,
+                        &Frame::ShardSpec { rows: n as u64, dim: d as u32 },
+                    )?;
+                }
+                Frame::Assign { k, dim, centroids } => {
+                    if dim as usize != d {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!("shard is {d}D, leader sent {dim}D centroids"),
+                            },
+                        )?;
+                        continue;
+                    }
+                    if k == 0 || centroids.len() != (k as usize) * d {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!(
+                                    "bad Assign shape: k {k}, dim {dim}, {} centroid values",
+                                    centroids.len()
+                                ),
+                            },
+                        )?;
+                        continue;
+                    }
+                    let k = k as usize;
+                    // reuse the stats buffer across iterations; realloc
+                    // only if the leader changes k mid-session
+                    let stats = match &mut stats {
+                        Some(s) if s.k == k && s.dim == d => {
+                            s.reset();
+                            s
+                        }
+                        slot => slot.insert(PartialStats::zeros(k, d)),
+                    };
+                    if let Err(e) = stream_shard(
+                        self.source.as_ref(),
+                        self.lo,
+                        self.hi,
+                        self.chunk_rows,
+                        d,
+                        &centroids,
+                        k,
+                        &mut assign,
+                        stats,
+                    ) {
+                        // tell the leader why before the session dies,
+                        // so its error names the worker-side cause
+                        let msg = format!("shard read failed: {e}");
+                        let _ = wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg });
+                        return Err(e);
+                    }
+                    wire::write_frame(
+                        &mut stream,
+                        &Frame::Partials {
+                            k: k as u32,
+                            dim: d as u32,
+                            counts: stats.counts.clone(),
+                            sums: stats.sums.clone(),
+                            sse: stats.sse,
+                        },
+                    )?;
+                }
+                Frame::Gather { indices } => {
+                    if let Some(&bad) = indices.iter().find(|&&i| i >= n as u64) {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!("gather: row {bad} out of range (shard n = {n})"),
+                            },
+                        )?;
+                        continue;
+                    }
+                    // shard-local → source-global row indices
+                    let global: Vec<usize> =
+                        indices.iter().map(|&i| self.lo + i as usize).collect();
+                    let rows = self.source.gather(&global)?;
+                    wire::write_frame(&mut stream, &Frame::Rows { dim: d as u32, rows })?;
+                }
+                Frame::FetchAssign => {
+                    wire::write_frame(&mut stream, &Frame::AssignShard { assign: assign.clone() })?;
+                }
+                Frame::Shutdown => return Ok(()),
+                other => {
+                    let msg = format!("unexpected {} frame from the leader", other.name());
+                    wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg.clone() })?;
+                    return Err(Error::Cluster(ClusterError::Protocol(msg)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::OwnedMemorySource;
+    use crate::data::MixtureSpec;
+
+    fn worker(n: usize) -> ShardWorker {
+        let ds = MixtureSpec::paper_2d(4).generate(n, 3);
+        ShardWorker::new(Box::new(OwnedMemorySource::new(ds)), 64).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        let ds = MixtureSpec::paper_2d(4).generate(100, 3);
+        let src = || Box::new(OwnedMemorySource::new(ds.clone()));
+        assert!(ShardWorker::new(src(), 0).is_err()); // zero chunk
+        assert!(ShardWorker::with_range(src(), 50, 40, 8).is_err()); // inverted
+        assert!(ShardWorker::with_range(src(), 0, 101, 8).is_err()); // past n
+        let w = ShardWorker::with_range(src(), 25, 75, 8).unwrap();
+        assert_eq!(w.rows(), 50);
+        assert!(w.describe().contains("[25, 75)"), "{}", w.describe());
+    }
+
+    #[test]
+    fn shard_slice_matches_shard_ranges() {
+        assert_eq!(ShardWorker::shard_slice(10, 0, 3).unwrap(), (0, 4));
+        assert_eq!(ShardWorker::shard_slice(10, 1, 3).unwrap(), (4, 7));
+        assert_eq!(ShardWorker::shard_slice(10, 2, 3).unwrap(), (7, 10));
+        assert!(ShardWorker::shard_slice(10, 3, 3).is_err());
+        assert!(ShardWorker::shard_slice(10, 0, 0).is_err());
+    }
+
+    /// Drive one session over a real localhost socket pair — the
+    /// protocol exercised without the leader engine.
+    #[test]
+    fn session_answers_every_frame_kind() {
+        let w = worker(100);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let spec = wire::read_frame(&mut conn, "spec").unwrap().0;
+            assert_eq!(spec, Frame::ShardSpec { rows: 100, dim: 2 });
+
+            wire::write_frame(&mut conn, &Frame::Gather { indices: vec![5, 0, 99] }).unwrap();
+            match wire::read_frame(&mut conn, "rows").unwrap().0 {
+                Frame::Rows { dim: 2, rows } => assert_eq!(rows.len(), 6),
+                other => panic!("unexpected {other:?}"),
+            }
+
+            wire::write_frame(
+                &mut conn,
+                &Frame::Assign { k: 2, dim: 2, centroids: vec![0.0, 0.0, 10.0, 10.0] },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "partials").unwrap().0 {
+                Frame::Partials { k: 2, dim: 2, counts, sums, .. } => {
+                    assert_eq!(counts.iter().sum::<u64>(), 100);
+                    assert_eq!(sums.len(), 4);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+
+            wire::write_frame(&mut conn, &Frame::FetchAssign).unwrap();
+            match wire::read_frame(&mut conn, "assign").unwrap().0 {
+                Frame::AssignShard { assign } => {
+                    assert_eq!(assign.len(), 100);
+                    assert!(assign.iter().all(|&a| a == 0 || a == 1));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn dim_mismatch_gets_errmsg_session_survives() {
+        let w = worker(50);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            // 3D centroids at a 2D shard
+            wire::write_frame(
+                &mut conn,
+                &Frame::Assign { k: 1, dim: 3, centroids: vec![0.0; 3] },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "err").unwrap().0 {
+                Frame::ErrMsg { message } => assert!(message.contains("2D"), "{message}"),
+                other => panic!("unexpected {other:?}"),
+            }
+            // the session is still alive: a correct Assign now works
+            wire::write_frame(
+                &mut conn,
+                &Frame::Assign { k: 1, dim: 2, centroids: vec![0.0; 2] },
+            )
+            .unwrap();
+            assert!(matches!(
+                wire::read_frame(&mut conn, "partials").unwrap().0,
+                Frame::Partials { .. }
+            ));
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn leader_disconnect_ends_session_cleanly() {
+        let w = worker(20);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            // drop without Shutdown — a dying leader
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+}

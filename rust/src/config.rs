@@ -30,6 +30,12 @@ pub enum Engine {
     /// bounded memory (`--memory-budget` / `--chunk`), bit-identical
     /// to the in-memory engines.
     OutOfCore,
+    /// Multi-process distributed leader over TCP shard workers
+    /// (`--workers a:p1,b:p2`, [`crate::kmeans::dist`]): each worker
+    /// owns one shard, the leader folds per-shard partials with the
+    /// canonical merge — bit-identical to `oocore`/`threads` at equal
+    /// shard counts (DESIGN.md §10).
+    Dist,
 }
 
 impl std::str::FromStr for Engine {
@@ -46,9 +52,10 @@ impl std::str::FromStr for Engine {
             "minibatch" => Engine::MiniBatch,
             "streaming" => Engine::Streaming,
             "oocore" => Engine::OutOfCore,
+            "dist" => Engine::Dist,
             other => {
                 return Err(Error::Config(format!(
-                    "unknown engine `{other}` (serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore)"
+                    "unknown engine `{other}` (serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore|dist)"
                 )))
             }
         })
@@ -67,6 +74,7 @@ impl std::fmt::Display for Engine {
             Engine::MiniBatch => "minibatch",
             Engine::Streaming => "streaming",
             Engine::OutOfCore => "oocore",
+            Engine::Dist => "dist",
         };
         f.write_str(s)
     }
@@ -275,6 +283,7 @@ mod tests {
             Engine::MiniBatch,
             Engine::Streaming,
             Engine::OutOfCore,
+            Engine::Dist,
         ] {
             let s = e.to_string();
             assert_eq!(s.parse::<Engine>().unwrap(), e);

@@ -249,6 +249,124 @@ pub fn read_binary(path: &Path) -> Result<Dataset> {
     Ok(ds)
 }
 
+// ---- trained-model persistence (.pkm) ----------------------------------
+
+const MODEL_MAGIC: &[u8; 8] = b"PARAKMM1";
+
+/// A trained K-Means model as persisted by `parakm run --save-model`
+/// and loaded by `parakm serve --model` — centroids plus the training
+/// provenance needed to trust them (DESIGN.md §7). Round-trips are
+/// byte-exact on the centroid bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub k: usize,
+    pub dim: usize,
+    /// Seed the training run used.
+    pub seed: u64,
+    /// Engine name that produced the model (`"serial"`, `"dist"`, ...).
+    pub engine: String,
+    /// Lloyd iterations the training run executed.
+    pub iterations: usize,
+    /// Final training SSE.
+    pub sse: f64,
+    /// k×dim row-major centroids.
+    pub centroids: Vec<f32>,
+}
+
+/// Write a `.pkm` model file: magic, k, dim, seed, engine string,
+/// iterations, sse, then the raw centroid bits (little-endian f32).
+pub fn write_model(path: &Path, model: &Model) -> Result<()> {
+    if model.k == 0 || model.dim == 0 {
+        return Err(Error::Shape(format!("model: k {} × dim {} invalid", model.k, model.dim)));
+    }
+    if model.centroids.len() != model.k * model.dim {
+        return Err(Error::Shape(format!(
+            "model: centroids len {} != k {} × dim {}",
+            model.centroids.len(),
+            model.k,
+            model.dim
+        )));
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MODEL_MAGIC)?;
+    w.write_all(&(model.k as u32).to_le_bytes())?;
+    w.write_all(&(model.dim as u32).to_le_bytes())?;
+    w.write_all(&model.seed.to_le_bytes())?;
+    let engine = model.engine.as_bytes();
+    w.write_all(&(engine.len() as u32).to_le_bytes())?;
+    w.write_all(engine)?;
+    w.write_all(&(model.iterations as u64).to_le_bytes())?;
+    w.write_all(&model.sse.to_bits().to_le_bytes())?;
+    for v in &model.centroids {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.pkm` model file; corrupt or truncated content is a typed
+/// [`Error::Data`] naming the file.
+pub fn read_model(path: &Path) -> Result<Model> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let short = |e: std::io::Error| data_err(path, format!("truncated model file: {e}"));
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).map_err(short)?;
+    if &magic != MODEL_MAGIC {
+        return Err(data_err(path, "not a parakmeans model (bad magic)".into()));
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4).map_err(short)?;
+    let k = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4).map_err(short)?;
+    let dim = u32::from_le_bytes(b4) as usize;
+    if k == 0 || dim == 0 || k.checked_mul(dim).and_then(|v| v.checked_mul(4)).is_none() {
+        return Err(data_err(path, format!("implausible model header: k={k} dim={dim}")));
+    }
+    // the declared centroids must actually be on disk — same guard as
+    // probe_binary, so a lying header is a typed error up front, never
+    // an attacker-sized allocation
+    let file_len = std::fs::metadata(path)?.len() as u128;
+    let fixed = 8u128 + 4 + 4 + 8 + 4 + 8 + 8; // magic..engine_len + iters + sse
+    if file_len < fixed + k as u128 * dim as u128 * 4 {
+        return Err(data_err(
+            path,
+            format!("truncated or corrupt: file is {file_len} B, header declares k={k} dim={dim}"),
+        ));
+    }
+    r.read_exact(&mut b8).map_err(short)?;
+    let seed = u64::from_le_bytes(b8);
+    r.read_exact(&mut b4).map_err(short)?;
+    let engine_len = u32::from_le_bytes(b4) as usize;
+    if engine_len > 256 {
+        return Err(data_err(path, format!("implausible engine-name length {engine_len}")));
+    }
+    let mut engine_buf = vec![0u8; engine_len];
+    r.read_exact(&mut engine_buf).map_err(short)?;
+    let engine = String::from_utf8(engine_buf)
+        .map_err(|_| data_err(path, "engine name is not valid utf-8".into()))?;
+    r.read_exact(&mut b8).map_err(short)?;
+    let iterations = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8).map_err(short)?;
+    let sse = f64::from_bits(u64::from_le_bytes(b8));
+
+    let mut payload = vec![0u8; k * dim * 4];
+    r.read_exact(&mut payload).map_err(|e| {
+        data_err(path, format!("truncated centroids: header declares {k} × {dim}D ({e})"))
+    })?;
+    let centroids: Vec<f32> =
+        payload.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    let mut extra = [0u8; 1];
+    if r.read(&mut extra)? != 0 {
+        return Err(data_err(path, "trailing bytes after the centroid payload".into()));
+    }
+    Ok(Model { k, dim, seed, engine, iterations, sse, centroids })
+}
+
 /// CSV header line for `dim` columns (`x0,x1,...`) — shared with the
 /// CLI's streamed generator path so the two writers cannot drift.
 pub fn csv_header(dim: usize) -> String {
@@ -413,6 +531,86 @@ mod tests {
         let err = probe_binary(&p).unwrap_err();
         assert!(matches!(err, Error::Data(_)), "{err}");
         assert!(err.to_string().contains("truncated or corrupt"), "{err}");
+    }
+
+    fn sample_model() -> Model {
+        Model {
+            k: 3,
+            dim: 2,
+            seed: 42,
+            engine: "dist".into(),
+            iterations: 17,
+            sse: 123.456789,
+            // awkward bit patterns: -0.0, subnormal, almost-1
+            centroids: vec![-0.0, f32::MIN_POSITIVE, 1.0000001, -5.25, 1e-30, 9.75],
+        }
+    }
+
+    #[test]
+    fn model_roundtrip_is_byte_exact_on_centroids() {
+        let m = sample_model();
+        let p = tmp("model_rt.pkm");
+        write_model(&p, &m).unwrap();
+        let back = read_model(&p).unwrap();
+        assert_eq!(back.k, m.k);
+        assert_eq!(back.dim, m.dim);
+        assert_eq!(back.seed, m.seed);
+        assert_eq!(back.engine, m.engine);
+        assert_eq!(back.iterations, m.iterations);
+        assert_eq!(back.sse.to_bits(), m.sse.to_bits());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.centroids), bits(&m.centroids));
+    }
+
+    #[test]
+    fn model_write_validates_shape() {
+        let p = tmp("model_bad.pkm");
+        let mut m = sample_model();
+        m.centroids.pop();
+        assert!(matches!(write_model(&p, &m).unwrap_err(), Error::Shape(_)));
+        let mut m = sample_model();
+        m.k = 0;
+        m.centroids.clear();
+        assert!(matches!(write_model(&p, &m).unwrap_err(), Error::Shape(_)));
+    }
+
+    #[test]
+    fn model_corruption_is_typed() {
+        let p = tmp("model_corrupt.pkm");
+        write_model(&p, &sample_model()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&p, &bad).unwrap();
+        let err = read_model(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // truncated centroids
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        let err = read_model(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+
+        // lying header: a representable but false k×dim on a tiny file
+        // must be a typed error BEFORE any allocation
+        let mut lying = bytes.clone();
+        lying[8..12].copy_from_slice(&u32::MAX.to_le_bytes()); // k
+        lying[12..16].copy_from_slice(&(1u32 << 16).to_le_bytes()); // dim
+        std::fs::write(&p, &lying).unwrap();
+        let err = read_model(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("truncated or corrupt"), "{err}");
+
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        std::fs::write(&p, &long).unwrap();
+        let err = read_model(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod source;
 
 pub use dataset::Dataset;
 pub use gmm::MixtureSpec;
-pub use source::{DataSource, FileSource, GmmSource, MemorySource};
+pub use source::{DataSource, FileSource, GmmSource, MemorySource, OwnedMemorySource};

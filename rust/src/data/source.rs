@@ -241,6 +241,52 @@ impl DataSource for MemorySource<'_> {
     }
 }
 
+/// Owning variant of [`MemorySource`]: wraps the [`Dataset`] by value,
+/// so the source is `'static` and can move across threads — what a
+/// distributed shard worker or the loopback test harness needs
+/// ([`crate::cluster`]). Chunks are zero-copy subslices of the owned
+/// buffer, exactly as in [`MemorySource`].
+pub struct OwnedMemorySource {
+    ds: Dataset,
+}
+
+impl OwnedMemorySource {
+    pub fn new(ds: Dataset) -> OwnedMemorySource {
+        OwnedMemorySource { ds }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+}
+
+impl DataSource for OwnedMemorySource {
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    fn reader(&self, lo: usize, hi: usize, chunk_rows: usize) -> Result<Box<dyn ChunkReader + '_>> {
+        check_reader_args(lo, hi, self.len(), chunk_rows)?;
+        Ok(Box::new(MemReader { ds: &self.ds, cur: lo, hi, chunk_rows }))
+    }
+
+    fn has_truth(&self) -> bool {
+        self.ds.truth.is_some()
+    }
+
+    fn truth(&self) -> Result<Option<Vec<i32>>> {
+        Ok(self.ds.truth.clone())
+    }
+
+    fn describe(&self) -> String {
+        format!("memory-owned({} × {}D)", self.ds.len(), self.ds.dim())
+    }
+}
+
 // ---- file-backed (.pkd streaming) --------------------------------------
 
 /// Buffered streaming [`DataSource`] over a `.pkd` binary file
@@ -588,6 +634,19 @@ mod tests {
         // sub-range
         assert_eq!(drain(&src, 17, 200, 50), ds.rows(17, 200));
         assert_eq!(src.truth().unwrap(), ds.truth);
+    }
+
+    #[test]
+    fn owned_memory_source_matches_borrowed() {
+        let ds = MixtureSpec::paper_2d(4).generate(211, 4);
+        let owned = OwnedMemorySource::new(ds.clone());
+        let borrowed = MemorySource::new(&ds);
+        assert_eq!((owned.len(), owned.dim()), (borrowed.len(), borrowed.dim()));
+        assert_eq!(drain(&owned, 0, 211, 64), drain(&borrowed, 0, 211, 64));
+        assert_eq!(owned.truth().unwrap(), ds.truth);
+        assert!(owned.has_truth());
+        assert_eq!(owned.gather(&[5, 0, 210]).unwrap(), borrowed.gather(&[5, 0, 210]).unwrap());
+        assert_eq!(owned.dataset().len(), 211);
     }
 
     #[test]

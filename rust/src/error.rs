@@ -5,6 +5,40 @@
 //! a future real-PJRT backend; the in-crate native executor
 //! (`runtime::native`) reports through the other variants.
 
+/// What went wrong between a distributed leader and its shard workers
+/// (DESIGN.md §10). Carried by [`Error::Cluster`]; the variants are the
+/// failure model the leader's fail-fast contract is tested against:
+/// every one must surface promptly (bounded read timeouts), never hang.
+#[derive(Debug)]
+pub enum ClusterError {
+    /// TCP connect/read/write failed, timed out, or the peer hung up —
+    /// the bytes never arrived.
+    Connection(String),
+
+    /// Bytes arrived but do not form a valid frame: bad length prefix,
+    /// unknown frame type, truncated or overlong payload.
+    Frame(String),
+
+    /// Peers disagree on shapes: shard dimensionality, centroid k×d,
+    /// assignment length vs the advertised shard size.
+    Shape(String),
+
+    /// A well-formed frame at the wrong point in the conversation, or
+    /// a failure the worker reported in an `ErrMsg` frame.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Connection(m) => write!(f, "connection: {m}"),
+            ClusterError::Frame(m) => write!(f, "bad frame: {m}"),
+            ClusterError::Shape(m) => write!(f, "shape: {m}"),
+            ClusterError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
 /// All errors produced by parakmeans.
 #[derive(Debug)]
 pub enum Error {
@@ -34,6 +68,11 @@ pub enum Error {
 
     /// A worker thread panicked or disconnected.
     Worker(String),
+
+    /// Distributed leader/worker failure ([`ClusterError`] taxonomy:
+    /// connection loss, frame corruption, shape mismatch, protocol
+    /// violation — DESIGN.md §10).
+    Cluster(ClusterError),
 }
 
 impl std::fmt::Display for Error {
@@ -49,6 +88,7 @@ impl std::fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Worker(m) => write!(f, "worker failure: {m}"),
+            Error::Cluster(e) => write!(f, "cluster: {e}"),
         }
     }
 }
@@ -84,6 +124,22 @@ mod tests {
         );
         assert_eq!(Error::Config("k".into()).to_string(), "invalid config: k");
         assert_eq!(Error::Data("short".into()).to_string(), "malformed data: short");
+        assert_eq!(
+            Error::Cluster(ClusterError::Connection("gone".into())).to_string(),
+            "cluster: connection: gone"
+        );
+        assert_eq!(
+            Error::Cluster(ClusterError::Frame("len".into())).to_string(),
+            "cluster: bad frame: len"
+        );
+        assert_eq!(
+            Error::Cluster(ClusterError::Shape("dim".into())).to_string(),
+            "cluster: shape: dim"
+        );
+        assert_eq!(
+            Error::Cluster(ClusterError::Protocol("order".into())).to_string(),
+            "cluster: protocol: order"
+        );
     }
 
     #[test]

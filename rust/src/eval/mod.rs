@@ -197,6 +197,21 @@ pub fn run_engine(
             let dt = t0.elapsed().as_secs_f64();
             (dt, dt, r)
         }
+        Engine::Dist => {
+            // loopback cluster: `threads` shard workers on localhost —
+            // the full wire protocol, timed including worker spawn
+            // (worker-count sweeps live in benches/dist_scaling.rs)
+            let cluster =
+                crate::cluster::LoopbackCluster::spawn_dataset(ds, threads.max(1), 65_536)?;
+            let run = crate::kmeans::dist::run(
+                &cluster.addrs,
+                &kc,
+                &crate::kmeans::dist::DistOpts::default(),
+            )?;
+            cluster.join()?;
+            let dt = t0.elapsed().as_secs_f64();
+            (dt, dt, run.result)
+        }
     };
     Ok(Timed {
         engine,
@@ -237,5 +252,15 @@ mod tests {
         assert!(t.converged);
         assert!(t.secs > 0.0);
         assert_eq!(t.assign.len(), 3000);
+    }
+
+    #[test]
+    fn run_engine_dist_matches_serial() {
+        let ds = paper_dataset(2, 2000);
+        let serial = run_engine(Engine::Serial, &ds, 4, 1, 42).unwrap();
+        let dist = run_engine(Engine::Dist, &ds, 4, 2, 42).unwrap();
+        assert_eq!(dist.assign, serial.assign);
+        assert_eq!(dist.iterations, serial.iterations);
+        assert_eq!(dist.converged, serial.converged);
     }
 }

@@ -38,6 +38,7 @@ pub fn generate(results_dir: &Path) -> Result<String> {
     ablations(results_dir, &mut out);
     oocore(results_dir, &mut out);
     pruned(results_dir, &mut out);
+    dist(results_dir, &mut out);
 
     let path = results_dir.join("REPORT.md");
     std::fs::create_dir_all(results_dir)?;
@@ -338,6 +339,54 @@ fn pruned(dir: &Path, out: &mut String) {
     let _ = writeln!(out);
 }
 
+fn dist(dir: &Path, out: &mut String) {
+    let _ = writeln!(out, "## Distributed loopback — workers × K sweep\n");
+    let Some((_, rows)) = load(dir, "tables/dist.csv") else {
+        let _ = writeln!(out, "_not run_ (`cargo bench --bench dist_scaling`)\n");
+        return;
+    };
+    // rows: dim, k, workers, secs, speedup, efficiency, bytes_per_iter,
+    // iters, sse, identical
+    if rows.iter().any(|r| r.len() < 10) {
+        let _ = writeln!(out, "_malformed dist.csv (expected 10 columns)_\n");
+        return;
+    }
+    let md: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}D", r[0] as u64),
+                (r[1] as u64).to_string(),
+                (r[2] as u64).to_string(),
+                format!("{:.4}", r[3]),
+                format!("{:.2}", r[4]),
+                format!("{:.2}", r[5]),
+                format!("{:.1}", r[6] / 1024.0),
+                (r[7] as u64).to_string(),
+            ]
+        })
+        .collect();
+    md_table(out, &["dim", "K", "S", "secs", "ψ", "ε", "wire KiB/iter", "iters"], &md);
+    // every cell was cross-checked bit-identical against threads(p=S)
+    // inside the bench; the CSV records the verdict so the report can
+    // refuse to bless a sweep whose identity check was skipped
+    let all_identical = rows.iter().all(|r| r[9] == 1.0);
+    check(out, "dist(S) bit-identical to threads(p=S) in every cell", all_identical);
+    let bytes_positive = rows.iter().all(|r| r[6] > 0.0);
+    check(out, "wire bytes/iter > 0 in every cell", bytes_positive);
+    // iteration count is a pure function of the data/K (dist(S) ≡
+    // threads(p=S), and the dense engines iterate p-independently on
+    // the paper datasets), so S must not change it
+    let mut iters_by_cfg: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    let mut iters_stable = true;
+    for r in &rows {
+        let key = (r[0] as u64, r[1] as u64); // (dim, k)
+        iters_stable &= *iters_by_cfg.entry(key).or_insert(r[7]) == r[7];
+    }
+    check(out, "iterations independent of worker count per (dim, K)", iters_stable);
+    let _ = writeln!(out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,6 +519,56 @@ mod tests {
 
     fn svec<const N: usize>(cells: [&str; N]) -> Vec<String> {
         cells.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn dist_section_checks_and_renders() {
+        let dir = fixture_dir();
+        let header = [
+            "dim", "k", "workers", "secs", "speedup", "efficiency", "bytes_per_iter", "iters",
+            "sse", "identical",
+        ];
+        csv::write_table(
+            &dir.join("tables/dist.csv"),
+            &header,
+            &[
+                vec![2.0, 8.0, 1.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
+                vec![2.0, 8.0, 2.0, 0.6, 1.7, 0.85, 450.0, 23.0, 5.5, 1.0],
+                vec![3.0, 4.0, 4.0, 0.3, 3.1, 0.78, 700.0, 31.0, 7.25, 1.0],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("## Distributed loopback"), "{report}");
+        assert!(
+            report.contains("✔ **dist(S) bit-identical to threads(p=S) in every cell**"),
+            "{report}"
+        );
+        assert!(report.contains("✔ **wire bytes/iter > 0 in every cell**"), "{report}");
+        assert!(
+            report.contains("✔ **iterations independent of worker count per (dim, K)**"),
+            "{report}"
+        );
+
+        // a failed identity check or S-dependent iteration count flips
+        csv::write_table(
+            &dir.join("tables/dist.csv"),
+            &header,
+            &[
+                vec![2.0, 8.0, 1.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
+                vec![2.0, 8.0, 2.0, 0.6, 1.7, 0.85, 450.0, 24.0, 5.5, 0.0],
+            ],
+        )
+        .unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(
+            report.contains("✘ **dist(S) bit-identical to threads(p=S) in every cell**"),
+            "{report}"
+        );
+        assert!(
+            report.contains("✘ **iterations independent of worker count per (dim, K)**"),
+            "{report}"
+        );
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Distributed Lloyd over TCP shard workers — the leader engine
+//! (DESIGN.md §10).
+//!
+//! Structurally this is [`crate::kmeans::streaming`] with the shard
+//! threads replaced by [`crate::cluster::worker`] processes: each
+//! iteration the leader broadcasts the centroids (`Assign` frames to
+//! every worker before reading any reply — workers compute in
+//! parallel), collects one `Partials` frame per worker, folds them with
+//! the canonical [`merge_ordered`] ascending-shard contract, and
+//! finalizes. Only `K × d`-sized statistics cross the wire per
+//! iteration; the `O(n)` assignment vector is fetched once, after
+//! convergence.
+//!
+//! ## Determinism and bit-identity
+//!
+//! Workers fold their rows in ascending order through the
+//! chunked-accumulation contract (the exact `stream_shard` fold the
+//! out-of-core engine runs), floats cross the wire as IEEE bit
+//! patterns, and the leader merges partials by *shard index* — the
+//! order workers were listed in `--workers`, never reply arrival order
+//! (each worker has its own socket; replies are read per-socket in
+//! shard order, so a slow shard 0 cannot reorder the fold). Therefore
+//! `dist(S)` ≡ `oocore(shards = S)` ≡ `threads(p = S)` bit-for-bit —
+//! by construction, for any worker count, any reply timing, any chunk
+//! size, and any mix of kernel tiers across the cluster. Pinned by
+//! `rust/tests/integration_dist.rs` and re-checked per cell in
+//! `benches/dist_scaling.rs`.
+//!
+//! ## Failure model
+//!
+//! The leader fails fast and never hangs: every socket carries bounded
+//! read/write timeouts ([`DistOpts`]), and every failure surfaces as a
+//! typed [`Error::Cluster`] — [`ClusterError::Connection`] for loss or
+//! timeout, [`ClusterError::Frame`] for corrupt bytes,
+//! [`ClusterError::Shape`] for disagreeing shards, and
+//! [`ClusterError::Protocol`] for out-of-order frames or worker-
+//! reported errors. There is no mid-run retry: a half-collected
+//! iteration has no consistent state to resume from, and reruns are
+//! cheap precisely because results are deterministic.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+use crate::config::Init;
+use crate::error::{ClusterError, Error, Result};
+use crate::kmeans::step::{finalize, merge_ordered, PartialStats};
+use crate::kmeans::{KmeansConfig, KmeansResult};
+use crate::rng::Pcg64;
+
+/// Network knobs for a distributed run. Results never depend on them —
+/// they bound how long a dead worker can stall the leader.
+#[derive(Debug, Clone, Copy)]
+pub struct DistOpts {
+    /// Per-worker TCP connect budget.
+    pub connect_timeout: Duration,
+    /// Per-read/write socket timeout. A worker that goes silent longer
+    /// than this surfaces as [`ClusterError::Connection`]. Generous by
+    /// default: one E-step over a large shard sits between frames.
+    pub io_timeout: Duration,
+}
+
+impl Default for DistOpts {
+    fn default() -> Self {
+        DistOpts { connect_timeout: Duration::from_secs(10), io_timeout: Duration::from_secs(120) }
+    }
+}
+
+/// Wire traffic and round-trip telemetry for one iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterNet {
+    /// Bytes the leader sent (centroid broadcast).
+    pub bytes_tx: u64,
+    /// Bytes the leader received (partials).
+    pub bytes_rx: u64,
+    /// Broadcast-to-last-partial wall time.
+    pub secs: f64,
+}
+
+/// `EngineRun`-style network statistics for a whole distributed run.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Worker (= shard) count.
+    pub workers: usize,
+    /// Handshake traffic (Hello/ShardSpec), bytes both directions.
+    pub handshake_bytes: u64,
+    /// Init gather traffic (Gather/Rows), bytes both directions.
+    pub gather_bytes: u64,
+    /// Per-iteration traffic and round-trip, aligned with
+    /// [`KmeansResult::history`].
+    pub per_iter: Vec<IterNet>,
+    /// Final assignment collection (FetchAssign/AssignShard), bytes
+    /// both directions.
+    pub collect_bytes: u64,
+}
+
+impl NetStats {
+    /// Total bytes moved, both directions, all phases.
+    pub fn total_bytes(&self) -> u64 {
+        self.handshake_bytes
+            + self.gather_bytes
+            + self.collect_bytes
+            + self.per_iter.iter().map(|i| i.bytes_tx + i.bytes_rx).sum::<u64>()
+    }
+
+    /// Mean per-iteration wire bytes (0 when no iterations ran).
+    pub fn bytes_per_iter(&self) -> f64 {
+        if self.per_iter.is_empty() {
+            0.0
+        } else {
+            self.per_iter.iter().map(|i| (i.bytes_tx + i.bytes_rx) as f64).sum::<f64>()
+                / self.per_iter.len() as f64
+        }
+    }
+
+    /// Mean broadcast-to-last-partial round trip (0 when none ran).
+    pub fn avg_round_trip_secs(&self) -> f64 {
+        if self.per_iter.is_empty() {
+            0.0
+        } else {
+            self.per_iter.iter().map(|i| i.secs).sum::<f64>() / self.per_iter.len() as f64
+        }
+    }
+}
+
+/// A distributed run's result plus its network telemetry.
+#[derive(Debug, Clone)]
+pub struct DistRun {
+    pub result: KmeansResult,
+    pub net: NetStats,
+}
+
+/// One connected worker.
+struct Link {
+    stream: TcpStream,
+    addr: String,
+    /// Shard size reported in the handshake.
+    rows: usize,
+    /// Global row offset (ascending shard order).
+    offset: usize,
+}
+
+impl Link {
+    fn send(&mut self, frame: &Frame) -> Result<u64> {
+        wire::write_frame(&mut self.stream, frame).map_err(|e| ctx(e, &self.addr))
+    }
+
+    /// Read one frame; a worker `ErrMsg` becomes a typed protocol
+    /// error, any other unexpected frame too.
+    fn recv(&mut self, expect: &str) -> Result<(Frame, u64)> {
+        let (frame, bytes) =
+            wire::read_frame(&mut self.stream, expect).map_err(|e| ctx(e, &self.addr))?;
+        if let Frame::ErrMsg { message } = frame {
+            return Err(Error::Cluster(ClusterError::Protocol(format!(
+                "worker {}: {message}",
+                self.addr
+            ))));
+        }
+        Ok((frame, bytes))
+    }
+}
+
+/// Attach the worker address to a cluster error (the frame layer does
+/// not know which peer it spoke to).
+fn ctx(e: Error, addr: &str) -> Error {
+    match e {
+        Error::Cluster(ce) => Error::Cluster(match ce {
+            ClusterError::Connection(m) => ClusterError::Connection(format!("worker {addr}: {m}")),
+            ClusterError::Frame(m) => ClusterError::Frame(format!("worker {addr}: {m}")),
+            ClusterError::Shape(m) => ClusterError::Shape(format!("worker {addr}: {m}")),
+            ClusterError::Protocol(m) => ClusterError::Protocol(format!("worker {addr}: {m}")),
+        }),
+        other => other,
+    }
+}
+
+/// A handshaken cluster, ready to run. Workers are shards in the order
+/// given — shard `i` is `addrs[i]`, and the merge folds in that order.
+pub struct Cluster {
+    links: Vec<Link>,
+    dim: usize,
+    n: usize,
+    net: NetStats,
+}
+
+impl Cluster {
+    /// Connect to every worker and exchange `Hello`/`ShardSpec`. Fails
+    /// fast on unreachable workers, version mismatches, disagreeing
+    /// dimensionality, or an empty cluster.
+    pub fn connect(addrs: &[String], opts: &DistOpts) -> Result<Cluster> {
+        if addrs.is_empty() {
+            return Err(Error::Config("dist: need at least one worker address".into()));
+        }
+        let mut links = Vec::with_capacity(addrs.len());
+        let mut net = NetStats { workers: addrs.len(), ..Default::default() };
+        let mut offset = 0usize;
+        for addr in addrs {
+            let sock_addr = addr
+                .to_socket_addrs()
+                .map_err(|e| {
+                    Error::Cluster(ClusterError::Connection(format!(
+                        "worker {addr}: cannot resolve: {e}"
+                    )))
+                })?
+                .next()
+                .ok_or_else(|| {
+                    Error::Cluster(ClusterError::Connection(format!(
+                        "worker {addr}: resolves to no address"
+                    )))
+                })?;
+            let stream =
+                TcpStream::connect_timeout(&sock_addr, opts.connect_timeout).map_err(|e| {
+                    Error::Cluster(ClusterError::Connection(format!("worker {addr}: {e}")))
+                })?;
+            let _ = stream.set_nodelay(true);
+            // keep the "every failure is a typed Error::Cluster"
+            // contract: the OS can reject e.g. a sub-resolution timeout
+            stream
+                .set_read_timeout(Some(opts.io_timeout))
+                .and_then(|_| stream.set_write_timeout(Some(opts.io_timeout)))
+                .map_err(|e| {
+                    Error::Cluster(ClusterError::Connection(format!(
+                        "worker {addr}: cannot set io timeout {:?}: {e}",
+                        opts.io_timeout
+                    )))
+                })?;
+            let mut link = Link { stream, addr: addr.clone(), rows: 0, offset };
+            net.handshake_bytes += link.send(&Frame::Hello { version: WIRE_VERSION })?;
+            let (frame, bytes) = link.recv("waiting for ShardSpec")?;
+            net.handshake_bytes += bytes;
+            let (rows, dim) = match frame {
+                Frame::ShardSpec { rows, dim } => (rows, dim),
+                other => {
+                    return Err(Error::Cluster(ClusterError::Protocol(format!(
+                        "worker {addr}: expected ShardSpec, got {}",
+                        other.name()
+                    ))))
+                }
+            };
+            let rows = usize::try_from(rows).map_err(|_| {
+                Error::Cluster(ClusterError::Shape(format!(
+                    "worker {addr}: implausible shard size {rows}"
+                )))
+            })?;
+            link.rows = rows;
+            offset += rows;
+            links.push((link, dim as usize));
+        }
+        let dim = links[0].1;
+        if let Some((link, d)) = links.iter().find(|(_, d)| *d != dim) {
+            return Err(Error::Cluster(ClusterError::Shape(format!(
+                "workers disagree on dimensionality: {} is {dim}D, {} is {d}D",
+                links[0].0.addr, link.addr
+            ))));
+        }
+        if dim == 0 {
+            return Err(Error::Cluster(ClusterError::Shape("workers report dim = 0".into())));
+        }
+        let n = offset;
+        if n == 0 {
+            return Err(Error::Cluster(ClusterError::Shape(
+                "cluster holds no rows (every shard is empty)".into(),
+            )));
+        }
+        Ok(Cluster { links: links.into_iter().map(|(l, _)| l).collect(), dim, n, net })
+    }
+
+    /// Total rows across all shards.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Point dimensionality every shard agreed on.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Sample K distinct global rows uniformly — the *same* index
+    /// sequence as [`crate::kmeans::init::random`] (identical RNG
+    /// stream), gathered from the shards that own them. A distributed
+    /// run therefore starts from the exact centroids an in-memory run
+    /// with the same seed starts from.
+    pub fn init_random(&mut self, k: usize, seed: u64) -> Result<Vec<f32>> {
+        if k > self.n {
+            return Err(Error::Config(format!("init: k {k} > n {}", self.n)));
+        }
+        let mut rng = Pcg64::new(seed, 0x1417);
+        let idx = rng.sample_indices(self.n, k);
+        // group requested rows by owning shard, remembering where each
+        // lands in the centroid buffer
+        let mut per_link: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.links.len()];
+        for (pos, &gi) in idx.iter().enumerate() {
+            // linear scan: worker counts are small, and this stays
+            // correct even when a shard is empty
+            let li = self
+                .links
+                .iter()
+                .position(|l| gi >= l.offset && gi < l.offset + l.rows)
+                .expect("sampled index inside [0, n)");
+            per_link[li].push((pos, gi - self.links[li].offset));
+        }
+        let d = self.dim;
+        let mut out = vec![0.0f32; k * d];
+        for (li, wanted) in per_link.iter().enumerate() {
+            if wanted.is_empty() {
+                continue;
+            }
+            let link = &mut self.links[li];
+            let indices: Vec<u64> = wanted.iter().map(|&(_, local)| local as u64).collect();
+            let m = indices.len();
+            self.net.gather_bytes += link.send(&Frame::Gather { indices })?;
+            let (frame, bytes) = link.recv("waiting for gathered rows")?;
+            self.net.gather_bytes += bytes;
+            let rows = match frame {
+                Frame::Rows { dim, rows } if dim as usize == d && rows.len() == m * d => rows,
+                Frame::Rows { dim, rows } => {
+                    return Err(Error::Cluster(ClusterError::Shape(format!(
+                        "worker {}: gathered {} values of {}D rows, expected {m} × {d}D",
+                        link.addr,
+                        rows.len(),
+                        dim
+                    ))))
+                }
+                other => {
+                    return Err(Error::Cluster(ClusterError::Protocol(format!(
+                        "worker {}: expected Rows, got {}",
+                        link.addr,
+                        other.name()
+                    ))))
+                }
+            };
+            for (j, &(pos, _)) in wanted.iter().enumerate() {
+                out[pos * d..(pos + 1) * d].copy_from_slice(&rows[j * d..(j + 1) * d]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run distributed Lloyd from explicit initial centroids, consuming
+    /// the cluster (workers receive `Shutdown` on success; on error the
+    /// connections drop and workers end their session at the break).
+    pub fn run_from(mut self, cfg: &KmeansConfig, centroids0: &[f32]) -> Result<DistRun> {
+        let (n, d, k) = (self.n, self.dim, cfg.k);
+        if k == 0 {
+            return Err(Error::Config("dist: k must be >= 1".into()));
+        }
+        if centroids0.len() != k * d {
+            return Err(Error::Shape(format!(
+                "dist: initial centroids len {} != k {k} × dim {d}",
+                centroids0.len()
+            )));
+        }
+
+        let mut centroids = centroids0.to_vec();
+        let mut history: Vec<(f64, f64)> = Vec::new();
+        let mut converged = false;
+        let mut iterations = 0usize;
+        let mut parts: Vec<PartialStats> = Vec::with_capacity(self.links.len());
+
+        for _ in 0..cfg.max_iters {
+            let t0 = Instant::now();
+            let mut iter_net = IterNet { bytes_tx: 0, bytes_rx: 0, secs: 0.0 };
+            // broadcast to every worker before reading any reply, so
+            // all shards compute their E-step concurrently
+            let assign_frame =
+                Frame::Assign { k: k as u32, dim: d as u32, centroids: centroids.clone() };
+            for link in &mut self.links {
+                iter_net.bytes_tx += link.send(&assign_frame)?;
+            }
+            // collect per-socket in ascending shard order: arrival
+            // timing cannot reorder the fold
+            parts.clear();
+            for link in &mut self.links {
+                let (frame, bytes) = link.recv("waiting for Partials")?;
+                iter_net.bytes_rx += bytes;
+                match frame {
+                    Frame::Partials { k: pk, dim: pd, counts, sums, sse }
+                        if pk as usize == k
+                            && pd as usize == d
+                            && counts.len() == k
+                            && sums.len() == k * d =>
+                    {
+                        parts.push(PartialStats { k, dim: d, sums, counts, sse });
+                    }
+                    Frame::Partials { k: pk, dim: pd, .. } => {
+                        return Err(Error::Cluster(ClusterError::Shape(format!(
+                            "worker {}: partials shaped {pk}×{pd}, expected {k}×{d}",
+                            link.addr
+                        ))))
+                    }
+                    other => {
+                        return Err(Error::Cluster(ClusterError::Protocol(format!(
+                            "worker {}: expected Partials, got {}",
+                            link.addr,
+                            other.name()
+                        ))))
+                    }
+                }
+            }
+            // stamp the round trip at the last partial, before the
+            // leader-side fold — secs means what the label says
+            iter_net.secs = t0.elapsed().as_secs_f64();
+            let merged = merge_ordered(parts.iter());
+            let (mu_new, shift) = finalize(&merged, &centroids);
+            centroids = mu_new;
+            iterations += 1;
+            history.push((merged.sse, shift));
+            self.net.per_iter.push(iter_net);
+            if shift < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+
+        // fetch the O(n) assignment vector once, after the loop
+        let mut assign = vec![-1i32; n];
+        for link in &mut self.links {
+            self.net.collect_bytes += link.send(&Frame::FetchAssign)?;
+        }
+        for link in &mut self.links {
+            let (frame, bytes) = link.recv("waiting for AssignShard")?;
+            self.net.collect_bytes += bytes;
+            match frame {
+                Frame::AssignShard { assign: shard } if shard.len() == link.rows => {
+                    assign[link.offset..link.offset + link.rows].copy_from_slice(&shard);
+                }
+                Frame::AssignShard { assign: shard } => {
+                    return Err(Error::Cluster(ClusterError::Shape(format!(
+                        "worker {}: sent {} assignments for a {}-row shard",
+                        link.addr,
+                        shard.len(),
+                        link.rows
+                    ))))
+                }
+                other => {
+                    return Err(Error::Cluster(ClusterError::Protocol(format!(
+                        "worker {}: expected AssignShard, got {}",
+                        link.addr,
+                        other.name()
+                    ))))
+                }
+            }
+        }
+
+        // polite shutdown; failures here cannot invalidate the result
+        for link in &mut self.links {
+            let _ = link.send(&Frame::Shutdown);
+        }
+
+        let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
+        Ok(DistRun {
+            result: KmeansResult {
+                centroids,
+                assign,
+                k,
+                dim: d,
+                iterations,
+                sse,
+                shift,
+                converged,
+                history,
+                pruning: None,
+            },
+            net: self.net,
+        })
+    }
+
+    /// [`Cluster::run_from`] with leader-side seeded-random init
+    /// ([`Cluster::init_random`] — identical to the in-memory engines'
+    /// init). Only [`Init::Random`] is distributable, as with the
+    /// out-of-core engine.
+    pub fn run(mut self, cfg: &KmeansConfig) -> Result<DistRun> {
+        let centroids0 = match cfg.init {
+            Init::Random => self.init_random(cfg.k, cfg.seed)?,
+            Init::KmeansPlusPlus => {
+                return Err(Error::Config(
+                    "dist: kmeans++ init needs a resident dataset; \
+                     precompute centroids (kmeans::init) and call run_from"
+                        .into(),
+                ))
+            }
+        };
+        self.run_from(cfg, &centroids0)
+    }
+}
+
+/// Connect, init (seeded random — same stream as the in-memory
+/// engines), run, shut down.
+pub fn run(addrs: &[String], cfg: &KmeansConfig, opts: &DistOpts) -> Result<DistRun> {
+    Cluster::connect(addrs, opts)?.run(cfg)
+}
+
+/// Connect and run from explicit initial centroids.
+pub fn run_from(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    centroids0: &[f32],
+) -> Result<DistRun> {
+    Cluster::connect(addrs, opts)?.run_from(cfg, centroids0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::loopback::LoopbackCluster;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::{init, serial};
+    use crate::testutil::assert_bit_identical;
+
+    fn fast_opts() -> DistOpts {
+        DistOpts { connect_timeout: Duration::from_secs(5), io_timeout: Duration::from_secs(10) }
+    }
+
+    #[test]
+    fn one_worker_reproduces_serial_bit_for_bit() {
+        let ds = MixtureSpec::paper_2d(8).generate(1201, 11);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let reference = serial::run(&ds, &cfg);
+
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 128).unwrap();
+        let run = run(&cluster.addrs, &cfg, &fast_opts()).unwrap();
+        cluster.join().unwrap();
+        assert_bit_identical(&run.result, &reference, "dist(1) vs serial");
+    }
+
+    #[test]
+    fn init_random_matches_in_memory_init() {
+        let ds = MixtureSpec::paper_3d(4).generate(900, 6);
+        let resident = init::random(&ds, 8, 42);
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 3, 64).unwrap();
+        let mut c = Cluster::connect(&cluster.addrs, &fast_opts()).unwrap();
+        assert_eq!((c.n(), c.dim()), (900, 3));
+        let streamed = c.init_random(8, 42).unwrap();
+        assert_eq!(streamed, resident);
+        drop(c); // close connections so the single-session workers exit
+        cluster.join().unwrap();
+    }
+
+    #[test]
+    fn net_stats_track_every_phase() {
+        let ds = MixtureSpec::paper_2d(4).generate(600, 2);
+        let cfg = KmeansConfig::new(4).with_seed(3);
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 64).unwrap();
+        let run = run(&cluster.addrs, &cfg, &fast_opts()).unwrap();
+        cluster.join().unwrap();
+        let net = &run.net;
+        assert_eq!(net.workers, 2);
+        assert_eq!(net.per_iter.len(), run.result.iterations);
+        assert!(net.handshake_bytes > 0);
+        assert!(net.gather_bytes > 0);
+        assert!(net.collect_bytes as usize > 600 * 4, "{}", net.collect_bytes);
+        assert!(net.bytes_per_iter() > 0.0);
+        assert!(net.avg_round_trip_secs() > 0.0);
+        assert!(net.total_bytes() > net.collect_bytes);
+    }
+
+    #[test]
+    fn config_errors_are_typed() {
+        // no workers
+        let err = run(&[], &KmeansConfig::new(2), &fast_opts()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+
+        let ds = MixtureSpec::paper_2d(4).generate(50, 1);
+        // k == 0
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 16).unwrap();
+        let err = run_from(&cluster.addrs, &KmeansConfig::new(0), &fast_opts(), &[]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let _ = cluster.join(); // leader dropped: workers end cleanly
+
+        // bad centroid shape
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 16).unwrap();
+        let err =
+            run_from(&cluster.addrs, &KmeansConfig::new(2), &fast_opts(), &[0.0; 3]).unwrap_err();
+        assert!(matches!(err, Error::Shape(_)), "{err}");
+        let _ = cluster.join();
+
+        // k > n through run()
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 16).unwrap();
+        let err = run(&cluster.addrs, &KmeansConfig::new(51), &fast_opts()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let _ = cluster.join();
+
+        // kmeans++ not distributable
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 16).unwrap();
+        let cfg = KmeansConfig::new(2).with_init(Init::KmeansPlusPlus);
+        let err = run(&cluster.addrs, &cfg, &fast_opts()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let _ = cluster.join();
+    }
+
+    #[test]
+    fn unreachable_worker_is_connection_error() {
+        // a port with no listener: refused immediately
+        let err = run(
+            &["127.0.0.1:1".to_string()],
+            &KmeansConfig::new(2),
+            &fast_opts(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+    }
+}

@@ -8,10 +8,13 @@
 //! [`streaming`] engine are the big-data extensions motivated in the
 //! conclusion — [`streaming`] clusters any [`crate::data::DataSource`]
 //! with O(shards × chunk) resident memory, bit-identical to the
-//! in-memory engines (see its module docs). The AOT-backed engines
-//! live in [`crate::coordinator`] and share these types.
+//! in-memory engines (see its module docs), and [`dist`] takes the same
+//! decomposition across the process boundary: a leader over TCP shard
+//! workers ([`crate::cluster`]), still bit-identical. The AOT-backed
+//! engines live in [`crate::coordinator`] and share these types.
 
 pub mod bisecting;
+pub mod dist;
 pub mod elkan;
 pub mod hamerly;
 pub mod init;

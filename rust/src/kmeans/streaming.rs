@@ -320,8 +320,13 @@ pub fn run_from(
 /// accumulator (bit-identical to a single whole-shard call — the
 /// chunked-accumulation contract). Verifies the source honors its
 /// chunk tiling, reporting [`Error::Data`] when it does not.
+///
+/// Shared with the distributed shard worker
+/// ([`crate::cluster::worker`]): a remote shard replays exactly this
+/// fold, which is what makes `dist(S) ≡ oocore(shards = S)` hold by
+/// construction rather than by test luck.
 #[allow(clippy::too_many_arguments)]
-fn stream_shard(
+pub(crate) fn stream_shard(
     src: &dyn DataSource,
     lo: usize,
     hi: usize,

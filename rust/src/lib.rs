@@ -52,6 +52,19 @@
 //! the shard count — one shard reproduces [`kmeans::serial`] bit-for-bit,
 //! `S` shards reproduce [`kmeans::parallel`] at `p = S` bit-for-bit.
 //!
+//! ## Distributed: crossing the process boundary
+//!
+//! [`cluster`] takes the same decomposition across machines: `parakm
+//! worker` processes each own one shard (any `DataSource`) and answer
+//! length-prefixed binary frames; the [`kmeans::dist`] leader
+//! broadcasts centroids, folds per-shard partials with the same
+//! [`kmeans::step::merge_ordered`] contract, and fetches assignments
+//! once at the end. Floats cross the wire as IEEE bits, so `dist(S)`
+//! is bit-identical to `oocore(shards = S)` and `threads(p = S)` — for
+//! any reply timing and any mix of kernel tiers across the cluster.
+//! Trained models persist via [`data::io::write_model`] and serve
+//! without retraining (`parakm serve --model`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -88,6 +101,7 @@
     clippy::manual_memcpy
 )]
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -102,4 +116,4 @@ pub mod serve;
 pub mod testutil;
 pub mod util;
 
-pub use error::{Error, Result};
+pub use error::{ClusterError, Error, Result};

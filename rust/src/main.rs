@@ -4,9 +4,13 @@
 //!   gen-data   generate a paper-family GMM dataset to a .pkd/.csv file
 //!              (`--chunk` streams the write with O(chunk) memory)
 //!   run        cluster a dataset with any engine, print a report
-//!              (`--engine oocore` streams with `--memory-budget`)
+//!              (`--engine oocore` streams with `--memory-budget`;
+//!              `--engine dist --workers a:p,b:p` runs the distributed
+//!              leader; `--save-model` persists the trained model)
+//!   worker     serve one data shard to a distributed leader
 //!   eval       regenerate paper tables/figures (t1..t5, f*, a1..a3, all)
 //!   serve      nearest-centroid assignment as a line-JSON TCP service
+//!              (`--model model.pkm` loads instead of retraining)
 //!   info       show AOT artifact manifest + runtime info
 //!
 //! Examples:
@@ -15,6 +19,11 @@
 //!   parakm run --synthetic 3d:200000 --engine offload --k 4 --kernel scalar
 //!   parakm run --input data/d3_100k.pkd --engine oocore --k 4 --memory-budget 1M
 //!   parakm run --synthetic 3d:100000000 --engine oocore --k 4 --memory-budget 64M
+//!   parakm worker --listen 127.0.0.1:7551 --input data/d3_100k.pkd --shard 0/2
+//!   parakm worker --listen 127.0.0.1:7552 --input data/d3_100k.pkd --shard 1/2
+//!   parakm run --engine dist --workers 127.0.0.1:7551,127.0.0.1:7552 --k 4
+//!   parakm run --input data/d3_100k.pkd --engine serial --k 4 --save-model m.pkm
+//!   parakm serve --model m.pkm --addr 127.0.0.1:7878
 //!   parakm eval --exp t3 --scale smoke
 //!   parakm info
 
@@ -64,11 +73,12 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("gen-data") => cmd_gen_data(args),
         Some("run") => cmd_run(args),
+        Some("worker") => cmd_worker(args),
         Some("eval") => cmd_eval(args),
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(args),
         Some(other) => Err(Error::Config(format!(
-            "unknown subcommand `{other}` (gen-data|run|eval|serve|info)"
+            "unknown subcommand `{other}` (gen-data|run|worker|eval|serve|info)"
         ))),
         None => {
             print_usage();
@@ -86,15 +96,19 @@ fn print_usage() {
          gen-data  --dim <2|3> --n <N> --out <file.pkd|file.csv> [--components K] [--seed S]\n\
          \u{20}          [--chunk C]   (stream the write, O(C) memory)\n\
          run       --input <file> | --synthetic <2d|3d>:<N>\n\
-         \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore\n\
+         \u{20}          --engine serial|threads|shared|offload|elkan|hamerly|minibatch|streaming|oocore|dist\n\
          \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
          \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
-         \u{20}          [--kernel auto|scalar|avx2|neon]\n\
+         \u{20}          [--kernel auto|scalar|avx2|neon] [--save-model FILE.pkm]\n\
          \u{20}          [--sched static|steal]   (threads/elkan/hamerly chunk scheduler)\n\
          \u{20}          [--memory-budget BYTES[K|M|G]]   (oocore: bound resident chunk buffers)\n\
+         \u{20}          [--workers a:p1,b:p2,...] [--net-timeout SECS]   (dist: shard workers)\n\
+         worker    --listen HOST:PORT  --input <file.pkd> | --synthetic <2d|3d>:<N>\n\
+         \u{20}          [--shard I/S] [--chunk C] [--seed S (synthetic only)] [--once]\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
-         serve     --input <file> | --synthetic <2d|3d>:<N>  --k K [--addr HOST:PORT]\n\
-         \u{20}          [--max-batch B] [--max-delay-ms T] [--max-conns C] [--artifacts DIR]\n\
+         serve     --model <file.pkm> | (--input <file> | --synthetic <2d|3d>:<N>)  --k K\n\
+         \u{20}          [--addr HOST:PORT] [--max-batch B] [--max-delay-ms T] [--max-conns C]\n\
+         \u{20}          [--artifacts DIR]   ({{\"stats\": true}} probes live counters)\n\
          info      [--artifacts DIR]"
     );
 }
@@ -233,6 +247,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         // it gets its own path that opens a source instead of loading
         return cmd_run_oocore(args);
     }
+    if engine == Engine::Dist {
+        // the data lives at the workers; the leader loads nothing
+        return cmd_run_dist(args);
+    }
     let ds = load_input(args)?;
     let k: usize = args.require("k")?;
     let threads: usize = args.get_or("threads", 4)?;
@@ -264,6 +282,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     let assign_out = args.get("assign-out").map(PathBuf::from);
+    let save_model = args.get("save-model").map(PathBuf::from);
     args.finish()?;
 
     // fix the process-global hot-path tier before any engine runs: an
@@ -322,6 +341,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
         }
         Engine::OutOfCore => unreachable!("dispatched to cmd_run_oocore above"),
+        Engine::Dist => unreachable!("dispatched to cmd_run_dist above"),
     };
     let total = t0.elapsed().as_secs_f64();
 
@@ -358,15 +378,55 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     if let Some(path) = assign_out {
-        let rows: Vec<Vec<f64>> = result
-            .assign
-            .iter()
-            .enumerate()
-            .map(|(i, &a)| vec![i as f64, a as f64])
-            .collect();
-        parakmeans::util::csv::write_table(&path, &["index", "cluster"], &rows)?;
-        println!("assignments : {}", path.display());
+        write_assign_csv(&path, &result.assign)?;
     }
+    if let Some(path) = save_model {
+        save_model_file(&path, engine, seed, &result)?;
+    }
+    Ok(())
+}
+
+/// `--assign-out`: write the assignment vector as an `index,cluster`
+/// CSV — one streamed writer shared by every engine path, so
+/// cross-engine byte-compares (the CI dist-smoke `cmp`) stay valid and
+/// no path stages an O(n)-row table (dist and oocore exist precisely
+/// for n too big to double-buffer).
+fn write_assign_csv(path: &std::path::Path, assign: &[i32]) -> Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "index,cluster")?;
+    for (i, &a) in assign.iter().enumerate() {
+        writeln!(w, "{i},{a}")?;
+    }
+    w.flush()?;
+    println!("assignments : {}", path.display());
+    Ok(())
+}
+
+/// `--save-model`: persist the trained centroids + provenance as a
+/// `.pkm` the serve command loads instead of retraining.
+fn save_model_file(
+    path: &std::path::Path,
+    engine: Engine,
+    seed: u64,
+    result: &parakmeans::kmeans::KmeansResult,
+) -> Result<()> {
+    io::write_model(
+        path,
+        &io::Model {
+            k: result.k,
+            dim: result.dim,
+            seed,
+            engine: engine.to_string(),
+            iterations: result.iterations,
+            sse: result.sse,
+            centroids: result.centroids.clone(),
+        },
+    )?;
+    println!("model       : {}", path.display());
     Ok(())
 }
 
@@ -391,6 +451,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     let kernel_flag: Option<KernelChoice> =
         args.get("kernel").map(|v| v.parse()).transpose()?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
+    let save_model = args.get("save-model").map(PathBuf::from);
 
     // build the source without materializing anything
     let source: Box<dyn DataSource> = if let Some(path) = args.get("input") {
@@ -487,21 +548,168 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         }
     }
     if let Some(path) = assign_out {
-        // stream straight to disk: a Vec-of-rows staging table would
-        // be O(n·56 B) — unacceptable for the engine built for big n
-        use std::io::Write as _;
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        writeln!(w, "index,cluster")?;
-        for (i, &a) in result.assign.iter().enumerate() {
-            writeln!(w, "{i},{a}")?;
-        }
-        w.flush()?;
-        println!("assignments : {}", path.display());
+        write_assign_csv(&path, &result.assign)?;
+    }
+    if let Some(path) = save_model {
+        save_model_file(&path, Engine::OutOfCore, seed, &result)?;
     }
     Ok(())
+}
+
+/// `run --engine dist`: the distributed leader. The dataset lives at
+/// the workers (`parakm worker`); the leader connects, initializes
+/// (seeded random — the same index stream as every other engine),
+/// broadcasts centroids per iteration and folds the returned partials.
+fn cmd_run_dist(args: &Args) -> Result<()> {
+    use parakmeans::kmeans::dist::{self, DistOpts};
+
+    let workers_raw = args.get("workers").or_config(
+        "--engine dist requires --workers host:port,host:port,... (one per shard, \
+         ascending shard order)",
+    )?;
+    let addrs = parse_worker_list(workers_raw)?;
+    let k: usize = args.require("k")?;
+    let tol: f64 = args.get_or("tol", 1e-6)?;
+    let max_iters: usize = args.get_or("max-iters", 300)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let init: Init = args.get_or("init", Init::Random)?;
+    let net_timeout: f64 = args.get_or("net-timeout", 120.0)?;
+    let assign_out = args.get("assign-out").map(PathBuf::from);
+    let save_model = args.get("save-model").map(PathBuf::from);
+    args.finish()?;
+
+    if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
+        return Err(Error::Config("--net-timeout must be in (0, 86400] seconds".into()));
+    }
+    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+    let opts = DistOpts {
+        connect_timeout: std::time::Duration::from_secs_f64(net_timeout.min(10.0)),
+        io_timeout: std::time::Duration::from_secs_f64(net_timeout),
+    };
+
+    let t0 = std::time::Instant::now();
+    let cluster = dist::Cluster::connect(&addrs, &opts)?;
+    let (n, dim) = (cluster.n(), cluster.dim());
+    let run = cluster.run(&kc)?;
+    let total = t0.elapsed().as_secs_f64();
+    let result = &run.result;
+    let net = &run.net;
+
+    println!("engine      : dist");
+    println!("workers     : {} ({})", net.workers, addrs.join(", "));
+    println!("dataset     : {n} points, {dim}D (sharded across workers)");
+    println!("k           : {k}   init: {init:?}   seed: {seed}");
+    println!(
+        "iterations  : {} (converged: {})",
+        result.iterations, result.converged
+    );
+    println!("sse         : {:.6e}", result.sse);
+    println!("final shift : {:.3e}", result.shift);
+    println!("time        : {total:.4}s");
+    println!(
+        "wire        : {} B total ({:.0} B/iter, handshake {} B, init {} B, collect {} B)",
+        net.total_bytes(),
+        net.bytes_per_iter(),
+        net.handshake_bytes,
+        net.gather_bytes,
+        net.collect_bytes
+    );
+    println!(
+        "round trip  : {:.2} ms avg broadcast-to-last-partial",
+        1e3 * net.avg_round_trip_secs()
+    );
+    println!("cluster sizes: {:?}", result.cluster_sizes());
+    if let Some(path) = assign_out {
+        write_assign_csv(&path, &result.assign)?;
+    }
+    if let Some(path) = save_model {
+        save_model_file(&path, Engine::Dist, seed, result)?;
+    }
+    Ok(())
+}
+
+/// Parse `--workers a:p1,b:p2,...` into addresses, rejecting obviously
+/// malformed entries up front (connect errors name the rest).
+fn parse_worker_list(raw: &str) -> Result<Vec<String>> {
+    let addrs: Vec<String> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if addrs.is_empty() {
+        return Err(Error::Config("--workers lists no addresses".into()));
+    }
+    for a in &addrs {
+        if !a.contains(':') {
+            return Err(Error::Config(format!("--workers entry `{a}` is not host:port")));
+        }
+    }
+    Ok(addrs)
+}
+
+/// `parakm worker`: own one data shard and serve distributed leaders.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use parakmeans::cluster::ShardWorker;
+    use parakmeans::kmeans::streaming::StreamOpts;
+
+    let listen = args.get("listen").or_config("missing --listen HOST:PORT")?.to_string();
+    let chunk: usize = args.get_or("chunk", StreamOpts::DEFAULT_CHUNK_ROWS)?;
+    let once = args.has("once");
+    let shard_spec = args.get("shard").map(str::to_string);
+    let kernel_flag: Option<KernelChoice> =
+        args.get("kernel").map(|v| v.parse()).transpose()?;
+
+    // the shard's source: a .pkd file or the on-the-fly GMM generator
+    let source: Box<dyn DataSource + Send + Sync> = if let Some(path) = args.get("input") {
+        // --seed shapes synthetic sources only; rejecting it here keeps
+        // the typo guard honest (a file shard's bytes are fixed)
+        if args.get("seed").is_some() {
+            return Err(Error::Config(
+                "--seed applies to --synthetic worker sources; file shards carry their own bytes"
+                    .into(),
+            ));
+        }
+        let p = PathBuf::from(path);
+        match p.extension().and_then(|e| e.to_str()) {
+            Some(e) if e.eq_ignore_ascii_case("csv") => {
+                return Err(Error::Config(
+                    "worker streams .pkd files, not csv; convert with gen-data".into(),
+                ))
+            }
+            _ => Box::new(FileSource::open(&p)?),
+        }
+    } else if let Some(spec) = args.get("synthetic") {
+        let (dim, n) = parse_synthetic(spec)?;
+        let seed: u64 = args.get_or("seed", parakmeans::data::gmm::workloads::seed_for(dim, n))?;
+        Box::new(GmmSource::paper(dim, n, seed)?)
+    } else {
+        return Err(Error::Config("provide --input <file.pkd> or --synthetic <2d|3d>:<N>".into()));
+    };
+    args.finish()?;
+
+    let tier = match kernel_flag {
+        Some(choice) => kernel::set_active(choice)?,
+        None => kernel::active_tier(),
+    };
+
+    // --shard I/S: this worker owns slice I of the S-way contiguous
+    // decomposition — every worker points at the same file/spec
+    let (lo, hi) = match shard_spec.as_deref() {
+        Some(spec) => {
+            let (i_s, s_s) = spec.split_once('/').or_config("--shard expects I/S, e.g. 0/2")?;
+            let i: usize = i_s.trim().parse().or_config("--shard index")?;
+            let s: usize = s_s.trim().parse().or_config("--shard count")?;
+            ShardWorker::shard_slice(source.len(), i, s)?
+        }
+        None => (0, source.len()),
+    };
+    let worker = ShardWorker::with_range(source, lo, hi, chunk)?;
+
+    let listener = std::net::TcpListener::bind(&listen)?;
+    println!("worker listening on {} — {}", listener.local_addr()?, worker.describe());
+    println!("kernel tier : {tier}");
+    worker.serve_listener(&listener, once)
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -584,25 +792,56 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use parakmeans::serve::{serve, BatcherConfig, ServeConfig};
-    let ds = load_input(args)?;
-    let k: usize = args.require("k")?;
-    let seed: u64 = args.get_or("seed", 42)?;
+    let model_path = args.get("model").map(PathBuf::from);
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let max_batch: usize = args.get_or("max-batch", 4096)?;
     let max_delay_ms: u64 = args.get_or("max-delay-ms", 2)?;
     let max_conns: usize = args.get_or("max-conns", 64)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
-    args.finish()?;
 
-    // train with the offload engine, then serve assignments
-    let cfg = RunConfig { k, seed, artifacts_dir: artifacts.clone(), ..Default::default() };
-    eprintln!("training on {} points ({}D, K={k})...", ds.len(), ds.dim());
-    let run = offload::run(&ds, &cfg)?;
-    eprintln!(
-        "trained: {} iters (converged: {}), sse {:.4e}",
-        run.result.iterations, run.result.converged, run.result.sse
-    );
+    // a persisted model serves immediately; otherwise train first (a
+    // restart re-pays full training cost — prefer run --save-model)
+    let (centroids, dim, k) = if let Some(path) = model_path {
+        let model = io::read_model(&path)?;
+        if let Some(k_flag) = args.get("k") {
+            let k_flag: usize = k_flag.parse().or_config("--k")?;
+            if k_flag != model.k {
+                return Err(Error::Config(format!(
+                    "--k {k_flag} contradicts the model's k = {} ({})",
+                    model.k,
+                    path.display()
+                )));
+            }
+        }
+        args.finish()?;
+        eprintln!(
+            "loaded model {} — k={} dim={} (engine {}, {} iters, sse {:.4e}, seed {})",
+            path.display(),
+            model.k,
+            model.dim,
+            model.engine,
+            model.iterations,
+            model.sse,
+            model.seed
+        );
+        (model.centroids, model.dim, model.k)
+    } else {
+        let ds = load_input(args)?;
+        let k: usize = args.require("k")?;
+        let seed: u64 = args.get_or("seed", 42)?;
+        args.finish()?;
+        // train with the offload engine, then serve assignments
+        let cfg = RunConfig { k, seed, artifacts_dir: artifacts.clone(), ..Default::default() };
+        eprintln!("training on {} points ({}D, K={k})...", ds.len(), ds.dim());
+        let run = offload::run(&ds, &cfg)?;
+        eprintln!(
+            "trained: {} iters (converged: {}), sse {:.4e}",
+            run.result.iterations, run.result.converged, run.result.sse
+        );
+        (run.result.centroids, ds.dim(), k)
+    };
+
     let scfg = ServeConfig {
         addr,
         artifacts_dir: artifacts,
@@ -613,8 +852,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: 256,
         max_conns,
     };
-    let dim = ds.dim();
-    let handle = serve(scfg, run.result.centroids, dim, k)?;
+    let handle = serve(scfg, centroids, dim, k)?;
     println!(
         "serving on {} — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}",
         handle.local_addr

@@ -31,12 +31,16 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Counters exposed for tests/metrics endpoints.
-#[derive(Debug, Clone, Default)]
+/// Counters exposed for tests and the `{"stats": true}` probe
+/// ([`crate::serve::protocol::stats_line`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BatcherStats {
     pub requests: u64,
     pub points: u64,
     pub device_calls: u64,
+    /// Padding rows device calls wasted (chunk size − staged points,
+    /// summed per call) — the batching-efficiency observable.
+    pub padded_rows: u64,
     pub errors: u64,
 }
 
@@ -57,6 +61,10 @@ pub struct Batcher {
     chunk: usize,
     cfg: BatcherConfig,
     pub stats: BatcherStats,
+    /// Mirror the server installs ([`Batcher::publish_to`]) so
+    /// connection threads can answer `{"stats": true}` without a round
+    /// trip through the batcher queue.
+    shared: Option<std::sync::Arc<std::sync::Mutex<BatcherStats>>>,
 }
 
 impl Batcher {
@@ -100,7 +108,22 @@ impl Batcher {
             chunk,
             cfg: BatcherConfig { max_batch: cfg.max_batch.min(chunk), ..cfg },
             stats: BatcherStats::default(),
+            shared: None,
         })
+    }
+
+    /// Install a shared stats mirror: after every flush the counters
+    /// are copied into it, so readers on other threads see a consistent
+    /// point-in-time snapshot (counters are monotone).
+    pub fn publish_to(&mut self, shared: std::sync::Arc<std::sync::Mutex<BatcherStats>>) {
+        *shared.lock().unwrap() = self.stats.clone();
+        self.shared = Some(shared);
+    }
+
+    fn publish(&self) {
+        if let Some(shared) = &self.shared {
+            *shared.lock().unwrap() = self.stats.clone();
+        }
     }
 
     /// Drain the queue and serve until it disconnects (server shutdown).
@@ -135,21 +158,32 @@ impl Batcher {
 
     /// Execute one padded device call for `jobs`, scattering replies.
     /// Oversized batches (staged > chunk) split across multiple calls.
+    ///
+    /// Counter visibility: the shared mirror is published before ANY
+    /// reply of a given stage goes out (rejections, device errors,
+    /// successes), so a client that receives its response and
+    /// immediately probes `{"stats": true}` sees counters that include
+    /// its own request.
     pub fn flush(&mut self, jobs: Vec<Job>) {
         // validate dims first; reject bad jobs without spending a call
         let mut valid = Vec::new();
+        let mut rejected = Vec::new();
         for job in jobs {
             self.stats.requests += 1;
             if job.request.points.iter().any(|p| p.len() != self.dim) {
                 self.stats.errors += 1;
-                let _ = job.reply.send(Response::Err {
-                    id: job.request.id,
-                    error: format!("expected {}-dimensional points", self.dim),
-                });
+                rejected.push(job);
             } else {
                 self.stats.points += job.request.points.len() as u64;
                 valid.push(job);
             }
+        }
+        self.publish();
+        for job in rejected {
+            let _ = job.reply.send(Response::Err {
+                id: job.request.id,
+                error: format!("expected {}-dimensional points", self.dim),
+            });
         }
 
         let mut pending: Vec<(Job, Vec<i32>, Vec<f32>)> = Vec::new();
@@ -177,6 +211,7 @@ impl Batcher {
                     ],
                 );
                 this.stats.device_calls += 1;
+                this.stats.padded_rows += (this.chunk - *filled) as u64;
                 match result {
                     Ok(outs) => {
                         let assign = outs[0].as_i32();
@@ -196,6 +231,7 @@ impl Batcher {
                     }
                     Err(e) => {
                         this.stats.errors += spans.len() as u64;
+                        this.publish();
                         for &(ji, _, _) in spans.iter() {
                             let (job, clusters, _) = &mut pending[ji];
                             clusters.clear();
@@ -236,6 +272,10 @@ impl Batcher {
         }
         flush_device(self, &mut x, &mut filled, &mut spans, &mut pending);
 
+        // publish BEFORE the success replies: a client that receives
+        // its response and immediately probes {"stats": true} must see
+        // this batch's counters
+        self.publish();
         for (job, clusters, distances) in pending {
             if clusters.len() == job.request.points.len() {
                 let _ = job.reply.send(Response::Ok {
@@ -387,6 +427,27 @@ mod tests {
         }
         assert_eq!(b.stats.device_calls, 0);
         assert_eq!(b.stats.errors, 1);
+    }
+
+    #[test]
+    fn padded_rows_counted_and_mirror_published() {
+        // a never-existing artifacts dir forces the native fallback, so
+        // this runs artifact-free (same pattern as
+        // integration_native_runtime.rs)
+        let dir = std::env::temp_dir().join("parakm_batcher_tests/no_artifacts_here");
+        let (centroids, _) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let shared = std::sync::Arc::new(std::sync::Mutex::new(BatcherStats::default()));
+        b.publish_to(shared.clone());
+
+        let (j, rx) = job(1, vec![vec![0.0, 0.0, 0.0]; 3]);
+        b.flush(vec![j]);
+        assert!(matches!(rx.recv().unwrap(), Response::Ok { id: 1, .. }));
+        assert_eq!(b.stats.device_calls, 1);
+        // one call padded from 3 staged points up to the chunk size
+        assert_eq!(b.stats.padded_rows, (b.chunk() - 3) as u64);
+        // the mirror saw the same snapshot after the flush
+        assert_eq!(*shared.lock().unwrap(), b.stats);
     }
 
     #[test]

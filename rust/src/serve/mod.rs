@@ -24,11 +24,19 @@
 //! Acceptors communicate via `mpsc`. No tokio in the offline image
 //! (DESIGN.md §8, "Offline-image constraints"): blocking IO + threads,
 //! which is also the right shape for a CPU backend.
+//!
+//! Observability: any connection may send `{"stats": true}` and gets
+//! the live [`BatcherStats`] counters plus the acceptor's saturation-
+//! rejection count back as one JSON line ([`stats_line`]) — answered
+//! from the connection thread against a shared mirror, so the probe
+//! stays responsive whatever the batcher is doing. Models trained
+//! elsewhere load via `parakm serve --model model.pkm`
+//! ([`crate::data::io::read_model`]) instead of retraining at startup.
 
 pub mod batcher;
 pub mod protocol;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
-pub use protocol::{Request, Response, ERR_SATURATED};
+pub use protocol::{stats_line, ClientRequest, Request, Response, ERR_SATURATED};
 pub use server::{serve, ServeConfig};

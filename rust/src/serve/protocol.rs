@@ -3,9 +3,16 @@
 //! Request  : `{"id": 7, "points": [[x,y,z], ...]}`
 //! Response : `{"id": 7, "clusters": [0, 2, ...], "distances": [..]}`
 //! Error    : `{"id": 7, "error": "..."}`
+//! Stats    : `{"stats": true}` → `{"stats": {"requests": .., ...}}`
 //!
 //! One JSON document per line; a connection may pipeline any number of
-//! requests. Parsing uses the in-crate [`crate::util::json`].
+//! requests. The stats request returns the server's live
+//! [`BatcherStats`] counters plus the acceptor's saturation-rejection
+//! count ([`stats_line`]) — answered from the connection thread, so it
+//! works even while the batcher is busy. Parsing uses the in-crate
+//! [`crate::util::json`].
+//!
+//! [`BatcherStats`]: crate::serve::batcher::BatcherStats
 
 use std::collections::BTreeMap;
 
@@ -50,6 +57,45 @@ impl Request {
         }
         Ok(Request { id, points })
     }
+}
+
+/// Any line a client may send: an assignment request or the
+/// observability probe `{"stats": true}`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientRequest {
+    Assign(Request),
+    Stats,
+}
+
+impl ClientRequest {
+    /// Parse one request line; `{"stats": true}` routes to
+    /// [`ClientRequest::Stats`], everything else through
+    /// [`Request::parse`].
+    pub fn parse(line: &str) -> Result<ClientRequest> {
+        let j = Json::parse(line)?;
+        if j.get("stats").and_then(Json::as_bool) == Some(true) {
+            return Ok(ClientRequest::Stats);
+        }
+        Request::parse(line).map(ClientRequest::Assign)
+    }
+}
+
+/// Render the stats response line (no trailing newline):
+/// `{"stats": {"batches": .., "errors": .., "padded_rows": ..,
+/// "points": .., "requests": .., "saturated": ..}}`. `batches` is the
+/// batcher's device-call count; `saturated` is the acceptor-side
+/// connection-rejection count (tracked outside the batcher).
+pub fn stats_line(stats: &crate::serve::batcher::BatcherStats, saturated: u64) -> String {
+    let mut inner = BTreeMap::new();
+    inner.insert("requests".to_string(), Json::Num(stats.requests as f64));
+    inner.insert("points".to_string(), Json::Num(stats.points as f64));
+    inner.insert("batches".to_string(), Json::Num(stats.device_calls as f64));
+    inner.insert("padded_rows".to_string(), Json::Num(stats.padded_rows as f64));
+    inner.insert("errors".to_string(), Json::Num(stats.errors as f64));
+    inner.insert("saturated".to_string(), Json::Num(saturated as f64));
+    let mut obj = BTreeMap::new();
+    obj.insert("stats".to_string(), Json::Obj(inner));
+    Json::Obj(obj).to_string()
 }
 
 /// Error string of the typed saturation rejection: sent (with id 0 —
@@ -156,6 +202,42 @@ mod tests {
         assert!(Request::parse(r#"{"id": 1, "points": []}"#).is_err());
         assert!(Request::parse(r#"{"id": 1, "points": [["a"]]}"#).is_err());
         assert!(Request::parse(r#"{"id": -3, "points": [[1]]}"#).is_err());
+    }
+
+    #[test]
+    fn stats_request_parses_and_assign_still_routes() {
+        assert_eq!(ClientRequest::parse(r#"{"stats": true}"#).unwrap(), ClientRequest::Stats);
+        // stats must be literally true — anything else is a normal
+        // (here: malformed) request
+        assert!(ClientRequest::parse(r#"{"stats": false}"#).is_err());
+        assert!(ClientRequest::parse(r#"{"stats": 1}"#).is_err());
+        match ClientRequest::parse(r#"{"id": 3, "points": [[1.0, 2.0]]}"#).unwrap() {
+            ClientRequest::Assign(r) => assert_eq!(r.id, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(ClientRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn stats_line_renders_every_counter() {
+        let stats = crate::serve::batcher::BatcherStats {
+            requests: 10,
+            points: 640,
+            device_calls: 2,
+            padded_rows: 55,
+            errors: 1,
+        };
+        let line = stats_line(&stats, 7);
+        let j = Json::parse(&line).unwrap();
+        let s = j.get("stats").expect("stats object");
+        assert_eq!(s.get("requests").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(s.get("points").and_then(Json::as_f64), Some(640.0));
+        assert_eq!(s.get("batches").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(s.get("padded_rows").and_then(Json::as_f64), Some(55.0));
+        assert_eq!(s.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(7.0));
+        // one line, no embedded newlines (line-JSON protocol)
+        assert!(!line.contains('\n'));
     }
 
     #[test]

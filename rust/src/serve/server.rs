@@ -12,12 +12,12 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::Result;
-use crate::serve::batcher::{Batcher, BatcherConfig, Job};
-use crate::serve::protocol::{Request, Response};
+use crate::serve::batcher::{Batcher, BatcherConfig, BatcherStats, Job};
+use crate::serve::protocol::{self, ClientRequest, Response};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -102,9 +102,18 @@ pub fn serve(
 
     let (queue_tx, queue_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
 
+    // live counters for the {"stats": true} probe: the batcher mirrors
+    // its counters here after every flush; the acceptor counts
+    // saturation rejections. Connection threads answer stats requests
+    // from these directly — no batcher round trip, and the probe keeps
+    // working even if the batcher thread died.
+    let stats_shared = Arc::new(Mutex::new(BatcherStats::default()));
+    let saturated = Arc::new(AtomicU64::new(0));
+
     // batcher thread owns the (non-Send) runtime
     let artifacts = cfg.artifacts_dir.clone();
     let bcfg = cfg.batcher.clone();
+    let stats_for_batcher = stats_shared.clone();
     std::thread::Builder::new()
         .name("parakm-batcher".into())
         .spawn(move || {
@@ -115,6 +124,7 @@ pub fn serve(
                     return;
                 }
             };
+            batcher.publish_to(stats_for_batcher);
             // adapt sync_channel receiver to the batcher loop
             let (tx, rx) = mpsc::channel();
             std::thread::spawn(move || {
@@ -147,12 +157,15 @@ pub fn serve(
                         match ConnPermit::acquire(&active, max_conns) {
                             Some(permit) => {
                                 let q = queue_tx.clone();
+                                let stats = stats_shared.clone();
+                                let saturated = saturated.clone();
                                 std::thread::spawn(move || {
                                     let _permit = permit; // released on exit
-                                    handle_conn(stream, q);
+                                    handle_conn(stream, q, stats, saturated);
                                 });
                             }
                             None => {
+                                saturated.fetch_add(1, Ordering::AcqRel);
                                 // typed rejection, written inline: one
                                 // short line into an empty socket
                                 // buffer cannot block the acceptor
@@ -171,8 +184,14 @@ pub fn serve(
 }
 
 /// Per-connection loop: read request lines, queue jobs, write replies
-/// in completion order (ids let clients correlate).
-fn handle_conn(stream: TcpStream, queue: mpsc::SyncSender<Job>) {
+/// in completion order (ids let clients correlate). `{"stats": true}`
+/// lines are answered inline from the shared counters.
+fn handle_conn(
+    stream: TcpStream,
+    queue: mpsc::SyncSender<Job>,
+    stats: Arc<Mutex<BatcherStats>>,
+    saturated: Arc<AtomicU64>,
+) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -187,20 +206,24 @@ fn handle_conn(stream: TcpStream, queue: mpsc::SyncSender<Job>) {
         if line.trim().is_empty() {
             continue;
         }
-        let response = match Request::parse(&line) {
-            Ok(request) => {
+        let reply_line = match ClientRequest::parse(&line) {
+            Ok(ClientRequest::Stats) => {
+                let snapshot = stats.lock().unwrap().clone();
+                protocol::stats_line(&snapshot, saturated.load(Ordering::Acquire))
+            }
+            Ok(ClientRequest::Assign(request)) => {
                 let (tx, rx) = mpsc::channel();
                 if queue.send(Job { request, reply: tx }).is_err() {
                     break; // batcher gone; drop connection
                 }
                 match rx.recv() {
-                    Ok(r) => r,
+                    Ok(r) => r.to_line(),
                     Err(_) => break,
                 }
             }
-            Err(e) => Response::Err { id: 0, error: e.to_string() },
+            Err(e) => Response::Err { id: 0, error: e.to_string() }.to_line(),
         };
-        if writeln!(writer, "{}", response.to_line()).is_err() {
+        if writeln!(writer, "{reply_line}").is_err() {
             break;
         }
     }
@@ -375,6 +398,58 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
         assert!(ok, "slot never freed after client disconnect");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_probe_reports_counters() {
+        use crate::util::json::Json;
+        // never-existing artifacts dir: native fallback, artifact-free
+        let dir = std::env::temp_dir().join("parakm_server_tests/no_artifacts_here");
+        let ds = MixtureSpec::paper_3d(4).generate(500, 3);
+        let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            artifacts_dir: dir,
+            max_conns: 1,
+            ..Default::default()
+        };
+        let server = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
+
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        // a fresh server reports zeros
+        writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let s = j.get("stats").expect("stats object");
+        assert_eq!(s.get("requests").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(0.0));
+
+        // one assignment, one saturated rejection...
+        writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0], [1.0, 1.0, 1.0]]}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }), "{line}");
+        let rej = TcpStream::connect(server.local_addr).unwrap();
+        let mut rej_reader = BufReader::new(rej);
+        line.clear();
+        rej_reader.read_line(&mut line).unwrap();
+        assert!(Response::parse(&line).unwrap().is_saturated(), "{line}");
+
+        // ...and the probe reflects both on the still-open connection
+        writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let s = j.get("stats").expect("stats object");
+        assert_eq!(s.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("points").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(s.get("batches").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(1.0));
+        assert!(s.get("padded_rows").and_then(Json::as_f64).unwrap() >= 0.0, "{line}");
         server.shutdown();
     }
 

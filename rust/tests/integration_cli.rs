@@ -133,3 +133,180 @@ fn gen_data_csv_roundtrip() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("300 points, 2D"));
 }
+
+#[test]
+fn save_model_roundtrips_byte_exact() {
+    let model_path = tmp("cli_model.pkm");
+    let out = parakm()
+        .args([
+            "run", "--synthetic", "3d:2000", "--engine", "serial", "--k", "4", "--seed", "7",
+            "--save-model",
+        ])
+        .arg(&model_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("model       :"));
+
+    let model = parakmeans::data::io::read_model(&model_path).unwrap();
+    assert_eq!((model.k, model.dim, model.seed), (4, 3, 7));
+    assert_eq!(model.engine, "serial");
+    assert!(model.iterations > 0);
+
+    // the persisted centroids are bit-exact against retraining in-process
+    let ds = parakmeans::eval::paper_dataset(3, 2000);
+    let retrained = parakmeans::kmeans::serial::run(
+        &ds,
+        &parakmeans::kmeans::KmeansConfig::new(4).with_seed(7),
+    );
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&model.centroids), bits(&retrained.centroids));
+    assert_eq!(model.sse.to_bits(), retrained.sse.to_bits());
+}
+
+#[test]
+fn serve_loads_model_and_answers_stats_probe() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // train + persist
+    let model_path = tmp("cli_serve_model.pkm");
+    let out = parakm()
+        .args([
+            "run", "--synthetic", "3d:2000", "--engine", "serial", "--k", "4", "--save-model",
+        ])
+        .arg(&model_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // serve from the model (no --input, no retraining); artifacts dir
+    // that never exists forces the native runtime fallback
+    let mut child = parakm()
+        .args(["serve", "--model"])
+        .arg(&model_path)
+        .args(["--addr", "127.0.0.1:0", "--artifacts"])
+        .arg(tmp("no_artifacts_here"))
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+
+    // "serving on <addr>" is println!'d (line-buffered) once ready
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    stdout.read_line(&mut line).unwrap();
+    let result = (|| -> Result<(), String> {
+        let addr = line
+            .strip_prefix("serving on ")
+            .and_then(|r| r.split_whitespace().next())
+            .ok_or_else(|| format!("unexpected serve banner: {line}"))?;
+
+        let mut conn = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        conn.set_read_timeout(Some(std::time::Duration::from_secs(20))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+
+        // assignment served straight from the loaded model
+        writeln!(conn, r#"{{"id": 9, "points": [[0.0, 0.0, 0.0]]}}"#).map_err(|e| e.to_string())?;
+        reader.read_line(&mut reply).map_err(|e| e.to_string())?;
+        if !reply.contains("\"clusters\"") {
+            return Err(format!("expected clusters reply, got: {reply}"));
+        }
+
+        // the observability probe
+        writeln!(conn, r#"{{"stats": true}}"#).map_err(|e| e.to_string())?;
+        reply.clear();
+        reader.read_line(&mut reply).map_err(|e| e.to_string())?;
+        for key in ["\"requests\"", "\"points\"", "\"batches\"", "\"padded_rows\"", "\"saturated\""]
+        {
+            if !reply.contains(key) {
+                return Err(format!("stats line missing {key}: {reply}"));
+            }
+        }
+        Ok(())
+    })();
+    let _ = child.kill();
+    let _ = child.wait();
+    result.unwrap();
+}
+
+#[test]
+fn worker_and_dist_leader_roundtrip_via_cli() {
+    use std::io::{BufRead, BufReader};
+
+    let data = tmp("cli_dist.pkd");
+    let out = parakm()
+        .args(["gen-data", "--dim", "2", "--n", "3000", "--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // two worker processes, each owning half the file, ephemeral ports
+    let mut spawn_worker = |shard: &str| {
+        let mut child = parakm()
+            .args(["worker", "--listen", "127.0.0.1:0", "--input"])
+            .arg(&data)
+            .args(["--shard", shard, "--once"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .unwrap();
+        let mut stdout = BufReader::new(child.stdout.take().unwrap());
+        let mut line = String::new();
+        stdout.read_line(&mut line).unwrap();
+        let addr = line
+            .strip_prefix("worker listening on ")
+            .and_then(|r| r.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line}"))
+            .to_string();
+        (child, addr)
+    };
+    let (mut w0, addr0) = spawn_worker("0/2");
+    let (mut w1, addr1) = spawn_worker("1/2");
+
+    let dist_assign = tmp("cli_dist_assign.csv");
+    let out = parakm()
+        .args(["run", "--engine", "dist", "--workers"])
+        .arg(format!("{addr0},{addr1}"))
+        .args(["--k", "4", "--seed", "42", "--assign-out"])
+        .arg(&dist_assign)
+        .output()
+        .unwrap();
+    let _ = w0.wait();
+    let _ = w1.wait();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("engine      : dist"), "{text}");
+    assert!(text.contains("workers     : 2"), "{text}");
+    assert!(text.contains("wire        :"), "{text}");
+
+    // bit-identity at the CLI level: same assignment CSV as threads p=2
+    let threads_assign = tmp("cli_threads_assign.csv");
+    let out = parakm()
+        .args([
+            "run", "--engine", "threads", "--threads", "2", "--sched", "static", "--k", "4",
+            "--seed", "42", "--input",
+        ])
+        .arg(&data)
+        .arg("--assign-out")
+        .arg(&threads_assign)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&dist_assign).unwrap(),
+        std::fs::read(&threads_assign).unwrap(),
+        "dist and threads assignment files differ"
+    );
+}
+
+#[test]
+fn dist_leader_rejects_missing_workers_flag() {
+    let out = parakm()
+        .args(["run", "--engine", "dist", "--k", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--workers"));
+}

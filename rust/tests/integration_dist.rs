@@ -1,0 +1,283 @@
+//! Integration: the distributed engine end-to-end over loopback TCP —
+//! the DESIGN.md §10 contracts in executable form.
+//!
+//! Bit-identity: `dist(S)` must reproduce `threads(p = S)` and
+//! `oocore(shards = S)` bit-for-bit (assignments, centroid bits, SSE
+//! bits, iteration history) for S ∈ {1, 2, 4} on the paper's 2D and 3D
+//! GMM families, regardless of worker reply timing. CI runs this suite
+//! again with `PARAKM_KERNEL=scalar` forced, so tier dispatch cannot
+//! hide a divergence.
+//!
+//! Fault injection: a worker dropping mid-iteration, a truncated frame,
+//! and a wrong-dimension shard must each surface the matching typed
+//! [`Error::Cluster`] variant promptly — the leader fails fast, never
+//! hangs.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use parakmeans::cluster::wire::{self, Frame, WIRE_VERSION};
+use parakmeans::cluster::{LoopbackCluster, ShardWorker};
+use parakmeans::data::source::{ChunkReader, DataSource, MemorySource, OwnedMemorySource};
+use parakmeans::data::{Dataset, MixtureSpec};
+use parakmeans::error::ClusterError;
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{init, parallel, serial, KmeansConfig};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::Error;
+
+fn opts() -> DistOpts {
+    DistOpts { connect_timeout: Duration::from_secs(5), io_timeout: Duration::from_secs(5) }
+}
+
+/// The acceptance matrix: dist(S) ≡ threads(p=S) ≡ oocore(shards=S),
+/// bit for bit, on one paper dataset.
+fn check_identity_matrix(ds: &Dataset, k: usize, what: &str) {
+    let cfg = KmeansConfig::new(k).with_seed(7);
+    let mu0 = init::initialize(ds, k, cfg.init, cfg.seed);
+    for s in [1usize, 2, 4] {
+        let cluster = LoopbackCluster::spawn_dataset(ds, s, 257).unwrap();
+        let run = dist::run_from(&cluster.addrs, &cfg, &opts(), &mu0).unwrap();
+        cluster.join().unwrap();
+
+        let threads = parallel::run_from(ds, &cfg, s, parallel::MergeMode::Leader, &mu0);
+        assert_bit_identical(&run.result, &threads, &format!("{what}: dist({s}) vs threads"));
+
+        let src = MemorySource::new(ds);
+        let oocore =
+            streaming::run_from(&src, &cfg, &StreamOpts { shards: s, chunk_rows: 401 }, &mu0)
+                .unwrap();
+        assert_bit_identical(&run.result, &oocore, &format!("{what}: dist({s}) vs oocore"));
+
+        // telemetry is aligned with the iteration history
+        assert_eq!(run.net.per_iter.len(), run.result.iterations, "{what}: telemetry");
+        assert_eq!(run.net.workers, s, "{what}: worker count");
+    }
+}
+
+#[test]
+fn dist_bit_identical_to_threads_and_oocore_paper_2d() {
+    let ds = parakmeans::eval::paper_dataset(2, 4003);
+    check_identity_matrix(&ds, 8, "paper 2D");
+}
+
+#[test]
+fn dist_bit_identical_to_threads_and_oocore_paper_3d() {
+    let ds = parakmeans::eval::paper_dataset(3, 3001);
+    check_identity_matrix(&ds, 4, "paper 3D");
+}
+
+#[test]
+fn full_run_with_init_matches_serial() {
+    // dist::run (leader-side gather init) == serial::run (resident
+    // init): identical index sampling makes the whole pipelines
+    // coincide, exactly as for the out-of-core engine
+    let ds = parakmeans::eval::paper_dataset(3, 1500);
+    let cfg = KmeansConfig::new(4).with_seed(21);
+    let reference = serial::run(&ds, &cfg);
+    let cluster = LoopbackCluster::spawn_dataset(&ds, 1, 128).unwrap();
+    let run = dist::run(&cluster.addrs, &cfg, &opts()).unwrap();
+    cluster.join().unwrap();
+    assert_bit_identical(&run.result, &reference, "dist::run vs serial::run");
+}
+
+// ---- reply-order independence ------------------------------------------
+
+/// A [`DataSource`] that delays every reader open — making its worker
+/// reliably the *last* to reply each iteration.
+struct SlowSource {
+    inner: OwnedMemorySource,
+    delay: Duration,
+}
+
+impl DataSource for SlowSource {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn reader(
+        &self,
+        lo: usize,
+        hi: usize,
+        chunk_rows: usize,
+    ) -> parakmeans::Result<Box<dyn ChunkReader + '_>> {
+        std::thread::sleep(self.delay);
+        self.inner.reader(lo, hi, chunk_rows)
+    }
+
+    fn describe(&self) -> String {
+        format!("slow({})", self.inner.describe())
+    }
+}
+
+#[test]
+fn reply_arrival_order_cannot_change_results() {
+    // shard 0 is artificially the slowest: replies arrive 1, 2, 0 every
+    // iteration, yet the fold is by shard index — results must equal
+    // the undelayed run bit-for-bit
+    let ds = parakmeans::eval::paper_dataset(2, 1803);
+    let cfg = KmeansConfig::new(8).with_seed(5).with_max_iters(12);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+
+    let baseline_cluster = LoopbackCluster::spawn_dataset(&ds, 3, 256).unwrap();
+    let baseline = dist::run_from(&baseline_cluster.addrs, &cfg, &opts(), &mu0).unwrap();
+    baseline_cluster.join().unwrap();
+
+    let ranges = parakmeans::data::dataset::shard_ranges(ds.len(), 3);
+    let mut workers = Vec::new();
+    for (i, &(lo, hi)) in ranges.iter().enumerate() {
+        let shard = Dataset::from_vec(ds.rows(lo, hi).to_vec(), ds.dim()).unwrap();
+        let inner = OwnedMemorySource::new(shard);
+        let src: Box<dyn DataSource + Send + Sync> = if i == 0 {
+            Box::new(SlowSource { inner, delay: Duration::from_millis(10) })
+        } else {
+            Box::new(inner)
+        };
+        workers.push(ShardWorker::new(src, 256).unwrap());
+    }
+    let cluster = LoopbackCluster::spawn(workers).unwrap();
+    let delayed = dist::run_from(&cluster.addrs, &cfg, &opts(), &mu0).unwrap();
+    cluster.join().unwrap();
+
+    assert_bit_identical(&delayed.result, &baseline.result, "delayed shard 0 vs baseline");
+}
+
+// ---- fault injection ----------------------------------------------------
+
+/// Short timeouts so every fault must surface fast.
+fn fault_opts() -> DistOpts {
+    DistOpts { connect_timeout: Duration::from_secs(2), io_timeout: Duration::from_secs(2) }
+}
+
+/// A hand-rolled fake worker: answers the handshake like a real shard,
+/// then misbehaves per `script` on the first `Assign`.
+fn fake_worker(rows: u64, dim: u32, script: FaultScript) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        // handshake: Hello -> ShardSpec
+        match wire::read_frame(&mut stream, "hello").unwrap().0 {
+            Frame::Hello { version } => assert_eq!(version, WIRE_VERSION),
+            other => panic!("fake worker: unexpected {other:?}"),
+        }
+        wire::write_frame(&mut stream, &Frame::ShardSpec { rows, dim }).unwrap();
+        // wait for the first Assign, then misbehave
+        let _ = wire::read_frame(&mut stream, "assign");
+        match script {
+            FaultScript::DropConnection => drop(stream),
+            FaultScript::TruncatedFrame => {
+                use std::io::Write as _;
+                // declare a 1000-byte Partials frame, send 10 bytes,
+                // vanish
+                let mut bytes = Vec::new();
+                bytes.extend_from_slice(&1000u32.to_le_bytes());
+                bytes.push(4); // Partials type byte
+                bytes.extend_from_slice(&[0u8; 9]);
+                stream.write_all(&bytes).unwrap();
+                stream.flush().unwrap();
+                drop(stream);
+            }
+            FaultScript::GarbageFrame => {
+                use std::io::Write as _;
+                // well-formed length, unknown type byte
+                stream.write_all(&[2u8, 0, 0, 0, 0xEE, 0x00]).unwrap();
+                stream.flush().unwrap();
+                // keep the socket open: the error must come from the
+                // frame decoder, not a disconnect
+                std::thread::sleep(Duration::from_secs(4));
+            }
+            FaultScript::SilentStall => {
+                // never reply: the leader's read timeout must fire
+                std::thread::sleep(Duration::from_secs(8));
+            }
+        }
+    });
+    addr
+}
+
+#[derive(Clone, Copy)]
+enum FaultScript {
+    DropConnection,
+    TruncatedFrame,
+    GarbageFrame,
+    SilentStall,
+}
+
+/// One healthy loopback worker + one scripted fake, shard order
+/// [healthy, fake]; returns the leader's error and how long it took.
+fn run_against_fault(script: FaultScript) -> (Error, Duration) {
+    let ds = MixtureSpec::paper_2d(4).generate(600, 3);
+    let half = Dataset::from_vec(ds.rows(0, 300).to_vec(), 2).unwrap();
+    let healthy = ShardWorker::new(Box::new(OwnedMemorySource::new(half)), 128).unwrap();
+    let cluster = LoopbackCluster::spawn(vec![healthy]).unwrap();
+    let fake = fake_worker(300, 2, script);
+    let addrs = vec![cluster.addrs[0].clone(), fake];
+
+    let cfg = KmeansConfig::new(4).with_seed(1);
+    let mu0: Vec<f32> = ds.rows(0, 4).to_vec();
+    let t0 = Instant::now();
+    let err = dist::run_from(&addrs, &cfg, &fault_opts(), &mu0).unwrap_err();
+    let elapsed = t0.elapsed();
+    // the leader dropped its connections: the healthy worker ends its
+    // session at the boundary instead of hanging
+    cluster.join().unwrap();
+    (err, elapsed)
+}
+
+#[test]
+fn worker_drop_mid_iteration_is_prompt_connection_error() {
+    let (err, elapsed) = run_against_fault(FaultScript::DropConnection);
+    assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+    assert!(elapsed < Duration::from_secs(10), "leader stalled {elapsed:?}");
+}
+
+#[test]
+fn truncated_frame_is_prompt_frame_error() {
+    let (err, elapsed) = run_against_fault(FaultScript::TruncatedFrame);
+    assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+    assert!(err.to_string().contains("truncated"), "{err}");
+    assert!(elapsed < Duration::from_secs(10), "leader stalled {elapsed:?}");
+}
+
+#[test]
+fn garbage_frame_type_is_prompt_frame_error() {
+    let (err, elapsed) = run_against_fault(FaultScript::GarbageFrame);
+    assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+    assert!(err.to_string().contains("unknown frame type"), "{err}");
+    assert!(elapsed < Duration::from_secs(10), "leader stalled {elapsed:?}");
+}
+
+#[test]
+fn silent_worker_hits_the_read_timeout_not_a_hang() {
+    let (err, elapsed) = run_against_fault(FaultScript::SilentStall);
+    assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+    assert!(err.to_string().contains("timed out"), "{err}");
+    // io_timeout is 2s; well under the fake's 8s stall proves the
+    // timeout fired rather than the worker finally hanging up
+    assert!(elapsed < Duration::from_secs(6), "leader stalled {elapsed:?}");
+}
+
+#[test]
+fn wrong_dimension_shard_fails_the_handshake() {
+    // shard 0 is 2D, shard 1 is 3D: the leader must reject the cluster
+    // before any iteration runs
+    let d2 = MixtureSpec::paper_2d(4).generate(200, 1);
+    let d3 = MixtureSpec::paper_3d(4).generate(200, 1);
+    let w2 = ShardWorker::new(Box::new(OwnedMemorySource::new(d2)), 64).unwrap();
+    let w3 = ShardWorker::new(Box::new(OwnedMemorySource::new(d3)), 64).unwrap();
+    let cluster = LoopbackCluster::spawn(vec![w2, w3]).unwrap();
+
+    let cfg = KmeansConfig::new(2).with_seed(1);
+    let t0 = Instant::now();
+    let err = dist::run(&cluster.addrs, &cfg, &fault_opts()).unwrap_err();
+    assert!(matches!(err, Error::Cluster(ClusterError::Shape(_))), "{err}");
+    assert!(err.to_string().contains("disagree"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    cluster.join().unwrap();
+}
