@@ -1,0 +1,223 @@
+//! Distance-policy bench: `exact` (subtract-square) vs `dot`
+//! (norm-trick FMA micro-kernel) per (policy × tier × (n, d, k)) —
+//! the DESIGN.md §11 perf surface, plus the cross-policy correctness
+//! check per cell (identical assignments up to documented tie
+//! tolerance; serial-engine cells additionally pin identical iteration
+//! counts and SSE relative error < 1e-5 on the paper GMM suites).
+//!
+//!     cargo bench --bench distance_policy
+//!
+//! Every timed cell lands in `results/bench.json` (the machine-
+//! readable perf trajectory published as a CI artifact) with ns/point
+//! and the speedup vs the exact-scalar baseline of the same cell.
+//!
+//! Knobs (also used by CI bench-smoke):
+//!   PARAKM_BENCH_N        rows per case (default 200000)
+//!   PARAKM_BENCH_WARMUP / PARAKM_BENCH_REPEATS / PARAKM_BENCH_CAP_SECS
+
+use parakmeans::config::DistancePolicy;
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::{init, serial, KmeansConfig};
+use parakmeans::linalg::kernel::{self, KernelTier};
+use parakmeans::linalg::sqdist_f64;
+use parakmeans::util::bench::{
+    append_bench_json, bench_json_row, report, run_case, BenchOpts,
+};
+use parakmeans::util::json::Json;
+
+/// Tiers to sweep: scalar always, plus the *active* tier — so a
+/// `PARAKM_KERNEL=scalar`-forced run (CI) genuinely sweeps only the
+/// reference tier instead of re-timing the detected SIMD tier.
+fn tiers() -> Vec<KernelTier> {
+    let mut t = vec![KernelTier::Scalar];
+    if kernel::active_tier() != KernelTier::Scalar {
+        t.push(kernel::active_tier());
+    }
+    t
+}
+
+fn run_exact(rows: &[f32], d: usize, mu: &[f32], k: usize, tier: KernelTier) -> Vec<i32> {
+    let n = rows.len() / d;
+    let mut assign = vec![0i32; n];
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    let mut sse = 0.0f64;
+    kernel::assign_accumulate(rows, d, mu, k, &mut assign, &mut sums, &mut counts, &mut sse, tier);
+    assign
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_dot(
+    rows: &[f32],
+    d: usize,
+    mu: &[f32],
+    k: usize,
+    xn: &[f32],
+    cn: &[f32],
+    tier: KernelTier,
+) -> Vec<i32> {
+    let n = rows.len() / d;
+    let mut assign = vec![0i32; n];
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    let mut sse = 0.0f64;
+    kernel::assign_accumulate_dot(
+        rows, d, mu, k, xn, cn, &mut assign, &mut sums, &mut counts, &mut sse, tier,
+    );
+    assign
+}
+
+/// Cross-policy check: assignments must agree except where the two
+/// candidate distances are within the documented dot rounding
+/// tolerance (a razor-thin tie either formulation may break).
+fn cross_check(rows: &[f32], d: usize, mu: &[f32], xn: &[f32], a: &[i32], b: &[i32], cell: &str) {
+    for i in 0..a.len() {
+        if a[i] == b[i] {
+            continue;
+        }
+        let p = &rows[i * d..(i + 1) * d];
+        let da = sqdist_f64(p, &mu[a[i] as usize * d..(a[i] as usize + 1) * d]);
+        let db = sqdist_f64(p, &mu[b[i] as usize * d..(b[i] as usize + 1) * d]);
+        let slack = 1e-4 * (xn[i] as f64 + 1.0);
+        assert!(
+            (da - db).abs() <= slack,
+            "{cell}: point {i} exact→{} dot→{} but distances {da} vs {db} are not a near-tie",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n = opts.n;
+    println!("== distance-policy bench (n={n}) ==");
+    println!("detected tier: {}  active tier: {}", kernel::detect(), kernel::active_tier());
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    // ---- kernel-level sweep: policy × tier × (d, k) --------------------
+    for (dim, comps) in [(2usize, 8usize), (3, 4)] {
+        let spec = if dim == 2 {
+            MixtureSpec::paper_2d(comps)
+        } else {
+            MixtureSpec::paper_3d(comps)
+        };
+        let ds = spec.generate(n, 0xD157 + dim as u64);
+        let rows = ds.raw();
+        let xn = kernel::row_norms_vec(rows, dim);
+        for k in [4usize, 8, 16] {
+            let mu: Vec<f32> = ds.rows(0, k).to_vec();
+            let cn = kernel::row_norms_vec(&mu, dim);
+
+            // correctness per cell, every tier, before any timing
+            let a_exact = run_exact(rows, dim, &mu, k, KernelTier::Scalar);
+            for tier in tiers() {
+                let a_dot = run_dot(rows, dim, &mu, k, &xn, &cn, tier);
+                let cell = format!("d={dim} k={k} {tier}");
+                cross_check(rows, dim, &mu, &xn, &a_exact, &a_dot, &cell);
+            }
+
+            let mut exact_scalar_ns = 0.0f64;
+            for tier in tiers() {
+                let s = run_case(&format!("exact {tier} d={dim} k={k:<2} n={n}"), &opts, || {
+                    run_exact(rows, dim, &mu, k, tier)
+                });
+                report(&s);
+                let ns = s.median() / n as f64 * 1e9;
+                if tier == KernelTier::Scalar {
+                    exact_scalar_ns = ns;
+                }
+                json_rows.push(bench_json_row(
+                    "distance_policy",
+                    "kernel",
+                    "exact",
+                    &tier.to_string(),
+                    n,
+                    dim,
+                    k,
+                    ns,
+                    if ns > 0.0 { exact_scalar_ns / ns } else { 0.0 },
+                ));
+
+                let s = run_case(&format!("dot   {tier} d={dim} k={k:<2} n={n}"), &opts, || {
+                    run_dot(rows, dim, &mu, k, &xn, &cn, tier)
+                });
+                report(&s);
+                let ns = s.median() / n as f64 * 1e9;
+                json_rows.push(bench_json_row(
+                    "distance_policy",
+                    "kernel",
+                    "dot",
+                    &tier.to_string(),
+                    n,
+                    dim,
+                    k,
+                    ns,
+                    if ns > 0.0 { exact_scalar_ns / ns } else { 0.0 },
+                ));
+                println!(
+                    "SPEEDUP d={dim} k={k:<2} {tier}  dot/exact-scalar = {:.2}x",
+                    if ns > 0.0 { exact_scalar_ns / ns } else { 0.0 }
+                );
+            }
+        }
+    }
+
+    // ---- engine-level cells: the acceptance contract on the paper
+    // suites — identical assignments and iteration counts, SSE relative
+    // error < 1e-5 (serial engine, active tier) ------------------------
+    let engine_n = n.min(20_000);
+    for (dim, k) in [(2usize, 8usize), (3, 4)] {
+        let spec = if dim == 2 { MixtureSpec::paper_2d(k) } else { MixtureSpec::paper_3d(k) };
+        let ds = spec.generate(engine_n, 42);
+        let cfg = KmeansConfig::new(k).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let exact = serial::run_from(&ds, &cfg, &mu0);
+        let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+        let dot = serial::run_from(&ds, &dcfg, &mu0);
+        assert_eq!(dot.assign, exact.assign, "paper {dim}D: dot assignments diverged");
+        assert_eq!(dot.iterations, exact.iterations, "paper {dim}D: iteration counts differ");
+        let rel = (dot.sse - exact.sse).abs() / exact.sse.max(1.0);
+        assert!(rel < 1e-5, "paper {dim}D: sse relative error {rel}");
+        println!(
+            "CHECK paper {dim}D k={k}: dot == exact over {} iterations (sse rel err {rel:.2e})",
+            exact.iterations
+        );
+
+        let tier_label = kernel::active_tier().to_string();
+        for (policy, pcfg) in [("exact", cfg.clone()), ("dot", dcfg.clone())] {
+            let s = run_case(
+                &format!("serial {policy} paper{dim}d k={k} n={engine_n}"),
+                &opts,
+                || serial::run_from(&ds, &pcfg, &mu0),
+            );
+            report(&s);
+            let iters = exact.iterations.max(1);
+            json_rows.push(bench_json_row(
+                "distance_policy",
+                "serial",
+                policy,
+                &tier_label,
+                engine_n,
+                dim,
+                k,
+                s.median() / (engine_n * iters) as f64 * 1e9,
+                0.0,
+            ));
+        }
+    }
+
+    // a PARAKM_KERNEL-forced run (the CI scalar pass) re-measures
+    // cells the unforced run already wrote — keep the published
+    // trajectory free of duplicate conflicting rows by only appending
+    // from the auto-dispatch run
+    if std::env::var("PARAKM_KERNEL").is_ok() {
+        println!("PARAKM_KERNEL forced: skipping results/bench.json append (checks still ran)");
+        return;
+    }
+    let json_path = parakmeans::eval::results_dir().join("bench.json");
+    match append_bench_json(&json_path, json_rows) {
+        Ok(()) => println!("perf trajectory appended to {}", json_path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", json_path.display()),
+    }
+}

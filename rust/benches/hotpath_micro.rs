@@ -22,7 +22,9 @@ use parakmeans::linalg::kernel;
 use parakmeans::rng::Pcg64;
 use parakmeans::runtime::manifest::ExecKind;
 use parakmeans::runtime::Runtime;
-use parakmeans::util::bench::{report, run_case, BenchOpts};
+use parakmeans::util::bench::{
+    append_bench_json, bench_json_row, report, run_case, BenchOpts,
+};
 
 fn main() {
     let opts = BenchOpts::from_env();
@@ -30,6 +32,10 @@ fn main() {
     println!("kernel tier: {} (detected: {})", kernel::active_tier(), kernel::detect());
 
     // ---- assign_accumulate throughput ---------------------------------
+    // each case also lands in results/bench.json — the machine-readable
+    // perf trajectory CI publishes so future PRs can diff ns/point
+    let mut json_rows = Vec::new();
+    let tier_label = kernel::active_tier().to_string();
     let n = opts.n;
     for (d, ks) in [(2usize, [4usize, 8, 11]), (3, [4, 8, 11])] {
         let mut rng = Pcg64::new(1, 0);
@@ -46,7 +52,24 @@ fn main() {
                 "         -> {:.1} Mpoints/s",
                 n as f64 / s.median() / 1e6
             );
+            json_rows.push(bench_json_row(
+                "hotpath_micro",
+                "kernel",
+                "exact",
+                &tier_label,
+                n,
+                d,
+                k,
+                s.median() / n as f64 * 1e9,
+                0.0,
+            ));
         }
+    }
+    let json_path = parakmeans::eval::results_dir().join("bench.json");
+    if let Err(e) = append_bench_json(&json_path, json_rows) {
+        eprintln!("warning: could not write {}: {e}", json_path.display());
+    } else {
+        println!("perf trajectory appended to {}", json_path.display());
     }
 
     // ---- merge cost (leader fold) --------------------------------------

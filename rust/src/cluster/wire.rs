@@ -16,7 +16,7 @@
 //!   Gather{indices}       ──►                        (init only)
 //!                         ◄──    Rows{dim, rows}
 //!   ┌ per iteration ───────────────────────────────┐
-//!   │ Assign{k, dim, centroids}  ──►               │
+//!   │ Assign{k, dim, policy, μ}  ──►               │
 //!   │                    ◄──  Partials{counts,     │
 //!   │                          sums, sse}          │
 //!   └──────────────────────────────────────────────┘
@@ -34,10 +34,12 @@
 use std::io::{Read, Write};
 
 use crate::error::{ClusterError, Error, Result};
+use crate::linalg::kernel::DistancePolicy;
 
 /// Protocol version carried in [`Frame::Hello`]; bumped on any frame
 /// layout change so mismatched binaries fail the handshake typed.
-pub const WIRE_VERSION: u16 = 1;
+/// v2: `Assign` carries the distance policy byte (DESIGN.md §11).
+pub const WIRE_VERSION: u16 = 2;
 
 /// Upper bound on `len` a reader will accept (1 GiB): a corrupt or
 /// hostile length prefix becomes [`ClusterError::Frame`] instead of a
@@ -63,8 +65,9 @@ pub enum Frame {
     /// Worker → leader: shard size and dimensionality.
     ShardSpec { rows: u64, dim: u32 },
     /// Leader → worker: compute one E-step against these centroids
-    /// (`k × dim` row-major f32).
-    Assign { k: u32, dim: u32, centroids: Vec<f32> },
+    /// (`k × dim` row-major f32) under the given distance policy
+    /// (0 = exact, 1 = dot on the wire).
+    Assign { k: u32, dim: u32, policy: DistancePolicy, centroids: Vec<f32> },
     /// Worker → leader: the shard's partial statistics for the last
     /// `Assign` (`k` counts, `k × dim` f64 sums, shard SSE).
     Partials { k: u32, dim: u32, counts: Vec<u64>, sums: Vec<f64>, sse: f64 },
@@ -235,9 +238,13 @@ impl Frame {
                 push_u64(&mut b, *rows);
                 push_u32(&mut b, *dim);
             }
-            Frame::Assign { k, dim, centroids } => {
+            Frame::Assign { k, dim, policy, centroids } => {
                 push_u32(&mut b, *k);
                 push_u32(&mut b, *dim);
+                b.push(match policy {
+                    DistancePolicy::Exact => 0,
+                    DistancePolicy::Dot => 1,
+                });
                 for v in centroids {
                     b.extend_from_slice(&v.to_le_bytes());
                 }
@@ -286,10 +293,17 @@ impl Frame {
             T_ASSIGN => {
                 let k = c.u32()?;
                 let dim = c.u32()?;
+                let policy = match c.take(1)?[0] {
+                    0 => DistancePolicy::Exact,
+                    1 => DistancePolicy::Dot,
+                    other => {
+                        return Err(frame_err(format!("Assign: unknown distance policy {other}")))
+                    }
+                };
                 let want = (k as usize)
                     .checked_mul(dim as usize)
                     .ok_or_else(|| frame_err("Assign: k × dim overflows"))?;
-                Frame::Assign { k, dim, centroids: c.f32s(want)? }
+                Frame::Assign { k, dim, policy, centroids: c.f32s(want)? }
             }
             T_PARTIALS => {
                 let k = c.u32()?;
@@ -411,7 +425,18 @@ mod tests {
     fn every_frame_roundtrips() {
         roundtrip(Frame::Hello { version: WIRE_VERSION });
         roundtrip(Frame::ShardSpec { rows: 12345, dim: 3 });
-        roundtrip(Frame::Assign { k: 2, dim: 3, centroids: vec![1.5, -2.0, 0.0, 3.25, 4.0, 5.0] });
+        roundtrip(Frame::Assign {
+            k: 2,
+            dim: 3,
+            policy: DistancePolicy::Exact,
+            centroids: vec![1.5, -2.0, 0.0, 3.25, 4.0, 5.0],
+        });
+        roundtrip(Frame::Assign {
+            k: 1,
+            dim: 2,
+            policy: DistancePolicy::Dot,
+            centroids: vec![0.5, -0.5],
+        });
         roundtrip(Frame::Partials {
             k: 2,
             dim: 2,
@@ -432,7 +457,16 @@ mod tests {
         // the bit-identity contract depends on lossless float transport
         let weird = vec![f32::MIN_POSITIVE, -0.0, f32::NAN, 1.0000001];
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Assign { k: 1, dim: 4, centroids: weird.clone() }).unwrap();
+        write_frame(
+            &mut buf,
+            &Frame::Assign {
+                k: 1,
+                dim: 4,
+                policy: DistancePolicy::Exact,
+                centroids: weird.clone(),
+            },
+        )
+        .unwrap();
         let (f, _) = read_frame(&mut &buf[..], "bits").unwrap();
         match f {
             Frame::Assign { centroids, .. } => {
@@ -488,6 +522,22 @@ mod tests {
         let err = read_frame_opt(&mut &buf[..]).unwrap_err();
         assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
         assert!(err.to_string().contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn unknown_distance_policy_byte_is_typed() {
+        let mut payload = Vec::new();
+        push_u32(&mut payload, 1); // k
+        push_u32(&mut payload, 1); // dim
+        payload.push(9); // bogus policy
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 1 + payload.len() as u32);
+        buf.push(T_ASSIGN);
+        buf.extend_from_slice(&payload);
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("distance policy"), "{err}");
     }
 
     #[test]

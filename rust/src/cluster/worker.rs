@@ -11,7 +11,12 @@
 //! partials are therefore bit-identical to the thread the `oocore`
 //! engine would have run over the same rows — chunk size, kernel tier
 //! and even a mixed-tier cluster (every tier is bit-identical by the
-//! kernel contract) cannot perturb them.
+//! kernel contract) cannot perturb them. That tier clause holds for
+//! the default `exact` distance policy; an `Assign` carrying the `dot`
+//! policy (DESIGN.md §11) computes norm-trick FMA distances — still
+//! chunk-size-independent, with the shard's `‖x‖²` cache built once
+//! per session — but mixed-tier clusters may then differ in last-ulp
+//! SSE.
 //!
 //! A session serves exactly one leader: `Hello` through `Shutdown` (or
 //! the leader closing the connection — workers treat a close at a frame
@@ -27,8 +32,9 @@ use crate::data::dataset::shard_ranges;
 use crate::data::source::DataSource;
 use crate::error::{ClusterError, Error, Result};
 use crate::kmeans::step::PartialStats;
-use crate::kmeans::streaming::stream_shard;
+use crate::kmeans::streaming::{shard_norms, stream_shard};
 use crate::linalg::kernel;
+use crate::linalg::kernel::DistancePolicy;
 
 /// A leader-facing server over one shard of rows.
 pub struct ShardWorker {
@@ -145,6 +151,10 @@ impl ShardWorker {
         let d = self.source.dim();
         let mut assign = vec![-1i32; n];
         let mut stats: Option<PartialStats> = None;
+        // per-shard `‖x‖²` cache for the dot policy: one bounded-memory
+        // pass on the first dot Assign of the session, then every
+        // iteration reuses it (the shard's bytes are fixed)
+        let mut norm_cache: Option<Vec<f32>> = None;
 
         loop {
             let frame = match wire::read_frame_opt(&mut stream)? {
@@ -165,7 +175,7 @@ impl ShardWorker {
                         &Frame::ShardSpec { rows: n as u64, dim: d as u32 },
                     )?;
                 }
-                Frame::Assign { k, dim, centroids } => {
+                Frame::Assign { k, dim, policy, centroids } => {
                     if dim as usize != d {
                         wire::write_frame(
                             &mut stream,
@@ -197,6 +207,29 @@ impl ShardWorker {
                         }
                         slot => slot.insert(PartialStats::zeros(k, d)),
                     };
+                    if policy == DistancePolicy::Dot && norm_cache.is_none() {
+                        match shard_norms(
+                            self.source.as_ref(),
+                            self.lo,
+                            self.hi,
+                            self.chunk_rows,
+                            d,
+                        ) {
+                            Ok(norms) => norm_cache = Some(norms),
+                            Err(e) => {
+                                let msg = format!("shard norm pass failed: {e}");
+                                let _ = wire::write_frame(
+                                    &mut stream,
+                                    &Frame::ErrMsg { message: msg },
+                                );
+                                return Err(e);
+                            }
+                        }
+                    }
+                    let x_norms = match policy {
+                        DistancePolicy::Dot => norm_cache.as_deref(),
+                        DistancePolicy::Exact => None,
+                    };
                     if let Err(e) = stream_shard(
                         self.source.as_ref(),
                         self.lo,
@@ -207,6 +240,8 @@ impl ShardWorker {
                         k,
                         &mut assign,
                         stats,
+                        policy,
+                        x_norms,
                     ) {
                         // tell the leader why before the session dies,
                         // so its error names the worker-side cause
@@ -309,13 +344,45 @@ mod tests {
 
             wire::write_frame(
                 &mut conn,
-                &Frame::Assign { k: 2, dim: 2, centroids: vec![0.0, 0.0, 10.0, 10.0] },
+                &Frame::Assign {
+                    k: 2,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    centroids: vec![0.0, 0.0, 10.0, 10.0],
+                },
             )
             .unwrap();
-            match wire::read_frame(&mut conn, "partials").unwrap().0 {
-                Frame::Partials { k: 2, dim: 2, counts, sums, .. } => {
+            let exact_partials = match wire::read_frame(&mut conn, "partials").unwrap().0 {
+                Frame::Partials { k: 2, dim: 2, counts, sums, sse } => {
                     assert_eq!(counts.iter().sum::<u64>(), 100);
                     assert_eq!(sums.len(), 4);
+                    (counts, sums, sse)
+                }
+                other => panic!("unexpected {other:?}"),
+            };
+
+            // a dot-policy Assign on the same session: the full
+            // partition still comes back, with SSE tolerance-close to
+            // the exact pass (a razor-edge point may pick the other of
+            // two near-equidistant centroids, so counts are not byte-
+            // compared here — integration_distance.rs pins the strong
+            // contract on the converged paper suites)
+            wire::write_frame(
+                &mut conn,
+                &Frame::Assign {
+                    k: 2,
+                    dim: 2,
+                    policy: DistancePolicy::Dot,
+                    centroids: vec![0.0, 0.0, 10.0, 10.0],
+                },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "dot partials").unwrap().0 {
+                Frame::Partials { k: 2, dim: 2, counts, sums, sse } => {
+                    assert_eq!(counts.iter().sum::<u64>(), 100);
+                    assert_eq!(sums.len(), 4);
+                    let rel = (sse - exact_partials.2).abs() / exact_partials.2.max(1.0);
+                    assert!(rel < 1e-3, "dot sse {sse} vs exact {}", exact_partials.2);
                 }
                 other => panic!("unexpected {other:?}"),
             }
@@ -347,7 +414,12 @@ mod tests {
             // 3D centroids at a 2D shard
             wire::write_frame(
                 &mut conn,
-                &Frame::Assign { k: 1, dim: 3, centroids: vec![0.0; 3] },
+                &Frame::Assign {
+                    k: 1,
+                    dim: 3,
+                    policy: DistancePolicy::Exact,
+                    centroids: vec![0.0; 3],
+                },
             )
             .unwrap();
             match wire::read_frame(&mut conn, "err").unwrap().0 {
@@ -357,7 +429,12 @@ mod tests {
             // the session is still alive: a correct Assign now works
             wire::write_frame(
                 &mut conn,
-                &Frame::Assign { k: 1, dim: 2, centroids: vec![0.0; 2] },
+                &Frame::Assign {
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    centroids: vec![0.0; 2],
+                },
             )
             .unwrap();
             assert!(matches!(

@@ -4,6 +4,8 @@
 use crate::error::{Error, Result};
 use crate::linalg::kernel::KernelChoice;
 
+pub use crate::linalg::kernel::DistancePolicy;
+
 /// Which engine executes the Lloyd iterations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
@@ -36,6 +38,16 @@ pub enum Engine {
     /// canonical merge — bit-identical to `oocore`/`threads` at equal
     /// shard counts (DESIGN.md §10).
     Dist,
+}
+
+impl Engine {
+    /// The AOT coordinator engines run their own executables, so the
+    /// pure-rust distance-policy knob (DESIGN.md §11) cannot reach
+    /// their hot path. Single-sourced so every validation site rejects
+    /// the same set — a new engine only needs classifying once.
+    pub fn supports_distance_policy(&self) -> bool {
+        !matches!(self, Engine::Shared | Engine::Offload | Engine::Streaming)
+    }
 }
 
 impl std::str::FromStr for Engine {
@@ -186,6 +198,12 @@ pub struct RunConfig {
     /// entry; `auto` defers to `--kernel` / `PARAKM_KERNEL` /
     /// detection.
     pub kernel: KernelChoice,
+    /// Distance formulation for the pure-rust engines (`--distance`,
+    /// `PARAKM_DISTANCE`; DESIGN.md §11). Defaults to
+    /// [`DistancePolicy::Exact`] — the formulation every documented
+    /// bit-identity contract is stated against; `dot` trades those
+    /// last-ulp guarantees for the norm-trick FMA hot path.
+    pub distance: DistancePolicy,
 }
 
 impl Default for RunConfig {
@@ -204,6 +222,7 @@ impl Default for RunConfig {
             batch: 8192,
             artifacts_dir: "artifacts".into(),
             kernel: KernelChoice::Auto,
+            distance: DistancePolicy::Exact,
         }
     }
 }
@@ -350,5 +369,31 @@ mod tests {
         assert_eq!(c.kernel, KernelChoice::Auto);
         assert_eq!("scalar".parse::<KernelChoice>().unwrap(), KernelChoice::Scalar);
         assert!("mmx".parse::<KernelChoice>().is_err());
+    }
+
+    #[test]
+    fn aot_engines_do_not_support_the_distance_policy_knob() {
+        for e in [Engine::Shared, Engine::Offload, Engine::Streaming] {
+            assert!(!e.supports_distance_policy(), "{e}");
+        }
+        for e in [
+            Engine::Serial,
+            Engine::Threads,
+            Engine::Elkan,
+            Engine::Hamerly,
+            Engine::MiniBatch,
+            Engine::OutOfCore,
+            Engine::Dist,
+        ] {
+            assert!(e.supports_distance_policy(), "{e}");
+        }
+    }
+
+    #[test]
+    fn distance_defaults_to_exact_and_parses() {
+        // Exact is load-bearing: every bit-identity pin assumes it
+        assert_eq!(RunConfig::default().distance, DistancePolicy::Exact);
+        assert_eq!("dot".parse::<DistancePolicy>().unwrap(), DistancePolicy::Dot);
+        assert!("euclid".parse::<DistancePolicy>().is_err());
     }
 }

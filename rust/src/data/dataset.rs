@@ -5,16 +5,30 @@
 //! on the request path) and the cache-friendly layout for the rust
 //! assignment loop.
 
+use std::sync::OnceLock;
+
 use crate::error::{Error, Result};
 
 /// A dense dataset of `n` points in `dim` dimensions.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Dataset {
     dim: usize,
     data: Vec<f32>,
     /// Ground-truth component labels if synthetically generated
     /// (used by ARI/NMI validation, never by the clustering itself).
     pub truth: Option<Vec<i32>>,
+    /// Lazily-computed per-row `‖x‖²` cache for the `dot` distance
+    /// policy ([`Dataset::norms`]) — computed once per dataset, shared
+    /// by every engine iteration. Invalidated by [`Dataset::push`].
+    norms: OnceLock<Vec<f32>>,
+}
+
+/// Equality is over the data (dim, rows, truth) — whether the norm
+/// cache has been materialized is not an observable property.
+impl PartialEq for Dataset {
+    fn eq(&self, other: &Dataset) -> bool {
+        self.dim == other.dim && self.data == other.data && self.truth == other.truth
+    }
 }
 
 impl Dataset {
@@ -29,12 +43,12 @@ impl Dataset {
                 data.len()
             )));
         }
-        Ok(Dataset { dim, data, truth: None })
+        Ok(Dataset { dim, data, truth: None, norms: OnceLock::new() })
     }
 
     /// Empty dataset with reserved capacity.
     pub fn with_capacity(dim: usize, n: usize) -> Dataset {
-        Dataset { dim, data: Vec::with_capacity(dim * n), truth: None }
+        Dataset { dim, data: Vec::with_capacity(dim * n), truth: None, norms: OnceLock::new() }
     }
 
     #[inline(always)]
@@ -73,6 +87,23 @@ impl Dataset {
     pub fn push(&mut self, point: &[f32]) {
         assert_eq!(point.len(), self.dim);
         self.data.extend_from_slice(point);
+        // the cached norms no longer cover every row
+        let _ = self.norms.take();
+    }
+
+    /// Per-row squared norms `‖xᵢ‖²` — the `dot` distance policy's
+    /// point-norm cache (DESIGN.md §11). Computed once on first use
+    /// (one O(n·d) pass), then shared; engines running `exact` never
+    /// pay for it.
+    pub fn norms(&self) -> &[f32] {
+        self.norms
+            .get_or_init(|| crate::linalg::kernel::row_norms_vec(&self.data, self.dim))
+    }
+
+    /// Norms of rows `[lo, hi)` — the shard/chunk view matching
+    /// [`Dataset::rows`].
+    pub fn norms_range(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.norms()[lo..hi]
     }
 
     /// Split into `p` contiguous shards, sizes differing by at most 1
@@ -164,5 +195,26 @@ mod tests {
     fn bounds() {
         let ds = Dataset::from_vec(vec![0.0, 5.0, -2.0, 3.0], 2).unwrap();
         assert_eq!(ds.bounds(), vec![(-2.0, 0.0), (3.0, 5.0)]);
+    }
+
+    #[test]
+    fn norms_cached_and_invalidated_by_push() {
+        let mut ds = Dataset::from_vec(vec![3.0, 4.0, 0.0, 2.0], 2).unwrap();
+        assert_eq!(ds.norms(), &[25.0, 4.0]);
+        // cached: same allocation on re-read
+        let ptr = ds.norms().as_ptr();
+        assert_eq!(ds.norms().as_ptr(), ptr);
+        assert_eq!(ds.norms_range(1, 2), &[4.0]);
+        // push invalidates the cache and the new row is covered
+        ds.push(&[1.0, 1.0]);
+        assert_eq!(ds.norms(), &[25.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn equality_ignores_norm_cache_state() {
+        let a = Dataset::from_vec(vec![1.0, 2.0], 2).unwrap();
+        let b = Dataset::from_vec(vec![1.0, 2.0], 2).unwrap();
+        let _ = a.norms(); // materialize one side only
+        assert_eq!(a, b);
     }
 }

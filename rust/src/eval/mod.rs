@@ -19,7 +19,7 @@ pub mod tables;
 
 use std::path::PathBuf;
 
-use crate::config::{Engine, RunConfig, SchedMode};
+use crate::config::{DistancePolicy, Engine, RunConfig, SchedMode};
 use crate::coordinator::{offload, shared};
 use crate::data::gmm::{workloads, MixtureSpec};
 use crate::data::Dataset;
@@ -126,7 +126,27 @@ pub fn run_engine(
     threads: usize,
     seed: u64,
 ) -> Result<Timed> {
-    let kc = KmeansConfig::new(k).with_seed(seed);
+    run_engine_policy(engine, ds, k, threads, seed, DistancePolicy::Exact)
+}
+
+/// [`run_engine`] under an explicit distance policy. The AOT
+/// coordinator engines (shared/offload/streaming) run their own
+/// executables and only support `exact`; requesting `dot` there is a
+/// typed config error rather than a silent fallback.
+pub fn run_engine_policy(
+    engine: Engine,
+    ds: &Dataset,
+    k: usize,
+    threads: usize,
+    seed: u64,
+    distance: DistancePolicy,
+) -> Result<Timed> {
+    if distance == DistancePolicy::Dot && !engine.supports_distance_policy() {
+        return Err(crate::error::Error::Config(format!(
+            "distance policy dot applies to the pure-rust engines, not `{engine}`"
+        )));
+    }
+    let kc = KmeansConfig::new(k).with_seed(seed).with_distance(distance);
     let t0 = std::time::Instant::now();
     let (secs, raw, result) = match engine {
         Engine::Serial => {
@@ -252,6 +272,18 @@ mod tests {
         assert!(t.converged);
         assert!(t.secs > 0.0);
         assert_eq!(t.assign.len(), 3000);
+    }
+
+    #[test]
+    fn run_engine_policy_dot_matches_exact_and_rejects_aot() {
+        let ds = paper_dataset(3, 2000);
+        let exact = run_engine(Engine::Serial, &ds, 4, 1, 42).unwrap();
+        let dot =
+            run_engine_policy(Engine::Serial, &ds, 4, 1, 42, DistancePolicy::Dot).unwrap();
+        assert_eq!(dot.assign, exact.assign);
+        assert_eq!(dot.iterations, exact.iterations);
+        assert!((dot.sse - exact.sse).abs() / exact.sse.max(1.0) < 1e-5);
+        assert!(run_engine_policy(Engine::Offload, &ds, 4, 1, 42, DistancePolicy::Dot).is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub fn generate(results_dir: &Path) -> Result<String> {
     oocore(results_dir, &mut out);
     pruned(results_dir, &mut out);
     dist(results_dir, &mut out);
+    bench_json(results_dir, &mut out);
 
     let path = results_dir.join("REPORT.md");
     std::fs::create_dir_all(results_dir)?;
@@ -384,6 +385,53 @@ fn dist(dir: &Path, out: &mut String) {
         iters_stable &= *iters_by_cfg.entry(key).or_insert(r[7]) == r[7];
     }
     check(out, "iterations independent of worker count per (dim, K)", iters_stable);
+    let _ = writeln!(out);
+}
+
+fn bench_json(dir: &Path, out: &mut String) {
+    use crate::util::json::Json;
+    let _ = writeln!(out, "## Perf trajectory — distance policy × tier (bench.json)\n");
+    let p = dir.join("bench.json");
+    let Ok(text) = std::fs::read_to_string(&p) else {
+        let _ = writeln!(
+            out,
+            "_not run_ (`cargo bench --bench distance_policy` / `--bench hotpath_micro`)\n"
+        );
+        return;
+    };
+    let Ok(parsed) = Json::parse(&text) else {
+        let _ = writeln!(out, "_unreadable bench.json_\n");
+        return;
+    };
+    let Some(rows) = parsed.as_arr() else {
+        let _ = writeln!(out, "_malformed bench.json (expected an array)_\n");
+        return;
+    };
+    let field = |r: &Json, k: &str| r.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let num = |r: &Json, k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let md: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                field(r, "bench"),
+                field(r, "engine"),
+                field(r, "policy"),
+                field(r, "tier"),
+                format!("{}", num(r, "n") as u64),
+                format!("{}", num(r, "d") as u64),
+                format!("{}", num(r, "k") as u64),
+                format!("{:.1}", num(r, "ns_per_point_iter")),
+                format!("{:.2}", num(r, "speedup_vs_exact_scalar")),
+            ]
+        })
+        .collect();
+    md_table(
+        out,
+        &["bench", "engine", "policy", "tier", "n", "d", "k", "ns/pt/iter", "ψ vs exact-scalar"],
+        &md,
+    );
+    let sane = rows.iter().all(|r| num(r, "ns_per_point_iter") > 0.0);
+    check(out, "ns/point positive in every row", sane);
     let _ = writeln!(out);
 }
 

@@ -47,13 +47,15 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
             sub.push(ds.point(i));
         }
 
-        // best-of-trials 2-means
+        // best-of-trials 2-means (inherits the distance policy — each
+        // subset Dataset lazily builds its own point-norm cache)
         let mut best: Option<KmeansResult> = None;
         for t in 0..trials {
             let sub_cfg = KmeansConfig::new(2)
                 .with_seed(cfg.seed ^ ((0xB15EC + t as u64 + members.len() as u64) << 8))
                 .with_tol(cfg.tol)
-                .with_max_iters(cfg.max_iters);
+                .with_max_iters(cfg.max_iters)
+                .with_distance(cfg.distance);
             let r = serial::run(&sub, &sub_cfg);
             if best.as_ref().map(|b| r.sse < b.sse).unwrap_or(true) {
                 best = Some(r);

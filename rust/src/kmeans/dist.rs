@@ -362,8 +362,12 @@ impl Cluster {
             let mut iter_net = IterNet { bytes_tx: 0, bytes_rx: 0, secs: 0.0 };
             // broadcast to every worker before reading any reply, so
             // all shards compute their E-step concurrently
-            let assign_frame =
-                Frame::Assign { k: k as u32, dim: d as u32, centroids: centroids.clone() };
+            let assign_frame = Frame::Assign {
+                k: k as u32,
+                dim: d as u32,
+                policy: cfg.distance,
+                centroids: centroids.clone(),
+            };
             for link in &mut self.links {
                 iter_net.bytes_tx += link.send(&assign_frame)?;
             }
@@ -535,6 +539,38 @@ mod tests {
         assert_eq!(streamed, resident);
         drop(c); // close connections so the single-session workers exit
         cluster.join().unwrap();
+    }
+
+    #[test]
+    fn dot_policy_bit_identical_to_oocore_dot_and_matches_exact() {
+        use crate::config::DistancePolicy;
+        use crate::data::MemorySource;
+        use crate::kmeans::streaming::{self, StreamOpts};
+        let ds = MixtureSpec::paper_2d(8).generate(1201, 11);
+        let cfg = KmeansConfig::new(8).with_seed(5).with_distance(DistancePolicy::Dot);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 128).unwrap();
+        let dist_run = run_from(&cluster.addrs, &cfg, &fast_opts(), &mu0).unwrap();
+        cluster.join().unwrap();
+
+        // the worker replays the oocore shard fold (same norms, same
+        // chunked accumulation), so dist(2, dot) ≡ oocore(2, dot)
+        let oocore = streaming::run_from(
+            &MemorySource::new(&ds),
+            &cfg,
+            &StreamOpts { shards: 2, chunk_rows: 128 },
+            &mu0,
+        )
+        .unwrap();
+        assert_bit_identical(&dist_run.result, &oocore, "dist(2,dot) vs oocore(2,dot)");
+
+        // and the cross-policy contract vs exact serial
+        let exact = serial::run_from(&ds, &KmeansConfig::new(8).with_seed(5), &mu0);
+        assert_eq!(dist_run.result.assign, exact.assign);
+        assert_eq!(dist_run.result.iterations, exact.iterations);
+        let rel = (dist_run.result.sse - exact.sse).abs() / exact.sse.max(1.0);
+        assert!(rel < 1e-5, "sse rel err {rel}");
     }
 
     #[test]

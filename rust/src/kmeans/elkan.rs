@@ -31,7 +31,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use crate::config::SchedMode;
+use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
 use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{finalize, PartialStats};
@@ -91,6 +91,9 @@ struct Ctx {
     s_half: Vec<f32>,
     /// k×k inter-centroid distances.
     cc: Vec<f32>,
+    /// Per-centroid `‖μ‖²` for the `dot` distance policy, recomputed
+    /// once per iteration by the leader (empty under `exact`).
+    c_norms: Vec<f32>,
 }
 
 /// Per-worker scratch: the chunk-sized distance buffer and per-block
@@ -121,11 +124,16 @@ pub fn run_from_threads(
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
+    let policy = cfg.distance;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
     // resolve the hot-path tier on the main thread so a bad
     // PARAKM_KERNEL aborts here, not inside a worker
     let tier = kernel::active_tier();
+    if policy == DistancePolicy::Dot {
+        // materialize the point-norm cache before the workers race
+        let _ = ds.norms();
+    }
 
     let nchunks = sched::chunk_count(n);
     let p = threads.max(1).min(nchunks);
@@ -169,6 +177,10 @@ pub fn run_from_threads(
         moved: vec![0.0f32; k],
         s_half: vec![0.0f32; k],
         cc: vec![0.0f32; k * k],
+        c_norms: match policy {
+            DistancePolicy::Dot => kernel::row_norms_vec(centroids0, d),
+            DistancePolicy::Exact => Vec::new(),
+        },
     });
     let barrier = Barrier::new(p + 1);
     let done = AtomicBool::new(false);
@@ -202,12 +214,12 @@ pub fn run_from_threads(
                     let c = ctx.read().unwrap();
                     if seeding.load(Ordering::Acquire) {
                         while let Some(ci) = queue.pop(wid) {
-                            seed_chunk(ds, k, &c.mu, tier, &mut slots[ci].lock().unwrap());
+                            seed_chunk(ds, k, &c, policy, tier, &mut slots[ci].lock().unwrap());
                         }
                     } else {
                         while let Some(ci) = queue.pop(wid) {
                             let mut slot = slots[ci].lock().unwrap();
-                            iterate_chunk(ds, k, &c, tier, &mut slot, &mut scratch);
+                            iterate_chunk(ds, k, &c, policy, tier, &mut slot, &mut scratch);
                         }
                     }
                     drop(c);
@@ -248,6 +260,10 @@ pub fn run_from_threads(
             }
             mu = mu_new;
             c.mu.copy_from_slice(&mu);
+            if policy == DistancePolicy::Dot {
+                // centroid norms: recomputed once per iteration
+                c.c_norms = kernel::row_norms_vec(&mu, d);
+            }
             iterations += 1;
             history.push((f64::NAN, shift));
             if shift < cfg.tol {
@@ -322,15 +338,38 @@ pub fn run_from_threads(
 }
 
 /// Seeding pass over one chunk: dense squared-distance matrix through
-/// the SIMD kernel, then scalar sqrt/argmin bound seeding — the exact
-/// values the serial seeding computes (per-row pure functions).
-fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut ChunkSlot) {
+/// the SIMD kernel (per the distance policy), then scalar sqrt/argmin
+/// bound seeding — the exact values the serial seeding computes
+/// (per-row pure functions).
+fn seed_chunk(
+    ds: &Dataset,
+    k: usize,
+    ctx: &Ctx,
+    policy: DistancePolicy,
+    tier: KernelTier,
+    slot: &mut ChunkSlot,
+) {
     let d = ds.dim();
+    let mu = &ctx.mu;
     let rows = slot.assign.len();
     if rows == 0 {
         return;
     }
-    kernel::sqdist_matrix(ds.rows(slot.lo, slot.lo + rows), d, mu, k, slot.lower, tier);
+    match policy {
+        DistancePolicy::Exact => {
+            kernel::sqdist_matrix(ds.rows(slot.lo, slot.lo + rows), d, mu, k, slot.lower, tier)
+        }
+        DistancePolicy::Dot => kernel::sqdist_matrix_dot(
+            ds.rows(slot.lo, slot.lo + rows),
+            d,
+            mu,
+            k,
+            ds.norms_range(slot.lo, slot.lo + rows),
+            &ctx.c_norms,
+            slot.lower,
+            tier,
+        ),
+    }
     for r in 0..rows {
         let mut best = 0usize;
         let mut best_d = f32::INFINITY;
@@ -348,11 +387,17 @@ fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut C
 }
 
 /// One iteration's work on one chunk: bound maintenance, batched
-/// bound refresh, and an exact replay of the serial candidate loop.
+/// bound refresh (per the distance policy), and an exact replay of the
+/// serial candidate loop. Under `dot`, the batched refresh runs the
+/// norm-trick kernel while the rare off-mask scalar fallback stays
+/// subtract-square — both are valid distances, and the bounds logic
+/// only needs distances, not a single formulation.
+#[allow(clippy::too_many_arguments)]
 fn iterate_chunk(
     ds: &Dataset,
     k: usize,
     ctx: &Ctx,
+    policy: DistancePolicy,
     tier: KernelTier,
     slot: &mut ChunkSlot,
     scratch: &mut Scratch,
@@ -399,8 +444,22 @@ fn iterate_chunk(
 
     // batched bound refresh: one SIMD pass over the masked pairs
     let dist = &mut scratch.dist[..rows * k];
-    let mut computed =
-        kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask, dist, tier);
+    let mut computed = match policy {
+        DistancePolicy::Exact => {
+            kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask, dist, tier)
+        }
+        DistancePolicy::Dot => kernel::sqdist_pruned_dot(
+            ds.rows(lo, lo + rows),
+            d,
+            &ctx.mu,
+            k,
+            ds.norms_range(lo, lo + rows),
+            &ctx.c_norms,
+            mask,
+            dist,
+            tier,
+        ),
+    };
 
     // pass 2: the serial candidate loop, verbatim, reading exact
     // distances from the buffer (scalar fallback off-mask)
@@ -528,6 +587,31 @@ mod tests {
                 let r = run_from_threads(&ds, &cfg, p, mode, &mu0);
                 assert_bit_identical(&r, &one, &format!("elkan p={p} {mode}"));
                 assert_eq!(r.pruning, one.pruning, "p={p} {mode}: prune counters");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_policy_matches_lloyd_and_stays_p_independent() {
+        use crate::config::DistancePolicy;
+        let ds = MixtureSpec::paper_2d(8).generate(3000, 3);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let lloyd = serial::run_from(&ds, &cfg, &mu0);
+        let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+        let one = run_from_threads(&ds, &dcfg, 1, SchedMode::Steal, &mu0);
+        // cross-policy: the same clustering as exact Lloyd (same
+        // tolerance the exact-elkan-vs-lloyd pin grants: bound
+        // arithmetic in f32 sqrt space can flip a razor-edge point)
+        assert_eq!(one.iterations, lloyd.iterations);
+        let ari = crate::metrics::adjusted_rand_index(&one.assign, &lloyd.assign);
+        assert!(ari > 0.9999, "ari {ari}");
+        assert!((one.sse - lloyd.sse).abs() / lloyd.sse < 1e-5);
+        // within-policy: chunk-deterministic, so p/sched cannot matter
+        for p in [2usize, 4] {
+            for mode in [SchedMode::Static, SchedMode::Steal] {
+                let r = run_from_threads(&ds, &dcfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("elkan dot p={p} {mode:?}"));
             }
         }
     }

@@ -24,7 +24,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use crate::config::SchedMode;
+use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
 use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{finalize, PartialStats};
@@ -80,6 +80,9 @@ struct Ctx {
     s_half: Vec<f32>,
     max_move: f32,
     second_move: f32,
+    /// Per-centroid `‖μ‖²` for the `dot` distance policy, recomputed
+    /// once per iteration by the leader (empty under `exact`).
+    c_norms: Vec<f32>,
 }
 
 /// Per-worker scratch: chunk-sized distance buffer, the two per-block
@@ -114,9 +117,14 @@ pub fn run_from_threads(
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
+    let policy = cfg.distance;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d);
     let tier = kernel::active_tier();
+    if policy == DistancePolicy::Dot {
+        // materialize the point-norm cache before the workers race
+        let _ = ds.norms();
+    }
 
     let nchunks = sched::chunk_count(n);
     let p = threads.max(1).min(nchunks);
@@ -160,6 +168,10 @@ pub fn run_from_threads(
         s_half: vec![0.0f32; k],
         max_move: 0.0,
         second_move: 0.0,
+        c_norms: match policy {
+            DistancePolicy::Dot => kernel::row_norms_vec(centroids0, d),
+            DistancePolicy::Exact => Vec::new(),
+        },
     });
     let barrier = Barrier::new(p + 1);
     let done = AtomicBool::new(false);
@@ -193,12 +205,12 @@ pub fn run_from_threads(
                     let c = ctx.read().unwrap();
                     if seeding.load(Ordering::Acquire) {
                         while let Some(ci) = queue.pop(wid) {
-                            seed_chunk(ds, k, &c.mu, tier, &mut slots[ci].lock().unwrap());
+                            seed_chunk(ds, k, &c, policy, tier, &mut slots[ci].lock().unwrap());
                         }
                     } else {
                         while let Some(ci) = queue.pop(wid) {
                             let mut slot = slots[ci].lock().unwrap();
-                            iterate_chunk(ds, k, &c, tier, &mut slot, &mut scratch);
+                            iterate_chunk(ds, k, &c, policy, tier, &mut slot, &mut scratch);
                         }
                     }
                     drop(c);
@@ -251,6 +263,10 @@ pub fn run_from_threads(
             c.second_move = second_move;
             mu = mu_new;
             c.mu.copy_from_slice(&mu);
+            if policy == DistancePolicy::Dot {
+                // centroid norms: recomputed once per iteration
+                c.c_norms = kernel::row_norms_vec(&mu, d);
+            }
             iterations += 1;
 
             // SSE bookkeeping for parity with other engines: the final
@@ -325,23 +341,45 @@ pub fn run_from_threads(
 }
 
 /// Seeding pass over one chunk: the two-nearest scan runs on the SIMD
-/// kernel subsystem, then the (row-local) sqrt bound seeding.
-fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut ChunkSlot) {
+/// kernel subsystem (per the distance policy), then the (row-local)
+/// sqrt bound seeding.
+fn seed_chunk(
+    ds: &Dataset,
+    k: usize,
+    ctx: &Ctx,
+    policy: DistancePolicy,
+    tier: KernelTier,
+    slot: &mut ChunkSlot,
+) {
     let d = ds.dim();
     let rows = slot.assign.len();
     if rows == 0 {
         return;
     }
-    kernel::assign_two_nearest(
-        ds.rows(slot.lo, slot.lo + rows),
-        d,
-        mu,
-        k,
-        slot.assign,
-        slot.upper,
-        slot.lower,
-        tier,
-    );
+    match policy {
+        DistancePolicy::Exact => kernel::assign_two_nearest(
+            ds.rows(slot.lo, slot.lo + rows),
+            d,
+            &ctx.mu,
+            k,
+            slot.assign,
+            slot.upper,
+            slot.lower,
+            tier,
+        ),
+        DistancePolicy::Dot => kernel::assign_two_nearest_dot(
+            ds.rows(slot.lo, slot.lo + rows),
+            d,
+            &ctx.mu,
+            k,
+            ds.norms_range(slot.lo, slot.lo + rows),
+            &ctx.c_norms,
+            slot.assign,
+            slot.upper,
+            slot.lower,
+            tier,
+        ),
+    }
     for r in 0..rows {
         slot.upper[r] = slot.upper[r].sqrt();
         slot.lower[r] = slot.lower[r].sqrt();
@@ -349,11 +387,14 @@ fn seed_chunk(ds: &Dataset, k: usize, mu: &[f32], tier: KernelTier, slot: &mut C
 }
 
 /// One iteration's work on one chunk: bound maintenance, batched upper
-/// tightening, batched full-scan refresh, and the exact serial replay.
+/// tightening, batched full-scan refresh (per the distance policy),
+/// and the exact serial replay.
+#[allow(clippy::too_many_arguments)]
 fn iterate_chunk(
     ds: &Dataset,
     k: usize,
     ctx: &Ctx,
+    policy: DistancePolicy,
     tier: KernelTier,
     slot: &mut ChunkSlot,
     scratch: &mut Scratch,
@@ -388,8 +429,22 @@ fn iterate_chunk(
             mask_a[(r / POINTS_BLOCK) * k + a] = true;
         }
     }
-    let mut computed =
-        kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_a, dist, tier);
+    let mut computed = match policy {
+        DistancePolicy::Exact => {
+            kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_a, dist, tier)
+        }
+        DistancePolicy::Dot => kernel::sqdist_pruned_dot(
+            ds.rows(lo, lo + rows),
+            d,
+            &ctx.mu,
+            k,
+            ds.norms_range(lo, lo + rows),
+            &ctx.c_norms,
+            mask_a,
+            dist,
+            tier,
+        ),
+    };
 
     // pass 2: tighten upper with the exact distance; points still past
     // their bound need the full scan — mask the complement columns so
@@ -412,7 +467,22 @@ fn iterate_chunk(
             }
         }
     }
-    computed += kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_b, dist, tier);
+    computed += match policy {
+        DistancePolicy::Exact => {
+            kernel::sqdist_pruned(ds.rows(lo, lo + rows), d, &ctx.mu, k, mask_b, dist, tier)
+        }
+        DistancePolicy::Dot => kernel::sqdist_pruned_dot(
+            ds.rows(lo, lo + rows),
+            d,
+            &ctx.mu,
+            k,
+            ds.norms_range(lo, lo + rows),
+            &ctx.c_norms,
+            mask_b,
+            dist,
+            tier,
+        ),
+    };
 
     // pass 3: full scan replay from the (now dense) buffer rows — the
     // serial `two_nearest` comparison sequence, verbatim
@@ -500,6 +570,27 @@ mod tests {
                 let r = run_from_threads(&ds, &cfg, p, mode, &mu0);
                 assert_bit_identical(&r, &one, &format!("hamerly p={p} {mode}"));
                 assert_eq!(r.pruning, one.pruning, "p={p} {mode}: prune counters");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_policy_matches_lloyd_and_stays_p_independent() {
+        use crate::config::DistancePolicy;
+        let ds = MixtureSpec::paper_3d(4).generate(2000, 9);
+        let cfg = KmeansConfig::new(4).with_seed(11);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let lloyd = serial::run_from(&ds, &cfg, &mu0);
+        let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+        let one = run_from_threads(&ds, &dcfg, 1, SchedMode::Steal, &mu0);
+        assert_eq!(one.iterations, lloyd.iterations);
+        let ari = crate::metrics::adjusted_rand_index(&one.assign, &lloyd.assign);
+        assert!(ari > 0.9999, "ari {ari}");
+        assert!((one.sse - lloyd.sse).abs() / lloyd.sse < 1e-5);
+        for p in [2usize, 4] {
+            for mode in [SchedMode::Static, SchedMode::Steal] {
+                let r = run_from_threads(&ds, &dcfg, p, mode, &mu0);
+                assert_bit_identical(&r, &one, &format!("hamerly dot p={p} {mode:?}"));
             }
         }
     }

@@ -8,9 +8,11 @@
 //! touches a fraction of the data per step; the A3 ablation bench
 //! compares wall-clock-to-quality against full Lloyd.
 
+use crate::config::DistancePolicy;
 use crate::data::Dataset;
-use crate::kmeans::step::{assign_accumulate, PartialStats};
+use crate::kmeans::step::{assign_accumulate_mode, DistanceMode, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::linalg::kernel;
 use crate::rng::Pcg64;
 
 /// Run mini-batch K-Means with batch size `batch`.
@@ -38,9 +40,13 @@ pub fn run_from(
     let mut mu = centroids0.to_vec();
     let mut rng = Pcg64::new(cfg.seed ^ 0xBA7C4, 0x31);
 
+    let policy = cfg.distance;
     let mut counts = vec![0u64; k]; // lifetime per-centroid counts
     let mut batch_rows = vec![0.0f32; b * d];
     let mut batch_assign = vec![-1i32; b];
+    // per-batch point norms, reused across iterations (dot policy only)
+    let mut batch_norms =
+        vec![0.0f32; if policy == DistancePolicy::Dot { b } else { 0 }];
     let mut stats = PartialStats::zeros(k, d);
     let mut history = Vec::new();
     let mut converged = false;
@@ -53,7 +59,20 @@ pub fn run_from(
             let src = rng.next_below(n as u64) as usize;
             batch_rows[bi * d..(bi + 1) * d].copy_from_slice(ds.point(src));
         }
-        assign_accumulate(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats)
+        let c_norms = match policy {
+            DistancePolicy::Dot => {
+                kernel::row_norms(&batch_rows, d, &mut batch_norms);
+                kernel::row_norms_vec(&mu, d)
+            }
+            DistancePolicy::Exact => Vec::new(),
+        };
+        let mode = match policy {
+            DistancePolicy::Exact => DistanceMode::Exact,
+            DistancePolicy::Dot => {
+                DistanceMode::Dot { x_norms: &batch_norms, c_norms: &c_norms }
+            }
+        };
+        assign_accumulate_mode(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats, &mode)
             .expect("shapes validated above");
 
         // per-centroid gradient step toward the batch mean
@@ -88,7 +107,15 @@ pub fn run_from(
     // final full assignment pass for a comparable result/objective
     let mut assign = vec![-1i32; n];
     let mut full_stats = PartialStats::zeros(k, d);
-    assign_accumulate(ds.raw(), d, &mu, k, &mut assign, &mut full_stats)
+    let c_norms = match policy {
+        DistancePolicy::Dot => kernel::row_norms_vec(&mu, d),
+        DistancePolicy::Exact => Vec::new(),
+    };
+    let mode = match policy {
+        DistancePolicy::Exact => DistanceMode::Exact,
+        DistancePolicy::Dot => DistanceMode::Dot { x_norms: ds.norms(), c_norms: &c_norms },
+    };
+    assign_accumulate_mode(ds.raw(), d, &mu, k, &mut assign, &mut full_stats, &mode)
         .expect("shapes validated above");
     let sse = full_stats.sse;
     let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
@@ -138,6 +165,24 @@ mod tests {
         let b = run(&ds, &cfg, 512);
         assert_eq!(a.centroids, b.centroids);
         assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn dot_policy_matches_exact() {
+        // sampling is RNG-driven (distance-blind) and centroid updates
+        // depend only on assignments, so dot tracks exact whenever the
+        // per-batch argmins agree — which they do on the paper mixtures
+        let ds = MixtureSpec::paper_2d(8).generate(5000, 7);
+        let cfg = KmeansConfig::new(8).with_seed(9);
+        let exact = run(&ds, &cfg, 512);
+        let dot = run(
+            &ds,
+            &cfg.clone().with_distance(crate::config::DistancePolicy::Dot),
+            512,
+        );
+        assert_eq!(dot.assign, exact.assign);
+        assert_eq!(dot.iterations, exact.iterations);
+        assert!((dot.sse - exact.sse).abs() / exact.sse.max(1.0) < 1e-5);
     }
 
     #[test]

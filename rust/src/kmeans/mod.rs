@@ -26,7 +26,7 @@ pub mod serial;
 pub mod step;
 pub mod streaming;
 
-use crate::config::Init;
+use crate::config::{DistancePolicy, Init};
 
 /// Configuration for the pure-rust algorithms (the AOT engines use the
 /// richer [`crate::config::RunConfig`]).
@@ -38,11 +38,22 @@ pub struct KmeansConfig {
     pub max_iters: usize,
     pub seed: u64,
     pub init: Init,
+    /// Distance formulation (DESIGN.md §11). `Exact` (the default)
+    /// preserves every documented bit-identity contract; `Dot` runs the
+    /// norm-trick FMA hot path.
+    pub distance: DistancePolicy,
 }
 
 impl KmeansConfig {
     pub fn new(k: usize) -> KmeansConfig {
-        KmeansConfig { k, tol: 1e-6, max_iters: 300, seed: 42, init: Init::Random }
+        KmeansConfig {
+            k,
+            tol: 1e-6,
+            max_iters: 300,
+            seed: 42,
+            init: Init::Random,
+            distance: DistancePolicy::Exact,
+        }
     }
 
     pub fn with_seed(mut self, seed: u64) -> KmeansConfig {
@@ -62,6 +73,11 @@ impl KmeansConfig {
 
     pub fn with_init(mut self, init: Init) -> KmeansConfig {
         self.init = init;
+        self
+    }
+
+    pub fn with_distance(mut self, distance: DistancePolicy) -> KmeansConfig {
+        self.distance = distance;
         self
     }
 }

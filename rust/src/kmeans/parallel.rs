@@ -33,11 +33,15 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use crate::config::SchedMode;
+use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
 use crate::kmeans::sched::{self, ChunkQueue};
-use crate::kmeans::step::{assign_accumulate, finalize, merge_ordered, PartialStats};
+use crate::kmeans::step::{
+    assign_accumulate, assign_accumulate_into_mode, assign_accumulate_mode, finalize,
+    merge_ordered, DistanceMode, PartialStats,
+};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::linalg::kernel;
 
 /// How worker-local statistics reach the leader (DESIGN.md A2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,8 +110,13 @@ pub fn run_from(
     let p = threads.max(1).min(ds.len().max(1));
     let k = cfg.k;
     let d = ds.dim();
+    let policy = cfg.distance;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d, "bad initial centroids");
+    if policy == DistancePolicy::Dot {
+        // materialize the point-norm cache once, before the workers race
+        let _ = ds.norms();
+    }
 
     let ranges = ds.shard_ranges(p);
     let mut assign = vec![-1i32; ds.len()];
@@ -139,6 +148,8 @@ pub fn run_from(
         for (wid, shard) in assign_shards.into_iter().enumerate() {
             let (lo, hi) = ranges[wid];
             let rows = ds.rows(lo, hi);
+            let x_norms: &[f32] =
+                if policy == DistancePolicy::Dot { ds.norms_range(lo, hi) } else { &[] };
             let centroids = &centroids;
             let slots = &slots;
             let global = &global;
@@ -152,8 +163,29 @@ pub fn run_from(
                         break;
                     }
                     let mu = centroids.read().unwrap().clone();
-                    assign_accumulate(rows, d, &mu, k, shard, &mut local)
-                        .expect("shapes validated at run_from entry");
+                    match policy {
+                        DistancePolicy::Exact => {
+                            assign_accumulate(rows, d, &mu, k, shard, &mut local)
+                                .expect("shapes validated at run_from entry");
+                        }
+                        DistancePolicy::Dot => {
+                            // centroid norms: once per iteration. Each
+                            // worker recomputes its own k·d vector —
+                            // the same size as the mu clone above, so
+                            // leader-side sharing would save nothing
+                            let c_norms = kernel::row_norms_vec(&mu, d);
+                            assign_accumulate_mode(
+                                rows,
+                                d,
+                                &mu,
+                                k,
+                                shard,
+                                &mut local,
+                                &DistanceMode::Dot { x_norms, c_norms: &c_norms },
+                            )
+                            .expect("shapes validated at run_from entry");
+                        }
+                    }
                     match merge {
                         MergeMode::Leader => {
                             slots[wid].lock().unwrap().copy_from(&local);
@@ -233,8 +265,12 @@ fn run_from_steal(
     let n = ds.len();
     let k = cfg.k;
     let d = ds.dim();
+    let policy = cfg.distance;
     assert!(k >= 1, "k must be >= 1");
     assert_eq!(centroids0.len(), k * d, "bad initial centroids");
+    if policy == DistancePolicy::Dot {
+        let _ = ds.norms();
+    }
 
     let nchunks = sched::chunk_count(n);
     let p = threads.max(1).min(nchunks);
@@ -282,22 +318,35 @@ fn run_from_steal(
                         break;
                     }
                     let mu = centroids.read().unwrap().clone();
+                    // centroid norms: once per iteration, shared by
+                    // every chunk this worker processes
+                    let c_norms = match policy {
+                        DistancePolicy::Dot => kernel::row_norms_vec(&mu, d),
+                        DistancePolicy::Exact => Vec::new(),
+                    };
                     if merge == MergeMode::Critical {
                         local.reset();
                     }
                     while let Some(ci) = queue.pop(wid) {
                         let (lo, hi) = sched::chunk_range(ci, n);
                         let rows = ds.rows(lo, hi);
+                        let mode = match policy {
+                            DistancePolicy::Exact => DistanceMode::Exact,
+                            DistancePolicy::Dot => DistanceMode::Dot {
+                                x_norms: ds.norms_range(lo, hi),
+                                c_norms: &c_norms,
+                            },
+                        };
                         let mut out = chunk_assign[ci].lock().unwrap();
                         match merge {
                             MergeMode::Leader => {
                                 let mut st = chunk_stats[ci].lock().unwrap();
-                                assign_accumulate(rows, d, &mu, k, &mut **out, &mut st)
+                                assign_accumulate_mode(rows, d, &mu, k, &mut **out, &mut st, &mode)
                                     .expect("shapes validated at entry");
                             }
                             MergeMode::Critical => {
-                                crate::kmeans::step::assign_accumulate_into(
-                                    rows, d, &mu, k, &mut **out, &mut local,
+                                assign_accumulate_into_mode(
+                                    rows, d, &mu, k, &mut **out, &mut local, &mode,
                                 )
                                 .expect("shapes validated at entry");
                             }
@@ -453,6 +502,26 @@ mod tests {
         assert_eq!(a.iterations, b.iterations);
         for (x, y) in a.centroids.iter().zip(&b.centroids) {
             assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn dot_policy_matches_exact_both_sched_modes() {
+        let ds = MixtureSpec::paper_2d(8).generate(3001, 5);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let exact = run_from(&ds, &cfg, 4, MergeMode::Leader, &mu0);
+        let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+        for mode in [SchedMode::Static, SchedMode::Steal] {
+            let dot = run_from_sched(&ds, &dcfg, 4, MergeMode::Leader, mode, &mu0);
+            assert_eq!(dot.assign, exact.assign, "{mode:?}");
+            assert_eq!(dot.iterations, exact.iterations, "{mode:?}");
+            assert!(
+                (dot.sse - exact.sse).abs() / exact.sse.max(1.0) < 1e-5,
+                "{mode:?}: {} vs {}",
+                dot.sse,
+                exact.sse
+            );
         }
     }
 

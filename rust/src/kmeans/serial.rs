@@ -5,7 +5,7 @@
 //! E = Σ‖μ^{t+1} − μ^t‖² < tol (paper: 1e-6) or `max_iters`.
 
 use crate::data::Dataset;
-use crate::kmeans::step::{lloyd_iteration, PartialStats};
+use crate::kmeans::step::{lloyd_iteration_policy, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 
 /// Run serial Lloyd on `ds`.
@@ -29,8 +29,9 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut iterations = 0;
 
     for _ in 0..cfg.max_iters {
-        let (mu_new, shift, sse) = lloyd_iteration(ds, &centroids, k, &mut assign, &mut stats)
-            .expect("shapes validated above");
+        let (mu_new, shift, sse) =
+            lloyd_iteration_policy(ds, &centroids, k, &mut assign, &mut stats, cfg.distance)
+                .expect("shapes validated above");
         centroids = mu_new;
         iterations += 1;
         history.push((sse, shift));
@@ -94,6 +95,27 @@ mod tests {
         assert_eq!(a.centroids, b.centroids);
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn dot_policy_matches_exact_on_paper_data() {
+        // the DESIGN.md §11 cross-policy contract: identical
+        // assignments and iteration trajectory, SSE within tolerance
+        let ds = MixtureSpec::paper_3d(4).generate(2000, 6);
+        let exact = run(&ds, &KmeansConfig::new(4).with_seed(9));
+        let dot = run(
+            &ds,
+            &KmeansConfig::new(4)
+                .with_seed(9)
+                .with_distance(crate::config::DistancePolicy::Dot),
+        );
+        assert_eq!(dot.assign, exact.assign);
+        assert_eq!(dot.iterations, exact.iterations);
+        assert_eq!(dot.converged, exact.converged);
+        for (a, b) in dot.centroids.iter().zip(&exact.centroids) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        assert!((dot.sse - exact.sse).abs() / exact.sse.max(1.0) < 1e-5);
     }
 
     #[test]

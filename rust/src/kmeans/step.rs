@@ -36,6 +36,29 @@
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::kernel;
+use crate::linalg::kernel::DistancePolicy;
+
+/// Distance formulation plus the norm caches it needs — the facade-
+/// level view of [`DistancePolicy`] (DESIGN.md §11). `Dot` cannot be
+/// requested without its norms by construction: `x_norms[i] = ‖rowᵢ‖²`
+/// aligned with the `rows` slice (cached once per dataset/chunk), and
+/// `c_norms[c] = ‖μ_c‖²` (recomputed once per iteration).
+#[derive(Debug, Clone, Copy)]
+pub enum DistanceMode<'a> {
+    /// Subtract-square reference — every bit-identity contract.
+    Exact,
+    /// Norm-trick FMA path over caller-cached norms.
+    Dot { x_norms: &'a [f32], c_norms: &'a [f32] },
+}
+
+impl DistanceMode<'_> {
+    pub fn policy(&self) -> DistancePolicy {
+        match self {
+            DistanceMode::Exact => DistancePolicy::Exact,
+            DistanceMode::Dot { .. } => DistancePolicy::Dot,
+        }
+    }
+}
 
 /// Per-shard accumulation buffers (one per thread — the paper's "local
 /// cluster means" — merged by the leader).
@@ -107,6 +130,21 @@ pub fn assign_accumulate(
     assign_accumulate_into(rows, dim, centroids, k, assign_out, stats)
 }
 
+/// [`assign_accumulate`] with an explicit [`DistanceMode`] — the
+/// policy-aware engine entry point (resets `stats` first).
+pub fn assign_accumulate_mode(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+    mode: &DistanceMode<'_>,
+) -> Result<()> {
+    stats.reset();
+    assign_accumulate_into_mode(rows, dim, centroids, k, assign_out, stats, mode)
+}
+
 /// [`assign_accumulate`] without the reset: accumulation *continues*
 /// into `stats`. This is the chunked-accumulation entry point (module
 /// docs) — streaming a shard's chunks through it in ascending row
@@ -120,6 +158,23 @@ pub fn assign_accumulate_into(
     k: usize,
     assign_out: &mut [i32],
     stats: &mut PartialStats,
+) -> Result<()> {
+    assign_accumulate_into_mode(rows, dim, centroids, k, assign_out, stats, &DistanceMode::Exact)
+}
+
+/// [`assign_accumulate_into`] with an explicit [`DistanceMode`]. Under
+/// `Dot` the same chunked-accumulation guarantee holds *within the
+/// policy*: per-point distances are independent of chunk boundaries
+/// and the f64 fold is the same ascending-row `+=` chain, so chunked
+/// `Dot` folds are bit-identical to whole-shard `Dot` calls.
+pub fn assign_accumulate_into_mode(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+    mode: &DistanceMode<'_>,
 ) -> Result<()> {
     if k == 0 {
         return Err(Error::Config("assign_accumulate: k must be >= 1".into()));
@@ -149,17 +204,47 @@ pub fn assign_accumulate_into(
             stats.k, stats.dim
         )));
     }
-    kernel::assign_accumulate(
-        rows,
-        dim,
-        centroids,
-        k,
-        assign_out,
-        &mut stats.sums,
-        &mut stats.counts,
-        &mut stats.sse,
-        kernel::active_tier(),
-    );
+    match mode {
+        DistanceMode::Exact => kernel::assign_accumulate(
+            rows,
+            dim,
+            centroids,
+            k,
+            assign_out,
+            &mut stats.sums,
+            &mut stats.counts,
+            &mut stats.sse,
+            kernel::active_tier(),
+        ),
+        DistanceMode::Dot { x_norms, c_norms } => {
+            if x_norms.len() * dim != rows.len() {
+                return Err(Error::Shape(format!(
+                    "assign_accumulate: x_norms len {} != rows {}",
+                    x_norms.len(),
+                    rows.len() / dim
+                )));
+            }
+            if c_norms.len() != k {
+                return Err(Error::Shape(format!(
+                    "assign_accumulate: c_norms len {} != k {k}",
+                    c_norms.len()
+                )));
+            }
+            kernel::assign_accumulate_dot(
+                rows,
+                dim,
+                centroids,
+                k,
+                x_norms,
+                c_norms,
+                assign_out,
+                &mut stats.sums,
+                &mut stats.counts,
+                &mut stats.sse,
+                kernel::active_tier(),
+            )
+        }
+    }
     Ok(())
 }
 
@@ -228,7 +313,37 @@ pub fn lloyd_iteration(
     assign_out: &mut [i32],
     stats: &mut PartialStats,
 ) -> Result<(Vec<f32>, f64, f64)> {
-    assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats)?;
+    lloyd_iteration_policy(ds, centroids, k, assign_out, stats, DistancePolicy::Exact)
+}
+
+/// [`lloyd_iteration`] under an explicit [`DistancePolicy`]: `Dot`
+/// reads the dataset's cached point norms ([`Dataset::norms`]) and
+/// recomputes the centroid norms once for this iteration.
+pub fn lloyd_iteration_policy(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+    policy: DistancePolicy,
+) -> Result<(Vec<f32>, f64, f64)> {
+    match policy {
+        DistancePolicy::Exact => {
+            assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats)?;
+        }
+        DistancePolicy::Dot => {
+            let c_norms = kernel::row_norms_vec(centroids, ds.dim());
+            assign_accumulate_mode(
+                ds.raw(),
+                ds.dim(),
+                centroids,
+                k,
+                assign_out,
+                stats,
+                &DistanceMode::Dot { x_norms: ds.norms(), c_norms: &c_norms },
+            )?;
+        }
+    }
     let (mu_new, shift) = finalize(stats, centroids);
     Ok((mu_new, shift, stats.sse))
 }
@@ -350,6 +465,78 @@ mod tests {
             prop::ensure(bits(&part.sums) == bits(&whole.sums), "sums differ in bits")?;
             prop::ensure(part.sse.to_bits() == whole.sse.to_bits(), "sse differs in bits")
         });
+    }
+
+    #[test]
+    fn dot_chunked_fold_is_bit_identical_to_whole_call() {
+        // the chunked-accumulation contract holds within the dot
+        // policy too: per-point distances are chunk-boundary-blind and
+        // the f64 fold is the same ascending-row chain
+        prop::check("dot chunked fold == whole fold", 16, |g| {
+            let d = *g.choice(&[2usize, 3, 17]);
+            let n = g.usize_in(1, 400);
+            let k = g.usize_in(1, 7);
+            let rows = g.points(n, d, 9.0);
+            let mu = g.points(k, d, 9.0);
+            let x_norms = crate::linalg::kernel::row_norms_vec(&rows, d);
+            let c_norms = crate::linalg::kernel::row_norms_vec(&mu, d);
+
+            let mut whole_assign = vec![0i32; n];
+            let mut whole = PartialStats::zeros(k, d);
+            let mode = DistanceMode::Dot { x_norms: &x_norms, c_norms: &c_norms };
+            assign_accumulate_mode(&rows, d, &mu, k, &mut whole_assign, &mut whole, &mode)
+                .unwrap();
+
+            let chunk = g.usize_in(1, n.max(2));
+            let mut part_assign = vec![0i32; n];
+            let mut part = PartialStats::zeros(k, d);
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                let mode = DistanceMode::Dot { x_norms: &x_norms[lo..hi], c_norms: &c_norms };
+                assign_accumulate_into_mode(
+                    &rows[lo * d..hi * d],
+                    d,
+                    &mu,
+                    k,
+                    &mut part_assign[lo..hi],
+                    &mut part,
+                    &mode,
+                )
+                .unwrap();
+                lo = hi;
+            }
+            prop::ensure(part_assign == whole_assign, "assignments differ")?;
+            prop::ensure(part.counts == whole.counts, "counts differ")?;
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            prop::ensure(bits(&part.sums) == bits(&whole.sums), "sums differ in bits")?;
+            prop::ensure(part.sse.to_bits() == whole.sse.to_bits(), "sse differs in bits")
+        });
+    }
+
+    #[test]
+    fn dot_mode_norm_shape_mismatches_are_errors() {
+        let (ds, mu) = toy();
+        let mut assign = vec![0i32; 4];
+        let mut stats = PartialStats::zeros(2, 2);
+        let x_norms = crate::linalg::kernel::row_norms_vec(ds.raw(), 2);
+        let c_norms = crate::linalg::kernel::row_norms_vec(&mu, 2);
+        // short point-norm cache
+        let bad = DistanceMode::Dot { x_norms: &x_norms[..3], c_norms: &c_norms };
+        let err = assign_accumulate_mode(ds.raw(), 2, &mu, 2, &mut assign, &mut stats, &bad)
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::Shape(_)), "{err}");
+        // short centroid-norm cache
+        let bad = DistanceMode::Dot { x_norms: &x_norms, c_norms: &c_norms[..1] };
+        let err = assign_accumulate_mode(ds.raw(), 2, &mu, 2, &mut assign, &mut stats, &bad)
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::Shape(_)), "{err}");
+        // well-shaped dot call matches the exact assignments on
+        // well-separated data
+        let ok = DistanceMode::Dot { x_norms: &x_norms, c_norms: &c_norms };
+        assign_accumulate_mode(ds.raw(), 2, &mu, 2, &mut assign, &mut stats, &ok).unwrap();
+        assert_eq!(assign, vec![0, 0, 1, 1]);
+        assert_eq!(ok.policy(), crate::linalg::kernel::DistancePolicy::Dot);
     }
 
     fn stats_with(seed: u64, k: usize, d: usize) -> PartialStats {

@@ -34,11 +34,11 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex, RwLock};
 
-use crate::config::Init;
+use crate::config::{DistancePolicy, Init};
 use crate::data::dataset::shard_ranges;
 use crate::data::source::{ChunkReader as _, DataSource};
 use crate::error::{Error, Result};
-use crate::kmeans::step::{self, finalize, merge_ordered, PartialStats};
+use crate::kmeans::step::{self, finalize, merge_ordered, DistanceMode, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::linalg::kernel;
 use crate::rng::Pcg64;
@@ -206,6 +206,7 @@ pub fn run_from(
     // resolve the hot-path tier on the main thread so a bad
     // PARAKM_KERNEL aborts here, not inside a worker
     let _ = kernel::active_tier();
+    let policy = cfg.distance;
 
     let p = opts.shards.min(n);
     let chunk_rows = opts.chunk_rows;
@@ -257,7 +258,9 @@ pub fn run_from(
                     // seek anyway, and the per-iteration cost (one
                     // open + O(chunk) buffer allocs per shard) is
                     // negligible against the O(n·k·d) scan it feeds
-                    match stream_shard(src, lo, hi, chunk_rows, d, &mu, k, shard, &mut local) {
+                    match stream_shard(
+                        src, lo, hi, chunk_rows, d, &mu, k, shard, &mut local, policy, None,
+                    ) {
                         Ok(()) => {
                             slots[wid].lock().unwrap().copy_from(&local);
                         }
@@ -318,8 +321,16 @@ pub fn run_from(
 /// One worker's pass: stream rows `[lo, hi)` in chunks, assigning into
 /// `assign_shard` and folding statistics into the *continuing* `stats`
 /// accumulator (bit-identical to a single whole-shard call — the
-/// chunked-accumulation contract). Verifies the source honors its
-/// chunk tiling, reporting [`Error::Data`] when it does not.
+/// chunked-accumulation contract, which holds within either
+/// [`DistancePolicy`]). Verifies the source honors its chunk tiling,
+/// reporting [`Error::Data`] when it does not.
+///
+/// Under [`DistancePolicy::Dot`], centroid norms are computed once per
+/// call (= once per iteration per shard) and point norms come from
+/// `x_norms` when the caller holds a shard-wide cache (aligned with
+/// `[lo, hi)` — the distributed worker's case) or are computed
+/// per chunk into a reusable scratch buffer (the out-of-core engine's
+/// case, where rows are re-read each pass anyway).
 ///
 /// Shared with the distributed shard worker
 /// ([`crate::cluster::worker`]): a remote shard replays exactly this
@@ -336,7 +347,24 @@ pub(crate) fn stream_shard(
     k: usize,
     assign_shard: &mut [i32],
     stats: &mut PartialStats,
+    policy: DistancePolicy,
+    x_norms: Option<&[f32]>,
 ) -> Result<()> {
+    if let (DistancePolicy::Dot, Some(cache)) = (policy, x_norms) {
+        if cache.len() != hi - lo {
+            return Err(Error::Shape(format!(
+                "stream_shard: norm cache len {} != shard rows {}",
+                cache.len(),
+                hi - lo
+            )));
+        }
+    }
+    // centroid norms once per call — once per iteration per shard
+    let c_norms = match policy {
+        DistancePolicy::Dot => kernel::row_norms_vec(centroids, dim),
+        DistancePolicy::Exact => Vec::new(),
+    };
+    let mut chunk_norms: Vec<f32> = Vec::new();
     let mut reader = src.reader(lo, hi, chunk_rows)?;
     let mut next = lo;
     while let Some(chunk) = reader.next_chunk()? {
@@ -358,7 +386,22 @@ pub(crate) fn stream_shard(
             )));
         }
         let out = &mut assign_shard[next - lo..next - lo + nrows];
-        step::assign_accumulate_into(chunk.rows, dim, centroids, k, out, stats)?;
+        let mode = match policy {
+            DistancePolicy::Exact => DistanceMode::Exact,
+            DistancePolicy::Dot => {
+                let xn: &[f32] = match x_norms {
+                    Some(cache) => &cache[next - lo..next - lo + nrows],
+                    None => {
+                        // per-chunk norms into the reusable scratch
+                        chunk_norms.resize(nrows, 0.0);
+                        kernel::row_norms(chunk.rows, dim, &mut chunk_norms[..nrows]);
+                        &chunk_norms[..nrows]
+                    }
+                };
+                DistanceMode::Dot { x_norms: xn, c_norms: &c_norms }
+            }
+        };
+        step::assign_accumulate_into_mode(chunk.rows, dim, centroids, k, out, stats, &mode)?;
         next += nrows;
     }
     if next != hi {
@@ -368,6 +411,49 @@ pub(crate) fn stream_shard(
         )));
     }
     Ok(())
+}
+
+/// One bounded-memory pass computing the shard's per-row `‖x‖²` cache —
+/// the distributed worker's per-shard norm cache
+/// ([`crate::cluster::worker`] computes it once per session, then every
+/// `Assign` under the `dot` policy reuses it).
+pub(crate) fn shard_norms(
+    src: &dyn DataSource,
+    lo: usize,
+    hi: usize,
+    chunk_rows: usize,
+    dim: usize,
+) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut reader = src.reader(lo, hi, chunk_rows)?;
+    while let Some(chunk) = reader.next_chunk()? {
+        if chunk.rows.is_empty() || chunk.rows.len() % dim != 0 {
+            return Err(Error::Data(format!(
+                "{}: reader broke the chunk contract while computing norms (len {})",
+                src.describe(),
+                chunk.rows.len()
+            )));
+        }
+        let nrows = chunk.rows.len() / dim;
+        let start = out.len();
+        if start + nrows > hi - lo {
+            return Err(Error::Data(format!(
+                "{}: reader overran its range while computing norms",
+                src.describe()
+            )));
+        }
+        out.resize(start + nrows, 0.0);
+        kernel::row_norms(chunk.rows, dim, &mut out[start..]);
+    }
+    if out.len() != hi - lo {
+        return Err(Error::Data(format!(
+            "{}: norm pass covered {} of {} shard rows",
+            src.describe(),
+            out.len(),
+            hi - lo
+        )));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -445,6 +531,43 @@ mod tests {
 
         let gen = run_from(&gmm, &cfg, &opts, &mu0).unwrap();
         assert_bit_identical(&gen, &mem, "generator vs memory");
+    }
+
+    #[test]
+    fn dot_policy_preserves_the_shard_identities() {
+        // within the dot policy the chunked-accumulation contract still
+        // holds: oocore(S, dot) ≡ threads(p = S, dot) bit-for-bit, and
+        // chunk size never changes results
+        use crate::config::DistancePolicy;
+        let ds = MixtureSpec::paper_3d(4).generate(3001, 7);
+        let cfg = KmeansConfig::new(4).with_seed(2).with_distance(DistancePolicy::Dot);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let src = MemorySource::new(&ds);
+        for p in [1usize, 3] {
+            let threads = parallel::run_from(&ds, &cfg, p, parallel::MergeMode::Leader, &mu0);
+            for chunk in [97usize, 4000] {
+                let opts = StreamOpts { shards: p, chunk_rows: chunk };
+                let run = run_from(&src, &cfg, &opts, &mu0).unwrap();
+                assert_bit_identical(&run, &threads, &format!("dot p={p} chunk={chunk}"));
+            }
+        }
+        // and the cross-policy contract vs the exact engine
+        let exact_cfg = KmeansConfig::new(4).with_seed(2);
+        let exact = serial::run_from(&ds, &exact_cfg, &mu0);
+        let dot =
+            run_from(&src, &cfg, &StreamOpts { shards: 1, chunk_rows: 256 }, &mu0).unwrap();
+        assert_eq!(dot.assign, exact.assign);
+        assert_eq!(dot.iterations, exact.iterations);
+        assert!((dot.sse - exact.sse).abs() / exact.sse.max(1.0) < 1e-5);
+    }
+
+    #[test]
+    fn shard_norms_match_dataset_cache() {
+        let ds = MixtureSpec::paper_2d(4).generate(777, 3);
+        let src = MemorySource::new(&ds);
+        let norms = shard_norms(&src, 100, 577, 64, 2).unwrap();
+        assert_eq!(norms, ds.norms_range(100, 577));
+        assert!(shard_norms(&src, 0, 777, 1000, 2).unwrap().len() == 777);
     }
 
     #[test]

@@ -37,6 +37,17 @@
 //! bit-identical assignments (property-tested): dispatch changes speed,
 //! never results.
 //!
+//! The kernel offers two distance formulations
+//! ([`config::DistancePolicy`], `--distance` / `PARAKM_DISTANCE`,
+//! DESIGN.md §11): `exact` — the subtract-square reference every
+//! bit-identity contract above is stated against, and the default —
+//! and `dot`, which expands `‖x−μ‖² = ‖x‖² − 2·x·μ + ‖μ‖²` into a
+//! register-blocked FMA micro-kernel over cached norms ([`data::Dataset::norms`],
+//! per-chunk in the out-of-core readers, per-shard in the distributed
+//! worker). On the paper suites `dot` reproduces `exact` assignments
+//! and iteration counts with SSE inside 1e-5 relative, while relaxing
+//! last-ulp value identity across policies and tiers.
+//!
 //! ## Out of core: clustering past RAM
 //!
 //! [`data::source::DataSource`] streams rows in fixed-size chunks —

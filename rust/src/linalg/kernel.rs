@@ -20,6 +20,18 @@
 //!   ascending centroid index). Assignments, best distances, and the
 //!   f64-accumulated sums are therefore identical across tiers, which
 //!   the property tests assert exactly.
+//! - **two distance formulations** ([`DistancePolicy`], DESIGN.md §11):
+//!   the subtract-square loop above is the `exact` reference every
+//!   bit-identity contract is defined against; the `dot` policy
+//!   expands `‖x − μ‖² = ‖x‖² − 2·x·μ + ‖μ‖²` so the inner loop
+//!   becomes a pure dot-product FMA micro-kernel over cached norms
+//!   (the `*_dot` entry points). `dot` keeps the strict-`<`
+//!   first-lowest-index argmin and clamps at 0, but intentionally
+//!   relaxes cross-tier bit-identity: FMA fuses the multiply-add
+//!   rounding, so `dot` distances may differ from `exact` (and between
+//!   tiers) in the last ulps. Callers own the norm caches: per-row
+//!   `‖x‖²` computed once per dataset/chunk ([`row_norms`]),
+//!   per-centroid `‖μ‖²` recomputed once per iteration.
 //!
 //! See `rust/src/linalg/README.md` for the dispatch/tiling design and
 //! how to force a tier for debugging (`PARAKM_KERNEL`, `--kernel`).
@@ -94,6 +106,89 @@ impl std::fmt::Display for KernelChoice {
             KernelChoice::Neon => f.write_str("neon"),
         }
     }
+}
+
+/// How assignment kernels compute squared distances (DESIGN.md §11).
+///
+/// `Exact` is the subtract-square reference — the formulation every
+/// documented bit-identity contract (oocore ≡ threads ≡ dist, scalar ≡
+/// SIMD, pruned ≡ serial) is defined against, and therefore the
+/// default. `Dot` computes `‖x‖² − 2·x·μ + ‖μ‖²` through the FMA
+/// micro-kernels over caller-cached norms: same strict-`<`
+/// first-lowest-index argmin, distances clamped at 0, but values may
+/// differ from `Exact` in the last ulps (and between tiers — FMA
+/// rounds the fused multiply-add once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DistancePolicy {
+    /// Subtract-square `(x − μ)²` loop (the bit-identity reference).
+    #[default]
+    Exact,
+    /// Norm-trick `‖x‖² − 2·x·μ + ‖μ‖²` FMA dot-product path.
+    Dot,
+}
+
+impl std::str::FromStr for DistancePolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<DistancePolicy> {
+        Ok(match s {
+            "exact" => DistancePolicy::Exact,
+            "dot" => DistancePolicy::Dot,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown distance policy `{other}` (exact|dot)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for DistancePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DistancePolicy::Exact => "exact",
+            DistancePolicy::Dot => "dot",
+        })
+    }
+}
+
+impl DistancePolicy {
+    /// Resolve the `PARAKM_DISTANCE` env var (the CLI `--distance` flag
+    /// wins over it; absent both, `Exact`). A set-but-unparsable value
+    /// is a typed config error, never silently substituted.
+    pub fn from_env() -> Result<DistancePolicy> {
+        match std::env::var("PARAKM_DISTANCE") {
+            Ok(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("PARAKM_DISTANCE: {e}"))),
+            Err(_) => Ok(DistancePolicy::Exact),
+        }
+    }
+}
+
+/// Per-row squared norms `out[i] = ‖rowᵢ‖²` — the `‖x‖²` cache the
+/// `Dot` policy consumes. Plain ascending-`j` f32 mul+add (computed
+/// once per dataset/chunk, never the hot loop). Also used for centroid
+/// norms: centroids are `k` rows of width `dim`.
+pub fn row_norms(rows: &[f32], dim: usize, out: &mut [f32]) {
+    assert!(dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(out.len() * dim, rows.len());
+    for (o, p) in out.iter_mut().zip(rows.chunks_exact(dim)) {
+        let mut acc = 0.0f32;
+        for &v in p {
+            acc += v * v;
+        }
+        *o = acc;
+    }
+}
+
+/// [`row_norms`] into a fresh vector (per-iteration centroid norms).
+pub fn row_norms_vec(rows: &[f32], dim: usize) -> Vec<f32> {
+    assert!(dim >= 1);
+    let mut out = vec![0.0f32; rows.len() / dim];
+    row_norms(rows, dim, &mut out);
+    out
 }
 
 /// Best tier the running host supports.
@@ -461,6 +556,305 @@ pub fn sqdist_pruned(
     computed
 }
 
+// ---- dot-policy entry points (norm-trick FMA micro-kernels) ------------
+
+/// Downgrade a `Dot`-policy AVX2 request to scalar when the host lacks
+/// FMA (AVX2 without FMA is essentially hypothetical, but executing a
+/// `target_feature(fma)` function there would be UB, so the gate is
+/// mandatory). The `Exact` kernels never fuse, so they keep the plain
+/// tier.
+fn dot_tier(tier: KernelTier) -> KernelTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if tier == KernelTier::Avx2 && !std::arch::is_x86_feature_detected!("fma") {
+            return KernelTier::Scalar;
+        }
+    }
+    tier
+}
+
+/// [`assign_accumulate`] under the `Dot` policy: distances come from
+/// the register-blocked FMA micro-kernel `‖x‖² − 2·x·μ + ‖μ‖²` over
+/// the caller-cached norms (`x_norms[i] = ‖rowᵢ‖²`, `c_norms[c] =
+/// ‖μ_c‖²`), clamped at 0. Argmin semantics are unchanged (strict `<`,
+/// ascending centroid index — first-lowest-index ties), and the f64
+/// accumulation folds in the same ascending row order, so the chunked-
+/// accumulation contract holds within the policy. Values may differ
+/// from [`assign_accumulate`] in the last ulps (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn assign_accumulate_dot(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    x_norms: &[f32],
+    c_norms: &[f32],
+    assign_out: &mut [i32],
+    sums: &mut [f64],
+    counts: &mut [u64],
+    sse: &mut f64,
+    tier: KernelTier,
+) {
+    assert_tier_supported(tier);
+    let tier = dot_tier(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(x_norms.len(), n);
+    assert_eq!(c_norms.len(), k);
+    assert_eq!(assign_out.len(), n);
+    assert_eq!(sums.len(), k * dim);
+    assert_eq!(counts.len(), k);
+    let mut tile = Tile::new(dim);
+    let mut xn = [0.0f32; POINTS_BLOCK];
+    let mut best_d = [f32::INFINITY; POINTS_BLOCK];
+    let mut best_i = [0i32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        xn[..bn].copy_from_slice(&x_norms[lo..lo + bn]);
+        best_d.fill(f32::INFINITY);
+        best_i.fill(0);
+
+        let mut c0 = 0usize;
+        while c0 < k {
+            let c1 = (c0 + CENTROID_BLOCK).min(k);
+            match tier {
+                KernelTier::Scalar => dot_argmin_block_scalar(
+                    &tile.xt, dim, centroids, c_norms, c0, c1, &xn, &mut best_d, &mut best_i,
+                ),
+                #[cfg(target_arch = "x86_64")]
+                // safety: dot_tier() confirmed avx2 + fma on this host
+                KernelTier::Avx2 => unsafe {
+                    x86dot::argmin_block(
+                        &tile.xt, dim, centroids, c_norms, c0, c1, &xn, &mut best_d, &mut best_i,
+                    )
+                },
+                #[cfg(target_arch = "aarch64")]
+                KernelTier::Neon => unsafe {
+                    armdot::argmin_block(
+                        &tile.xt, dim, centroids, c_norms, c0, c1, &xn, &mut best_d, &mut best_i,
+                    )
+                },
+                #[allow(unreachable_patterns)]
+                _ => dot_argmin_block_scalar(
+                    &tile.xt, dim, centroids, c_norms, c0, c1, &xn, &mut best_d, &mut best_i,
+                ),
+            }
+            c0 = c1;
+        }
+
+        // scatter + accumulate in point order, exactly like the exact
+        // path — partition statistics depend only on the assignments
+        for i in 0..bn {
+            let c = best_i[i] as usize;
+            assign_out[lo + i] = best_i[i];
+            counts[c] += 1;
+            *sse += best_d[i] as f64;
+            let p = &rows[(lo + i) * dim..(lo + i + 1) * dim];
+            let s = &mut sums[c * dim..(c + 1) * dim];
+            for j in 0..dim {
+                s[j] += p[j] as f64;
+            }
+        }
+        lo += bn;
+    }
+}
+
+/// [`assign_two_nearest`] under the `Dot` policy (same norm caches and
+/// clamping as [`assign_accumulate_dot`]; same comparison sequence as
+/// the exact two-nearest scan).
+#[allow(clippy::too_many_arguments)]
+pub fn assign_two_nearest_dot(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    x_norms: &[f32],
+    c_norms: &[f32],
+    assign_out: &mut [i32],
+    d1_out: &mut [f32],
+    d2_out: &mut [f32],
+    tier: KernelTier,
+) {
+    assert_tier_supported(tier);
+    let tier = dot_tier(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(x_norms.len(), n);
+    assert_eq!(c_norms.len(), k);
+    assert_eq!(assign_out.len(), n);
+    assert_eq!(d1_out.len(), n);
+    assert_eq!(d2_out.len(), n);
+    let mut tile = Tile::new(dim);
+    let mut xn = [0.0f32; POINTS_BLOCK];
+    let mut d1 = [f32::INFINITY; POINTS_BLOCK];
+    let mut d2 = [f32::INFINITY; POINTS_BLOCK];
+    let mut bi = [0i32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        xn[..bn].copy_from_slice(&x_norms[lo..lo + bn]);
+        d1.fill(f32::INFINITY);
+        d2.fill(f32::INFINITY);
+        bi.fill(0);
+        match tier {
+            KernelTier::Scalar => dot_two_nearest_block_scalar(
+                &tile.xt, dim, centroids, c_norms, k, &xn, &mut d1, &mut d2, &mut bi,
+            ),
+            #[cfg(target_arch = "x86_64")]
+            // safety: dot_tier() confirmed avx2 + fma on this host
+            KernelTier::Avx2 => unsafe {
+                x86dot::two_nearest_block(
+                    &tile.xt, dim, centroids, c_norms, k, &xn, &mut d1, &mut d2, &mut bi,
+                )
+            },
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => unsafe {
+                armdot::two_nearest_block(
+                    &tile.xt, dim, centroids, c_norms, k, &xn, &mut d1, &mut d2, &mut bi,
+                )
+            },
+            #[allow(unreachable_patterns)]
+            _ => dot_two_nearest_block_scalar(
+                &tile.xt, dim, centroids, c_norms, k, &xn, &mut d1, &mut d2, &mut bi,
+            ),
+        }
+        assign_out[lo..lo + bn].copy_from_slice(&bi[..bn]);
+        d1_out[lo..lo + bn].copy_from_slice(&d1[..bn]);
+        d2_out[lo..lo + bn].copy_from_slice(&d2[..bn]);
+        lo += bn;
+    }
+}
+
+/// [`sqdist_matrix`] under the `Dot` policy.
+#[allow(clippy::too_many_arguments)]
+pub fn sqdist_matrix_dot(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    x_norms: &[f32],
+    c_norms: &[f32],
+    out: &mut [f32],
+    tier: KernelTier,
+) {
+    assert_tier_supported(tier);
+    let tier = dot_tier(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(x_norms.len(), n);
+    assert_eq!(c_norms.len(), k);
+    assert_eq!(out.len(), n * k);
+    let mut tile = Tile::new(dim);
+    let mut xn = [0.0f32; POINTS_BLOCK];
+    let mut dist = [0.0f32; POINTS_BLOCK];
+
+    let mut lo = 0usize;
+    while lo < n {
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        xn[..bn].copy_from_slice(&x_norms[lo..lo + bn]);
+        for c in 0..k {
+            dot_dist_dispatch(&tile.xt, dim, centroids, c, c_norms[c], &xn, &mut dist, tier);
+            for i in 0..bn {
+                out[(lo + i) * k + c] = dist[i];
+            }
+        }
+        lo += bn;
+    }
+}
+
+/// [`sqdist_pruned`] under the `Dot` policy: same mask layout and
+/// untouched-entry contract, same evaluated-pair count; a masked entry
+/// is bit-identical to the [`sqdist_matrix_dot`] entry on the same
+/// tier (not to the `exact` matrix — module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn sqdist_pruned_dot(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    x_norms: &[f32],
+    c_norms: &[f32],
+    mask: &[bool],
+    out: &mut [f32],
+    tier: KernelTier,
+) -> u64 {
+    assert_tier_supported(tier);
+    let tier = dot_tier(tier);
+    assert!(k >= 1 && dim >= 1);
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(centroids.len(), k * dim);
+    let n = rows.len() / dim;
+    assert_eq!(x_norms.len(), n);
+    assert_eq!(c_norms.len(), k);
+    let nblocks = n.div_ceil(POINTS_BLOCK);
+    assert_eq!(mask.len(), nblocks * k);
+    assert_eq!(out.len(), n * k);
+    let mut tile = Tile::new(dim);
+    let mut xn = [0.0f32; POINTS_BLOCK];
+    let mut dist = [0.0f32; POINTS_BLOCK];
+    let mut computed = 0u64;
+
+    for b in 0..nblocks {
+        let bmask = &mask[b * k..(b + 1) * k];
+        if !bmask.iter().any(|&m| m) {
+            continue;
+        }
+        let lo = b * POINTS_BLOCK;
+        let bn = (n - lo).min(POINTS_BLOCK);
+        tile.load(rows, lo, bn);
+        xn[..bn].copy_from_slice(&x_norms[lo..lo + bn]);
+        for c in 0..k {
+            if !bmask[c] {
+                continue;
+            }
+            dot_dist_dispatch(&tile.xt, dim, centroids, c, c_norms[c], &xn, &mut dist, tier);
+            for i in 0..bn {
+                out[(lo + i) * k + c] = dist[i];
+            }
+            computed += bn as u64;
+        }
+    }
+    computed
+}
+
+/// Tier dispatch for one dot-policy centroid column (shared by the
+/// matrix and pruned kernels). `tier` has already passed
+/// [`assert_tier_supported`] and [`dot_tier`].
+#[allow(clippy::too_many_arguments)]
+fn dot_dist_dispatch(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    c: usize,
+    cn: f32,
+    xn: &[f32; POINTS_BLOCK],
+    dist: &mut [f32; POINTS_BLOCK],
+    tier: KernelTier,
+) {
+    match tier {
+        KernelTier::Scalar => dot_dist_block_scalar(xt, dim, mu, c, cn, xn, dist),
+        #[cfg(target_arch = "x86_64")]
+        // safety: dot_tier() confirmed avx2 + fma on this host
+        KernelTier::Avx2 => unsafe { x86dot::dist_block(xt, dim, mu, c, cn, xn, dist) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { armdot::dist_block(xt, dim, mu, c, cn, xn, dist) },
+        #[allow(unreachable_patterns)]
+        _ => dot_dist_block_scalar(xt, dim, mu, c, cn, xn, dist),
+    }
+}
+
 // ---- scalar tier (reference semantics for every other tier) ------------
 
 fn argmin_block_scalar(
@@ -531,6 +925,93 @@ fn dist_block_scalar(
             acc += diff * diff;
         }
         dist[i] = acc;
+    }
+}
+
+// ---- scalar dot-policy micro-kernels -----------------------------------
+//
+// Distance evaluation order mirrors the SIMD tiers' grouping —
+// `(‖x‖² + ‖μ‖²) − 2·(x·μ)` clamped at 0 — but the dot product itself
+// accumulates mul+add while the SIMD tiers fuse (FMA), so cross-tier
+// bit-identity is intentionally NOT promised under `Dot` (module docs).
+
+#[allow(clippy::too_many_arguments)]
+fn dot_argmin_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    cn: &[f32],
+    c0: usize,
+    c1: usize,
+    xn: &[f32; POINTS_BLOCK],
+    best_d: &mut [f32; POINTS_BLOCK],
+    best_i: &mut [i32; POINTS_BLOCK],
+) {
+    for c in c0..c1 {
+        let muc = &mu[c * dim..(c + 1) * dim];
+        let base_c = cn[c];
+        for i in 0..POINTS_BLOCK {
+            let mut acc = 0.0f32;
+            for (j, &m) in muc.iter().enumerate() {
+                acc += xt[j * POINTS_BLOCK + i] * m;
+            }
+            let dist = ((xn[i] + base_c) - 2.0 * acc).max(0.0);
+            if dist < best_d[i] {
+                best_d[i] = dist;
+                best_i[i] = c as i32;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot_two_nearest_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    cn: &[f32],
+    k: usize,
+    xn: &[f32; POINTS_BLOCK],
+    d1: &mut [f32; POINTS_BLOCK],
+    d2: &mut [f32; POINTS_BLOCK],
+    bi: &mut [i32; POINTS_BLOCK],
+) {
+    for c in 0..k {
+        let muc = &mu[c * dim..(c + 1) * dim];
+        let base_c = cn[c];
+        for i in 0..POINTS_BLOCK {
+            let mut acc = 0.0f32;
+            for (j, &m) in muc.iter().enumerate() {
+                acc += xt[j * POINTS_BLOCK + i] * m;
+            }
+            let dist = ((xn[i] + base_c) - 2.0 * acc).max(0.0);
+            if dist < d1[i] {
+                d2[i] = d1[i];
+                d1[i] = dist;
+                bi[i] = c as i32;
+            } else if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+    }
+}
+
+fn dot_dist_block_scalar(
+    xt: &[f32],
+    dim: usize,
+    mu: &[f32],
+    c: usize,
+    cn: f32,
+    xn: &[f32; POINTS_BLOCK],
+    dist: &mut [f32; POINTS_BLOCK],
+) {
+    let muc = &mu[c * dim..(c + 1) * dim];
+    for i in 0..POINTS_BLOCK {
+        let mut acc = 0.0f32;
+        for (j, &m) in muc.iter().enumerate() {
+            acc += xt[j * POINTS_BLOCK + i] * m;
+        }
+        dist[i] = ((xn[i] + cn) - 2.0 * acc).max(0.0);
     }
 }
 
@@ -628,6 +1109,161 @@ mod x86 {
     }
 }
 
+// ---- AVX2+FMA dot-policy micro-kernels (x86_64) ------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86dot {
+    use super::POINTS_BLOCK;
+    use std::arch::x86_64::*;
+
+    const L: usize = 8;
+
+    /// Dot product of one 8-point sub-column with centroid `muc`,
+    /// FMA-accumulated in ascending-`j` order.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot8(xt: &[f32], sub: usize, muc: *const f32, dim: usize) -> __m256 {
+        let mut acc = _mm256_setzero_ps();
+        for j in 0..dim {
+            let xv = _mm256_loadu_ps(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+            let mv = _mm256_set1_ps(*muc.add(j));
+            acc = _mm256_fmadd_ps(xv, mv, acc);
+        }
+        acc
+    }
+
+    /// `max(0, (‖x‖² + ‖μ‖²) − 2·acc)` — one fused multiply-add, then
+    /// the non-negativity clamp (Elkan/Hamerly take square roots).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dist_from(acc: __m256, xn: __m256, cn: f32) -> __m256 {
+        let base = _mm256_add_ps(xn, _mm256_set1_ps(cn));
+        let d = _mm256_fmadd_ps(_mm256_set1_ps(-2.0), acc, base);
+        _mm256_max_ps(_mm256_setzero_ps(), d)
+    }
+
+    /// Register-blocked argmin sweep: two centroid accumulators live
+    /// per FMA loop (hides the fmadd latency chain), argmin updates in
+    /// ascending centroid order (first-lowest-index ties preserved).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn argmin_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        cn: &[f32],
+        c0: usize,
+        c1: usize,
+        xnorm: &[f32; POINTS_BLOCK],
+        best_d: &mut [f32; POINTS_BLOCK],
+        best_i: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = _mm256_loadu_ps(xnorm.as_ptr().add(sub * L));
+            let mut bd = _mm256_loadu_ps(best_d.as_ptr().add(sub * L));
+            let mut bi = _mm256_loadu_si256(best_i.as_ptr().add(sub * L) as *const __m256i);
+            let mut c = c0;
+            while c + 2 <= c1 {
+                let mu0 = mu.as_ptr().add(c * dim);
+                let mu1 = mu.as_ptr().add((c + 1) * dim);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                for j in 0..dim {
+                    let xv = _mm256_loadu_ps(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+                    a0 = _mm256_fmadd_ps(xv, _mm256_set1_ps(*mu0.add(j)), a0);
+                    a1 = _mm256_fmadd_ps(xv, _mm256_set1_ps(*mu1.add(j)), a1);
+                }
+                let d0 = dist_from(a0, xn, cn[c]);
+                let d1 = dist_from(a1, xn, cn[c + 1]);
+                let lt0 = _mm256_cmp_ps::<_CMP_LT_OQ>(d0, bd);
+                bd = _mm256_blendv_ps(bd, d0, lt0);
+                bi = _mm256_blendv_epi8(
+                    bi,
+                    _mm256_set1_epi32(c as i32),
+                    _mm256_castps_si256(lt0),
+                );
+                let lt1 = _mm256_cmp_ps::<_CMP_LT_OQ>(d1, bd);
+                bd = _mm256_blendv_ps(bd, d1, lt1);
+                bi = _mm256_blendv_epi8(
+                    bi,
+                    _mm256_set1_epi32((c + 1) as i32),
+                    _mm256_castps_si256(lt1),
+                );
+                c += 2;
+            }
+            if c < c1 {
+                let acc = dot8(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let d = dist_from(acc, xn, cn[c]);
+                let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(d, bd);
+                bd = _mm256_blendv_ps(bd, d, lt);
+                bi = _mm256_blendv_epi8(
+                    bi,
+                    _mm256_set1_epi32(c as i32),
+                    _mm256_castps_si256(lt),
+                );
+            }
+            _mm256_storeu_ps(best_d.as_mut_ptr().add(sub * L), bd);
+            _mm256_storeu_si256(best_i.as_mut_ptr().add(sub * L) as *mut __m256i, bi);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn two_nearest_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        cn: &[f32],
+        k: usize,
+        xnorm: &[f32; POINTS_BLOCK],
+        d1: &mut [f32; POINTS_BLOCK],
+        d2: &mut [f32; POINTS_BLOCK],
+        bi: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = _mm256_loadu_ps(xnorm.as_ptr().add(sub * L));
+            let mut v1 = _mm256_loadu_ps(d1.as_ptr().add(sub * L));
+            let mut v2 = _mm256_loadu_ps(d2.as_ptr().add(sub * L));
+            let mut vi = _mm256_loadu_si256(bi.as_ptr().add(sub * L) as *const __m256i);
+            for c in 0..k {
+                let acc = dot8(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let d = dist_from(acc, xn, cn[c]);
+                let lt1 = _mm256_cmp_ps::<_CMP_LT_OQ>(d, v1);
+                let lt2 = _mm256_cmp_ps::<_CMP_LT_OQ>(d, v2);
+                // d2' = d<d1 ? d1 : (d<d2 ? d : d2)
+                v2 = _mm256_blendv_ps(_mm256_blendv_ps(v2, d, lt2), v1, lt1);
+                v1 = _mm256_blendv_ps(v1, d, lt1);
+                vi = _mm256_blendv_epi8(
+                    vi,
+                    _mm256_set1_epi32(c as i32),
+                    _mm256_castps_si256(lt1),
+                );
+            }
+            _mm256_storeu_ps(d1.as_mut_ptr().add(sub * L), v1);
+            _mm256_storeu_ps(d2.as_mut_ptr().add(sub * L), v2);
+            _mm256_storeu_si256(bi.as_mut_ptr().add(sub * L) as *mut __m256i, vi);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c: usize,
+        cn: f32,
+        xnorm: &[f32; POINTS_BLOCK],
+        dist: &mut [f32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = _mm256_loadu_ps(xnorm.as_ptr().add(sub * L));
+            let acc = dot8(xt, sub, mu.as_ptr().add(c * dim), dim);
+            _mm256_storeu_ps(dist.as_mut_ptr().add(sub * L), dist_from(acc, xn, cn));
+        }
+    }
+}
+
 // ---- NEON tier (aarch64) -----------------------------------------------
 
 #[cfg(target_arch = "aarch64")]
@@ -714,6 +1350,141 @@ mod arm {
         for sub in 0..POINTS_BLOCK / L {
             let acc = sqdist4(xt, sub, mu.as_ptr().add(c * dim), dim);
             vst1q_f32(dist.as_mut_ptr().add(sub * L), acc);
+        }
+    }
+}
+
+// ---- NEON dot-policy micro-kernels (aarch64) ---------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod armdot {
+    use super::POINTS_BLOCK;
+    use std::arch::aarch64::*;
+
+    const L: usize = 4;
+
+    /// FMA dot product (`vfmaq` fuses — the intended `Dot` semantics).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dot4(xt: &[f32], sub: usize, muc: *const f32, dim: usize) -> float32x4_t {
+        let mut acc = vdupq_n_f32(0.0);
+        for j in 0..dim {
+            let xv = vld1q_f32(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+            let mv = vdupq_n_f32(*muc.add(j));
+            acc = vfmaq_f32(acc, xv, mv);
+        }
+        acc
+    }
+
+    /// `max(0, (‖x‖² + ‖μ‖²) − 2·acc)` — fused, then clamped.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dist_from(acc: float32x4_t, xn: float32x4_t, cn: f32) -> float32x4_t {
+        let base = vaddq_f32(xn, vdupq_n_f32(cn));
+        let d = vfmaq_f32(base, vdupq_n_f32(-2.0), acc);
+        vmaxq_f32(vdupq_n_f32(0.0), d)
+    }
+
+    /// Register-blocked argmin sweep: two centroid accumulators per FMA
+    /// loop, argmin updates in ascending centroid order.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn argmin_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        cn: &[f32],
+        c0: usize,
+        c1: usize,
+        xnorm: &[f32; POINTS_BLOCK],
+        best_d: &mut [f32; POINTS_BLOCK],
+        best_i: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = vld1q_f32(xnorm.as_ptr().add(sub * L));
+            let mut bd = vld1q_f32(best_d.as_ptr().add(sub * L));
+            let mut bi = vld1q_s32(best_i.as_ptr().add(sub * L));
+            let mut c = c0;
+            while c + 2 <= c1 {
+                let mu0 = mu.as_ptr().add(c * dim);
+                let mu1 = mu.as_ptr().add((c + 1) * dim);
+                let mut a0 = vdupq_n_f32(0.0);
+                let mut a1 = vdupq_n_f32(0.0);
+                for j in 0..dim {
+                    let xv = vld1q_f32(xt.as_ptr().add(j * POINTS_BLOCK + sub * L));
+                    a0 = vfmaq_f32(a0, xv, vdupq_n_f32(*mu0.add(j)));
+                    a1 = vfmaq_f32(a1, xv, vdupq_n_f32(*mu1.add(j)));
+                }
+                let d0 = dist_from(a0, xn, cn[c]);
+                let d1 = dist_from(a1, xn, cn[c + 1]);
+                let lt0 = vcltq_f32(d0, bd);
+                bd = vbslq_f32(lt0, d0, bd);
+                bi = vbslq_s32(lt0, vdupq_n_s32(c as i32), bi);
+                let lt1 = vcltq_f32(d1, bd);
+                bd = vbslq_f32(lt1, d1, bd);
+                bi = vbslq_s32(lt1, vdupq_n_s32((c + 1) as i32), bi);
+                c += 2;
+            }
+            if c < c1 {
+                let acc = dot4(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let d = dist_from(acc, xn, cn[c]);
+                let lt = vcltq_f32(d, bd);
+                bd = vbslq_f32(lt, d, bd);
+                bi = vbslq_s32(lt, vdupq_n_s32(c as i32), bi);
+            }
+            vst1q_f32(best_d.as_mut_ptr().add(sub * L), bd);
+            vst1q_s32(best_i.as_mut_ptr().add(sub * L), bi);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn two_nearest_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        cn: &[f32],
+        k: usize,
+        xnorm: &[f32; POINTS_BLOCK],
+        d1: &mut [f32; POINTS_BLOCK],
+        d2: &mut [f32; POINTS_BLOCK],
+        bi: &mut [i32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = vld1q_f32(xnorm.as_ptr().add(sub * L));
+            let mut v1 = vld1q_f32(d1.as_ptr().add(sub * L));
+            let mut v2 = vld1q_f32(d2.as_ptr().add(sub * L));
+            let mut vi = vld1q_s32(bi.as_ptr().add(sub * L));
+            for c in 0..k {
+                let acc = dot4(xt, sub, mu.as_ptr().add(c * dim), dim);
+                let d = dist_from(acc, xn, cn[c]);
+                let lt1 = vcltq_f32(d, v1);
+                let lt2 = vcltq_f32(d, v2);
+                v2 = vbslq_f32(lt1, v1, vbslq_f32(lt2, d, v2));
+                v1 = vbslq_f32(lt1, d, v1);
+                vi = vbslq_s32(lt1, vdupq_n_s32(c as i32), vi);
+            }
+            vst1q_f32(d1.as_mut_ptr().add(sub * L), v1);
+            vst1q_f32(d2.as_mut_ptr().add(sub * L), v2);
+            vst1q_s32(bi.as_mut_ptr().add(sub * L), vi);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dist_block(
+        xt: &[f32],
+        dim: usize,
+        mu: &[f32],
+        c: usize,
+        cn: f32,
+        xnorm: &[f32; POINTS_BLOCK],
+        dist: &mut [f32; POINTS_BLOCK],
+    ) {
+        for sub in 0..POINTS_BLOCK / L {
+            let xn = vld1q_f32(xnorm.as_ptr().add(sub * L));
+            let acc = dot4(xt, sub, mu.as_ptr().add(c * dim), dim);
+            vst1q_f32(dist.as_mut_ptr().add(sub * L), dist_from(acc, xn, cn));
         }
     }
 }
@@ -991,6 +1762,303 @@ mod tests {
                         crate::linalg::sqdist(&rows[i * d..(i + 1) * d], &mu[c * d..(c + 1) * d]);
                     assert_eq!(out[i * k + c], want, "{tier} ({i},{c})");
                 }
+            }
+        }
+    }
+
+    // ---- dot-policy (norm-trick) kernels -------------------------------
+
+    fn norms_of(rows: &[f32], d: usize) -> Vec<f32> {
+        row_norms_vec(rows, d)
+    }
+
+    /// f64 reference squared distance (no norm trick, no f32 rounding).
+    fn refdist(p: &[f32], c: &[f32]) -> f64 {
+        crate::linalg::sqdist_f64(p, c)
+    }
+
+    #[test]
+    fn distance_policy_parse_and_display() {
+        for p in [DistancePolicy::Exact, DistancePolicy::Dot] {
+            assert_eq!(p.to_string().parse::<DistancePolicy>().unwrap(), p);
+        }
+        assert!("cosine".parse::<DistancePolicy>().is_err());
+        assert_eq!(DistancePolicy::default(), DistancePolicy::Exact);
+    }
+
+    #[test]
+    fn row_norms_match_sqdist_to_origin() {
+        prop::check("row norms == sqdist(x, 0)", 16, |g| {
+            let d = *g.choice(&[1usize, 2, 3, 17]);
+            let n = g.usize_in(1, 150);
+            let rows = g.points(n, d, 7.0);
+            let norms = norms_of(&rows, d);
+            let zero = vec![0.0f32; d];
+            for i in 0..n {
+                let want = crate::linalg::sqdist(&rows[i * d..(i + 1) * d], &zero);
+                prop::ensure(norms[i] == want, format!("row {i}: {} != {want}", norms[i]))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqdist_matrix_dot_within_tolerance_of_reference() {
+        prop::check("dot matrix ~= f64 reference", 16, |g| {
+            let d = *g.choice(&[1usize, 2, 3, 5, 17]);
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(1, 9);
+            let rows = g.points(n, d, 8.0);
+            let mu = g.points(k, d, 8.0);
+            let xn = norms_of(&rows, d);
+            let cn = norms_of(&mu, d);
+            for tier in tiers() {
+                let mut out = vec![0.0f32; n * k];
+                sqdist_matrix_dot(&rows, d, &mu, k, &xn, &cn, &mut out, tier);
+                for i in 0..n {
+                    for c in 0..k {
+                        let want = refdist(&rows[i * d..(i + 1) * d], &mu[c * d..(c + 1) * d]);
+                        let got = out[i * k + c] as f64;
+                        // cancellation scale: the norms the trick subtracts
+                        let scale = (xn[i] + cn[c]) as f64;
+                        prop::ensure(
+                            got >= 0.0 && (got - want).abs() <= 1e-4 * scale.max(1.0),
+                            format!("{tier}: ({i},{c}) got {got} want {want}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assign_accumulate_dot_picks_near_optimal_centroids() {
+        // dot argmin may legitimately differ from exact on razor-thin
+        // ties; what it must never do is pick a centroid measurably
+        // farther than the true nearest
+        prop::check("dot argmin near-optimal", 16, |g| {
+            let d = *g.choice(&[2usize, 3, 17]);
+            let n = g.usize_in(1, 250);
+            let k = g.usize_in(1, 12);
+            let rows = g.points(n, d, 10.0);
+            let mu = g.points(k, d, 10.0);
+            let xn = norms_of(&rows, d);
+            let cn = norms_of(&mu, d);
+            for tier in tiers() {
+                let mut assign = vec![-1i32; n];
+                let mut sums = vec![0.0f64; k * d];
+                let mut counts = vec![0u64; k];
+                let mut sse = 0.0f64;
+                assign_accumulate_dot(
+                    &rows, d, &mu, k, &xn, &cn, &mut assign, &mut sums, &mut counts, &mut sse,
+                    tier,
+                );
+                prop::ensure(counts.iter().sum::<u64>() == n as u64, "counts != n")?;
+                for i in 0..n {
+                    let p = &rows[i * d..(i + 1) * d];
+                    let chosen = refdist(p, &mu[assign[i] as usize * d..]);
+                    let best = (0..k)
+                        .map(|c| refdist(p, &mu[c * d..(c + 1) * d]))
+                        .fold(f64::INFINITY, f64::min);
+                    let slack = 1e-4 * (xn[i] as f64 + 1.0);
+                    prop::ensure(
+                        chosen <= best + slack,
+                        format!("{tier}: point {i} chose {chosen} vs best {best}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_ties_break_to_first_lowest_index_both_policies() {
+        // duplicate every centroid after the original block: identical
+        // inputs produce identical per-tier distances, so the strict-<
+        // ascending-index argmin must never select a later duplicate
+        prop::check("tie-break first-lowest-index", 16, |g| {
+            let d = *g.choice(&[1usize, 2, 3, 17]);
+            let n = g.usize_in(1, 200);
+            let kbase = g.usize_in(1, 9);
+            let rows = g.points(n, d, 6.0);
+            let base = g.points(kbase, d, 6.0);
+            let mut mu = base.clone();
+            mu.extend_from_slice(&base); // k = 2 × kbase, exact duplicates
+            let k = 2 * kbase;
+            let xn = norms_of(&rows, d);
+            let cn = norms_of(&mu, d);
+            for tier in tiers() {
+                let mut sums = vec![0.0f64; k * d];
+                let mut counts = vec![0u64; k];
+                let mut sse = 0.0f64;
+
+                let mut a_exact = vec![-1i32; n];
+                assign_accumulate(
+                    &rows, d, &mu, k, &mut a_exact, &mut sums, &mut counts, &mut sse, tier,
+                );
+                for (i, &a) in a_exact.iter().enumerate() {
+                    prop::ensure(
+                        (a as usize) < kbase,
+                        format!("{tier} exact: point {i} picked duplicate {a}"),
+                    )?;
+                }
+
+                sums.iter_mut().for_each(|v| *v = 0.0);
+                counts.iter_mut().for_each(|v| *v = 0);
+                sse = 0.0;
+                let mut a_dot = vec![-1i32; n];
+                assign_accumulate_dot(
+                    &rows, d, &mu, k, &xn, &cn, &mut a_dot, &mut sums, &mut counts, &mut sse,
+                    tier,
+                );
+                for (i, &a) in a_dot.iter().enumerate() {
+                    prop::ensure(
+                        (a as usize) < kbase,
+                        format!("{tier} dot: point {i} picked duplicate {a}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_agrees_with_exact_on_paper_gmms() {
+        // the cross-policy acceptance contract at the kernel level:
+        // identical assignments on the paper's 2D/3D GMM families
+        for (dim, k) in [(2usize, 8usize), (3, 4)] {
+            let spec = if dim == 2 {
+                crate::data::MixtureSpec::paper_2d(k)
+            } else {
+                crate::data::MixtureSpec::paper_3d(k)
+            };
+            let ds = spec.generate(20_003, 42); // ragged tail block
+            let mu: Vec<f32> = ds.rows(0, k).to_vec();
+            let xn = norms_of(ds.raw(), dim);
+            let cn = norms_of(&mu, dim);
+            let (a_exact, ..) = run_aa(ds.raw(), dim, &mu, k, KernelTier::Scalar);
+            for tier in tiers() {
+                let n = ds.len();
+                let mut assign = vec![-1i32; n];
+                let mut sums = vec![0.0f64; k * dim];
+                let mut counts = vec![0u64; k];
+                let mut sse = 0.0f64;
+                assign_accumulate_dot(
+                    ds.raw(), dim, &mu, k, &xn, &cn, &mut assign, &mut sums, &mut counts,
+                    &mut sse, tier,
+                );
+                assert_eq!(assign, a_exact, "dot({tier}) diverged on paper {dim}D");
+            }
+        }
+    }
+
+    #[test]
+    fn two_nearest_dot_ordering_and_tolerance() {
+        prop::check("dot two-nearest ~= reference", 12, |g| {
+            let d = *g.choice(&[2usize, 3, 9]);
+            let n = g.usize_in(1, 150);
+            let k = g.usize_in(2, 10);
+            let rows = g.points(n, d, 8.0);
+            let mu = g.points(k, d, 8.0);
+            let xn = norms_of(&rows, d);
+            let cn = norms_of(&mu, d);
+            for tier in tiers() {
+                let mut assign = vec![0i32; n];
+                let mut d1 = vec![0.0f32; n];
+                let mut d2 = vec![0.0f32; n];
+                assign_two_nearest_dot(
+                    &rows, d, &mu, k, &xn, &cn, &mut assign, &mut d1, &mut d2, tier,
+                );
+                for i in 0..n {
+                    prop::ensure(
+                        d1[i] >= 0.0 && d1[i] <= d2[i],
+                        format!("{tier}: point {i} d1 {} > d2 {}", d1[i], d2[i]),
+                    )?;
+                    let p = &rows[i * d..(i + 1) * d];
+                    let best = (0..k)
+                        .map(|c| refdist(p, &mu[c * d..(c + 1) * d]))
+                        .fold(f64::INFINITY, f64::min);
+                    let slack = 1e-4 * (xn[i] as f64 + 1.0);
+                    prop::ensure(
+                        (d1[i] as f64 - best).abs() <= slack,
+                        format!("{tier}: point {i} d1 {} vs best {best}", d1[i]),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pruned_mask_edges_both_policies() {
+        // empty mask, full mask, and a single-row tail block — the mask
+        // edge cases for both distance formulations
+        let mut g = prop::Gen::new(0xED6E);
+        let d = 3usize;
+        let n = POINTS_BLOCK + 1; // second block holds exactly one row
+        let k = 5usize;
+        let rows = g.points(n, d, 5.0);
+        let mu = g.points(k, d, 5.0);
+        let xn = norms_of(&rows, d);
+        let cn = norms_of(&mu, d);
+        let nblocks = n.div_ceil(POINTS_BLOCK);
+        assert_eq!(nblocks, 2);
+        let sentinel = -7.0f32;
+
+        for tier in tiers() {
+            // empty mask: nothing computed, nothing touched
+            let empty = vec![false; nblocks * k];
+            for dot in [false, true] {
+                let mut out = vec![sentinel; n * k];
+                let computed = if dot {
+                    sqdist_pruned_dot(&rows, d, &mu, k, &xn, &cn, &empty, &mut out, tier)
+                } else {
+                    sqdist_pruned(&rows, d, &mu, k, &empty, &mut out, tier)
+                };
+                assert_eq!(computed, 0, "{tier} dot={dot}: empty mask computed pairs");
+                assert!(
+                    out.iter().all(|&v| v == sentinel),
+                    "{tier} dot={dot}: empty mask wrote entries"
+                );
+            }
+
+            // full mask: bitwise the dense matrix of the same policy
+            let full = vec![true; nblocks * k];
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            let mut dense = vec![0.0f32; n * k];
+            let mut pruned = vec![sentinel; n * k];
+            sqdist_matrix(&rows, d, &mu, k, &mut dense, tier);
+            let computed = sqdist_pruned(&rows, d, &mu, k, &full, &mut pruned, tier);
+            assert_eq!(computed, (n * k) as u64, "{tier}: full-mask count");
+            assert_eq!(bits(&pruned), bits(&dense), "{tier}: exact full mask");
+            let mut dense_dot = vec![0.0f32; n * k];
+            let mut pruned_dot = vec![sentinel; n * k];
+            sqdist_matrix_dot(&rows, d, &mu, k, &xn, &cn, &mut dense_dot, tier);
+            let computed =
+                sqdist_pruned_dot(&rows, d, &mu, k, &xn, &cn, &full, &mut pruned_dot, tier);
+            assert_eq!(computed, (n * k) as u64, "{tier}: dot full-mask count");
+            assert_eq!(bits(&pruned_dot), bits(&dense_dot), "{tier}: dot full mask");
+
+            // single-row tail block: only the tail's masked column is
+            // evaluated, and it counts exactly one pair
+            let mut tail = vec![false; nblocks * k];
+            tail[k + 2] = true; // block 1 (the 1-row tail), centroid 2
+            for dot in [false, true] {
+                let mut out = vec![sentinel; n * k];
+                let computed = if dot {
+                    sqdist_pruned_dot(&rows, d, &mu, k, &xn, &cn, &tail, &mut out, tier)
+                } else {
+                    sqdist_pruned(&rows, d, &mu, k, &tail, &mut out, tier)
+                };
+                assert_eq!(computed, 1, "{tier} dot={dot}: tail count");
+                let touched: Vec<usize> =
+                    (0..n * k).filter(|&i| out[i] != sentinel).collect();
+                assert_eq!(
+                    touched,
+                    vec![POINTS_BLOCK * k + 2],
+                    "{tier} dot={dot}: tail wrote the wrong entries"
+                );
             }
         }
     }

@@ -29,7 +29,7 @@
 
 use std::path::PathBuf;
 
-use parakmeans::config::{parse_bytes, Engine, Init, RunConfig, SchedMode};
+use parakmeans::config::{parse_bytes, DistancePolicy, Engine, Init, RunConfig, SchedMode};
 use parakmeans::coordinator::{offload, shared};
 use parakmeans::data::source::{DataSource, FileSource, GmmSource};
 use parakmeans::data::{gmm::MixtureSpec, io, Dataset};
@@ -100,6 +100,7 @@ fn print_usage() {
          \u{20}          --k K [--threads P] [--tol T] [--max-iters M] [--seed S]\n\
          \u{20}          [--init random|kmeans++] [--chunk C] [--artifacts DIR] [--assign-out FILE]\n\
          \u{20}          [--kernel auto|scalar|avx2|neon] [--save-model FILE.pkm]\n\
+         \u{20}          [--distance exact|dot]   (pure-rust engines; exact = bit-identity default)\n\
          \u{20}          [--sched static|steal]   (threads/elkan/hamerly chunk scheduler)\n\
          \u{20}          [--memory-budget BYTES[K|M|G]]   (oocore: bound resident chunk buffers)\n\
          \u{20}          [--workers a:p1,b:p2,...] [--net-timeout SECS]   (dist: shard workers)\n\
@@ -108,7 +109,8 @@ fn print_usage() {
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
          serve     --model <file.pkm> | (--input <file> | --synthetic <2d|3d>:<N>)  --k K\n\
          \u{20}          [--addr HOST:PORT] [--max-batch B] [--max-delay-ms T] [--max-conns C]\n\
-         \u{20}          [--artifacts DIR]   ({{\"stats\": true}} probes live counters)\n\
+         \u{20}          [--artifacts DIR] [--distance exact|dot]\n\
+         \u{20}          ({{\"stats\": true}} probes live counters)\n\
          info      [--artifacts DIR]"
     );
 }
@@ -226,6 +228,15 @@ fn load_input(args: &Args) -> Result<Dataset> {
     Err(Error::Config("provide --input <file> or --synthetic <2d|3d>:<N>".into()))
 }
 
+/// Resolve the distance policy: `--distance` wins, else the
+/// `PARAKM_DISTANCE` env var, else `exact` (the bit-identity default).
+fn distance_from(args: &Args) -> Result<DistancePolicy> {
+    match args.get("distance") {
+        Some(v) => v.parse(),
+        None => DistancePolicy::from_env(),
+    }
+}
+
 /// Parse a `--synthetic <2d|3d>:<N>` spec into `(dim, n)`.
 fn parse_synthetic(spec: &str) -> Result<(usize, usize)> {
     let (dim_s, n_s) = spec
@@ -279,6 +290,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     });
     let kernel_flag: Option<KernelChoice> =
         args.get("kernel").map(|v| v.parse()).transpose()?;
+    let distance = distance_from(args)?;
+    // the norm-trick path lives in the pure-rust kernels; the AOT
+    // coordinator engines run their own executables — reject instead
+    // of silently serving exact distances under a dot request
+    if distance == DistancePolicy::Dot && !engine.supports_distance_policy() {
+        return Err(Error::Config(format!(
+            "--distance dot applies to the pure-rust engines, not `{engine}`"
+        )));
+    }
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     let assign_out = args.get("assign-out").map(PathBuf::from);
@@ -294,7 +314,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let kernel_choice = kernel_flag.unwrap_or(KernelChoice::Auto);
 
-    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+    let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
     let t0 = std::time::Instant::now();
     let (result, setup, engine_wall) = match engine {
         Engine::Serial => (kmeans::serial::run(&ds, &kc), 0.0, None),
@@ -315,7 +335,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         Engine::Shared => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
-                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
             };
             let run = shared::run(&ds, &cfg, threads)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -323,7 +343,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         Engine::Offload => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
-                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
             };
             let run = offload::run(&ds, &cfg)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -334,7 +354,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .or_config("--engine streaming requires --input <file.pkd>")?;
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
-                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice,
+                memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
             };
             let run =
                 parakmeans::coordinator::streaming::run_file(std::path::Path::new(path), &cfg)?;
@@ -347,6 +367,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     println!("engine      : {engine}");
     println!("kernel tier : {tier} (requested: {kernel_choice})");
+    println!("distance    : {distance}");
     println!("dataset     : {} points, {}D", ds.len(), ds.dim());
     println!("k           : {k}   init: {init:?}   seed: {seed}");
     println!(
@@ -450,6 +471,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     };
     let kernel_flag: Option<KernelChoice> =
         args.get("kernel").map(|v| v.parse()).transpose()?;
+    let distance = distance_from(args)?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
 
@@ -500,10 +522,11 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         batch: 8192,
         artifacts_dir: "artifacts".into(),
         kernel: kernel_choice,
+        distance,
     };
     cfg.validate()?;
     let opts = StreamOpts::from_run_config(&cfg, source.dim())?;
-    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+    let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
 
     let t0 = std::time::Instant::now();
     let result = streaming::run(source.as_ref(), &kc, &opts)?;
@@ -512,6 +535,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     let payload_bytes = source.len() * source.dim() * 4;
     println!("engine      : oocore");
     println!("kernel tier : {tier} (requested: {kernel_choice})");
+    println!("distance    : {distance}");
     println!("source      : {}", source.describe());
     println!(
         "residency   : {} chunk-buffer bytes ({} shards × {} rows) + {} assignment bytes; \
@@ -574,6 +598,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let seed: u64 = args.get_or("seed", 42)?;
     let init: Init = args.get_or("init", Init::Random)?;
     let net_timeout: f64 = args.get_or("net-timeout", 120.0)?;
+    let distance = distance_from(args)?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
     args.finish()?;
@@ -581,7 +606,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
         return Err(Error::Config("--net-timeout must be in (0, 86400] seconds".into()));
     }
-    let kc = KmeansConfig { k, tol, max_iters, seed, init };
+    let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
     let opts = DistOpts {
         connect_timeout: std::time::Duration::from_secs_f64(net_timeout.min(10.0)),
         io_timeout: std::time::Duration::from_secs_f64(net_timeout),
@@ -596,6 +621,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let net = &run.net;
 
     println!("engine      : dist");
+    println!("distance    : {distance}");
     println!("workers     : {} ({})", net.workers, addrs.join(", "));
     println!("dataset     : {n} points, {dim}D (sharded across workers)");
     println!("k           : {k}   init: {init:?}   seed: {seed}");
@@ -797,6 +823,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch: usize = args.get_or("max-batch", 4096)?;
     let max_delay_ms: u64 = args.get_or("max-delay-ms", 2)?;
     let max_conns: usize = args.get_or("max-conns", 64)?;
+    let distance = distance_from(args)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
 
@@ -848,6 +875,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batcher: BatcherConfig {
             max_batch,
             max_delay: std::time::Duration::from_millis(max_delay_ms),
+            distance,
         },
         queue_depth: 256,
         max_conns,

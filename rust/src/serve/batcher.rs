@@ -11,6 +11,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::linalg::kernel::{self, DistancePolicy};
 use crate::runtime::manifest::ExecKind;
 use crate::runtime::{Runtime, TensorArg};
 use crate::serve::protocol::{Request, Response};
@@ -23,11 +24,20 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Maximum time the first staged request may wait.
     pub max_delay: Duration,
+    /// How the host-side response distances are computed (`--distance`;
+    /// DESIGN.md §11): `Exact` is the subtract-square reference, `Dot`
+    /// reuses the batch's staged point norms and the centroid norms
+    /// cached at construction.
+    pub distance: DistancePolicy,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 4096, max_delay: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch: 4096,
+            max_delay: Duration::from_millis(2),
+            distance: DistancePolicy::Exact,
+        }
     }
 }
 
@@ -55,6 +65,9 @@ pub struct Batcher {
     rt: Runtime,
     spec: crate::runtime::ExecSpec,
     centroids: Vec<f32>,
+    /// Per-centroid `‖μ‖²`, computed once at construction (the model is
+    /// fixed) — the `dot` policy's centroid-norm cache.
+    c_norms: Vec<f32>,
     dim: usize,
     #[allow(dead_code)] // retained for a future /stats endpoint
     k: usize,
@@ -65,6 +78,13 @@ pub struct Batcher {
     /// connection threads can answer `{"stats": true}` without a round
     /// trip through the batcher queue.
     shared: Option<std::sync::Arc<std::sync::Mutex<BatcherStats>>>,
+    // ---- flush scratch, reused across batches (no per-request
+    // allocation churn): the staged device buffer, its per-row norms
+    // (dot policy), and the request spans of the in-flight stage ------
+    x: Vec<f32>,
+    x_norms: Vec<f32>,
+    spans: Vec<(usize, usize, usize)>,
+    filled: usize,
 }
 
 impl Batcher {
@@ -99,16 +119,22 @@ impl Batcher {
             .ok_or_else(|| Error::Manifest("no assign artifacts".into()))?;
         let spec = rt.find(ExecKind::Assign, dim, k, chunk)?;
         rt.prepare(&spec)?;
+        let c_norms = kernel::row_norms_vec(&centroids, dim);
         Ok(Batcher {
             rt,
             spec,
             centroids,
+            c_norms,
             dim,
             k,
             chunk,
             cfg: BatcherConfig { max_batch: cfg.max_batch.min(chunk), ..cfg },
             stats: BatcherStats::default(),
             shared: None,
+            x: vec![0.0f32; chunk * dim],
+            x_norms: vec![0.0f32; chunk],
+            spans: Vec::new(),
+            filled: 0,
         })
     }
 
@@ -187,65 +213,8 @@ impl Batcher {
         }
 
         let mut pending: Vec<(Job, Vec<i32>, Vec<f32>)> = Vec::new();
-        let mut x = vec![0.0f32; self.chunk * self.dim];
-        let mut filled = 0usize;
-        // (job index, offset-in-batch, count)
-        let mut spans: Vec<(usize, usize, usize)> = Vec::new();
-
-        let flush_device =
-            |this: &mut Batcher,
-             x: &mut Vec<f32>,
-             filled: &mut usize,
-             spans: &mut Vec<(usize, usize, usize)>,
-             pending: &mut Vec<(Job, Vec<i32>, Vec<f32>)>| {
-                if *filled == 0 {
-                    return;
-                }
-                let nv = [*filled as i32];
-                let result = this.rt.execute(
-                    &this.spec,
-                    &[
-                        TensorArg::F32(&x[..]),
-                        TensorArg::F32(&this.centroids),
-                        TensorArg::I32(&nv),
-                    ],
-                );
-                this.stats.device_calls += 1;
-                this.stats.padded_rows += (this.chunk - *filled) as u64;
-                match result {
-                    Ok(outs) => {
-                        let assign = outs[0].as_i32();
-                        for &(ji, off, cnt) in spans.iter() {
-                            let (job, clusters, distances) = &mut pending[ji];
-                            for i in 0..cnt {
-                                let a = assign[off + i];
-                                clusters.push(a);
-                                // distance computed host-side (k·cnt tiny)
-                                let p = &x[(off + i) * this.dim..(off + i + 1) * this.dim];
-                                let c = &this.centroids
-                                    [(a as usize) * this.dim..(a as usize + 1) * this.dim];
-                                distances.push(crate::linalg::sqdist(p, c));
-                            }
-                            let _ = job;
-                        }
-                    }
-                    Err(e) => {
-                        this.stats.errors += spans.len() as u64;
-                        this.publish();
-                        for &(ji, _, _) in spans.iter() {
-                            let (job, clusters, _) = &mut pending[ji];
-                            clusters.clear();
-                            let _ = job.reply.send(Response::Err {
-                                id: job.request.id,
-                                error: e.to_string(),
-                            });
-                        }
-                    }
-                }
-                *filled = 0;
-                spans.clear();
-                x.iter_mut().for_each(|v| *v = 0.0);
-            };
+        debug_assert_eq!(self.filled, 0);
+        debug_assert!(self.spans.is_empty());
 
         for job in valid {
             let n = job.request.points.len();
@@ -254,23 +223,37 @@ impl Batcher {
             let mut remaining = n;
             let mut src = 0usize;
             while remaining > 0 {
-                if filled == self.chunk {
-                    flush_device(self, &mut x, &mut filled, &mut spans, &mut pending);
+                if self.filled == self.chunk {
+                    self.flush_device(&mut pending);
                 }
-                let take = remaining.min(self.chunk - filled);
+                let take = remaining.min(self.chunk - self.filled);
+                let want_norms = self.cfg.distance == DistancePolicy::Dot;
                 for i in 0..take {
                     let p = &pending[ji].0.request.points[src + i];
-                    for (jj, &v) in p.iter().enumerate() {
-                        x[(filled + i) * self.dim + jj] = v as f32;
+                    let row = self.filled + i;
+                    if want_norms {
+                        // stage the row and its ‖x‖² in one pass
+                        let mut norm = 0.0f32;
+                        for (jj, &v) in p.iter().enumerate() {
+                            let vf = v as f32;
+                            self.x[row * self.dim + jj] = vf;
+                            norm += vf * vf;
+                        }
+                        self.x_norms[row] = norm;
+                    } else {
+                        // exact policy never reads x_norms — skip it
+                        for (jj, &v) in p.iter().enumerate() {
+                            self.x[row * self.dim + jj] = v as f32;
+                        }
                     }
                 }
-                spans.push((ji, filled, take));
-                filled += take;
+                self.spans.push((ji, self.filled, take));
+                self.filled += take;
                 src += take;
                 remaining -= take;
             }
         }
-        flush_device(self, &mut x, &mut filled, &mut spans, &mut pending);
+        self.flush_device(&mut pending);
 
         // publish BEFORE the success replies: a client that receives
         // its response and immediately probes {"stats": true} must see
@@ -286,6 +269,67 @@ impl Batcher {
             }
             // else: error already sent by flush_device
         }
+    }
+
+    /// Execute one padded device call over the staged scratch
+    /// (batcher-owned, reused across batches — no per-request
+    /// allocation), scattering per-span results into `pending`.
+    fn flush_device(&mut self, pending: &mut [(Job, Vec<i32>, Vec<f32>)]) {
+        if self.filled == 0 {
+            return;
+        }
+        let nv = [self.filled as i32];
+        let result = self.rt.execute(
+            &self.spec,
+            &[
+                TensorArg::F32(&self.x[..]),
+                TensorArg::F32(&self.centroids),
+                TensorArg::I32(&nv),
+            ],
+        );
+        self.stats.device_calls += 1;
+        self.stats.padded_rows += (self.chunk - self.filled) as u64;
+        match result {
+            Ok(outs) => {
+                let assign = outs[0].as_i32();
+                for &(ji, off, cnt) in self.spans.iter() {
+                    let (job, clusters, distances) = &mut pending[ji];
+                    for i in 0..cnt {
+                        let a = assign[off + i];
+                        clusters.push(a);
+                        // distance computed host-side (k·cnt tiny),
+                        // per the configured policy
+                        let p = &self.x[(off + i) * self.dim..(off + i + 1) * self.dim];
+                        let c = &self.centroids
+                            [(a as usize) * self.dim..(a as usize + 1) * self.dim];
+                        let dval = match self.cfg.distance {
+                            DistancePolicy::Exact => crate::linalg::sqdist(p, c),
+                            DistancePolicy::Dot => ((self.x_norms[off + i]
+                                + self.c_norms[a as usize])
+                                - 2.0 * crate::linalg::dot(p, c))
+                            .max(0.0),
+                        };
+                        distances.push(dval);
+                    }
+                    let _ = job;
+                }
+            }
+            Err(e) => {
+                self.stats.errors += self.spans.len() as u64;
+                self.publish();
+                for &(ji, _, _) in self.spans.iter() {
+                    let (job, clusters, _) = &mut pending[ji];
+                    clusters.clear();
+                    let _ = job.reply.send(Response::Err {
+                        id: job.request.id,
+                        error: e.to_string(),
+                    });
+                }
+            }
+        }
+        self.filled = 0;
+        self.spans.clear();
+        self.x.iter_mut().for_each(|v| *v = 0.0);
     }
 
     /// Chunk actually used for device calls (tests).
@@ -448,6 +492,83 @@ mod tests {
         assert_eq!(b.stats.padded_rows, (b.chunk() - 3) as u64);
         // the mirror saw the same snapshot after the flush
         assert_eq!(*shared.lock().unwrap(), b.stats);
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_responses_identical_across_batches() {
+        // artifact-free native fallback (same pattern as
+        // padded_rows_counted_and_mirror_published)
+        let dir = std::env::temp_dir().join("parakm_batcher_tests/no_artifacts_here");
+        let (centroids, ds) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let pts: Vec<Vec<f64>> =
+            (0..40).map(|i| ds.point(i).iter().map(|&v| v as f64).collect()).collect();
+
+        // same request flushed three times through the same batcher:
+        // the reused scratch must never leak state between batches
+        let mut replies = Vec::new();
+        for round in 0..3u64 {
+            let (j, rx) = job(round, pts.clone());
+            b.flush(vec![j]);
+            match rx.recv().unwrap() {
+                Response::Ok { clusters, distances, .. } => replies.push((clusters, distances)),
+                other => panic!("round {round}: unexpected {other:?}"),
+            }
+        }
+        assert_eq!(replies[0], replies[1]);
+        assert_eq!(replies[1], replies[2]);
+
+        // and identical to a freshly-constructed batcher's answer
+        let (centroids2, _) = trained_model();
+        let mut fresh =
+            Batcher::new(&dir, centroids2, 3, 4, BatcherConfig::default()).unwrap();
+        let (j, rx) = job(9, pts);
+        fresh.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { clusters, distances, .. } => {
+                assert_eq!((clusters, distances), replies[0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dot_policy_matches_exact_responses() {
+        let dir = std::env::temp_dir().join("parakm_batcher_tests/no_artifacts_here");
+        let (centroids, ds) = trained_model();
+        let pts: Vec<Vec<f64>> =
+            (0..64).map(|i| ds.point(i).iter().map(|&v| v as f64).collect()).collect();
+
+        let mut exact =
+            Batcher::new(&dir, centroids.clone(), 3, 4, BatcherConfig::default()).unwrap();
+        let (j, rx) = job(1, pts.clone());
+        exact.flush(vec![j]);
+        let (c_exact, d_exact) = match rx.recv().unwrap() {
+            Response::Ok { clusters, distances, .. } => (clusters, distances),
+            other => panic!("unexpected {other:?}"),
+        };
+
+        let cfg = BatcherConfig {
+            distance: crate::linalg::kernel::DistancePolicy::Dot,
+            ..BatcherConfig::default()
+        };
+        let mut dot = Batcher::new(&dir, centroids, 3, 4, cfg).unwrap();
+        let (j, rx) = job(1, pts);
+        dot.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { clusters, distances, .. } => {
+                // assignment comes from the runtime either way; only
+                // the reported distance formulation changes
+                assert_eq!(clusters, c_exact);
+                for (i, (a, b)) in distances.iter().zip(&d_exact).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                        "point {i}: dot {a} vs exact {b}"
+                    );
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -5,7 +5,11 @@
 //! scheduling hiccup on a shared container. Every `rust/benches/*.rs`
 //! target uses this via `harness = false`.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One measured statistic set.
 #[derive(Debug, Clone)]
@@ -123,6 +127,56 @@ pub fn run_case<T>(label: &str, opts: &BenchOpts, mut f: impl FnMut() -> T) -> S
     Sample { label: label.to_string(), runs }
 }
 
+/// One machine-readable perf-trajectory row for `results/bench.json`
+/// (the CI artifact future PRs diff — DESIGN.md §11). `speedup` is
+/// vs the exact-scalar baseline of the same `(n, d, k)` cell; pass 0.0
+/// where no baseline applies.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_json_row(
+    bench: &str,
+    engine: &str,
+    policy: &str,
+    tier: &str,
+    n: usize,
+    d: usize,
+    k: usize,
+    ns_per_point: f64,
+    speedup: f64,
+) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str(bench.to_string()));
+    m.insert("engine".to_string(), Json::Str(engine.to_string()));
+    m.insert("policy".to_string(), Json::Str(policy.to_string()));
+    m.insert("tier".to_string(), Json::Str(tier.to_string()));
+    m.insert("n".to_string(), Json::Num(n as f64));
+    m.insert("d".to_string(), Json::Num(d as f64));
+    m.insert("k".to_string(), Json::Num(k as f64));
+    m.insert("ns_per_point_iter".to_string(), Json::Num(ns_per_point));
+    m.insert("speedup_vs_exact_scalar".to_string(), Json::Num(speedup));
+    Json::Obj(m)
+}
+
+/// Append rows to the `results/bench.json` perf trajectory, merging
+/// with whatever a previous bench target in the same run already
+/// wrote (each target appends; CI uploads the merged file as an
+/// artifact). An unreadable or non-array existing file is replaced
+/// rather than poisoning the run.
+pub fn append_bench_json(path: &Path, rows: Vec<Json>) -> crate::error::Result<()> {
+    let mut all = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(a)) => a,
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    all.extend(rows);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, Json::Arr(all).to_string())?;
+    Ok(())
+}
+
 /// Print a sample row in the house bench format (parsed by EXPERIMENTS
 /// tooling; keep stable).
 pub fn report(s: &Sample) {
@@ -170,6 +224,28 @@ mod tests {
         });
         assert_eq!(s.runs.len(), 3);
         assert_eq!(calls, 4); // 1 warmup + 3 timed
+    }
+
+    #[test]
+    fn bench_json_appends_and_merges() {
+        let dir = std::env::temp_dir().join("parakm_bench_json_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("bench.json");
+        let row = |e: &str| bench_json_row("t", e, "exact", "scalar", 10, 2, 4, 1.5, 0.0);
+        append_bench_json(&path, vec![row("a")]).unwrap();
+        append_bench_json(&path, vec![row("b"), row("c")]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].get("engine").and_then(Json::as_str), Some("b"));
+        assert_eq!(arr[0].get("n").and_then(Json::as_usize), Some(10));
+        // corrupt existing file is replaced, not fatal
+        std::fs::write(&path, "{not json").unwrap();
+        append_bench_json(&path, vec![row("d")]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -80,6 +80,62 @@ fn run_synthetic_offload() {
 }
 
 #[test]
+fn run_distance_dot_matches_exact_at_the_cli() {
+    let data = tmp("cli_dp.pkd");
+    let out = parakm()
+        .args(["gen-data", "--dim", "3", "--n", "4000", "--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let run = |policy: &str, csv: &PathBuf| {
+        let out = parakm()
+            .args(["run", "--engine", "serial", "--k", "4", "--seed", "42", "--distance", policy])
+            .arg("--input")
+            .arg(&data)
+            .arg("--assign-out")
+            .arg(csv)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let exact_csv = tmp("cli_dp_exact.csv");
+    let dot_csv = tmp("cli_dp_dot.csv");
+    let exact_text = run("exact", &exact_csv);
+    let dot_text = run("dot", &dot_csv);
+    assert!(exact_text.contains("distance    : exact"), "{exact_text}");
+    assert!(dot_text.contains("distance    : dot"), "{dot_text}");
+    // the DESIGN.md §11 cross-policy contract, end to end: identical
+    // assignment CSVs and iteration counts
+    assert_eq!(
+        std::fs::read_to_string(&exact_csv).unwrap(),
+        std::fs::read_to_string(&dot_csv).unwrap()
+    );
+    let iters = |t: &str| {
+        t.lines().find(|l| l.starts_with("iterations")).map(str::to_string)
+    };
+    assert_eq!(iters(&exact_text), iters(&dot_text));
+
+    // AOT engines reject the dot policy; bad values are typed errors
+    let out = parakm()
+        .args(["run", "--synthetic", "3d:1000", "--engine", "offload", "--k", "4"])
+        .args(["--distance", "dot"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("pure-rust"));
+    let out = parakm()
+        .args(["run", "--synthetic", "3d:1000", "--engine", "serial", "--k", "4"])
+        .args(["--distance", "cosine"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown distance policy"));
+}
+
+#[test]
 fn run_rejects_bad_flags() {
     // typo'd flag
     let out = parakm()

@@ -1,0 +1,173 @@
+//! Cross-policy integration suite (DESIGN.md §11): with the default
+//! `exact` policy every documented bit-identity contract is untouched
+//! (pinned by the other integration suites); this file pins what the
+//! `dot` policy promises instead —
+//!
+//! - identical assignments and iteration counts to `exact` on the
+//!   paper 2D/3D GMM suites, SSE relative error < 1e-5, for every
+//!   pure-rust engine (serial, threads both sched modes, oocore, dist
+//!   over loopback workers, minibatch);
+//! - the *within-policy* determinism contracts survive: oocore(S, dot)
+//!   ≡ threads(p = S, dot) bit-for-bit, and chunk size / worker count
+//!   never change dot results.
+//!
+//! CI also runs the whole file with `PARAKM_KERNEL=scalar` forced, so
+//! the contracts hold on the reference tier itself.
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::config::{DistancePolicy, SchedMode};
+use parakmeans::data::{MemorySource, MixtureSpec};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{
+    dist, elkan, hamerly, init, minibatch, parallel, serial, KmeansConfig, KmeansResult,
+};
+
+/// The cross-policy agreement the acceptance criteria state: same
+/// clustering trajectory, SSE within tolerance.
+fn assert_policy_agrees(dot: &KmeansResult, exact: &KmeansResult, what: &str) {
+    assert_eq!(dot.assign, exact.assign, "{what}: assignments");
+    assert_eq!(dot.iterations, exact.iterations, "{what}: iterations");
+    assert_eq!(dot.converged, exact.converged, "{what}: converged");
+    let rel = (dot.sse - exact.sse).abs() / exact.sse.max(1.0);
+    assert!(rel < 1e-5, "{what}: sse relative error {rel}");
+}
+
+fn paper(dim: usize, n: usize, seed: u64) -> (parakmeans::data::Dataset, KmeansConfig) {
+    let (spec, k) = match dim {
+        2 => (MixtureSpec::paper_2d(8), 8),
+        _ => (MixtureSpec::paper_3d(4), 4),
+    };
+    (spec.generate(n, seed), KmeansConfig::new(k).with_seed(5))
+}
+
+#[test]
+fn serial_dot_matches_exact_paper_2d_and_3d() {
+    for dim in [2usize, 3] {
+        let (ds, cfg) = paper(dim, 6003, 11);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let exact = serial::run_from(&ds, &cfg, &mu0);
+        let dot = serial::run_from(&ds, &cfg.clone().with_distance(DistancePolicy::Dot), &mu0);
+        assert_policy_agrees(&dot, &exact, &format!("serial paper {dim}D"));
+    }
+}
+
+#[test]
+fn threads_dot_matches_exact_both_sched_modes() {
+    let (ds, cfg) = paper(2, 5003, 3);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    let exact = serial::run_from(&ds, &cfg, &mu0);
+    let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+    for p in [1usize, 2, 4] {
+        for sched in [SchedMode::Static, SchedMode::Steal] {
+            let dot = parallel::run_from_sched(
+                &ds,
+                &dcfg,
+                p,
+                parallel::MergeMode::Leader,
+                sched,
+                &mu0,
+            );
+            assert_policy_agrees(&dot, &exact, &format!("threads p={p} {sched:?}"));
+        }
+    }
+}
+
+#[test]
+fn oocore_dot_bit_identical_to_threads_dot_and_chunk_blind() {
+    let (ds, cfg) = paper(3, 3001, 7);
+    let dcfg = cfg.with_distance(DistancePolicy::Dot);
+    let mu0 = init::initialize(&ds, dcfg.k, dcfg.init, dcfg.seed);
+    let src = MemorySource::new(&ds);
+    for p in [1usize, 2, 4] {
+        let threads =
+            parallel::run_from(&ds, &dcfg, p, parallel::MergeMode::Leader, &mu0);
+        let mut baseline: Option<KmeansResult> = None;
+        for chunk in [64usize, 500, 100_000] {
+            let run = streaming::run_from(
+                &src,
+                &dcfg,
+                &StreamOpts { shards: p, chunk_rows: chunk },
+                &mu0,
+            )
+            .unwrap();
+            parakmeans::testutil::assert_bit_identical(
+                &run,
+                &threads,
+                &format!("oocore(dot) S={p} chunk={chunk} vs threads"),
+            );
+            if let Some(b) = &baseline {
+                parakmeans::testutil::assert_bit_identical(
+                    &run,
+                    b,
+                    &format!("oocore(dot) chunk={chunk} vs first chunk size"),
+                );
+            } else {
+                baseline = Some(run);
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_dot_over_loopback_matches_exact_and_oocore() {
+    let (ds, cfg) = paper(2, 2401, 9);
+    let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+    let mu0 = init::initialize(&ds, dcfg.k, dcfg.init, dcfg.seed);
+    let exact = serial::run_from(&ds, &cfg, &mu0);
+
+    for shards in [1usize, 3] {
+        let cluster = LoopbackCluster::spawn_dataset(&ds, shards, 200).unwrap();
+        let run = dist::run_from(
+            &cluster.addrs,
+            &dcfg,
+            &dist::DistOpts::default(),
+            &mu0,
+        )
+        .unwrap();
+        cluster.join().unwrap();
+        assert_policy_agrees(&run.result, &exact, &format!("dist(dot) S={shards}"));
+
+        // and bit-identity with the out-of-core engine at equal shards
+        let oocore = streaming::run_from(
+            &MemorySource::new(&ds),
+            &dcfg,
+            &StreamOpts { shards, chunk_rows: 200 },
+            &mu0,
+        )
+        .unwrap();
+        parakmeans::testutil::assert_bit_identical(
+            &run.result,
+            &oocore,
+            &format!("dist(dot) S={shards} vs oocore"),
+        );
+    }
+}
+
+#[test]
+fn pruned_engines_dot_match_exact_lloyd_clustering() {
+    let (ds, cfg) = paper(3, 4001, 13);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    let lloyd = serial::run_from(&ds, &cfg, &mu0);
+    let dcfg = cfg.clone().with_distance(DistancePolicy::Dot);
+    for p in [1usize, 4] {
+        let elk = elkan::run_from_threads(&ds, &dcfg, p, SchedMode::Steal, &mu0);
+        assert_eq!(elk.iterations, lloyd.iterations, "elkan dot p={p}");
+        let ari = parakmeans::metrics::adjusted_rand_index(&elk.assign, &lloyd.assign);
+        assert!(ari > 0.9999, "elkan dot p={p}: ari {ari}");
+        assert!((elk.sse - lloyd.sse).abs() / lloyd.sse < 1e-5, "elkan dot p={p}");
+
+        let ham = hamerly::run_from_threads(&ds, &dcfg, p, SchedMode::Steal, &mu0);
+        assert_eq!(ham.iterations, lloyd.iterations, "hamerly dot p={p}");
+        let ari = parakmeans::metrics::adjusted_rand_index(&ham.assign, &lloyd.assign);
+        assert!(ari > 0.9999, "hamerly dot p={p}: ari {ari}");
+        assert!((ham.sse - lloyd.sse).abs() / lloyd.sse < 1e-5, "hamerly dot p={p}");
+    }
+}
+
+#[test]
+fn minibatch_dot_matches_exact() {
+    let (ds, cfg) = paper(2, 8000, 17);
+    let exact = minibatch::run(&ds, &cfg, 1024);
+    let dot = minibatch::run(&ds, &cfg.clone().with_distance(DistancePolicy::Dot), 1024);
+    assert_policy_agrees(&dot, &exact, "minibatch");
+}
