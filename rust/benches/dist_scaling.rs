@@ -1,5 +1,6 @@
-//! Distributed loopback sweep: (dim × K × workers) over the paper's
-//! 2D/3D GMM families — the scale axis of DESIGN.md §10.
+//! Distributed loopback sweep: (dim × K × workers × scheduler) over
+//! the paper's 2D/3D GMM families — the scale axis of DESIGN.md §10,
+//! plus the elastic scheduler of §12.
 //!
 //!     cargo bench --bench dist_scaling
 //!
@@ -10,20 +11,32 @@
 //! Per cell: wall-clock median (loopback worker spawn + full run —
 //! process-boundary overhead is the thing being measured), speedup ψ vs
 //! S = 1, efficiency ε = ψ/S, and per-iteration wire bytes from the
-//! leader's NetStats. Every cell is cross-checked bit-identical against
-//! `threads(p = S)` before timing (the DESIGN.md §10 contract) — the
-//! verdict lands in the CSV's `identical` column so `eval::report`
-//! refuses to bless a sweep whose check was skipped. Writes
-//! `results/tables/dist.csv`.
+//! leader's NetStats. Every static cell is cross-checked bit-identical
+//! against `threads(p = S)` and every elastic cell against
+//! `threads(p = S, --sched steal)` before timing (the DESIGN.md §10/§12
+//! contracts) — the verdict lands in the CSV's `identical` column so
+//! `eval::report` refuses to bless a sweep whose check was skipped.
+//! Writes `results/tables/dist.csv` (`sched`: 0 = static, 1 =
+//! elastic).
+//!
+//! A final failure drill runs the elastic scheduler with one of three
+//! workers scripted to die mid-iteration, re-checks bit-identity
+//! against the fault-free run, and appends the recovery telemetry
+//! (re-dispatched chunks, speculative wins, recovery seconds) to
+//! `results/bench.json`.
 
-use parakmeans::cluster::LoopbackCluster;
+use std::collections::BTreeMap;
+
+use parakmeans::cluster::{LoopbackCluster, SessionFault, WorkerDrill};
+use parakmeans::config::SchedMode;
 use parakmeans::data::gmm::workloads;
 use parakmeans::eval;
-use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::dist::{self, DistOpts, DistSched};
 use parakmeans::kmeans::{init, parallel, KmeansConfig};
 use parakmeans::testutil::assert_bit_identical;
-use parakmeans::util::bench::{report, run_case, BenchOpts};
+use parakmeans::util::bench::{append_bench_json, report, run_case, BenchOpts};
 use parakmeans::util::csv;
+use parakmeans::util::json::Json;
 
 fn main() {
     let opts = BenchOpts::from_env();
@@ -31,6 +44,7 @@ fn main() {
     println!("== dist scaling bench (loopback workers, n={n}) ==");
 
     let net = DistOpts::default();
+    let elastic_net = DistOpts { sched: DistSched::Elastic, ..DistOpts::default() };
     let mut rows: Vec<Vec<f64>> = Vec::new();
 
     for (dim, ks) in [(2usize, vec![workloads::K_2D]), (3usize, vec![workloads::K_3D, 8])] {
@@ -38,56 +52,77 @@ fn main() {
         for k in ks {
             let cfg = KmeansConfig::new(k).with_seed(42);
             let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
-            let mut t1 = f64::NAN;
 
-            for s in [1usize, 2, 4] {
-                // identity cross-check once per cell, before timing:
-                // dist(S) must equal threads(p=S) bit-for-bit
-                let cluster = LoopbackCluster::spawn_dataset(&ds, s, 65_536)
-                    .expect("spawn loopback cluster");
-                let run = dist::run_from(&cluster.addrs, &cfg, &net, &mu0)
-                    .expect("distributed run");
-                cluster.join().expect("workers exit cleanly");
-                let threads = parallel::run_from(&ds, &cfg, s, parallel::MergeMode::Leader, &mu0);
-                assert_bit_identical(&run.result, &threads, &format!("{dim}D K={k} S={s}"));
-                let bytes_per_iter = run.net.bytes_per_iter();
-                let iters = run.result.iterations;
-                let sse = run.result.sse;
-
-                // timed runs: spawn + run, the full process-boundary
-                // cost a real deployment pays per job
-                let label = format!("{dim}D K={k} S={s}");
-                let sample = run_case(&label, &opts, || {
-                    let cluster = LoopbackCluster::spawn_dataset(&ds, s, 65_536)
-                        .expect("spawn loopback cluster");
-                    let run = dist::run_from(&cluster.addrs, &cfg, &net, &mu0)
+            for (sched, sched_code, net) in
+                [("static", 0.0, &net), ("elastic", 1.0, &elastic_net)]
+            {
+                let mut t1 = f64::NAN;
+                for s in [1usize, 2, 4] {
+                    // identity cross-check once per cell, before
+                    // timing: static dist(S) must equal threads(p=S),
+                    // elastic dist(S) must equal threads-steal(p=S) —
+                    // both bit-for-bit
+                    let cluster = spawn(&ds, s, net.sched);
+                    let run = dist::run_from(&cluster.addrs, &cfg, net, &mu0)
                         .expect("distributed run");
                     cluster.join().expect("workers exit cleanly");
-                    run
-                });
-                report(&sample);
-                let secs = sample.median();
-                if s == 1 {
-                    t1 = secs;
+                    let reference = match net.sched {
+                        DistSched::Static => {
+                            parallel::run_from(&ds, &cfg, s, parallel::MergeMode::Leader, &mu0)
+                        }
+                        DistSched::Elastic => parallel::run_from_sched(
+                            &ds,
+                            &cfg,
+                            s,
+                            parallel::MergeMode::Leader,
+                            SchedMode::Steal,
+                            &mu0,
+                        ),
+                    };
+                    assert_bit_identical(
+                        &run.result,
+                        &reference,
+                        &format!("{dim}D K={k} S={s} {sched}"),
+                    );
+                    let bytes_per_iter = run.net.bytes_per_iter();
+                    let iters = run.result.iterations;
+                    let sse = run.result.sse;
+
+                    // timed runs: spawn + run, the full process-
+                    // boundary cost a real deployment pays per job
+                    let label = format!("{dim}D K={k} S={s} {sched}");
+                    let sample = run_case(&label, &opts, || {
+                        let cluster = spawn(&ds, s, net.sched);
+                        let run = dist::run_from(&cluster.addrs, &cfg, net, &mu0)
+                            .expect("distributed run");
+                        cluster.join().expect("workers exit cleanly");
+                        run
+                    });
+                    report(&sample);
+                    let secs = sample.median();
+                    if s == 1 {
+                        t1 = secs;
+                    }
+                    let speedup = t1 / secs.max(1e-12);
+                    println!(
+                        "         -> speedup {speedup:.2}x  efficiency {:.2}  wire {:.1} KiB/iter",
+                        speedup / s as f64,
+                        bytes_per_iter / 1024.0
+                    );
+                    rows.push(vec![
+                        dim as f64,
+                        k as f64,
+                        s as f64,
+                        sched_code,
+                        secs,
+                        speedup,
+                        speedup / s as f64,
+                        bytes_per_iter,
+                        iters as f64,
+                        sse,
+                        1.0, // identity check passed (assert above)
+                    ]);
                 }
-                let speedup = t1 / secs.max(1e-12);
-                println!(
-                    "         -> speedup {speedup:.2}x  efficiency {:.2}  wire {:.1} KiB/iter",
-                    speedup / s as f64,
-                    bytes_per_iter / 1024.0
-                );
-                rows.push(vec![
-                    dim as f64,
-                    k as f64,
-                    s as f64,
-                    secs,
-                    speedup,
-                    speedup / s as f64,
-                    bytes_per_iter,
-                    iters as f64,
-                    sse,
-                    1.0, // identity check passed (assert above)
-                ]);
             }
         }
     }
@@ -96,11 +131,102 @@ fn main() {
     csv::write_table(
         &out,
         &[
-            "dim", "k", "workers", "secs", "speedup", "efficiency", "bytes_per_iter", "iters",
-            "sse", "identical",
+            "dim", "k", "workers", "sched", "secs", "speedup", "efficiency", "bytes_per_iter",
+            "iters", "sse", "identical",
         ],
         &rows,
     )
     .expect("write dist.csv");
+    println!("wrote {}", out.display());
+
+    failure_drill(n);
+}
+
+fn spawn(ds: &parakmeans::data::Dataset, s: usize, sched: DistSched) -> LoopbackCluster {
+    match sched {
+        // static: contiguous shards, one per worker
+        DistSched::Static => {
+            LoopbackCluster::spawn_dataset(ds, s, 65_536).expect("spawn loopback cluster")
+        }
+        // elastic: every worker holds the full dataset (replicated
+        // inputs — the §12 deployment model)
+        DistSched::Elastic => {
+            LoopbackCluster::spawn_replicated(ds, s, 65_536).expect("spawn loopback cluster")
+        }
+    }
+}
+
+/// Elastic recovery drill: 3 replicated workers, one dies after its
+/// first chunk. The run must complete bit-identical to the fault-free
+/// elastic run; the recovery telemetry lands in `results/bench.json`.
+fn failure_drill(n: usize) {
+    println!("== elastic failure drill (3 workers, one killed mid-iteration) ==");
+    let ds = eval::paper_dataset(2, n);
+    let k = workloads::K_2D;
+    let cfg = KmeansConfig::new(k).with_seed(42);
+    let mu0 = init::initialize(&ds, k, cfg.init, cfg.seed);
+    let net = DistOpts { sched: DistSched::Elastic, ..DistOpts::default() };
+
+    let clean_cluster = LoopbackCluster::spawn_replicated(&ds, 3, 65_536).expect("spawn");
+    let clean = dist::run_from(&clean_cluster.addrs, &cfg, &net, &mu0).expect("clean run");
+    clean_cluster.join().expect("workers exit cleanly");
+
+    let drills = [
+        WorkerDrill {
+            fault: SessionFault { die_after_chunks: Some(1), ..Default::default() },
+            sessions: 1,
+        },
+        WorkerDrill::default(),
+        WorkerDrill::default(),
+    ];
+    let t0 = std::time::Instant::now();
+    let cluster = LoopbackCluster::spawn_replicated_faulty(&ds, 65_536, &drills).expect("spawn");
+    let faulty = dist::run_from(&cluster.addrs, &cfg, &net, &mu0).expect("drilled run");
+    let secs = t0.elapsed().as_secs_f64();
+    cluster.join().expect("workers exit cleanly");
+
+    assert_bit_identical(&faulty.result, &clean.result, "drill: faulty vs fault-free");
+    let net_stats = &faulty.net;
+    println!(
+        "DRILL  failures={} rejoins={} redispatched={} speculative={} (wins {}) \
+         recovery={:.3}s total={secs:.3}s  [bit-identical to fault-free]",
+        net_stats.worker_failures,
+        net_stats.worker_rejoins,
+        net_stats.redispatched_chunks,
+        net_stats.speculative_chunks,
+        net_stats.speculative_wins,
+        net_stats.recovery_secs
+    );
+
+    let mut row = BTreeMap::new();
+    row.insert("bench".to_string(), Json::Str("dist_scaling".to_string()));
+    row.insert("engine".to_string(), Json::Str("dist-elastic-drill".to_string()));
+    row.insert("n".to_string(), Json::Num(ds.len() as f64));
+    row.insert("d".to_string(), Json::Num(ds.dim() as f64));
+    row.insert("k".to_string(), Json::Num(k as f64));
+    row.insert("workers".to_string(), Json::Num(3.0));
+    row.insert("secs".to_string(), Json::Num(secs));
+    row.insert("iters".to_string(), Json::Num(faulty.result.iterations as f64));
+    row.insert(
+        "worker_failures".to_string(),
+        Json::Num(net_stats.worker_failures as f64),
+    );
+    row.insert("worker_rejoins".to_string(), Json::Num(net_stats.worker_rejoins as f64));
+    row.insert(
+        "redispatched_chunks".to_string(),
+        Json::Num(net_stats.redispatched_chunks as f64),
+    );
+    row.insert(
+        "speculative_chunks".to_string(),
+        Json::Num(net_stats.speculative_chunks as f64),
+    );
+    row.insert(
+        "speculative_wins".to_string(),
+        Json::Num(net_stats.speculative_wins as f64),
+    );
+    row.insert("recovery_secs".to_string(), Json::Num(net_stats.recovery_secs));
+    row.insert("bit_identical_to_fault_free".to_string(), Json::Bool(true));
+    let out = eval::results_dir().join("bench.json");
+    append_bench_json(&out, vec![Json::Obj(row)]).expect("append bench.json");
     println!("wrote {}", out.display());
 }

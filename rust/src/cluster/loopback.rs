@@ -10,15 +10,53 @@
 //! threaded engine use, so a loopback `dist(S)` run is comparable
 //! bit-for-bit with `threads(p = S)` and `oocore(shards = S)`.
 //!
+//! For the **elastic** scheduler (DESIGN.md §12) the harness offers
+//! [`LoopbackCluster::spawn_replicated`]: every worker owns a full copy
+//! of the dataset (the replicated-input deployment OPERATIONS.md
+//! describes), making it chunk-capable. Its
+//! [`LoopbackCluster::spawn_replicated_faulty`] variant scripts
+//! per-worker crashes and stalls ([`SessionFault`]) and serves a
+//! bounded number of sessions per worker, so failure drills — kill,
+//! stall, rejoin — run deterministically inside `cargo test`.
+//!
 //! [`join`]: LoopbackCluster::join
 
 use std::net::TcpListener;
+use std::time::{Duration, Instant};
 
-use crate::cluster::worker::ShardWorker;
+use crate::cluster::worker::{SessionFault, ShardWorker};
 use crate::data::dataset::shard_ranges;
 use crate::data::source::OwnedMemorySource;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+
+/// Per-worker script for [`LoopbackCluster::spawn_replicated_faulty`]:
+/// the fault injected into the worker's *first* session, and how many
+/// sessions it serves in total (rejoin drills need ≥ 2 — the elastic
+/// leader reconnects after the scripted failure).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerDrill {
+    /// Misbehavior for session 1; later sessions serve cleanly.
+    pub fault: SessionFault,
+    /// Sessions to serve before the thread exits (min 1). Threads stop
+    /// waiting for further sessions after an accept deadline, so a
+    /// leader that never reconnects cannot hang [`join`].
+    ///
+    /// [`join`]: LoopbackCluster::join
+    pub sessions: usize,
+}
+
+impl Default for WorkerDrill {
+    fn default() -> Self {
+        WorkerDrill { fault: SessionFault::default(), sessions: 1 }
+    }
+}
+
+impl WorkerDrill {
+    fn is_faulty(&self) -> bool {
+        self.fault.die_after_chunks.is_some() || self.fault.stall_after_chunks.is_some()
+    }
+}
 
 /// Handle to a set of loopback worker threads.
 pub struct LoopbackCluster {
@@ -73,6 +111,53 @@ impl LoopbackCluster {
         LoopbackCluster::spawn(workers)
     }
 
+    /// Spawn `workers` chunk-capable workers, each owning a **full
+    /// copy** of `ds` — the replicated-input deployment the elastic
+    /// scheduler requires (any worker can compute any chunk).
+    pub fn spawn_replicated(
+        ds: &Dataset,
+        workers: usize,
+        chunk_rows: usize,
+    ) -> Result<LoopbackCluster> {
+        LoopbackCluster::spawn_replicated_faulty(
+            ds,
+            chunk_rows,
+            &vec![WorkerDrill::default(); workers],
+        )
+    }
+
+    /// [`LoopbackCluster::spawn_replicated`] with a per-worker
+    /// [`WorkerDrill`] — the failure-drill harness. A drilled worker's
+    /// session errors are swallowed (its session is *supposed* to die);
+    /// clean workers still propagate errors through
+    /// [`LoopbackCluster::join`].
+    pub fn spawn_replicated_faulty(
+        ds: &Dataset,
+        chunk_rows: usize,
+        drills: &[WorkerDrill],
+    ) -> Result<LoopbackCluster> {
+        if drills.is_empty() {
+            return Err(Error::Config("loopback: need at least one worker".into()));
+        }
+        let mut addrs = Vec::with_capacity(drills.len());
+        let mut listeners = Vec::with_capacity(drills.len());
+        for _ in drills {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            listeners.push(listener);
+        }
+        let handles = drills
+            .iter()
+            .zip(listeners)
+            .map(|(&drill, listener)| {
+                let full = Dataset::from_vec(ds.rows(0, ds.len()).to_vec(), ds.dim())?;
+                let w = ShardWorker::new(Box::new(OwnedMemorySource::new(full)), chunk_rows)?;
+                Ok(std::thread::spawn(move || serve_drill(&w, &listener, drill)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LoopbackCluster { addrs, handles })
+    }
+
     /// Wait for every worker thread, propagating the first worker-side
     /// error (a panic becomes [`Error::Worker`]). Call after the leader
     /// finishes; a leader that errored out closed its connections, so
@@ -95,6 +180,43 @@ impl LoopbackCluster {
             None => Ok(()),
         }
     }
+}
+
+/// Serve up to `drill.sessions` sessions on `listener`; the first runs
+/// under the drill's fault. Accept waits are deadline-bounded so a
+/// leader that never opens a later session (the run finished without
+/// needing the rejoin) cannot hang [`LoopbackCluster::join`].
+fn serve_drill(w: &ShardWorker, listener: &TcpListener, drill: WorkerDrill) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    for session in 0..drill.sessions.max(1) {
+        let stream = loop {
+            match listener.accept() {
+                Ok((s, _)) => break Some(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break None;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        let Some(stream) = stream else {
+            return Ok(()); // the leader never needed this session
+        };
+        stream.set_nonblocking(false)?;
+        let fault = if session == 0 { drill.fault } else { SessionFault::default() };
+        match w.serve_conn_fault(stream, fault) {
+            Ok(()) => {}
+            // a drilled session is expected to die mid-frame (e.g. a
+            // stalled reply written to a socket the leader timed out
+            // and closed) — that is the drill working, not a failure
+            Err(_) if drill.is_faulty() => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -122,6 +244,26 @@ mod tests {
         // connect-and-close each so the single-session workers exit
         for a in &c.addrs {
             drop(std::net::TcpStream::connect(a).unwrap());
+        }
+        c.join().unwrap();
+    }
+
+    #[test]
+    fn replicated_workers_report_the_full_dataset() {
+        use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+        let ds = MixtureSpec::paper_2d(4).generate(40, 2);
+        let c = LoopbackCluster::spawn_replicated(&ds, 2, 16).unwrap();
+        for a in &c.addrs {
+            let mut conn = std::net::TcpStream::connect(a).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            match wire::read_frame(&mut conn, "spec").unwrap().0 {
+                // every worker owns all 40 rows, not a shard
+                Frame::ShardSpec { rows, dim } => {
+                    assert_eq!((rows, dim), (40u64, 2u32));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
         }
         c.join().unwrap();
     }

@@ -12,12 +12,16 @@
 //!
 //! - [`wire`] — length-prefixed binary frames (`Hello`/`ShardSpec`,
 //!   `Assign` → `Partials`, `Gather` → `Rows`, `FetchAssign` →
-//!   `AssignShard`, `Shutdown`, `ErrMsg`); floats travel as IEEE bits,
-//!   so nothing is lost in transit.
+//!   `AssignShard`, `Shutdown`, `ErrMsg`, and the elastic v3 trio
+//!   `ChunkAssign` → `ChunkPartials` plus `Rejoin`); floats travel as
+//!   IEEE bits, so nothing is lost in transit.
 //! - [`worker`] — the `parakm worker` server: owns a shard, replays the
-//!   out-of-core shard fold per `Assign`, answers with partials.
+//!   out-of-core shard fold per `Assign`, answers with partials; a
+//!   full-view worker additionally serves chunk-granular `ChunkAssign`
+//!   requests for the elastic scheduler.
 //! - [`loopback`] — in-process harness spawning worker threads on
-//!   `127.0.0.1:0`, so `cargo test` exercises the full protocol.
+//!   `127.0.0.1:0`, so `cargo test` exercises the full protocol,
+//!   including scripted failure drills ([`worker::SessionFault`]).
 //!
 //! The leader engine lives in [`crate::kmeans::dist`] with the other
 //! engines. Determinism: workers fold their rows in ascending order
@@ -26,11 +30,16 @@
 //! ascending shard index — never in arrival order — so `dist(S)` is
 //! bit-identical to `oocore(shards = S)` and `threads(p = S)` for any
 //! worker count, any reply timing, and any mix of kernel tiers across
-//! the cluster.
+//! the cluster. The elastic scheduler keys the same fold by **chunk
+//! id** instead of shard index (DESIGN.md §12), which extends the
+//! guarantee across failures: re-dispatched, retried and speculated
+//! chunks all land in the same ascending-chunk fold, so a run with
+//! faults is bit-identical to the fault-free elastic run and to
+//! `threads --sched steal`.
 
 pub mod loopback;
 pub mod wire;
 pub mod worker;
 
-pub use loopback::LoopbackCluster;
-pub use worker::ShardWorker;
+pub use loopback::{LoopbackCluster, WorkerDrill};
+pub use worker::{SessionFault, ShardWorker};

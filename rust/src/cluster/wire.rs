@@ -25,6 +25,25 @@
 //!   Shutdown              ──►                        (session ends)
 //! ```
 //!
+//! The elastic scheduler (DESIGN.md §12) replaces the per-shard
+//! `Assign`/`Partials` round with chunk-granular dispatch on the same
+//! session; a leader reconnecting after a failure opens the new session
+//! with `Rejoin` instead of `Hello` (identical semantics — the split
+//! exists so telemetry and logs can tell a recovery from a cold start):
+//!
+//! ```text
+//! leader                          worker (full-view)
+//!   Hello{version} | Rejoin{version}  ──►
+//!                         ◄──    ShardSpec{rows, dim}
+//!   ┌ per chunk unit ──────────────────────────────────┐
+//!   │ ChunkAssign{chunk, lo, hi, k, dim,               │
+//!   │             policy, want_assign, μ}  ──►         │
+//!   │             ◄──  ChunkPartials{chunk, counts,    │
+//!   │                   sums, sse, assign?}            │
+//!   └──────────────────────────────────────────────────┘
+//!   Shutdown              ──►                        (session ends)
+//! ```
+//!
 //! A worker that cannot satisfy a request answers `ErrMsg{..}` instead;
 //! the leader converts it to [`ClusterError::Protocol`] and fails fast.
 //! Readers enforce [`MAX_FRAME_BYTES`] and reject unknown types or
@@ -39,7 +58,9 @@ use crate::linalg::kernel::DistancePolicy;
 /// Protocol version carried in [`Frame::Hello`]; bumped on any frame
 /// layout change so mismatched binaries fail the handshake typed.
 /// v2: `Assign` carries the distance policy byte (DESIGN.md §11).
-pub const WIRE_VERSION: u16 = 2;
+/// v3: chunk-granular elastic frames `ChunkAssign` / `ChunkPartials` /
+/// `Rejoin` (DESIGN.md §12).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Upper bound on `len` a reader will accept (1 GiB): a corrupt or
 /// hostile length prefix becomes [`ClusterError::Frame`] instead of a
@@ -56,6 +77,9 @@ const T_FETCH_ASSIGN: u8 = 7;
 const T_ASSIGN_SHARD: u8 = 8;
 const T_SHUTDOWN: u8 = 9;
 const T_ERR_MSG: u8 = 10;
+const T_CHUNK_ASSIGN: u8 = 11;
+const T_CHUNK_PARTIALS: u8 = 12;
+const T_REJOIN: u8 = 13;
 
 /// One protocol message (module docs: the conversation).
 #[derive(Debug, Clone, PartialEq)]
@@ -83,6 +107,40 @@ pub enum Frame {
     Shutdown,
     /// Worker → leader: a request could not be satisfied.
     ErrMsg { message: String },
+    /// Leader → worker (elastic, v3): compute the E-step for one chunk
+    /// of the deterministic [`crate::kmeans::sched`] grid. `lo`/`hi`
+    /// are the chunk's global row range — redundant with `chunk` given
+    /// `n`, carried so the worker can verify both sides agree on the
+    /// grid. `want_assign` (0/1) asks for the chunk's assignment vector
+    /// in the reply (the final collection pass).
+    ChunkAssign {
+        chunk: u64,
+        lo: u64,
+        hi: u64,
+        k: u32,
+        dim: u32,
+        policy: DistancePolicy,
+        want_assign: bool,
+        centroids: Vec<f32>,
+    },
+    /// Worker → leader (elastic, v3): the chunk's zero-seeded partial
+    /// statistics (`k` counts, `k × dim` f64 sums, chunk SSE), keyed by
+    /// the chunk id so re-dispatched and speculative replies can be
+    /// matched regardless of arrival order. `assign` is empty unless
+    /// the request set `want_assign`.
+    ChunkPartials {
+        chunk: u64,
+        k: u32,
+        dim: u32,
+        counts: Vec<u64>,
+        sums: Vec<f64>,
+        sse: f64,
+        assign: Vec<i32>,
+    },
+    /// Leader → worker (elastic, v3): opens a *replacement* session
+    /// after a connection loss — handled exactly like [`Frame::Hello`],
+    /// but lets the worker log a recovery rather than a cold start.
+    Rejoin { version: u16 },
 }
 
 fn frame_err(msg: impl Into<String>) -> Error {
@@ -211,6 +269,9 @@ impl Frame {
             Frame::AssignShard { .. } => T_ASSIGN_SHARD,
             Frame::Shutdown => T_SHUTDOWN,
             Frame::ErrMsg { .. } => T_ERR_MSG,
+            Frame::ChunkAssign { .. } => T_CHUNK_ASSIGN,
+            Frame::ChunkPartials { .. } => T_CHUNK_PARTIALS,
+            Frame::Rejoin { .. } => T_REJOIN,
         }
     }
 
@@ -227,6 +288,9 @@ impl Frame {
             Frame::AssignShard { .. } => "AssignShard",
             Frame::Shutdown => "Shutdown",
             Frame::ErrMsg { .. } => "ErrMsg",
+            Frame::ChunkAssign { .. } => "ChunkAssign",
+            Frame::ChunkPartials { .. } => "ChunkPartials",
+            Frame::Rejoin { .. } => "Rejoin",
         }
     }
 
@@ -281,6 +345,38 @@ impl Frame {
                 }
             }
             Frame::ErrMsg { message } => b.extend_from_slice(message.as_bytes()),
+            Frame::ChunkAssign { chunk, lo, hi, k, dim, policy, want_assign, centroids } => {
+                push_u64(&mut b, *chunk);
+                push_u64(&mut b, *lo);
+                push_u64(&mut b, *hi);
+                push_u32(&mut b, *k);
+                push_u32(&mut b, *dim);
+                b.push(match policy {
+                    DistancePolicy::Exact => 0,
+                    DistancePolicy::Dot => 1,
+                });
+                b.push(u8::from(*want_assign));
+                for v in centroids {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign } => {
+                push_u64(&mut b, *chunk);
+                push_u32(&mut b, *k);
+                push_u32(&mut b, *dim);
+                for c in counts {
+                    push_u64(&mut b, *c);
+                }
+                for s in sums {
+                    push_u64(&mut b, s.to_bits());
+                }
+                push_u64(&mut b, sse.to_bits());
+                push_u64(&mut b, assign.len() as u64);
+                for a in assign {
+                    b.extend_from_slice(&a.to_le_bytes());
+                }
+            }
+            Frame::Rejoin { version } => push_u16(&mut b, *version),
         }
         b
     }
@@ -339,6 +435,60 @@ impl Frame {
             T_ERR_MSG => Frame::ErrMsg {
                 message: String::from_utf8_lossy(c.take(payload.len())?).into_owned(),
             },
+            T_CHUNK_ASSIGN => {
+                let chunk = c.u64()?;
+                let lo = c.u64()?;
+                let hi = c.u64()?;
+                let k = c.u32()?;
+                let dim = c.u32()?;
+                let policy = match c.take(1)?[0] {
+                    0 => DistancePolicy::Exact,
+                    1 => DistancePolicy::Dot,
+                    other => {
+                        return Err(frame_err(format!(
+                            "ChunkAssign: unknown distance policy {other}"
+                        )))
+                    }
+                };
+                let want_assign = match c.take(1)?[0] {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(frame_err(format!(
+                            "ChunkAssign: bad want_assign byte {other}"
+                        )))
+                    }
+                };
+                let want = (k as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| frame_err("ChunkAssign: k × dim overflows"))?;
+                Frame::ChunkAssign {
+                    chunk,
+                    lo,
+                    hi,
+                    k,
+                    dim,
+                    policy,
+                    want_assign,
+                    centroids: c.f32s(want)?,
+                }
+            }
+            T_CHUNK_PARTIALS => {
+                let chunk = c.u64()?;
+                let k = c.u32()?;
+                let dim = c.u32()?;
+                let kd = (k as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| frame_err("ChunkPartials: k × dim overflows"))?;
+                let counts = c.u64s(k as usize)?;
+                let sums = c.f64s(kd)?;
+                let sse = c.f64()?;
+                let m = c.u64()?;
+                let m = usize::try_from(m)
+                    .map_err(|_| frame_err(format!("ChunkPartials: implausible assign len {m}")))?;
+                Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign: c.i32s(m)? }
+            }
+            T_REJOIN => Frame::Rejoin { version: c.u16()? },
             other => return Err(frame_err(format!("unknown frame type {other}"))),
         };
         c.finish()?;
@@ -367,13 +517,30 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
 
 /// Read one frame, returning it with the wire bytes it occupied.
 /// A peer that closes the stream *between* frames yields `Ok(None)`
-/// (clean end of session); EOF inside a frame, a bad length prefix, an
-/// unknown type or a short payload are typed [`Error::Cluster`] errors.
+/// (clean end of session) — whether the close arrives as an orderly
+/// EOF or as a connection reset/abort (a leader that exits without
+/// draining its receive buffer makes the kernel send RST, not FIN;
+/// the frame-boundary rule treats both as the same event). EOF or a
+/// reset *inside* a frame, a bad length prefix, an unknown type or a
+/// short payload are typed [`Error::Cluster`] errors.
 pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+    use std::io::ErrorKind;
     let mut len_buf = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
-        let n = r.read(&mut len_buf[got..]).map_err(|e| io_err(e, "reading frame header"))?;
+        let n = match r.read(&mut len_buf[got..]) {
+            Ok(n) => n,
+            Err(e)
+                if got == 0
+                    && matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted
+                    ) =>
+            {
+                return Ok(None); // reset at a frame boundary = clean close
+            }
+            Err(e) => return Err(io_err(e, "reading frame header")),
+        };
         if n == 0 {
             if got == 0 {
                 return Ok(None); // clean close at a frame boundary
@@ -450,6 +617,125 @@ mod tests {
         roundtrip(Frame::AssignShard { assign: vec![0, -1, 3, i32::MAX] });
         roundtrip(Frame::Shutdown);
         roundtrip(Frame::ErrMsg { message: "shard is 2D, leader sent 3D".into() });
+        roundtrip(Frame::Rejoin { version: WIRE_VERSION });
+        roundtrip(Frame::ChunkAssign {
+            chunk: 17,
+            lo: 17 * 1024,
+            hi: 17 * 1024 + 513,
+            k: 2,
+            dim: 3,
+            policy: DistancePolicy::Dot,
+            want_assign: true,
+            centroids: vec![1.5, -2.0, 0.0, 3.25, 4.0, 5.0],
+        });
+        roundtrip(Frame::ChunkPartials {
+            chunk: 17,
+            k: 2,
+            dim: 2,
+            counts: vec![7, 0],
+            sums: vec![1.0, -0.5, 0.0, 1e300],
+            sse: 42.0625,
+            assign: vec![0, 1, -1],
+        });
+        roundtrip(Frame::ChunkPartials {
+            chunk: 0,
+            k: 1,
+            dim: 1,
+            counts: vec![3],
+            sums: vec![0.5],
+            sse: 0.0,
+            assign: vec![], // no want_assign: empty vector, not absent
+        });
+    }
+
+    #[test]
+    fn chunk_assign_rejects_bad_flag_bytes() {
+        // want_assign must be 0 or 1; anything else is a frame error
+        let mut payload = Vec::new();
+        push_u64(&mut payload, 0); // chunk
+        push_u64(&mut payload, 0); // lo
+        push_u64(&mut payload, 8); // hi
+        push_u32(&mut payload, 1); // k
+        push_u32(&mut payload, 1); // dim
+        payload.push(0); // policy: exact
+        payload.push(7); // bogus want_assign
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 1 + payload.len() as u32);
+        buf.push(T_CHUNK_ASSIGN);
+        buf.extend_from_slice(&payload);
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("want_assign"), "{err}");
+    }
+
+    #[test]
+    fn chunk_partials_short_payload_is_typed() {
+        // declares an assignment vector it does not carry
+        let mut payload = Vec::new();
+        push_u64(&mut payload, 3); // chunk
+        push_u32(&mut payload, 1); // k
+        push_u32(&mut payload, 1); // dim
+        push_u64(&mut payload, 5); // count
+        push_u64(&mut payload, 1.0f64.to_bits()); // sum
+        push_u64(&mut payload, 0.25f64.to_bits()); // sse
+        push_u64(&mut payload, 10); // assign len — but no bytes follow
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 1 + payload.len() as u32);
+        buf.push(T_CHUNK_PARTIALS);
+        buf.extend_from_slice(&payload);
+        let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+    }
+
+    /// A reader that fails with the given kind after yielding a prefix —
+    /// models a peer that resets the connection mid-stream.
+    struct ResettingReader {
+        prefix: Vec<u8>,
+        at: usize,
+        kind: std::io::ErrorKind,
+    }
+
+    impl Read for ResettingReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.at < self.prefix.len() {
+                let n = out.len().min(self.prefix.len() - self.at);
+                out[..n].copy_from_slice(&self.prefix[self.at..self.at + n]);
+                self.at += n;
+                Ok(n)
+            } else {
+                Err(std::io::Error::new(self.kind, "peer reset"))
+            }
+        }
+    }
+
+    #[test]
+    fn reset_at_frame_boundary_is_clean_close() {
+        use std::io::ErrorKind;
+        // RST before any header byte: same as orderly EOF — Ok(None)
+        for kind in [ErrorKind::ConnectionReset, ErrorKind::ConnectionAborted] {
+            let mut r = ResettingReader { prefix: Vec::new(), at: 0, kind };
+            assert!(read_frame_opt(&mut r).unwrap().is_none(), "{kind:?}");
+        }
+        // RST *inside* the length prefix: a reply was being framed —
+        // that is a real connection error, not a clean close
+        let mut r = ResettingReader {
+            prefix: vec![1, 0],
+            at: 0,
+            kind: ErrorKind::ConnectionReset,
+        };
+        let err = read_frame_opt(&mut r).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+        // RST inside a frame body likewise stays an error
+        let mut full = Vec::new();
+        write_frame(&mut full, &Frame::ShardSpec { rows: 9, dim: 2 }).unwrap();
+        let mut r = ResettingReader {
+            prefix: full[..6].to_vec(),
+            at: 0,
+            kind: ErrorKind::ConnectionReset,
+        };
+        let err = read_frame_opt(&mut r).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
     }
 
     #[test]

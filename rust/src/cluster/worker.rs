@@ -18,23 +18,55 @@
 //! per session — but mixed-tier clusters may then differ in last-ulp
 //! SSE.
 //!
-//! A session serves exactly one leader: `Hello` through `Shutdown` (or
-//! the leader closing the connection — workers treat a close at a frame
-//! boundary as the end of the session, so a dying leader never wedges a
-//! worker). Requests the worker cannot satisfy (dimension mismatch,
-//! out-of-range gather) are answered with `ErrMsg` frames — the leader
-//! fails fast; the worker keeps serving.
+//! A session serves exactly one leader: `Hello` (or `Rejoin`, the
+//! elastic leader's reconnect — same handshake, distinguishable in
+//! logs) through `Shutdown`, or the leader closing the connection —
+//! workers treat a close at a frame *boundary* as the end of the
+//! session whether it arrives as EOF or as a reset, so a dying leader
+//! never wedges a worker and never pollutes its log with spurious
+//! errors. Requests the worker cannot satisfy (dimension mismatch,
+//! out-of-range gather, chunk dispatch at a sharded worker) are
+//! answered with `ErrMsg` frames — the leader fails fast; the worker
+//! keeps serving.
+//!
+//! ## Chunk-capable serving (elastic, DESIGN.md §12)
+//!
+//! A `ChunkAssign` frame asks for the zero-seeded partial statistics of
+//! one chunk of the global [`crate::kmeans::sched`] grid. Because the
+//! elastic leader may hand *any* chunk to *any* worker (and the same
+//! chunk to several), chunk dispatch requires a **full-view** worker —
+//! one whose shard is the entire source (replicated `.pkd` file or
+//! identical `--synthetic` spec, no `--shard`). A sharded worker
+//! answers `ErrMsg` so a misconfigured cluster fails typed instead of
+//! silently clustering the wrong rows.
 
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use crate::cluster::wire::{self, Frame, WIRE_VERSION};
 use crate::data::dataset::shard_ranges;
 use crate::data::source::DataSource;
 use crate::error::{ClusterError, Error, Result};
+use crate::kmeans::sched;
 use crate::kmeans::step::PartialStats;
 use crate::kmeans::streaming::{shard_norms, stream_shard};
 use crate::linalg::kernel;
 use crate::linalg::kernel::DistancePolicy;
+
+/// Scripted misbehavior for failure drills (integration tests and the
+/// OPERATIONS.md walkthroughs): makes a real chunk-serving worker
+/// crash or stall at a deterministic point in its session. The default
+/// value injects nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionFault {
+    /// Drop the connection (simulated crash) once this many
+    /// `ChunkAssign` frames have been answered — the next one goes
+    /// unanswered.
+    pub die_after_chunks: Option<u64>,
+    /// After answering this many `ChunkAssign` frames, sleep this long
+    /// before every subsequent reply (simulated stall/straggler).
+    pub stall_after_chunks: Option<(u64, Duration)>,
+}
 
 /// A leader-facing server over one shard of rows.
 pub struct ShardWorker {
@@ -143,6 +175,15 @@ impl ShardWorker {
     /// is a typed error (the session dies, the worker may accept the
     /// next).
     pub fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        self.serve_conn_fault(stream, SessionFault::default())
+    }
+
+    /// [`ShardWorker::serve_conn`] with scripted misbehavior — the
+    /// failure-drill entry point ([`SessionFault`]). A session that
+    /// *dies on script* returns `Ok(())`: from the worker's point of
+    /// view the drill ran to plan; only genuine frame/IO corruption is
+    /// an error.
+    pub fn serve_conn_fault(&self, stream: TcpStream, fault: SessionFault) -> Result<()> {
         // small frames dominate the conversation: Nagle + delayed ACK
         // would add ~40 ms stalls per iteration round trip
         let _ = stream.set_nodelay(true);
@@ -152,9 +193,13 @@ impl ShardWorker {
         let mut assign = vec![-1i32; n];
         let mut stats: Option<PartialStats> = None;
         // per-shard `‖x‖²` cache for the dot policy: one bounded-memory
-        // pass on the first dot Assign of the session, then every
-        // iteration reuses it (the shard's bytes are fixed)
+        // pass on the first dot Assign (or ChunkAssign) of the session,
+        // then every iteration reuses it (the shard's bytes are fixed).
+        // Chunk dispatch requires the full view, so the same cache
+        // serves both request kinds.
         let mut norm_cache: Option<Vec<f32>> = None;
+        // chunk frames answered so far — drives the fault script
+        let mut chunks_served = 0u64;
 
         loop {
             let frame = match wire::read_frame_opt(&mut stream)? {
@@ -162,7 +207,7 @@ impl ShardWorker {
                 None => return Ok(()), // leader closed at a frame boundary
             };
             match frame {
-                Frame::Hello { version } => {
+                Frame::Hello { version } | Frame::Rejoin { version } => {
                     if version != WIRE_VERSION {
                         let msg = format!(
                             "protocol version mismatch: leader {version}, worker {WIRE_VERSION}"
@@ -257,6 +302,137 @@ impl ShardWorker {
                             counts: stats.counts.clone(),
                             sums: stats.sums.clone(),
                             sse: stats.sse,
+                        },
+                    )?;
+                }
+                Frame::ChunkAssign { chunk, lo, hi, k, dim, policy, want_assign, centroids } => {
+                    // fault script: a scripted crash drops the
+                    // connection instead of answering — the leader sees
+                    // a vanished worker, exactly like a killed process
+                    if let Some(m) = fault.die_after_chunks {
+                        if chunks_served >= m {
+                            return Ok(());
+                        }
+                    }
+                    if let Some((m, pause)) = fault.stall_after_chunks {
+                        if chunks_served >= m {
+                            std::thread::sleep(pause);
+                        }
+                    }
+                    // chunk dispatch presumes the leader's global row
+                    // space IS this worker's row space
+                    if self.lo != 0 || self.hi != self.source.len() {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!(
+                                    "elastic chunk dispatch requires a full-view worker; \
+                                     this one owns rows [{}, {}) of {} (drop --shard and \
+                                     replicate the input)",
+                                    self.lo,
+                                    self.hi,
+                                    self.source.len()
+                                ),
+                            },
+                        )?;
+                        continue;
+                    }
+                    if dim as usize != d {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!("shard is {d}D, leader sent {dim}D centroids"),
+                            },
+                        )?;
+                        continue;
+                    }
+                    if k == 0 || centroids.len() != (k as usize) * d {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!(
+                                    "bad ChunkAssign shape: k {k}, dim {dim}, {} centroid values",
+                                    centroids.len()
+                                ),
+                            },
+                        )?;
+                        continue;
+                    }
+                    // both sides must agree on the deterministic chunk
+                    // grid — it is what keys the partials fold
+                    let (clo, chi) = sched::chunk_range(chunk as usize, n);
+                    if chunk as usize >= sched::chunk_count(n)
+                        || lo != clo as u64
+                        || hi != chi as u64
+                    {
+                        wire::write_frame(
+                            &mut stream,
+                            &Frame::ErrMsg {
+                                message: format!(
+                                    "chunk grid mismatch: leader sent chunk {chunk} = \
+                                     [{lo}, {hi}), worker grid has [{clo}, {chi}) for n = {n}"
+                                ),
+                            },
+                        )?;
+                        continue;
+                    }
+                    let k = k as usize;
+                    let stats = match &mut stats {
+                        Some(s) if s.k == k && s.dim == d => {
+                            s.reset(); // chunk partials are zero-seeded
+                            s
+                        }
+                        slot => slot.insert(PartialStats::zeros(k, d)),
+                    };
+                    if policy == DistancePolicy::Dot && norm_cache.is_none() {
+                        match shard_norms(self.source.as_ref(), 0, n, self.chunk_rows, d) {
+                            Ok(norms) => norm_cache = Some(norms),
+                            Err(e) => {
+                                let msg = format!("shard norm pass failed: {e}");
+                                let _ = wire::write_frame(
+                                    &mut stream,
+                                    &Frame::ErrMsg { message: msg },
+                                );
+                                return Err(e);
+                            }
+                        }
+                    }
+                    let x_norms = match policy {
+                        DistancePolicy::Dot => norm_cache.as_deref().map(|c| &c[clo..chi]),
+                        DistancePolicy::Exact => None,
+                    };
+                    if let Err(e) = stream_shard(
+                        self.source.as_ref(),
+                        clo,
+                        chi,
+                        self.chunk_rows,
+                        d,
+                        &centroids,
+                        k,
+                        &mut assign[clo..chi],
+                        stats,
+                        policy,
+                        x_norms,
+                    ) {
+                        let msg = format!("chunk {chunk} read failed: {e}");
+                        let _ = wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg });
+                        return Err(e);
+                    }
+                    chunks_served += 1;
+                    wire::write_frame(
+                        &mut stream,
+                        &Frame::ChunkPartials {
+                            chunk,
+                            k: k as u32,
+                            dim: d as u32,
+                            counts: stats.counts.clone(),
+                            sums: stats.sums.clone(),
+                            sse: stats.sse,
+                            assign: if want_assign {
+                                assign[clo..chi].to_vec()
+                            } else {
+                                Vec::new()
+                            },
                         },
                     )?;
                 }
@@ -459,6 +635,237 @@ mod tests {
             // drop without Shutdown — a dying leader
         });
         w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn leader_reset_between_frames_ends_session_cleanly() {
+        // the frame-boundary rule, RST flavor: the leader dies with the
+        // worker's last reply still unread in its receive buffer, so
+        // its close sends RST (not FIN). The worker's next header read
+        // fails with ECONNRESET at offset 0 — a clean session end, not
+        // a logged error.
+        let w = worker(2048);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Rejoin { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            wire::write_frame(
+                &mut conn,
+                &Frame::ChunkAssign {
+                    chunk: 0,
+                    lo: 0,
+                    hi: sched::chunk_range(0, 2048).1 as u64,
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    want_assign: false,
+                    centroids: vec![0.0, 0.0],
+                },
+            )
+            .unwrap();
+            // give the worker time to land its reply in our receive
+            // buffer, then vanish without reading it
+            std::thread::sleep(Duration::from_millis(300));
+            drop(conn);
+        });
+        // Ok either way the close manifests (EOF or RST) — the pin is
+        // that neither surfaces as a session error
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunk_session_serves_the_grid() {
+        // a full-view worker answers the whole chunk grid: ids echo
+        // back, counts cover every row exactly once, want_assign
+        // returns the chunk's labels
+        let n = 2500usize;
+        let w = worker(n);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            let mut total = 0u64;
+            for ci in 0..sched::chunk_count(n) {
+                let (lo, hi) = sched::chunk_range(ci, n);
+                wire::write_frame(
+                    &mut conn,
+                    &Frame::ChunkAssign {
+                        chunk: ci as u64,
+                        lo: lo as u64,
+                        hi: hi as u64,
+                        k: 2,
+                        dim: 2,
+                        policy: DistancePolicy::Exact,
+                        want_assign: true,
+                        centroids: vec![0.0, 0.0, 10.0, 10.0],
+                    },
+                )
+                .unwrap();
+                match wire::read_frame(&mut conn, "chunk partials").unwrap().0 {
+                    Frame::ChunkPartials { chunk, k: 2, dim: 2, counts, sums, assign, .. } => {
+                        assert_eq!(chunk, ci as u64);
+                        assert_eq!(sums.len(), 4);
+                        assert_eq!(assign.len(), hi - lo);
+                        assert!(assign.iter().all(|&a| a == 0 || a == 1));
+                        total += counts.iter().sum::<u64>();
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert_eq!(total, n as u64, "chunks partition the rows");
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sharded_worker_rejects_chunk_dispatch_typed() {
+        let ds = MixtureSpec::paper_2d(4).generate(100, 3);
+        let w =
+            ShardWorker::with_range(Box::new(OwnedMemorySource::new(ds)), 0, 50, 64).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            wire::write_frame(
+                &mut conn,
+                &Frame::ChunkAssign {
+                    chunk: 0,
+                    lo: 0,
+                    hi: 50,
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    want_assign: false,
+                    centroids: vec![0.0, 0.0],
+                },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "err").unwrap().0 {
+                Frame::ErrMsg { message } => {
+                    assert!(message.contains("full-view"), "{message}")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // grid mismatch on a full-range request is also typed: the
+            // session survives both refusals
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunk_grid_mismatch_is_typed_and_survivable() {
+        let n = 2000usize;
+        let w = worker(n);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            // chunk 0 with the wrong row range
+            wire::write_frame(
+                &mut conn,
+                &Frame::ChunkAssign {
+                    chunk: 0,
+                    lo: 0,
+                    hi: 17,
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    want_assign: false,
+                    centroids: vec![0.0, 0.0],
+                },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "err").unwrap().0 {
+                Frame::ErrMsg { message } => {
+                    assert!(message.contains("chunk grid mismatch"), "{message}")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // a correct request on the same session still works
+            let (lo, hi) = sched::chunk_range(0, n);
+            wire::write_frame(
+                &mut conn,
+                &Frame::ChunkAssign {
+                    chunk: 0,
+                    lo: lo as u64,
+                    hi: hi as u64,
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    want_assign: false,
+                    centroids: vec![0.0, 0.0],
+                },
+            )
+            .unwrap();
+            assert!(matches!(
+                wire::read_frame(&mut conn, "partials").unwrap().0,
+                Frame::ChunkPartials { .. }
+            ));
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn scripted_crash_drops_the_session_ok() {
+        // die_after_chunks = 1: the first chunk answers, the second
+        // vanishes; the worker reports the drill as a clean session
+        let n = 2048usize;
+        let w = worker(n);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: WIRE_VERSION }).unwrap();
+            let _ = wire::read_frame(&mut conn, "spec").unwrap();
+            for ci in 0..2u64 {
+                let (lo, hi) = sched::chunk_range(ci as usize, n);
+                wire::write_frame(
+                    &mut conn,
+                    &Frame::ChunkAssign {
+                        chunk: ci,
+                        lo: lo as u64,
+                        hi: hi as u64,
+                        k: 1,
+                        dim: 2,
+                        policy: DistancePolicy::Exact,
+                        want_assign: false,
+                        centroids: vec![0.0, 0.0],
+                    },
+                )
+                .unwrap();
+                if ci == 0 {
+                    assert!(matches!(
+                        wire::read_frame(&mut conn, "partials").unwrap().0,
+                        Frame::ChunkPartials { .. }
+                    ));
+                } else {
+                    // the scripted crash: no reply, connection gone
+                    assert!(wire::read_frame(&mut conn, "partials").is_err());
+                }
+            }
+        });
+        let (stream, _) = listener.accept().unwrap();
+        w.serve_conn_fault(
+            stream,
+            SessionFault { die_after_chunks: Some(1), ..Default::default() },
+        )
+        .unwrap();
         handle.join().unwrap();
     }
 }

@@ -127,6 +127,50 @@ impl std::str::FromStr for SchedMode {
     }
 }
 
+/// Which distributed scheduler `--engine dist` runs (DESIGN.md §10,
+/// §12). The two schedulers differ in failure model *and* in f64
+/// grouping: `Static` folds per-shard continuing sums (bit-identical
+/// to `oocore` / `threads --sched static`), `Elastic` folds per-chunk
+/// zero-seeded sums (bit-identical to `threads --sched steal`,
+/// invariant under re-dispatch, retry and worker count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DistSched {
+    /// One contiguous shard per worker, fixed at connect; any worker
+    /// failure aborts the run (the PR 4 baseline, and the default).
+    #[default]
+    Static,
+    /// Chunk-granular dispatch over full-view workers with re-dispatch
+    /// on failure, bounded reconnect retries, speculative re-execution
+    /// of straggler chunks and mid-run worker join
+    /// ([`crate::kmeans::dist::elastic`]).
+    Elastic,
+}
+
+impl std::str::FromStr for DistSched {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<DistSched> {
+        Ok(match s {
+            "static" => DistSched::Static,
+            "elastic" => DistSched::Elastic,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown dist scheduler `{other}` (static|elastic)"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for DistSched {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DistSched::Static => "static",
+            DistSched::Elastic => "elastic",
+        })
+    }
+}
+
 impl std::fmt::Display for SchedMode {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
@@ -361,6 +405,16 @@ mod tests {
             assert_eq!(m.to_string().parse::<SchedMode>().unwrap(), m);
         }
         assert!("greedy".parse::<SchedMode>().is_err());
+    }
+
+    #[test]
+    fn dist_sched_parses_and_defaults_to_static() {
+        assert_eq!(DistSched::default(), DistSched::Static);
+        for m in [DistSched::Static, DistSched::Elastic] {
+            assert_eq!(m.to_string().parse::<DistSched>().unwrap(), m);
+        }
+        let err = "steal".parse::<DistSched>().unwrap_err();
+        assert!(err.to_string().contains("static|elastic"), "{err}");
     }
 
     #[test]

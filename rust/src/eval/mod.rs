@@ -219,8 +219,13 @@ pub fn run_engine_policy(
         }
         Engine::Dist => {
             // loopback cluster: `threads` shard workers on localhost —
-            // the full wire protocol, timed including worker spawn
-            // (worker-count sweeps live in benches/dist_scaling.rs)
+            // the full wire protocol, timed including worker spawn.
+            // Deliberately the *static* scheduler: the t-tables compare
+            // dist against threads-static bit-for-bit. The elastic
+            // scheduler's identity contract (vs threads-steal) is
+            // pinned in kmeans::dist::elastic tests and swept in
+            // benches/dist_scaling.rs
+
             let cluster =
                 crate::cluster::LoopbackCluster::spawn_dataset(ds, threads.max(1), 65_536)?;
             let run = crate::kmeans::dist::run(

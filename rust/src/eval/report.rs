@@ -346,12 +346,13 @@ fn dist(dir: &Path, out: &mut String) {
         let _ = writeln!(out, "_not run_ (`cargo bench --bench dist_scaling`)\n");
         return;
     };
-    // rows: dim, k, workers, secs, speedup, efficiency, bytes_per_iter,
-    // iters, sse, identical
-    if rows.iter().any(|r| r.len() < 10) {
-        let _ = writeln!(out, "_malformed dist.csv (expected 10 columns)_\n");
+    // rows: dim, k, workers, sched (0 = static, 1 = elastic), secs,
+    // speedup, efficiency, bytes_per_iter, iters, sse, identical
+    if rows.iter().any(|r| r.len() < 11) {
+        let _ = writeln!(out, "_malformed dist.csv (expected 11 columns)_\n");
         return;
     }
+    let sched_name = |code: f64| if code == 1.0 { "elastic" } else { "static" };
     let md: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -359,32 +360,39 @@ fn dist(dir: &Path, out: &mut String) {
                 format!("{}D", r[0] as u64),
                 (r[1] as u64).to_string(),
                 (r[2] as u64).to_string(),
-                format!("{:.4}", r[3]),
-                format!("{:.2}", r[4]),
+                sched_name(r[3]).to_string(),
+                format!("{:.4}", r[4]),
                 format!("{:.2}", r[5]),
-                format!("{:.1}", r[6] / 1024.0),
-                (r[7] as u64).to_string(),
+                format!("{:.2}", r[6]),
+                format!("{:.1}", r[7] / 1024.0),
+                (r[8] as u64).to_string(),
             ]
         })
         .collect();
-    md_table(out, &["dim", "K", "S", "secs", "ψ", "ε", "wire KiB/iter", "iters"], &md);
-    // every cell was cross-checked bit-identical against threads(p=S)
-    // inside the bench; the CSV records the verdict so the report can
-    // refuse to bless a sweep whose identity check was skipped
-    let all_identical = rows.iter().all(|r| r[9] == 1.0);
-    check(out, "dist(S) bit-identical to threads(p=S) in every cell", all_identical);
-    let bytes_positive = rows.iter().all(|r| r[6] > 0.0);
+    md_table(
+        out,
+        &["dim", "K", "S", "sched", "secs", "ψ", "ε", "wire KiB/iter", "iters"],
+        &md,
+    );
+    // every cell was cross-checked inside the bench — static against
+    // threads(p=S), elastic against threads(p=S, steal) — and the CSV
+    // records the verdict so the report can refuse to bless a sweep
+    // whose identity check was skipped
+    let all_identical = rows.iter().all(|r| r[10] == 1.0);
+    check(out, "every dist cell bit-identical to its threads twin", all_identical);
+    let bytes_positive = rows.iter().all(|r| r[7] > 0.0);
     check(out, "wire bytes/iter > 0 in every cell", bytes_positive);
-    // iteration count is a pure function of the data/K (dist(S) ≡
-    // threads(p=S), and the dense engines iterate p-independently on
-    // the paper datasets), so S must not change it
+    // iteration count is a pure function of the data/K: dist(S) ≡
+    // threads(p=S) per scheduler, and static/elastic agree on
+    // assignments (only the f64 merge grouping differs), so neither S
+    // nor the scheduler may change it
     let mut iters_by_cfg: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
     let mut iters_stable = true;
     for r in &rows {
         let key = (r[0] as u64, r[1] as u64); // (dim, k)
-        iters_stable &= *iters_by_cfg.entry(key).or_insert(r[7]) == r[7];
+        iters_stable &= *iters_by_cfg.entry(key).or_insert(r[8]) == r[8];
     }
-    check(out, "iterations independent of worker count per (dim, K)", iters_stable);
+    check(out, "iterations independent of worker count and scheduler per (dim, K)", iters_stable);
     let _ = writeln!(out);
 }
 
@@ -573,28 +581,33 @@ mod tests {
     fn dist_section_checks_and_renders() {
         let dir = fixture_dir();
         let header = [
-            "dim", "k", "workers", "secs", "speedup", "efficiency", "bytes_per_iter", "iters",
-            "sse", "identical",
+            "dim", "k", "workers", "sched", "secs", "speedup", "efficiency", "bytes_per_iter",
+            "iters", "sse", "identical",
         ];
         csv::write_table(
             &dir.join("tables/dist.csv"),
             &header,
             &[
-                vec![2.0, 8.0, 1.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
-                vec![2.0, 8.0, 2.0, 0.6, 1.7, 0.85, 450.0, 23.0, 5.5, 1.0],
-                vec![3.0, 4.0, 4.0, 0.3, 3.1, 0.78, 700.0, 31.0, 7.25, 1.0],
+                vec![2.0, 8.0, 1.0, 0.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
+                vec![2.0, 8.0, 2.0, 0.0, 0.6, 1.7, 0.85, 450.0, 23.0, 5.5, 1.0],
+                // elastic cells: same iterations, different sse bits is
+                // legitimate (chunk-grouped fold) — only iters is keyed
+                vec![2.0, 8.0, 2.0, 1.0, 0.7, 1.4, 0.71, 460.0, 23.0, 5.5001, 1.0],
+                vec![3.0, 4.0, 4.0, 0.0, 0.3, 3.1, 0.78, 700.0, 31.0, 7.25, 1.0],
             ],
         )
         .unwrap();
         let report = generate(&dir).unwrap();
         assert!(report.contains("## Distributed loopback"), "{report}");
+        assert!(report.contains("| elastic |"), "{report}");
         assert!(
-            report.contains("✔ **dist(S) bit-identical to threads(p=S) in every cell**"),
+            report.contains("✔ **every dist cell bit-identical to its threads twin**"),
             "{report}"
         );
         assert!(report.contains("✔ **wire bytes/iter > 0 in every cell**"), "{report}");
         assert!(
-            report.contains("✔ **iterations independent of worker count per (dim, K)**"),
+            report
+                .contains("✔ **iterations independent of worker count and scheduler per (dim, K)**"),
             "{report}"
         );
 
@@ -603,18 +616,19 @@ mod tests {
             &dir.join("tables/dist.csv"),
             &header,
             &[
-                vec![2.0, 8.0, 1.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
-                vec![2.0, 8.0, 2.0, 0.6, 1.7, 0.85, 450.0, 24.0, 5.5, 0.0],
+                vec![2.0, 8.0, 1.0, 0.0, 1.0, 1.0, 1.0, 300.0, 23.0, 5.5, 1.0],
+                vec![2.0, 8.0, 2.0, 1.0, 0.6, 1.7, 0.85, 450.0, 24.0, 5.5, 0.0],
             ],
         )
         .unwrap();
         let report = generate(&dir).unwrap();
         assert!(
-            report.contains("✘ **dist(S) bit-identical to threads(p=S) in every cell**"),
+            report.contains("✘ **every dist cell bit-identical to its threads twin**"),
             "{report}"
         );
         assert!(
-            report.contains("✘ **iterations independent of worker count per (dim, K)**"),
+            report
+                .contains("✘ **iterations independent of worker count and scheduler per (dim, K)**"),
             "{report}"
         );
     }

@@ -34,14 +34,24 @@
 //! timeout, [`ClusterError::Frame`] for corrupt bytes,
 //! [`ClusterError::Shape`] for disagreeing shards, and
 //! [`ClusterError::Protocol`] for out-of-order frames or worker-
-//! reported errors. There is no mid-run retry: a half-collected
-//! iteration has no consistent state to resume from, and reruns are
-//! cheap precisely because results are deterministic.
+//! reported errors. Under the default [`DistSched::Static`] scheduler
+//! there is no mid-run retry: a half-collected iteration has no
+//! consistent state to resume from, and reruns are cheap precisely
+//! because results are deterministic. [`DistSched::Elastic`]
+//! ([`elastic`], DESIGN.md §12) replaces that abort-on-failure policy
+//! with chunk-granular re-dispatch, bounded reconnect retries with
+//! exponential backoff, speculative re-execution of straggler chunks
+//! and mid-run worker join — a run survives any failure as long as one
+//! full-view worker stays reachable, and the recovery is visible in
+//! [`NetStats`].
+
+pub mod elastic;
 
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+pub use crate::config::DistSched;
 use crate::config::Init;
 use crate::error::{ClusterError, Error, Result};
 use crate::kmeans::step::{finalize, merge_ordered, PartialStats};
@@ -49,7 +59,8 @@ use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::rng::Pcg64;
 
 /// Network knobs for a distributed run. Results never depend on them —
-/// they bound how long a dead worker can stall the leader.
+/// they bound how long a dead worker can stall the leader, and (for
+/// the elastic scheduler) how hard the leader tries to win it back.
 #[derive(Debug, Clone, Copy)]
 pub struct DistOpts {
     /// Per-worker TCP connect budget.
@@ -58,11 +69,23 @@ pub struct DistOpts {
     /// than this surfaces as [`ClusterError::Connection`]. Generous by
     /// default: one E-step over a large shard sits between frames.
     pub io_timeout: Duration,
+    /// Which scheduler runs the iterations (`--dist-sched`).
+    pub sched: DistSched,
+    /// Elastic only: consecutive reconnect attempts per worker before
+    /// it is written off (`--retry`). Each attempt backs off
+    /// exponentially from 100 ms; the counter resets on any completed
+    /// chunk. Ignored by the static scheduler.
+    pub retry: u32,
 }
 
 impl Default for DistOpts {
     fn default() -> Self {
-        DistOpts { connect_timeout: Duration::from_secs(10), io_timeout: Duration::from_secs(120) }
+        DistOpts {
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(120),
+            sched: DistSched::Static,
+            retry: 2,
+        }
     }
 }
 
@@ -89,9 +112,31 @@ pub struct NetStats {
     /// Per-iteration traffic and round-trip, aligned with
     /// [`KmeansResult::history`].
     pub per_iter: Vec<IterNet>,
-    /// Final assignment collection (FetchAssign/AssignShard), bytes
-    /// both directions.
+    /// Final assignment collection (FetchAssign/AssignShard for the
+    /// static scheduler; the `want_assign` chunk pass for the elastic
+    /// one), bytes both directions.
     pub collect_bytes: u64,
+    /// Elastic recovery telemetry (all zero under the static
+    /// scheduler): chunks returned to the dispatch queue after a
+    /// worker failure or timeout.
+    pub redispatched_chunks: u64,
+    /// Speculative chunk claims — an idle worker re-executing a chunk
+    /// that is in flight elsewhere. Nonzero even in healthy runs (the
+    /// tail of every iteration invites speculation); duplicated work
+    /// is harmless because every execution of a chunk yields the same
+    /// bits.
+    pub speculative_chunks: u64,
+    /// Speculative executions that finished first and were accepted —
+    /// each one is a straggler (or corpse) the cluster outran.
+    pub speculative_wins: u64,
+    /// Mid-run worker connection failures (drops and timeouts).
+    pub worker_failures: u64,
+    /// Successful reconnects (`Rejoin` handshakes) after a failure.
+    pub worker_rejoins: u64,
+    /// Wall-clock spent recovering: for every iteration disturbed by a
+    /// failure, the time from the first failure detection to the
+    /// iteration completing, summed.
+    pub recovery_secs: f64,
 }
 
 impl NetStats {
@@ -174,6 +219,39 @@ fn ctx(e: Error, addr: &str) -> Error {
     }
 }
 
+/// Resolve `addr`, connect within [`DistOpts::connect_timeout`], and
+/// arm both socket directions with [`DistOpts::io_timeout`]. Every
+/// failure is a typed [`ClusterError::Connection`]. Shared by the
+/// static leader and the elastic agents.
+fn open_socket(addr: &str, opts: &DistOpts) -> Result<TcpStream> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .map_err(|e| {
+            Error::Cluster(ClusterError::Connection(format!("worker {addr}: cannot resolve: {e}")))
+        })?
+        .next()
+        .ok_or_else(|| {
+            Error::Cluster(ClusterError::Connection(format!(
+                "worker {addr}: resolves to no address"
+            )))
+        })?;
+    let stream = TcpStream::connect_timeout(&sock_addr, opts.connect_timeout)
+        .map_err(|e| Error::Cluster(ClusterError::Connection(format!("worker {addr}: {e}"))))?;
+    let _ = stream.set_nodelay(true);
+    // keep the "every failure is a typed Error::Cluster" contract: the
+    // OS can reject e.g. a sub-resolution timeout
+    stream
+        .set_read_timeout(Some(opts.io_timeout))
+        .and_then(|_| stream.set_write_timeout(Some(opts.io_timeout)))
+        .map_err(|e| {
+            Error::Cluster(ClusterError::Connection(format!(
+                "worker {addr}: cannot set io timeout {:?}: {e}",
+                opts.io_timeout
+            )))
+        })?;
+    Ok(stream)
+}
+
 /// A handshaken cluster, ready to run. Workers are shards in the order
 /// given — shard `i` is `addrs[i]`, and the merge folds in that order.
 pub struct Cluster {
@@ -195,35 +273,7 @@ impl Cluster {
         let mut net = NetStats { workers: addrs.len(), ..Default::default() };
         let mut offset = 0usize;
         for addr in addrs {
-            let sock_addr = addr
-                .to_socket_addrs()
-                .map_err(|e| {
-                    Error::Cluster(ClusterError::Connection(format!(
-                        "worker {addr}: cannot resolve: {e}"
-                    )))
-                })?
-                .next()
-                .ok_or_else(|| {
-                    Error::Cluster(ClusterError::Connection(format!(
-                        "worker {addr}: resolves to no address"
-                    )))
-                })?;
-            let stream =
-                TcpStream::connect_timeout(&sock_addr, opts.connect_timeout).map_err(|e| {
-                    Error::Cluster(ClusterError::Connection(format!("worker {addr}: {e}")))
-                })?;
-            let _ = stream.set_nodelay(true);
-            // keep the "every failure is a typed Error::Cluster"
-            // contract: the OS can reject e.g. a sub-resolution timeout
-            stream
-                .set_read_timeout(Some(opts.io_timeout))
-                .and_then(|_| stream.set_write_timeout(Some(opts.io_timeout)))
-                .map_err(|e| {
-                    Error::Cluster(ClusterError::Connection(format!(
-                        "worker {addr}: cannot set io timeout {:?}: {e}",
-                        opts.io_timeout
-                    )))
-                })?;
+            let stream = open_socket(addr, opts)?;
             let mut link = Link { stream, addr: addr.clone(), rows: 0, offset };
             net.handshake_bytes += link.send(&Frame::Hello { version: WIRE_VERSION })?;
             let (frame, bytes) = link.recv("waiting for ShardSpec")?;
@@ -489,19 +539,27 @@ impl Cluster {
 }
 
 /// Connect, init (seeded random — same stream as the in-memory
-/// engines), run, shut down.
+/// engines), run, shut down. Dispatches on [`DistOpts::sched`]: the
+/// static per-shard leader or the elastic chunk-granular one.
 pub fn run(addrs: &[String], cfg: &KmeansConfig, opts: &DistOpts) -> Result<DistRun> {
-    Cluster::connect(addrs, opts)?.run(cfg)
+    match opts.sched {
+        DistSched::Static => Cluster::connect(addrs, opts)?.run(cfg),
+        DistSched::Elastic => elastic::run(addrs, cfg, opts),
+    }
 }
 
-/// Connect and run from explicit initial centroids.
+/// Connect and run from explicit initial centroids (dispatches on
+/// [`DistOpts::sched`] like [`run`]).
 pub fn run_from(
     addrs: &[String],
     cfg: &KmeansConfig,
     opts: &DistOpts,
     centroids0: &[f32],
 ) -> Result<DistRun> {
-    Cluster::connect(addrs, opts)?.run_from(cfg, centroids0)
+    match opts.sched {
+        DistSched::Static => Cluster::connect(addrs, opts)?.run_from(cfg, centroids0),
+        DistSched::Elastic => elastic::run_from(addrs, cfg, opts, centroids0),
+    }
 }
 
 #[cfg(test)]
@@ -513,7 +571,11 @@ mod tests {
     use crate::testutil::assert_bit_identical;
 
     fn fast_opts() -> DistOpts {
-        DistOpts { connect_timeout: Duration::from_secs(5), io_timeout: Duration::from_secs(10) }
+        DistOpts {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(10),
+            ..Default::default()
+        }
     }
 
     #[test]

@@ -1,0 +1,931 @@
+//! Elastic chunk-granular distributed Lloyd — the fault-tolerant
+//! leader (DESIGN.md §12).
+//!
+//! Where the static leader ([`super::Cluster`]) pins one shard to one
+//! worker and aborts on any failure, this scheduler takes PR 3's
+//! work-stealing idea across the network: every iteration is decomposed
+//! into the deterministic [`sched`] chunk grid, each chunk is a
+//! self-contained work unit (`ChunkAssign` → `ChunkPartials`), and the
+//! leader dispatches units to whichever **full-view** worker is free.
+//! A unit whose worker dies or stalls past [`DistOpts::io_timeout`] is
+//! returned to the queue and re-dispatched; a failed worker is retried
+//! with exponential backoff up to [`DistOpts::retry`] times and
+//! readmitted mid-run via the `Rejoin` handshake; idle workers at an
+//! iteration's tail *speculate* — re-execute an in-flight chunk — so a
+//! straggler can be outrun without waiting for its timeout. The run
+//! survives as long as one worker stays reachable.
+//!
+//! ## Why retries cannot change the answer
+//!
+//! Every execution of chunk `c` produces the same bits: the worker
+//! zero-seeds its accumulator and replays the canonical ascending-row
+//! fold over `chunk_range(c, n)` (the chunked-accumulation contract,
+//! DESIGN.md §4), and replicated inputs mean every worker folds the
+//! same rows. The leader keys partials by **chunk id** — not by worker,
+//! not by arrival order — and folds them with [`merge_ordered`] in
+//! ascending chunk order. Who computed a chunk, how many times it was
+//! computed, and when its result arrived are therefore all invisible to
+//! the merge: a run with faults is bit-identical to the fault-free
+//! elastic run, to any worker count, and to the in-memory work-stealing
+//! engine (`threads --sched steal`) — the grids coincide. (It is *not*
+//! bit-identical to the static dist scheduler, which groups the f64
+//! fold by shard; assignments and iteration counts still match.)
+//!
+//! Recovery is observable: [`NetStats`] counts re-dispatched chunks,
+//! speculative claims and wins, worker failures and rejoins, and the
+//! wall-clock spent recovering.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{ctx, open_socket, DistOpts, DistRun, IterNet, NetStats};
+use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+use crate::config::{DistancePolicy, Init};
+use crate::error::{ClusterError, Error, Result};
+use crate::kmeans::sched;
+use crate::kmeans::step::{finalize, merge_ordered, PartialStats};
+use crate::kmeans::{KmeansConfig, KmeansResult};
+use crate::rng::Pcg64;
+
+/// At most this many workers may hold the same chunk at once (the
+/// original claim plus one speculative copy). Duplicated work is
+/// bounded and harmless — every execution yields the same bits.
+const SPECULATE_CAP: usize = 2;
+
+/// First reconnect backoff; doubles per consecutive failure.
+const BACKOFF_BASE_MS: u64 = 100;
+/// Backoff ceiling (reached after 4 consecutive failures).
+const BACKOFF_CAP_MS: u64 = 1_600;
+
+fn backoff(consecutive_failures: u32) -> Duration {
+    let shift = consecutive_failures.min(4);
+    Duration::from_millis((BACKOFF_BASE_MS << shift).min(BACKOFF_CAP_MS))
+}
+
+/// One dispatch phase (an iteration's E-step, or the final assignment
+/// collection). Everything the agents share lives under one mutex so a
+/// claim, its release, and its result commit are each atomic.
+struct Phase {
+    /// Monotonic phase id; 0 = no work published yet. An agent carries
+    /// the epoch it claimed under, so a result landing after the phase
+    /// already completed (a speculation race) is discarded.
+    epoch: u64,
+    /// Set once the run is over — agents drain out.
+    done: bool,
+    /// Collect per-row assignments this phase (the final pass).
+    want_assign: bool,
+    /// Centroids this phase's E-step runs against.
+    centroids: Vec<f32>,
+    /// Unclaimed chunk ids.
+    pending: VecDeque<usize>,
+    /// Per chunk: worker ids currently executing it.
+    holders: Vec<Vec<usize>>,
+    /// Per chunk: a result has been accepted.
+    completed: Vec<bool>,
+    /// Chunks not yet completed; 0 = phase over.
+    remaining: usize,
+    /// Accepted partials, keyed by chunk id — the merge reads these in
+    /// ascending order, never in arrival order.
+    results: Vec<Option<PartialStats>>,
+    /// Accepted per-chunk assignment slices (final pass only).
+    assign_parts: Vec<Option<Vec<i32>>>,
+}
+
+/// State shared between the coordinator and the worker agents.
+struct Shared {
+    work: Mutex<Phase>,
+    cv: Condvar,
+    // byte counters are attributed by whichever agent moved the bytes;
+    // the coordinator reads deltas per phase
+    handshake_bytes: AtomicU64,
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    redispatched: AtomicU64,
+    speculative: AtomicU64,
+}
+
+/// Agent → coordinator notifications. State changes always happen
+/// under [`Shared::work`] *before* the event is sent, so the
+/// coordinator can re-check `remaining` on every wakeup.
+enum Event {
+    /// A chunk result was accepted (first completion wins).
+    Done { epoch: u64, speculative: bool },
+    /// A previously-connected worker dropped or timed out.
+    Down,
+    /// A worker (re)connected and handshook.
+    Up { rejoined: bool },
+    /// An agent gave up (retries exhausted or a non-transient error)
+    /// and exited.
+    Gone { addr: String, err: String },
+}
+
+/// A claimed work unit.
+struct Job {
+    epoch: u64,
+    chunk: usize,
+    speculative: bool,
+    want_assign: bool,
+    centroids: Vec<f32>,
+}
+
+/// Per-worker agent context (one thread per `--workers` address).
+struct Agent<'a> {
+    wid: usize,
+    addr: &'a str,
+    opts: DistOpts,
+    n: usize,
+    d: usize,
+    k: usize,
+    policy: DistancePolicy,
+    shared: &'a Shared,
+    events: Sender<Event>,
+}
+
+/// Connect + elastic run with leader-side seeded-random init — the
+/// same [`Pcg64`] stream as [`crate::kmeans::init::random`], gathered
+/// from the probe worker (full view: global row = local row), so an
+/// elastic run starts from the exact centroids every other engine
+/// starts from. Only [`Init::Random`] is distributable.
+pub fn run(addrs: &[String], cfg: &KmeansConfig, opts: &DistOpts) -> Result<DistRun> {
+    if let Init::KmeansPlusPlus = cfg.init {
+        return Err(Error::Config(
+            "dist: kmeans++ init needs a resident dataset; \
+             precompute centroids (kmeans::init) and call run_from"
+                .into(),
+        ));
+    }
+    let mut probe = probe_cluster(addrs, opts)?;
+    let centroids0 = gather_init(&mut probe, cfg.k, cfg.seed)?;
+    run_inner(addrs, cfg, opts, probe, centroids0)
+}
+
+/// Elastic run from explicit initial centroids.
+pub fn run_from(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    centroids0: &[f32],
+) -> Result<DistRun> {
+    let probe = probe_cluster(addrs, opts)?;
+    run_inner(addrs, cfg, opts, probe, centroids0.to_vec())
+}
+
+/// The first reachable worker; its `ShardSpec` defines the canonical
+/// dataset shape every other worker must match.
+struct Probe {
+    /// Index into `addrs` — the probe's agent inherits this link.
+    idx: usize,
+    stream: TcpStream,
+    n: usize,
+    d: usize,
+    handshake_bytes: u64,
+    gather_bytes: u64,
+}
+
+/// Try addresses in order until one connects and handshakes. Elastic
+/// runs start as long as *one* worker is up — the rest join (or rejoin)
+/// whenever they come reachable.
+fn probe_cluster(addrs: &[String], opts: &DistOpts) -> Result<Probe> {
+    if addrs.is_empty() {
+        return Err(Error::Config("dist: need at least one worker address".into()));
+    }
+    let mut last_err = None;
+    for (idx, addr) in addrs.iter().enumerate() {
+        match try_probe(addr, opts) {
+            Ok((stream, n, d, handshake_bytes)) => {
+                return Ok(Probe { idx, stream, n, d, handshake_bytes, gather_bytes: 0 })
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("addrs checked non-empty"))
+}
+
+fn try_probe(addr: &str, opts: &DistOpts) -> Result<(TcpStream, usize, usize, u64)> {
+    let mut stream = open_socket(addr, opts)?;
+    let tx = wire::write_frame(&mut stream, &Frame::Hello { version: WIRE_VERSION })
+        .map_err(|e| ctx(e, addr))?;
+    let (frame, rx) = recv(&mut stream, addr, "waiting for ShardSpec")?;
+    match frame {
+        Frame::ShardSpec { rows, dim } => {
+            let n = usize::try_from(rows).map_err(|_| {
+                Error::Cluster(ClusterError::Shape(format!(
+                    "worker {addr}: implausible dataset size {rows}"
+                )))
+            })?;
+            if n == 0 || dim == 0 {
+                return Err(Error::Cluster(ClusterError::Shape(format!(
+                    "worker {addr}: reports an empty dataset ({n} rows × {dim}D)"
+                ))));
+            }
+            Ok((stream, n, dim as usize, tx + rx))
+        }
+        other => Err(Error::Cluster(ClusterError::Protocol(format!(
+            "worker {addr}: expected ShardSpec, got {}",
+            other.name()
+        )))),
+    }
+}
+
+/// Read one frame; a worker `ErrMsg` becomes a typed protocol error.
+/// (The elastic agents have no [`super::Link`] — connections churn.)
+fn recv(stream: &mut TcpStream, addr: &str, expect: &str) -> Result<(Frame, u64)> {
+    let (frame, bytes) = wire::read_frame(stream, expect).map_err(|e| ctx(e, addr))?;
+    if let Frame::ErrMsg { message } = frame {
+        return Err(Error::Cluster(ClusterError::Protocol(format!("worker {addr}: {message}"))));
+    }
+    Ok((frame, bytes))
+}
+
+/// Sample K distinct rows with the canonical init RNG stream and
+/// gather them from the probe worker. Full view ⇒ global index ==
+/// local index, so one `Gather` suffices and rows come back in request
+/// (= centroid-buffer) order.
+fn gather_init(probe: &mut Probe, k: usize, seed: u64) -> Result<Vec<f32>> {
+    if k > probe.n {
+        return Err(Error::Config(format!("init: k {k} > n {}", probe.n)));
+    }
+    let mut rng = Pcg64::new(seed, 0x1417);
+    let idx = rng.sample_indices(probe.n, k);
+    let indices: Vec<u64> = idx.iter().map(|&i| i as u64).collect();
+    let addr = format!("probe #{}", probe.idx);
+    let d = probe.d;
+    probe.gather_bytes += wire::write_frame(&mut probe.stream, &Frame::Gather { indices })
+        .map_err(|e| ctx(e, &addr))?;
+    let (frame, bytes) = recv(&mut probe.stream, &addr, "waiting for gathered rows")?;
+    probe.gather_bytes += bytes;
+    match frame {
+        Frame::Rows { dim, rows } if dim as usize == d && rows.len() == k * d => Ok(rows),
+        Frame::Rows { dim, rows } => Err(Error::Cluster(ClusterError::Shape(format!(
+            "worker {addr}: gathered {} values of {dim}D rows, expected {k} × {d}D",
+            rows.len()
+        )))),
+        other => Err(Error::Cluster(ClusterError::Protocol(format!(
+            "worker {addr}: expected Rows, got {}",
+            other.name()
+        )))),
+    }
+}
+
+/// Everything the coordinator computes inside the agent scope.
+struct CoordOut {
+    result: KmeansResult,
+    per_iter: Vec<IterNet>,
+    collect_bytes: u64,
+    recovery_secs: f64,
+    failures: u64,
+    rejoins: u64,
+    spec_wins: u64,
+}
+
+fn run_inner(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    probe: Probe,
+    centroids0: Vec<f32>,
+) -> Result<DistRun> {
+    let (n, d, k) = (probe.n, probe.d, cfg.k);
+    if k == 0 {
+        return Err(Error::Config("dist: k must be >= 1".into()));
+    }
+    if centroids0.len() != k * d {
+        return Err(Error::Shape(format!(
+            "dist: initial centroids len {} != k {k} × dim {d}",
+            centroids0.len()
+        )));
+    }
+    let nchunks = sched::chunk_count(n);
+
+    let shared = Shared {
+        work: Mutex::new(Phase {
+            epoch: 0,
+            done: false,
+            want_assign: false,
+            centroids: Vec::new(),
+            pending: VecDeque::new(),
+            holders: Vec::new(),
+            completed: Vec::new(),
+            remaining: 0,
+            results: Vec::new(),
+            assign_parts: Vec::new(),
+        }),
+        cv: Condvar::new(),
+        handshake_bytes: AtomicU64::new(probe.handshake_bytes),
+        bytes_tx: AtomicU64::new(0),
+        bytes_rx: AtomicU64::new(0),
+        redispatched: AtomicU64::new(0),
+        speculative: AtomicU64::new(0),
+    };
+    let gather_bytes = probe.gather_bytes;
+    let probe_idx = probe.idx;
+    let mut probe_stream = Some(probe.stream);
+
+    let (event_tx, events) = std::sync::mpsc::channel::<Event>();
+    let mut outcome: Result<CoordOut> =
+        Err(Error::Worker("elastic coordinator did not run".into()));
+    std::thread::scope(|s| {
+        for (wid, addr) in addrs.iter().enumerate() {
+            // the probe's agent inherits its already-handshaken link
+            let initial = if wid == probe_idx { probe_stream.take() } else { None };
+            let agent = Agent {
+                wid,
+                addr,
+                opts: *opts,
+                n,
+                d,
+                k,
+                policy: cfg.distance,
+                shared: &shared,
+                events: event_tx.clone(),
+            };
+            s.spawn(move || agent_main(&agent, initial));
+        }
+        // the coordinator's recv() reports Disconnected exactly when
+        // every agent has exited — drop our own sender to make that so
+        drop(event_tx);
+        outcome = coordinate(&shared, &events, cfg, n, d, nchunks, centroids0);
+        // success or failure, wake every agent so the scope can join
+        let mut w = shared.work.lock().unwrap();
+        w.done = true;
+        shared.cv.notify_all();
+    });
+    let out = outcome?;
+
+    Ok(DistRun {
+        result: out.result,
+        net: NetStats {
+            workers: addrs.len(),
+            handshake_bytes: shared.handshake_bytes.load(Ordering::Relaxed),
+            gather_bytes,
+            per_iter: out.per_iter,
+            collect_bytes: out.collect_bytes,
+            redispatched_chunks: shared.redispatched.load(Ordering::Relaxed),
+            speculative_chunks: shared.speculative.load(Ordering::Relaxed),
+            speculative_wins: out.spec_wins,
+            worker_failures: out.failures,
+            worker_rejoins: out.rejoins,
+            recovery_secs: out.recovery_secs,
+        },
+    })
+}
+
+/// Per-phase outcome the coordinator folds into telemetry.
+struct PhaseOut {
+    results: Vec<PartialStats>,
+    assign_parts: Vec<Vec<i32>>,
+    bytes_tx: u64,
+    bytes_rx: u64,
+    secs: f64,
+    recovery_secs: f64,
+    failures: u64,
+    rejoins: u64,
+    spec_wins: u64,
+}
+
+/// The main-thread phase loop: publish work, wait for completion (or
+/// for every agent to give up), merge, repeat; then one final
+/// `want_assign` pass against the centroids the last iteration ran
+/// with, so assignments mean the same thing as in every other engine.
+fn coordinate(
+    shared: &Shared,
+    events: &Receiver<Event>,
+    cfg: &KmeansConfig,
+    n: usize,
+    d: usize,
+    nchunks: usize,
+    centroids0: Vec<f32>,
+) -> Result<CoordOut> {
+    let mut centroids = centroids0;
+    // the centroids the most recent *executed* phase used — the final
+    // assignment pass must re-run against these, not the updated ones
+    let mut mu_used = centroids.clone();
+    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut per_iter: Vec<IterNet> = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut epoch = 0u64;
+    let mut recovery_secs = 0.0;
+    let (mut failures, mut rejoins, mut spec_wins) = (0u64, 0u64, 0u64);
+
+    for _ in 0..cfg.max_iters {
+        epoch += 1;
+        mu_used.copy_from_slice(&centroids);
+        let out = run_phase(shared, events, epoch, nchunks, &centroids, false)?;
+        let merged = merge_ordered(out.results.iter());
+        let (mu_new, shift) = finalize(&merged, &centroids);
+        centroids = mu_new;
+        iterations += 1;
+        history.push((merged.sse, shift));
+        per_iter.push(IterNet { bytes_tx: out.bytes_tx, bytes_rx: out.bytes_rx, secs: out.secs });
+        recovery_secs += out.recovery_secs;
+        failures += out.failures;
+        rejoins += out.rejoins;
+        spec_wins += out.spec_wins;
+        if shift < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // the O(n) assignment vector travels once, after the loop — one
+    // extra chunk pass with want_assign set (for zero iterations there
+    // is nothing to assign against; match the in-memory engines)
+    let mut assign = vec![-1i32; n];
+    let mut collect_bytes = 0u64;
+    if iterations > 0 {
+        epoch += 1;
+        let out = run_phase(shared, events, epoch, nchunks, &mu_used, true)?;
+        for (ci, part) in out.assign_parts.into_iter().enumerate() {
+            let (lo, hi) = sched::chunk_range(ci, n);
+            debug_assert_eq!(part.len(), hi - lo);
+            assign[lo..hi].copy_from_slice(&part);
+        }
+        collect_bytes = out.bytes_tx + out.bytes_rx;
+        recovery_secs += out.recovery_secs;
+        failures += out.failures;
+        rejoins += out.rejoins;
+        spec_wins += out.spec_wins;
+    }
+
+    let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
+    Ok(CoordOut {
+        result: KmeansResult {
+            centroids,
+            assign,
+            k: cfg.k,
+            dim: d,
+            iterations,
+            sse,
+            shift,
+            converged,
+            history,
+            pruning: None,
+        },
+        per_iter,
+        collect_bytes,
+        recovery_secs,
+        failures,
+        rejoins,
+        spec_wins,
+    })
+}
+
+/// Publish one phase and pump events until every chunk has an accepted
+/// result. Errors only when *all* agents have exited with work still
+/// outstanding — any weaker failure re-dispatches instead.
+fn run_phase(
+    shared: &Shared,
+    events: &Receiver<Event>,
+    epoch: u64,
+    nchunks: usize,
+    centroids: &[f32],
+    want_assign: bool,
+) -> Result<PhaseOut> {
+    let tx0 = shared.bytes_tx.load(Ordering::Relaxed);
+    let rx0 = shared.bytes_rx.load(Ordering::Relaxed);
+    {
+        let mut w = shared.work.lock().unwrap();
+        w.epoch = epoch;
+        w.want_assign = want_assign;
+        w.centroids = centroids.to_vec();
+        w.pending = (0..nchunks).collect();
+        w.holders = vec![Vec::new(); nchunks];
+        w.completed = vec![false; nchunks];
+        w.remaining = nchunks;
+        w.results = (0..nchunks).map(|_| None).collect();
+        w.assign_parts = (0..nchunks).map(|_| None).collect();
+        shared.cv.notify_all();
+    }
+    let t0 = Instant::now();
+    let mut first_fail: Option<Instant> = None;
+    let (mut failures, mut rejoins, mut spec_wins) = (0u64, 0u64, 0u64);
+    let mut gone: Vec<String> = Vec::new();
+    loop {
+        // agents commit state before sending events, so checking before
+        // a blocking recv cannot miss the last completion
+        if shared.work.lock().unwrap().remaining == 0 {
+            break;
+        }
+        match events.recv() {
+            Ok(Event::Done { epoch: e, speculative }) => {
+                if speculative && e == epoch {
+                    spec_wins += 1;
+                }
+            }
+            Ok(Event::Down) => {
+                failures += 1;
+                first_fail.get_or_insert_with(Instant::now);
+            }
+            Ok(Event::Up { rejoined }) => {
+                if rejoined {
+                    rejoins += 1;
+                }
+            }
+            Ok(Event::Gone { addr, err }) => gone.push(format!("worker {addr}: {err}")),
+            Err(_) => {
+                // every agent has exited; the phase either finished on
+                // the agents' way out or it never will
+                let w = shared.work.lock().unwrap();
+                if w.remaining > 0 {
+                    return Err(Error::Cluster(ClusterError::Connection(format!(
+                        "elastic: all workers lost with {} of {nchunks} chunks outstanding \
+                         after retries; {}",
+                        w.remaining,
+                        if gone.is_empty() {
+                            "no agent reported an error".to_string()
+                        } else {
+                            format!("last errors: {}", gone.join("; "))
+                        }
+                    ))));
+                }
+                break;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let recovery_secs = first_fail.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let mut w = shared.work.lock().unwrap();
+    let results: Vec<PartialStats> =
+        w.results.iter_mut().map(|r| r.take().expect("completed chunk has partials")).collect();
+    let assign_parts: Vec<Vec<i32>> = if want_assign {
+        w.assign_parts
+            .iter_mut()
+            .map(|r| r.take().expect("completed chunk has assignments"))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    drop(w);
+    Ok(PhaseOut {
+        results,
+        assign_parts,
+        bytes_tx: shared.bytes_tx.load(Ordering::Relaxed) - tx0,
+        bytes_rx: shared.bytes_rx.load(Ordering::Relaxed) - rx0,
+        secs,
+        recovery_secs,
+        failures,
+        rejoins,
+        spec_wins,
+    })
+}
+
+/// Agent thread: claim → (re)connect → execute → commit, retrying
+/// transient failures with backoff and exiting on `done`, exhausted
+/// retries, or a non-transient (protocol/shape/frame) error.
+fn agent_main(a: &Agent<'_>, mut stream: Option<TcpStream>) {
+    let mut ever_connected = stream.is_some();
+    let mut attempts = 0u32;
+    loop {
+        let Some(job) = next_job(a) else {
+            // run over: politely end the session (best effort — the
+            // worker also treats a bare close at a frame boundary as a
+            // clean end of session)
+            if let Some(mut s) = stream {
+                let _ = wire::write_frame(&mut s, &Frame::Shutdown);
+            }
+            return;
+        };
+        if stream.is_none() {
+            match connect_worker(a, ever_connected) {
+                Ok(s) => {
+                    stream = Some(s);
+                    let _ = a.events.send(Event::Up { rejoined: ever_connected });
+                    ever_connected = true;
+                }
+                Err(e) => {
+                    release_claim(a, job.epoch, job.chunk);
+                    attempts += 1;
+                    if !transient(&e) || attempts > a.opts.retry {
+                        let _ =
+                            a.events.send(Event::Gone { addr: a.addr.to_string(), err: e.to_string() });
+                        return;
+                    }
+                    std::thread::sleep(backoff(attempts - 1));
+                    continue;
+                }
+            }
+        }
+        match exchange_chunk(stream.as_mut().expect("connected above"), a, &job) {
+            Ok((stats, assign)) => {
+                attempts = 0;
+                if commit(a, &job, stats, assign) {
+                    let _ = a
+                        .events
+                        .send(Event::Done { epoch: job.epoch, speculative: job.speculative });
+                }
+            }
+            Err(e) => {
+                stream = None;
+                release_claim(a, job.epoch, job.chunk);
+                let _ = a.events.send(Event::Down);
+                attempts += 1;
+                if !transient(&e) || attempts > a.opts.retry {
+                    let _ =
+                        a.events.send(Event::Gone { addr: a.addr.to_string(), err: e.to_string() });
+                    return;
+                }
+                std::thread::sleep(backoff(attempts - 1));
+            }
+        }
+    }
+}
+
+/// Connection loss and timeouts are retryable; protocol, shape and
+/// frame errors (version mismatch, sharded worker, corrupt bytes) are
+/// a misconfiguration retrying cannot fix.
+fn transient(e: &Error) -> bool {
+    matches!(e, Error::Cluster(ClusterError::Connection(_)))
+}
+
+/// Block until there is a claimable chunk (or the run ends). Prefers
+/// unclaimed work; with the queue empty it speculates on an in-flight
+/// chunk (lowest id first, capped at [`SPECULATE_CAP`] holders).
+fn next_job(a: &Agent<'_>) -> Option<Job> {
+    let mut w = a.shared.work.lock().unwrap();
+    loop {
+        if w.done {
+            return None;
+        }
+        if w.epoch != 0 && w.remaining > 0 {
+            if let Some(chunk) = w.pending.pop_front() {
+                w.holders[chunk].push(a.wid);
+                return Some(Job {
+                    epoch: w.epoch,
+                    chunk,
+                    speculative: false,
+                    want_assign: w.want_assign,
+                    centroids: w.centroids.clone(),
+                });
+            }
+            let spec = (0..w.holders.len()).find(|&c| {
+                !w.completed[c]
+                    && !w.holders[c].is_empty()
+                    && w.holders[c].len() < SPECULATE_CAP
+                    && !w.holders[c].contains(&a.wid)
+            });
+            if let Some(chunk) = spec {
+                w.holders[chunk].push(a.wid);
+                a.shared.speculative.fetch_add(1, Ordering::Relaxed);
+                return Some(Job {
+                    epoch: w.epoch,
+                    chunk,
+                    speculative: true,
+                    want_assign: w.want_assign,
+                    centroids: w.centroids.clone(),
+                });
+            }
+        }
+        w = a.shared.cv.wait(w).unwrap();
+    }
+}
+
+/// Atomically deliver a chunk result. Returns false (result discarded)
+/// when the phase moved on or another copy of the chunk landed first —
+/// both copies carry identical bits, so first-wins is arbitrary *and*
+/// harmless.
+fn commit(a: &Agent<'_>, job: &Job, stats: PartialStats, assign: Option<Vec<i32>>) -> bool {
+    let mut w = a.shared.work.lock().unwrap();
+    if w.epoch != job.epoch || w.done {
+        return false;
+    }
+    if let Some(p) = w.holders[job.chunk].iter().position(|&h| h == a.wid) {
+        w.holders[job.chunk].swap_remove(p);
+    }
+    if w.completed[job.chunk] {
+        return false;
+    }
+    w.completed[job.chunk] = true;
+    w.remaining -= 1;
+    w.results[job.chunk] = Some(stats);
+    if let Some(parts) = assign {
+        w.assign_parts[job.chunk] = Some(parts);
+    }
+    true
+}
+
+/// Hand a failed claim back: if nobody else holds the chunk and it has
+/// no accepted result, it returns to the queue for re-dispatch.
+fn release_claim(a: &Agent<'_>, epoch: u64, chunk: usize) {
+    let mut w = a.shared.work.lock().unwrap();
+    if w.epoch != epoch || w.done {
+        return;
+    }
+    if let Some(p) = w.holders[chunk].iter().position(|&h| h == a.wid) {
+        w.holders[chunk].swap_remove(p);
+    }
+    if !w.completed[chunk] && w.holders[chunk].is_empty() {
+        w.pending.push_back(chunk);
+        a.shared.redispatched.fetch_add(1, Ordering::Relaxed);
+    }
+    a.shared.cv.notify_all();
+}
+
+/// Open a socket and handshake — `Hello` on the first-ever connect,
+/// `Rejoin` thereafter (the wire-visible marker that this session
+/// continues an existing run). The worker must report the canonical
+/// full-view shape.
+fn connect_worker(a: &Agent<'_>, rejoin: bool) -> Result<TcpStream> {
+    let mut stream = open_socket(a.addr, &a.opts)?;
+    let hello = if rejoin {
+        Frame::Rejoin { version: WIRE_VERSION }
+    } else {
+        Frame::Hello { version: WIRE_VERSION }
+    };
+    let tx = wire::write_frame(&mut stream, &hello).map_err(|e| ctx(e, a.addr))?;
+    let (frame, rx) = recv(&mut stream, a.addr, "waiting for ShardSpec")?;
+    a.shared.handshake_bytes.fetch_add(tx + rx, Ordering::Relaxed);
+    match frame {
+        Frame::ShardSpec { rows, dim }
+            if rows == a.n as u64 && dim as usize == a.d =>
+        {
+            Ok(stream)
+        }
+        Frame::ShardSpec { rows, dim } => Err(Error::Cluster(ClusterError::Shape(format!(
+            "worker {}: serves {rows} rows × {dim}D but the cluster's full view is {} × {}D \
+             (elastic workers must replicate the whole input — drop --shard)",
+            a.addr, a.n, a.d
+        )))),
+        other => Err(Error::Cluster(ClusterError::Protocol(format!(
+            "worker {}: expected ShardSpec, got {}",
+            a.addr,
+            other.name()
+        )))),
+    }
+}
+
+/// One `ChunkAssign` → `ChunkPartials` round trip, fully validated.
+fn exchange_chunk(
+    stream: &mut TcpStream,
+    a: &Agent<'_>,
+    job: &Job,
+) -> Result<(PartialStats, Option<Vec<i32>>)> {
+    let (lo, hi) = sched::chunk_range(job.chunk, a.n);
+    let req = Frame::ChunkAssign {
+        chunk: job.chunk as u64,
+        lo: lo as u64,
+        hi: hi as u64,
+        k: a.k as u32,
+        dim: a.d as u32,
+        policy: a.policy,
+        want_assign: job.want_assign,
+        centroids: job.centroids.clone(),
+    };
+    let tx = wire::write_frame(stream, &req).map_err(|e| ctx(e, a.addr))?;
+    a.shared.bytes_tx.fetch_add(tx, Ordering::Relaxed);
+    let (frame, rx) = recv(stream, a.addr, "waiting for ChunkPartials")?;
+    a.shared.bytes_rx.fetch_add(rx, Ordering::Relaxed);
+    match frame {
+        Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign }
+            if chunk == job.chunk as u64
+                && k as usize == a.k
+                && dim as usize == a.d
+                && counts.len() == a.k
+                && sums.len() == a.k * a.d
+                && assign.len() == if job.want_assign { hi - lo } else { 0 } =>
+        {
+            let stats = PartialStats { k: a.k, dim: a.d, sums, counts, sse };
+            Ok((stats, job.want_assign.then_some(assign)))
+        }
+        Frame::ChunkPartials { chunk, k, dim, counts, assign, .. } => {
+            Err(Error::Cluster(ClusterError::Shape(format!(
+                "worker {}: chunk {chunk} partials shaped {k}×{dim} ({} counts, {} assigns) \
+                 do not answer chunk {} ({}×{}, want_assign={})",
+                a.addr,
+                counts.len(),
+                assign.len(),
+                job.chunk,
+                a.k,
+                a.d,
+                job.want_assign
+            ))))
+        }
+        other => Err(Error::Cluster(ClusterError::Protocol(format!(
+            "worker {}: expected ChunkPartials, got {}",
+            a.addr,
+            other.name()
+        )))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::loopback::LoopbackCluster;
+    use crate::cluster::worker::ShardWorker;
+    use crate::config::{DistSched, SchedMode};
+    use crate::data::source::OwnedMemorySource;
+    use crate::data::MixtureSpec;
+    use crate::kmeans::init;
+    use crate::kmeans::parallel::{self, MergeMode};
+    use crate::testutil::assert_bit_identical;
+
+    fn elastic_opts() -> DistOpts {
+        DistOpts {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(10),
+            sched: DistSched::Elastic,
+            retry: 2,
+        }
+    }
+
+    #[test]
+    fn elastic_matches_threads_steal_for_any_worker_count() {
+        let ds = MixtureSpec::paper_2d(8).generate(3301, 11);
+        let cfg = KmeansConfig::new(8).with_seed(5);
+        let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+        let reference =
+            parallel::run_from_sched(&ds, &cfg, 3, MergeMode::Leader, SchedMode::Steal, &mu0);
+        for workers in [1, 2, 3] {
+            let cluster = LoopbackCluster::spawn_replicated(&ds, workers, 256).unwrap();
+            let run = super::run_from(&cluster.addrs, &cfg, &elastic_opts(), &mu0).unwrap();
+            cluster.join().unwrap();
+            assert_bit_identical(
+                &run.result,
+                &reference,
+                &format!("elastic({workers}) vs threads-steal"),
+            );
+            assert_eq!(run.net.per_iter.len(), run.result.iterations);
+            assert_eq!(run.net.workers, workers);
+            assert!(run.net.collect_bytes > 0);
+            // a fault-free loopback run loses nobody
+            assert_eq!(run.net.worker_failures, 0);
+            assert_eq!(run.net.worker_rejoins, 0);
+        }
+    }
+
+    #[test]
+    fn elastic_seeded_init_matches_the_in_memory_engines() {
+        let ds = MixtureSpec::paper_3d(4).generate(2100, 6);
+        let cfg = KmeansConfig::new(6).with_seed(42);
+        let reference =
+            parallel::run_sched(&ds, &cfg, 2, MergeMode::Leader, SchedMode::Steal);
+        let cluster = LoopbackCluster::spawn_replicated(&ds, 2, 128).unwrap();
+        let run = super::run(&cluster.addrs, &cfg, &elastic_opts()).unwrap();
+        cluster.join().unwrap();
+        assert_bit_identical(&run.result, &reference, "elastic seeded init vs threads-steal");
+        assert!(run.net.gather_bytes > 0, "init gather must be accounted");
+    }
+
+    #[test]
+    fn sharded_worker_is_a_typed_misconfiguration() {
+        // a worker serving rows [0, 60) of a 100-row source refuses
+        // ChunkAssign; with no other worker the run must fail typed,
+        // naming the fix
+        let ds = MixtureSpec::paper_2d(4).generate(100, 9);
+        let w = ShardWorker::with_range(
+            Box::new(OwnedMemorySource::new(ds)),
+            0,
+            60,
+            32,
+        )
+        .unwrap();
+        let cluster = LoopbackCluster::spawn(vec![w]).unwrap();
+        let cfg = KmeansConfig::new(3).with_seed(1);
+        let err = super::run(&cluster.addrs, &cfg, &elastic_opts()).unwrap_err();
+        let _ = cluster.join(); // drilled nothing: session ended by our error path
+        assert!(
+            matches!(err, Error::Cluster(ClusterError::Connection(_))),
+            "all-workers-lost wraps the cause: {err}"
+        );
+        assert!(err.to_string().contains("full-view"), "{err}");
+    }
+
+    #[test]
+    fn zero_iteration_run_matches_threads() {
+        let ds = MixtureSpec::paper_2d(4).generate(500, 3);
+        let cfg = KmeansConfig::new(4).with_seed(2).with_max_iters(0);
+        let reference =
+            parallel::run_sched(&ds, &cfg, 2, MergeMode::Leader, SchedMode::Steal);
+        // one worker: with zero phases the other workers would never be
+        // contacted, and the loopback harness would wait out its accept
+        // deadline before joining
+        let cluster = LoopbackCluster::spawn_replicated(&ds, 1, 64).unwrap();
+        let run = super::run(&cluster.addrs, &cfg, &elastic_opts()).unwrap();
+        cluster.join().unwrap();
+        assert_eq!(run.result.iterations, 0);
+        assert_eq!(run.result.assign, reference.assign); // all -1
+        assert_eq!(run.net.collect_bytes, 0);
+    }
+
+    #[test]
+    fn unreachable_cluster_is_a_typed_connection_error() {
+        let opts = DistOpts {
+            connect_timeout: Duration::from_millis(200),
+            ..elastic_opts()
+        };
+        let err =
+            super::run(&["127.0.0.1:1".to_string()], &KmeansConfig::new(2), &opts).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+    }
+
+    #[test]
+    fn dataset_helper_for_empty_addrs_errors() {
+        let err = super::run(&[], &KmeansConfig::new(2), &elastic_opts()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+}

@@ -25,6 +25,14 @@
 //! order). Any steal schedule therefore produces the same bits, and
 //! because the chunk grid depends only on `n` (not the worker count),
 //! results are also independent of `p`.
+//!
+//! The **elastic distributed scheduler**
+//! ([`crate::kmeans::dist::elastic`], DESIGN.md §12) keys its network
+//! work units off the *same* grid — [`chunk_count`]/[`chunk_range`]
+//! over the same [`CHUNK_ROWS`] — which is why its results are
+//! bit-identical to `threads --sched steal` and survive chunk
+//! re-dispatch, retry and speculation unchanged: the grid, and
+//! therefore the fold, is a pure function of `n`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};

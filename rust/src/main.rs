@@ -104,6 +104,8 @@ fn print_usage() {
          \u{20}          [--sched static|steal]   (threads/elkan/hamerly chunk scheduler)\n\
          \u{20}          [--memory-budget BYTES[K|M|G]]   (oocore: bound resident chunk buffers)\n\
          \u{20}          [--workers a:p1,b:p2,...] [--net-timeout SECS]   (dist: shard workers)\n\
+         \u{20}          [--dist-sched static|elastic] [--retry N]   (dist: elastic = chunk\n\
+         \u{20}          re-dispatch + worker retry/rejoin; needs replicated full-view workers)\n\
          worker    --listen HOST:PORT  --input <file.pkd> | --synthetic <2d|3d>:<N>\n\
          \u{20}          [--shard I/S] [--chunk C] [--seed S (synthetic only)] [--once]\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
@@ -584,8 +586,10 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
 /// the workers (`parakm worker`); the leader connects, initializes
 /// (seeded random — the same index stream as every other engine),
 /// broadcasts centroids per iteration and folds the returned partials.
+/// `--dist-sched elastic` swaps the per-shard leader for the
+/// chunk-granular fault-tolerant one (DESIGN.md §12).
 fn cmd_run_dist(args: &Args) -> Result<()> {
-    use parakmeans::kmeans::dist::{self, DistOpts};
+    use parakmeans::kmeans::dist::{self, DistOpts, DistSched};
 
     let workers_raw = args.get("workers").or_config(
         "--engine dist requires --workers host:port,host:port,... (one per shard, \
@@ -598,6 +602,8 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let seed: u64 = args.get_or("seed", 42)?;
     let init: Init = args.get_or("init", Init::Random)?;
     let net_timeout: f64 = args.get_or("net-timeout", 120.0)?;
+    let sched: DistSched = args.get_or("dist-sched", DistSched::Static)?;
+    let retry: u32 = args.get_or("retry", 2)?;
     let distance = distance_from(args)?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
@@ -606,24 +612,35 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
         return Err(Error::Config("--net-timeout must be in (0, 86400] seconds".into()));
     }
+    if retry > 1_000 {
+        return Err(Error::Config("--retry must be <= 1000".into()));
+    }
     let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
     let opts = DistOpts {
         connect_timeout: std::time::Duration::from_secs_f64(net_timeout.min(10.0)),
         io_timeout: std::time::Duration::from_secs_f64(net_timeout),
+        sched,
+        retry,
     };
 
     let t0 = std::time::Instant::now();
-    let cluster = dist::Cluster::connect(&addrs, &opts)?;
-    let (n, dim) = (cluster.n(), cluster.dim());
-    let run = cluster.run(&kc)?;
+    let run = dist::run(&addrs, &kc, &opts)?;
     let total = t0.elapsed().as_secs_f64();
     let result = &run.result;
     let net = &run.net;
+    let (n, dim) = (result.assign.len(), result.dim);
 
-    println!("engine      : dist");
+    println!("engine      : dist ({sched})");
     println!("distance    : {distance}");
     println!("workers     : {} ({})", net.workers, addrs.join(", "));
-    println!("dataset     : {n} points, {dim}D (sharded across workers)");
+    match sched {
+        DistSched::Static => {
+            println!("dataset     : {n} points, {dim}D (sharded across workers)")
+        }
+        DistSched::Elastic => {
+            println!("dataset     : {n} points, {dim}D (replicated at every worker)")
+        }
+    }
     println!("k           : {k}   init: {init:?}   seed: {seed}");
     println!(
         "iterations  : {} (converged: {})",
@@ -644,6 +661,18 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
         "round trip  : {:.2} ms avg broadcast-to-last-partial",
         1e3 * net.avg_round_trip_secs()
     );
+    if sched == DistSched::Elastic {
+        println!(
+            "recovery    : failures={} rejoins={} redispatched={} speculative={} (wins {}) \
+             recovery={:.3}s",
+            net.worker_failures,
+            net.worker_rejoins,
+            net.redispatched_chunks,
+            net.speculative_chunks,
+            net.speculative_wins,
+            net.recovery_secs
+        );
+    }
     println!("cluster sizes: {:?}", result.cluster_sizes());
     if let Some(path) = assign_out {
         write_assign_csv(&path, &result.assign)?;

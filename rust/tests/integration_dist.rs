@@ -8,27 +8,38 @@
 //! again with `PARAKM_KERNEL=scalar` forced, so tier dispatch cannot
 //! hide a divergence.
 //!
-//! Fault injection: a worker dropping mid-iteration, a truncated frame,
-//! and a wrong-dimension shard must each surface the matching typed
-//! [`Error::Cluster`] variant promptly — the leader fails fast, never
-//! hangs.
+//! Fault injection, static scheduler: a worker dropping mid-iteration,
+//! a truncated frame, and a wrong-dimension shard must each surface the
+//! matching typed [`Error::Cluster`] variant promptly — the leader
+//! fails fast, never hangs.
+//!
+//! Fault injection, elastic scheduler (DESIGN.md §12): a worker killed
+//! mid-iteration, a worker stalled past the net timeout, and a worker
+//! that rejoins mid-run must each leave the run *completing*,
+//! bit-identical to the fault-free elastic run and to
+//! `threads --sched steal`, with the recovery visible in `NetStats`.
 
 use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
 use parakmeans::cluster::wire::{self, Frame, WIRE_VERSION};
-use parakmeans::cluster::{LoopbackCluster, ShardWorker};
+use parakmeans::cluster::{LoopbackCluster, SessionFault, ShardWorker, WorkerDrill};
+use parakmeans::config::{DistSched, SchedMode};
 use parakmeans::data::source::{ChunkReader, DataSource, MemorySource, OwnedMemorySource};
 use parakmeans::data::{Dataset, MixtureSpec};
 use parakmeans::error::ClusterError;
-use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::dist::{self, DistOpts, DistRun};
 use parakmeans::kmeans::streaming::{self, StreamOpts};
 use parakmeans::kmeans::{init, parallel, serial, KmeansConfig};
 use parakmeans::testutil::assert_bit_identical;
 use parakmeans::Error;
 
 fn opts() -> DistOpts {
-    DistOpts { connect_timeout: Duration::from_secs(5), io_timeout: Duration::from_secs(5) }
+    DistOpts {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(5),
+        ..Default::default()
+    }
 }
 
 /// The acceptance matrix: dist(S) ≡ threads(p=S) ≡ oocore(shards=S),
@@ -151,7 +162,11 @@ fn reply_arrival_order_cannot_change_results() {
 
 /// Short timeouts so every fault must surface fast.
 fn fault_opts() -> DistOpts {
-    DistOpts { connect_timeout: Duration::from_secs(2), io_timeout: Duration::from_secs(2) }
+    DistOpts {
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_secs(2),
+        ..Default::default()
+    }
 }
 
 /// A hand-rolled fake worker: answers the handshake like a real shard,
@@ -261,6 +276,129 @@ fn silent_worker_hits_the_read_timeout_not_a_hang() {
     // io_timeout is 2s; well under the fake's 8s stall proves the
     // timeout fired rather than the worker finally hanging up
     assert!(elapsed < Duration::from_secs(6), "leader stalled {elapsed:?}");
+}
+
+// ---- elastic fault matrix (DESIGN.md §12) -------------------------------
+
+fn elastic_opts() -> DistOpts {
+    DistOpts {
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_secs(2),
+        sched: DistSched::Elastic,
+        retry: 2,
+    }
+}
+
+/// Run the elastic leader against replicated drilled workers and also
+/// compute the two references every drill must reproduce bit-for-bit:
+/// the fault-free elastic run and the in-memory work-stealing engine.
+fn elastic_drill(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    drills: &[WorkerDrill],
+) -> DistRun {
+    let mu0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+
+    let clean_cluster = LoopbackCluster::spawn_replicated(ds, drills.len(), 256).unwrap();
+    let clean = dist::run_from(&clean_cluster.addrs, cfg, opts, &mu0).unwrap();
+    clean_cluster.join().unwrap();
+
+    let cluster = LoopbackCluster::spawn_replicated_faulty(ds, 256, drills).unwrap();
+    let faulty = dist::run_from(&cluster.addrs, cfg, opts, &mu0).unwrap();
+    cluster.join().unwrap();
+
+    assert_bit_identical(&faulty.result, &clean.result, "elastic faulty vs fault-free");
+    let steal = parallel::run_from_sched(
+        ds,
+        cfg,
+        drills.len(),
+        parallel::MergeMode::Leader,
+        SchedMode::Steal,
+        &mu0,
+    );
+    assert_bit_identical(&faulty.result, &steal, "elastic faulty vs threads-steal");
+    assert_eq!(faulty.net.per_iter.len(), faulty.result.iterations);
+    faulty
+}
+
+#[test]
+fn elastic_survives_a_worker_killed_mid_iteration() {
+    // worker 0 dies on its second chunk — mid-iteration, holding an
+    // unanswered claim while most of the iteration is still unclaimed —
+    // and never comes back (one session only); the other two workers
+    // absorb its chunks
+    let ds = MixtureSpec::paper_2d(8).generate(30_000, 17);
+    let cfg = KmeansConfig::new(8).with_seed(5).with_max_iters(8);
+    let drills = [
+        WorkerDrill {
+            fault: SessionFault { die_after_chunks: Some(1), ..Default::default() },
+            sessions: 1,
+        },
+        WorkerDrill::default(),
+        WorkerDrill::default(),
+    ];
+    let run = elastic_drill(&ds, &cfg, &elastic_opts(), &drills);
+    assert!(run.net.worker_failures >= 1, "{:?}", run.net);
+    // the dying worker held an unanswered chunk: it must have been
+    // returned to the queue and re-dispatched
+    assert!(run.net.redispatched_chunks >= 1, "{:?}", run.net);
+}
+
+#[test]
+fn elastic_outruns_a_worker_stalled_past_the_net_timeout() {
+    // worker 0 answers one chunk, then sleeps 3 s on every subsequent
+    // request — past the 1 s io timeout. Its in-flight chunk is rescued
+    // either by a speculative re-execution winning or by the timeout
+    // returning it to the queue; both paths must be visible
+    let ds = MixtureSpec::paper_2d(8).generate(12_000, 23);
+    let cfg = KmeansConfig::new(8).with_seed(9).with_max_iters(5);
+    let opts = DistOpts { io_timeout: Duration::from_secs(1), retry: 1, ..elastic_opts() };
+    let drills = [
+        WorkerDrill {
+            fault: SessionFault {
+                stall_after_chunks: Some((1, Duration::from_secs(3))),
+                ..Default::default()
+            },
+            sessions: 1,
+        },
+        WorkerDrill::default(),
+        WorkerDrill::default(),
+    ];
+    let run = elastic_drill(&ds, &cfg, &opts, &drills);
+    // the stalled read is guaranteed to time out eventually
+    assert!(run.net.worker_failures >= 1, "{:?}", run.net);
+    assert!(
+        run.net.speculative_wins + run.net.redispatched_chunks >= 1,
+        "straggler neither outrun nor re-dispatched: {:?}",
+        run.net
+    );
+}
+
+#[test]
+fn elastic_readmits_a_worker_rejoining_mid_run() {
+    // worker 0 crashes after one chunk but serves a second session: the
+    // leader must reconnect it with a Rejoin handshake and use it
+    // again. Worker 1 is merely slow (30 ms per chunk, well under the
+    // timeout) so there is always work left when worker 0 comes back
+    let ds = MixtureSpec::paper_2d(8).generate(20_000, 31);
+    let cfg = KmeansConfig::new(8).with_seed(3).with_max_iters(4);
+    let drills = [
+        WorkerDrill {
+            fault: SessionFault { die_after_chunks: Some(1), ..Default::default() },
+            sessions: 2,
+        },
+        WorkerDrill {
+            fault: SessionFault {
+                stall_after_chunks: Some((0, Duration::from_millis(30))),
+                ..Default::default()
+            },
+            sessions: 1,
+        },
+    ];
+    let run = elastic_drill(&ds, &cfg, &elastic_opts(), &drills);
+    assert!(run.net.worker_failures >= 1, "{:?}", run.net);
+    assert!(run.net.worker_rejoins >= 1, "no Rejoin handshake: {:?}", run.net);
 }
 
 #[test]
