@@ -1,0 +1,173 @@
+//! Sustained serving-load bench: drive both serve loops with the same
+//! deterministic request stream and record ns/request plus the p50/p99
+//! latency tail into `results/bench.json` — the gate for the
+//! event-driven serve path (DESIGN.md §13).
+//!
+//! Beyond timing, this is also a cross-check: the per-client response
+//! streams from `--serve-loop poll` (tape parser, reactor) must be
+//! byte-identical to `--serve-loop threads` (legacy parser, blocking
+//! IO). A divergence fails the bench, so CI's bench-smoke job enforces
+//! the equivalence contract under sustained load, not just on the unit
+//! corpus.
+//!
+//!     cargo bench --offline --bench serving_load
+//!
+//! Honors PARAKM_BENCH_N (scales requests per client) and the other
+//! PARAKM_BENCH_* knobs via `BenchOpts::from_env`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Instant;
+
+use parakmeans::data::gmm::MixtureSpec;
+use parakmeans::kmeans::{self, KmeansConfig};
+use parakmeans::linalg::kernel;
+use parakmeans::rng::Pcg64;
+use parakmeans::serve::{serve, Response, ServeConfig, ServeLoop};
+use parakmeans::util::bench::{self, BenchOpts, Sample};
+
+const CLIENTS: usize = 4;
+const POINTS_PER_REQUEST: usize = 32;
+
+/// Deterministic request line for (client, request) — identical across
+/// loop modes so the response cross-check is exact.
+fn request_line(client: usize, req: usize, per_client: usize) -> String {
+    let mut rng = Pcg64::new(client as u64, 0x10AD);
+    // burn the generator to this request's offset so lines depend only
+    // on (client, req), not on connection pacing
+    for _ in 0..req * POINTS_PER_REQUEST * 3 {
+        rng.next_f32();
+    }
+    let pts: Vec<String> = (0..POINTS_PER_REQUEST)
+        .map(|_| {
+            format!(
+                "[{}, {}, {}]",
+                rng.next_f32() * 30.0,
+                rng.next_f32() * 30.0,
+                rng.next_f32() * 30.0
+            )
+        })
+        .collect();
+    format!(r#"{{"id": {}, "points": [{}]}}"#, client * per_client + req, pts.join(", "))
+}
+
+/// Drive one serve loop; returns per-request latencies (seconds) and
+/// each client's in-order response lines.
+fn drive(mode: ServeLoop, centroids: &[f32], per_client: usize) -> (Vec<f64>, Vec<Vec<String>>) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        // a never-existing artifacts dir pins the in-crate native
+        // runtime: portable and deterministic across bench hosts
+        artifacts_dir: std::env::temp_dir().join("parakm_serving_load/no_artifacts_here"),
+        loop_mode: mode,
+        ..Default::default()
+    };
+    let server = serve(cfg, centroids.to_vec(), 3, 4).expect("serve");
+    let addr = server.local_addr;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).expect("connect");
+                conn.set_nodelay(true).expect("nodelay");
+                let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                let mut latencies = Vec::with_capacity(per_client);
+                let mut responses = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    let line = request_line(c, r, per_client);
+                    let t = Instant::now();
+                    writeln!(conn, "{line}").expect("send");
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).expect("recv");
+                    latencies.push(t.elapsed().as_secs_f64());
+                    let resp = resp.trim_end().to_string();
+                    match Response::parse(&resp).expect("parse response") {
+                        Response::Ok { clusters, .. } => {
+                            assert_eq!(clusters.len(), POINTS_PER_REQUEST, "short reply");
+                        }
+                        Response::Err { error, .. } => panic!("server error: {error}"),
+                    }
+                    responses.push(resp);
+                }
+                (latencies, responses)
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut responses = Vec::new();
+    for h in handles {
+        let (lat, resp) = h.join().expect("client panicked");
+        latencies.extend(lat);
+        responses.push(resp);
+    }
+    server.shutdown();
+    (latencies, responses)
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    sorted[(q * (sorted.len() - 1) as f64) as usize]
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    // scale sustained load with the bench-size knob, but keep enough
+    // requests for a meaningful p99 even in CI's shrunken runs
+    let per_client = (opts.n / 4_000).clamp(50, 500);
+    let total = CLIENTS * per_client;
+
+    let ds = MixtureSpec::paper_3d(4).generate(20_000, 42);
+    let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(7));
+    let tier = kernel::active_tier().to_string();
+
+    let mut modes = vec![ServeLoop::Threads];
+    if cfg!(unix) {
+        modes.push(ServeLoop::Poll);
+    }
+
+    let mut rows = Vec::new();
+    let mut streams: Vec<(ServeLoop, Vec<Vec<String>>)> = Vec::new();
+    for &mode in &modes {
+        let engine = format!("serve-{mode}");
+        let (mut latencies, responses) = drive(mode, &model.centroids, per_client);
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = latencies.iter().sum::<f64>() / latencies.len() as f64;
+        let ns_per_request = mean * 1e9;
+        let p50_us = pct(&latencies, 0.50) * 1e6;
+        let p99_us = pct(&latencies, 0.99) * 1e6;
+        bench::report(&Sample {
+            label: format!("{engine} C={CLIENTS} R={per_client} P={POINTS_PER_REQUEST} [{tier}]"),
+            runs: latencies,
+        });
+        println!(
+            "  {engine}: {total} requests, {ns_per_request:.0} ns/request, p50 {p50_us:.1} µs, \
+             p99 {p99_us:.1} µs"
+        );
+        rows.push(bench::bench_json_serve_row(
+            "serving_load",
+            &engine,
+            &tier,
+            total,
+            POINTS_PER_REQUEST,
+            ns_per_request,
+            p50_us,
+            p99_us,
+        ));
+        streams.push((mode, responses));
+    }
+
+    // the cross-loop equivalence gate: identical request streams must
+    // yield byte-identical per-client response streams
+    if streams.len() == 2 {
+        let (m0, s0) = &streams[0];
+        let (m1, s1) = &streams[1];
+        assert_eq!(
+            s0, s1,
+            "response streams diverge between --serve-loop {m0} and --serve-loop {m1}"
+        );
+        println!("  cross-check: {m0} ≡ {m1} on {total} responses");
+    }
+
+    bench::append_bench_json(Path::new("results/bench.json"), rows)
+        .expect("write results/bench.json");
+    println!("serving_load OK");
+}

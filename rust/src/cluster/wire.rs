@@ -553,14 +553,28 @@ pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
     if len == 0 || len > MAX_FRAME_BYTES {
         return Err(frame_err(format!("implausible frame length {len}")));
     }
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body).map_err(|e| {
-        if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            frame_err(format!("truncated frame: length prefix promises {len} bytes"))
-        } else {
-            io_err(e, "reading frame body")
+    // Read the body incrementally in bounded chunks instead of
+    // allocating `len` bytes up front: a forged length prefix (up to
+    // MAX_FRAME_BYTES = 1 GiB) must not translate into an
+    // attacker-sized allocation before a single payload byte arrives.
+    // The buffer only grows as fast as the peer actually sends.
+    const BODY_CHUNK: usize = 64 * 1024;
+    let len_usize = len as usize;
+    let mut body: Vec<u8> = Vec::with_capacity(len_usize.min(BODY_CHUNK));
+    let mut chunk = [0u8; BODY_CHUNK];
+    while body.len() < len_usize {
+        let want = (len_usize - body.len()).min(BODY_CHUNK);
+        match r.read(&mut chunk[..want]) {
+            Ok(0) => {
+                return Err(frame_err(format!(
+                    "truncated frame: length prefix promises {len} bytes"
+                )))
+            }
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(e, "reading frame body")),
         }
-    })?;
+    }
     let frame = Frame::parse(body[0], &body[1..])?;
     Ok(Some((frame, 4 + len as u64)))
 }

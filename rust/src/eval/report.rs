@@ -417,7 +417,11 @@ fn bench_json(dir: &Path, out: &mut String) {
     };
     let field = |r: &Json, k: &str| r.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
     let num = |r: &Json, k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
-    let md: Vec<Vec<String>> = rows
+    // serving rows (bench_json_serve_row) carry ns_per_request instead
+    // of the per-point-iteration shape — render them separately
+    let (serve_rows, train_rows): (Vec<&Json>, Vec<&Json>) =
+        rows.iter().partition(|r| r.get("ns_per_request").is_some());
+    let md: Vec<Vec<String>> = train_rows
         .iter()
         .map(|r| {
             vec![
@@ -438,8 +442,39 @@ fn bench_json(dir: &Path, out: &mut String) {
         &["bench", "engine", "policy", "tier", "n", "d", "k", "ns/pt/iter", "ψ vs exact-scalar"],
         &md,
     );
-    let sane = rows.iter().all(|r| num(r, "ns_per_point_iter") > 0.0);
+    let sane = train_rows.iter().all(|r| num(r, "ns_per_point_iter") > 0.0);
     check(out, "ns/point positive in every row", sane);
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "## Perf trajectory — serving path (bench.json)\n");
+    if serve_rows.is_empty() {
+        let _ = writeln!(out, "_not run_ (`cargo bench --bench serving_load`)\n");
+        return;
+    }
+    let md: Vec<Vec<String>> = serve_rows
+        .iter()
+        .map(|r| {
+            vec![
+                field(r, "bench"),
+                field(r, "engine"),
+                field(r, "tier"),
+                format!("{}", num(r, "requests") as u64),
+                format!("{}", num(r, "points_per_request") as u64),
+                format!("{:.0}", num(r, "ns_per_request")),
+                format!("{:.1}", num(r, "p50_us")),
+                format!("{:.1}", num(r, "p99_us")),
+            ]
+        })
+        .collect();
+    md_table(
+        out,
+        &["bench", "engine", "tier", "requests", "pts/req", "ns/request", "p50 µs", "p99 µs"],
+        &md,
+    );
+    let sane = serve_rows.iter().all(|r| {
+        num(r, "ns_per_request") > 0.0 && num(r, "p50_us") <= num(r, "p99_us")
+    });
+    check(out, "serving rows positive with ordered percentiles", sane);
     let _ = writeln!(out);
 }
 
@@ -476,6 +511,46 @@ mod tests {
         // missing experiments noted, not fatal
         assert!(report.contains("_not run_"));
         assert!(dir.join("REPORT.md").exists());
+    }
+
+    #[test]
+    fn serving_rows_render_in_their_own_table() {
+        use crate::util::bench::{bench_json_row, bench_json_serve_row};
+        use crate::util::json::Json;
+        let dir = fixture_dir();
+        let rows = vec![
+            bench_json_row("hotpath", "threads", "exact", "scalar", 1000, 3, 4, 2.5, 1.0),
+            bench_json_serve_row(
+                "serving_load",
+                "serve-poll",
+                "scalar",
+                200,
+                32,
+                85_000.0,
+                60.0,
+                400.0,
+            ),
+            bench_json_serve_row(
+                "serving_load",
+                "serve-threads",
+                "scalar",
+                200,
+                32,
+                90_000.0,
+                70.0,
+                500.0,
+            ),
+        ];
+        std::fs::write(dir.join("bench.json"), Json::Arr(rows).to_string()).unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("## Perf trajectory — serving path"), "{report}");
+        assert!(report.contains("serve-poll"), "{report}");
+        assert!(
+            report.contains("✔ **serving rows positive with ordered percentiles**"),
+            "{report}"
+        );
+        // the training table's sanity check must not trip on serve rows
+        assert!(report.contains("✔ **ns/point positive in every row**"), "{report}");
     }
 
     #[test]

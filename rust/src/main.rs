@@ -111,8 +111,11 @@ fn print_usage() {
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
          serve     --model <file.pkm> | (--input <file> | --synthetic <2d|3d>:<N>)  --k K\n\
          \u{20}          [--addr HOST:PORT] [--max-batch B] [--max-delay-ms T] [--max-conns C]\n\
+         \u{20}          [--serve-loop poll|threads]   (poll = event-driven reactor, unix default)\n\
+         \u{20}          [--max-line-bytes B] [--shed-soft-pct PCT] [--shed-heavy-points N]\n\
+         \u{20}          [--stats-every SECS]   (periodic latency/shed summary on stderr)\n\
          \u{20}          [--artifacts DIR] [--distance exact|dot]\n\
-         \u{20}          ({{\"stats\": true}} probes live counters)\n\
+         \u{20}          ({{\"stats\": true}} probes live counters + latency percentiles)\n\
          info      [--artifacts DIR]"
     );
 }
@@ -846,12 +849,20 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use parakmeans::serve::{serve, BatcherConfig, ServeConfig};
+    use parakmeans::serve::{serve, BatcherConfig, ServeConfig, ServeLoop, ShedConfig};
     let model_path = args.get("model").map(PathBuf::from);
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
     let max_batch: usize = args.get_or("max-batch", 4096)?;
     let max_delay_ms: u64 = args.get_or("max-delay-ms", 2)?;
     let max_conns: usize = args.get_or("max-conns", 64)?;
+    let loop_mode = match args.get("serve-loop") {
+        Some(s) => s.parse::<ServeLoop>()?,
+        None => ServeLoop::default_for_host(),
+    };
+    let max_line_bytes: usize = args.get_or("max-line-bytes", 1 << 20)?;
+    let shed_soft_pct: u32 = args.get_or("shed-soft-pct", 75)?;
+    let shed_heavy_points: usize = args.get_or("shed-heavy-points", 1024)?;
+    let stats_every: u64 = args.get_or("stats-every", 0)?;
     let distance = distance_from(args)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
@@ -908,14 +919,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         queue_depth: 256,
         max_conns,
+        loop_mode,
+        max_line_bytes,
+        shed: ShedConfig { soft_pct: shed_soft_pct, heavy_points: shed_heavy_points },
     };
     let handle = serve(scfg, centroids, dim, k)?;
     println!(
-        "serving on {} — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}",
+        "serving on {} (--serve-loop {loop_mode}) — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}",
         handle.local_addr
     );
-    // block forever (ctrl-c to stop)
+    // block forever (ctrl-c to stop), optionally printing a periodic
+    // latency/shed summary from the shared counters
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(std::time::Duration::from_secs(
+            if stats_every > 0 { stats_every } else { 3600 },
+        ));
+        if stats_every > 0 {
+            let s = handle.stats();
+            eprintln!(
+                "stats: requests={} errors={} saturated={} shed_heavy={} shed_load={} \
+                 oversized={} | latency n={} p50={:.1}us p90={:.1}us p99={:.1}us",
+                s.batcher.requests,
+                s.batcher.errors,
+                s.saturated,
+                s.shed_heavy,
+                s.shed_load,
+                s.oversized,
+                s.latency.count,
+                s.latency.p50_us,
+                s.latency.p90_us,
+                s.latency.p99_us
+            );
+        }
     }
 }

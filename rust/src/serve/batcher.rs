@@ -15,6 +15,7 @@ use crate::linalg::kernel::{self, DistancePolicy};
 use crate::runtime::manifest::ExecKind;
 use crate::runtime::{Runtime, TensorArg};
 use crate::serve::protocol::{Request, Response};
+use crate::serve::reply::ReplySink;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -54,10 +55,12 @@ pub struct BatcherStats {
     pub errors: u64,
 }
 
-/// A queued unit of work: one request plus the reply channel.
+/// A queued unit of work: one request plus where its response goes —
+/// a blocking channel (thread loop) or the reactor's completion queue
+/// (poll loop); see [`ReplySink`].
 pub struct Job {
     pub request: Request,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySink,
 }
 
 /// The batcher: owns the runtime + trained centroids.
@@ -358,7 +361,7 @@ mod tests {
 
     fn job(id: u64, points: Vec<Vec<f64>>) -> (Job, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
-        (Job { request: Request { id, points }, reply: tx }, rx)
+        (Job { request: Request { id, points }, reply: ReplySink::Channel(tx) }, rx)
     }
 
     #[test]
@@ -368,8 +371,7 @@ mod tests {
             return;
         };
         let (centroids, ds) = trained_model();
-        let mut b =
-            Batcher::new(&dir, centroids.clone(), 3, 4, BatcherConfig::default()).unwrap();
+        let mut b = Batcher::new(&dir, centroids.clone(), 3, 4, BatcherConfig::default()).unwrap();
         let pts: Vec<Vec<f64>> =
             (0..64).map(|i| ds.point(i).iter().map(|&v| v as f64).collect()).collect();
         let (j, rx) = job(1, pts.clone());
@@ -520,8 +522,7 @@ mod tests {
 
         // and identical to a freshly-constructed batcher's answer
         let (centroids2, _) = trained_model();
-        let mut fresh =
-            Batcher::new(&dir, centroids2, 3, 4, BatcherConfig::default()).unwrap();
+        let mut fresh = Batcher::new(&dir, centroids2, 3, 4, BatcherConfig::default()).unwrap();
         let (j, rx) = job(9, pts);
         fresh.flush(vec![j]);
         match rx.recv().unwrap() {

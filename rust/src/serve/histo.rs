@@ -1,0 +1,155 @@
+//! Log-bucketed per-request latency histogram for the serve path.
+//!
+//! One `u64` counter per power-of-two nanosecond bucket: a request that
+//! took `ns` nanoseconds lands in bucket `⌈log2(ns+1)⌉` (bucket 0 holds
+//! exactly 0 ns, bucket 1 holds 1 ns, bucket b holds `[2^(b-1), 2^b)`),
+//! capped at bucket 63. Recording is a subtraction, a `leading_zeros`
+//! and an increment — cheap enough to sit on every request in both
+//! serve loops — and the fixed 64×8-byte footprint means the histogram
+//! can live under the stats mutex without allocation.
+//!
+//! Quantiles are read back by cumulative count. A quantile is reported
+//! as the arithmetic midpoint of the bucket it falls in, so p50/p90/p99
+//! carry the usual log-bucket resolution (±~25%): good enough to spot
+//! a shed tier engaging or a batch-delay regression, not a calibrated
+//! microbenchmark — `benches/serving_load.rs` measures exact per-
+//! request wall times when precision matters.
+
+use std::time::Duration;
+
+/// Number of power-of-two buckets (covers 0 ns ..= u64::MAX ns).
+pub const BUCKETS: usize = 64;
+
+/// Fixed-footprint log2-nanosecond latency histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHisto {
+    counts: [u64; BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto { counts: [0; BUCKETS], total: 0 }
+    }
+}
+
+/// The quantile digest surfaced in `{"stats"}` responses and the CLI
+/// summary (microseconds, bucket-midpoint resolution).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+fn bucket_of(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Arithmetic midpoint of a bucket, in nanoseconds.
+fn bucket_mid_ns(bucket: usize) -> f64 {
+    if bucket == 0 {
+        return 0.0;
+    }
+    let lo = 2f64.powi(bucket as i32 - 1);
+    let hi = 2f64.powi(bucket as i32);
+    (lo + hi) / 2.0
+}
+
+impl LatencyHisto {
+    /// Record one request's wall time.
+    pub fn record(&mut self, elapsed: Duration) {
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.counts[bucket_of(ns)] += 1;
+        self.total += 1;
+    }
+
+    /// Total number of recorded requests.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`) in nanoseconds, at bucket
+    /// resolution; 0.0 when nothing has been recorded.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid_ns(b);
+            }
+        }
+        bucket_mid_ns(BUCKETS - 1)
+    }
+
+    /// p50/p90/p99 digest in microseconds.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.total,
+            p50_us: self.quantile_ns(0.50) / 1_000.0,
+            p90_us: self.quantile_ns(0.90) / 1_000.0,
+            p99_us: self.quantile_ns(0.99) / 1_000.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_ns() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHisto::default();
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p99_us, 0.0);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bucket_resolved() {
+        let mut h = LatencyHisto::default();
+        // 90 fast requests (~1 µs), 9 medium (~100 µs), 1 slow (~10 ms)
+        for _ in 0..90 {
+            h.record(Duration::from_micros(1));
+        }
+        for _ in 0..9 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_millis(10));
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us);
+        // p50 sits in the ~1 µs bucket, p99 in the ~100 µs bucket
+        // (log-bucket midpoints, so compare within a factor of 2)
+        assert!(s.p50_us >= 0.5 && s.p50_us <= 2.0, "p50={}", s.p50_us);
+        assert!(s.p99_us >= 64.0 && s.p99_us <= 256.0, "p99={}", s.p99_us);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_quantile() {
+        let mut h = LatencyHisto::default();
+        h.record(Duration::from_nanos(500));
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.p50_us, s.p99_us);
+        assert!(s.p50_us > 0.0);
+    }
+}

@@ -8,35 +8,56 @@
 //! Architecture (single-node analog of a vLLM-style router):
 //!
 //! ```text
-//! TCP clients ── line-JSON ──► acceptor threads ─► bounded queue
-//!                                                   │ (backpressure)
-//!                            ┌──────────────────────▼─────────────┐
+//! TCP clients ── line-JSON ──► front end ──────────► bounded queue
+//!                  │                                  │ (backpressure
+//!   --serve-loop poll   : one poll(2) reactor thread  │  + shed tiers)
+//!   --serve-loop threads: thread per connection       │
+//!                            ┌────────────────────────▼───────────┐
 //!                            │ batcher: drain up to `max_batch`   │
 //!                            │ or wait `max_delay` — then one     │
 //!                            │ padded AOT `assign` call           │
-//!                            └──────────────────────┬─────────────┘
-//!                              responses routed back per request
+//!                            └────────────────────────┬───────────┘
+//!                         responses routed back per request
+//!                         (reply channel / completion + waker)
 //! ```
 //!
-//! The batcher owns the [`crate::runtime::Runtime`] and lives on one
-//! dedicated thread (the PJRT-era contract — a real PJRT client is not
-//! `Send`; the native executor keeps the same single-owner shape).
-//! Acceptors communicate via `mpsc`. No tokio in the offline image
-//! (DESIGN.md §8, "Offline-image constraints"): blocking IO + threads,
-//! which is also the right shape for a CPU backend.
+//! The front end is pluggable ([`ServeLoop`]): the default on unix is
+//! the event-driven [`poll`] reactor — one thread, nonblocking sockets,
+//! per-connection buffers, requests parsed by the SIMD tape scanner
+//! ([`scan`]) — with the thread-per-connection loop kept as the
+//! portable fallback and the cross-check baseline (both loops answer
+//! byte-identically; CI diffs them). The batcher owns the
+//! [`crate::runtime::Runtime`] and lives on one dedicated thread (the
+//! PJRT-era contract — a real PJRT client is not `Send`; the native
+//! executor keeps the same single-owner shape). No tokio in the
+//! offline image (DESIGN.md §8, "Offline-image constraints"): the
+//! reactor is hand-rolled over `poll(2)` + `std`.
 //!
 //! Observability: any connection may send `{"stats": true}` and gets
-//! the live [`BatcherStats`] counters plus the acceptor's saturation-
-//! rejection count back as one JSON line ([`stats_line`]) — answered
-//! from the connection thread against a shared mirror, so the probe
-//! stays responsive whatever the batcher is doing. Models trained
-//! elsewhere load via `parakm serve --model model.pkm`
-//! ([`crate::data::io::read_model`]) instead of retraining at startup.
+//! the live [`ServeStats`] counters — batcher mirror, shed/saturation/
+//! oversize rejections and the log-bucketed latency digest
+//! ([`histo::LatencyHisto`]) — back as one JSON line ([`stats_line`]),
+//! answered inline so the probe stays responsive whatever the batcher
+//! is doing. Models trained elsewhere load via `parakm serve --model
+//! model.pkm` ([`crate::data::io::read_model`]) instead of retraining
+//! at startup. DESIGN.md §13 covers the event loop, the tape-scanner
+//! equivalence contract and the shed tiers.
 
 pub mod batcher;
+pub mod histo;
+#[cfg(unix)]
+pub mod poll;
 pub mod protocol;
+pub mod reply;
+pub mod scan;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
-pub use protocol::{stats_line, ClientRequest, Request, Response, ERR_SATURATED};
-pub use server::{serve, ServeConfig};
+pub use histo::{LatencyHisto, LatencySummary};
+pub use protocol::{
+    stats_line, ClientRequest, Request, Response, ServeStats, ERR_LINE_TOO_LONG, ERR_NOT_UTF8,
+    ERR_SATURATED, ERR_SHED_HEAVY, ERR_SHED_LOAD,
+};
+pub use reply::{Completion, ReplySink, Waker};
+pub use scan::{parse_tape, parse_tape_tier, scan_tape, structural_offsets, Tape};
+pub use server::{serve, ServeConfig, ServeLoop, ServeShared, ServerHandle, ShedConfig};

@@ -6,17 +6,26 @@
 //! Stats    : `{"stats": true}` → `{"stats": {"requests": .., ...}}`
 //!
 //! One JSON document per line; a connection may pipeline any number of
-//! requests. The stats request returns the server's live
-//! [`BatcherStats`] counters plus the acceptor's saturation-rejection
-//! count ([`stats_line`]) — answered from the connection thread, so it
-//! works even while the batcher is busy. Parsing uses the in-crate
-//! [`crate::util::json`].
+//! requests. The stats request returns a [`ServeStats`] snapshot —
+//! batcher counters, acceptor/shed rejection counters and the latency
+//! histogram digest ([`stats_line`]) — answered outside the batcher,
+//! so it works even while the batcher is busy.
 //!
-//! [`BatcherStats`]: crate::serve::batcher::BatcherStats
+//! Two parsing front ends share one extraction ([`ClientRequest::from_json`]):
+//! [`ClientRequest::parse`] goes through the legacy byte-wise
+//! [`crate::util::json`] parser (the threads loop / reference path),
+//! and [`ClientRequest::parse_tape`] through the SIMD tape scanner in
+//! [`crate::serve::scan`] (the poll loop). The two are answer-
+//! equivalent on every input and kernel tier — the contract
+//! `rust/tests/proptest_protocol.rs` enforces.
 
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::linalg::kernel::KernelTier;
+use crate::serve::batcher::BatcherStats;
+use crate::serve::histo::LatencySummary;
+use crate::serve::scan;
 use crate::util::json::Json;
 
 /// A parsed client request.
@@ -28,9 +37,14 @@ pub struct Request {
 }
 
 impl Request {
-    /// Parse one request line.
+    /// Parse one request line (legacy byte-wise parser).
     pub fn parse(line: &str) -> Result<Request> {
-        let j = Json::parse(line)?;
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    /// Extract a request from an already parsed document — the one
+    /// code path both parsing front ends funnel into.
+    pub fn from_json(j: &Json) -> Result<Request> {
         let id = j
             .get("id")
             .and_then(Json::as_f64)
@@ -68,31 +82,75 @@ pub enum ClientRequest {
 }
 
 impl ClientRequest {
-    /// Parse one request line; `{"stats": true}` routes to
-    /// [`ClientRequest::Stats`], everything else through
-    /// [`Request::parse`].
+    /// Parse one request line through the legacy byte-wise parser;
+    /// `{"stats": true}` routes to [`ClientRequest::Stats`], everything
+    /// else through [`Request::from_json`].
     pub fn parse(line: &str) -> Result<ClientRequest> {
-        let j = Json::parse(line)?;
+        ClientRequest::from_json(&Json::parse(line)?)
+    }
+
+    /// Parse through the SIMD tape scanner on the process-global kernel
+    /// tier — the poll loop's front end. Answer-equivalent to
+    /// [`ClientRequest::parse`] (same extraction, equivalent parser).
+    pub fn parse_tape(line: &str) -> Result<ClientRequest> {
+        ClientRequest::from_json(&scan::parse_tape(line)?)
+    }
+
+    /// [`ClientRequest::parse_tape`] with an explicit tier (tests).
+    pub fn parse_tape_tier(line: &str, tier: KernelTier) -> Result<ClientRequest> {
+        ClientRequest::from_json(&scan::parse_tape_tier(line, tier)?)
+    }
+
+    /// Route an already parsed document.
+    pub fn from_json(j: &Json) -> Result<ClientRequest> {
         if j.get("stats").and_then(Json::as_bool) == Some(true) {
             return Ok(ClientRequest::Stats);
         }
-        Request::parse(line).map(ClientRequest::Assign)
+        Request::from_json(j).map(ClientRequest::Assign)
     }
+}
+
+/// One coherent snapshot of everything the server counts: the
+/// batcher's own counters plus the acceptor-side rejection tiers and
+/// the latency histogram digest (all tracked outside the batcher).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    pub batcher: BatcherStats,
+    /// Connections rejected at the accept tier (connection cap).
+    pub saturated: u64,
+    /// Heavy requests rejected at the queue-pressure (soft shed) tier.
+    pub shed_heavy: u64,
+    /// Requests rejected at the queue-full (hard shed) tier.
+    pub shed_load: u64,
+    /// Request lines rejected for exceeding the line-length bound.
+    pub oversized: u64,
+    /// Per-request latency digest (both serve loops record into it).
+    pub latency: LatencySummary,
 }
 
 /// Render the stats response line (no trailing newline):
 /// `{"stats": {"batches": .., "errors": .., "padded_rows": ..,
-/// "points": .., "requests": .., "saturated": ..}}`. `batches` is the
-/// batcher's device-call count; `saturated` is the acceptor-side
-/// connection-rejection count (tracked outside the batcher).
-pub fn stats_line(stats: &crate::serve::batcher::BatcherStats, saturated: u64) -> String {
+/// "points": .., "requests": .., "saturated": .., "shed_heavy": ..,
+/// "shed_load": .., "oversized": .., "lat_count": ..,
+/// "lat_p50_us": .., "lat_p90_us": .., "lat_p99_us": ..}}`.
+/// `batches` is the batcher's device-call count; the `lat_*` fields
+/// carry the log-bucket histogram digest of
+/// [`crate::serve::histo::LatencyHisto`].
+pub fn stats_line(s: &ServeStats) -> String {
     let mut inner = BTreeMap::new();
-    inner.insert("requests".to_string(), Json::Num(stats.requests as f64));
-    inner.insert("points".to_string(), Json::Num(stats.points as f64));
-    inner.insert("batches".to_string(), Json::Num(stats.device_calls as f64));
-    inner.insert("padded_rows".to_string(), Json::Num(stats.padded_rows as f64));
-    inner.insert("errors".to_string(), Json::Num(stats.errors as f64));
-    inner.insert("saturated".to_string(), Json::Num(saturated as f64));
+    inner.insert("requests".to_string(), Json::Num(s.batcher.requests as f64));
+    inner.insert("points".to_string(), Json::Num(s.batcher.points as f64));
+    inner.insert("batches".to_string(), Json::Num(s.batcher.device_calls as f64));
+    inner.insert("padded_rows".to_string(), Json::Num(s.batcher.padded_rows as f64));
+    inner.insert("errors".to_string(), Json::Num(s.batcher.errors as f64));
+    inner.insert("saturated".to_string(), Json::Num(s.saturated as f64));
+    inner.insert("shed_heavy".to_string(), Json::Num(s.shed_heavy as f64));
+    inner.insert("shed_load".to_string(), Json::Num(s.shed_load as f64));
+    inner.insert("oversized".to_string(), Json::Num(s.oversized as f64));
+    inner.insert("lat_count".to_string(), Json::Num(s.latency.count as f64));
+    inner.insert("lat_p50_us".to_string(), Json::Num(s.latency.p50_us));
+    inner.insert("lat_p90_us".to_string(), Json::Num(s.latency.p90_us));
+    inner.insert("lat_p99_us".to_string(), Json::Num(s.latency.p99_us));
     let mut obj = BTreeMap::new();
     obj.insert("stats".to_string(), Json::Obj(inner));
     Json::Obj(obj).to_string()
@@ -103,6 +161,22 @@ pub fn stats_line(stats: &crate::serve::batcher::BatcherStats, saturated: u64) -
 /// connection cap, right before the connection is closed. A constant
 /// so clients and tests can match on it instead of scraping prose.
 pub const ERR_SATURATED: &str = "saturated: concurrent connection limit reached";
+
+/// Typed rejection for a request line that exceeded the configured
+/// `--max-line-bytes` bound (sent with id 0 — the line was never
+/// parsed), after which the server closes the connection.
+pub const ERR_LINE_TOO_LONG: &str = "oversized: request line exceeds the configured byte limit";
+
+/// Typed rejection for a request line that is not valid UTF-8 (sent
+/// with id 0; the connection stays open).
+pub const ERR_NOT_UTF8: &str = "request line is not valid utf-8";
+
+/// Soft shed tier: the queue is under pressure and this request's
+/// point count marks it heavy, so it is rejected before queueing.
+pub const ERR_SHED_HEAVY: &str = "shedding: queue under pressure, heavy request rejected";
+
+/// Hard shed tier: the bounded request queue is full.
+pub const ERR_SHED_LOAD: &str = "shedding: request queue full";
 
 /// A server response (success or error).
 #[derive(Debug, Clone, PartialEq)]
@@ -128,6 +202,22 @@ impl Response {
     /// Does this response signal server saturation?
     pub fn is_saturated(&self) -> bool {
         matches!(self, Response::Err { error, .. } if error == ERR_SATURATED)
+    }
+
+    /// The typed rejection for an over-long request line.
+    pub fn line_too_long() -> Response {
+        Response::Err { id: 0, error: ERR_LINE_TOO_LONG.to_string() }
+    }
+
+    /// The typed rejection for a non-UTF-8 request line.
+    pub fn not_utf8() -> Response {
+        Response::Err { id: 0, error: ERR_NOT_UTF8.to_string() }
+    }
+
+    /// Does this response signal a load-shed rejection (either tier)?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Response::Err { error, .. }
+            if error == ERR_SHED_HEAVY || error == ERR_SHED_LOAD)
     }
 
     /// Serialize to one JSON line (no trailing newline).
@@ -220,14 +310,21 @@ mod tests {
 
     #[test]
     fn stats_line_renders_every_counter() {
-        let stats = crate::serve::batcher::BatcherStats {
-            requests: 10,
-            points: 640,
-            device_calls: 2,
-            padded_rows: 55,
-            errors: 1,
+        let stats = ServeStats {
+            batcher: BatcherStats {
+                requests: 10,
+                points: 640,
+                device_calls: 2,
+                padded_rows: 55,
+                errors: 1,
+            },
+            saturated: 7,
+            shed_heavy: 3,
+            shed_load: 2,
+            oversized: 4,
+            latency: LatencySummary { count: 10, p50_us: 1.5, p90_us: 12.0, p99_us: 96.0 },
         };
-        let line = stats_line(&stats, 7);
+        let line = stats_line(&stats);
         let j = Json::parse(&line).unwrap();
         let s = j.get("stats").expect("stats object");
         assert_eq!(s.get("requests").and_then(Json::as_f64), Some(10.0));
@@ -236,8 +333,48 @@ mod tests {
         assert_eq!(s.get("padded_rows").and_then(Json::as_f64), Some(55.0));
         assert_eq!(s.get("errors").and_then(Json::as_f64), Some(1.0));
         assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(s.get("shed_heavy").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(s.get("shed_load").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(s.get("oversized").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(s.get("lat_count").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(s.get("lat_p50_us").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(s.get("lat_p90_us").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(s.get("lat_p99_us").and_then(Json::as_f64), Some(96.0));
         // one line, no embedded newlines (line-JSON protocol)
         assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn tape_front_end_matches_legacy_on_protocol_lines() {
+        let lines = [
+            r#"{"id": 7, "points": [[1.0, 2.0], [3, 4]]}"#,
+            r#"{"stats": true}"#,
+            r#"{"stats": false}"#,
+            r#"{"id": -3, "points": [[1]]}"#,
+            "not json",
+            "",
+        ];
+        for line in lines {
+            let legacy = ClientRequest::parse(line);
+            let tape = ClientRequest::parse_tape_tier(line, KernelTier::Scalar);
+            match (legacy, tape) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "mismatch on {line:?}"),
+                (Err(_), Err(_)) => {}
+                (l, t) => panic!("ok-ness mismatch on {line:?}: {l:?} vs {t:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn typed_rejections_are_constants() {
+        assert_eq!(
+            Response::line_too_long(),
+            Response::Err { id: 0, error: ERR_LINE_TOO_LONG.into() }
+        );
+        assert_eq!(Response::not_utf8(), Response::Err { id: 0, error: ERR_NOT_UTF8.into() });
+        assert!(Response::Err { id: 5, error: ERR_SHED_HEAVY.into() }.is_shed());
+        assert!(Response::Err { id: 5, error: ERR_SHED_LOAD.into() }.is_shed());
+        assert!(!Response::saturated().is_shed());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Reply plumbing between the batcher and the two serve loops.
+//!
+//! The batcher thread answers a [`Job`] by calling `job.reply.send(..)`
+//! without caring who is listening. In the thread-per-connection loop
+//! the listener is the connection thread itself, blocked on a plain
+//! channel ([`ReplySink::Channel`]). In the poll loop no thread blocks:
+//! the reply is a [`Completion`] tagged with the connection token,
+//! pushed onto the reactor's completion channel and followed by a
+//! [`Waker`] poke so the reactor's `poll(2)` call returns immediately
+//! instead of waiting out its safety-net timeout.
+//!
+//! The waker is a connected loopback UDP socket: sending one datagram
+//! makes the reactor's wake fd readable, which is the cheapest
+//! dependency-free self-pipe available through `std` (an actual pipe
+//! would need another hand-rolled libc binding; a UDP socket gives the
+//! same level-triggered readability with `std::net` alone). Wake sends
+//! are fire-and-forget — the reactor also times out of `poll` every
+//! 100 ms, so a dropped datagram delays a reply, never loses it.
+//!
+//! [`Job`]: crate::serve::batcher::Job
+
+use std::io;
+use std::net::UdpSocket;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::serve::protocol::Response;
+
+/// A finished request on its way back to the reactor: which connection
+/// it belongs to, when it started (for the latency histogram), and the
+/// response to append to that connection's write buffer.
+#[derive(Debug)]
+pub struct Completion {
+    pub token: u64,
+    pub started: Instant,
+    pub response: Response,
+}
+
+/// Pokes the reactor awake after a completion is queued.
+#[derive(Debug, Clone)]
+pub struct Waker {
+    sock: Arc<UdpSocket>,
+}
+
+impl Waker {
+    /// Build a waker and the nonblocking receive socket the reactor
+    /// polls on.
+    pub fn pair() -> io::Result<(Waker, UdpSocket)> {
+        let rx = UdpSocket::bind("127.0.0.1:0")?;
+        rx.set_nonblocking(true)?;
+        let tx = UdpSocket::bind("127.0.0.1:0")?;
+        tx.connect(rx.local_addr()?)?;
+        Ok((Waker { sock: Arc::new(tx) }, rx))
+    }
+
+    /// Fire-and-forget poke (see module docs for why errors are moot).
+    pub fn wake(&self) {
+        let _ = self.sock.send(&[1u8]);
+    }
+}
+
+/// Where a [`Job`]'s response goes — the batcher stays loop-agnostic.
+///
+/// [`Job`]: crate::serve::batcher::Job
+#[derive(Debug)]
+pub enum ReplySink {
+    /// Thread-per-connection loop: the connection thread blocks on the
+    /// receiving end until its response arrives.
+    Channel(mpsc::Sender<Response>),
+    /// Poll loop: deliver a [`Completion`] to the reactor and wake it.
+    Event { tx: mpsc::Sender<Completion>, token: u64, started: Instant, waker: Waker },
+}
+
+impl ReplySink {
+    /// Deliver the response. `Err(())` means the listener is gone
+    /// (connection thread exited / reactor shut down) — the batcher
+    /// treats that as a client that stopped caring, not an error.
+    pub fn send(&self, response: Response) -> std::result::Result<(), ()> {
+        match self {
+            ReplySink::Channel(tx) => tx.send(response).map_err(|_| ()),
+            ReplySink::Event { tx, token, started, waker } => {
+                let sent = tx
+                    .send(Completion { token: *token, started: *started, response })
+                    .map_err(|_| ());
+                waker.wake();
+                sent
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_sink_delivers() {
+        let (tx, rx) = mpsc::channel();
+        let sink = ReplySink::Channel(tx);
+        sink.send(Response::Err { id: 1, error: "x".into() }).unwrap();
+        assert_eq!(rx.recv().unwrap(), Response::Err { id: 1, error: "x".into() });
+    }
+
+    #[test]
+    fn event_sink_delivers_completion_and_wakes() {
+        let (waker, wake_rx) = Waker::pair().unwrap();
+        let (tx, rx) = mpsc::channel();
+        let started = Instant::now();
+        let sink = ReplySink::Event { tx, token: 42, started, waker };
+        sink.send(Response::Err { id: 9, error: "y".into() }).unwrap();
+        let done = rx.recv().unwrap();
+        assert_eq!(done.token, 42);
+        assert_eq!(done.response, Response::Err { id: 9, error: "y".into() });
+        // the wake datagram is observable (may take a scheduling beat)
+        wake_rx.set_nonblocking(false).unwrap();
+        wake_rx
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = [0u8; 8];
+        let (n, _) = wake_rx.recv_from(&mut buf).unwrap();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn dead_listener_is_err_not_panic() {
+        let (tx, rx) = mpsc::channel::<Response>();
+        drop(rx);
+        let sink = ReplySink::Channel(tx);
+        assert!(sink.send(Response::Err { id: 0, error: "z".into() }).is_err());
+    }
+}

@@ -1,0 +1,570 @@
+//! SIMD tape scanner for serve-path request JSON.
+//!
+//! The serve hot path parses one small JSON document per request line.
+//! [`crate::util::json`] walks it byte by byte; this module front-loads
+//! that walk with a vectorized *structural scan* (the `squirrel-json`
+//! idea): one pass over the line marks every structurally interesting
+//! byte — `"` `\` `{` `}` `[` `]` `:` `,` — 32 bytes per AVX2 compare
+//! (16 for NEON, with a portable scalar fallback), producing an
+//! offsets **tape**. A second, branch-light pass pairs unescaped quotes
+//! into string spans. The parser proper then runs over the tape: string
+//! bodies with no escapes and no control bytes are sliced out wholesale
+//! instead of being re-walked byte-wise, which is where request maps
+//! (`{"id": …, "points": [[…]]}`) spend most of their parse time.
+//!
+//! **Contract — answer-equivalent to the legacy parser.** For every
+//! input string and every kernel tier, [`parse_tape_tier`] returns
+//! `Ok(v)` exactly when [`Json::parse`] returns `Ok(v)` with the same
+//! value, and returns an error exactly when the legacy parser does
+//! (error *messages/offsets* may differ only on documents both reject).
+//! This holds by construction: the tape parser's control flow is a
+//! method-for-method mirror of `util::json::Parser` (same dispatch,
+//! same literal/number/whitespace handling, same [`MAX_DEPTH`] cap),
+//! and the only shortcut — the clean-string slice — is guarded so any
+//! span containing a backslash or control byte falls back to the
+//! legacy-exact byte walk. `rust/tests/proptest_protocol.rs` hammers
+//! the equivalence with thousands of generated, mutated, truncated and
+//! non-UTF-8 inputs per tier.
+//!
+//! Tier selection follows the crate-wide `linalg::kernel` convention:
+//! [`parse_tape`] uses [`kernel::active_tier`], so `PARAKM_KERNEL=scalar`
+//! pins the scan to the reference tier; tests pass explicit tiers to
+//! exercise scalar and the detected SIMD tier in one process.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::linalg::kernel::{self, KernelTier};
+use crate::util::json::{Json, MAX_DEPTH};
+
+/// Offsets tape produced by the structural pre-scan of one document.
+#[derive(Debug, Default)]
+pub struct Tape {
+    /// Offsets of every structurally interesting byte, ascending.
+    pub marks: Vec<u32>,
+    /// `(open, close)` quote offsets of every complete string literal,
+    /// ascending by `open`. Escaped quotes (odd run of preceding
+    /// backslashes) do not close a string.
+    pub strings: Vec<(u32, u32)>,
+}
+
+/// Same host-support gate as the compute kernels: SIMD tiers use
+/// `target_feature` code, so a freely constructible unsupported tier
+/// must never reach them from safe code.
+fn assert_tier_supported(tier: KernelTier) {
+    assert!(
+        tier == KernelTier::Scalar || tier == kernel::detect(),
+        "kernel tier {tier} not supported on this host (detected: {})",
+        kernel::detect()
+    );
+}
+
+fn is_interesting(b: u8) -> bool {
+    matches!(b, b'"' | b'\\' | b'{' | b'}' | b'[' | b']' | b':' | b',')
+}
+
+fn scan_scalar_from(bytes: &[u8], start: usize, out: &mut Vec<u32>) {
+    for (i, &b) in bytes.iter().enumerate().skip(start) {
+        if is_interesting(b) {
+            out.push(i as u32);
+        }
+    }
+}
+
+/// Offsets of every structural/string-machinery byte in `bytes`,
+/// ascending — the raw tape. Public so the property tests can assert
+/// scalar ≡ SIMD on arbitrary byte strings.
+pub fn structural_offsets(bytes: &[u8], tier: KernelTier) -> Vec<u32> {
+    assert_tier_supported(tier);
+    assert!(bytes.len() <= u32::MAX as usize, "document too large for u32 offsets tape");
+    let mut out = Vec::with_capacity(bytes.len() / 8);
+    match tier {
+        KernelTier::Scalar => scan_scalar_from(bytes, 0, &mut out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: assert_tier_supported guarantees AVX2 is present.
+        KernelTier::Avx2 => unsafe { x86::scan(bytes, &mut out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: assert_tier_supported guarantees NEON is present.
+        KernelTier::Neon => unsafe { arm::scan(bytes, &mut out) },
+        // cross-compiled tier names that don't exist on this arch
+        #[allow(unreachable_patterns)]
+        _ => scan_scalar_from(bytes, 0, &mut out),
+    }
+    out
+}
+
+/// Run the structural scan and pair unescaped quotes into string spans.
+pub fn scan_tape(text: &str, tier: KernelTier) -> Tape {
+    let bytes = text.as_bytes();
+    let marks = structural_offsets(bytes, tier);
+    let mut strings = Vec::new();
+    let mut in_str = false;
+    let mut open = 0u32;
+    // Track runs of consecutive backslashes: a quote is escaped iff the
+    // run ending immediately before it has odd length. Runs only matter
+    // inside strings; backslashes elsewhere are the parser's problem.
+    let mut bs_end = usize::MAX; // index one past the current run
+    let mut bs_len = 0usize;
+    for &o32 in &marks {
+        let o = o32 as usize;
+        match bytes[o] {
+            b'\\' => {
+                if in_str {
+                    bs_len = if bs_end == o { bs_len + 1 } else { 1 };
+                    bs_end = o + 1;
+                }
+            }
+            b'"' => {
+                if in_str {
+                    let escaped = bs_end == o && bs_len % 2 == 1;
+                    if !escaped {
+                        strings.push((open, o32));
+                        in_str = false;
+                    }
+                } else {
+                    in_str = true;
+                    open = o32;
+                }
+            }
+            // other structurals carry no string state
+            _ => {}
+        }
+    }
+    Tape { marks, strings }
+}
+
+/// Parse a complete JSON document through the tape scanner on the
+/// process-global kernel tier (`PARAKM_KERNEL` pins it). Answer-
+/// equivalent to [`Json::parse`]; see the module docs for the contract.
+pub fn parse_tape(text: &str) -> Result<Json> {
+    parse_tape_tier(text, kernel::active_tier())
+}
+
+/// [`parse_tape`] with an explicit tier (tests exercise scalar and the
+/// detected SIMD tier in one process).
+pub fn parse_tape_tier(text: &str, tier: KernelTier) -> Result<Json> {
+    let tape = scan_tape(text, tier);
+    let mut p = TapeParser { b: text.as_bytes(), text, i: 0, strings: &tape.strings, si: 0 };
+    p.ws();
+    let v = p.value(0)?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing characters after document"));
+    }
+    Ok(v)
+}
+
+/// Recursive-descent parser over the tape. Every method except
+/// [`TapeParser::string`] is a verbatim mirror of the corresponding
+/// `util::json::Parser` method — that mirroring, not cleverness, is
+/// what makes the equivalence contract hold.
+struct TapeParser<'a> {
+    b: &'a [u8],
+    text: &'a str,
+    i: usize,
+    strings: &'a [(u32, u32)],
+    /// Monotone cursor into `strings` (parser positions only advance).
+    si: usize,
+}
+
+impl<'a> TapeParser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Json { offset: self.i, message: msg.to_string() }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{s}`")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek().ok_or_else(|| self.err("unexpected end of input"))? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(self.err(&format!("unexpected byte `{}`", c as char))),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value(depth + 1)?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value(depth + 1)?;
+            out.insert(key, val);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    /// Advance the string cursor to the pair opening exactly at `open`,
+    /// if the scanner recorded one.
+    fn find_pair(&mut self, open: usize) -> Option<usize> {
+        while self.si < self.strings.len() && (self.strings[self.si].0 as usize) < open {
+            self.si += 1;
+        }
+        match self.strings.get(self.si) {
+            Some(&(o, c)) if o as usize == open => {
+                self.si += 1;
+                Some(c as usize)
+            }
+            _ => None,
+        }
+    }
+
+    /// The tape fast path: a string whose span holds no backslash and
+    /// no control byte is sliced out of the input wholesale. Anything
+    /// else — escapes, malformed tails, spans the scanner couldn't pair
+    /// — drops to [`TapeParser::string_slow`], a verbatim copy of the
+    /// legacy byte walk, so errors and escape semantics stay identical.
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let open = self.i - 1;
+        if let Some(close) = self.find_pair(open) {
+            let span = &self.b[open + 1..close];
+            if span.iter().all(|&c| c != b'\\' && c >= 0x20) {
+                // open and close are ASCII quotes, so both slice
+                // boundaries are char boundaries
+                let s = self.text[open + 1..close].to_string();
+                self.i = close + 1;
+                return Ok(s);
+            }
+        }
+        self.string_slow()
+    }
+
+    fn string_slow(&mut self) -> Result<String> {
+        let mut s = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // surrogate pair handling
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.b[self.i..].starts_with(b"\\u") {
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(c)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            s.push(ch.ok_or_else(|| self.err("invalid \\u escape"))?);
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("control char in string")),
+                c => {
+                    // re-assemble UTF-8 multibyte sequences byte-for-byte
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| self.err("bad hex"))?;
+        let v = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad hex"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("invalid number"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 structural scan: 32 input bytes per iteration, one compare
+    //! per interesting byte class, OR-folded into a movemask whose set
+    //! bits are the tape offsets.
+    use std::arch::x86_64::*;
+
+    const REST: [u8; 7] = [b'\\', b'{', b'}', b'[', b']', b':', b','];
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn classify32(p: *const u8) -> u32 {
+        let v = _mm256_loadu_si256(p as *const __m256i);
+        let mut m = _mm256_cmpeq_epi8(v, _mm256_set1_epi8(b'"' as i8));
+        for &c in &REST {
+            m = _mm256_or_si256(m, _mm256_cmpeq_epi8(v, _mm256_set1_epi8(c as i8)));
+        }
+        _mm256_movemask_epi8(m) as u32
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scan(bytes: &[u8], out: &mut Vec<u32>) {
+        let mut i = 0usize;
+        while i + 32 <= bytes.len() {
+            let mut m = classify32(bytes.as_ptr().add(i));
+            while m != 0 {
+                out.push((i + m.trailing_zeros() as usize) as u32);
+                m &= m - 1;
+            }
+            i += 32;
+        }
+        super::scan_scalar_from(bytes, i, out);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    //! NEON structural scan: 16 bytes per iteration; the movemask is
+    //! emulated with the crate's usual bit-weights + horizontal add.
+    use std::arch::aarch64::*;
+
+    const REST: [u8; 7] = [b'\\', b'{', b'}', b'[', b']', b':', b','];
+
+    #[target_feature(enable = "neon")]
+    unsafe fn classify16(p: *const u8) -> u16 {
+        let v = vld1q_u8(p);
+        let mut m = vceqq_u8(v, vdupq_n_u8(b'"'));
+        for &c in &REST {
+            m = vorrq_u8(m, vceqq_u8(v, vdupq_n_u8(c)));
+        }
+        const WEIGHTS: [u8; 16] = [1, 2, 4, 8, 16, 32, 64, 128, 1, 2, 4, 8, 16, 32, 64, 128];
+        let bits = vandq_u8(m, vld1q_u8(WEIGHTS.as_ptr()));
+        let lo = vaddv_u8(vget_low_u8(bits)) as u16;
+        let hi = vaddv_u8(vget_high_u8(bits)) as u16;
+        lo | (hi << 8)
+    }
+
+    /// # Safety
+    /// Caller must have verified NEON support.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan(bytes: &[u8], out: &mut Vec<u32>) {
+        let mut i = 0usize;
+        while i + 16 <= bytes.len() {
+            let mut m = classify16(bytes.as_ptr().add(i));
+            while m != 0 {
+                out.push((i + m.trailing_zeros() as usize) as u32);
+                m &= m - 1;
+            }
+            i += 16;
+        }
+        super::scan_scalar_from(bytes, i, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tiers() -> Vec<KernelTier> {
+        let mut t = vec![KernelTier::Scalar];
+        if kernel::detect() != KernelTier::Scalar {
+            t.push(kernel::detect());
+        }
+        t
+    }
+
+    #[test]
+    fn structural_offsets_scalar_matches_simd() {
+        let mut rng = Pcg64::new(7, 0x51);
+        for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 63, 64, 65, 200, 1000] {
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let reference = structural_offsets(&bytes, KernelTier::Scalar);
+            for &tier in &tiers() {
+                assert_eq!(structural_offsets(&bytes, tier), reference, "len={len} tier={tier}");
+            }
+        }
+    }
+
+    #[test]
+    fn tape_pairs_quotes_with_escapes() {
+        let t = scan_tape(r#"{"a\"b": "c\\", "d": []}"#, KernelTier::Scalar);
+        // strings: `a\"b` (1..6), `c\\` (9..13), `d` (16..18)
+        assert_eq!(t.strings, vec![(1, 6), (9, 13), (16, 18)]);
+    }
+
+    #[test]
+    fn tape_parse_equals_legacy_on_corpus() {
+        let corpus = [
+            r#"{"id": 7, "points": [[1.0, 2.0], [3, 4]]}"#,
+            r#"{"stats": true}"#,
+            r#"{"a\"b": "c\\d", "u": "A😀"}"#,
+            r#"[1, -2.5e3, "x", null, true, false, {}]"#,
+            "  [ 1 ,\t2 ]  ",
+            r#""just a string""#,
+            "42",
+            "",
+            "not json",
+            "{",
+            "[1,]",
+            r#"{"a" 1}"#,
+            r#""unterminated"#,
+            r#""bad \q escape""#,
+            r#""trunc \u12""#,
+            r#""lone \ud800 surrogate""#,
+            "[1, 2] trailing",
+            r#"{"deep": [[[[[[1]]]]]]}"#,
+        ];
+        for &tier in &tiers() {
+            for doc in corpus {
+                let legacy = Json::parse(doc);
+                let tape = parse_tape_tier(doc, tier);
+                match (legacy, tape) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "value mismatch on {doc:?} tier={tier}"),
+                    (Err(_), Err(_)) => {}
+                    (l, t) => panic!("ok-ness mismatch on {doc:?} tier={tier}: {l:?} vs {t:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_typed_not_fatal() {
+        for &tier in &tiers() {
+            assert!(parse_tape_tier(&"[".repeat(100_000), tier).is_err());
+            let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+            assert!(parse_tape_tier(&ok, tier).is_ok());
+            let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+            assert!(parse_tape_tier(&over, tier).is_err());
+        }
+    }
+
+    #[test]
+    fn active_tier_entry_point_parses() {
+        let v = parse_tape(r#"{"id": 1, "points": [[0.5]]}"#).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_f64), Some(1.0));
+    }
+}

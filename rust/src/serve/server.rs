@@ -1,23 +1,117 @@
 //! TCP front end: accept connections, parse line-JSON requests, queue
 //! them to the batcher thread, route responses back.
 //!
-//! One OS thread per connection (blocking reads), one batcher thread
-//! owning the runtime; a bounded `sync_channel` between them provides
-//! backpressure: when the device falls behind, acceptors block instead
-//! of buffering unboundedly. Connection threads themselves are capped
-//! by [`ServeConfig::max_conns`]: past the cap the acceptor answers
-//! with the typed [`Response::saturated`] rejection and closes, so a
-//! connection flood cannot spawn unbounded OS threads.
+//! Two interchangeable serve loops ([`ServeLoop`], `--serve-loop`):
+//!
+//! - **Poll** (default on unix): one reactor thread multiplexes every
+//!   client socket through a nonblocking `poll(2)` event loop
+//!   ([`crate::serve::poll`]) with per-connection read/write buffers —
+//!   connection count is bounded by fd budget, not OS threads, and the
+//!   request parser is the SIMD tape scanner.
+//! - **Threads** (the legacy escape hatch, default off-unix): one OS
+//!   thread per connection (blocking reads) capped by
+//!   [`ServeConfig::max_conns`]; past the cap the acceptor answers the
+//!   typed [`Response::saturated`] rejection and closes.
+//!
+//! Both loops feed the same bounded `sync_channel` into the single
+//! batcher thread that owns the (non-`Send`) runtime, share one
+//! [`ServeShared`] counter block (so `{"stats": true}` reads
+//! identically), bound request lines to [`ServeConfig::max_line_bytes`]
+//! (an endless un-newlined line is a one-socket memory DoS otherwise),
+//! record every request into the latency histogram, and apply the
+//! graduated shed tiers of [`ShedConfig`]. Their responses are
+//! byte-identical on the same request corpus — pinned by tests here
+//! and by the CI serve-smoke diff.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::serve::batcher::{Batcher, BatcherConfig, BatcherStats, Job};
-use crate::serve::protocol::{self, ClientRequest, Response};
+use crate::serve::histo::LatencyHisto;
+use crate::serve::protocol::{self, ClientRequest, Response, ServeStats};
+use crate::serve::reply::ReplySink;
+
+/// Which event loop drives the front end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeLoop {
+    /// Nonblocking poll-based reactor (unix only).
+    Poll,
+    /// Thread-per-connection (the legacy path; any host).
+    Threads,
+}
+
+impl ServeLoop {
+    /// Poll where the `poll(2)` binding exists, threads elsewhere.
+    pub fn default_for_host() -> ServeLoop {
+        if cfg!(unix) {
+            ServeLoop::Poll
+        } else {
+            ServeLoop::Threads
+        }
+    }
+}
+
+impl Default for ServeLoop {
+    fn default() -> Self {
+        ServeLoop::default_for_host()
+    }
+}
+
+impl std::str::FromStr for ServeLoop {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<ServeLoop> {
+        match s {
+            "poll" => Ok(ServeLoop::Poll),
+            "threads" => Ok(ServeLoop::Threads),
+            other => Err(Error::Config(format!("unknown serve loop `{other}` (poll|threads)"))),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ServeLoop::Poll => "poll",
+            ServeLoop::Threads => "threads",
+        })
+    }
+}
+
+/// Graduated load-shedding knobs (DESIGN.md §13). The tiers, in order:
+///
+/// 1. **accept** — past [`ServeConfig::max_conns`] live connections the
+///    typed saturation rejection closes the socket (both loops).
+/// 2. **queue (soft)** — once in-flight requests reach `soft_pct`% of
+///    the queue depth, requests carrying `heavy_points`+ points get the
+///    typed [`protocol::ERR_SHED_HEAVY`] rejection instead of queueing:
+///    under pressure, bulk traffic yields to interactive traffic.
+/// 3. **shed (hard)** — poll loop only: when the bounded queue is
+///    completely full the request gets [`protocol::ERR_SHED_LOAD`]
+///    instead of blocking the reactor (the threads loop blocks the
+///    connection's own thread instead — per-connection backpressure).
+///
+/// Stats probes are always answered inline and are never shed.
+#[derive(Debug, Clone)]
+pub struct ShedConfig {
+    /// Queue-pressure threshold for the soft tier, percent of
+    /// [`ServeConfig::queue_depth`] (0 sheds every heavy request,
+    /// 100 only sheds at a full queue).
+    pub soft_pct: u32,
+    /// Point count at which a request counts as heavy.
+    pub heavy_points: usize,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        ShedConfig { soft_pct: 75, heavy_points: 1024 }
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -26,12 +120,20 @@ pub struct ServeConfig {
     pub addr: String,
     pub artifacts_dir: PathBuf,
     pub batcher: BatcherConfig,
-    /// Queue capacity (requests) between acceptors and the batcher.
+    /// Queue capacity (requests) between the front end and the batcher.
     pub queue_depth: usize,
-    /// Maximum concurrent connection-handler threads. Connections past
-    /// the cap receive the typed [`Response::saturated`] rejection and
-    /// are closed instead of spawning a thread.
+    /// Maximum concurrent connections (handler threads in the threads
+    /// loop, registered sockets in the poll loop). Connections past the
+    /// cap receive the typed [`Response::saturated`] rejection.
     pub max_conns: usize,
+    /// Which event loop runs the front end.
+    pub loop_mode: ServeLoop,
+    /// Maximum request line length in bytes; longer lines get the typed
+    /// [`protocol::ERR_LINE_TOO_LONG`] rejection and the connection is
+    /// closed (the remainder of the line cannot be resynchronized).
+    pub max_line_bytes: usize,
+    /// Load-shedding tiers.
+    pub shed: ShedConfig,
 }
 
 impl Default for ServeConfig {
@@ -42,8 +144,80 @@ impl Default for ServeConfig {
             batcher: BatcherConfig::default(),
             queue_depth: 256,
             max_conns: 64,
+            loop_mode: ServeLoop::default_for_host(),
+            max_line_bytes: 1 << 20,
+            shed: ShedConfig::default(),
         }
     }
+}
+
+/// Counters and instruments shared by the front end, the batcher
+/// mirror and the `{"stats": true}` probe — one block, so both serve
+/// loops report identically.
+#[derive(Debug)]
+pub struct ServeShared {
+    /// Batcher counter mirror ([`Batcher::publish_to`]).
+    pub batcher: Arc<Mutex<BatcherStats>>,
+    /// Accept-tier rejections (connection cap).
+    pub saturated: AtomicU64,
+    /// Soft-tier rejections (queue pressure × heavy request).
+    pub shed_heavy: AtomicU64,
+    /// Hard-tier rejections (queue full, poll loop).
+    pub shed_load: AtomicU64,
+    /// Oversized-line rejections.
+    pub oversized: AtomicU64,
+    /// Requests accepted but not yet answered (shed-tier input).
+    pub inflight: AtomicUsize,
+    /// Per-request latency histogram (log-bucketed).
+    pub latency: Mutex<LatencyHisto>,
+}
+
+impl ServeShared {
+    fn new() -> Arc<ServeShared> {
+        Arc::new(ServeShared {
+            batcher: Arc::new(Mutex::new(BatcherStats::default())),
+            saturated: AtomicU64::new(0),
+            shed_heavy: AtomicU64::new(0),
+            shed_load: AtomicU64::new(0),
+            oversized: AtomicU64::new(0),
+            inflight: AtomicUsize::new(0),
+            latency: Mutex::new(LatencyHisto::default()),
+        })
+    }
+
+    /// Point-in-time snapshot for [`protocol::stats_line`] / the CLI.
+    pub fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            batcher: self.batcher.lock().unwrap().clone(),
+            saturated: self.saturated.load(Ordering::Acquire),
+            shed_heavy: self.shed_heavy.load(Ordering::Acquire),
+            shed_load: self.shed_load.load(Ordering::Acquire),
+            oversized: self.oversized.load(Ordering::Acquire),
+            latency: self.latency.lock().unwrap().summary(),
+        }
+    }
+
+    pub(crate) fn record_latency(&self, started: Instant) {
+        self.latency.lock().unwrap().record(started.elapsed());
+    }
+}
+
+/// The soft shed tier, shared by both loops: under queue pressure,
+/// heavy requests are rejected before they are queued. Returns the
+/// typed error string (and counts the rejection) when the request
+/// must be shed.
+pub(crate) fn shed_decision(
+    shared: &ServeShared,
+    queue_depth: usize,
+    shed: &ShedConfig,
+    points: usize,
+) -> Option<&'static str> {
+    let soft_limit = queue_depth.saturating_mul(shed.soft_pct as usize) / 100;
+    if points >= shed.heavy_points && shared.inflight.load(Ordering::Acquire) >= soft_limit {
+        shared.shed_heavy.fetch_add(1, Ordering::AcqRel);
+        return Some(protocol::ERR_SHED_HEAVY);
+    }
+    None
 }
 
 /// RAII share of the connection cap: decrements the live-connection
@@ -73,13 +247,19 @@ pub struct ServerHandle {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<ServeShared>,
 }
 
 impl ServerHandle {
-    /// Signal shutdown and join the acceptor.
+    /// Live counters (the CLI `--stats-every` summary reads these).
+    pub fn stats(&self) -> ServeStats {
+        self.shared.snapshot()
+    }
+
+    /// Signal shutdown and join the front-end thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Release);
-        // poke the listener out of accept()
+        // poke the listener out of accept()/poll()
         let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
@@ -90,30 +270,25 @@ impl ServerHandle {
 /// Start serving a trained model (non-blocking; returns a handle).
 ///
 /// `centroids` is the trained k×dim model (row-major).
-pub fn serve(
-    cfg: ServeConfig,
-    centroids: Vec<f32>,
-    dim: usize,
-    k: usize,
-) -> Result<ServerHandle> {
+pub fn serve(cfg: ServeConfig, centroids: Vec<f32>, dim: usize, k: usize) -> Result<ServerHandle> {
+    #[cfg(not(unix))]
+    if cfg.loop_mode == ServeLoop::Poll {
+        return Err(Error::Config(
+            "--serve-loop poll needs a unix host (poll(2)); use --serve-loop threads".into(),
+        ));
+    }
+
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let shared = ServeShared::new();
 
     let (queue_tx, queue_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
-
-    // live counters for the {"stats": true} probe: the batcher mirrors
-    // its counters here after every flush; the acceptor counts
-    // saturation rejections. Connection threads answer stats requests
-    // from these directly — no batcher round trip, and the probe keeps
-    // working even if the batcher thread died.
-    let stats_shared = Arc::new(Mutex::new(BatcherStats::default()));
-    let saturated = Arc::new(AtomicU64::new(0));
 
     // batcher thread owns the (non-Send) runtime
     let artifacts = cfg.artifacts_dir.clone();
     let bcfg = cfg.batcher.clone();
-    let stats_for_batcher = stats_shared.clone();
+    let stats_for_batcher = shared.batcher.clone();
     std::thread::Builder::new()
         .name("parakm-batcher".into())
         .spawn(move || {
@@ -138,96 +313,210 @@ pub fn serve(
         })
         .expect("spawn batcher");
 
-    // acceptor thread
-    let stop2 = stop.clone();
-    let max_conns = cfg.max_conns;
-    let active = Arc::new(AtomicUsize::new(0));
-    let accept_thread = std::thread::Builder::new()
-        .name("parakm-accept".into())
-        .spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::Acquire) {
-                    break;
-                }
-                match conn {
-                    Ok(stream) => {
-                        // small request/response lines: Nagle + delayed
-                        // ACK would add ~40 ms stalls per round trip
-                        let _ = stream.set_nodelay(true);
-                        match ConnPermit::acquire(&active, max_conns) {
-                            Some(permit) => {
-                                let q = queue_tx.clone();
-                                let stats = stats_shared.clone();
-                                let saturated = saturated.clone();
-                                std::thread::spawn(move || {
-                                    let _permit = permit; // released on exit
-                                    handle_conn(stream, q, stats, saturated);
-                                });
+    let accept_thread = match cfg.loop_mode {
+        ServeLoop::Threads => {
+            let stop2 = stop.clone();
+            let shared2 = shared.clone();
+            let max_conns = cfg.max_conns;
+            let queue_depth = cfg.queue_depth;
+            let max_line_bytes = cfg.max_line_bytes;
+            let shed = cfg.shed.clone();
+            let active = Arc::new(AtomicUsize::new(0));
+            std::thread::Builder::new()
+                .name("parakm-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop2.load(Ordering::Acquire) {
+                            break;
+                        }
+                        match conn {
+                            Ok(stream) => {
+                                // small request/response lines: Nagle +
+                                // delayed ACK would add ~40 ms stalls
+                                // per round trip
+                                let _ = stream.set_nodelay(true);
+                                match ConnPermit::acquire(&active, max_conns) {
+                                    Some(permit) => {
+                                        let q = queue_tx.clone();
+                                        let sh = shared2.clone();
+                                        let shed = shed.clone();
+                                        std::thread::spawn(move || {
+                                            let _permit = permit; // released on exit
+                                            handle_conn(
+                                                stream,
+                                                q,
+                                                sh,
+                                                queue_depth,
+                                                shed,
+                                                max_line_bytes,
+                                            );
+                                        });
+                                    }
+                                    None => {
+                                        shared2.saturated.fetch_add(1, Ordering::AcqRel);
+                                        // typed rejection, written inline:
+                                        // one short line into an empty
+                                        // socket buffer cannot block the
+                                        // acceptor
+                                        let mut stream = stream;
+                                        let _ = writeln!(
+                                            stream,
+                                            "{}",
+                                            Response::saturated().to_line()
+                                        );
+                                    }
+                                }
                             }
-                            None => {
-                                saturated.fetch_add(1, Ordering::AcqRel);
-                                // typed rejection, written inline: one
-                                // short line into an empty socket
-                                // buffer cannot block the acceptor
-                                let mut stream = stream;
-                                let _ = writeln!(stream, "{}", Response::saturated().to_line());
-                            }
+                            Err(e) => eprintln!("accept error: {e}"),
                         }
                     }
-                    Err(e) => eprintln!("accept error: {e}"),
-                }
+                })
+                .expect("spawn acceptor")
+        }
+        ServeLoop::Poll => {
+            #[cfg(unix)]
+            {
+                let pcfg = crate::serve::poll::PollCfg {
+                    queue_depth: cfg.queue_depth,
+                    max_conns: cfg.max_conns,
+                    max_line_bytes: cfg.max_line_bytes,
+                    shed: cfg.shed.clone(),
+                };
+                let shared2 = shared.clone();
+                let stop2 = stop.clone();
+                std::thread::Builder::new()
+                    .name("parakm-reactor".into())
+                    .spawn(move || {
+                        crate::serve::poll::run(listener, queue_tx, shared2, pcfg, stop2);
+                    })
+                    .expect("spawn reactor")
             }
-        })
-        .expect("spawn acceptor");
+            #[cfg(not(unix))]
+            unreachable!("poll loop rejected above on non-unix hosts")
+        }
+    };
 
-    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread) })
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), shared })
 }
 
-/// Per-connection loop: read request lines, queue jobs, write replies
-/// in completion order (ids let clients correlate). `{"stats": true}`
-/// lines are answered inline from the shared counters.
+/// What one bounded line read produced.
+enum LineRead {
+    /// A complete line is in the buffer (without its `\n`; a trailing
+    /// unterminated line at EOF also lands here, mirroring
+    /// `BufRead::lines`).
+    Line,
+    /// Clean end of stream, nothing buffered.
+    Eof,
+    /// The line exceeded `max` content bytes before its `\n` arrived.
+    Oversized,
+}
+
+/// `read_line` with a hard byte bound — the fix for the unbounded
+/// `reader.lines()` DoS: a client streaming an endless line without a
+/// newline previously grew the heap without limit. Stops buffering the
+/// moment the bound is crossed, even mid-line.
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let avail = r.fill_buf()?;
+        if avail.is_empty() {
+            return Ok(if buf.is_empty() { LineRead::Eof } else { LineRead::Line });
+        }
+        if let Some(pos) = avail.iter().position(|&b| b == b'\n') {
+            if buf.len() + pos > max {
+                r.consume(pos + 1);
+                return Ok(LineRead::Oversized);
+            }
+            buf.extend_from_slice(&avail[..pos]);
+            r.consume(pos + 1);
+            return Ok(LineRead::Line);
+        }
+        let n = avail.len();
+        if buf.len() + n > max {
+            r.consume(n);
+            return Ok(LineRead::Oversized);
+        }
+        buf.extend_from_slice(avail);
+        r.consume(n);
+    }
+}
+
+/// Per-connection loop (threads mode): read request lines (bounded),
+/// queue jobs, write replies in completion order (ids let clients
+/// correlate). `{"stats": true}` lines are answered inline from the
+/// shared counters.
 fn handle_conn(
     stream: TcpStream,
     queue: mpsc::SyncSender<Job>,
-    stats: Arc<Mutex<BatcherStats>>,
-    saturated: Arc<AtomicU64>,
+    shared: Arc<ServeShared>,
+    queue_depth: usize,
+    shed: ShedConfig,
+    max_line_bytes: usize,
 ) {
-    let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(match stream.try_clone() {
+    let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break, // client hung up
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match read_line_bounded(&mut reader, &mut buf, max_line_bytes) {
+            Err(_) => break, // client hung up mid-line
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::Oversized) => {
+                shared.oversized.fetch_add(1, Ordering::AcqRel);
+                let _ = writeln!(writer, "{}", Response::line_too_long().to_line());
+                break; // the rest of the line cannot be resynchronized
+            }
+            Ok(LineRead::Line) => {}
+        }
+        // mirror BufRead::lines(): drop one trailing \r
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+        let started = Instant::now();
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            shared.record_latency(started);
+            if writeln!(writer, "{}", Response::not_utf8().to_line()).is_err() {
+                break;
+            }
+            continue;
         };
         if line.trim().is_empty() {
             continue;
         }
-        let reply_line = match ClientRequest::parse(&line) {
-            Ok(ClientRequest::Stats) => {
-                let snapshot = stats.lock().unwrap().clone();
-                protocol::stats_line(&snapshot, saturated.load(Ordering::Acquire))
-            }
+        let reply_line = match ClientRequest::parse(line) {
+            Ok(ClientRequest::Stats) => protocol::stats_line(&shared.snapshot()),
             Ok(ClientRequest::Assign(request)) => {
-                let (tx, rx) = mpsc::channel();
-                if queue.send(Job { request, reply: tx }).is_err() {
-                    break; // batcher gone; drop connection
-                }
-                match rx.recv() {
-                    Ok(r) => r.to_line(),
-                    Err(_) => break,
+                if let Some(err) = shed_decision(&shared, queue_depth, &shed, request.points.len())
+                {
+                    Response::Err { id: request.id, error: err.to_string() }.to_line()
+                } else {
+                    shared.inflight.fetch_add(1, Ordering::AcqRel);
+                    let (tx, rx) = mpsc::channel();
+                    if queue.send(Job { request, reply: ReplySink::Channel(tx) }).is_err() {
+                        shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                        break; // batcher gone; drop connection
+                    }
+                    let got = rx.recv();
+                    shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                    match got {
+                        Ok(r) => r.to_line(),
+                        Err(_) => break,
+                    }
                 }
             }
             Err(e) => Response::Err { id: 0, error: e.to_string() }.to_line(),
         };
+        shared.record_latency(started);
         if writeln!(writer, "{reply_line}").is_err() {
             break;
         }
     }
-    let _ = peer;
 }
 
 #[cfg(test)]
@@ -242,110 +531,147 @@ mod tests {
         dir.join("manifest.json").exists().then_some(dir)
     }
 
-    fn start_server() -> Option<(ServerHandle, Vec<f32>)> {
+    /// Never-existing artifacts dir: the batcher falls back to the
+    /// in-crate native runtime, so these tests run artifact-free.
+    fn no_artifacts() -> PathBuf {
+        std::env::temp_dir().join("parakm_server_tests/no_artifacts_here")
+    }
+
+    fn test_modes() -> Vec<ServeLoop> {
+        if cfg!(unix) {
+            vec![ServeLoop::Threads, ServeLoop::Poll]
+        } else {
+            vec![ServeLoop::Threads]
+        }
+    }
+
+    fn start_server(loop_mode: ServeLoop) -> Option<(ServerHandle, Vec<f32>)> {
         let dir = artifacts_dir()?;
         let ds = MixtureSpec::paper_3d(4).generate(3000, 3);
         let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
         let cfg = ServeConfig {
             addr: "127.0.0.1:0".into(),
             artifacts_dir: dir,
+            loop_mode,
             ..Default::default()
         };
         let handle = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
         Some((handle, model.centroids))
     }
 
+    fn start_server_artifact_free(cfg: ServeConfig) -> ServerHandle {
+        let ds = MixtureSpec::paper_3d(4).generate(500, 3);
+        let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+        serve(cfg, model.centroids.clone(), 3, 4).unwrap()
+    }
+
+    #[test]
+    fn serve_loop_parses_and_displays() {
+        assert_eq!("poll".parse::<ServeLoop>().unwrap(), ServeLoop::Poll);
+        assert_eq!("threads".parse::<ServeLoop>().unwrap(), ServeLoop::Threads);
+        assert!("epoll".parse::<ServeLoop>().is_err());
+        assert_eq!(ServeLoop::Poll.to_string(), "poll");
+        assert_eq!(ServeLoop::Threads.to_string(), "threads");
+    }
+
     #[test]
     fn end_to_end_request_response() {
-        let Some((server, centroids)) = start_server() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let mut conn = TcpStream::connect(server.local_addr).unwrap();
-        writeln!(conn, r#"{{"id": 42, "points": [[0.0, 0.0, 0.0], [5.0, 5.0, 5.0]]}}"#)
-            .unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        match Response::parse(&line).unwrap() {
-            Response::Ok { id, clusters, distances } => {
-                assert_eq!(id, 42);
-                assert_eq!(clusters.len(), 2);
-                assert_eq!(distances.len(), 2);
-                assert!(clusters.iter().all(|&c| (0..4).contains(&c)));
+        for mode in test_modes() {
+            let Some((server, _)) = start_server(mode) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            writeln!(conn, r#"{{"id": 42, "points": [[0.0, 0.0, 0.0], [5.0, 5.0, 5.0]]}}"#)
+                .unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Ok { id, clusters, distances } => {
+                    assert_eq!(id, 42, "mode {mode}");
+                    assert_eq!(clusters.len(), 2);
+                    assert_eq!(distances.len(), 2);
+                    assert!(clusters.iter().all(|&c| (0..4).contains(&c)));
+                }
+                other => panic!("mode {mode}: unexpected {other:?}"),
             }
-            other => panic!("unexpected {other:?}"),
+            server.shutdown();
         }
-        let _ = centroids;
-        server.shutdown();
     }
 
     #[test]
     fn pipelined_requests_same_connection() {
-        let Some((server, _)) = start_server() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let mut conn = TcpStream::connect(server.local_addr).unwrap();
-        for i in 0..5 {
-            writeln!(conn, r#"{{"id": {i}, "points": [[{i}.0, 0.0, 1.0]]}}"#).unwrap();
-        }
-        let reader = BufReader::new(conn.try_clone().unwrap());
-        let mut seen = Vec::new();
-        for line in reader.lines().take(5) {
-            match Response::parse(&line.unwrap()).unwrap() {
-                Response::Ok { id, .. } => seen.push(id),
-                other => panic!("unexpected {other:?}"),
+        for mode in test_modes() {
+            let Some((server, _)) = start_server(mode) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            for i in 0..5 {
+                writeln!(conn, r#"{{"id": {i}, "points": [[{i}.0, 0.0, 1.0]]}}"#).unwrap();
             }
+            let reader = BufReader::new(conn.try_clone().unwrap());
+            let mut seen = Vec::new();
+            for line in reader.lines().take(5) {
+                match Response::parse(&line.unwrap()).unwrap() {
+                    Response::Ok { id, .. } => seen.push(id),
+                    other => panic!("mode {mode}: unexpected {other:?}"),
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "mode {mode}");
+            server.shutdown();
         }
-        seen.sort_unstable();
-        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
-        server.shutdown();
     }
 
     #[test]
     fn malformed_request_gets_error_not_disconnect() {
-        let Some((server, _)) = start_server() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let mut conn = TcpStream::connect(server.local_addr).unwrap();
-        writeln!(conn, "this is not json").unwrap();
-        writeln!(conn, r#"{{"id": 1, "points": [[1.0, 2.0, 3.0]]}}"#).unwrap();
-        let reader = BufReader::new(conn.try_clone().unwrap());
-        let mut lines = reader.lines();
-        let first = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
-        assert!(matches!(first, Response::Err { .. }), "{first:?}");
-        let second = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
-        assert!(matches!(second, Response::Ok { id: 1, .. }), "{second:?}");
-        server.shutdown();
+        for mode in test_modes() {
+            let Some((server, _)) = start_server(mode) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            writeln!(conn, "this is not json").unwrap();
+            writeln!(conn, r#"{{"id": 1, "points": [[1.0, 2.0, 3.0]]}}"#).unwrap();
+            let reader = BufReader::new(conn.try_clone().unwrap());
+            let mut lines = reader.lines();
+            let first = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
+            assert!(matches!(first, Response::Err { .. }), "mode {mode}: {first:?}");
+            let second = Response::parse(&lines.next().unwrap().unwrap()).unwrap();
+            assert!(matches!(second, Response::Ok { id: 1, .. }), "mode {mode}: {second:?}");
+            server.shutdown();
+        }
     }
 
     #[test]
     fn zero_cap_rejects_every_connection_with_typed_error() {
         // the rejection path never touches the batcher, so this runs
-        // artifact-free (the batcher falls back to the native runtime
-        // or dies; the acceptor does not care)
-        let ds = MixtureSpec::paper_3d(4).generate(200, 3);
-        let model = kmeans::serial::run(&ds, &KmeansConfig::new(2).with_seed(1));
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".into(),
-            max_conns: 0,
-            ..Default::default()
-        };
-        let server = serve(cfg, model.centroids.clone(), 3, 2).unwrap();
-        for _ in 0..3 {
-            let conn = TcpStream::connect(server.local_addr).unwrap();
-            let mut reader = BufReader::new(conn);
-            let mut line = String::new();
-            reader.read_line(&mut line).unwrap();
-            let resp = Response::parse(&line).unwrap();
-            assert!(resp.is_saturated(), "{resp:?}");
-            // and the connection is closed, not left dangling
-            line.clear();
-            assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        // artifact-free
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                max_conns: 0,
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            for _ in 0..3 {
+                let conn = TcpStream::connect(server.local_addr).unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let resp = Response::parse(&line).unwrap();
+                assert!(resp.is_saturated(), "mode {mode}: {resp:?}");
+                // and the connection is closed, not left dangling
+                line.clear();
+                assert_eq!(reader.read_line(&mut line).unwrap(), 0, "mode {mode}");
+            }
+            assert!(server.stats().saturated >= 3, "mode {mode}");
+            server.shutdown();
         }
-        server.shutdown();
     }
 
     #[test]
@@ -360,6 +686,7 @@ mod tests {
             addr: "127.0.0.1:0".into(),
             artifacts_dir: dir,
             max_conns: 1,
+            loop_mode: ServeLoop::Threads,
             ..Default::default()
         };
         let server = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
@@ -404,87 +731,300 @@ mod tests {
     #[test]
     fn stats_probe_reports_counters() {
         use crate::util::json::Json;
-        // never-existing artifacts dir: native fallback, artifact-free
-        let dir = std::env::temp_dir().join("parakm_server_tests/no_artifacts_here");
-        let ds = MixtureSpec::paper_3d(4).generate(500, 3);
-        let model = kmeans::serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".into(),
-            artifacts_dir: dir,
-            max_conns: 1,
-            ..Default::default()
-        };
-        let server = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                max_conns: 1,
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
 
-        let mut conn = TcpStream::connect(server.local_addr).unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
-        let mut line = String::new();
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
 
-        // a fresh server reports zeros
-        writeln!(conn, r#"{{"stats": true}}"#).unwrap();
-        reader.read_line(&mut line).unwrap();
-        let j = Json::parse(&line).unwrap();
-        let s = j.get("stats").expect("stats object");
-        assert_eq!(s.get("requests").and_then(Json::as_f64), Some(0.0));
-        assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(0.0));
+            // a fresh server reports zeros
+            writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            let s = j.get("stats").expect("stats object");
+            assert_eq!(s.get("requests").and_then(Json::as_f64), Some(0.0), "mode {mode}");
+            assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(0.0), "mode {mode}");
 
-        // one assignment, one saturated rejection...
-        writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0], [1.0, 1.0, 1.0]]}}"#).unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        assert!(matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }), "{line}");
-        let rej = TcpStream::connect(server.local_addr).unwrap();
-        let mut rej_reader = BufReader::new(rej);
-        line.clear();
-        rej_reader.read_line(&mut line).unwrap();
-        assert!(Response::parse(&line).unwrap().is_saturated(), "{line}");
+            // one assignment, one saturated rejection...
+            writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0], [1.0, 1.0, 1.0]]}}"#).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }),
+                "mode {mode}: {line}"
+            );
+            let rej = TcpStream::connect(server.local_addr).unwrap();
+            let mut rej_reader = BufReader::new(rej);
+            line.clear();
+            rej_reader.read_line(&mut line).unwrap();
+            assert!(Response::parse(&line).unwrap().is_saturated(), "mode {mode}: {line}");
 
-        // ...and the probe reflects both on the still-open connection
-        writeln!(conn, r#"{{"stats": true}}"#).unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        let j = Json::parse(&line).unwrap();
-        let s = j.get("stats").expect("stats object");
-        assert_eq!(s.get("requests").and_then(Json::as_f64), Some(1.0));
-        assert_eq!(s.get("points").and_then(Json::as_f64), Some(2.0));
-        assert_eq!(s.get("batches").and_then(Json::as_f64), Some(1.0));
-        assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(1.0));
-        assert!(s.get("padded_rows").and_then(Json::as_f64).unwrap() >= 0.0, "{line}");
-        server.shutdown();
+            // ...and the probe reflects both on the still-open
+            // connection, including the latency histogram fields
+            writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            let s = j.get("stats").expect("stats object");
+            assert_eq!(s.get("requests").and_then(Json::as_f64), Some(1.0), "mode {mode}");
+            assert_eq!(s.get("points").and_then(Json::as_f64), Some(2.0), "mode {mode}");
+            assert_eq!(s.get("batches").and_then(Json::as_f64), Some(1.0), "mode {mode}");
+            assert_eq!(s.get("saturated").and_then(Json::as_f64), Some(1.0), "mode {mode}");
+            assert!(s.get("padded_rows").and_then(Json::as_f64).unwrap() >= 0.0, "{line}");
+            // at least the stats probe and the assignment were timed
+            assert!(
+                s.get("lat_count").and_then(Json::as_f64).unwrap() >= 2.0,
+                "mode {mode}: {line}"
+            );
+            assert!(s.get("lat_p50_us").and_then(Json::as_f64).unwrap() >= 0.0, "{line}");
+            assert!(s.get("lat_p99_us").and_then(Json::as_f64).unwrap() >= 0.0, "{line}");
+            assert_eq!(s.get("shed_heavy").and_then(Json::as_f64), Some(0.0), "mode {mode}");
+            assert_eq!(s.get("shed_load").and_then(Json::as_f64), Some(0.0), "mode {mode}");
+            assert_eq!(s.get("oversized").and_then(Json::as_f64), Some(0.0), "mode {mode}");
+            server.shutdown();
+        }
     }
 
     #[test]
     fn concurrent_clients() {
-        let Some((server, _)) = start_server() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let addr = server.local_addr;
-        let handles: Vec<_> = (0..8)
-            .map(|c| {
-                std::thread::spawn(move || {
-                    let mut conn = TcpStream::connect(addr).unwrap();
-                    writeln!(
-                        conn,
-                        r#"{{"id": {c}, "points": [[{c}.5, 1.0, -2.0], [0.0, 0.0, 0.0]]}}"#
-                    )
-                    .unwrap();
-                    let mut reader = BufReader::new(conn);
-                    let mut line = String::new();
-                    reader.read_line(&mut line).unwrap();
-                    match Response::parse(&line).unwrap() {
-                        Response::Ok { id, clusters, .. } => {
-                            assert_eq!(id, c);
-                            assert_eq!(clusters.len(), 2);
+        for mode in test_modes() {
+            let Some((server, _)) = start_server(mode) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let addr = server.local_addr;
+            let handles: Vec<_> = (0..8)
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        let mut conn = TcpStream::connect(addr).unwrap();
+                        writeln!(
+                            conn,
+                            r#"{{"id": {c}, "points": [[{c}.5, 1.0, -2.0], [0.0, 0.0, 0.0]]}}"#
+                        )
+                        .unwrap();
+                        let mut reader = BufReader::new(conn);
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        match Response::parse(&line).unwrap() {
+                            Response::Ok { id, clusters, .. } => {
+                                assert_eq!(id, c);
+                                assert_eq!(clusters.len(), 2);
+                            }
+                            other => panic!("unexpected {other:?}"),
                         }
-                        other => panic!("unexpected {other:?}"),
-                    }
+                    })
                 })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn oversized_line_gets_typed_error_and_close() {
+        // the satellite bugfix pin: an endless line without `\n` must
+        // not grow the read buffer unboundedly — in either loop
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                max_line_bytes: 256,
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+
+            // (a) a complete-but-huge line
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let huge = "x".repeat(1024);
+            writeln!(conn, "{huge}").unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Response::parse(&line).unwrap();
+            assert_eq!(resp, Response::line_too_long(), "mode {mode}: {line}");
+            line.clear();
+            assert_eq!(reader.read_line(&mut line).unwrap(), 0, "mode {mode}: must close");
+
+            // (b) an endless line that never sends `\n`
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            conn.write_all(&vec![b'y'; 4096]).unwrap();
+            conn.flush().unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Response::parse(&line).unwrap();
+            assert_eq!(resp, Response::line_too_long(), "mode {mode}: {line}");
+            line.clear();
+            assert_eq!(reader.read_line(&mut line).unwrap(), 0, "mode {mode}: must close");
+
+            assert!(server.stats().oversized >= 2, "mode {mode}");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn shed_tiers_reject_heavy_requests_under_pressure() {
+        // soft_pct 0 + heavy_points 1 makes the soft tier deterministic:
+        // every assign request is "heavy" and the queue always counts
+        // as under pressure
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                shed: ShedConfig { soft_pct: 0, heavy_points: 1 },
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            writeln!(conn, r#"{{"id": 7, "points": [[0.0, 0.0, 0.0]]}}"#).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Response::parse(&line).unwrap();
+            assert!(resp.is_shed(), "mode {mode}: {resp:?}");
+            assert_eq!(
+                resp,
+                Response::Err { id: 7, error: protocol::ERR_SHED_HEAVY.into() },
+                "mode {mode}"
+            );
+            // stats probes are never shed
+            writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"shed_heavy\":1"), "mode {mode}: {line}");
+            assert!(server.stats().shed_heavy >= 1, "mode {mode}");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn poll_and_threads_responses_byte_identical() {
+        // the tentpole contract at the socket level: the same request
+        // corpus (valid, malformed-but-typed, empty) must produce
+        // byte-identical response lines from both loops. Malformed
+        // JSON errors are compared for err-ness only (parser error
+        // prose is not part of the cross-loop contract).
+        if !cfg!(unix) {
+            return;
+        }
+        let corpus: Vec<String> = {
+            let mut c = vec![
+                r#"{"id": 1, "points": [[0.0, 0.0, 0.0]]}"#.to_string(),
+                r#"{"id": 2, "points": [[1.5, -2.0, 3.25], [4.0, 5.0, 6.0]]}"#.to_string(),
+                r#"{ "id" : 3 , "points" : [ [ 7e-1 , 0.125 , -9 ] ] }"#.to_string(),
+                r#"{"id": 4, "points": [[1, 2]]}"#.to_string(), // dim mismatch: typed error
+                r#"{"id": 5}"#.to_string(),                     // missing points
+            ];
+            for i in 0..20 {
+                let x = i as f64 * 0.37 - 3.0;
+                c.push(format!(r#"{{"id": {}, "points": [[{x}, {x}, {x}]]}}"#, 100 + i));
+            }
+            c
+        };
+        let drive = |mode: ServeLoop| -> Vec<String> {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            for line in &corpus {
+                writeln!(conn, "{line}").unwrap();
+            }
+            let reader = BufReader::new(conn.try_clone().unwrap());
+            let out: Vec<String> = reader.lines().take(corpus.len()).map(|l| l.unwrap()).collect();
+            server.shutdown();
+            out
+        };
+        let threads = drive(ServeLoop::Threads);
+        let poll = drive(ServeLoop::Poll);
+        assert_eq!(threads.len(), poll.len());
+        assert_eq!(threads, poll, "poll loop must answer byte-identically to threads loop");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poll_loop_interleaves_many_connections() {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            artifacts_dir: no_artifacts(),
+            loop_mode: ServeLoop::Poll,
+            ..Default::default()
+        };
+        let server = start_server_artifact_free(cfg);
+        // more connections than the threads loop would dare per-thread:
+        // all multiplexed on the single reactor
+        let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = (0..32)
+            .map(|_| {
+                let c = TcpStream::connect(server.local_addr).unwrap();
+                let r = BufReader::new(c.try_clone().unwrap());
+                (c, r)
             })
             .collect();
-        for h in handles {
-            h.join().unwrap();
+        for (i, (c, _)) in conns.iter_mut().enumerate() {
+            writeln!(c, r#"{{"id": {i}, "points": [[0.5, 0.5, 0.5]]}}"#).unwrap();
+        }
+        for (i, (_, r)) in conns.iter_mut().enumerate() {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Ok { id, .. } => assert_eq!(id, i as u64),
+                other => panic!("conn {i}: unexpected {other:?}"),
+            }
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn bounded_line_reader_contract() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+
+        // a normal line
+        let mut r = Cursor::new(b"hello\nworld\n".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"hello");
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"world");
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 64).unwrap(), LineRead::Eof));
+
+        // a trailing unterminated line still comes through (lines() parity)
+        let mut r = Cursor::new(b"tail".to_vec());
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 64).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"tail");
+
+        // over-long with newline
+        let mut r = Cursor::new([vec![b'a'; 100], b"\n".to_vec()].concat());
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 10).unwrap(), LineRead::Oversized));
+
+        // over-long without newline: bounded buffering, not unbounded growth
+        let mut r = Cursor::new(vec![b'b'; 1 << 16]);
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 10).unwrap(), LineRead::Oversized));
+        assert!(buf.len() <= 10);
+
+        // exactly at the bound is fine
+        let mut r = Cursor::new(b"0123456789\n".to_vec());
+        buf.clear();
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"0123456789");
     }
 }

@@ -83,6 +83,60 @@ pub mod prop {
         pub fn points(&mut self, n: usize, d: usize, spread: f32) -> Vec<f32> {
             (0..n * d).map(|_| self.f32_in(-spread, spread)).collect()
         }
+
+        /// One uniformly random byte.
+        pub fn byte(&mut self) -> u8 {
+            (self.rng.next_u64() & 0xFF) as u8
+        }
+
+        /// `n` uniformly random bytes (fuzz soup).
+        pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+            (0..n).map(|_| self.byte()).collect()
+        }
+
+        /// `n` bytes drawn from `alphabet` — structured soup (e.g. JSON
+        /// punctuation) that reaches deeper parser states than uniform
+        /// bytes do.
+        pub fn ascii_soup(&mut self, n: usize, alphabet: &[u8]) -> Vec<u8> {
+            assert!(!alphabet.is_empty());
+            (0..n).map(|_| *self.choice(alphabet)).collect()
+        }
+
+        /// Apply `edits` random mutations in place: bit flips, byte
+        /// overwrites, insertions, deletions and tail truncations — the
+        /// standard corruption menu for fuzzing a valid input.
+        pub fn mutate(&mut self, buf: &mut Vec<u8>, edits: usize) {
+            for _ in 0..edits {
+                match self.rng.next_below(5) {
+                    0 if !buf.is_empty() => {
+                        // flip one bit
+                        let i = self.rng.next_below(buf.len() as u64) as usize;
+                        buf[i] ^= 1 << (self.rng.next_u64() & 7);
+                    }
+                    1 if !buf.is_empty() => {
+                        // overwrite one byte
+                        let i = self.rng.next_below(buf.len() as u64) as usize;
+                        buf[i] = self.byte();
+                    }
+                    2 => {
+                        // insert one byte
+                        let i = self.rng.next_below(buf.len() as u64 + 1) as usize;
+                        buf.insert(i, self.byte());
+                    }
+                    3 if !buf.is_empty() => {
+                        // delete one byte
+                        let i = self.rng.next_below(buf.len() as u64) as usize;
+                        buf.remove(i);
+                    }
+                    _ if !buf.is_empty() => {
+                        // truncate the tail
+                        let keep = self.rng.next_below(buf.len() as u64) as usize;
+                        buf.truncate(keep);
+                    }
+                    _ => buf.push(self.byte()),
+                }
+            }
+        }
     }
 
     /// A property outcome: `Ok(())` passes, `Err(msg)` fails with context.
@@ -180,5 +234,25 @@ mod tests {
         for _ in 0..16 {
             assert_eq!(a.u64(), b.u64());
         }
+    }
+
+    #[test]
+    fn byte_generators_are_deterministic_and_shaped() {
+        let mut a = prop::Gen::new(11);
+        let mut b = prop::Gen::new(11);
+        assert_eq!(a.bytes(64), b.bytes(64));
+        let soup = a.ascii_soup(128, b"{}[],:\"x");
+        assert_eq!(soup.len(), 128);
+        assert!(soup.iter().all(|c| b"{}[],:\"x".contains(c)));
+    }
+
+    #[test]
+    fn mutate_changes_but_never_panics() {
+        prop::check("mutate stays total", 128, |g| {
+            let mut buf = g.bytes(g.usize_in(0, 64));
+            let edits = g.usize_in(0, 16);
+            g.mutate(&mut buf, edits);
+            prop::ensure(buf.len() <= 64 + edits, "mutation grew past the edit budget")
+        });
     }
 }

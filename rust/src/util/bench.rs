@@ -156,6 +156,35 @@ pub fn bench_json_row(
     Json::Obj(m)
 }
 
+/// One serving-path perf-trajectory row for `results/bench.json`:
+/// sustained request latency through a serve loop (`engine` is
+/// `"serve-poll"` or `"serve-threads"`), ns per request plus the
+/// p50/p99 tail in microseconds. Complements [`bench_json_row`], whose
+/// per-point-iteration shape fits training engines, not request/reply
+/// serving.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_json_serve_row(
+    bench: &str,
+    engine: &str,
+    tier: &str,
+    requests: usize,
+    points_per_request: usize,
+    ns_per_request: f64,
+    p50_us: f64,
+    p99_us: f64,
+) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str(bench.to_string()));
+    m.insert("engine".to_string(), Json::Str(engine.to_string()));
+    m.insert("tier".to_string(), Json::Str(tier.to_string()));
+    m.insert("requests".to_string(), Json::Num(requests as f64));
+    m.insert("points_per_request".to_string(), Json::Num(points_per_request as f64));
+    m.insert("ns_per_request".to_string(), Json::Num(ns_per_request));
+    m.insert("p50_us".to_string(), Json::Num(p50_us));
+    m.insert("p99_us".to_string(), Json::Num(p99_us));
+    Json::Obj(m)
+}
+
 /// Append rows to the `results/bench.json` perf trajectory, merging
 /// with whatever a previous bench target in the same run already
 /// wrote (each target appends; CI uploads the merged file as an
@@ -246,6 +275,17 @@ mod tests {
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_row_carries_latency_fields() {
+        let row =
+            bench_json_serve_row("serving_load", "serve-poll", "avx2", 200, 32, 123.0, 1.5, 9.0);
+        assert_eq!(row.get("engine").and_then(Json::as_str), Some("serve-poll"));
+        assert_eq!(row.get("requests").and_then(Json::as_usize), Some(200));
+        assert_eq!(row.get("ns_per_request").and_then(Json::as_f64), Some(123.0));
+        assert_eq!(row.get("p50_us").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(row.get("p99_us").and_then(Json::as_f64), Some(9.0));
     }
 
     #[test]

@@ -11,6 +11,15 @@ use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 
+/// Maximum nesting depth the parser accepts. The parser is recursive,
+/// so without a cap a hostile document of 100k `[` bytes overflows the
+/// stack instead of returning a typed error — fatal for the serve path,
+/// which feeds untrusted lines through here. 128 is far beyond any
+/// document we emit or accept (requests nest 3 deep). The tape parser
+/// in [`crate::serve::scan`] enforces the same constant so both parsers
+/// stay answer-equivalent.
+pub const MAX_DEPTH: usize = 128;
+
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -28,7 +37,7 @@ impl Json {
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.ws();
         if p.i != p.b.len() {
             return Err(p.err("trailing characters after document"));
@@ -203,20 +212,23 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json> {
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         match self.peek().ok_or_else(|| self.err("unexpected end of input"))? {
             b'n' => self.lit("null", Json::Null),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'"' => Ok(Json::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected byte `{}`", c as char))),
         }
     }
 
-    fn array(&mut self) -> Result<Json> {
+    fn array(&mut self, depth: usize) -> Result<Json> {
         self.eat(b'[')?;
         let mut out = Vec::new();
         self.ws();
@@ -226,7 +238,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.ws();
-            out.push(self.value()?);
+            out.push(self.value(depth + 1)?);
             self.ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -239,7 +251,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json> {
+    fn object(&mut self, depth: usize) -> Result<Json> {
         self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.ws();
@@ -253,7 +265,7 @@ impl<'a> Parser<'a> {
             self.ws();
             self.eat(b':')?;
             self.ws();
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             out.insert(key, val);
             self.ws();
             match self.peek() {
@@ -418,6 +430,23 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_a_typed_error_not_a_stack_overflow() {
+        // just inside the cap parses …
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        // … one past it is a typed error, and a hostile 100k-deep
+        // document must not touch the recursion at all
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(over.ends_with(']'));
+        match Json::parse(&over) {
+            Err(crate::Error::Json { message, .. }) => assert!(message.contains("nesting")),
+            other => panic!("expected Json error, got {other:?}"),
+        }
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        assert!(Json::parse(&"{\"a\":".repeat(100_000)).is_err());
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Fuzz layer for the length-prefixed binary wire protocol
+//! ([`parakmeans::cluster::wire`]).
+//!
+//! The frame decoder faces the network, so its contract is absolute:
+//! any byte stream — random soup, bit-flipped valid frames, truncations
+//! at every boundary, forged length prefixes — produces either a frame,
+//! a clean end-of-session (`Ok(None)` at a frame boundary) or a typed
+//! [`ClusterError`], never a panic and never an attacker-sized
+//! allocation. Encode→decode identity is pinned for every frame type,
+//! including the elastic v3 frames (`ChunkAssign`/`ChunkPartials`/
+//! `Rejoin`). Over 5,000 adversarial inputs execute per `cargo test`
+//! run.
+
+use parakmeans::cluster::wire::{read_frame_opt, write_frame, Frame, MAX_FRAME_BYTES, WIRE_VERSION};
+use parakmeans::error::{ClusterError, Error};
+use parakmeans::linalg::kernel::DistancePolicy;
+use parakmeans::testutil::prop::{self, Gen};
+
+/// A randomized instance of every frame type (13 variants), round-
+/// robined by `pick` so sweeps cover the full protocol surface.
+fn gen_frame(g: &mut Gen, pick: usize) -> Frame {
+    let policy = if g.bool() { DistancePolicy::Exact } else { DistancePolicy::Dot };
+    let k = g.usize_in(1, 5) as u32;
+    let dim = g.usize_in(1, 4) as u32;
+    match pick % 13 {
+        0 => Frame::Hello { version: g.usize_in(0, u16::MAX as usize) as u16 },
+        1 => Frame::ShardSpec { rows: g.u64() >> g.usize_in(0, 63), dim },
+        2 => Frame::Assign { k, dim, policy, centroids: g.points((k * dim) as usize, 1, 1e6) },
+        3 => Frame::Partials {
+            k,
+            dim,
+            counts: (0..k).map(|_| g.u64() >> 32).collect(),
+            sums: (0..k * dim).map(|_| g.f64_in(-1e12, 1e12)).collect(),
+            sse: g.f64_in(0.0, 1e15),
+        },
+        4 => Frame::Gather { indices: (0..g.usize_in(0, 16)).map(|_| g.u64() >> 16).collect() },
+        5 => {
+            let rows = g.usize_in(0, 8);
+            Frame::Rows { dim, rows: g.points(rows * dim as usize, 1, 1e3) }
+        }
+        6 => Frame::FetchAssign,
+        7 => Frame::AssignShard {
+            assign: (0..g.usize_in(0, 32)).map(|_| g.usize_in(0, 1 << 20) as i32 - 1).collect(),
+        },
+        8 => Frame::Shutdown,
+        9 => Frame::ErrMsg {
+            message: format!("fuzz error #{} with unicode é😀 and \"quotes\"", g.usize_in(0, 999)),
+        },
+        10 => {
+            let lo = g.u64() >> 24;
+            Frame::ChunkAssign {
+                chunk: g.u64() >> 16,
+                lo,
+                hi: lo + g.usize_in(0, 1 << 16) as u64,
+                k,
+                dim,
+                policy,
+                want_assign: g.bool(),
+                centroids: g.points((k * dim) as usize, 1, 1e6),
+            }
+        }
+        11 => Frame::ChunkPartials {
+            chunk: g.u64() >> 16,
+            k,
+            dim,
+            counts: (0..k).map(|_| g.u64() >> 32).collect(),
+            sums: (0..k * dim).map(|_| g.f64_in(-1e12, 1e12)).collect(),
+            sse: g.f64_in(0.0, 1e15),
+            assign: (0..g.usize_in(0, 16)).map(|_| g.usize_in(0, 99) as i32).collect(),
+        },
+        _ => Frame::Rejoin { version: WIRE_VERSION },
+    }
+}
+
+fn encode(f: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, f).expect("in-memory encode cannot fail");
+    buf
+}
+
+/// Decoding may succeed, may fail typed — but never panics, and any
+/// `Err` must be the cluster taxonomy.
+fn decode_is_total(bytes: &[u8], what: &str) -> prop::Outcome {
+    let mut r = bytes;
+    match read_frame_opt(&mut r) {
+        Ok(_) => Ok(()),
+        Err(Error::Cluster(_)) => Ok(()),
+        Err(other) => Err(format!("{what}: non-cluster error {other:?} on {bytes:?}")),
+    }
+}
+
+#[test]
+fn encode_decode_identity_for_every_frame_type() {
+    prop::check("wire roundtrip identity", 1300, |g| {
+        let pick = g.usize_in(0, 12);
+        let frame = gen_frame(g, pick);
+        let buf = encode(&frame);
+        let mut r = &buf[..];
+        let (back, read) = read_frame_opt(&mut r)
+            .map_err(|e| format!("decode failed on own encoding of {frame:?}: {e}"))?
+            .ok_or_else(|| format!("own encoding of {frame:?} decoded as clean close"))?;
+        prop::ensure(read as usize == buf.len(), "frame length accounting diverged")?;
+        prop::ensure(r.is_empty(), "decoder left bytes behind")?;
+        prop::ensure(back == frame, format!("roundtrip diverged: {frame:?} → {back:?}"))
+    });
+}
+
+#[test]
+fn truncation_at_every_boundary_is_clean_close_or_typed_error() {
+    let mut g = Gen::new(0xf00d);
+    let mut cases = 0u64;
+    for pick in 0..13 {
+        let frame = gen_frame(&mut g, pick);
+        let buf = encode(&frame);
+        for cut in 0..buf.len() {
+            let mut r = &buf[..cut];
+            match read_frame_opt(&mut r) {
+                Ok(None) if cut == 0 => {} // clean close at the boundary
+                Ok(other) => panic!(
+                    "cut at {cut}/{} of {frame:?} decoded as {other:?}",
+                    buf.len()
+                ),
+                Err(Error::Cluster(_)) => {} // typed, as required
+                Err(other) => panic!("cut at {cut} of {frame:?}: non-cluster error {other:?}"),
+            }
+            cases += 1;
+        }
+    }
+    assert!(cases >= 500, "expected a dense truncation sweep, got {cases}");
+}
+
+#[test]
+fn bit_flipped_frames_never_panic() {
+    prop::check("bit flips are survivable", 1500, |g| {
+        let pick = g.usize_in(0, 12);
+        let mut buf = encode(&gen_frame(g, pick));
+        let edits = g.usize_in(1, 6);
+        g.mutate(&mut buf, edits);
+        decode_is_total(&buf, "bit-flipped frame")
+    });
+}
+
+#[test]
+fn random_soup_streams_terminate_with_typed_errors() {
+    prop::check("soup streams terminate", 1200, |g| {
+        let n = g.usize_in(0, 256);
+        let soup = g.bytes(n);
+        let mut r = &soup[..];
+        // each successful read consumes ≥ 4 bytes, so the stream is
+        // finite; the first error or clean close ends it
+        loop {
+            let before = r.len();
+            match read_frame_opt(&mut r) {
+                Ok(None) => return Ok(()),
+                Ok(Some(_)) => {
+                    prop::ensure(r.len() < before, "decoder made no progress")?;
+                }
+                Err(Error::Cluster(_)) => return Ok(()),
+                Err(other) => return Err(format!("non-cluster error {other:?} on soup")),
+            }
+        }
+    });
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_any_body_read() {
+    let mut buf = (MAX_FRAME_BYTES + 1).to_le_bytes().to_vec();
+    buf.push(0x01);
+    let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+    match err {
+        Error::Cluster(ClusterError::Frame(msg)) => {
+            assert!(msg.contains("implausible frame length"), "{msg}");
+        }
+        other => panic!("expected a typed frame error, got {other:?}"),
+    }
+}
+
+#[test]
+fn huge_but_legal_length_with_tiny_body_is_typed_truncation_not_oom() {
+    // a forged 1 GiB length prefix followed by almost nothing: the
+    // incremental body reader must fail typed after the bytes actually
+    // sent, instead of allocating the promised gigabyte up front
+    let mut buf = MAX_FRAME_BYTES.to_le_bytes().to_vec();
+    buf.push(0x01); // type byte
+    buf.extend_from_slice(&[0u8; 37]); // a dribble of body
+    let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+    match err {
+        Error::Cluster(ClusterError::Frame(msg)) => {
+            assert!(msg.contains("truncated frame"), "{msg}");
+        }
+        other => panic!("expected a typed truncation error, got {other:?}"),
+    }
+}
+
+#[test]
+fn zero_length_prefix_is_typed() {
+    let buf = 0u32.to_le_bytes().to_vec();
+    let err = read_frame_opt(&mut &buf[..]).unwrap_err();
+    assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err:?}");
+}
+
+#[test]
+fn back_to_back_frames_stream_cleanly() {
+    prop::check("multi-frame streams", 400, |g| {
+        let count = g.usize_in(1, 6);
+        let frames: Vec<Frame> = (0..count)
+            .map(|i| {
+                let pick = g.usize_in(0, 12) + i;
+                gen_frame(g, pick)
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for (i, want) in frames.iter().enumerate() {
+            let (got, _) = read_frame_opt(&mut r)
+                .map_err(|e| format!("frame {i} failed: {e}"))?
+                .ok_or_else(|| format!("stream ended early at frame {i}"))?;
+            prop::ensure(&got == want, format!("frame {i} diverged"))?;
+        }
+        match read_frame_opt(&mut r) {
+            Ok(None) => Ok(()),
+            other => Err(format!("expected clean close after last frame, got {other:?}")),
+        }
+    });
+}

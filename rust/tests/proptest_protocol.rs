@@ -1,0 +1,261 @@
+//! Adversarial property tests for the serve protocol front ends.
+//!
+//! The load-bearing contract: the SIMD tape parser
+//! ([`parakmeans::serve::scan`]) must be answer-equivalent to the
+//! legacy byte-wise parser ([`parakmeans::util::json::Json::parse`]) on
+//! *every* input, on *every* kernel tier — same accept set, identical
+//! values on accepted documents, a typed error (never a panic) on
+//! everything else. The suites below push generated-valid, mutated,
+//! truncated, random-soup and non-UTF-8 inputs through both parsers and
+//! through the [`ClientRequest`] extraction on top of them; well over
+//! 5,000 adversarial inputs execute per `cargo test` run.
+//!
+//! `PARAKM_KERNEL=scalar` pins everything to the scalar tier (the CI
+//! bit-identity job runs this file that way); unpinned runs also cover
+//! the host's best SIMD tier via [`kernel::detect`].
+
+use parakmeans::linalg::kernel::{self, KernelTier};
+use parakmeans::serve::scan;
+use parakmeans::serve::{ClientRequest, Response};
+use parakmeans::testutil::prop::{self, Gen, Outcome};
+use parakmeans::util::json::Json;
+
+/// Scalar always; the host's SIMD tier too when it has one.
+fn tiers() -> Vec<KernelTier> {
+    let mut t = vec![KernelTier::Scalar];
+    let best = kernel::detect();
+    if best != KernelTier::Scalar {
+        t.push(best);
+    }
+    t
+}
+
+/// The equivalence oracle: both parsers agree on ok-ness, and on
+/// accepted documents they produce identical values. Error prose may
+/// differ between the two (both still reject), so it is not compared.
+fn assert_equivalent(input: &str, tier: KernelTier) -> Outcome {
+    let legacy = Json::parse(input);
+    let tape = scan::parse_tape_tier(input, tier);
+    match (&legacy, &tape) {
+        (Ok(a), Ok(b)) => prop::ensure(
+            a == b,
+            format!("tier {tier}: values diverge on {input:?}: legacy={a:?} tape={b:?}"),
+        ),
+        (Ok(a), Err(e)) => Err(format!(
+            "tier {tier}: tape rejected a document legacy accepts: {input:?} (legacy={a:?}, tape \
+             err={e})"
+        )),
+        (Err(e), Ok(b)) => Err(format!(
+            "tier {tier}: tape accepted a document legacy rejects: {input:?} (tape={b:?}, legacy \
+             err={e})"
+        )),
+        (Err(_), Err(_)) => Ok(()),
+    }
+    .and_then(|()| {
+        // and the request extraction on top agrees too
+        let l = ClientRequest::parse(input);
+        let t = ClientRequest::parse_tape_tier(input, tier);
+        prop::ensure(
+            l.is_ok() == t.is_ok() && l.ok() == t.ok(),
+            format!("tier {tier}: ClientRequest front ends diverge on {input:?}"),
+        )
+    })
+}
+
+/// A structurally valid request line with deliberate variety:
+/// whitespace placement, number formats, key order, escapes in extra
+/// string fields, nested extra objects.
+fn gen_valid_line(g: &mut Gen) -> String {
+    let ws = ["", " ", "  ", "\t", " \t "];
+    let id = g.usize_in(0, 1 << 40);
+    let npoints = g.usize_in(1, 6);
+    let dim = g.usize_in(1, 5);
+    let mut points = Vec::new();
+    for _ in 0..npoints {
+        let coords: Vec<String> = (0..dim)
+            .map(|_| match g.usize_in(0, 4) {
+                0 => format!("{}", g.usize_in(0, 999)),
+                1 => format!("-{}", g.usize_in(0, 999)),
+                2 => format!("{:.3}", g.f64_in(-1e3, 1e3)),
+                3 => format!("{}e{}", g.usize_in(1, 99), g.usize_in(0, 5)),
+                _ => format!("{:.6}E-{}", g.f64_in(0.0, 9.0), g.usize_in(0, 4)),
+            })
+            .collect();
+        points.push(format!("[{}{}{}]", g.choice(&ws), coords.join(", "), g.choice(&ws)));
+    }
+    let id_field = format!(r#""id"{}:{}{id}"#, g.choice(&ws), g.choice(&ws));
+    let points_field = format!(r#""points": [{}]"#, points.join(", "));
+    let mut fields = vec![id_field, points_field];
+    if g.bool() {
+        // extra fields with escape-rich strings exercise the scanner's
+        // quote pairing and the parser's slow path
+        let extras = [
+            r#""tag": "a\"b\\c\nAé""#,
+            r#""meta": {"nested": [1, {"x": null}], "ok": true}"#,
+            r#""note": "plain ascii text""#,
+            r#""unicode": "héllo wörld 😀""#,
+        ];
+        fields.push((*g.choice(&extras)).to_string());
+    }
+    if g.bool() {
+        // key order must not matter
+        fields.reverse();
+    }
+    format!("{}{{{}}}{}", g.choice(&ws), fields.join(", "), g.choice(&ws))
+}
+
+#[test]
+fn valid_lines_parse_identically_on_every_tier() {
+    let tiers = tiers();
+    prop::check("tape ≡ legacy on generated valid lines", 1200, |g| {
+        let line = gen_valid_line(g);
+        for &tier in &tiers {
+            assert_equivalent(&line, tier)?;
+            // a generated-valid line must actually be accepted
+            prop::ensure(
+                ClientRequest::parse_tape_tier(&line, tier).is_ok(),
+                format!("tier {tier}: generated line rejected: {line:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_lines_never_panic_and_stay_equivalent() {
+    let tiers = tiers();
+    prop::check("tape ≡ legacy under mutation", 1500, |g| {
+        let mut bytes = gen_valid_line(g).into_bytes();
+        let edits = g.usize_in(1, 8);
+        g.mutate(&mut bytes, edits);
+        // non-UTF-8 mutants never reach the parsers in the serve path
+        // (the loops answer ERR_NOT_UTF8 first); parity holds on the
+        // rest
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            for &tier in &tiers {
+                assert_equivalent(s, tier)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_json_soup_is_rejected_identically() {
+    let tiers = tiers();
+    // heavy on structural bytes: reaches deep parser states that
+    // uniform random bytes almost never do
+    let alphabet = br#"{}[],:"\ 0123456789.eE+-truefalsnu"#;
+    prop::check("tape ≡ legacy on JSON soup", 1000, |g| {
+        let n = g.usize_in(0, 120);
+        let soup = g.ascii_soup(n, alphabet);
+        let s = std::str::from_utf8(&soup).expect("alphabet is ascii");
+        for &tier in &tiers {
+            assert_equivalent(s, tier)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_truncation_of_valid_lines_is_equivalent() {
+    let tiers = tiers();
+    let mut g = Gen::new(0x7a93);
+    let mut cases = 0u64;
+    for _ in 0..12 {
+        let line = gen_valid_line(&mut g);
+        for cut in 0..=line.len() {
+            if !line.is_char_boundary(cut) {
+                continue;
+            }
+            let prefix = &line[..cut];
+            for &tier in &tiers {
+                if let Err(m) = assert_equivalent(prefix, tier) {
+                    panic!("truncation at {cut} of {line:?}: {m}");
+                }
+                cases += 1;
+            }
+        }
+    }
+    assert!(cases >= 500, "expected a dense truncation sweep, got {cases}");
+}
+
+#[test]
+fn deep_nesting_is_a_typed_error_on_both_paths() {
+    let tiers = tiers();
+    for depth in [10, 127, 128, 129, 1_000, 50_000] {
+        let doc = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        for &tier in &tiers {
+            let legacy = Json::parse(&doc);
+            let tape = scan::parse_tape_tier(&doc, tier);
+            assert_eq!(legacy.is_ok(), tape.is_ok(), "tier {tier}: depth {depth} ok-ness diverges");
+            if legacy.is_ok() {
+                assert_eq!(legacy.unwrap(), tape.unwrap(), "tier {tier}: depth {depth}");
+            }
+        }
+    }
+}
+
+#[test]
+fn non_utf8_bytes_never_panic_the_byte_level_entry() {
+    prop::check("non-utf8 soup is survivable", 800, |g| {
+        let n = g.usize_in(0, 100);
+        let bytes = g.bytes(n);
+        // the serve loops gate on from_utf8 before parsing — replicate
+        // that exact path: invalid sequences are a typed rejection,
+        // valid ones must keep the two parsers in agreement
+        match std::str::from_utf8(&bytes) {
+            Err(_) => Ok(()), // the loop answers ERR_NOT_UTF8; nothing to parse
+            Ok(s) => assert_equivalent(s, KernelTier::Scalar),
+        }
+    });
+}
+
+#[test]
+fn structural_offsets_agree_across_tiers() {
+    let tiers = tiers();
+    if tiers.len() < 2 {
+        eprintln!("host has no SIMD tier; scalar-only run");
+    }
+    prop::check("structural offsets scalar ≡ simd", 600, |g| {
+        // byte lengths straddling every SIMD block boundary
+        let n = g.usize_in(0, 140);
+        let bytes = if g.bool() {
+            g.bytes(n)
+        } else {
+            g.ascii_soup(n, br#"{}[],:"\xyz "#)
+        };
+        let want = scan::structural_offsets(&bytes, KernelTier::Scalar);
+        for &tier in &tiers {
+            let got = scan::structural_offsets(&bytes, tier);
+            prop::ensure(
+                got == want,
+                format!("tier {tier}: offsets diverge on {bytes:?}: {got:?} vs {want:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn response_lines_roundtrip() {
+    prop::check("response to_line/parse roundtrip", 600, |g| {
+        let resp = if g.bool() {
+            let n = g.usize_in(0, 8);
+            Response::Ok {
+                id: g.usize_in(0, 1 << 40) as u64,
+                clusters: (0..n).map(|_| g.usize_in(0, 64) as i32).collect(),
+                distances: (0..n).map(|_| g.f32_in(0.0, 1e6)).collect(),
+            }
+        } else {
+            Response::Err {
+                id: g.usize_in(0, 1 << 40) as u64,
+                error: format!("error #{} with \"quotes\" and \\slashes", g.usize_in(0, 99)),
+            }
+        };
+        let line = resp.to_line();
+        let back = Response::parse(&line)
+            .map_err(|e| format!("roundtrip parse failed on {line:?}: {e}"))?;
+        prop::ensure(back == resp, format!("roundtrip diverged: {resp:?} → {line:?} → {back:?}"))
+    });
+}
