@@ -248,6 +248,19 @@ pub struct RunConfig {
     /// bit-identity contract is stated against; `dot` trades those
     /// last-ulp guarantees for the norm-trick FMA hot path.
     pub distance: DistancePolicy,
+    /// Checkpoint directory (`--checkpoint`, DESIGN.md §14). `None`
+    /// disables checkpointing. The sink writes two-slot A/B rotated
+    /// `.pkc` snapshots so a crash mid-write never destroys the last
+    /// good one.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Checkpoint cadence in iterations (`--checkpoint-every`, default
+    /// 1 = every iteration). Ignored unless
+    /// [`checkpoint`](RunConfig::checkpoint) is set.
+    pub checkpoint_every: usize,
+    /// Resume directory (`--resume`): load the newest decodable `.pkc`
+    /// slot, validate its run fingerprint against this config and the
+    /// loaded data shape, and continue from the snapshot iteration.
+    pub resume: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -267,6 +280,9 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             kernel: KernelChoice::Auto,
             distance: DistancePolicy::Exact,
+            checkpoint: None,
+            checkpoint_every: 1,
+            resume: None,
         }
     }
 }
@@ -325,6 +341,9 @@ impl RunConfig {
         }
         if self.threads == 0 {
             return Err(Error::Config("threads must be >= 1".into()));
+        }
+        if self.checkpoint_every == 0 {
+            return Err(Error::Config("checkpoint-every must be >= 1".into()));
         }
         Ok(())
     }
@@ -441,6 +460,16 @@ mod tests {
         ] {
             assert!(e.supports_distance_policy(), "{e}");
         }
+    }
+
+    #[test]
+    fn checkpoint_defaults_off_and_cadence_validated() {
+        let c = RunConfig::default();
+        assert!(c.checkpoint.is_none());
+        assert!(c.resume.is_none());
+        assert_eq!(c.checkpoint_every, 1);
+        let bad = RunConfig { checkpoint_every: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

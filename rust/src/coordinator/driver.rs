@@ -48,6 +48,7 @@ mod tests {
             shift: 0.0,
             converged: true,
             history: vec![],
+            empty_events: vec![],
             pruning: None,
         }
     }

@@ -223,6 +223,7 @@ pub fn run_with(rt: &mut Runtime, ds: &Dataset, cfg: &RunConfig) -> Result<Engin
             shift,
             converged,
             history,
+            empty_events: Vec::new(),
             pruning: None,
         },
         setup_secs,

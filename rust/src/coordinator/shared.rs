@@ -224,6 +224,7 @@ pub fn run_with(
             shift,
             converged,
             history,
+            empty_events: Vec::new(),
             pruning: None,
         },
         setup_secs,

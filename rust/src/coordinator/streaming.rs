@@ -238,6 +238,7 @@ pub fn run_file_with(rt: &mut Runtime, path: &Path, cfg: &RunConfig) -> Result<E
             shift,
             converged,
             history,
+            empty_events: Vec::new(),
             pruning: None,
         },
         setup_secs,

@@ -13,12 +13,68 @@
 //! only when the OS itself fails to read.
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::util::crc32::{crc32, Crc32, CrcReader};
 
 const MAGIC: &[u8; 8] = b"PARAKMD1";
+
+// ---- artifact integrity plumbing ---------------------------------------
+
+/// Process-wide count of legacy (CRC-less) artifacts read. Surfaced in
+/// the run summary so operators know which files predate the integrity
+/// trailer and cannot detect bit rot.
+static ARTIFACT_WARNINGS: AtomicU64 = AtomicU64::new(0);
+
+/// Legacy-artifact warnings accumulated so far this process.
+pub fn artifact_warnings() -> u64 {
+    ARTIFACT_WARNINGS.load(Ordering::Relaxed)
+}
+
+fn note_legacy_artifact() {
+    ARTIFACT_WARNINGS.fetch_add(1, Ordering::Relaxed);
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomic file write: temp file in the same directory, fsync, rename.
+/// A crash at any point leaves either the old content or the new —
+/// never a torn mix. On failure the destination is untouched (a stale
+/// `<name>.tmp` may remain; the next attempt overwrites it).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    atomic_write_with(path, |f| {
+        f.write_all(bytes)?;
+        Ok(())
+    })
+}
+
+/// [`atomic_write`] over a caller-supplied fill function (streamed
+/// writers). The file is fsynced after `fill` returns and only then
+/// renamed over `path`.
+pub fn atomic_write_with(
+    path: &Path,
+    fill: impl FnOnce(&mut std::fs::File) -> Result<()>,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = tmp_path(path);
+    let mut f = std::fs::File::create(&tmp)?;
+    fill(&mut f)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
 
 /// Fixed size of the `.pkd` header: magic (8) + dim (4) + n (8) +
 /// has_truth (1).
@@ -103,8 +159,16 @@ fn data_err(path: &Path, msg: String) -> Error {
 /// truth labels (if promised) on [`BinWriter::finish`]. Memory is
 /// O(one chunk) — how `gen-data --chunk` synthesizes files larger than
 /// RAM. [`write_binary`] is the whole-dataset convenience over this.
+///
+/// Writes stream to a `<name>.tmp` sibling; [`BinWriter::finish`]
+/// appends a CRC32 trailer over every byte, fsyncs and renames — so a
+/// crash mid-generation never leaves a torn `.pkd` under the final
+/// name, and readers can detect any later corruption.
 pub struct BinWriter {
     w: BufWriter<std::fs::File>,
+    path: PathBuf,
+    tmp: PathBuf,
+    crc: Crc32,
     dim: usize,
     n: usize,
     has_truth: bool,
@@ -122,12 +186,31 @@ impl BinWriter {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut w = BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(MAGIC)?;
-        w.write_all(&(dim as u32).to_le_bytes())?;
-        w.write_all(&(n as u64).to_le_bytes())?;
-        w.write_all(&[has_truth as u8])?;
-        Ok(BinWriter { w, dim, n, has_truth, rows_written: 0, truth_written: 0 })
+        let tmp = tmp_path(path);
+        let w = BufWriter::new(std::fs::File::create(&tmp)?);
+        let mut bw = BinWriter {
+            w,
+            path: path.to_path_buf(),
+            tmp,
+            crc: Crc32::new(),
+            dim,
+            n,
+            has_truth,
+            rows_written: 0,
+            truth_written: 0,
+        };
+        bw.put(MAGIC)?;
+        bw.put(&(dim as u32).to_le_bytes())?;
+        bw.put(&(n as u64).to_le_bytes())?;
+        bw.put(&[has_truth as u8])?;
+        Ok(bw)
+    }
+
+    /// Write + hash (every payload byte feeds the CRC trailer).
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.crc.update(bytes);
+        Ok(())
     }
 
     /// Append a row-major block of points (`rows.len() % dim == 0`).
@@ -148,7 +231,7 @@ impl BinWriter {
             )));
         }
         for v in rows {
-            self.w.write_all(&v.to_le_bytes())?;
+            self.put(&v.to_le_bytes())?;
         }
         self.rows_written += nrows;
         Ok(())
@@ -176,14 +259,16 @@ impl BinWriter {
             )));
         }
         for t in labels {
-            self.w.write_all(&t.to_le_bytes())?;
+            self.put(&t.to_le_bytes())?;
         }
         self.truth_written += labels.len();
         Ok(())
     }
 
-    /// Write any remaining truth labels and flush. Errors if the row
-    /// count or label count does not match the header.
+    /// Write any remaining truth labels, append the CRC32 trailer,
+    /// fsync and atomically rename into place. Errors if the row count
+    /// or label count does not match the header (the temp file is left
+    /// behind; the destination is never touched).
     pub fn finish(mut self, truth: Option<&[i32]>) -> Result<()> {
         if self.rows_written != self.n {
             return Err(Error::Shape(format!(
@@ -200,7 +285,11 @@ impl BinWriter {
                 self.truth_written, self.n
             )));
         }
+        let trailer = self.crc.finish().to_le_bytes();
+        self.w.write_all(&trailer)?;
         self.w.flush()?;
+        self.w.get_ref().sync_all()?;
+        std::fs::rename(&self.tmp, &self.path)?;
         Ok(())
     }
 }
@@ -214,9 +303,26 @@ pub fn write_binary(path: &Path, ds: &Dataset) -> Result<()> {
 
 /// Read the binary format into memory. For files that must not be
 /// loaded whole, stream via [`crate::data::source::FileSource`] instead.
+///
+/// Files written since the integrity retrofit carry a 4-byte CRC32
+/// trailer which is verified incrementally (the hashing rides the
+/// existing buffered read — no extra allocation). Legacy trailer-less
+/// files still load, counted in [`artifact_warnings`]; any other
+/// trailing length is a typed corruption error.
 pub fn read_binary(path: &Path) -> Result<Dataset> {
     let header = probe_binary(path)?;
-    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let need = BIN_HEADER_BYTES
+        + (header.n as u64) * (header.dim as u64) * 4
+        + if header.has_truth { header.n as u64 * 4 } else { 0 };
+    // probe guaranteed file_len >= need
+    let extra = std::fs::metadata(path)?.len().saturating_sub(need);
+    if extra != 0 && extra != 4 {
+        return Err(data_err(
+            path,
+            format!("{extra} unexpected trailing bytes after the declared content"),
+        ));
+    }
+    let mut r = CrcReader::new(BufReader::new(std::fs::File::open(path)?));
     let mut skip = [0u8; BIN_HEADER_BYTES as usize];
     r.read_exact(&mut skip)?;
 
@@ -246,6 +352,21 @@ pub fn read_binary(path: &Path) -> Result<Dataset> {
             .collect();
         ds.truth = Some(truth);
     }
+    if extra == 4 {
+        let computed = r.digest();
+        let mut trail = [0u8; 4];
+        r.read_exact(&mut trail)
+            .map_err(|e| data_err(path, format!("truncated crc trailer: {e}")))?;
+        let stored = u32::from_le_bytes(trail);
+        if stored != computed {
+            return Err(data_err(
+                path,
+                format!("crc mismatch: trailer {stored:#010x}, content {computed:#010x} — corrupt"),
+            ));
+        }
+    } else {
+        note_legacy_artifact();
+    }
     Ok(ds)
 }
 
@@ -273,9 +394,10 @@ pub struct Model {
     pub centroids: Vec<f32>,
 }
 
-/// Write a `.pkm` model file: magic, k, dim, seed, engine string,
-/// iterations, sse, then the raw centroid bits (little-endian f32).
-pub fn write_model(path: &Path, model: &Model) -> Result<()> {
+/// Encode a model to `.pkm` bytes: magic, k, dim, seed, engine string,
+/// iterations, sse, the raw centroid bits (little-endian f32), then a
+/// CRC32 trailer over everything before it.
+pub fn encode_model(model: &Model) -> Result<Vec<u8>> {
     if model.k == 0 || model.dim == 0 {
         return Err(Error::Shape(format!("model: k {} × dim {} invalid", model.k, model.dim)));
     }
@@ -287,84 +409,159 @@ pub fn write_model(path: &Path, model: &Model) -> Result<()> {
             model.dim
         )));
     }
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(MODEL_MAGIC)?;
-    w.write_all(&(model.k as u32).to_le_bytes())?;
-    w.write_all(&(model.dim as u32).to_le_bytes())?;
-    w.write_all(&model.seed.to_le_bytes())?;
     let engine = model.engine.as_bytes();
-    w.write_all(&(engine.len() as u32).to_le_bytes())?;
-    w.write_all(engine)?;
-    w.write_all(&(model.iterations as u64).to_le_bytes())?;
-    w.write_all(&model.sse.to_bits().to_le_bytes())?;
+    let mut out = Vec::with_capacity(48 + engine.len() + model.centroids.len() * 4 + 4);
+    out.extend_from_slice(MODEL_MAGIC);
+    out.extend_from_slice(&(model.k as u32).to_le_bytes());
+    out.extend_from_slice(&(model.dim as u32).to_le_bytes());
+    out.extend_from_slice(&model.seed.to_le_bytes());
+    out.extend_from_slice(&(engine.len() as u32).to_le_bytes());
+    out.extend_from_slice(engine);
+    out.extend_from_slice(&(model.iterations as u64).to_le_bytes());
+    out.extend_from_slice(&model.sse.to_bits().to_le_bytes());
     for v in &model.centroids {
-        w.write_all(&v.to_le_bytes())?;
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    w.flush()?;
-    Ok(())
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    Ok(out)
+}
+
+/// Write a `.pkm` model file atomically (temp file + fsync + rename)
+/// with the CRC32 trailer of [`encode_model`].
+pub fn write_model(path: &Path, model: &Model) -> Result<()> {
+    atomic_write(path, &encode_model(model)?)
+}
+
+/// Bounds-checked little-endian cursor over untrusted bytes — the
+/// shared primitive of [`decode_model`] and [`decode_ckpt`]. Every
+/// read is guarded, so forged lengths become typed errors before any
+/// allocation. `mkerr` picks the error variant (`Error::Data` for
+/// `.pkm`, `Error::Ckpt` for `.pkc`).
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+    mkerr: fn(String) -> Error,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8], mkerr: fn(String) -> Error) -> Cur<'a> {
+        Cur { b, pos: 0, mkerr }
+    }
+
+    fn err(&self, m: String) -> Error {
+        (self.mkerr)(m)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(self.err(format!(
+                "truncated: {what} needs {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// A `[len u32]` prefix for elements of `elem_bytes`, validated
+    /// against the remaining input *before* any allocation.
+    fn len_prefix(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let len = self.u32(what)? as usize;
+        match len.checked_mul(elem_bytes) {
+            Some(need) if need <= self.remaining() => Ok(len),
+            _ => Err(self.err(format!(
+                "forged length: {what} declares {len} elements, only {} bytes left",
+                self.remaining()
+            ))),
+        }
+    }
+}
+
+/// Decode `.pkm` bytes. Total over arbitrary input: corrupt, truncated
+/// or trailing content is a typed [`Error::Data`], never a panic or an
+/// attacker-sized allocation. Legacy trailer-less encodings still
+/// decode, counted in [`artifact_warnings`].
+pub fn decode_model(bytes: &[u8]) -> Result<Model> {
+    let mut c = Cur::new(bytes, Error::Data);
+    if c.take(8, "model magic")? != MODEL_MAGIC {
+        return Err(Error::Data("not a parakmeans model (bad magic)".into()));
+    }
+    let k = c.u32("k")? as usize;
+    let dim = c.u32("dim")? as usize;
+    if k == 0 || dim == 0 || k.checked_mul(dim).and_then(|v| v.checked_mul(4)).is_none() {
+        return Err(Error::Data(format!("implausible model header: k={k} dim={dim}")));
+    }
+    // the declared centroids must actually be present — same guard as
+    // probe_binary, so a lying header is a typed error up front, never
+    // an attacker-sized allocation
+    let fixed = 8u128 + 4 + 4 + 8 + 4 + 8 + 8; // magic..engine_len + iters + sse
+    if (bytes.len() as u128) < fixed + k as u128 * dim as u128 * 4 {
+        return Err(Error::Data(format!(
+            "truncated or corrupt: file is {} B, header declares k={k} dim={dim}",
+            bytes.len()
+        )));
+    }
+    let seed = c.u64("seed")?;
+    let engine_len = c.u32("engine length")? as usize;
+    if engine_len > 256 {
+        return Err(Error::Data(format!("implausible engine-name length {engine_len}")));
+    }
+    let engine = String::from_utf8(c.take(engine_len, "engine name")?.to_vec())
+        .map_err(|_| Error::Data("engine name is not valid utf-8".into()))?;
+    let iterations = c.u64("iterations")? as usize;
+    let sse = f64::from_bits(c.u64("sse")?);
+
+    let payload = c
+        .take(k * dim * 4, "centroids")
+        .map_err(|_| Error::Data(format!("truncated centroids: header declares {k} × {dim}D")))?;
+    let centroids: Vec<f32> =
+        payload.chunks_exact(4).map(|ch| f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]])).collect();
+
+    match c.remaining() {
+        0 => note_legacy_artifact(),
+        4 => {
+            let end = c.pos;
+            let computed = crc32(&bytes[..end]);
+            let stored = c.u32("crc trailer")?;
+            if stored != computed {
+                return Err(Error::Data(format!(
+                    "crc mismatch: trailer {stored:#010x}, content {computed:#010x} — corrupt"
+                )));
+            }
+        }
+        extra => {
+            return Err(Error::Data(format!("{extra} trailing bytes after the centroid payload")));
+        }
+    }
+    Ok(Model { k, dim, seed, engine, iterations, sse, centroids })
 }
 
 /// Read a `.pkm` model file; corrupt or truncated content is a typed
 /// [`Error::Data`] naming the file.
 pub fn read_model(path: &Path) -> Result<Model> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
-    let short = |e: std::io::Error| data_err(path, format!("truncated model file: {e}"));
-
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic).map_err(short)?;
-    if &magic != MODEL_MAGIC {
-        return Err(data_err(path, "not a parakmeans model (bad magic)".into()));
-    }
-    let mut b4 = [0u8; 4];
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b4).map_err(short)?;
-    let k = u32::from_le_bytes(b4) as usize;
-    r.read_exact(&mut b4).map_err(short)?;
-    let dim = u32::from_le_bytes(b4) as usize;
-    if k == 0 || dim == 0 || k.checked_mul(dim).and_then(|v| v.checked_mul(4)).is_none() {
-        return Err(data_err(path, format!("implausible model header: k={k} dim={dim}")));
-    }
-    // the declared centroids must actually be on disk — same guard as
-    // probe_binary, so a lying header is a typed error up front, never
-    // an attacker-sized allocation
-    let file_len = std::fs::metadata(path)?.len() as u128;
-    let fixed = 8u128 + 4 + 4 + 8 + 4 + 8 + 8; // magic..engine_len + iters + sse
-    if file_len < fixed + k as u128 * dim as u128 * 4 {
-        return Err(data_err(
-            path,
-            format!("truncated or corrupt: file is {file_len} B, header declares k={k} dim={dim}"),
-        ));
-    }
-    r.read_exact(&mut b8).map_err(short)?;
-    let seed = u64::from_le_bytes(b8);
-    r.read_exact(&mut b4).map_err(short)?;
-    let engine_len = u32::from_le_bytes(b4) as usize;
-    if engine_len > 256 {
-        return Err(data_err(path, format!("implausible engine-name length {engine_len}")));
-    }
-    let mut engine_buf = vec![0u8; engine_len];
-    r.read_exact(&mut engine_buf).map_err(short)?;
-    let engine = String::from_utf8(engine_buf)
-        .map_err(|_| data_err(path, "engine name is not valid utf-8".into()))?;
-    r.read_exact(&mut b8).map_err(short)?;
-    let iterations = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8).map_err(short)?;
-    let sse = f64::from_bits(u64::from_le_bytes(b8));
-
-    let mut payload = vec![0u8; k * dim * 4];
-    r.read_exact(&mut payload).map_err(|e| {
-        data_err(path, format!("truncated centroids: header declares {k} × {dim}D ({e})"))
-    })?;
-    let centroids: Vec<f32> =
-        payload.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
-    let mut extra = [0u8; 1];
-    if r.read(&mut extra)? != 0 {
-        return Err(data_err(path, "trailing bytes after the centroid payload".into()));
-    }
-    Ok(Model { k, dim, seed, engine, iterations, sse, centroids })
+    let bytes = std::fs::read(path)?;
+    decode_model(&bytes).map_err(|e| match e {
+        Error::Data(m) => data_err(path, m),
+        other => other,
+    })
 }
 
 /// CSV header line for `dim` columns (`x0,x1,...`) — shared with the
@@ -378,26 +575,32 @@ pub fn csv_row(point: &[f32]) -> String {
     point.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
 }
 
-/// Write CSV (no truth labels; header `x0,x1,...`).
+/// Write CSV (no truth labels; header `x0,x1,...`). Atomic like every
+/// other artifact writer: temp file + fsync + rename.
 pub fn write_csv(path: &Path, ds: &Dataset) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    writeln!(w, "{}", csv_header(ds.dim()))?;
-    for i in 0..ds.len() {
-        writeln!(w, "{}", csv_row(ds.point(i)))?;
-    }
-    Ok(())
+    atomic_write_with(path, |f| {
+        let mut w = BufWriter::new(&mut *f);
+        writeln!(w, "{}", csv_header(ds.dim()))?;
+        for i in 0..ds.len() {
+            writeln!(w, "{}", csv_row(ds.point(i)))?;
+        }
+        w.flush()?;
+        Ok(())
+    })
 }
 
 /// Read CSV produced by [`write_csv`] (or any numeric CSV with header).
 ///
 /// Rejects ragged rows (cell count ≠ header width) and non-numeric or
 /// non-finite cells with [`Error::Data`] naming the offending row — a
-/// dataset with silent `NaN` points would poison every distance.
+/// dataset with silent `NaN` points would poison every distance. The
+/// cell-level strictness lives in
+/// [`read_table_strict`](crate::util::csv::read_table_strict).
 pub fn read_csv(path: &Path) -> Result<Dataset> {
-    let (header, rows) = crate::util::csv::read_table(path)?;
+    let (header, rows) = crate::util::csv::read_table_strict(path).map_err(|e| match e {
+        Error::Data(m) => data_err(path, m),
+        other => other,
+    })?;
     let dim = header.len();
     if dim == 0 {
         return Err(data_err(path, "csv has no columns".into()));
@@ -424,6 +627,280 @@ pub fn read_csv(path: &Path) -> Result<Dataset> {
         }
     }
     Dataset::from_vec(data, dim)
+}
+
+// ---- checkpoint codec (.pkc) -------------------------------------------
+
+use crate::kmeans::ckpt::{Bounds, CkptState, Fingerprint};
+
+const CKPT_MAGIC: &[u8; 8] = b"PARAKMC1";
+const CKPT_VERSION: u32 = 1;
+
+fn put_len(out: &mut Vec<u8>, len: usize) {
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_len(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append one CRC-framed section: `[len u32][payload][crc32 u32]`.
+/// Each section carries its own checksum so a reader can tell *which*
+/// part of a snapshot is damaged and a bit flip anywhere is caught.
+fn put_section(out: &mut Vec<u8>, payload: &[u8]) {
+    put_len(out, payload.len());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+/// Encode a checkpoint snapshot to `.pkc` bytes (DESIGN.md §14):
+/// magic, format version, then three CRC-framed sections —
+/// fingerprint (run identity + FNV hash), state (iteration, centroid
+/// bits, convergence history) and bounds (empty payload for dense
+/// engines). Every float is stored as its raw bits, so round-trips
+/// are bit-exact including NaN history entries.
+pub fn encode_ckpt(state: &CkptState) -> Vec<u8> {
+    let fp = &state.fingerprint;
+    let mut f = Vec::new();
+    put_str(&mut f, &fp.engine);
+    f.extend_from_slice(&fp.seed.to_le_bytes());
+    f.extend_from_slice(&fp.k.to_le_bytes());
+    put_str(&mut f, &fp.distance);
+    put_str(&mut f, &fp.sched);
+    f.extend_from_slice(&fp.n.to_le_bytes());
+    f.extend_from_slice(&fp.d.to_le_bytes());
+    f.extend_from_slice(&fp.hash().to_le_bytes());
+
+    let mut s = Vec::new();
+    s.extend_from_slice(&state.iteration.to_le_bytes());
+    s.push(state.converged as u8);
+    put_len(&mut s, state.centroids.len());
+    for v in &state.centroids {
+        s.extend_from_slice(&v.to_le_bytes());
+    }
+    put_len(&mut s, state.prev_centroids.len());
+    for v in &state.prev_centroids {
+        s.extend_from_slice(&v.to_le_bytes());
+    }
+    put_len(&mut s, state.history.len());
+    for &(sse, shift) in &state.history {
+        s.extend_from_slice(&sse.to_bits().to_le_bytes());
+        s.extend_from_slice(&shift.to_bits().to_le_bytes());
+    }
+    put_len(&mut s, state.empty_events.len());
+    for &e in &state.empty_events {
+        s.extend_from_slice(&e.to_le_bytes());
+    }
+
+    let mut b = Vec::new();
+    if let Some(bounds) = &state.bounds {
+        put_len(&mut b, bounds.assign.len());
+        for v in &bounds.assign {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        put_len(&mut b, bounds.upper.len());
+        for v in &bounds.upper {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        put_len(&mut b, bounds.lower.len());
+        for v in &bounds.lower {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        put_len(&mut b, bounds.sums.len());
+        for v in &bounds.sums {
+            b.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        put_len(&mut b, bounds.counts.len());
+        for v in &bounds.counts {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&bounds.prune_seed_computed.to_le_bytes());
+        put_len(&mut b, bounds.prune_per_iter.len());
+        for &(c, sk) in &bounds.prune_per_iter {
+            b.extend_from_slice(&c.to_le_bytes());
+            b.extend_from_slice(&sk.to_le_bytes());
+        }
+    }
+
+    let mut out =
+        Vec::with_capacity(12 + f.len() + s.len() + b.len() + 24);
+    out.extend_from_slice(CKPT_MAGIC);
+    out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    put_section(&mut out, &f);
+    put_section(&mut out, &s);
+    put_section(&mut out, &b);
+    out
+}
+
+/// Pull one `[len][payload][crc]` section, verifying the checksum.
+fn take_section<'a>(c: &mut Cur<'a>, what: &str) -> Result<&'a [u8]> {
+    let len = c.len_prefix(1, what)?;
+    let payload = c.take(len, what)?;
+    let stored = c.u32(what)?;
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(Error::Ckpt(format!(
+            "crc mismatch in {what}: trailer {stored:#010x}, content {computed:#010x} — corrupt"
+        )));
+    }
+    Ok(payload)
+}
+
+fn ckpt_str(c: &mut Cur<'_>, what: &str) -> Result<String> {
+    let len = c.len_prefix(1, what)?;
+    if len > 256 {
+        return Err(c.err(format!("implausible {what} length {len}")));
+    }
+    String::from_utf8(c.take(len, what)?.to_vec())
+        .map_err(|_| Error::Ckpt(format!("{what} is not valid utf-8")))
+}
+
+fn ckpt_f32s(c: &mut Cur<'_>, what: &str) -> Result<Vec<f32>> {
+    let len = c.len_prefix(4, what)?;
+    let raw = c.take(len * 4, what)?;
+    Ok(raw.chunks_exact(4).map(|ch| f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]])).collect())
+}
+
+fn ckpt_i32s(c: &mut Cur<'_>, what: &str) -> Result<Vec<i32>> {
+    let len = c.len_prefix(4, what)?;
+    let raw = c.take(len * 4, what)?;
+    Ok(raw.chunks_exact(4).map(|ch| i32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]])).collect())
+}
+
+fn ckpt_u64s(c: &mut Cur<'_>, what: &str) -> Result<Vec<u64>> {
+    let len = c.len_prefix(8, what)?;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(c.u64(what)?);
+    }
+    Ok(out)
+}
+
+fn ckpt_f64s(c: &mut Cur<'_>, what: &str) -> Result<Vec<f64>> {
+    let len = c.len_prefix(8, what)?;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(f64::from_bits(c.u64(what)?));
+    }
+    Ok(out)
+}
+
+fn ckpt_u64_pairs(c: &mut Cur<'_>, what: &str) -> Result<Vec<(u64, u64)>> {
+    let len = c.len_prefix(16, what)?;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push((c.u64(what)?, c.u64(what)?));
+    }
+    Ok(out)
+}
+
+fn decode_ckpt_fingerprint(payload: &[u8]) -> Result<Fingerprint> {
+    let mut c = Cur::new(payload, Error::Ckpt);
+    let engine = ckpt_str(&mut c, "fingerprint engine")?;
+    let seed = c.u64("fingerprint seed")?;
+    let k = c.u32("fingerprint k")?;
+    let distance = ckpt_str(&mut c, "fingerprint distance")?;
+    let sched = ckpt_str(&mut c, "fingerprint sched")?;
+    let n = c.u64("fingerprint n")?;
+    let d = c.u32("fingerprint d")?;
+    let stored_hash = c.u64("fingerprint hash")?;
+    if c.remaining() != 0 {
+        return Err(Error::Ckpt(format!(
+            "{} trailing bytes in the fingerprint section",
+            c.remaining()
+        )));
+    }
+    let fp = Fingerprint { engine, seed, k, distance, sched, n, d };
+    if fp.hash() != stored_hash {
+        return Err(Error::Ckpt(
+            "fingerprint hash does not match its fields — forged or corrupt".into(),
+        ));
+    }
+    Ok(fp)
+}
+
+/// Decode `.pkc` bytes. Total over arbitrary input: truncation at any
+/// byte, bit flips, forged section lengths and wrong versions are all
+/// typed [`Error::Ckpt`] — never a panic or an attacker-sized
+/// allocation (fuzz-pinned in `tests/fuzz_artifacts.rs`).
+pub fn decode_ckpt(bytes: &[u8]) -> Result<CkptState> {
+    let mut c = Cur::new(bytes, Error::Ckpt);
+    if c.take(8, "checkpoint magic")? != CKPT_MAGIC {
+        return Err(Error::Ckpt("not a parakmeans checkpoint (bad magic)".into()));
+    }
+    let version = c.u32("format version")?;
+    if version != CKPT_VERSION {
+        return Err(Error::Ckpt(format!(
+            "unsupported checkpoint version {version} (this build reads {CKPT_VERSION})"
+        )));
+    }
+    let fp_payload = take_section(&mut c, "fingerprint section")?;
+    let st_payload = take_section(&mut c, "state section")?;
+    let bd_payload = take_section(&mut c, "bounds section")?;
+    if c.remaining() != 0 {
+        return Err(Error::Ckpt(format!(
+            "{} trailing bytes after the bounds section",
+            c.remaining()
+        )));
+    }
+
+    let fingerprint = decode_ckpt_fingerprint(fp_payload)?;
+
+    let mut s = Cur::new(st_payload, Error::Ckpt);
+    let iteration = s.u64("state iteration")?;
+    let converged = match s.u8("state converged flag")? {
+        0 => false,
+        1 => true,
+        v => return Err(Error::Ckpt(format!("state converged flag is {v}, not 0/1"))),
+    };
+    let centroids = ckpt_f32s(&mut s, "state centroids")?;
+    let prev_centroids = ckpt_f32s(&mut s, "state prev_centroids")?;
+    let hist_len = s.len_prefix(16, "state history")?;
+    let mut history = Vec::with_capacity(hist_len);
+    for _ in 0..hist_len {
+        let sse = f64::from_bits(s.u64("state history sse")?);
+        let shift = f64::from_bits(s.u64("state history shift")?);
+        history.push((sse, shift));
+    }
+    let empty_events = ckpt_u64s(&mut s, "state empty_events")?;
+    if s.remaining() != 0 {
+        return Err(Error::Ckpt(format!(
+            "{} trailing bytes in the state section",
+            s.remaining()
+        )));
+    }
+
+    let bounds = if bd_payload.is_empty() {
+        None
+    } else {
+        let mut b = Cur::new(bd_payload, Error::Ckpt);
+        let assign = ckpt_i32s(&mut b, "bounds assign")?;
+        let upper = ckpt_f32s(&mut b, "bounds upper")?;
+        let lower = ckpt_f32s(&mut b, "bounds lower")?;
+        let sums = ckpt_f64s(&mut b, "bounds sums")?;
+        let counts = ckpt_u64s(&mut b, "bounds counts")?;
+        let prune_seed_computed = b.u64("bounds prune seed")?;
+        let prune_per_iter = ckpt_u64_pairs(&mut b, "bounds prune rows")?;
+        if b.remaining() != 0 {
+            return Err(Error::Ckpt(format!(
+                "{} trailing bytes in the bounds section",
+                b.remaining()
+            )));
+        }
+        Some(Bounds { assign, upper, lower, sums, counts, prune_seed_computed, prune_per_iter })
+    };
+
+    Ok(CkptState {
+        fingerprint,
+        iteration,
+        converged,
+        centroids,
+        prev_centroids,
+        history,
+        empty_events,
+        bounds,
+    })
 }
 
 #[cfg(test)]
@@ -735,5 +1212,202 @@ mod tests {
         let mut w = BinWriter::create(&p, 2, 1, false).unwrap();
         w.write_rows(&[1.0, 2.0]).unwrap();
         assert!(w.finish(Some(&[0])).is_err()); // unpromised truth
+    }
+
+    #[test]
+    fn atomic_write_replaces_via_rename() {
+        let p = tmp("atomic.txt");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        // no temp residue after a clean write
+        assert!(!tmp_path(&p).exists());
+    }
+
+    #[test]
+    fn atomic_write_failure_leaves_destination_untouched() {
+        let p = tmp("atomic_fail.txt");
+        atomic_write(&p, b"good").unwrap();
+        // injected mid-fill failure: destination keeps the old bytes,
+        // only the temp sibling may be left behind
+        let err = atomic_write_with(&p, |f| {
+            f.write_all(b"half-written")?;
+            Err(Error::Data("injected crash".into()))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("injected crash"), "{err}");
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        assert!(tmp_path(&p).exists(), "failed write leaves its temp file for inspection");
+        // the next write overwrites the stale temp and succeeds
+        atomic_write(&p, b"recovered").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"recovered");
+        assert!(!tmp_path(&p).exists());
+    }
+
+    #[test]
+    fn bin_writer_is_atomic_until_finish() {
+        let p = tmp("atomic_bin.pkd");
+        let _ = std::fs::remove_file(&p);
+        let mut w = BinWriter::create(&p, 2, 2, false).unwrap();
+        w.write_rows(&[1.0, 2.0]).unwrap();
+        // mid-stream: final name absent, temp present
+        assert!(!p.exists());
+        assert!(tmp_path(&p).exists());
+        w.write_rows(&[3.0, 4.0]).unwrap();
+        w.finish(None).unwrap();
+        assert!(p.exists());
+        assert!(!tmp_path(&p).exists());
+    }
+
+    #[test]
+    fn legacy_crcless_pkd_loads_with_warning() {
+        let ds = MixtureSpec::paper_2d(4).generate(32, 3);
+        let p = tmp("legacy.pkd");
+        write_binary(&p, &ds).unwrap();
+        // fabricate a pre-retrofit file by stripping the trailer
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let before = artifact_warnings();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(ds, back);
+        assert!(artifact_warnings() > before, "legacy read must be counted");
+    }
+
+    #[test]
+    fn corrupt_pkd_payload_fails_crc_typed() {
+        let ds = MixtureSpec::paper_2d(4).generate(32, 3);
+        let p = tmp("bitrot.pkd");
+        write_binary(&p, &ds).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip one payload bit — sizes all still line up, only the
+        // checksum can catch it
+        let mid = BIN_HEADER_BYTES as usize + 17;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err:?}");
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+    }
+
+    #[test]
+    fn legacy_crcless_pkm_loads_with_warning_and_bitrot_is_caught() {
+        let p = tmp("legacy.pkm");
+        write_model(&p, &sample_model()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let before = artifact_warnings();
+        assert_eq!(read_model(&p).unwrap(), sample_model());
+        assert!(artifact_warnings() > before);
+
+        let mut rot = bytes.clone();
+        let last = rot.len() - 6; // inside the centroid payload
+        rot[last] ^= 0x01;
+        std::fs::write(&p, &rot).unwrap();
+        let err = read_model(&p).unwrap_err();
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+    }
+
+    fn sample_ckpt(bounds: bool) -> CkptState {
+        CkptState {
+            fingerprint: Fingerprint {
+                engine: "elkan".into(),
+                seed: 7,
+                k: 2,
+                distance: "exact".into(),
+                sched: "static".into(),
+                n: 3,
+                d: 2,
+            },
+            iteration: 2,
+            converged: false,
+            centroids: vec![-0.0, 1.5, f32::MIN_POSITIVE, 2.0],
+            prev_centroids: vec![0.0, 1.0, 2.0, 3.0],
+            // NaN sse entries must round-trip bit-exact
+            history: vec![(f64::NAN, 0.5), (12.25, 1e-9)],
+            empty_events: vec![0, 1],
+            bounds: bounds.then(|| Bounds {
+                assign: vec![0, 1, 1],
+                upper: vec![0.1, 0.2, 0.3],
+                lower: vec![1.0; 6],
+                sums: vec![0.5f64; 4],
+                counts: vec![1, 2],
+                prune_seed_computed: 6,
+                prune_per_iter: vec![(4, 2), (3, 3)],
+            }),
+        }
+    }
+
+    fn bits_eq(a: &CkptState, b: &CkptState) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.iteration, b.iteration);
+        assert_eq!(a.converged, b.converged);
+        let f32bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(f32bits(&a.centroids), f32bits(&b.centroids));
+        assert_eq!(f32bits(&a.prev_centroids), f32bits(&b.prev_centroids));
+        let histbits = |h: &[(f64, f64)]| {
+            h.iter().map(|&(s, e)| (s.to_bits(), e.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(histbits(&a.history), histbits(&b.history));
+        assert_eq!(a.empty_events, b.empty_events);
+        match (&a.bounds, &b.bounds) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.assign, y.assign);
+                assert_eq!(f32bits(&x.upper), f32bits(&y.upper));
+                assert_eq!(f32bits(&x.lower), f32bits(&y.lower));
+                let f64bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(f64bits(&x.sums), f64bits(&y.sums));
+                assert_eq!(x.counts, y.counts);
+                assert_eq!(x.prune_seed_computed, y.prune_seed_computed);
+                assert_eq!(x.prune_per_iter, y.prune_per_iter);
+            }
+            _ => panic!("bounds presence differs"),
+        }
+    }
+
+    #[test]
+    fn ckpt_roundtrip_is_bit_exact() {
+        for bounds in [false, true] {
+            let s = sample_ckpt(bounds);
+            let back = decode_ckpt(&encode_ckpt(&s)).unwrap();
+            bits_eq(&s, &back);
+        }
+    }
+
+    #[test]
+    fn ckpt_corruption_is_typed() {
+        let bytes = encode_ckpt(&sample_ckpt(true));
+
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = decode_ckpt(&bad).unwrap_err();
+        assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // wrong version
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode_ckpt(&bad).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // a flipped bit anywhere in a section payload fails its CRC
+        let mut bad = bytes.clone();
+        let mid = bytes.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(matches!(decode_ckpt(&bad).unwrap_err(), Error::Ckpt(_)));
+
+        // truncation at any prefix is typed, never a panic
+        for cut in [0, 7, 11, 12, 20, bytes.len() - 1] {
+            assert!(matches!(decode_ckpt(&bytes[..cut]).unwrap_err(), Error::Ckpt(_)));
+        }
+
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        let err = decode_ckpt(&long).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 }

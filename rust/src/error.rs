@@ -73,6 +73,12 @@ pub enum Error {
     /// connection loss, frame corruption, shape mismatch, protocol
     /// violation — DESIGN.md §10).
     Cluster(ClusterError),
+
+    /// Checkpoint/resume failure (DESIGN.md §14): a corrupt or
+    /// truncated `.pkc` snapshot, a CRC mismatch, or a fingerprint
+    /// that does not match the resuming run's configuration (wrong
+    /// seed/engine/data shape must fail loudly, never resume wrong).
+    Ckpt(String),
 }
 
 impl std::fmt::Display for Error {
@@ -89,6 +95,7 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Worker(m) => write!(f, "worker failure: {m}"),
             Error::Cluster(e) => write!(f, "cluster: {e}"),
+            Error::Ckpt(m) => write!(f, "checkpoint: {m}"),
         }
     }
 }
@@ -140,6 +147,7 @@ mod tests {
             Error::Cluster(ClusterError::Protocol("order".into())).to_string(),
             "cluster: protocol: order"
         );
+        assert_eq!(Error::Ckpt("stale".into()).to_string(), "checkpoint: stale");
     }
 
     #[test]

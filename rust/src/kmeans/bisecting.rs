@@ -25,6 +25,10 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
     // cluster id -> member indices (rebuilt as clusters split)
     let mut members: Vec<Vec<usize>> = vec![(0..n).collect()];
     let mut sse_of: Vec<f64> = vec![cluster_sse(ds, &members[0])];
+    // a cluster whose 2-means split degenerated (one side empty — e.g.
+    // all members identical) can never split; without this mark the
+    // `len() >= 2` filter would re-pick it forever
+    let mut unsplittable: Vec<bool> = vec![false];
     let mut total_iterations = 0usize;
 
     while members.len() < k_target {
@@ -32,12 +36,12 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         let (worst, _) = sse_of
             .iter()
             .enumerate()
-            .filter(|(c, _)| members[*c].len() >= 2)
+            .filter(|(c, _)| members[*c].len() >= 2 && !unsplittable[*c])
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(c, s)| (c, *s))
             .unwrap_or((usize::MAX, 0.0));
         if worst == usize::MAX {
-            break; // nothing splittable (all singletons)
+            break; // nothing splittable (all singletons or degenerate)
         }
 
         // subset dataset for the split
@@ -65,10 +69,10 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         total_iterations += split.iterations;
 
         // if the split degenerated (one side empty), stop splitting this
-        // cluster by marking it unsplittable via a tiny SSE
+        // cluster
         let sizes = split.cluster_sizes();
         if sizes[0] == 0 || sizes[1] == 0 {
-            sse_of[worst] = 0.0;
+            unsplittable[worst] = true;
             continue;
         }
 
@@ -91,6 +95,7 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         members.push(moved);
         sse_of[worst] = cluster_sse(ds, &members[worst]);
         sse_of.push(cluster_sse(ds, &members[new_id]));
+        unsplittable.push(false);
     }
 
     // final centroids from members
@@ -119,6 +124,7 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig, trials: usize) -> KmeansResult {
         shift: 0.0,
         converged: true,
         history: vec![(sse, 0.0)],
+        empty_events: Vec::new(),
         pruning: None,
     }
 }

@@ -1,0 +1,615 @@
+//! Durable checkpoint/resume with bit-identical recovery (DESIGN.md §14).
+//!
+//! A long run (oocore streaming 100× past RAM, a multi-hour distributed
+//! job) must be killable at any instant and resumed to the *same bits*
+//! the uninterrupted run would have produced. The determinism contracts
+//! that already make serial ≡ threads ≡ oocore ≡ dist (ascending-order
+//! f64 folds, [`crate::kmeans::step::merge_ordered`]) make this
+//! provable: every iteration is a pure function of the centroids it
+//! starts from, so a snapshot of leader state at an iteration boundary
+//! is a complete resume point.
+//!
+//! Mechanics:
+//! - snapshots are `.pkc` files (codec in [`crate::data::io`]): magic,
+//!   version, a CRC32-protected fingerprint section (engine/seed/k/
+//!   distance/sched/n/d + FNV hash), a state section (iteration,
+//!   centroid bits, convergence history) and an optional bounds section
+//!   (Elkan/Hamerly triangle-inequality state);
+//! - writes are atomic (temp file + fsync + rename) into a two-slot
+//!   A/B rotation — a crash *during* checkpointing can only tear the
+//!   slot being overwritten, never the previous good snapshot;
+//! - [`load`] picks the newest slot that decodes and CRC-verifies;
+//!   [`load_validated`] additionally requires the fingerprint to match
+//!   the resuming run ([`crate::error::Error::Ckpt`] on mismatch —
+//!   wrong seed/engine/data shape must fail loudly, never resume wrong).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::data::io as dio;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::step::{self, DistanceMode, PartialStats};
+use crate::kmeans::{KmeansConfig, KmeansResult};
+use crate::linalg::kernel::{self, DistancePolicy};
+
+/// Slot file names of the A/B rotation inside a checkpoint directory.
+pub const SLOT_A: &str = "ckpt_a.pkc";
+pub const SLOT_B: &str = "ckpt_b.pkc";
+
+/// Identity of a run for resume validation: everything that changes
+/// the bits an engine produces. Two runs with equal fingerprints and
+/// equal iteration state are bit-interchangeable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Engine family (`"serial"`, `"threads"`, `"elkan"`, ...).
+    pub engine: String,
+    pub seed: u64,
+    pub k: u32,
+    /// Distance policy string (`"exact"` / `"dot"`).
+    pub distance: String,
+    /// Schedule string (`"static"` / `"steal"` / `"elastic"`) — the
+    /// fold shape, which changes bits for threads/dist engines.
+    pub sched: String,
+    /// Dataset rows.
+    pub n: u64,
+    /// Dataset dimensionality.
+    pub d: u32,
+}
+
+impl Fingerprint {
+    /// FNV-1a over the serialized fields — stored in the `.pkc`
+    /// fingerprint section as a cheap cross-check on top of the CRC.
+    pub fn hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            // field separator so ("ab","c") != ("a","bc")
+            h ^= 0xFF;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        eat(self.engine.as_bytes());
+        eat(&self.seed.to_le_bytes());
+        eat(&self.k.to_le_bytes());
+        eat(self.distance.as_bytes());
+        eat(self.sched.as_bytes());
+        eat(&self.n.to_le_bytes());
+        eat(&self.d.to_le_bytes());
+        h
+    }
+
+    /// Typed mismatch report: `Err(Error::Ckpt)` naming the first
+    /// differing field, `Ok` iff every field matches.
+    pub fn expect_match(&self, found: &Fingerprint) -> Result<()> {
+        let mismatch = |what: &str, want: &dyn std::fmt::Display, got: &dyn std::fmt::Display| {
+            Err(Error::Ckpt(format!(
+                "fingerprint mismatch on {what}: run has {want}, checkpoint has {got} — \
+                 refusing to resume a different run"
+            )))
+        };
+        if self.engine != found.engine {
+            return mismatch("engine", &self.engine, &found.engine);
+        }
+        if self.seed != found.seed {
+            return mismatch("seed", &self.seed, &found.seed);
+        }
+        if self.k != found.k {
+            return mismatch("k", &self.k, &found.k);
+        }
+        if self.distance != found.distance {
+            return mismatch("distance", &self.distance, &found.distance);
+        }
+        if self.sched != found.sched {
+            return mismatch("sched", &self.sched, &found.sched);
+        }
+        if self.n != found.n {
+            return mismatch("n", &self.n, &found.n);
+        }
+        if self.d != found.d {
+            return mismatch("d", &self.d, &found.d);
+        }
+        Ok(())
+    }
+}
+
+/// Map a [`DistancePolicy`] to its fingerprint string.
+pub fn policy_str(p: DistancePolicy) -> &'static str {
+    match p {
+        DistancePolicy::Exact => "exact",
+        DistancePolicy::Dot => "dot",
+    }
+}
+
+/// Build the fingerprint for a run over an `n × d` dataset.
+pub fn fingerprint(
+    engine: &str,
+    sched: &str,
+    cfg: &KmeansConfig,
+    n: usize,
+    d: usize,
+) -> Fingerprint {
+    Fingerprint {
+        engine: engine.to_string(),
+        seed: cfg.seed,
+        k: cfg.k as u32,
+        distance: policy_str(cfg.distance).to_string(),
+        sched: sched.to_string(),
+        n: n as u64,
+        d: d as u32,
+    }
+}
+
+/// Triangle-inequality engine state (Elkan: `lower` is n×k; Hamerly:
+/// n×1) — everything those engines carry across iterations besides the
+/// centroids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bounds {
+    pub assign: Vec<i32>,
+    pub upper: Vec<f32>,
+    pub lower: Vec<f32>,
+    /// k×d running sums (f64) maintained incrementally by the replay.
+    pub sums: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub prune_seed_computed: u64,
+    pub prune_per_iter: Vec<(u64, u64)>,
+}
+
+/// One resumable snapshot: leader state at the end of a committed
+/// iteration. `prev_centroids` are the centroids the implied
+/// assignment was computed against (for dense engines, the pre-update
+/// centroids; for bounds engines, equal to `centroids`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptState {
+    pub fingerprint: Fingerprint,
+    /// Completed Lloyd iterations.
+    pub iteration: u64,
+    pub converged: bool,
+    pub centroids: Vec<f32>,
+    pub prev_centroids: Vec<f32>,
+    /// Per-iteration (sse, shift), aligned with iterations; NaN sse
+    /// entries (bounds engines fill sse lazily) round-trip bit-exact.
+    pub history: Vec<(f64, f64)>,
+    /// Per-iteration empty-cluster counts, aligned with `history`.
+    pub empty_events: Vec<u64>,
+    /// Present for Elkan/Hamerly, `None` for dense engines.
+    pub bounds: Option<Bounds>,
+}
+
+impl CkptState {
+    /// Validate the invariants every engine relies on after a
+    /// fingerprint-checked load (defense in depth: a forged state
+    /// section with a valid CRC must still fail typed, not panic).
+    pub fn check_dense(&self, k: usize, d: usize) -> Result<()> {
+        let kd = k * d;
+        if self.centroids.len() != kd || self.prev_centroids.len() != kd {
+            return Err(Error::Ckpt(format!(
+                "state centroids len {} / {} != k {k} × d {d}",
+                self.centroids.len(),
+                self.prev_centroids.len()
+            )));
+        }
+        if self.iteration == 0 {
+            return Err(Error::Ckpt("state has iteration 0 (nothing to resume)".into()));
+        }
+        if self.history.len() != self.iteration as usize
+            || self.empty_events.len() != self.history.len()
+        {
+            return Err(Error::Ckpt(format!(
+                "state history len {} / empty_events len {} != iteration {}",
+                self.history.len(),
+                self.empty_events.len(),
+                self.iteration
+            )));
+        }
+        Ok(())
+    }
+
+    /// [`check_dense`](Self::check_dense) plus the bounds-section
+    /// invariants; `lower_per_point` is `k` for Elkan, `1` for Hamerly.
+    pub fn check_bounds(&self, k: usize, d: usize, n: usize, lower_per_point: usize) -> Result<&Bounds> {
+        self.check_dense(k, d)?;
+        let b = self
+            .bounds
+            .as_ref()
+            .ok_or_else(|| Error::Ckpt("state has no bounds section for a bounds engine".into()))?;
+        if b.assign.len() != n
+            || b.upper.len() != n
+            || b.lower.len() != n * lower_per_point
+            || b.sums.len() != k * d
+            || b.counts.len() != k
+        {
+            return Err(Error::Ckpt(format!(
+                "bounds shapes (assign {}, upper {}, lower {}, sums {}, counts {}) \
+                 inconsistent with n {n}, k {k}, d {d}",
+                b.assign.len(),
+                b.upper.len(),
+                b.lower.len(),
+                b.sums.len(),
+                b.counts.len()
+            )));
+        }
+        if b.assign.iter().any(|&a| a < 0 || a as usize >= k) {
+            return Err(Error::Ckpt("bounds assignment out of cluster range".into()));
+        }
+        if b.prune_per_iter.len() != self.history.len() {
+            return Err(Error::Ckpt(format!(
+                "bounds prune rows {} != history len {}",
+                b.prune_per_iter.len(),
+                self.history.len()
+            )));
+        }
+        Ok(b)
+    }
+}
+
+/// Leader-side checkpoint writer: A/B slot rotation over atomic writes.
+/// Shared by reference across a run; interior atomics keep `save`
+/// callable from `&self`.
+pub struct CkptSink {
+    dir: PathBuf,
+    every: usize,
+    fingerprint: Fingerprint,
+    /// Next save goes to slot B?
+    next_b: AtomicBool,
+    /// Test-only torn-write injection: when != usize::MAX the next
+    /// save writes only that many bytes straight to the slot file (no
+    /// temp, no rename) — simulating a crash mid-checkpoint-write.
+    torn_after: AtomicUsize,
+}
+
+impl CkptSink {
+    /// Open (creating if needed) a checkpoint directory. The first
+    /// save targets the slot *opposite* the current best snapshot, so
+    /// a resumed run never overwrites the snapshot it came from first.
+    pub fn create(dir: &Path, every: usize, fingerprint: Fingerprint) -> Result<CkptSink> {
+        if every == 0 {
+            return Err(Error::Config("checkpoint-every must be >= 1".into()));
+        }
+        std::fs::create_dir_all(dir)?;
+        let a = read_slot(dir, SLOT_A);
+        let b = read_slot(dir, SLOT_B);
+        let next_b = match (&a, &b) {
+            (Some(sa), Some(sb)) => sb.iteration <= sa.iteration,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        Ok(CkptSink {
+            dir: dir.to_path_buf(),
+            every,
+            fingerprint,
+            next_b: AtomicBool::new(next_b),
+            torn_after: AtomicUsize::new(usize::MAX),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn fingerprint(&self) -> &Fingerprint {
+        &self.fingerprint
+    }
+
+    /// Is iteration `iteration` (1-based, counted *completed*) due for
+    /// a snapshot under `--checkpoint-every`?
+    pub fn should(&self, iteration: usize) -> bool {
+        iteration % self.every == 0
+    }
+
+    /// Persist one snapshot into the next rotation slot.
+    pub fn save(&self, state: &CkptState) -> Result<()> {
+        let to_b = self.next_b.fetch_xor(true, Ordering::Relaxed);
+        let path = self.dir.join(if to_b { SLOT_B } else { SLOT_A });
+        let bytes = dio::encode_ckpt(state);
+        let torn = self.torn_after.swap(usize::MAX, Ordering::Relaxed);
+        if torn != usize::MAX {
+            // simulated crash mid-write: a truncated prefix lands
+            // directly in the slot file, bypassing temp+rename
+            std::fs::write(&path, &bytes[..torn.min(bytes.len())])?;
+            return Ok(());
+        }
+        dio::atomic_write(&path, &bytes)
+    }
+
+    /// Arm the torn-write injection (tests): the next [`save`](Self::save)
+    /// leaves a truncated slot file, as a crash mid-write would.
+    pub fn inject_torn_write(&self, keep_bytes: usize) {
+        self.torn_after.store(keep_bytes, Ordering::Relaxed);
+    }
+}
+
+fn read_slot(dir: &Path, name: &str) -> Option<CkptState> {
+    let bytes = std::fs::read(dir.join(name)).ok()?;
+    dio::decode_ckpt(&bytes).ok()
+}
+
+/// Load the newest decodable snapshot from a checkpoint directory.
+/// A slot that is missing, truncated or CRC-corrupt is skipped (that
+/// is the A/B rotation working as designed); only when *no* slot
+/// loads is the result a typed error.
+pub fn load(dir: &Path) -> Result<CkptState> {
+    match (read_slot(dir, SLOT_A), read_slot(dir, SLOT_B)) {
+        (None, None) => Err(Error::Ckpt(format!(
+            "no loadable checkpoint in {} (missing or corrupt slots)",
+            dir.display()
+        ))),
+        (Some(s), None) | (None, Some(s)) => Ok(s),
+        (Some(a), Some(b)) => Ok(if b.iteration > a.iteration { b } else { a }),
+    }
+}
+
+/// [`load`] + fingerprint validation against the resuming run.
+pub fn load_validated(dir: &Path, expect: &Fingerprint) -> Result<CkptState> {
+    let state = load(dir)?;
+    expect.expect_match(&state.fingerprint)?;
+    if state.fingerprint.hash() != expect.hash() {
+        return Err(Error::Ckpt("fingerprint hash mismatch".into()));
+    }
+    Ok(state)
+}
+
+/// Finish a resumed run whose snapshot is already terminal (converged,
+/// or at the iteration budget) for engines holding the dataset in
+/// memory: one assignment-only E-pass against `prev_centroids` — a
+/// pure per-row function, so the assignment is bit-identical to the
+/// uninterrupted run's — and sse/shift replayed from the history.
+pub fn complete_resident(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    state: &CkptState,
+) -> Result<KmeansResult> {
+    state.check_dense(cfg.k, ds.dim())?;
+    let (k, d, n) = (cfg.k, ds.dim(), ds.len());
+    if state.fingerprint.n != n as u64 {
+        return Err(Error::Ckpt(format!(
+            "state fingerprint n {} != dataset n {n}",
+            state.fingerprint.n
+        )));
+    }
+    let mut assign = vec![0i32; n];
+    let mut stats = PartialStats::zeros(k, d);
+    match cfg.distance {
+        DistancePolicy::Exact => {
+            step::assign_accumulate(ds.raw(), d, &state.prev_centroids, k, &mut assign, &mut stats)?;
+        }
+        DistancePolicy::Dot => {
+            let c_norms = kernel::row_norms_vec(&state.prev_centroids, d);
+            step::assign_accumulate_mode(
+                ds.raw(),
+                d,
+                &state.prev_centroids,
+                k,
+                &mut assign,
+                &mut stats,
+                &DistanceMode::Dot { x_norms: ds.norms(), c_norms: &c_norms },
+            )?;
+        }
+    }
+    Ok(result_from_state(state, assign, k, d))
+}
+
+/// Assemble a [`KmeansResult`] from a terminal snapshot plus a freshly
+/// recomputed (or restored) assignment. sse/shift come from the last
+/// history entry — the values the original run computed.
+pub fn result_from_state(state: &CkptState, assign: Vec<i32>, k: usize, d: usize) -> KmeansResult {
+    let (sse, shift) = *state.history.last().unwrap_or(&(f64::NAN, f64::NAN));
+    KmeansResult {
+        centroids: state.centroids.clone(),
+        assign,
+        k,
+        dim: d,
+        iterations: state.iteration as usize,
+        sse,
+        shift,
+        converged: state.converged,
+        history: state.history.clone(),
+        empty_events: state.empty_events.clone(),
+        pruning: None,
+    }
+}
+
+/// Dense-engine resume gate: validate the snapshot against the live
+/// run, and if it is already terminal (converged, or at the iteration
+/// budget) finish it in place via [`complete_resident`]. Returns
+/// `Ok(None)` when the engine must continue iterating from the state.
+pub fn resume_dense(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    state: &CkptState,
+) -> Result<Option<KmeansResult>> {
+    state.check_dense(cfg.k, ds.dim())?;
+    if state.fingerprint.n != ds.len() as u64 {
+        return Err(Error::Ckpt(format!(
+            "state fingerprint n {} != dataset n {}",
+            state.fingerprint.n,
+            ds.len()
+        )));
+    }
+    if state.converged || state.iteration as usize >= cfg.max_iters {
+        return Ok(Some(complete_resident(ds, cfg, state)?));
+    }
+    Ok(None)
+}
+
+/// Snapshot fields a dense engine's leader saves at the end of a
+/// committed iteration (borrowed; [`save_dense`] clones into the
+/// encoder).
+pub struct DenseSnap<'a> {
+    pub iteration: usize,
+    pub converged: bool,
+    /// Post-update centroids.
+    pub centroids: &'a [f32],
+    /// Centroids the iteration's assignment was computed against.
+    pub prev_centroids: &'a [f32],
+    pub history: &'a [(f64, f64)],
+    pub empty_events: &'a [u64],
+}
+
+/// Leader-side hook for dense engines: save if this iteration is due.
+pub fn save_dense(sink: &CkptSink, snap: &DenseSnap<'_>) -> Result<()> {
+    if !sink.should(snap.iteration) {
+        return Ok(());
+    }
+    sink.save(&CkptState {
+        fingerprint: sink.fingerprint.clone(),
+        iteration: snap.iteration as u64,
+        converged: snap.converged,
+        centroids: snap.centroids.to_vec(),
+        prev_centroids: snap.prev_centroids.to_vec(),
+        history: snap.history.to_vec(),
+        empty_events: snap.empty_events.to_vec(),
+        bounds: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("parakm_ckpt_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            engine: "serial".into(),
+            seed: 42,
+            k: 3,
+            distance: "exact".into(),
+            sched: "static".into(),
+            n: 100,
+            d: 2,
+        }
+    }
+
+    fn state(iter: u64) -> CkptState {
+        CkptState {
+            fingerprint: fp(),
+            iteration: iter,
+            converged: false,
+            centroids: vec![0.5; 6],
+            prev_centroids: vec![0.25; 6],
+            history: (0..iter).map(|i| (i as f64, 1.0 / (i + 1) as f64)).collect(),
+            empty_events: vec![0; iter as usize],
+            bounds: None,
+        }
+    }
+
+    #[test]
+    fn sink_rotates_slots_and_load_picks_newest() {
+        let dir = tmpdir("rotate");
+        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink.save(&state(1)).unwrap();
+        assert!(dir.join(SLOT_A).exists());
+        assert!(!dir.join(SLOT_B).exists());
+        sink.save(&state(2)).unwrap();
+        assert!(dir.join(SLOT_B).exists());
+        sink.save(&state(3)).unwrap();
+        let s = load(&dir).unwrap();
+        assert_eq!(s.iteration, 3);
+        // slot B still holds iteration 2 — the last good fallback
+        let b = read_slot(&dir, SLOT_B).unwrap();
+        assert_eq!(b.iteration, 2);
+    }
+
+    #[test]
+    fn torn_write_leaves_last_good_snapshot_loadable() {
+        let dir = tmpdir("torn");
+        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink.save(&state(1)).unwrap(); // slot A
+        sink.save(&state(2)).unwrap(); // slot B
+        sink.inject_torn_write(13); // crash mid-write of slot A
+        sink.save(&state(3)).unwrap();
+        // slot A is garbage; load falls back to the good slot
+        let s = load(&dir).unwrap();
+        assert_eq!(s.iteration, 2);
+        // the next save (fresh sink, as a restarted process would use)
+        // repairs the torn slot
+        let sink2 = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink2.save(&state(3)).unwrap();
+        assert_eq!(load(&dir).unwrap().iteration, 3);
+    }
+
+    #[test]
+    fn resumed_sink_overwrites_the_older_slot_first() {
+        let dir = tmpdir("resume_slot");
+        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink.save(&state(1)).unwrap(); // A = 1
+        sink.save(&state(2)).unwrap(); // B = 2
+        drop(sink);
+        // a resumed run must not clobber the newest snapshot first
+        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink.save(&state(3)).unwrap();
+        let b = read_slot(&dir, SLOT_B).unwrap();
+        assert_eq!(b.iteration, 2, "slot B (the resume source) must survive");
+        assert_eq!(read_slot(&dir, SLOT_A).unwrap().iteration, 3);
+    }
+
+    #[test]
+    fn load_from_empty_dir_is_typed() {
+        let dir = tmpdir("empty");
+        let err = load(&dir).unwrap_err();
+        assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+        assert!(err.to_string().contains("no loadable checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_typed_and_names_the_field() {
+        let dir = tmpdir("fpmis");
+        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+        sink.save(&state(4)).unwrap();
+        let mut other = fp();
+        other.seed = 43;
+        let err = load_validated(&dir, &other).unwrap_err();
+        assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+        assert!(err.to_string().contains("seed"), "{err}");
+        let mut other = fp();
+        other.engine = "threads".into();
+        let err = load_validated(&dir, &other).unwrap_err();
+        assert!(err.to_string().contains("engine"), "{err}");
+        // matching fingerprint loads
+        assert_eq!(load_validated(&dir, &fp()).unwrap().iteration, 4);
+    }
+
+    #[test]
+    fn fingerprint_hash_separates_fields() {
+        let a = fp();
+        let mut b = fp();
+        b.engine = "serialx".into();
+        assert_ne!(a.hash(), b.hash());
+        let mut c = fp();
+        c.seed ^= 1;
+        assert_ne!(a.hash(), c.hash());
+    }
+
+    #[test]
+    fn should_respects_cadence() {
+        let dir = tmpdir("cadence");
+        let sink = CkptSink::create(&dir, 3, fp()).unwrap();
+        assert!(!sink.should(1));
+        assert!(!sink.should(2));
+        assert!(sink.should(3));
+        assert!(sink.should(6));
+        assert!(CkptSink::create(&dir, 0, fp()).is_err());
+    }
+
+    #[test]
+    fn state_checks_reject_forged_shapes() {
+        let mut s = state(2);
+        s.centroids.pop();
+        assert!(matches!(s.check_dense(3, 2).unwrap_err(), Error::Ckpt(_)));
+        let mut s = state(2);
+        s.history.pop();
+        assert!(s.check_dense(3, 2).is_err());
+        let s = state(2);
+        assert!(s.check_dense(3, 2).is_ok());
+        // bounds missing for a bounds engine
+        assert!(matches!(s.check_bounds(3, 2, 100, 3).unwrap_err(), Error::Ckpt(_)));
+    }
+}

@@ -54,7 +54,8 @@ use crate::cluster::wire::{self, Frame, WIRE_VERSION};
 pub use crate::config::DistSched;
 use crate::config::Init;
 use crate::error::{ClusterError, Error, Result};
-use crate::kmeans::step::{finalize, merge_ordered, PartialStats};
+use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
+use crate::kmeans::step::{finalize_counted, merge_ordered, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::rng::Pcg64;
 
@@ -389,7 +390,22 @@ impl Cluster {
     /// Run distributed Lloyd from explicit initial centroids, consuming
     /// the cluster (workers receive `Shutdown` on success; on error the
     /// connections drop and workers end their session at the break).
-    pub fn run_from(mut self, cfg: &KmeansConfig, centroids0: &[f32]) -> Result<DistRun> {
+    pub fn run_from(self, cfg: &KmeansConfig, centroids0: &[f32]) -> Result<DistRun> {
+        self.run_from_ckpt(cfg, centroids0, None, None)
+    }
+
+    /// [`Cluster::run_from`] with checkpoint/resume (DESIGN.md §14).
+    /// On resume, `centroids0` must be the snapshot's centroids; a
+    /// snapshot that is already terminal replays one assignment-only
+    /// round against its `prev_centroids` so the final `FetchAssign`
+    /// returns the bits the uninterrupted run produced.
+    pub fn run_from_ckpt(
+        mut self,
+        cfg: &KmeansConfig,
+        centroids0: &[f32],
+        sink: Option<&CkptSink>,
+        resumed: Option<&CkptState>,
+    ) -> Result<DistRun> {
         let (n, d, k) = (self.n, self.dim, cfg.k);
         if k == 0 {
             return Err(Error::Config("dist: k must be >= 1".into()));
@@ -400,14 +416,27 @@ impl Cluster {
                 centroids0.len()
             )));
         }
+        if let Some(state) = resumed {
+            state.check_dense(k, d)?;
+            if state.fingerprint.n != n as u64 {
+                return Err(Error::Ckpt(format!(
+                    "state fingerprint n {} != cluster n {n}",
+                    state.fingerprint.n
+                )));
+            }
+        }
 
         let mut centroids = centroids0.to_vec();
-        let mut history: Vec<(f64, f64)> = Vec::new();
-        let mut converged = false;
-        let mut iterations = 0usize;
+        let mut history: Vec<(f64, f64)> =
+            resumed.map(|s| s.history.clone()).unwrap_or_default();
+        let mut empty_events: Vec<u64> =
+            resumed.map(|s| s.empty_events.clone()).unwrap_or_default();
+        let mut converged = resumed.map(|s| s.converged).unwrap_or(false);
+        let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
         let mut parts: Vec<PartialStats> = Vec::with_capacity(self.links.len());
+        let mut assigned_once = false;
 
-        for _ in 0..cfg.max_iters {
+        while !converged && iterations < cfg.max_iters {
             let t0 = Instant::now();
             let mut iter_net = IterNet { bytes_tx: 0, bytes_rx: 0, secs: 0.0 };
             // broadcast to every worker before reading any reply, so
@@ -454,15 +483,59 @@ impl Cluster {
             // stamp the round trip at the last partial, before the
             // leader-side fold — secs means what the label says
             iter_net.secs = t0.elapsed().as_secs_f64();
+            assigned_once = true;
             let merged = merge_ordered(parts.iter());
-            let (mu_new, shift) = finalize(&merged, &centroids);
-            centroids = mu_new;
+            let (mu_new, shift, empties) = finalize_counted(&merged, &centroids);
+            let prev = std::mem::replace(&mut centroids, mu_new);
             iterations += 1;
             history.push((merged.sse, shift));
+            empty_events.push(empties);
             self.net.per_iter.push(iter_net);
-            if shift < cfg.tol {
+            let converged_now = shift < cfg.tol;
+            if let Some(sink) = sink {
+                ckpt::save_dense(
+                    sink,
+                    &DenseSnap {
+                        iteration: iterations,
+                        converged: converged_now,
+                        centroids: &centroids,
+                        prev_centroids: &prev,
+                        history: &history,
+                        empty_events: &empty_events,
+                    },
+                )?;
+            }
+            if converged_now {
                 converged = true;
-                break;
+            }
+        }
+
+        if let (Some(state), false) = (resumed, assigned_once) {
+            // terminal snapshot: the workers never computed an E-step
+            // this session — one assignment-only round against the
+            // centroids the final assignment was computed from
+            let assign_frame = Frame::Assign {
+                k: k as u32,
+                dim: d as u32,
+                policy: cfg.distance,
+                centroids: state.prev_centroids.clone(),
+            };
+            for link in &mut self.links {
+                self.net.collect_bytes += link.send(&assign_frame)?;
+            }
+            for link in &mut self.links {
+                let (frame, bytes) = link.recv("waiting for Partials")?;
+                self.net.collect_bytes += bytes;
+                match frame {
+                    Frame::Partials { .. } => {} // stats replayed from history
+                    other => {
+                        return Err(Error::Cluster(ClusterError::Protocol(format!(
+                            "worker {}: expected Partials, got {}",
+                            link.addr,
+                            other.name()
+                        ))))
+                    }
+                }
             }
         }
 
@@ -513,6 +586,7 @@ impl Cluster {
                 shift,
                 converged,
                 history,
+                empty_events,
                 pruning: None,
             },
             net: self.net,
@@ -559,6 +633,104 @@ pub fn run_from(
     match opts.sched {
         DistSched::Static => Cluster::connect(addrs, opts)?.run_from(cfg, centroids0),
         DistSched::Elastic => elastic::run_from(addrs, cfg, opts, centroids0),
+    }
+}
+
+/// [`run`] with checkpoint/resume, dispatching on [`DistOpts::sched`].
+/// On resume the snapshot supplies the centroids; otherwise init is
+/// the leader-side seeded random gather (only [`Init::Random`] is
+/// distributable).
+pub fn run_ckpt(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<DistRun> {
+    match opts.sched {
+        DistSched::Static => {
+            let mut cluster = Cluster::connect(addrs, opts)?;
+            match resume {
+                Some(state) => {
+                    let c0 = state.centroids.clone();
+                    cluster.run_from_ckpt(cfg, &c0, sink, Some(&state))
+                }
+                None => {
+                    let c0 = match cfg.init {
+                        Init::Random => cluster.init_random(cfg.k, cfg.seed)?,
+                        Init::KmeansPlusPlus => {
+                            return Err(Error::Config(
+                                "dist: kmeans++ init needs a resident dataset; \
+                                 precompute centroids (kmeans::init) and call run_from"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    cluster.run_from_ckpt(cfg, &c0, sink, None)
+                }
+            }
+        }
+        DistSched::Elastic => elastic::run_ckpt(addrs, cfg, opts, sink, resume),
+    }
+}
+
+/// Checkpoint/resume request as the CLI knows it: directories and a
+/// cadence, no fingerprint. The run fingerprint (DESIGN.md §14) needs
+/// the dataset shape `(n, d)`, which the dist leader only learns from
+/// the worker handshake — so sink creation and resume validation
+/// happen here, after connecting, not at flag-parse time.
+#[derive(Debug, Clone, Default)]
+pub struct CkptSpec {
+    /// `--checkpoint DIR`: write A/B-rotated `.pkc` snapshots here.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// `--checkpoint-every N` (>= 1).
+    pub every: usize,
+    /// `--resume DIR`: load + fingerprint-validate the newest slot.
+    pub resume: Option<std::path::PathBuf>,
+}
+
+/// [`run_ckpt`] for callers that only hold checkpoint *paths*: connect
+/// (or probe, under the elastic scheduler), learn `(n, d)`, build the
+/// fingerprint, then create the sink and/or validate the resume slot.
+pub fn run_ckpt_spec(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    spec: &CkptSpec,
+) -> Result<DistRun> {
+    match opts.sched {
+        DistSched::Static => {
+            let mut cluster = Cluster::connect(addrs, opts)?;
+            let fp = ckpt::fingerprint("dist", "static", cfg, cluster.n, cluster.dim);
+            let sink = match &spec.checkpoint {
+                Some(dir) => Some(CkptSink::create(dir, spec.every, fp.clone())?),
+                None => None,
+            };
+            let resume = match &spec.resume {
+                Some(dir) => Some(ckpt::load_validated(dir, &fp)?),
+                None => None,
+            };
+            match resume {
+                Some(state) => {
+                    let c0 = state.centroids.clone();
+                    cluster.run_from_ckpt(cfg, &c0, sink.as_ref(), Some(&state))
+                }
+                None => {
+                    let c0 = match cfg.init {
+                        Init::Random => cluster.init_random(cfg.k, cfg.seed)?,
+                        Init::KmeansPlusPlus => {
+                            return Err(Error::Config(
+                                "dist: kmeans++ init needs a resident dataset; \
+                                 precompute centroids (kmeans::init) and call run_from"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    cluster.run_from_ckpt(cfg, &c0, sink.as_ref(), None)
+                }
+            }
+        }
+        DistSched::Elastic => elastic::run_ckpt_spec(addrs, cfg, opts, spec),
     }
 }
 

@@ -46,8 +46,9 @@ use super::{ctx, open_socket, DistOpts, DistRun, IterNet, NetStats};
 use crate::cluster::wire::{self, Frame, WIRE_VERSION};
 use crate::config::{DistancePolicy, Init};
 use crate::error::{ClusterError, Error, Result};
+use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
 use crate::kmeans::sched;
-use crate::kmeans::step::{finalize, merge_ordered, PartialStats};
+use crate::kmeans::step::{finalize_counted, merge_ordered, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::rng::Pcg64;
 
@@ -160,7 +161,7 @@ pub fn run(addrs: &[String], cfg: &KmeansConfig, opts: &DistOpts) -> Result<Dist
     }
     let mut probe = probe_cluster(addrs, opts)?;
     let centroids0 = gather_init(&mut probe, cfg.k, cfg.seed)?;
-    run_inner(addrs, cfg, opts, probe, centroids0)
+    run_inner(addrs, cfg, opts, probe, centroids0, None, None)
 }
 
 /// Elastic run from explicit initial centroids.
@@ -171,7 +172,78 @@ pub fn run_from(
     centroids0: &[f32],
 ) -> Result<DistRun> {
     let probe = probe_cluster(addrs, opts)?;
-    run_inner(addrs, cfg, opts, probe, centroids0.to_vec())
+    run_inner(addrs, cfg, opts, probe, centroids0.to_vec(), None, None)
+}
+
+/// [`run`] with checkpoint/resume (DESIGN.md §14). The leader
+/// checkpoints committed-phase state — a phase either completes (its
+/// merge is deterministic regardless of which workers computed which
+/// chunks) or it does not happen, so the snapshot is always at a clean
+/// iteration boundary.
+pub fn run_ckpt(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<DistRun> {
+    match resume {
+        Some(state) => {
+            let probe = probe_cluster(addrs, opts)?;
+            let c0 = state.centroids.clone();
+            run_inner(addrs, cfg, opts, probe, c0, sink, Some(state))
+        }
+        None => {
+            if let Init::KmeansPlusPlus = cfg.init {
+                return Err(Error::Config(
+                    "dist: kmeans++ init needs a resident dataset; \
+                     precompute centroids (kmeans::init) and call run_from"
+                        .into(),
+                ));
+            }
+            let mut probe = probe_cluster(addrs, opts)?;
+            let centroids0 = gather_init(&mut probe, cfg.k, cfg.seed)?;
+            run_inner(addrs, cfg, opts, probe, centroids0, sink, None)
+        }
+    }
+}
+
+/// [`super::run_ckpt_spec`] under the elastic scheduler: the probe
+/// handshake supplies `(n, d)` for the fingerprint, and the probe link
+/// is then reused by the run itself (no extra worker session).
+pub(crate) fn run_ckpt_spec(
+    addrs: &[String],
+    cfg: &KmeansConfig,
+    opts: &DistOpts,
+    spec: &super::CkptSpec,
+) -> Result<DistRun> {
+    let mut probe = probe_cluster(addrs, opts)?;
+    let fp = ckpt::fingerprint("dist", "elastic", cfg, probe.n, probe.d);
+    let sink = match &spec.checkpoint {
+        Some(dir) => Some(CkptSink::create(dir, spec.every, fp.clone())?),
+        None => None,
+    };
+    let resume = match &spec.resume {
+        Some(dir) => Some(ckpt::load_validated(dir, &fp)?),
+        None => None,
+    };
+    match resume {
+        Some(state) => {
+            let c0 = state.centroids.clone();
+            run_inner(addrs, cfg, opts, probe, c0, sink.as_ref(), Some(state))
+        }
+        None => {
+            if let Init::KmeansPlusPlus = cfg.init {
+                return Err(Error::Config(
+                    "dist: kmeans++ init needs a resident dataset; \
+                     precompute centroids (kmeans::init) and call run_from"
+                        .into(),
+                ));
+            }
+            let centroids0 = gather_init(&mut probe, cfg.k, cfg.seed)?;
+            run_inner(addrs, cfg, opts, probe, centroids0, sink.as_ref(), None)
+        }
+    }
 }
 
 /// The first reachable worker; its `ShardSpec` defines the canonical
@@ -288,6 +360,8 @@ fn run_inner(
     opts: &DistOpts,
     probe: Probe,
     centroids0: Vec<f32>,
+    sink: Option<&CkptSink>,
+    resumed: Option<CkptState>,
 ) -> Result<DistRun> {
     let (n, d, k) = (probe.n, probe.d, cfg.k);
     if k == 0 {
@@ -298,6 +372,15 @@ fn run_inner(
             "dist: initial centroids len {} != k {k} × dim {d}",
             centroids0.len()
         )));
+    }
+    if let Some(state) = &resumed {
+        state.check_dense(k, d)?;
+        if state.fingerprint.n != n as u64 {
+            return Err(Error::Ckpt(format!(
+                "state fingerprint n {} != cluster n {n}",
+                state.fingerprint.n
+            )));
+        }
     }
     let nchunks = sched::chunk_count(n);
 
@@ -348,7 +431,8 @@ fn run_inner(
         // the coordinator's recv() reports Disconnected exactly when
         // every agent has exited — drop our own sender to make that so
         drop(event_tx);
-        outcome = coordinate(&shared, &events, cfg, n, d, nchunks, centroids0);
+        outcome =
+            coordinate(&shared, &events, cfg, n, d, nchunks, centroids0, sink, resumed.as_ref());
         // success or failure, wake every agent so the scope can join
         let mut w = shared.work.lock().unwrap();
         w.done = true;
@@ -391,6 +475,7 @@ struct PhaseOut {
 /// for every agent to give up), merge, repeat; then one final
 /// `want_assign` pass against the centroids the last iteration ran
 /// with, so assignments mean the same thing as in every other engine.
+#[allow(clippy::too_many_arguments)]
 fn coordinate(
     shared: &Shared,
     events: &Receiver<Event>,
@@ -399,36 +484,62 @@ fn coordinate(
     d: usize,
     nchunks: usize,
     centroids0: Vec<f32>,
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
 ) -> Result<CoordOut> {
     let mut centroids = centroids0;
     // the centroids the most recent *executed* phase used — the final
-    // assignment pass must re-run against these, not the updated ones
-    let mut mu_used = centroids.clone();
-    let mut history: Vec<(f64, f64)> = Vec::new();
+    // assignment pass must re-run against these, not the updated ones.
+    // On resume this is the snapshot's assignment basis, so a terminal
+    // snapshot's final pass reproduces the interrupted run's bits.
+    let mut mu_used = match resumed {
+        Some(s) => s.prev_centroids.clone(),
+        None => centroids.clone(),
+    };
+    let mut history: Vec<(f64, f64)> = resumed.map(|s| s.history.clone()).unwrap_or_default();
+    let mut empty_events: Vec<u64> =
+        resumed.map(|s| s.empty_events.clone()).unwrap_or_default();
     let mut per_iter: Vec<IterNet> = Vec::new();
-    let mut converged = false;
-    let mut iterations = 0usize;
+    let mut converged = resumed.map(|s| s.converged).unwrap_or(false);
+    let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
     let mut epoch = 0u64;
     let mut recovery_secs = 0.0;
     let (mut failures, mut rejoins, mut spec_wins) = (0u64, 0u64, 0u64);
 
-    for _ in 0..cfg.max_iters {
+    while !converged && iterations < cfg.max_iters {
         epoch += 1;
         mu_used.copy_from_slice(&centroids);
         let out = run_phase(shared, events, epoch, nchunks, &centroids, false)?;
         let merged = merge_ordered(out.results.iter());
-        let (mu_new, shift) = finalize(&merged, &centroids);
+        let (mu_new, shift, empties) = finalize_counted(&merged, &centroids);
         centroids = mu_new;
         iterations += 1;
         history.push((merged.sse, shift));
+        empty_events.push(empties);
         per_iter.push(IterNet { bytes_tx: out.bytes_tx, bytes_rx: out.bytes_rx, secs: out.secs });
         recovery_secs += out.recovery_secs;
         failures += out.failures;
         rejoins += out.rejoins;
         spec_wins += out.spec_wins;
-        if shift < cfg.tol {
+        let converged_now = shift < cfg.tol;
+        if let Some(sink) = sink {
+            // committed-phase state: the merge above is a function of
+            // the chunk grid and mu_used alone, so this snapshot resumes
+            // bit-identically however the chunks were scheduled
+            ckpt::save_dense(
+                sink,
+                &DenseSnap {
+                    iteration: iterations,
+                    converged: converged_now,
+                    centroids: &centroids,
+                    prev_centroids: &mu_used,
+                    history: &history,
+                    empty_events: &empty_events,
+                },
+            )?;
+        }
+        if converged_now {
             converged = true;
-            break;
         }
     }
 
@@ -464,6 +575,7 @@ fn coordinate(
             shift,
             converged,
             history,
+            empty_events,
             pruning: None,
         },
         per_iter,

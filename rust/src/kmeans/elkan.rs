@@ -33,8 +33,10 @@ use std::sync::{Barrier, Mutex, RwLock};
 
 use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::ckpt::{Bounds, CkptSink, CkptState};
 use crate::kmeans::sched::{self, ChunkQueue};
-use crate::kmeans::step::{finalize, PartialStats};
+use crate::kmeans::step::{finalize_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
 use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
@@ -59,6 +61,31 @@ pub fn run_threads(
 ) -> KmeansResult {
     let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
     run_from_threads(ds, cfg, threads, sched_mode, &centroids0)
+}
+
+/// [`run_threads`] with checkpoint/resume (DESIGN.md §14). The snapshot
+/// carries the full triangle-inequality state (bounds, running sums,
+/// prune counters); the tol-break precedes the reassignment round, so a
+/// converged snapshot is never written — resume re-runs the converging
+/// finalize deterministically from the restored f64 sums.
+pub fn run_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<KmeansResult> {
+    match resume {
+        Some(state) => {
+            let c0 = state.centroids.clone();
+            run_from_threads_ckpt(ds, cfg, threads, sched_mode, &c0, sink, Some(&state))
+        }
+        None => {
+            let c0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+            run_from_threads_ckpt(ds, cfg, threads, sched_mode, &c0, sink, None)
+        }
+    }
 }
 
 /// A deferred reassignment: the worker records it, the leader replays
@@ -121,6 +148,23 @@ pub fn run_from_threads(
     sched_mode: SchedMode,
     centroids0: &[f32],
 ) -> KmeansResult {
+    run_from_threads_ckpt(ds, cfg, threads, sched_mode, centroids0, None, None)
+        .expect("no checkpoint io configured")
+}
+
+/// The core loop behind every Elkan entry point. On resume,
+/// `centroids0` must be the snapshot's centroids; the bounds arrays are
+/// restored before the per-chunk slot split and the dense seeding round
+/// is skipped (its result is already baked into the restored state).
+fn run_from_threads_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
+) -> Result<KmeansResult> {
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
@@ -144,6 +188,15 @@ pub fn run_from_threads(
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0u64; k];
     let mut stats = PartialStats::zeros(k, d);
+    if let Some(state) = resumed {
+        // Elkan: k lower bounds per point
+        let b = state.check_bounds(k, d, n, k)?;
+        assign.copy_from_slice(&b.assign);
+        upper.copy_from_slice(&b.upper);
+        lower.copy_from_slice(&b.lower);
+        sums.copy_from_slice(&b.sums);
+        counts.copy_from_slice(&b.counts);
+    }
 
     // split the row-indexed state into per-chunk exclusive slices
     let mut slots: Vec<Mutex<ChunkSlot>> = Vec::with_capacity(nchunks);
@@ -184,16 +237,21 @@ pub fn run_from_threads(
     });
     let barrier = Barrier::new(p + 1);
     let done = AtomicBool::new(false);
-    let seeding = AtomicBool::new(true);
+    let seeding = AtomicBool::new(resumed.is_none());
 
     let mut mu = centroids0.to_vec();
-    let mut history: Vec<(f64, f64)> = Vec::new();
-    let mut prune = PruneStats {
-        seed_computed: n as u64 * k as u64,
-        per_iter: Vec::new(),
+    let mut history: Vec<(f64, f64)> = resumed.map(|s| s.history.clone()).unwrap_or_default();
+    let mut empty_events: Vec<u64> = resumed.map(|s| s.empty_events.clone()).unwrap_or_default();
+    let mut prune = match resumed.and_then(|s| s.bounds.as_ref()) {
+        Some(b) => PruneStats {
+            seed_computed: b.prune_seed_computed,
+            per_iter: b.prune_per_iter.clone(),
+        },
+        None => PruneStats { seed_computed: n as u64 * k as u64, per_iter: Vec::new() },
     };
     let mut converged = false;
-    let mut iterations = 0usize;
+    let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
+    let mut ckpt_err: Option<Error> = None;
 
     std::thread::scope(|scope| {
         // ---- workers: spawned once, live across all rounds ------------
@@ -229,29 +287,31 @@ pub fn run_from_threads(
         }
 
         // ---- leader ----------------------------------------------------
-        // seeding round: dense n×k bound seeding, chunk-parallel
-        queue.fill(nchunks);
-        barrier.wait(); // (A)
-        barrier.wait(); // (B)
-        seeding.store(false, Ordering::Release);
-        // fold counts/sums in ascending row order — the serial chain
-        for slot in &slots {
-            let s = slot.lock().unwrap();
-            for (r, &a) in s.assign.iter().enumerate() {
-                let best = a as usize;
-                counts[best] += 1;
-                let pt = ds.point(s.lo + r);
-                for j in 0..d {
-                    sums[best * d + j] += pt[j] as f64;
+        if resumed.is_none() {
+            // seeding round: dense n×k bound seeding, chunk-parallel
+            queue.fill(nchunks);
+            barrier.wait(); // (A)
+            barrier.wait(); // (B)
+            seeding.store(false, Ordering::Release);
+            // fold counts/sums in ascending row order — the serial chain
+            for slot in &slots {
+                let s = slot.lock().unwrap();
+                for (r, &a) in s.assign.iter().enumerate() {
+                    let best = a as usize;
+                    counts[best] += 1;
+                    let pt = ds.point(s.lo + r);
+                    for j in 0..d {
+                        sums[best * d + j] += pt[j] as f64;
+                    }
                 }
             }
         }
 
-        for _ in 0..cfg.max_iters {
+        for _ in iterations..cfg.max_iters {
             stats.reset();
             stats.sums.copy_from_slice(&sums);
             stats.counts.copy_from_slice(&counts);
-            let (mu_new, shift) = finalize(&stats, &mu);
+            let (mu_new, shift, empties) = finalize_counted(&stats, &mu);
 
             let mut c = ctx.write().unwrap();
             for ci in 0..k {
@@ -266,6 +326,7 @@ pub fn run_from_threads(
             }
             iterations += 1;
             history.push((f64::NAN, shift));
+            empty_events.push(empties);
             if shift < cfg.tol {
                 converged = true;
                 prune.per_iter.push((0, 0)); // no reassignment phase ran
@@ -312,18 +373,58 @@ pub fn run_from_threads(
                 }
             }
             prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
+
+            if let Some(sink) = sink {
+                if sink.should(iterations) {
+                    // gather the chunk-sliced arrays back into row order
+                    let mut b_assign = Vec::with_capacity(n);
+                    let mut b_upper = Vec::with_capacity(n);
+                    let mut b_lower = Vec::with_capacity(n * k);
+                    for slot in &slots {
+                        let s = slot.lock().unwrap();
+                        b_assign.extend_from_slice(s.assign);
+                        b_upper.extend_from_slice(s.upper);
+                        b_lower.extend_from_slice(s.lower);
+                    }
+                    let res = sink.save(&CkptState {
+                        fingerprint: sink.fingerprint().clone(),
+                        iteration: iterations as u64,
+                        converged: false,
+                        centroids: mu.clone(),
+                        prev_centroids: mu.clone(),
+                        history: history.clone(),
+                        empty_events: empty_events.clone(),
+                        bounds: Some(Bounds {
+                            assign: b_assign,
+                            upper: b_upper,
+                            lower: b_lower,
+                            sums: sums.clone(),
+                            counts: counts.clone(),
+                            prune_seed_computed: prune.seed_computed,
+                            prune_per_iter: prune.per_iter.clone(),
+                        }),
+                    });
+                    if let Err(e) = res {
+                        ckpt_err = Some(e);
+                        break;
+                    }
+                }
+            }
         }
         done.store(true, Ordering::Release);
         barrier.wait(); // release workers into the exit branch
     });
     drop(slots); // release the per-chunk borrows of assign/upper/lower
 
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
     let sse = crate::metrics::sse(ds, &mu, k, &assign);
     if let Some(last) = history.last_mut() {
         last.0 = sse;
     }
     let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
-    KmeansResult {
+    Ok(KmeansResult {
         centroids: mu,
         assign,
         k,
@@ -333,8 +434,9 @@ pub fn run_from_threads(
         shift,
         converged,
         history,
+        empty_events,
         pruning: Some(prune),
-    }
+    })
 }
 
 /// Seeding pass over one chunk: dense squared-distance matrix through

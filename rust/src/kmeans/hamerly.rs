@@ -26,8 +26,10 @@ use std::sync::{Barrier, Mutex, RwLock};
 
 use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::ckpt::{Bounds, CkptSink, CkptState};
 use crate::kmeans::sched::{self, ChunkQueue};
-use crate::kmeans::step::{finalize, PartialStats};
+use crate::kmeans::step::{finalize_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
 use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
@@ -52,6 +54,31 @@ pub fn run_threads(
 ) -> KmeansResult {
     let centroids0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
     run_from_threads(ds, cfg, threads, sched_mode, &centroids0)
+}
+
+/// [`run_threads`] with checkpoint/resume (DESIGN.md §14). Same
+/// contract as [`crate::kmeans::elkan::run_ckpt`]: the snapshot carries
+/// the bound arrays (one lower bound per point here) and the f64
+/// running sums; the tol-break precedes the reassignment round, so a
+/// converged snapshot is never written.
+pub fn run_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<KmeansResult> {
+    match resume {
+        Some(state) => {
+            let c0 = state.centroids.clone();
+            run_from_threads_ckpt(ds, cfg, threads, sched_mode, &c0, sink, Some(&state))
+        }
+        None => {
+            let c0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+            run_from_threads_ckpt(ds, cfg, threads, sched_mode, &c0, sink, None)
+        }
+    }
 }
 
 /// A deferred reassignment, replayed by the leader in ascending row
@@ -114,6 +141,24 @@ pub fn run_from_threads(
     sched_mode: SchedMode,
     centroids0: &[f32],
 ) -> KmeansResult {
+    run_from_threads_ckpt(ds, cfg, threads, sched_mode, centroids0, None, None)
+        .expect("no checkpoint io configured")
+}
+
+/// The core loop behind every Hamerly entry point. On resume,
+/// `centroids0` must be the snapshot's centroids; the bound arrays are
+/// restored before the per-chunk slot split and the two-nearest seeding
+/// round is skipped (its result is already baked into the restored
+/// state).
+fn run_from_threads_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    sched_mode: SchedMode,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
+) -> Result<KmeansResult> {
     let n = ds.len();
     let d = ds.dim();
     let k = cfg.k;
@@ -135,6 +180,15 @@ pub fn run_from_threads(
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0u64; k];
     let mut stats = PartialStats::zeros(k, d);
+    if let Some(state) = resumed {
+        // Hamerly: one lower bound per point
+        let b = state.check_bounds(k, d, n, 1)?;
+        assign.copy_from_slice(&b.assign);
+        upper.copy_from_slice(&b.upper);
+        lower.copy_from_slice(&b.lower);
+        sums.copy_from_slice(&b.sums);
+        counts.copy_from_slice(&b.counts);
+    }
 
     let mut slots: Vec<Mutex<ChunkSlot>> = Vec::with_capacity(nchunks);
     {
@@ -175,16 +229,21 @@ pub fn run_from_threads(
     });
     let barrier = Barrier::new(p + 1);
     let done = AtomicBool::new(false);
-    let seeding = AtomicBool::new(true);
+    let seeding = AtomicBool::new(resumed.is_none());
 
     let mut mu = centroids0.to_vec();
-    let mut history: Vec<(f64, f64)> = Vec::new();
-    let mut prune = PruneStats {
-        seed_computed: n as u64 * k as u64,
-        per_iter: Vec::new(),
+    let mut history: Vec<(f64, f64)> = resumed.map(|s| s.history.clone()).unwrap_or_default();
+    let mut empty_events: Vec<u64> = resumed.map(|s| s.empty_events.clone()).unwrap_or_default();
+    let mut prune = match resumed.and_then(|s| s.bounds.as_ref()) {
+        Some(b) => PruneStats {
+            seed_computed: b.prune_seed_computed,
+            per_iter: b.prune_per_iter.clone(),
+        },
+        None => PruneStats { seed_computed: n as u64 * k as u64, per_iter: Vec::new() },
     };
     let mut converged = false;
-    let mut iterations = 0usize;
+    let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
+    let mut ckpt_err: Option<Error> = None;
 
     std::thread::scope(|scope| {
         // ---- workers: spawned once, live across all rounds ------------
@@ -220,29 +279,31 @@ pub fn run_from_threads(
         }
 
         // ---- leader ----------------------------------------------------
-        // seeding round: two-nearest scan through the SIMD kernel
-        queue.fill(nchunks);
-        barrier.wait(); // (A)
-        barrier.wait(); // (B)
-        seeding.store(false, Ordering::Release);
-        for slot in &slots {
-            let s = slot.lock().unwrap();
-            for (r, &a) in s.assign.iter().enumerate() {
-                let best = a as usize;
-                counts[best] += 1;
-                let pt = ds.point(s.lo + r);
-                for j in 0..d {
-                    sums[best * d + j] += pt[j] as f64;
+        if resumed.is_none() {
+            // seeding round: two-nearest scan through the SIMD kernel
+            queue.fill(nchunks);
+            barrier.wait(); // (A)
+            barrier.wait(); // (B)
+            seeding.store(false, Ordering::Release);
+            for slot in &slots {
+                let s = slot.lock().unwrap();
+                for (r, &a) in s.assign.iter().enumerate() {
+                    let best = a as usize;
+                    counts[best] += 1;
+                    let pt = ds.point(s.lo + r);
+                    for j in 0..d {
+                        sums[best * d + j] += pt[j] as f64;
+                    }
                 }
             }
         }
 
-        for _ in 0..cfg.max_iters {
+        for _ in iterations..cfg.max_iters {
             // means from running sums
             stats.reset();
             stats.sums.copy_from_slice(&sums);
             stats.counts.copy_from_slice(&counts);
-            let (mu_new, shift) = finalize(&stats, &mu);
+            let (mu_new, shift, empties) = finalize_counted(&stats, &mu);
 
             // per-centroid movement; the two largest drive the bounds
             let mut c = ctx.write().unwrap();
@@ -272,6 +333,7 @@ pub fn run_from_threads(
             // SSE bookkeeping for parity with other engines: the final
             // exact pass below fills the last entry.
             history.push((f64::NAN, shift));
+            empty_events.push(empties);
             if shift < cfg.tol {
                 converged = true;
                 prune.per_iter.push((0, 0)); // no reassignment phase ran
@@ -314,11 +376,52 @@ pub fn run_from_threads(
                 }
             }
             prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
+
+            if let Some(sink) = sink {
+                if sink.should(iterations) {
+                    // gather the chunk-sliced arrays back into row order
+                    let mut b_assign = Vec::with_capacity(n);
+                    let mut b_upper = Vec::with_capacity(n);
+                    let mut b_lower = Vec::with_capacity(n);
+                    for slot in &slots {
+                        let s = slot.lock().unwrap();
+                        b_assign.extend_from_slice(s.assign);
+                        b_upper.extend_from_slice(s.upper);
+                        b_lower.extend_from_slice(s.lower);
+                    }
+                    let res = sink.save(&CkptState {
+                        fingerprint: sink.fingerprint().clone(),
+                        iteration: iterations as u64,
+                        converged: false,
+                        centroids: mu.clone(),
+                        prev_centroids: mu.clone(),
+                        history: history.clone(),
+                        empty_events: empty_events.clone(),
+                        bounds: Some(Bounds {
+                            assign: b_assign,
+                            upper: b_upper,
+                            lower: b_lower,
+                            sums: sums.clone(),
+                            counts: counts.clone(),
+                            prune_seed_computed: prune.seed_computed,
+                            prune_per_iter: prune.per_iter.clone(),
+                        }),
+                    });
+                    if let Err(e) = res {
+                        ckpt_err = Some(e);
+                        break;
+                    }
+                }
+            }
         }
         done.store(true, Ordering::Release);
         barrier.wait(); // release workers into the exit branch
     });
     drop(slots); // release the per-chunk borrows of assign/upper/lower
+
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
 
     // final exact SSE pass (the objective the paper reports)
     let sse = crate::metrics::sse(ds, &mu, k, &assign);
@@ -326,7 +429,7 @@ pub fn run_from_threads(
         last.0 = sse;
     }
     let shift = history.last().map(|h| h.1).unwrap_or(f64::NAN);
-    KmeansResult {
+    Ok(KmeansResult {
         centroids: mu,
         assign,
         k,
@@ -336,8 +439,9 @@ pub fn run_from_threads(
         shift,
         converged,
         history,
+        empty_events,
         pruning: Some(prune),
-    }
+    })
 }
 
 /// Seeding pass over one chunk: the two-nearest scan runs on the SIMD

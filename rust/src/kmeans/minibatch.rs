@@ -129,6 +129,7 @@ pub fn run_from(
         shift,
         converged,
         history,
+        empty_events: Vec::new(),
         pruning: None,
     }
 }

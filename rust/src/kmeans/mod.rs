@@ -14,6 +14,7 @@
 //! engines live in [`crate::coordinator`] and share these types.
 
 pub mod bisecting;
+pub mod ckpt;
 pub mod dist;
 pub mod elkan;
 pub mod hamerly;
@@ -139,9 +140,21 @@ pub struct KmeansResult {
     pub converged: bool,
     /// Per-iteration (sse, shift) history for convergence tests/plots.
     pub history: Vec<(f64, f64)>,
+    /// Per-iteration empty-cluster event counts, aligned with
+    /// [`history`](KmeansResult::history) for the engines that track
+    /// them (the keep-centroid policy of [`step::finalize`] stays; this
+    /// makes the events visible). Empty for engines that do not track.
+    pub empty_events: Vec<u64>,
     /// Distance-pruning counters — `Some` for the triangle-inequality
     /// engines ([`elkan`], [`hamerly`]), `None` for dense engines.
     pub pruning: Option<PruneStats>,
+}
+
+impl KmeansResult {
+    /// Total empty-cluster events across all iterations.
+    pub fn empty_total(&self) -> u64 {
+        self.empty_events.iter().sum()
+    }
 }
 
 impl KmeansResult {
@@ -187,10 +200,12 @@ mod tests {
             shift: 0.0,
             converged: true,
             history: vec![],
+            empty_events: vec![1, 0, 2],
             pruning: None,
         };
         assert_eq!(r.centroid(1), &[1.0, 1.0]);
         assert_eq!(r.cluster_sizes(), vec![1, 2]);
+        assert_eq!(r.empty_total(), 3);
     }
 
     #[test]

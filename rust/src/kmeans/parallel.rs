@@ -35,9 +35,11 @@ use std::sync::{Barrier, Mutex, RwLock};
 
 use crate::config::{DistancePolicy, SchedMode};
 use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
 use crate::kmeans::sched::{self, ChunkQueue};
 use crate::kmeans::step::{
-    assign_accumulate, assign_accumulate_into_mode, assign_accumulate_mode, finalize,
+    assign_accumulate, assign_accumulate_into_mode, assign_accumulate_mode, finalize_counted,
     merge_ordered, DistanceMode, PartialStats,
 };
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
@@ -88,6 +90,38 @@ pub fn run_from_sched(
     }
 }
 
+/// [`run_sched`] with checkpoint/resume (DESIGN.md §14). Snapshots are
+/// leader-side only — workers are stateless across iterations, so the
+/// leader's (centroids, history) at an iteration boundary is a complete
+/// resume point for either scheduler mode.
+pub fn run_sched_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    sched_mode: SchedMode,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<KmeansResult> {
+    let (centroids0, state) = match resume {
+        Some(state) => {
+            if let Some(done) = ckpt::resume_dense(ds, cfg, &state)? {
+                return Ok(done);
+            }
+            (state.centroids.clone(), Some(state))
+        }
+        None => (init::initialize(ds, cfg.k, cfg.init, cfg.seed), None),
+    };
+    match sched_mode {
+        SchedMode::Static => {
+            run_from_ckpt(ds, cfg, threads, merge, &centroids0, sink, state.as_ref())
+        }
+        SchedMode::Steal => {
+            run_from_steal_ckpt(ds, cfg, threads, merge, &centroids0, sink, state.as_ref())
+        }
+    }
+}
+
 /// Run with an explicit merge mode (ablation entry point).
 pub fn run_opts(
     ds: &Dataset,
@@ -107,6 +141,22 @@ pub fn run_from(
     merge: MergeMode,
     centroids0: &[f32],
 ) -> KmeansResult {
+    run_from_ckpt(ds, cfg, threads, merge, centroids0, None, None)
+        .expect("no checkpoint io configured")
+}
+
+/// The static-shard core behind [`run_from`]. `resumed` (if any)
+/// supplies the committed iteration counter and telemetry;
+/// `centroids0` must then be that snapshot's centroids.
+pub fn run_from_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
+) -> Result<KmeansResult> {
     let p = threads.max(1).min(ds.len().max(1));
     let k = cfg.k;
     let d = ds.dim();
@@ -139,9 +189,12 @@ pub fn run_from(
     let barrier = Barrier::new(p + 1); // workers + leader
     let done = AtomicBool::new(false);
 
-    let mut history: Vec<(f64, f64)> = Vec::new();
+    let (mut iterations, mut history, mut empty_events) = match resumed {
+        Some(s) => (s.iteration as usize, s.history.clone(), s.empty_events.clone()),
+        None => (0usize, Vec::new(), Vec::new()),
+    };
     let mut converged = false;
-    let mut iterations = 0usize;
+    let mut ckpt_err: Option<Error> = None;
 
     std::thread::scope(|scope| {
         // ---- workers: spawned once, live across all iterations --------
@@ -201,7 +254,7 @@ pub fn run_from(
         }
 
         // ---- leader ----------------------------------------------------
-        for _ in 0..cfg.max_iters {
+        for _ in iterations..cfg.max_iters {
             if merge == MergeMode::Critical {
                 global.lock().unwrap().reset();
             }
@@ -221,11 +274,30 @@ pub fn run_from(
                 }
             };
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift) = finalize(&merged, &mu_old);
+            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
-            if shift < cfg.tol {
+            empty_events.push(empties);
+            let converged_now = shift < cfg.tol;
+            if let Some(sink) = sink {
+                let snap_err = ckpt::save_dense(
+                    sink,
+                    &DenseSnap {
+                        iteration: iterations,
+                        converged: converged_now,
+                        centroids: &centroids.read().unwrap(),
+                        prev_centroids: &mu_old,
+                        history: &history,
+                        empty_events: &empty_events,
+                    },
+                );
+                if let Err(e) = snap_err {
+                    ckpt_err = Some(e);
+                    break;
+                }
+            }
+            if converged_now {
                 converged = true;
                 break;
             }
@@ -234,9 +306,12 @@ pub fn run_from(
         barrier.wait(); // release workers into the exit branch
     });
 
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
     let final_centroids = centroids.into_inner().unwrap();
     let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
-    KmeansResult {
+    Ok(KmeansResult {
         centroids: final_centroids,
         assign,
         k,
@@ -246,8 +321,9 @@ pub fn run_from(
         shift,
         converged,
         history,
+        empty_events,
         pruning: None,
-    }
+    })
 }
 
 /// The work-stealing dense engine: statistics keyed by chunk (never by
@@ -262,6 +338,22 @@ fn run_from_steal(
     merge: MergeMode,
     centroids0: &[f32],
 ) -> KmeansResult {
+    run_from_steal_ckpt(ds, cfg, threads, merge, centroids0, None, None)
+        .expect("no checkpoint io configured")
+}
+
+/// The work-stealing core with checkpoint/resume — same leader-side
+/// snapshot shape as the static path (chunk ownership is re-derived
+/// every iteration, so none of it needs to persist).
+fn run_from_steal_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    threads: usize,
+    merge: MergeMode,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
+) -> Result<KmeansResult> {
     let n = ds.len();
     let k = cfg.k;
     let d = ds.dim();
@@ -296,9 +388,12 @@ fn run_from_steal(
     let barrier = Barrier::new(p + 1);
     let done = AtomicBool::new(false);
 
-    let mut history: Vec<(f64, f64)> = Vec::new();
+    let (mut iterations, mut history, mut empty_events) = match resumed {
+        Some(s) => (s.iteration as usize, s.history.clone(), s.empty_events.clone()),
+        None => (0usize, Vec::new(), Vec::new()),
+    };
     let mut converged = false;
-    let mut iterations = 0usize;
+    let mut ckpt_err: Option<Error> = None;
 
     std::thread::scope(|scope| {
         // ---- workers: spawned once, live across all iterations --------
@@ -362,7 +457,7 @@ fn run_from_steal(
         }
 
         // ---- leader ----------------------------------------------------
-        for _ in 0..cfg.max_iters {
+        for _ in iterations..cfg.max_iters {
             if merge == MergeMode::Critical {
                 global.lock().unwrap().reset();
             }
@@ -382,11 +477,30 @@ fn run_from_steal(
                 }
             };
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift) = finalize(&merged, &mu_old);
+            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
-            if shift < cfg.tol {
+            empty_events.push(empties);
+            let converged_now = shift < cfg.tol;
+            if let Some(sink) = sink {
+                let snap_err = ckpt::save_dense(
+                    sink,
+                    &DenseSnap {
+                        iteration: iterations,
+                        converged: converged_now,
+                        centroids: &centroids.read().unwrap(),
+                        prev_centroids: &mu_old,
+                        history: &history,
+                        empty_events: &empty_events,
+                    },
+                );
+                if let Err(e) = snap_err {
+                    ckpt_err = Some(e);
+                    break;
+                }
+            }
+            if converged_now {
                 converged = true;
                 break;
             }
@@ -396,9 +510,12 @@ fn run_from_steal(
     });
     drop(chunk_assign); // release the per-chunk borrows of assign
 
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
     let final_centroids = centroids.into_inner().unwrap();
     let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
-    KmeansResult {
+    Ok(KmeansResult {
         centroids: final_centroids,
         assign,
         k,
@@ -408,8 +525,9 @@ fn run_from_steal(
         shift,
         converged,
         history,
+        empty_events,
         pruning: None,
-    }
+    })
 }
 
 #[cfg(test)]

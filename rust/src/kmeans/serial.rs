@@ -5,7 +5,9 @@
 //! E = Σ‖μ^{t+1} − μ^t‖² < tol (paper: 1e-6) or `max_iters`.
 
 use crate::data::Dataset;
-use crate::kmeans::step::{lloyd_iteration_policy, PartialStats};
+use crate::error::Result;
+use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
+use crate::kmeans::step::{lloyd_iteration_policy_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 
 /// Run serial Lloyd on `ds`.
@@ -17,6 +19,44 @@ pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
 /// Run from explicit initial centroids (used by the eval harness so
 /// every engine starts from identical state).
 pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansResult {
+    run_from_ckpt(ds, cfg, centroids0, None, None).expect("no checkpoint io configured")
+}
+
+/// [`run`] with checkpoint/resume (DESIGN.md §14): snapshots into
+/// `sink` when due, and/or continue from a loaded snapshot. Resume is
+/// bit-identical to the uninterrupted run because each Lloyd iteration
+/// is a pure function of the centroids it starts from.
+pub fn run_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<KmeansResult> {
+    match resume {
+        Some(state) => {
+            if let Some(done) = ckpt::resume_dense(ds, cfg, &state)? {
+                return Ok(done);
+            }
+            let c0 = state.centroids.clone();
+            run_from_ckpt(ds, cfg, &c0, sink, Some(&state))
+        }
+        None => {
+            let c0 = init::initialize(ds, cfg.k, cfg.init, cfg.seed);
+            run_from_ckpt(ds, cfg, &c0, sink, None)
+        }
+    }
+}
+
+/// The core loop behind every serial entry point. `resumed` (if any)
+/// supplies the iteration counter and telemetry already committed;
+/// `centroids0` must then be that snapshot's centroids.
+pub fn run_from_ckpt(
+    ds: &Dataset,
+    cfg: &KmeansConfig,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
+) -> Result<KmeansResult> {
     let k = cfg.k;
     let d = ds.dim();
     assert!(k >= 1, "k must be >= 1");
@@ -24,25 +64,42 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
     let mut centroids = centroids0.to_vec();
     let mut assign = vec![-1i32; ds.len()];
     let mut stats = PartialStats::zeros(k, d);
-    let mut history = Vec::new();
+    let (mut iterations, mut history, mut empty_events) = match resumed {
+        Some(s) => (s.iteration as usize, s.history.clone(), s.empty_events.clone()),
+        None => (0, Vec::new(), Vec::new()),
+    };
     let mut converged = false;
-    let mut iterations = 0;
 
-    for _ in 0..cfg.max_iters {
-        let (mu_new, shift, sse) =
-            lloyd_iteration_policy(ds, &centroids, k, &mut assign, &mut stats, cfg.distance)
+    for _ in iterations..cfg.max_iters {
+        let (mu_new, shift, sse, empties) =
+            lloyd_iteration_policy_counted(ds, &centroids, k, &mut assign, &mut stats, cfg.distance)
                 .expect("shapes validated above");
-        centroids = mu_new;
+        let prev = std::mem::replace(&mut centroids, mu_new);
         iterations += 1;
         history.push((sse, shift));
-        if shift < cfg.tol {
+        empty_events.push(empties);
+        let converged_now = shift < cfg.tol;
+        if let Some(sink) = sink {
+            ckpt::save_dense(
+                sink,
+                &DenseSnap {
+                    iteration: iterations,
+                    converged: converged_now,
+                    centroids: &centroids,
+                    prev_centroids: &prev,
+                    history: &history,
+                    empty_events: &empty_events,
+                },
+            )?;
+        }
+        if converged_now {
             converged = true;
             break;
         }
     }
 
     let (sse, shift) = *history.last().unwrap_or(&(f64::NAN, f64::NAN));
-    KmeansResult {
+    Ok(KmeansResult {
         centroids,
         assign,
         k,
@@ -52,8 +109,9 @@ pub fn run_from(ds: &Dataset, cfg: &KmeansConfig, centroids0: &[f32]) -> KmeansR
         shift,
         converged,
         history,
+        empty_events,
         pruning: None,
-    }
+    })
 }
 
 #[cfg(test)]

@@ -283,12 +283,26 @@ where
 /// produces new centroids and E = Σ‖μ_new − μ_old‖². Empty clusters
 /// keep their previous centroid (see python `model.make_finalize`).
 pub fn finalize(stats: &PartialStats, centroids_old: &[f32]) -> (Vec<f32>, f64) {
+    let (mu_new, shift, _) = finalize_counted(stats, centroids_old);
+    (mu_new, shift)
+}
+
+/// [`finalize`] that also reports how many clusters were empty this
+/// iteration (count == 0 → centroid kept). The count feeds
+/// [`crate::kmeans::KmeansResult::empty_events`] so degenerate data
+/// (k > distinct points, identical points) is visible in the run
+/// summary instead of silently absorbed by the keep-centroid policy.
+pub fn finalize_counted(stats: &PartialStats, centroids_old: &[f32]) -> (Vec<f32>, f64, u64) {
     let (k, d) = (stats.k, stats.dim);
     debug_assert_eq!(centroids_old.len(), k * d);
     let mut mu_new = vec![0.0f32; k * d];
     let mut shift = 0.0f64;
+    let mut empties = 0u64;
     for c in 0..k {
         let cnt = stats.counts[c];
+        if cnt == 0 {
+            empties += 1;
+        }
         for j in 0..d {
             let idx = c * d + j;
             let v = if cnt > 0 {
@@ -301,7 +315,7 @@ pub fn finalize(stats: &PartialStats, centroids_old: &[f32]) -> (Vec<f32>, f64) 
             shift += diff * diff;
         }
     }
-    (mu_new, shift)
+    (mu_new, shift, empties)
 }
 
 /// Single-threaded full Lloyd iteration over a dataset (assignment +
@@ -327,6 +341,22 @@ pub fn lloyd_iteration_policy(
     stats: &mut PartialStats,
     policy: DistancePolicy,
 ) -> Result<(Vec<f32>, f64, f64)> {
+    let (mu_new, shift, sse, _) =
+        lloyd_iteration_policy_counted(ds, centroids, k, assign_out, stats, policy)?;
+    Ok((mu_new, shift, sse))
+}
+
+/// [`lloyd_iteration_policy`] that also reports the iteration's
+/// empty-cluster count (see [`finalize_counted`]). Returns
+/// (new_centroids, shift, sse, empty_clusters).
+pub fn lloyd_iteration_policy_counted(
+    ds: &Dataset,
+    centroids: &[f32],
+    k: usize,
+    assign_out: &mut [i32],
+    stats: &mut PartialStats,
+    policy: DistancePolicy,
+) -> Result<(Vec<f32>, f64, f64, u64)> {
     match policy {
         DistancePolicy::Exact => {
             assign_accumulate(ds.raw(), ds.dim(), centroids, k, assign_out, stats)?;
@@ -344,8 +374,8 @@ pub fn lloyd_iteration_policy(
             )?;
         }
     }
-    let (mu_new, shift) = finalize(stats, centroids);
-    Ok((mu_new, shift, stats.sse))
+    let (mu_new, shift, empties) = finalize_counted(stats, centroids);
+    Ok((mu_new, shift, stats.sse, empties))
 }
 
 #[cfg(test)]
@@ -424,6 +454,13 @@ mod tests {
         assign_accumulate(ds.raw(), 2, &mu, 2, &mut assign, &mut stats).unwrap();
         let (mu_new, _) = finalize(&stats, &mu);
         assert_eq!(&mu_new[2..4], &[99.0, 99.0]);
+        // the counted variant reports the event, bit-identically
+        let (mu_counted, _, empties) = finalize_counted(&stats, &mu);
+        assert_eq!(empties, 1);
+        assert_eq!(
+            mu_counted.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            mu_new.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -38,7 +38,8 @@ use crate::config::{DistancePolicy, Init};
 use crate::data::dataset::shard_ranges;
 use crate::data::source::{ChunkReader as _, DataSource};
 use crate::error::{Error, Result};
-use crate::kmeans::step::{self, finalize, merge_ordered, DistanceMode, PartialStats};
+use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
+use crate::kmeans::step::{self, finalize_counted, merge_ordered, DistanceMode, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::linalg::kernel;
 use crate::rng::Pcg64;
@@ -175,12 +176,60 @@ pub fn run(src: &dyn DataSource, cfg: &KmeansConfig, opts: &StreamOpts) -> Resul
     run_from(src, cfg, opts, &centroids0)
 }
 
+/// [`run`] with checkpoint/resume (DESIGN.md §14): the leader snapshots
+/// dense state at each committed iteration boundary. Resume is
+/// bit-identical because each streamed iteration is a pure function of
+/// the centroids it starts from (the chunked-accumulation contract).
+pub fn run_ckpt(
+    src: &dyn DataSource,
+    cfg: &KmeansConfig,
+    opts: &StreamOpts,
+    sink: Option<&CkptSink>,
+    resume: Option<CkptState>,
+) -> Result<KmeansResult> {
+    match resume {
+        Some(state) => {
+            let c0 = state.centroids.clone();
+            run_from_ckpt(src, cfg, opts, &c0, sink, Some(&state))
+        }
+        None => {
+            let centroids0 = match cfg.init {
+                Init::Random => init_random(src, cfg.k, cfg.seed)?,
+                Init::KmeansPlusPlus => {
+                    return Err(Error::Config(
+                        "streaming: kmeans++ init needs a resident dataset; \
+                         precompute centroids (kmeans::init) and call run_from"
+                            .into(),
+                    ))
+                }
+            };
+            run_from_ckpt(src, cfg, opts, &centroids0, sink, None)
+        }
+    }
+}
+
 /// Run out-of-core Lloyd from explicit initial centroids.
 pub fn run_from(
     src: &dyn DataSource,
     cfg: &KmeansConfig,
     opts: &StreamOpts,
     centroids0: &[f32],
+) -> Result<KmeansResult> {
+    run_from_ckpt(src, cfg, opts, centroids0, None, None)
+}
+
+/// The core loop behind every streaming entry point. On resume,
+/// `centroids0` must be the snapshot's centroids; a snapshot that is
+/// already terminal is finished with a single assignment-only streamed
+/// pass against its `prev_centroids` (per-row pure, so chunking and
+/// sharding cannot change the bits).
+fn run_from_ckpt(
+    src: &dyn DataSource,
+    cfg: &KmeansConfig,
+    opts: &StreamOpts,
+    centroids0: &[f32],
+    sink: Option<&CkptSink>,
+    resumed: Option<&CkptState>,
 ) -> Result<KmeansResult> {
     let n = src.len();
     let d = src.dim();
@@ -208,6 +257,35 @@ pub fn run_from(
     let _ = kernel::active_tier();
     let policy = cfg.distance;
 
+    if let Some(state) = resumed {
+        state.check_dense(k, d)?;
+        if state.fingerprint.n != n as u64 {
+            return Err(Error::Ckpt(format!(
+                "state fingerprint n {} != source n {n}",
+                state.fingerprint.n
+            )));
+        }
+        if state.converged || state.iteration as usize >= cfg.max_iters {
+            // terminal snapshot: one assignment-only streamed pass
+            let mut assign = vec![-1i32; n];
+            let mut stats = PartialStats::zeros(k, d);
+            stream_shard(
+                src,
+                0,
+                n,
+                opts.chunk_rows,
+                d,
+                &state.prev_centroids,
+                k,
+                &mut assign,
+                &mut stats,
+                policy,
+                None,
+            )?;
+            return Ok(ckpt::result_from_state(state, assign, k, d));
+        }
+    }
+
     let p = opts.shards.min(n);
     let chunk_rows = opts.chunk_rows;
     let ranges = shard_ranges(n, p);
@@ -231,9 +309,11 @@ pub fn run_from(
     let barrier = Barrier::new(p + 1); // workers + leader
     let done = AtomicBool::new(false);
 
-    let mut history: Vec<(f64, f64)> = Vec::new();
+    let mut history: Vec<(f64, f64)> = resumed.map(|s| s.history.clone()).unwrap_or_default();
+    let mut empty_events: Vec<u64> =
+        resumed.map(|s| s.empty_events.clone()).unwrap_or_default();
     let mut converged = false;
-    let mut iterations = 0usize;
+    let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
     let mut worker_err: Option<Error> = None;
 
     std::thread::scope(|scope| {
@@ -277,7 +357,7 @@ pub fn run_from(
         }
 
         // ---- leader ---------------------------------------------------
-        for _ in 0..cfg.max_iters {
+        for _ in iterations..cfg.max_iters {
             barrier.wait(); // (A)
             barrier.wait(); // (B) workers finished this iteration
             if let Some(e) = fail.lock().unwrap().take() {
@@ -286,11 +366,30 @@ pub fn run_from(
             }
             let merged = merge_ordered(slots.iter().map(|s| s.lock().unwrap()));
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift) = finalize(&merged, &mu_old);
+            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
-            if shift < cfg.tol {
+            empty_events.push(empties);
+            let converged_now = shift < cfg.tol;
+            if let Some(sink) = sink {
+                let res = ckpt::save_dense(
+                    sink,
+                    &DenseSnap {
+                        iteration: iterations,
+                        converged: converged_now,
+                        centroids: &centroids.read().unwrap(),
+                        prev_centroids: &mu_old,
+                        history: &history,
+                        empty_events: &empty_events,
+                    },
+                );
+                if let Err(e) = res {
+                    worker_err = Some(e);
+                    break;
+                }
+            }
+            if converged_now {
                 converged = true;
                 break;
             }
@@ -314,6 +413,7 @@ pub fn run_from(
         shift,
         converged,
         history,
+        empty_events,
         pruning: None,
     })
 }

@@ -106,6 +106,9 @@ fn print_usage() {
          \u{20}          [--workers a:p1,b:p2,...] [--net-timeout SECS]   (dist: shard workers)\n\
          \u{20}          [--dist-sched static|elastic] [--retry N]   (dist: elastic = chunk\n\
          \u{20}          re-dispatch + worker retry/rejoin; needs replicated full-view workers)\n\
+         \u{20}          [--checkpoint DIR] [--checkpoint-every N] [--resume DIR]   (durable .pkc\n\
+         \u{20}          snapshots, A/B rotated; resume continues bit-identically —\n\
+         \u{20}          serial|threads|elkan|hamerly|oocore|dist)\n\
          worker    --listen HOST:PORT  --input <file.pkd> | --synthetic <2d|3d>:<N>\n\
          \u{20}          [--shard I/S] [--chunk C] [--seed S (synthetic only)] [--once]\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
@@ -308,7 +311,23 @@ fn cmd_run(args: &Args) -> Result<()> {
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
+    let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
+    let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
+    let resume_dir = args.get("resume").map(PathBuf::from);
     args.finish()?;
+
+    if ckpt_every == 0 {
+        return Err(Error::Config("--checkpoint-every must be >= 1".into()));
+    }
+    let ckpt_active = ckpt_dir.is_some() || resume_dir.is_some();
+    // only the engines wired for iteration-boundary snapshots accept
+    // the flags — rejecting elsewhere keeps "checkpointed" honest
+    if ckpt_active && !matches!(engine, Engine::Serial | Engine::Threads | Engine::Elkan | Engine::Hamerly)
+    {
+        return Err(Error::Config(format!(
+            "--checkpoint/--resume apply to serial|threads|elkan|hamerly|oocore|dist, not `{engine}`"
+        )));
+    }
 
     // fix the process-global hot-path tier before any engine runs: an
     // explicit --kernel wins; otherwise active_tier() honors the
@@ -320,27 +339,61 @@ fn cmd_run(args: &Args) -> Result<()> {
     let kernel_choice = kernel_flag.unwrap_or(KernelChoice::Auto);
 
     let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
+    // the fingerprint pins everything resumed state must agree on; a
+    // serial run has no scheduler, recorded as "none"
+    let (sink, resume_state) = if ckpt_active {
+        let sched_str = match engine {
+            Engine::Serial => "none".to_string(),
+            _ => sched.to_string(),
+        };
+        let fp = kmeans::ckpt::fingerprint(&engine.to_string(), &sched_str, &kc, ds.len(), ds.dim());
+        let sink = match &ckpt_dir {
+            Some(dir) => Some(kmeans::ckpt::CkptSink::create(dir, ckpt_every, fp.clone())?),
+            None => None,
+        };
+        let state = match &resume_dir {
+            Some(dir) => Some(kmeans::ckpt::load_validated(dir, &fp)?),
+            None => None,
+        };
+        (sink, state)
+    } else {
+        (None, None)
+    };
+    let resumed_iter = resume_state.as_ref().map(|s| s.iteration);
     let t0 = std::time::Instant::now();
     let (result, setup, engine_wall) = match engine {
-        Engine::Serial => (kmeans::serial::run(&ds, &kc), 0.0, None),
+        Engine::Serial => {
+            (kmeans::serial::run_ckpt(&ds, &kc, sink.as_ref(), resume_state)?, 0.0, None)
+        }
         Engine::Threads => (
-            kmeans::parallel::run_sched(
+            kmeans::parallel::run_sched_ckpt(
                 &ds,
                 &kc,
                 threads,
                 kmeans::parallel::MergeMode::Leader,
                 sched,
-            ),
+                sink.as_ref(),
+                resume_state,
+            )?,
             0.0,
             None,
         ),
-        Engine::Elkan => (kmeans::elkan::run_threads(&ds, &kc, threads, sched), 0.0, None),
-        Engine::Hamerly => (kmeans::hamerly::run_threads(&ds, &kc, threads, sched), 0.0, None),
+        Engine::Elkan => (
+            kmeans::elkan::run_ckpt(&ds, &kc, threads, sched, sink.as_ref(), resume_state)?,
+            0.0,
+            None,
+        ),
+        Engine::Hamerly => (
+            kmeans::hamerly::run_ckpt(&ds, &kc, threads, sched, sink.as_ref(), resume_state)?,
+            0.0,
+            None,
+        ),
         Engine::MiniBatch => (kmeans::minibatch::run(&ds, &kc, batch), 0.0, None),
         Engine::Shared => {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
+                checkpoint: None, checkpoint_every: 1, resume: None,
             };
             let run = shared::run(&ds, &cfg, threads)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -349,6 +402,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
+                checkpoint: None, checkpoint_every: 1, resume: None,
             };
             let run = offload::run(&ds, &cfg)?;
             (run.result.clone(), run.setup_secs, Some((run.wall_secs, run.table_secs())))
@@ -360,6 +414,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let cfg = RunConfig {
                 engine, k, tol, max_iters, seed, init, threads, sched, chunk, batch,
                 memory_budget: 0, artifacts_dir: artifacts, kernel: kernel_choice, distance,
+                checkpoint: None, checkpoint_every: 1, resume: None,
             };
             let run =
                 parakmeans::coordinator::streaming::run_file(std::path::Path::new(path), &cfg)?;
@@ -379,6 +434,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "iterations  : {} (converged: {})",
         result.iterations, result.converged
     );
+    if let Some(it) = resumed_iter {
+        println!("resumed     : from iteration {it}");
+    }
+    if let Some(s) = &sink {
+        println!("checkpoints : {} (every {ckpt_every} iterations)", s.dir().display());
+    }
     println!("sse         : {:.6e}", result.sse);
     println!("final shift : {:.3e}", result.shift);
     match engine_wall {
@@ -389,6 +450,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => println!("time        : {total:.4}s"),
     }
     println!("cluster sizes: {:?}", result.cluster_sizes());
+    print_empty_clusters(&result);
     if let Some(prune) = &result.pruning {
         println!(
             "pruning     : {:.1}% of dense distance work skipped ({} computed, {} skipped)",
@@ -409,7 +471,35 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = save_model {
         save_model_file(&path, engine, seed, &result)?;
     }
+    print_artifact_warnings();
     Ok(())
+}
+
+/// One summary line when any iteration hit the keep-centroid policy
+/// (an empty cluster kept its previous centroid — DESIGN.md §2).
+/// Silent in the common all-clusters-populated case.
+fn print_empty_clusters(result: &parakmeans::kmeans::KmeansResult) {
+    let empties = result.empty_total();
+    if empties > 0 {
+        println!(
+            "empty clust.: {empties} keep-centroid events across {} of {} iterations",
+            result.empty_events.iter().filter(|&&e| e > 0).count(),
+            result.iterations
+        );
+    }
+}
+
+/// One summary line when any artifact read this run lacked (or needed
+/// leniency about) its CRC trailer — legacy files still load, but the
+/// run says so instead of silently trusting unverified bytes.
+fn print_artifact_warnings() {
+    let warns = io::artifact_warnings();
+    if warns > 0 {
+        println!(
+            "warnings    : {warns} artifact integrity warning(s) — legacy CRC-less file(s) \
+             read unverified; rewrite them to add trailers"
+        );
+    }
 }
 
 /// `--assign-out`: write the assignment vector as an `index,cluster`
@@ -479,6 +569,9 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     let distance = distance_from(args)?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
+    let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
+    let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
+    let resume_dir = args.get("resume").map(PathBuf::from);
 
     // build the source without materializing anything
     let source: Box<dyn DataSource> = if let Some(path) = args.get("input") {
@@ -528,13 +621,35 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         artifacts_dir: "artifacts".into(),
         kernel: kernel_choice,
         distance,
+        checkpoint: ckpt_dir.clone(),
+        checkpoint_every: ckpt_every,
+        resume: resume_dir.clone(),
     };
     cfg.validate()?;
     let opts = StreamOpts::from_run_config(&cfg, source.dim())?;
     let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
 
+    // oocore always shards contiguously — "static" is the recorded
+    // scheduler, matching the documented threads-static bit-identity
+    let (sink, resume_state) = if ckpt_dir.is_some() || resume_dir.is_some() {
+        let fp =
+            kmeans::ckpt::fingerprint("oocore", "static", &kc, source.len(), source.dim());
+        let sink = match &ckpt_dir {
+            Some(dir) => Some(kmeans::ckpt::CkptSink::create(dir, ckpt_every, fp.clone())?),
+            None => None,
+        };
+        let state = match &resume_dir {
+            Some(dir) => Some(kmeans::ckpt::load_validated(dir, &fp)?),
+            None => None,
+        };
+        (sink, state)
+    } else {
+        (None, None)
+    };
+    let resumed_iter = resume_state.as_ref().map(|s| s.iteration);
+
     let t0 = std::time::Instant::now();
-    let result = streaming::run(source.as_ref(), &kc, &opts)?;
+    let result = streaming::run_ckpt(source.as_ref(), &kc, &opts, sink.as_ref(), resume_state)?;
     let total = t0.elapsed().as_secs_f64();
 
     let payload_bytes = source.len() * source.dim() * 4;
@@ -556,10 +671,17 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         "iterations  : {} (converged: {})",
         result.iterations, result.converged
     );
+    if let Some(it) = resumed_iter {
+        println!("resumed     : from iteration {it}");
+    }
+    if let Some(s) = &sink {
+        println!("checkpoints : {} (every {ckpt_every} iterations)", s.dir().display());
+    }
     println!("sse         : {:.6e}", result.sse);
     println!("final shift : {:.3e}", result.shift);
     println!("time        : {total:.4}s");
     println!("cluster sizes: {:?}", result.cluster_sizes());
+    print_empty_clusters(&result);
     if source.has_truth() {
         // honor the budget: truth labels are another O(n·4) bytes on
         // top of the assignment vector
@@ -582,6 +704,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     if let Some(path) = save_model {
         save_model_file(&path, Engine::OutOfCore, seed, &result)?;
     }
+    print_artifact_warnings();
     Ok(())
 }
 
@@ -610,6 +733,9 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let distance = distance_from(args)?;
     let assign_out = args.get("assign-out").map(PathBuf::from);
     let save_model = args.get("save-model").map(PathBuf::from);
+    let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
+    let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
+    let resume_dir = args.get("resume").map(PathBuf::from);
     args.finish()?;
 
     if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
@@ -618,6 +744,9 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     if retry > 1_000 {
         return Err(Error::Config("--retry must be <= 1000".into()));
     }
+    if ckpt_every == 0 {
+        return Err(Error::Config("--checkpoint-every must be >= 1".into()));
+    }
     let kc = KmeansConfig { k, tol, max_iters, seed, init, distance };
     let opts = DistOpts {
         connect_timeout: std::time::Duration::from_secs_f64(net_timeout.min(10.0)),
@@ -625,9 +754,22 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
         sched,
         retry,
     };
+    let ckpt_active = ckpt_dir.is_some() || resume_dir.is_some();
 
     let t0 = std::time::Instant::now();
-    let run = dist::run(&addrs, &kc, &opts)?;
+    // the leader learns (n, d) from the worker handshake, so fingerprint
+    // construction — and with it sink creation and resume validation —
+    // lives behind run_ckpt_spec rather than here
+    let run = if ckpt_active {
+        let spec = dist::CkptSpec {
+            checkpoint: ckpt_dir.clone(),
+            every: ckpt_every,
+            resume: resume_dir.clone(),
+        };
+        dist::run_ckpt_spec(&addrs, &kc, &opts, &spec)?
+    } else {
+        dist::run(&addrs, &kc, &opts)?
+    };
     let total = t0.elapsed().as_secs_f64();
     let result = &run.result;
     let net = &run.net;
@@ -649,6 +791,12 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
         "iterations  : {} (converged: {})",
         result.iterations, result.converged
     );
+    if let Some(dir) = &resume_dir {
+        println!("resumed     : from {}", dir.display());
+    }
+    if let Some(dir) = &ckpt_dir {
+        println!("checkpoints : {} (every {ckpt_every} iterations)", dir.display());
+    }
     println!("sse         : {:.6e}", result.sse);
     println!("final shift : {:.3e}", result.shift);
     println!("time        : {total:.4}s");
@@ -677,12 +825,14 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
         );
     }
     println!("cluster sizes: {:?}", result.cluster_sizes());
+    print_empty_clusters(result);
     if let Some(path) = assign_out {
         write_assign_csv(&path, &result.assign)?;
     }
     if let Some(path) = save_model {
         save_model_file(&path, Engine::Dist, seed, result)?;
     }
+    print_artifact_warnings();
     Ok(())
 }
 

@@ -199,11 +199,7 @@ pub fn append_bench_json(path: &Path, rows: Vec<Json>) -> crate::error::Result<(
         Err(_) => Vec::new(),
     };
     all.extend(rows);
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    std::fs::write(path, Json::Arr(all).to_string())?;
-    Ok(())
+    crate::data::io::atomic_write(path, Json::Arr(all).to_string().as_bytes())
 }
 
 /// Print a sample row in the house bench format (parsed by EXPERIMENTS

@@ -1,0 +1,138 @@
+//! Incremental CRC32 (IEEE 802.3 polynomial, the zlib/PNG variant).
+//!
+//! Hand-rolled because the offline image ships no `crc32fast`
+//! (DESIGN.md §8). The table is built at compile time; the hasher is
+//! incremental so artifact readers can verify streamed bytes without
+//! buffering the whole file (no extra allocation on the read path).
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Incremental CRC32 hasher. `update` as bytes arrive, `finish` for
+/// the final value; a fresh hasher starts over.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot convenience over [`Crc32`].
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// A [`std::io::Read`] adapter that hashes every byte it passes
+/// through — artifact readers verify CRC trailers incrementally with
+/// zero extra allocation (the satellite requirement on the `.pkd`
+/// read path).
+pub struct CrcReader<R> {
+    inner: R,
+    crc: Crc32,
+}
+
+impl<R> CrcReader<R> {
+    pub fn new(inner: R) -> Self {
+        CrcReader { inner, crc: Crc32::new() }
+    }
+
+    /// CRC of everything read so far.
+    pub fn digest(&self) -> u32 {
+        self.crc.finish()
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for CrcReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical IEEE CRC32 check values
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let whole = crc32(&data);
+        let mut h = Crc32::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), whole);
+    }
+
+    #[test]
+    fn crc_reader_hashes_what_it_reads() {
+        use std::io::Read;
+        let data: Vec<u8> = (0..200u8).collect();
+        let mut r = CrcReader::new(&data[..]);
+        let mut sink = Vec::new();
+        r.read_to_end(&mut sink).unwrap();
+        assert_eq!(sink, data);
+        assert_eq!(r.digest(), crc32(&data));
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let data = vec![0xA5u8; 64];
+        let base = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), base, "flip at {byte}:{bit} undetected");
+            }
+        }
+    }
+}

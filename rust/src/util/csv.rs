@@ -7,33 +7,32 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-use crate::error::Result;
+use crate::data::io::atomic_write_with;
+use crate::error::{Error, Result};
 
-/// Write rows of `f64` columns with a header line.
+/// Write rows of `f64` columns with a header line. Routed through
+/// [`atomic_write_with`] so a crash mid-write never leaves a torn
+/// table behind.
 pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{}", header.join(","))?;
-    for row in rows {
-        let cells: Vec<String> = row.iter().map(|v| format_num(*v)).collect();
-        writeln!(f, "{}", cells.join(","))?;
-    }
-    Ok(())
+    atomic_write_with(path, |f| {
+        writeln!(f, "{}", header.join(","))?;
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|v| format_num(*v)).collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        Ok(())
+    })
 }
 
-/// Write string rows (mixed-type tables).
+/// Write string rows (mixed-type tables). Atomic like [`write_table`].
 pub fn write_rows(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{}", header.join(","))?;
-    for row in rows {
-        writeln!(f, "{}", row.join(","))?;
-    }
-    Ok(())
+    atomic_write_with(path, |f| {
+        writeln!(f, "{}", header.join(","))?;
+        for row in rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    })
 }
 
 fn format_num(v: f64) -> String {
@@ -65,6 +64,47 @@ pub fn read_table(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
                 .map(|c| c.parse().unwrap_or(f64::NAN))
                 .collect(),
         );
+    }
+    Ok((header, rows))
+}
+
+/// Strict numeric CSV reader for *dataset* ingestion: any cell that is
+/// not a finite number is a typed [`Error::Data`] naming the offending
+/// row and column, never a silent NaN that would poison every distance
+/// downstream. Report/table readers keep the lenient [`read_table`].
+pub fn read_table_strict(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => split_line(&h?),
+        None => return Ok((vec![], vec![])),
+    };
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        // data-row index (0-based, header excluded) — matches the
+        // "row {i}" convention of data::io::read_csv, which delegates
+        // here
+        let rowno = rows.len();
+        let cells = split_line(&line);
+        let mut row = Vec::with_capacity(cells.len());
+        for (col, cell) in cells.iter().enumerate() {
+            let v: f64 = cell.trim().parse().map_err(|_| {
+                Error::Data(format!(
+                    "csv row {rowno} col {col}: cell {cell:?} is not numeric"
+                ))
+            })?;
+            if !v.is_finite() {
+                return Err(Error::Data(format!(
+                    "csv row {rowno} col {col}: non-finite value {cell:?}"
+                )));
+            }
+            row.push(v);
+        }
+        rows.push(row);
     }
     Ok((header, rows))
 }
@@ -158,6 +198,37 @@ mod tests {
     fn quoted_cells() {
         assert_eq!(split_line(r#"a,"b,c",d"#), vec!["a", "b,c", "d"]);
         assert_eq!(split_line(r#""he said ""hi""",2"#), vec![r#"he said "hi""#, "2"]);
+    }
+
+    #[test]
+    fn strict_reader_rejects_non_numeric_and_non_finite() {
+        let p = tmp("strict.csv");
+        std::fs::write(&p, "x,y\n1.0,2.0\n3.0,oops\n").unwrap();
+        let err = read_table_strict(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err:?}");
+        assert!(err.to_string().contains("oops"), "{err}");
+
+        std::fs::write(&p, "x,y\n1.0,inf\n").unwrap();
+        let err = read_table_strict(&p).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err:?}");
+        assert!(err.to_string().contains("non-finite"), "{err}");
+
+        std::fs::write(&p, "x,y\nnan,1.0\n").unwrap();
+        assert!(read_table_strict(&p).is_err());
+
+        // the lenient reader still maps the same cells to NaN
+        std::fs::write(&p, "x,y\n3.0,oops\n").unwrap();
+        let (_, rows) = read_table(&p).unwrap();
+        assert!(rows[0][1].is_nan());
+    }
+
+    #[test]
+    fn strict_reader_accepts_clean_tables() {
+        let p = tmp("strict_ok.csv");
+        write_table(&p, &["a", "b"], &[vec![1.0, -2.5]]).unwrap();
+        let (h, rows) = read_table_strict(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec![1.0, -2.5]]);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Fuzz: the artifact codecs (`.pkc` checkpoints, `.pkm` models) are
+//! total functions over arbitrary bytes — every decode of corrupt
+//! input is a *typed* error (`Error::Ckpt` / `Error::Data`), never a
+//! panic, hang, or attacker-sized allocation (DESIGN.md §14).
+//!
+//! Adversarial coverage per run, all deterministic (seeds derive from
+//! property names; `PARAKM_PROP_SEED` overrides):
+//!   - truncation at EVERY byte boundary of valid encodings
+//!   - random bit flips / inserts / deletes / overwrites (`Gen::mutate`)
+//!   - pure byte soup, with and without a valid magic+version prefix
+//!   - forged section lengths (0xFFFF_FFFF) and wrong format versions
+//! Totals well over 5,000 hostile inputs; the count is asserted so a
+//! refactor cannot silently shrink the net.
+//!
+//! Round-trip: `encode_ckpt` is deterministic and bit-exact (NaN
+//! history entries included), so equality is checked on the *bytes* —
+//! `encode(decode(b)) == b` — which is stricter than `PartialEq` on
+//! the structs (NaN != NaN) and proves the codec loses nothing.
+
+use parakmeans::data::io::{self, Model};
+use parakmeans::error::Error;
+use parakmeans::kmeans::ckpt::{Bounds, CkptState, Fingerprint};
+use parakmeans::testutil::prop::{self, Gen};
+
+fn gen_fingerprint(g: &mut Gen) -> Fingerprint {
+    Fingerprint {
+        engine: (*g.choice(&["serial", "threads", "elkan", "hamerly", "oocore", "dist"])).to_string(),
+        seed: g.u64(),
+        k: g.usize_in(1, 16) as u32,
+        distance: (*g.choice(&["exact", "dot"])).to_string(),
+        sched: (*g.choice(&["none", "static", "steal", "elastic"])).to_string(),
+        n: g.usize_in(1, 100_000) as u64,
+        d: g.usize_in(1, 8) as u32,
+    }
+}
+
+/// A structurally consistent snapshot — what a real engine would save.
+/// `with_bounds` adds an Elkan- or Hamerly-shaped bounds section.
+fn gen_state(g: &mut Gen, with_bounds: bool) -> CkptState {
+    let fp = gen_fingerprint(g);
+    let (k, d) = (fp.k as usize, fp.d as usize);
+    let n = g.usize_in(1, 48);
+    let iter = g.usize_in(1, 10) as u64;
+    let kd = k * d;
+    let mut history: Vec<(f64, f64)> =
+        (0..iter).map(|_| (g.f64_in(0.0, 1e9), g.f64_in(0.0, 16.0))).collect();
+    if g.bool() {
+        // bounds engines store NaN sse until the lazy fill — the codec
+        // must round-trip the exact NaN bit pattern
+        if let Some(h) = history.last_mut() {
+            h.0 = f64::NAN;
+        }
+    }
+    let lower_per_point = if g.bool() { k } else { 1 };
+    let bounds = if with_bounds {
+        Some(Bounds {
+            assign: (0..n).map(|_| g.usize_in(0, k - 1) as i32).collect(),
+            upper: (0..n).map(|_| g.f32_in(0.0, 64.0)).collect(),
+            lower: (0..n * lower_per_point).map(|_| g.f32_in(0.0, 64.0)).collect(),
+            sums: (0..kd).map(|_| g.f64_in(-1e3, 1e3)).collect(),
+            counts: (0..k).map(|_| g.usize_in(0, 1000) as u64).collect(),
+            prune_seed_computed: g.u64(),
+            prune_per_iter: (0..iter).map(|_| (g.u64() % 4096, g.u64() % 4096)).collect(),
+        })
+    } else {
+        None
+    };
+    CkptState {
+        fingerprint: fp,
+        iteration: iter,
+        converged: g.bool(),
+        centroids: (0..kd).map(|_| g.f32_in(-16.0, 16.0)).collect(),
+        prev_centroids: (0..kd).map(|_| g.f32_in(-16.0, 16.0)).collect(),
+        history,
+        empty_events: (0..iter).map(|_| g.usize_in(0, 4) as u64).collect(),
+        bounds,
+    }
+}
+
+fn gen_model(g: &mut Gen) -> Model {
+    let k = g.usize_in(1, 16);
+    let dim = g.usize_in(1, 8);
+    Model {
+        k,
+        dim,
+        seed: g.u64(),
+        engine: (*g.choice(&["serial", "threads", "dist"])).to_string(),
+        iterations: g.usize_in(1, 500),
+        sse: g.f64_in(0.0, 1e12),
+        centroids: (0..k * dim).map(|_| g.f32_in(-16.0, 16.0)).collect(),
+    }
+}
+
+// ---- .pkc checkpoints --------------------------------------------------
+
+#[test]
+fn ckpt_roundtrip_is_bit_exact() {
+    prop::check("ckpt_roundtrip", 600, |g| {
+        let with_bounds = g.bool();
+        let state = gen_state(g, with_bounds);
+        let bytes = io::encode_ckpt(&state);
+        let decoded = match io::decode_ckpt(&bytes) {
+            Ok(s) => s,
+            Err(e) => return Err(format!("valid encoding failed to decode: {e}")),
+        };
+        prop::ensure(
+            io::encode_ckpt(&decoded) == bytes,
+            "re-encode of decoded state diverged from original bytes",
+        )?;
+        prop::ensure(decoded.bounds.is_some() == with_bounds, "bounds presence lost")?;
+        prop::ensure(decoded.iteration == state.iteration, "iteration lost")
+    });
+}
+
+#[test]
+fn ckpt_truncation_at_every_byte_is_typed() {
+    // every strict prefix of a valid .pkc must fail typed: the final
+    // section's CRC is always missing, so no prefix can decode
+    let mut cases = 0usize;
+    for seed in 0..6u64 {
+        let mut g = Gen::new(seed);
+        let state = gen_state(&mut g, seed % 2 == 0);
+        let bytes = io::encode_ckpt(&state);
+        for len in 0..bytes.len() {
+            match io::decode_ckpt(&bytes[..len]) {
+                Err(Error::Ckpt(_)) => {}
+                Ok(_) => panic!("truncation to {len}/{} bytes decoded", bytes.len()),
+                Err(e) => panic!("truncation to {len} bytes gave non-Ckpt error: {e:?}"),
+            }
+            cases += 1;
+        }
+    }
+    assert!(cases >= 1500, "truncation sweep shrank to {cases} cases");
+}
+
+#[test]
+fn ckpt_mutations_never_panic() {
+    prop::check("ckpt_mutations", 2000, |g| {
+        let with_bounds = g.bool();
+        let state = gen_state(g, with_bounds);
+        let mut bytes = io::encode_ckpt(&state);
+        let edits = g.usize_in(1, 12);
+        g.mutate(&mut bytes, edits);
+        // decode must be total: Ok (mutation was benign or reverted) or
+        // a typed checkpoint error — anything else fails the property
+        match io::decode_ckpt(&bytes) {
+            Ok(_) | Err(Error::Ckpt(_)) => Ok(()),
+            Err(e) => Err(format!("mutated .pkc gave non-Ckpt error: {e:?}")),
+        }
+    });
+}
+
+#[test]
+fn ckpt_byte_soup_is_typed() {
+    prop::check("ckpt_soup", 1000, |g| {
+        let n = g.usize_in(0, 512);
+        let soup = g.bytes(n);
+        match io::decode_ckpt(&soup) {
+            Ok(_) => Err("byte soup decoded as a checkpoint".into()),
+            Err(Error::Ckpt(_)) => Ok(()),
+            Err(e) => Err(format!("soup gave non-Ckpt error: {e:?}")),
+        }
+    });
+}
+
+#[test]
+fn ckpt_soup_behind_valid_header_is_typed() {
+    // correct magic + version, then garbage: the section framing (len
+    // guard + CRC) must reject it without allocating the forged length
+    prop::check("ckpt_header_soup", 800, |g| {
+        let state = gen_state(g, false);
+        let valid = io::encode_ckpt(&state);
+        let mut bytes = valid[..12].to_vec(); // magic + version
+        let tail = g.usize_in(0, 256);
+        bytes.extend_from_slice(&g.bytes(tail));
+        match io::decode_ckpt(&bytes) {
+            Ok(_) => Err("garbage behind a valid header decoded".into()),
+            Err(Error::Ckpt(_)) => Ok(()),
+            Err(e) => Err(format!("non-Ckpt error: {e:?}")),
+        }
+    });
+}
+
+#[test]
+fn ckpt_forged_section_length_is_typed_not_oom() {
+    let mut g = Gen::new(7);
+    let state = gen_state(&mut g, true);
+    let mut bytes = io::encode_ckpt(&state);
+    // first section length lives right after magic(8) + version(4)
+    bytes[12..16].copy_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+    match io::decode_ckpt(&bytes) {
+        Err(Error::Ckpt(_)) => {}
+        other => panic!("forged 4 GiB section length: {other:?}"),
+    }
+}
+
+#[test]
+fn ckpt_wrong_version_is_typed_and_named() {
+    let mut g = Gen::new(11);
+    let state = gen_state(&mut g, false);
+    let mut bytes = io::encode_ckpt(&state);
+    bytes[8..12].copy_from_slice(&999u32.to_le_bytes());
+    let err = io::decode_ckpt(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    assert!(err.to_string().contains("version 999"), "{err}");
+}
+
+#[test]
+fn ckpt_wrong_magic_is_typed() {
+    let mut g = Gen::new(13);
+    let state = gen_state(&mut g, false);
+    let mut bytes = io::encode_ckpt(&state);
+    bytes[0] ^= 0x20;
+    let err = io::decode_ckpt(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+// ---- .pkm models -------------------------------------------------------
+
+#[test]
+fn model_truncation_sweep_typed_except_legacy_point() {
+    // one legal truncation exists: dropping exactly the 4-byte CRC
+    // trailer is the legacy CRC-less layout, which still decodes (and
+    // bumps the artifact-warnings counter). Every other prefix fails.
+    let mut cases = 0usize;
+    for seed in 0..4u64 {
+        let mut g = Gen::new(seed);
+        let model = gen_model(&mut g);
+        let bytes = io::encode_model(&model).unwrap();
+        let legacy_len = bytes.len() - 4;
+        for len in 0..bytes.len() {
+            match io::decode_model(&bytes[..len]) {
+                Ok(m) if len == legacy_len => {
+                    assert_eq!(m.k, model.k, "legacy decode mangled k");
+                }
+                Ok(_) => panic!("truncation to {len}/{} bytes decoded", bytes.len()),
+                Err(Error::Data(_)) => {
+                    assert_ne!(len, legacy_len, "legacy CRC-less layout must still decode");
+                }
+                Err(e) => panic!("truncation to {len} bytes gave non-Data error: {e:?}"),
+            }
+            cases += 1;
+        }
+    }
+    assert!(cases >= 150, "truncation sweep shrank to {cases} cases");
+}
+
+#[test]
+fn model_mutations_never_panic() {
+    prop::check("model_mutations", 2000, |g| {
+        let model = gen_model(g);
+        let mut bytes = io::encode_model(&model).unwrap();
+        let edits = g.usize_in(1, 12);
+        g.mutate(&mut bytes, edits);
+        match io::decode_model(&bytes) {
+            Ok(_) | Err(Error::Data(_)) => Ok(()),
+            Err(e) => Err(format!("mutated .pkm gave non-Data error: {e:?}")),
+        }
+    });
+}
+
+#[test]
+fn model_byte_soup_is_typed() {
+    prop::check("model_soup", 800, |g| {
+        let n = g.usize_in(0, 512);
+        let soup = g.bytes(n);
+        match io::decode_model(&soup) {
+            Ok(_) => Err("byte soup decoded as a model".into()),
+            Err(Error::Data(_)) => Ok(()),
+            Err(e) => Err(format!("soup gave non-Data error: {e:?}")),
+        }
+    });
+}

@@ -1,0 +1,290 @@
+//! Integration: durable checkpoint/resume with bit-identical recovery
+//! (DESIGN.md §14) — the load-bearing acceptance for the `.pkc` layer.
+//!
+//! For every wired engine (serial, threads static+steal, elkan,
+//! hamerly, oocore, dist static+elastic over loopback TCP) the matrix
+//! kills a checkpointed run at three points — right after a
+//! checkpoint, mid-iteration between sparse checkpoints, and mid-
+//! checkpoint-write (a torn slot the loader must fall back from) —
+//! then resumes and demands the final centroids, assignments, SSE and
+//! iteration count equal the uninterrupted run bit for bit. A fourth
+//! leg resumes an already-finished run, exercising every engine's
+//! terminal completion path (one assignment-only pass, zero Lloyd
+//! iterations).
+//!
+//! "Killed after iteration j" is simulated as a run with
+//! `max_iters = j`: the engines checkpoint at iteration boundaries, so
+//! a run truncated at j leaves exactly the on-disk state a SIGKILL
+//! after iteration j would (the CI ckpt-smoke job kills a real
+//! process with a real SIGKILL to close that gap).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::config::{DistSched, SchedMode};
+use parakmeans::data::io;
+use parakmeans::data::source::MemorySource;
+use parakmeans::data::{Dataset, MixtureSpec};
+use parakmeans::error::Error;
+use parakmeans::kmeans::ckpt::{self, CkptSink, CkptState};
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{elkan, hamerly, parallel, serial, KmeansConfig, KmeansResult};
+use parakmeans::testutil::assert_bit_identical;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parakm_ckpt_it_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Truncate the slot `ckpt::load` would pick to half its bytes — the
+/// on-disk state after a crash midway through a checkpoint write that
+/// bypassed the temp-file+rename discipline (the worst torn write).
+fn tear_best_slot(dir: &Path) {
+    let mut best: Option<(PathBuf, u64)> = None;
+    for name in ["ckpt_a.pkc", "ckpt_b.pkc"] {
+        let p = dir.join(name);
+        if let Ok(bytes) = std::fs::read(&p) {
+            if let Ok(st) = io::decode_ckpt(&bytes) {
+                if best.as_ref().map(|&(_, it)| st.iteration > it).unwrap_or(true) {
+                    best = Some((p.clone(), st.iteration));
+                }
+            }
+        }
+    }
+    let (p, _) = best.expect("torn-write leg needs at least one decodable slot");
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+}
+
+type EngineFn<'a> = &'a dyn Fn(&KmeansConfig, Option<&CkptSink>, Option<CkptState>) -> KmeansResult;
+
+/// The kill × resume matrix for one engine. `tol = 0` pins the
+/// iteration count to the budget, so every kill point is reached and
+/// "converged early" cannot mask a replay divergence.
+fn kill_resume_matrix(tag: &str, fp_engine: &str, fp_sched: &str, n: usize, d: usize, k: usize, run: EngineFn<'_>) {
+    let full = KmeansConfig::new(k).with_seed(13).with_tol(0.0).with_max_iters(9);
+    let fp = ckpt::fingerprint(fp_engine, fp_sched, &full, n, d);
+    let uninterrupted = run(&full, None, None);
+    assert_eq!(uninterrupted.iterations, 9, "{tag}: tol 0 must run the full budget");
+
+    // kill right after a checkpoint: every-iteration cadence, die at 4
+    {
+        let dir = tmp(&format!("{tag}_after"));
+        let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+        let _ = run(&full.clone().with_max_iters(4), Some(&sink), None);
+        let state = ckpt::load_validated(&dir, &fp).unwrap();
+        assert_eq!(state.iteration, 4, "{tag}: newest slot");
+        let resumed = run(&full, None, Some(state));
+        assert_bit_identical(&uninterrupted, &resumed, &format!("{tag}: kill after ckpt"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // kill mid-iteration: sparse cadence (every 3), die at 5 — the two
+    // un-checkpointed iterations are lost and must replay identically
+    {
+        let dir = tmp(&format!("{tag}_mid"));
+        let sink = CkptSink::create(&dir, 3, fp.clone()).unwrap();
+        let _ = run(&full.clone().with_max_iters(5), Some(&sink), None);
+        let state = ckpt::load_validated(&dir, &fp).unwrap();
+        assert_eq!(state.iteration, 3, "{tag}: sparse cadence snapshots at 3");
+        let resumed = run(&full, None, Some(state));
+        assert_bit_identical(&uninterrupted, &resumed, &format!("{tag}: kill mid-iteration"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // kill mid-checkpoint-write: the newest slot is torn; the loader
+    // must fall back to the older intact slot and still recover exactly
+    {
+        let dir = tmp(&format!("{tag}_torn"));
+        let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+        let _ = run(&full.clone().with_max_iters(4), Some(&sink), None);
+        tear_best_slot(&dir);
+        let state = ckpt::load_validated(&dir, &fp).unwrap();
+        assert_eq!(state.iteration, 3, "{tag}: fallback to the intact A/B slot");
+        let resumed = run(&full, None, Some(state));
+        assert_bit_identical(&uninterrupted, &resumed, &format!("{tag}: torn checkpoint write"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // resume of a finished run: terminal state, zero further Lloyd
+    // iterations, one assignment-only pass — still bit-identical
+    {
+        let dir = tmp(&format!("{tag}_term"));
+        let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+        let _ = run(&full, Some(&sink), None);
+        let state = ckpt::load_validated(&dir, &fp).unwrap();
+        assert_eq!(state.iteration, 9, "{tag}: terminal snapshot");
+        let resumed = run(&full, None, Some(state));
+        assert_bit_identical(&uninterrupted, &resumed, &format!("{tag}: resume when complete"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn paper_ds() -> Dataset {
+    MixtureSpec::paper_2d(8).generate(2003, 13)
+}
+
+#[test]
+fn serial_kill_resume_matrix() {
+    let ds = paper_ds();
+    kill_resume_matrix("serial", "serial", "none", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        serial::run_ckpt(&ds, cfg, sink, resume).unwrap()
+    });
+}
+
+#[test]
+fn threads_static_kill_resume_matrix() {
+    let ds = paper_ds();
+    kill_resume_matrix("threads_static", "threads", "static", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        parallel::run_sched_ckpt(&ds, cfg, 3, parallel::MergeMode::Leader, SchedMode::Static, sink, resume)
+            .unwrap()
+    });
+}
+
+#[test]
+fn threads_steal_kill_resume_matrix() {
+    let ds = paper_ds();
+    kill_resume_matrix("threads_steal", "threads", "steal", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        parallel::run_sched_ckpt(&ds, cfg, 3, parallel::MergeMode::Leader, SchedMode::Steal, sink, resume)
+            .unwrap()
+    });
+}
+
+#[test]
+fn elkan_kill_resume_matrix() {
+    let ds = paper_ds();
+    kill_resume_matrix("elkan", "elkan", "steal", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        elkan::run_ckpt(&ds, cfg, 3, SchedMode::Steal, sink, resume).unwrap()
+    });
+}
+
+#[test]
+fn hamerly_kill_resume_matrix() {
+    let ds = paper_ds();
+    kill_resume_matrix("hamerly", "hamerly", "steal", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        hamerly::run_ckpt(&ds, cfg, 3, SchedMode::Steal, sink, resume).unwrap()
+    });
+}
+
+#[test]
+fn oocore_kill_resume_matrix() {
+    let ds = paper_ds();
+    let opts = StreamOpts { shards: 3, chunk_rows: 257 };
+    kill_resume_matrix("oocore", "oocore", "static", ds.len(), ds.dim(), 8, &|cfg, sink, resume| {
+        let src = MemorySource::new(&ds);
+        streaming::run_ckpt(&src, cfg, &opts, sink, resume).unwrap()
+    });
+}
+
+fn dist_opts(sched: DistSched) -> DistOpts {
+    DistOpts {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(10),
+        sched,
+        retry: 2,
+    }
+}
+
+#[test]
+fn dist_static_kill_resume_matrix() {
+    let ds = MixtureSpec::paper_3d(4).generate(1203, 13);
+    kill_resume_matrix("dist_static", "dist", "static", ds.len(), ds.dim(), 4, &|cfg, sink, resume| {
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 256).unwrap();
+        let run = dist::run_ckpt(&cluster.addrs, cfg, &dist_opts(DistSched::Static), sink, resume)
+            .unwrap();
+        cluster.join().unwrap();
+        run.result
+    });
+}
+
+#[test]
+fn dist_elastic_kill_resume_matrix() {
+    let ds = MixtureSpec::paper_3d(4).generate(1203, 13);
+    kill_resume_matrix("dist_elastic", "dist", "elastic", ds.len(), ds.dim(), 4, &|cfg, sink, resume| {
+        let cluster = LoopbackCluster::spawn_replicated(&ds, 2, 256).unwrap();
+        let run = dist::run_ckpt(&cluster.addrs, cfg, &dist_opts(DistSched::Elastic), sink, resume)
+            .unwrap();
+        cluster.join().unwrap();
+        run.result
+    });
+}
+
+// ---- refusal paths: a wrong or broken checkpoint fails loudly ----------
+
+#[test]
+fn fingerprint_mismatch_refuses_to_resume() {
+    let ds = paper_ds();
+    let cfg = KmeansConfig::new(8).with_seed(13).with_tol(0.0).with_max_iters(3);
+    let fp = ckpt::fingerprint("serial", "none", &cfg, ds.len(), ds.dim());
+    let dir = tmp("fp_mismatch");
+    let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+    serial::run_ckpt(&ds, &cfg, Some(&sink), None).unwrap();
+
+    // wrong seed: a resume under a different RNG stream is a different run
+    let other_seed = ckpt::fingerprint("serial", "none", &cfg.clone().with_seed(14), ds.len(), ds.dim());
+    let err = ckpt::load_validated(&dir, &other_seed).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    assert!(err.to_string().contains("seed"), "{err}");
+
+    // wrong engine family
+    let other_engine = ckpt::fingerprint("threads", "static", &cfg, ds.len(), ds.dim());
+    let err = ckpt::load_validated(&dir, &other_engine).unwrap_err();
+    assert!(err.to_string().contains("engine"), "{err}");
+
+    // wrong dataset size
+    let other_n = ckpt::fingerprint("serial", "none", &cfg, ds.len() + 1, ds.dim());
+    let err = ckpt::load_validated(&dir, &other_n).unwrap_err();
+    assert!(err.to_string().contains("mismatch on n"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_against_a_different_dataset_fails_typed() {
+    // same shape fingerprint path as the engines hit in-engine: the
+    // snapshot says n = 2003, the dataset offered for resume has fewer
+    // rows — typed Error::Ckpt, never an index panic
+    let ds = paper_ds();
+    let cfg = KmeansConfig::new(8).with_seed(13).with_tol(0.0).with_max_iters(3);
+    let fp = ckpt::fingerprint("serial", "none", &cfg, ds.len(), ds.dim());
+    let dir = tmp("wrong_ds");
+    let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+    serial::run_ckpt(&ds, &cfg, Some(&sink), None).unwrap();
+    let state = ckpt::load_validated(&dir, &fp).unwrap();
+
+    let smaller = MixtureSpec::paper_2d(8).generate(1999, 13);
+    let err = serial::run_ckpt(&smaller, &cfg, None, Some(state)).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn both_slots_corrupt_is_a_typed_load_error() {
+    let ds = paper_ds();
+    let cfg = KmeansConfig::new(8).with_seed(13).with_tol(0.0).with_max_iters(3);
+    let fp = ckpt::fingerprint("serial", "none", &cfg, ds.len(), ds.dim());
+    let dir = tmp("all_corrupt");
+    let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+    serial::run_ckpt(&ds, &cfg, Some(&sink), None).unwrap();
+    for name in ["ckpt_a.pkc", "ckpt_b.pkc"] {
+        let p = dir.join(name);
+        if p.exists() {
+            std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        }
+    }
+    let err = ckpt::load_validated(&dir, &fp).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_directory_is_a_typed_load_error() {
+    let dir = tmp("empty");
+    let err = ckpt::load(&dir).unwrap_err();
+    assert!(matches!(err, Error::Ckpt(_)), "{err:?}");
+    assert!(err.to_string().contains("no loadable checkpoint"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,176 @@
+//! Integration: degenerate inputs every engine must survive without
+//! panicking, producing NaNs, or emitting out-of-range assignments.
+//!
+//! Two adversarial datasets:
+//!   - all points identical — every centroid collapses onto one point;
+//!     k−1 clusters go empty on iteration one and *stay* empty (the
+//!     keep-centroid policy), which the per-iteration `empty_events`
+//!     counters must record;
+//!   - k exceeds the number of distinct points — 3 distinct rows tiled
+//!     to n = 300 with k = 8 can fill at most 3 clusters.
+//!
+//! The contract is the same for every engine (serial, threads
+//! static+steal, elkan, hamerly, minibatch, bisecting, oocore,
+//! dist static+elastic over loopback): finite SSE, finite centroids,
+//! one in-range assignment per row, and termination.
+
+use std::time::Duration;
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::config::{DistSched, SchedMode};
+use parakmeans::data::source::MemorySource;
+use parakmeans::data::Dataset;
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{
+    bisecting, elkan, hamerly, minibatch, parallel, serial, KmeansConfig, KmeansResult,
+};
+
+/// n rows of the identical point (0.5, −1.25, 3.0).
+fn identical_points(n: usize) -> Dataset {
+    let row = [0.5f32, -1.25, 3.0];
+    let mut data = Vec::with_capacity(n * row.len());
+    for _ in 0..n {
+        data.extend_from_slice(&row);
+    }
+    Dataset::from_vec(data, row.len()).unwrap()
+}
+
+/// 3 distinct rows tiled to n — at most 3 nonempty clusters, ever.
+fn few_distinct_points(n: usize) -> Dataset {
+    let rows = [[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0]];
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        data.extend_from_slice(&rows[i % rows.len()]);
+    }
+    Dataset::from_vec(data, 2).unwrap()
+}
+
+fn cfg(k: usize) -> KmeansConfig {
+    KmeansConfig::new(k).with_seed(17).with_max_iters(25)
+}
+
+/// The degenerate-input contract: the run terminated with finite,
+/// in-range output. Deliberately says nothing about *which* clusters
+/// survive — that is engine-specific; not panicking is the contract.
+fn assert_valid(r: &KmeansResult, n: usize, k: usize, what: &str) {
+    assert_eq!(r.assign.len(), n, "{what}: one assignment per row");
+    assert!(
+        r.assign.iter().all(|&a| a >= 0 && (a as usize) < k),
+        "{what}: assignment out of [0, {k})"
+    );
+    assert!(r.sse.is_finite(), "{what}: sse {} not finite", r.sse);
+    assert!(
+        r.centroids.iter().all(|c| c.is_finite()),
+        "{what}: non-finite centroid"
+    );
+    assert!(r.iterations >= 1, "{what}: ran zero iterations");
+}
+
+fn dist_opts(sched: DistSched) -> DistOpts {
+    DistOpts {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(10),
+        sched,
+        retry: 2,
+    }
+}
+
+/// Run every resident engine over `ds` with `k` clusters and apply the
+/// contract. Returns the serial result for case-specific assertions.
+fn sweep_resident(ds: &Dataset, k: usize, tag: &str) -> KmeansResult {
+    let n = ds.len();
+    let c = cfg(k);
+
+    let r = serial::run(ds, &c);
+    assert_valid(&r, n, k, &format!("{tag}/serial"));
+
+    for (mode, name) in [(SchedMode::Static, "static"), (SchedMode::Steal, "steal")] {
+        let t = parallel::run_sched(ds, &c, 3, parallel::MergeMode::Leader, mode);
+        assert_valid(&t, n, k, &format!("{tag}/threads-{name}"));
+    }
+
+    let e = elkan::run_threads(ds, &c, 3, SchedMode::Steal);
+    assert_valid(&e, n, k, &format!("{tag}/elkan"));
+
+    let h = hamerly::run_threads(ds, &c, 3, SchedMode::Steal);
+    assert_valid(&h, n, k, &format!("{tag}/hamerly"));
+
+    let m = minibatch::run(ds, &c, 64);
+    assert_valid(&m, n, k, &format!("{tag}/minibatch"));
+
+    let b = bisecting::run(ds, &c, 2);
+    assert_valid(&b, n, k, &format!("{tag}/bisecting"));
+
+    let src = MemorySource::new(ds);
+    let o = streaming::run(&src, &c, &StreamOpts { shards: 3, chunk_rows: 64 }).unwrap();
+    assert_valid(&o, n, k, &format!("{tag}/oocore"));
+
+    r
+}
+
+fn sweep_dist(ds: &Dataset, k: usize, tag: &str) {
+    let n = ds.len();
+    let c = cfg(k);
+
+    let cluster = LoopbackCluster::spawn_dataset(ds, 2, 64).unwrap();
+    let run = dist::run(&cluster.addrs, &c, &dist_opts(DistSched::Static)).unwrap();
+    cluster.join().unwrap();
+    assert_valid(&run.result, n, k, &format!("{tag}/dist-static"));
+
+    let cluster = LoopbackCluster::spawn_replicated(ds, 2, 64).unwrap();
+    let run = dist::run(&cluster.addrs, &c, &dist_opts(DistSched::Elastic)).unwrap();
+    cluster.join().unwrap();
+    assert_valid(&run.result, n, k, &format!("{tag}/dist-elastic"));
+}
+
+#[test]
+fn identical_points_every_resident_engine() {
+    let ds = identical_points(400);
+    let serial = sweep_resident(&ds, 4, "identical");
+
+    // with every point equal, the surviving cluster absorbs everything:
+    // sse is exactly 0 and k−1 clusters sat empty each iteration — the
+    // empty-cluster telemetry must have seen them
+    assert_eq!(serial.sse, 0.0, "identical points: sse must be exactly 0");
+    assert!(
+        serial.empty_total() > 0,
+        "identical points: empty-cluster events went unrecorded"
+    );
+}
+
+#[test]
+fn identical_points_dist_engines() {
+    let ds = identical_points(400);
+    sweep_dist(&ds, 4, "identical");
+}
+
+#[test]
+fn k_exceeds_distinct_points_every_resident_engine() {
+    let ds = few_distinct_points(300);
+    let serial = sweep_resident(&ds, 8, "few-distinct");
+
+    // at most 3 clusters can own points; a perfect run puts each
+    // distinct row in its own cluster for sse 0, but the contract only
+    // demands the unused clusters didn't corrupt the output
+    let used: std::collections::BTreeSet<i32> = serial.assign.iter().copied().collect();
+    assert!(used.len() <= 3, "few-distinct: {} clusters own points", used.len());
+}
+
+#[test]
+fn k_exceeds_distinct_points_dist_engines() {
+    let ds = few_distinct_points(300);
+    sweep_dist(&ds, 8, "few-distinct");
+}
+
+#[test]
+fn single_row_dataset_serial_and_threads() {
+    // the harshest shrink: n = 1, k = 1 — one row, one cluster
+    let ds = Dataset::from_vec(vec![2.0, 3.0, 4.0], 3).unwrap();
+    let c = cfg(1);
+    let r = serial::run(&ds, &c);
+    assert_valid(&r, 1, 1, "single-row/serial");
+    assert_eq!(r.sse, 0.0);
+    let t = parallel::run_sched(&ds, &c, 3, parallel::MergeMode::Leader, SchedMode::Steal);
+    assert_valid(&t, 1, 1, "single-row/threads");
+}
