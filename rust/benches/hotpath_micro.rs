@@ -65,6 +65,35 @@ fn main() {
             ));
         }
     }
+    // ---- tracing-off overhead guard (DESIGN.md §15) --------------------
+    // spans must cost one relaxed load when no trace is installed; this
+    // row puts a number on it in the trajectory so a regression that
+    // sneaks a syscall or lock into the disabled path is visible in the
+    // bench.json diff. Measured as ns per span over a tight loop.
+    {
+        assert!(!parakmeans::util::trace::enabled());
+        const SPANS: usize = 1_000_000;
+        let s = run_case(&format!("trace disabled span x{SPANS}"), &opts, || {
+            for _ in 0..SPANS {
+                let _s = parakmeans::util::trace::span(parakmeans::util::trace::Phase::Assign);
+            }
+        });
+        report(&s);
+        let ns_per_span = s.median() / SPANS as f64 * 1e9;
+        println!("         -> {ns_per_span:.2} ns/span with tracing off");
+        json_rows.push(bench_json_row(
+            "hotpath_micro",
+            "trace-off-span",
+            "exact",
+            &tier_label,
+            SPANS,
+            0,
+            0,
+            ns_per_span,
+            0.0,
+        ));
+    }
+
     let json_path = parakmeans::eval::results_dir().join("bench.json");
     if let Err(e) = append_bench_json(&json_path, json_rows) {
         eprintln!("warning: could not write {}: {e}", json_path.display());

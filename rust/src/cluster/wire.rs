@@ -60,7 +60,17 @@ use crate::linalg::kernel::DistancePolicy;
 /// v2: `Assign` carries the distance policy byte (DESIGN.md §11).
 /// v3: chunk-granular elastic frames `ChunkAssign` / `ChunkPartials` /
 /// `Rejoin` (DESIGN.md §12).
-pub const WIRE_VERSION: u16 = 3;
+/// v4: `Partials` / `ChunkPartials` may carry an optional trailing
+/// [`PhaseNs`] timing block (DESIGN.md §15). The block is omitted when
+/// absent, so a v4 frame without timings is byte-identical to v3 —
+/// which is why [`MIN_WIRE_VERSION`] peers still interoperate.
+pub const WIRE_VERSION: u16 = 4;
+
+/// Oldest peer version a v4 binary will still talk to. v3 frames are a
+/// strict byte-prefix subset of v4 (the phase block is optional and
+/// trailing), so the handshake accepts `MIN_WIRE_VERSION..=WIRE_VERSION`
+/// and simply never attaches timings on a v3 session.
+pub const MIN_WIRE_VERSION: u16 = 3;
 
 /// Upper bound on `len` a reader will accept (1 GiB): a corrupt or
 /// hostile length prefix becomes [`ClusterError::Frame`] instead of a
@@ -81,6 +91,21 @@ const T_CHUNK_ASSIGN: u8 = 11;
 const T_CHUNK_PARTIALS: u8 = 12;
 const T_REJOIN: u8 = 13;
 
+/// Marker byte opening the optional trailing phase block (v4); any
+/// other value where a phase block could start is a typed frame error.
+const PHASE_MARKER: u8 = 1;
+
+/// Shard-side phase timings piggybacked on `Partials` /
+/// `ChunkPartials` (wire v4, DESIGN.md §15): nanoseconds the worker
+/// spent in the assign/accumulate fold and serializing the reply.
+/// Observability only — never consulted by the numeric fold, so the
+/// bit-identity contracts are indifferent to its presence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PhaseNs {
+    pub assign_ns: u64,
+    pub ser_ns: u64,
+}
+
 /// One protocol message (module docs: the conversation).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -93,8 +118,17 @@ pub enum Frame {
     /// (0 = exact, 1 = dot on the wire).
     Assign { k: u32, dim: u32, policy: DistancePolicy, centroids: Vec<f32> },
     /// Worker → leader: the shard's partial statistics for the last
-    /// `Assign` (`k` counts, `k × dim` f64 sums, shard SSE).
-    Partials { k: u32, dim: u32, counts: Vec<u64>, sums: Vec<f64>, sse: f64 },
+    /// `Assign` (`k` counts, `k × dim` f64 sums, shard SSE). `phase`
+    /// (v4) optionally carries the worker's own phase timings; `None`
+    /// encodes byte-identically to a v3 frame.
+    Partials {
+        k: u32,
+        dim: u32,
+        counts: Vec<u64>,
+        sums: Vec<f64>,
+        sse: f64,
+        phase: Option<PhaseNs>,
+    },
     /// Leader → worker: fetch these shard-local rows (init gather).
     Gather { indices: Vec<u64> },
     /// Worker → leader: the gathered rows, request order.
@@ -127,7 +161,9 @@ pub enum Frame {
     /// statistics (`k` counts, `k × dim` f64 sums, chunk SSE), keyed by
     /// the chunk id so re-dispatched and speculative replies can be
     /// matched regardless of arrival order. `assign` is empty unless
-    /// the request set `want_assign`.
+    /// the request set `want_assign`. `phase` (v4) optionally carries
+    /// the worker's own phase timings; `None` encodes byte-identically
+    /// to a v3 frame.
     ChunkPartials {
         chunk: u64,
         k: u32,
@@ -136,6 +172,7 @@ pub enum Frame {
         sums: Vec<f64>,
         sse: f64,
         assign: Vec<i32>,
+        phase: Option<PhaseNs>,
     },
     /// Leader → worker (elastic, v3): opens a *replacement* session
     /// after a connection loss — handled exactly like [`Frame::Hello`],
@@ -175,6 +212,17 @@ fn push_u32(buf: &mut Vec<u8>, v: u32) {
 
 fn push_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append the optional v4 phase block: marker byte + two u64s when
+/// present, *nothing* when absent — `None` frames stay byte-identical
+/// to their v3 encodings.
+fn push_phase(buf: &mut Vec<u8>, phase: &Option<PhaseNs>) {
+    if let Some(p) = phase {
+        buf.push(PHASE_MARKER);
+        push_u64(buf, p.assign_ns);
+        push_u64(buf, p.ser_ns);
+    }
 }
 
 /// Bounded-payload cursor: every `take_*` is a typed frame error when
@@ -245,6 +293,26 @@ impl<'a> Cursor<'a> {
         Ok(s.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    /// Decode the optional trailing [`PhaseNs`] block (wire v4). A v3
+    /// frame ends exactly where this is called — `None`. Any bytes
+    /// beyond that must be a complete, well-marked phase block;
+    /// truncation or a bad marker is a typed frame error (the
+    /// subsequent `finish()` rejects anything after the block).
+    fn opt_phase(&mut self, what: &str) -> Result<Option<PhaseNs>> {
+        if self.remaining() == 0 {
+            return Ok(None);
+        }
+        let marker = self.take(1)?[0];
+        if marker != PHASE_MARKER {
+            return Err(frame_err(format!("{what}: bad phase block marker {marker}")));
+        }
+        Ok(Some(PhaseNs { assign_ns: self.u64()?, ser_ns: self.u64()? }))
+    }
+
     fn finish(&self) -> Result<()> {
         if self.i != self.b.len() {
             return Err(frame_err(format!(
@@ -313,7 +381,7 @@ impl Frame {
                     b.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            Frame::Partials { k, dim, counts, sums, sse } => {
+            Frame::Partials { k, dim, counts, sums, sse, phase } => {
                 push_u32(&mut b, *k);
                 push_u32(&mut b, *dim);
                 for c in counts {
@@ -323,6 +391,7 @@ impl Frame {
                     push_u64(&mut b, s.to_bits());
                 }
                 push_u64(&mut b, sse.to_bits());
+                push_phase(&mut b, phase);
             }
             Frame::Gather { indices } => {
                 push_u32(&mut b, indices.len() as u32);
@@ -360,7 +429,7 @@ impl Frame {
                     b.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign } => {
+            Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign, phase } => {
                 push_u64(&mut b, *chunk);
                 push_u32(&mut b, *k);
                 push_u32(&mut b, *dim);
@@ -375,6 +444,7 @@ impl Frame {
                 for a in assign {
                     b.extend_from_slice(&a.to_le_bytes());
                 }
+                push_phase(&mut b, phase);
             }
             Frame::Rejoin { version } => push_u16(&mut b, *version),
         }
@@ -410,7 +480,8 @@ impl Frame {
                 let counts = c.u64s(k as usize)?;
                 let sums = c.f64s(kd)?;
                 let sse = c.f64()?;
-                Frame::Partials { k, dim, counts, sums, sse }
+                let phase = c.opt_phase("Partials")?;
+                Frame::Partials { k, dim, counts, sums, sse, phase }
             }
             T_GATHER => {
                 let m = c.u32()? as usize;
@@ -486,7 +557,9 @@ impl Frame {
                 let m = c.u64()?;
                 let m = usize::try_from(m)
                     .map_err(|_| frame_err(format!("ChunkPartials: implausible assign len {m}")))?;
-                Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign: c.i32s(m)? }
+                let assign = c.i32s(m)?;
+                let phase = c.opt_phase("ChunkPartials")?;
+                Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign, phase }
             }
             T_REJOIN => Frame::Rejoin { version: c.u16()? },
             other => return Err(frame_err(format!("unknown frame type {other}"))),
@@ -624,6 +697,15 @@ mod tests {
             counts: vec![7, 0],
             sums: vec![1.0, -0.5, 0.0, 1e300],
             sse: 42.0625,
+            phase: None,
+        });
+        roundtrip(Frame::Partials {
+            k: 2,
+            dim: 2,
+            counts: vec![7, 0],
+            sums: vec![1.0, -0.5, 0.0, 1e300],
+            sse: 42.0625,
+            phase: Some(PhaseNs { assign_ns: 1_234_567, ser_ns: 890 }),
         });
         roundtrip(Frame::Gather { indices: vec![0, 99, 3] });
         roundtrip(Frame::Rows { dim: 2, rows: vec![1.0, 2.0, 3.0, 4.0] });
@@ -650,6 +732,7 @@ mod tests {
             sums: vec![1.0, -0.5, 0.0, 1e300],
             sse: 42.0625,
             assign: vec![0, 1, -1],
+            phase: Some(PhaseNs { assign_ns: u64::MAX, ser_ns: 0 }),
         });
         roundtrip(Frame::ChunkPartials {
             chunk: 0,
@@ -659,7 +742,84 @@ mod tests {
             sums: vec![0.5],
             sse: 0.0,
             assign: vec![], // no want_assign: empty vector, not absent
+            phase: None,
         });
+    }
+
+    #[test]
+    fn phaseless_v4_frames_are_byte_identical_to_v3() {
+        // v3 interop hinges on None adding zero bytes: the payload of a
+        // phaseless Partials must end exactly at the sse field
+        let f = Frame::Partials {
+            k: 1,
+            dim: 1,
+            counts: vec![5],
+            sums: vec![2.5],
+            sse: 0.25,
+            phase: None,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        // 4 len + 1 type + 4 k + 4 dim + 8 count + 8 sum + 8 sse
+        assert_eq!(buf.len(), 4 + 1 + 4 + 4 + 8 + 8 + 8);
+        // and a v3-layout byte stream (no phase block) decodes as None
+        let (back, _) = read_frame(&mut &buf[..], "v3 layout").unwrap();
+        assert_eq!(back, f);
+
+        let g = Frame::ChunkPartials {
+            chunk: 9,
+            k: 1,
+            dim: 1,
+            counts: vec![5],
+            sums: vec![2.5],
+            sse: 0.25,
+            assign: vec![3],
+            phase: None,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &g).unwrap();
+        // + 8 chunk + 8 assign len + 4 one assign slot
+        assert_eq!(buf.len(), 4 + 1 + 8 + 4 + 4 + 8 + 8 + 8 + 8 + 4);
+    }
+
+    #[test]
+    fn truncated_or_mutated_phase_block_is_typed() {
+        let f = Frame::Partials {
+            k: 1,
+            dim: 1,
+            counts: vec![5],
+            sums: vec![2.5],
+            sse: 0.25,
+            phase: Some(PhaseNs { assign_ns: 77, ser_ns: 88 }),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+
+        // cut anywhere inside the 17-byte phase block: typed frame error
+        for cut in 1..17 {
+            let mut short = buf[..buf.len() - cut].to_vec();
+            let new_len = (short.len() - 4) as u32;
+            short[..4].copy_from_slice(&new_len.to_le_bytes());
+            let err = read_frame_opt(&mut &short[..]).unwrap_err();
+            assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "cut {cut}: {err}");
+        }
+
+        // corrupt the marker byte: typed, names the phase block
+        let mut bad = buf.clone();
+        let marker_at = bad.len() - 17;
+        bad[marker_at] = 0xEE;
+        let err = read_frame_opt(&mut &bad[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("phase block"), "{err}");
+
+        // trailing garbage *after* a complete phase block stays typed
+        let mut long = buf.clone();
+        long.push(0xAB);
+        let new_len = (long.len() - 4) as u32;
+        long[..4].copy_from_slice(&new_len.to_le_bytes());
+        let err = read_frame_opt(&mut &long[..]).unwrap_err();
+        assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 
     #[test]

@@ -41,9 +41,9 @@
 //! silently clustering the wrong rows.
 
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::cluster::wire::{self, Frame, WIRE_VERSION};
+use crate::cluster::wire::{self, Frame, PhaseNs, MIN_WIRE_VERSION, WIRE_VERSION};
 use crate::data::dataset::shard_ranges;
 use crate::data::source::DataSource;
 use crate::error::{ClusterError, Error, Result};
@@ -200,6 +200,10 @@ impl ShardWorker {
         let mut norm_cache: Option<Vec<f32>> = None;
         // chunk frames answered so far — drives the fault script
         let mut chunks_served = 0u64;
+        // negotiated session version: phase timings piggyback on
+        // replies only when the leader also speaks v4 (a v3 leader's
+        // decoder would reject the trailing block as payload garbage)
+        let mut peer_version: u16 = WIRE_VERSION;
 
         loop {
             let frame = match wire::read_frame_opt(&mut stream)? {
@@ -208,13 +212,15 @@ impl ShardWorker {
             };
             match frame {
                 Frame::Hello { version } | Frame::Rejoin { version } => {
-                    if version != WIRE_VERSION {
+                    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
                         let msg = format!(
-                            "protocol version mismatch: leader {version}, worker {WIRE_VERSION}"
+                            "protocol version mismatch: leader {version}, worker \
+                             speaks {MIN_WIRE_VERSION}..={WIRE_VERSION}"
                         );
                         wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg.clone() })?;
                         return Err(Error::Cluster(ClusterError::Protocol(msg)));
                     }
+                    peer_version = version;
                     wire::write_frame(
                         &mut stream,
                         &Frame::ShardSpec { rows: n as u64, dim: d as u32 },
@@ -275,6 +281,7 @@ impl ShardWorker {
                         DistancePolicy::Dot => norm_cache.as_deref(),
                         DistancePolicy::Exact => None,
                     };
+                    let t_assign = Instant::now();
                     if let Err(e) = stream_shard(
                         self.source.as_ref(),
                         self.lo,
@@ -294,14 +301,23 @@ impl ShardWorker {
                         let _ = wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg });
                         return Err(e);
                     }
+                    let assign_ns = t_assign.elapsed().as_nanos() as u64;
+                    let t_ser = Instant::now();
+                    let counts = stats.counts.clone();
+                    let sums = stats.sums.clone();
+                    let phase = (peer_version >= 4).then(|| PhaseNs {
+                        assign_ns,
+                        ser_ns: t_ser.elapsed().as_nanos() as u64,
+                    });
                     wire::write_frame(
                         &mut stream,
                         &Frame::Partials {
                             k: k as u32,
                             dim: d as u32,
-                            counts: stats.counts.clone(),
-                            sums: stats.sums.clone(),
+                            counts,
+                            sums,
                             sse: stats.sse,
+                            phase,
                         },
                     )?;
                 }
@@ -401,6 +417,7 @@ impl ShardWorker {
                         DistancePolicy::Dot => norm_cache.as_deref().map(|c| &c[clo..chi]),
                         DistancePolicy::Exact => None,
                     };
+                    let t_assign = Instant::now();
                     if let Err(e) = stream_shard(
                         self.source.as_ref(),
                         clo,
@@ -418,21 +435,28 @@ impl ShardWorker {
                         let _ = wire::write_frame(&mut stream, &Frame::ErrMsg { message: msg });
                         return Err(e);
                     }
+                    let assign_ns = t_assign.elapsed().as_nanos() as u64;
                     chunks_served += 1;
+                    let t_ser = Instant::now();
+                    let counts = stats.counts.clone();
+                    let sums = stats.sums.clone();
+                    let chunk_assign =
+                        if want_assign { assign[clo..chi].to_vec() } else { Vec::new() };
+                    let phase = (peer_version >= 4).then(|| PhaseNs {
+                        assign_ns,
+                        ser_ns: t_ser.elapsed().as_nanos() as u64,
+                    });
                     wire::write_frame(
                         &mut stream,
                         &Frame::ChunkPartials {
                             chunk,
                             k: k as u32,
                             dim: d as u32,
-                            counts: stats.counts.clone(),
-                            sums: stats.sums.clone(),
+                            counts,
+                            sums,
                             sse: stats.sse,
-                            assign: if want_assign {
-                                assign[clo..chi].to_vec()
-                            } else {
-                                Vec::new()
-                            },
+                            assign: chunk_assign,
+                            phase,
                         },
                     )?;
                 }
@@ -529,9 +553,11 @@ mod tests {
             )
             .unwrap();
             let exact_partials = match wire::read_frame(&mut conn, "partials").unwrap().0 {
-                Frame::Partials { k: 2, dim: 2, counts, sums, sse } => {
+                Frame::Partials { k: 2, dim: 2, counts, sums, sse, phase } => {
                     assert_eq!(counts.iter().sum::<u64>(), 100);
                     assert_eq!(sums.len(), 4);
+                    // a v4 session always carries the timing block
+                    assert!(phase.is_some(), "v4 session must piggyback phase timings");
                     (counts, sums, sse)
                 }
                 other => panic!("unexpected {other:?}"),
@@ -554,7 +580,7 @@ mod tests {
             )
             .unwrap();
             match wire::read_frame(&mut conn, "dot partials").unwrap().0 {
-                Frame::Partials { k: 2, dim: 2, counts, sums, sse } => {
+                Frame::Partials { k: 2, dim: 2, counts, sums, sse, .. } => {
                     assert_eq!(counts.iter().sum::<u64>(), 100);
                     assert_eq!(sums.len(), 4);
                     let rel = (sse - exact_partials.2).abs() / exact_partials.2.max(1.0);
@@ -575,6 +601,60 @@ mod tests {
             wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
         });
         w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn v3_leader_interoperates_without_phase_block() {
+        // a MIN_WIRE_VERSION leader passes the handshake and gets
+        // byte-identical v3 replies: no trailing phase block
+        let w = worker(100);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: MIN_WIRE_VERSION }).unwrap();
+            let spec = wire::read_frame(&mut conn, "spec").unwrap().0;
+            assert_eq!(spec, Frame::ShardSpec { rows: 100, dim: 2 });
+            wire::write_frame(
+                &mut conn,
+                &Frame::Assign {
+                    k: 1,
+                    dim: 2,
+                    policy: DistancePolicy::Exact,
+                    centroids: vec![0.0, 0.0],
+                },
+            )
+            .unwrap();
+            match wire::read_frame(&mut conn, "partials").unwrap().0 {
+                Frame::Partials { phase, .. } => {
+                    assert!(phase.is_none(), "v3 session must not carry phase timings")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            wire::write_frame(&mut conn, &Frame::Shutdown).unwrap();
+        });
+        w.serve_listener(&listener, true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_version_fails_the_handshake_typed() {
+        let w = worker(10);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut conn, &Frame::Hello { version: MIN_WIRE_VERSION - 1 })
+                .unwrap();
+            match wire::read_frame(&mut conn, "err").unwrap().0 {
+                Frame::ErrMsg { message } => {
+                    assert!(message.contains("version mismatch"), "{message}")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        });
+        assert!(w.serve_listener(&listener, true).is_err());
         handle.join().unwrap();
     }
 

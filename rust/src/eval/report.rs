@@ -39,6 +39,7 @@ pub fn generate(results_dir: &Path) -> Result<String> {
     oocore(results_dir, &mut out);
     pruned(results_dir, &mut out);
     dist(results_dir, &mut out);
+    run_trace(results_dir, &mut out);
     bench_json(results_dir, &mut out);
 
     let path = results_dir.join("REPORT.md");
@@ -396,6 +397,44 @@ fn dist(dir: &Path, out: &mut String) {
     let _ = writeln!(out);
 }
 
+/// Phase-share table from a `--trace` JSONL file dropped at
+/// `results/trace.jsonl` (DESIGN.md §15): where each run iteration's
+/// wall time went — assign, merge, update, bounds, wire, ckpt — both
+/// absolute and as a share of the traced total.
+fn run_trace(dir: &Path, out: &mut String) {
+    use crate::util::trace::Phase;
+    let _ = writeln!(out, "## Run trace — phase shares (trace.jsonl)\n");
+    let p = dir.join("trace.jsonl");
+    if !p.exists() {
+        let _ = writeln!(out, "_not run_ (`parakm run ... --trace results/trace.jsonl`)\n");
+        return;
+    }
+    let (iters, totals, total_ns) = match crate::util::trace::phase_totals(&p) {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = writeln!(out, "_unreadable trace: {e}_\n");
+            return;
+        }
+    };
+    let _ = writeln!(out, "{iters} traced iterations, {:.3} ms total in spans.\n", total_ns as f64 / 1e6);
+    let md: Vec<Vec<String>> = Phase::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, ph)| {
+            let ns = totals[i];
+            let share = if total_ns > 0 { 100.0 * ns as f64 / total_ns as f64 } else { 0.0 };
+            vec![
+                ph.name().to_string(),
+                format!("{:.3}", ns as f64 / 1e6),
+                format!("{share:.1}%"),
+            ]
+        })
+        .collect();
+    md_table(out, &["phase", "total ms", "share"], &md);
+    check(out, "trace parses with per-iteration phase_ns", iters > 0);
+    let _ = writeln!(out);
+}
+
 fn bench_json(dir: &Path, out: &mut String) {
     use crate::util::json::Json;
     let _ = writeln!(out, "## Perf trajectory — distance policy × tier (bench.json)\n");
@@ -551,6 +590,22 @@ mod tests {
         );
         // the training table's sanity check must not trip on serve rows
         assert!(report.contains("✔ **ns/point positive in every row**"), "{report}");
+    }
+
+    #[test]
+    fn trace_section_renders_phase_shares() {
+        let dir = fixture_dir();
+        let lines = [
+            r#"{"empty_events": 0, "iter": 1, "phase_ns": {"assign": 700, "bounds": 0, "ckpt": 100, "merge": 100, "update": 100, "wire": 0}, "per_worker": [], "sse": 10.5}"#,
+            r#"{"empty_events": 1, "iter": 2, "phase_ns": {"assign": 600, "bounds": 0, "ckpt": 100, "merge": 200, "update": 100, "wire": 0}, "per_worker": [], "sse": 9.0}"#,
+        ];
+        std::fs::write(dir.join("trace.jsonl"), lines.join("\n")).unwrap();
+        let report = generate(&dir).unwrap();
+        assert!(report.contains("## Run trace — phase shares"), "{report}");
+        assert!(report.contains("2 traced iterations"), "{report}");
+        // assign = 1300 of 2100 ns ≈ 61.9%
+        assert!(report.contains("61.9%"), "{report}");
+        assert!(report.contains("✔ **trace parses with per-iteration phase_ns**"), "{report}");
     }
 
     #[test]

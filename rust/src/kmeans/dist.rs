@@ -58,6 +58,7 @@ use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
 use crate::kmeans::step::{finalize_counted, merge_ordered, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::rng::Pcg64;
+use crate::util::trace::{self, WorkerPhase};
 
 /// Network knobs for a distributed run. Results never depend on them —
 /// they bound how long a dead worker can stall the leader, and (for
@@ -434,11 +435,13 @@ impl Cluster {
         let mut converged = resumed.map(|s| s.converged).unwrap_or(false);
         let mut iterations = resumed.map(|s| s.iteration as usize).unwrap_or(0);
         let mut parts: Vec<PartialStats> = Vec::with_capacity(self.links.len());
+        let mut per_worker: Vec<WorkerPhase> = Vec::new();
         let mut assigned_once = false;
 
         while !converged && iterations < cfg.max_iters {
             let t0 = Instant::now();
             let mut iter_net = IterNet { bytes_tx: 0, bytes_rx: 0, secs: 0.0 };
+            let wire_span = trace::span(trace::Phase::Wire);
             // broadcast to every worker before reading any reply, so
             // all shards compute their E-step concurrently
             let assign_frame = Frame::Assign {
@@ -453,16 +456,26 @@ impl Cluster {
             // collect per-socket in ascending shard order: arrival
             // timing cannot reorder the fold
             parts.clear();
-            for link in &mut self.links {
+            per_worker.clear();
+            for (wi, link) in self.links.iter_mut().enumerate() {
                 let (frame, bytes) = link.recv("waiting for Partials")?;
                 iter_net.bytes_rx += bytes;
                 match frame {
-                    Frame::Partials { k: pk, dim: pd, counts, sums, sse }
+                    Frame::Partials { k: pk, dim: pd, counts, sums, sse, phase }
                         if pk as usize == k
                             && pd as usize == d
                             && counts.len() == k
                             && sums.len() == k * d =>
                     {
+                        if trace::enabled() {
+                            if let Some(p) = phase {
+                                per_worker.push(WorkerPhase {
+                                    worker: wi as u64,
+                                    assign_ns: p.assign_ns,
+                                    ser_ns: p.ser_ns,
+                                });
+                            }
+                        }
                         parts.push(PartialStats { k, dim: d, sums, counts, sse });
                     }
                     Frame::Partials { k: pk, dim: pd, .. } => {
@@ -483,9 +496,16 @@ impl Cluster {
             // stamp the round trip at the last partial, before the
             // leader-side fold — secs means what the label says
             iter_net.secs = t0.elapsed().as_secs_f64();
+            drop(wire_span);
             assigned_once = true;
-            let merged = merge_ordered(parts.iter());
-            let (mu_new, shift, empties) = finalize_counted(&merged, &centroids);
+            let merged = {
+                let _s = trace::span(trace::Phase::Merge);
+                merge_ordered(parts.iter())
+            };
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&merged, &centroids)
+            };
             let prev = std::mem::replace(&mut centroids, mu_new);
             iterations += 1;
             history.push((merged.sse, shift));
@@ -493,6 +513,7 @@ impl Cluster {
             self.net.per_iter.push(iter_net);
             let converged_now = shift < cfg.tol;
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 ckpt::save_dense(
                     sink,
                     &DenseSnap {
@@ -505,6 +526,7 @@ impl Cluster {
                     },
                 )?;
             }
+            trace::emit_iter(iterations, merged.sse, empties, &per_worker);
             if converged_now {
                 converged = true;
             }

@@ -51,6 +51,7 @@ use crate::kmeans::sched;
 use crate::kmeans::step::{finalize_counted, merge_ordered, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::rng::Pcg64;
+use crate::util::trace::{self, WorkerPhase};
 
 /// At most this many workers may hold the same chunk at once (the
 /// original claim plus one speculative copy). Duplicated work is
@@ -107,6 +108,12 @@ struct Shared {
     bytes_rx: AtomicU64,
     redispatched: AtomicU64,
     speculative: AtomicU64,
+    /// Shard-side phase ns piggybacked on accepted `ChunkPartials`
+    /// (wire v4), accumulated per agent and drained by the coordinator
+    /// at each iteration boundary. Only touched when tracing is
+    /// installed — observability, never part of the fold.
+    agent_assign_ns: Vec<AtomicU64>,
+    agent_ser_ns: Vec<AtomicU64>,
 }
 
 /// Agent → coordinator notifications. State changes always happen
@@ -403,6 +410,8 @@ fn run_inner(
         bytes_rx: AtomicU64::new(0),
         redispatched: AtomicU64::new(0),
         speculative: AtomicU64::new(0),
+        agent_assign_ns: (0..addrs.len()).map(|_| AtomicU64::new(0)).collect(),
+        agent_ser_ns: (0..addrs.len()).map(|_| AtomicU64::new(0)).collect(),
     };
     let gather_bytes = probe.gather_bytes;
     let probe_idx = probe.idx;
@@ -509,9 +518,18 @@ fn coordinate(
     while !converged && iterations < cfg.max_iters {
         epoch += 1;
         mu_used.copy_from_slice(&centroids);
-        let out = run_phase(shared, events, epoch, nchunks, &centroids, false)?;
-        let merged = merge_ordered(out.results.iter());
-        let (mu_new, shift, empties) = finalize_counted(&merged, &centroids);
+        let out = {
+            let _s = trace::span(trace::Phase::Wire);
+            run_phase(shared, events, epoch, nchunks, &centroids, false)?
+        };
+        let merged = {
+            let _s = trace::span(trace::Phase::Merge);
+            merge_ordered(out.results.iter())
+        };
+        let (mu_new, shift, empties) = {
+            let _s = trace::span(trace::Phase::Update);
+            finalize_counted(&merged, &centroids)
+        };
         centroids = mu_new;
         iterations += 1;
         history.push((merged.sse, shift));
@@ -523,6 +541,7 @@ fn coordinate(
         spec_wins += out.spec_wins;
         let converged_now = shift < cfg.tol;
         if let Some(sink) = sink {
+            let _s = trace::span(trace::Phase::Ckpt);
             // committed-phase state: the merge above is a function of
             // the chunk grid and mu_used alone, so this snapshot resumes
             // bit-identically however the chunks were scheduled
@@ -538,6 +557,7 @@ fn coordinate(
                 },
             )?;
         }
+        trace::emit_iter(iterations, merged.sse, empties, &drain_worker_phases(shared));
         if converged_now {
             converged = true;
         }
@@ -585,6 +605,30 @@ fn coordinate(
         rejoins,
         spec_wins,
     })
+}
+
+/// Drain the per-agent shard-side timing accumulators into one
+/// [`WorkerPhase`] row per agent that reported anything this iteration.
+/// Empty (no allocation beyond the Vec header) when tracing is off.
+fn drain_worker_phases(shared: &Shared) -> Vec<WorkerPhase> {
+    if !trace::enabled() {
+        return Vec::new();
+    }
+    shared
+        .agent_assign_ns
+        .iter()
+        .zip(&shared.agent_ser_ns)
+        .enumerate()
+        .filter_map(|(wid, (a_ns, s_ns))| {
+            let assign_ns = a_ns.swap(0, Ordering::Relaxed);
+            let ser_ns = s_ns.swap(0, Ordering::Relaxed);
+            (assign_ns > 0 || ser_ns > 0).then_some(WorkerPhase {
+                worker: wid as u64,
+                assign_ns,
+                ser_ns,
+            })
+        })
+        .collect()
 }
 
 /// Publish one phase and pump events until every chunk has an accepted
@@ -833,6 +877,7 @@ fn release_claim(a: &Agent<'_>, epoch: u64, chunk: usize) {
     if !w.completed[chunk] && w.holders[chunk].is_empty() {
         w.pending.push_back(chunk);
         a.shared.redispatched.fetch_add(1, Ordering::Relaxed);
+        trace::counter_add("dist_redispatched_chunks_total", 1);
     }
     a.shared.cv.notify_all();
 }
@@ -892,7 +937,7 @@ fn exchange_chunk(
     let (frame, rx) = recv(stream, a.addr, "waiting for ChunkPartials")?;
     a.shared.bytes_rx.fetch_add(rx, Ordering::Relaxed);
     match frame {
-        Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign }
+        Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign, phase }
             if chunk == job.chunk as u64
                 && k as usize == a.k
                 && dim as usize == a.d
@@ -900,6 +945,12 @@ fn exchange_chunk(
                 && sums.len() == a.k * a.d
                 && assign.len() == if job.want_assign { hi - lo } else { 0 } =>
         {
+            if trace::enabled() {
+                if let Some(p) = phase {
+                    a.shared.agent_assign_ns[a.wid].fetch_add(p.assign_ns, Ordering::Relaxed);
+                    a.shared.agent_ser_ns[a.wid].fetch_add(p.ser_ns, Ordering::Relaxed);
+                }
+            }
             let stats = PartialStats { k: a.k, dim: a.d, sums, counts, sse };
             Ok((stats, job.want_assign.then_some(assign)))
         }

@@ -40,6 +40,7 @@ use crate::kmeans::step::{finalize_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
 use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
+use crate::util::trace;
 
 /// Run Elkan-accelerated Lloyd (single worker).
 pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
@@ -311,7 +312,10 @@ fn run_from_threads_ckpt(
             stats.reset();
             stats.sums.copy_from_slice(&sums);
             stats.counts.copy_from_slice(&counts);
-            let (mu_new, shift, empties) = finalize_counted(&stats, &mu);
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&stats, &mu)
+            };
 
             let mut c = ctx.write().unwrap();
             for ci in 0..k {
@@ -330,10 +334,12 @@ fn run_from_threads_ckpt(
             if shift < cfg.tol {
                 converged = true;
                 prune.per_iter.push((0, 0)); // no reassignment phase ran
+                trace::emit_iter(iterations, f64::NAN, empties, &[]);
                 break;
             }
 
             // inter-centroid distances and s(c)
+            let bounds_span = trace::span(trace::Phase::Bounds);
             for a in 0..k {
                 let mut nearest = f32::INFINITY;
                 for o in 0..k {
@@ -349,13 +355,18 @@ fn run_from_threads_ckpt(
                 c.s_half[a] = nearest * 0.5;
             }
             drop(c);
+            drop(bounds_span);
 
             queue.fill(nchunks);
-            barrier.wait(); // (A)
-            barrier.wait(); // (B)
+            {
+                let _s = trace::span(trace::Phase::Assign);
+                barrier.wait(); // (A)
+                barrier.wait(); // (B)
+            }
 
             // replay reassignment events: ascending chunk, emission
             // order within — bitwise the serial engine's update chain
+            let merge_span = trace::span(trace::Phase::Merge);
             let mut computed = 0u64;
             for slot in &slots {
                 let mut s = slot.lock().unwrap();
@@ -373,8 +384,10 @@ fn run_from_threads_ckpt(
                 }
             }
             prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
+            drop(merge_span);
 
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 if sink.should(iterations) {
                     // gather the chunk-sliced arrays back into row order
                     let mut b_assign = Vec::with_capacity(n);
@@ -410,6 +423,7 @@ fn run_from_threads_ckpt(
                     }
                 }
             }
+            trace::emit_iter(iterations, f64::NAN, empties, &[]);
         }
         done.store(true, Ordering::Release);
         barrier.wait(); // release workers into the exit branch

@@ -33,6 +33,7 @@ use crate::kmeans::step::{finalize_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult, PruneStats};
 use crate::linalg;
 use crate::linalg::kernel::{self, KernelTier, POINTS_BLOCK};
+use crate::util::trace;
 
 /// Run Hamerly-accelerated Lloyd (single worker).
 pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
@@ -303,7 +304,10 @@ fn run_from_threads_ckpt(
             stats.reset();
             stats.sums.copy_from_slice(&sums);
             stats.counts.copy_from_slice(&counts);
-            let (mu_new, shift, empties) = finalize_counted(&stats, &mu);
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&stats, &mu)
+            };
 
             // per-centroid movement; the two largest drive the bounds
             let mut c = ctx.write().unwrap();
@@ -337,10 +341,12 @@ fn run_from_threads_ckpt(
             if shift < cfg.tol {
                 converged = true;
                 prune.per_iter.push((0, 0)); // no reassignment phase ran
+                trace::emit_iter(iterations, f64::NAN, empties, &[]);
                 break;
             }
 
             // update s(c): half min distance between centroids
+            let bounds_span = trace::span(trace::Phase::Bounds);
             for ci in 0..k {
                 let mut best = f32::INFINITY;
                 for o in 0..k {
@@ -353,12 +359,17 @@ fn run_from_threads_ckpt(
                 c.s_half[ci] = best.sqrt() * 0.5;
             }
             drop(c);
+            drop(bounds_span);
 
             queue.fill(nchunks);
-            barrier.wait(); // (A)
-            barrier.wait(); // (B)
+            {
+                let _s = trace::span(trace::Phase::Assign);
+                barrier.wait(); // (A)
+                barrier.wait(); // (B)
+            }
 
             // replay reassignment events in ascending row order
+            let merge_span = trace::span(trace::Phase::Merge);
             let mut computed = 0u64;
             for slot in &slots {
                 let mut s = slot.lock().unwrap();
@@ -376,8 +387,10 @@ fn run_from_threads_ckpt(
                 }
             }
             prune.per_iter.push((computed, (n as u64 * k as u64).saturating_sub(computed)));
+            drop(merge_span);
 
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 if sink.should(iterations) {
                     // gather the chunk-sliced arrays back into row order
                     let mut b_assign = Vec::with_capacity(n);
@@ -413,6 +426,7 @@ fn run_from_threads_ckpt(
                     }
                 }
             }
+            trace::emit_iter(iterations, f64::NAN, empties, &[]);
         }
         done.store(true, Ordering::Release);
         barrier.wait(); // release workers into the exit branch

@@ -14,6 +14,7 @@ use crate::kmeans::step::{assign_accumulate_mode, DistanceMode, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 use crate::linalg::kernel;
 use crate::rng::Pcg64;
+use crate::util::trace;
 
 /// Run mini-batch K-Means with batch size `batch`.
 ///
@@ -72,10 +73,14 @@ pub fn run_from(
                 DistanceMode::Dot { x_norms: &batch_norms, c_norms: &c_norms }
             }
         };
-        assign_accumulate_mode(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats, &mode)
-            .expect("shapes validated above");
+        {
+            let _s = trace::span(trace::Phase::Assign);
+            assign_accumulate_mode(&batch_rows, d, &mu, k, &mut batch_assign, &mut stats, &mode)
+                .expect("shapes validated above");
+        }
 
         // per-centroid gradient step toward the batch mean
+        let update_span = trace::span(trace::Phase::Update);
         let mut shift = 0.0f64;
         for c in 0..k {
             let bc = stats.counts[c];
@@ -94,9 +99,11 @@ pub fn run_from(
                 shift += (new - old) * (new - old);
             }
         }
+        drop(update_span);
         iterations += 1;
         ewma_shift = if ewma_shift.is_nan() { shift } else { 0.7 * ewma_shift + 0.3 * shift };
         history.push((stats.sse * (n as f64 / b as f64), shift));
+        trace::emit_iter(iterations, stats.sse * (n as f64 / b as f64), 0, &[]);
         // tolerance scaled: a batch step moves centroids ~b/n as much
         if ewma_shift < cfg.tol * (b as f64 / n as f64).max(1e-3) && iterations > 10 {
             converged = true;

@@ -44,6 +44,7 @@ use crate::kmeans::step::{
 };
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
 use crate::linalg::kernel;
+use crate::util::trace;
 
 /// How worker-local statistics reach the leader (DESIGN.md A2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -258,29 +259,39 @@ pub fn run_from_ckpt(
             if merge == MergeMode::Critical {
                 global.lock().unwrap().reset();
             }
-            barrier.wait(); // (A)
-            barrier.wait(); // (B) workers finished this iteration
+            {
+                let _s = trace::span(trace::Phase::Assign);
+                barrier.wait(); // (A)
+                barrier.wait(); // (B) workers finished this iteration
+            }
 
-            let merged = match merge {
-                // canonical ascending-shard fold (step.rs contract),
-                // straight from the lock guards: identical merged f64
-                // stats as the out-of-core engine at the same shard
-                // count, no per-iteration copies
-                MergeMode::Leader => merge_ordered(slots.iter().map(|s| s.lock().unwrap())),
-                MergeMode::Critical => {
-                    let mut m = PartialStats::zeros(k, d);
-                    m.merge(&global.lock().unwrap());
-                    m
+            let merged = {
+                let _s = trace::span(trace::Phase::Merge);
+                match merge {
+                    // canonical ascending-shard fold (step.rs contract),
+                    // straight from the lock guards: identical merged f64
+                    // stats as the out-of-core engine at the same shard
+                    // count, no per-iteration copies
+                    MergeMode::Leader => merge_ordered(slots.iter().map(|s| s.lock().unwrap())),
+                    MergeMode::Critical => {
+                        let mut m = PartialStats::zeros(k, d);
+                        m.merge(&global.lock().unwrap());
+                        m
+                    }
                 }
             };
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&merged, &mu_old)
+            };
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
             empty_events.push(empties);
             let converged_now = shift < cfg.tol;
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 let snap_err = ckpt::save_dense(
                     sink,
                     &DenseSnap {
@@ -297,6 +308,7 @@ pub fn run_from_ckpt(
                     break;
                 }
             }
+            trace::emit_iter(iterations, merged.sse, empties, &[]);
             if converged_now {
                 converged = true;
                 break;
@@ -462,28 +474,40 @@ fn run_from_steal_ckpt(
                 global.lock().unwrap().reset();
             }
             queue.fill(nchunks);
-            barrier.wait(); // (A)
-            barrier.wait(); // (B) workers finished this iteration
+            {
+                let _s = trace::span(trace::Phase::Assign);
+                barrier.wait(); // (A)
+                barrier.wait(); // (B) workers finished this iteration
+            }
 
-            let merged = match merge {
-                // canonical zeros-seeded ascending-chunk fold: the
-                // chunk grid depends only on n, so merged f64 stats are
-                // identical for every p and steal schedule
-                MergeMode::Leader => merge_ordered(chunk_stats.iter().map(|s| s.lock().unwrap())),
-                MergeMode::Critical => {
-                    let mut m = PartialStats::zeros(k, d);
-                    m.merge(&global.lock().unwrap());
-                    m
+            let merged = {
+                let _s = trace::span(trace::Phase::Merge);
+                match merge {
+                    // canonical zeros-seeded ascending-chunk fold: the
+                    // chunk grid depends only on n, so merged f64 stats are
+                    // identical for every p and steal schedule
+                    MergeMode::Leader => {
+                        merge_ordered(chunk_stats.iter().map(|s| s.lock().unwrap()))
+                    }
+                    MergeMode::Critical => {
+                        let mut m = PartialStats::zeros(k, d);
+                        m.merge(&global.lock().unwrap());
+                        m
+                    }
                 }
             };
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&merged, &mu_old)
+            };
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
             empty_events.push(empties);
             let converged_now = shift < cfg.tol;
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 let snap_err = ckpt::save_dense(
                     sink,
                     &DenseSnap {
@@ -500,6 +524,7 @@ fn run_from_steal_ckpt(
                     break;
                 }
             }
+            trace::emit_iter(iterations, merged.sse, empties, &[]);
             if converged_now {
                 converged = true;
                 break;

@@ -9,6 +9,7 @@ use crate::error::Result;
 use crate::kmeans::ckpt::{self, CkptSink, CkptState, DenseSnap};
 use crate::kmeans::step::{lloyd_iteration_policy_counted, PartialStats};
 use crate::kmeans::{init, KmeansConfig, KmeansResult};
+use crate::util::trace;
 
 /// Run serial Lloyd on `ds`.
 pub fn run(ds: &Dataset, cfg: &KmeansConfig) -> KmeansResult {
@@ -71,15 +72,18 @@ pub fn run_from_ckpt(
     let mut converged = false;
 
     for _ in iterations..cfg.max_iters {
-        let (mu_new, shift, sse, empties) =
+        let (mu_new, shift, sse, empties) = {
+            let _s = trace::span(trace::Phase::Assign);
             lloyd_iteration_policy_counted(ds, &centroids, k, &mut assign, &mut stats, cfg.distance)
-                .expect("shapes validated above");
+                .expect("shapes validated above")
+        };
         let prev = std::mem::replace(&mut centroids, mu_new);
         iterations += 1;
         history.push((sse, shift));
         empty_events.push(empties);
         let converged_now = shift < cfg.tol;
         if let Some(sink) = sink {
+            let _s = trace::span(trace::Phase::Ckpt);
             ckpt::save_dense(
                 sink,
                 &DenseSnap {
@@ -92,6 +96,7 @@ pub fn run_from_ckpt(
                 },
             )?;
         }
+        trace::emit_iter(iterations, sse, empties, &[]);
         if converged_now {
             converged = true;
             break;

@@ -43,6 +43,7 @@ use crate::kmeans::step::{self, finalize_counted, merge_ordered, DistanceMode, P
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::linalg::kernel;
 use crate::rng::Pcg64;
+use crate::util::trace;
 
 /// Execution shape of an out-of-core run: how many shard workers, and
 /// how many rows each buffers at a time. Neither affects results
@@ -358,21 +359,31 @@ fn run_from_ckpt(
 
         // ---- leader ---------------------------------------------------
         for _ in iterations..cfg.max_iters {
-            barrier.wait(); // (A)
-            barrier.wait(); // (B) workers finished this iteration
+            {
+                let _s = trace::span(trace::Phase::Assign);
+                barrier.wait(); // (A)
+                barrier.wait(); // (B) workers finished this iteration
+            }
             if let Some(e) = fail.lock().unwrap().take() {
                 worker_err = Some(e);
                 break;
             }
-            let merged = merge_ordered(slots.iter().map(|s| s.lock().unwrap()));
+            let merged = {
+                let _s = trace::span(trace::Phase::Merge);
+                merge_ordered(slots.iter().map(|s| s.lock().unwrap()))
+            };
             let mu_old = centroids.read().unwrap().clone();
-            let (mu_new, shift, empties) = finalize_counted(&merged, &mu_old);
+            let (mu_new, shift, empties) = {
+                let _s = trace::span(trace::Phase::Update);
+                finalize_counted(&merged, &mu_old)
+            };
             *centroids.write().unwrap() = mu_new;
             iterations += 1;
             history.push((merged.sse, shift));
             empty_events.push(empties);
             let converged_now = shift < cfg.tol;
             if let Some(sink) = sink {
+                let _s = trace::span(trace::Phase::Ckpt);
                 let res = ckpt::save_dense(
                     sink,
                     &DenseSnap {
@@ -389,6 +400,7 @@ fn run_from_ckpt(
                     break;
                 }
             }
+            trace::emit_iter(iterations, merged.sse, empties, &[]);
             if converged_now {
                 converged = true;
                 break;

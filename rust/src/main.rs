@@ -39,6 +39,7 @@ use parakmeans::kmeans::{self, KmeansConfig};
 use parakmeans::linalg::kernel::{self, KernelChoice};
 use parakmeans::metrics;
 use parakmeans::util::args::Args;
+use parakmeans::util::trace;
 
 /// `anyhow::Context` stand-in (no third-party crates offline).
 trait OrConfig<T> {
@@ -109,6 +110,8 @@ fn print_usage() {
          \u{20}          [--checkpoint DIR] [--checkpoint-every N] [--resume DIR]   (durable .pkc\n\
          \u{20}          snapshots, A/B rotated; resume continues bit-identically —\n\
          \u{20}          serial|threads|elkan|hamerly|oocore|dist)\n\
+         \u{20}          [--trace FILE.jsonl | PARAKM_TRACE=FILE] [--stats-every N]   (per-iteration\n\
+         \u{20}          phase spans to JSONL + live progress every N iterations; off = zero cost)\n\
          worker    --listen HOST:PORT  --input <file.pkd> | --synthetic <2d|3d>:<N>\n\
          \u{20}          [--shard I/S] [--chunk C] [--seed S (synthetic only)] [--once]\n\
          eval      --exp t1|..|t5|figs|speedup|scaling|a1|a2|a3|report|all [--scale full|smoke]\n\
@@ -118,7 +121,8 @@ fn print_usage() {
          \u{20}          [--max-line-bytes B] [--shed-soft-pct PCT] [--shed-heavy-points N]\n\
          \u{20}          [--stats-every SECS]   (periodic latency/shed summary on stderr)\n\
          \u{20}          [--artifacts DIR] [--distance exact|dot]\n\
-         \u{20}          ({{\"stats\": true}} probes live counters + latency percentiles)\n\
+         \u{20}          ({{\"stats\": true}} probes live counters + latency percentiles;\n\
+         \u{20}          {{\"metrics\": true}} dumps the metrics registry, \"text\" = Prometheus)\n\
          info      [--artifacts DIR]"
     );
 }
@@ -314,6 +318,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
     let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
     let resume_dir = args.get("resume").map(PathBuf::from);
+    install_trace_from(args)?;
     args.finish()?;
 
     if ckpt_every == 0 {
@@ -471,6 +476,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = save_model {
         save_model_file(&path, engine, seed, &result)?;
     }
+    finish_trace()?;
     print_artifact_warnings();
     Ok(())
 }
@@ -487,6 +493,30 @@ fn print_empty_clusters(result: &parakmeans::kmeans::KmeansResult) {
             result.iterations
         );
     }
+}
+
+/// `--trace FILE` / `PARAKM_TRACE` + `--stats-every N`: consume the
+/// observability flags (before `args.finish()` so they count as used)
+/// and install the process-wide tracer when either asks for it. Left
+/// uninstalled, every span/emit call in the engines stays a single
+/// relaxed atomic load (DESIGN.md §15).
+fn install_trace_from(args: &Args) -> Result<()> {
+    let flag = args.get("trace").map(|s| s.to_string());
+    let stats_every: u64 = args.get_or("stats-every", 0)?;
+    let path = trace::trace_path_from(flag.as_deref());
+    if path.is_some() || stats_every > 0 {
+        trace::install(path, stats_every);
+    }
+    Ok(())
+}
+
+/// Flush the JSONL run trace (atomic write) and name it in the run
+/// report. No-op when tracing was never installed.
+fn finish_trace() -> Result<()> {
+    if let Some(p) = trace::finish()? {
+        println!("trace       : {}", p.display());
+    }
+    Ok(())
 }
 
 /// One summary line when any artifact read this run lacked (or needed
@@ -599,6 +629,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     } else {
         return Err(Error::Config("provide --input <file.pkd> or --synthetic <2d|3d>:<N>".into()));
     };
+    install_trace_from(args)?;
     args.finish()?;
 
     let tier = match kernel_flag {
@@ -704,6 +735,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
     if let Some(path) = save_model {
         save_model_file(&path, Engine::OutOfCore, seed, &result)?;
     }
+    finish_trace()?;
     print_artifact_warnings();
     Ok(())
 }
@@ -736,6 +768,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
     let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
     let resume_dir = args.get("resume").map(PathBuf::from);
+    install_trace_from(args)?;
     args.finish()?;
 
     if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
@@ -832,6 +865,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     if let Some(path) = save_model {
         save_model_file(&path, Engine::Dist, seed, result)?;
     }
+    finish_trace()?;
     print_artifact_warnings();
     Ok(())
 }

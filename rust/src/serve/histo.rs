@@ -1,40 +1,37 @@
 //! Log-bucketed per-request latency histogram for the serve path.
 //!
-//! One `u64` counter per power-of-two nanosecond bucket: a request that
-//! took `ns` nanoseconds lands in bucket `⌈log2(ns+1)⌉` (bucket 0 holds
-//! exactly 0 ns, bucket 1 holds 1 ns, bucket b holds `[2^(b-1), 2^b)`),
-//! capped at bucket 63. Recording is a subtraction, a `leading_zeros`
-//! and an increment — cheap enough to sit on every request in both
-//! serve loops — and the fixed 64×8-byte footprint means the histogram
-//! can live under the stats mutex without allocation.
+//! A thin serve-flavored wrapper over the generalized log₂ histogram
+//! in [`crate::util::trace::Log2Histo`] (one `u64` counter per
+//! power-of-two nanosecond bucket; bucket 0 holds exactly 0 ns, bucket
+//! `b` holds `[2^(b-1), 2^b)`, bucket 63 saturates as the explicit
+//! overflow bucket). Recording is a subtraction, a `leading_zeros` and
+//! an increment — cheap enough to sit on every request in both serve
+//! loops — and the fixed 64×8-byte footprint means the histogram can
+//! live under the stats mutex without allocation.
 //!
-//! Quantiles are read back by cumulative count. A quantile is reported
-//! as the arithmetic midpoint of the bucket it falls in, so p50/p90/p99
-//! carry the usual log-bucket resolution (±~25%): good enough to spot
-//! a shed tier engaging or a batch-delay regression, not a calibrated
+//! Quantiles interpolate linearly within a bucket by rank position, so
+//! sub-µs latency distributions resolve instead of collapsing to a
+//! bucket constant (the pre-interpolation midpoint rule reported the
+//! same value for p50 and p99 whenever both ranks shared a bucket).
+//! Still log-bucket resolution (±~25%), not a calibrated
 //! microbenchmark — `benches/serving_load.rs` measures exact per-
 //! request wall times when precision matters.
 
 use std::time::Duration;
 
+use crate::util::trace::Log2Histo;
+
 /// Number of power-of-two buckets (covers 0 ns ..= u64::MAX ns).
-pub const BUCKETS: usize = 64;
+pub const BUCKETS: usize = crate::util::trace::HISTO_BUCKETS;
 
 /// Fixed-footprint log2-nanosecond latency histogram.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LatencyHisto {
-    counts: [u64; BUCKETS],
-    total: u64,
-}
-
-impl Default for LatencyHisto {
-    fn default() -> Self {
-        LatencyHisto { counts: [0; BUCKETS], total: 0 }
-    }
+    inner: Log2Histo,
 }
 
 /// The quantile digest surfaced in `{"stats"}` responses and the CLI
-/// summary (microseconds, bucket-midpoint resolution).
+/// summary (microseconds, interpolated log-bucket resolution).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LatencySummary {
     pub count: u64,
@@ -43,54 +40,28 @@ pub struct LatencySummary {
     pub p99_us: f64,
 }
 
-fn bucket_of(ns: u64) -> usize {
-    ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
-}
-
-/// Arithmetic midpoint of a bucket, in nanoseconds.
-fn bucket_mid_ns(bucket: usize) -> f64 {
-    if bucket == 0 {
-        return 0.0;
-    }
-    let lo = 2f64.powi(bucket as i32 - 1);
-    let hi = 2f64.powi(bucket as i32);
-    (lo + hi) / 2.0
-}
-
 impl LatencyHisto {
     /// Record one request's wall time.
     pub fn record(&mut self, elapsed: Duration) {
         let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
-        self.counts[bucket_of(ns)] += 1;
-        self.total += 1;
+        self.inner.record(ns);
     }
 
     /// Total number of recorded requests.
     pub fn count(&self) -> u64 {
-        self.total
+        self.inner.count()
     }
 
-    /// The `q`-quantile (`0 < q <= 1`) in nanoseconds, at bucket
-    /// resolution; 0.0 when nothing has been recorded.
+    /// The `q`-quantile (`0 < q <= 1`) in nanoseconds, interpolated
+    /// within its bucket; 0.0 when nothing has been recorded.
     pub fn quantile_ns(&self, q: f64) -> f64 {
-        if self.total == 0 {
-            return 0.0;
-        }
-        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
-        let mut cum = 0u64;
-        for (b, &c) in self.counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return bucket_mid_ns(b);
-            }
-        }
-        bucket_mid_ns(BUCKETS - 1)
+        self.inner.quantile_ns(q)
     }
 
     /// p50/p90/p99 digest in microseconds.
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
-            count: self.total,
+            count: self.count(),
             p50_us: self.quantile_ns(0.50) / 1_000.0,
             p90_us: self.quantile_ns(0.90) / 1_000.0,
             p99_us: self.quantile_ns(0.99) / 1_000.0,
@@ -101,6 +72,11 @@ impl LatencyHisto {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::trace::OVERFLOW_BUCKET;
+
+    fn bucket_of(ns: u64) -> usize {
+        Log2Histo::bucket_of(ns)
+    }
 
     #[test]
     fn buckets_are_log2_ns() {
@@ -138,7 +114,7 @@ mod tests {
         assert_eq!(s.count, 100);
         assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us);
         // p50 sits in the ~1 µs bucket, p99 in the ~100 µs bucket
-        // (log-bucket midpoints, so compare within a factor of 2)
+        // (log buckets, so compare within a factor of 2)
         assert!(s.p50_us >= 0.5 && s.p50_us <= 2.0, "p50={}", s.p50_us);
         assert!(s.p99_us >= 64.0 && s.p99_us <= 256.0, "p99={}", s.p99_us);
     }
@@ -151,5 +127,34 @@ mod tests {
         assert_eq!(s.count, 1);
         assert_eq!(s.p50_us, s.p99_us);
         assert!(s.p50_us > 0.0);
+    }
+
+    #[test]
+    fn sub_microsecond_quantiles_interpolate_not_collapse() {
+        // the satellite fix: 100 samples spread across one bucket
+        // [512, 1024) used to report p50 == p99 == the bucket midpoint;
+        // rank interpolation must separate them
+        let mut h = LatencyHisto::default();
+        for i in 0..100u64 {
+            h.record(Duration::from_nanos(600 + i));
+        }
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 < p99, "p50 {p50} must interpolate below p99 {p99}");
+        assert!((512.0..1024.0).contains(&p50), "{p50}");
+        assert!((512.0..1024.0).contains(&p99), "{p99}");
+    }
+
+    #[test]
+    fn overflow_saturates_to_the_last_bucket_bound() {
+        let mut h = LatencyHisto::default();
+        h.record(Duration::from_secs(u64::MAX / 2_000_000_000));
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(bucket_of(u64::MAX), OVERFLOW_BUCKET);
+        // the overflow bucket reports its lower bound (2^62 ns), a
+        // stated saturation rather than a fabricated midpoint
+        assert_eq!(h.quantile_ns(0.5), (1u64 << 62) as f64);
+        assert_eq!(h.quantile_ns(0.99), (1u64 << 62) as f64);
     }
 }

@@ -123,6 +123,12 @@ impl Conn {
         self.wbuf.push(b'\n');
     }
 
+    /// Queue bytes verbatim (the Prometheus text response carries its
+    /// own newlines and `# EOF` terminator).
+    fn push_raw(&mut self, raw: &str) {
+        self.wbuf.extend_from_slice(raw.as_bytes());
+    }
+
     fn finished(&self) -> bool {
         self.dead || (self.closing && self.inflight == 0 && !self.wants_write())
     }
@@ -383,6 +389,14 @@ fn handle_line(c: &mut Conn, tok: u64, ctx: &Ctx, raw: &[u8]) {
     match ClientRequest::parse_tape(line) {
         Ok(ClientRequest::Stats) => {
             c.push_line(&protocol::stats_line(&ctx.shared.snapshot()));
+            ctx.shared.record_latency(started);
+        }
+        Ok(ClientRequest::Metrics { text: false }) => {
+            c.push_line(&protocol::metrics_line(&ctx.shared.snapshot()));
+            ctx.shared.record_latency(started);
+        }
+        Ok(ClientRequest::Metrics { text: true }) => {
+            c.push_raw(&protocol::metrics_text(&ctx.shared.snapshot()));
             ctx.shared.record_latency(started);
         }
         Ok(ClientRequest::Assign(request)) => {

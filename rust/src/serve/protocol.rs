@@ -73,12 +73,18 @@ impl Request {
     }
 }
 
-/// Any line a client may send: an assignment request or the
-/// observability probe `{"stats": true}`.
+/// Any line a client may send: an assignment request, the
+/// observability probe `{"stats": true}`, or the metrics-registry dump
+/// `{"metrics": true}` (JSON) / `{"metrics": "text"}` (Prometheus
+/// exposition text).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientRequest {
     Assign(Request),
     Stats,
+    Metrics {
+        /// Prometheus text exposition instead of one JSON line.
+        text: bool,
+    },
 }
 
 impl ClientRequest {
@@ -106,6 +112,12 @@ impl ClientRequest {
         if j.get("stats").and_then(Json::as_bool) == Some(true) {
             return Ok(ClientRequest::Stats);
         }
+        if j.get("metrics").and_then(Json::as_bool) == Some(true) {
+            return Ok(ClientRequest::Metrics { text: false });
+        }
+        if j.get("metrics").and_then(Json::as_str) == Some("text") {
+            return Ok(ClientRequest::Metrics { text: true });
+        }
         Request::from_json(j).map(ClientRequest::Assign)
     }
 }
@@ -126,13 +138,21 @@ pub struct ServeStats {
     pub oversized: u64,
     /// Per-request latency digest (both serve loops record into it).
     pub latency: LatencySummary,
+    /// Artifact CRC integrity warnings observed process-wide
+    /// ([`crate::data::io::artifact_warnings`], sampled at snapshot
+    /// time by the serve loop).
+    pub artifact_warnings: u64,
+    /// Keep-centroid (empty-cluster) events observed process-wide
+    /// ([`crate::util::trace::empty_events_total`]).
+    pub empty_events: u64,
 }
 
 /// Render the stats response line (no trailing newline):
 /// `{"stats": {"batches": .., "errors": .., "padded_rows": ..,
 /// "points": .., "requests": .., "saturated": .., "shed_heavy": ..,
 /// "shed_load": .., "oversized": .., "lat_count": ..,
-/// "lat_p50_us": .., "lat_p90_us": .., "lat_p99_us": ..}}`.
+/// "lat_p50_us": .., "lat_p90_us": .., "lat_p99_us": ..,
+/// "artifact_warnings": .., "empty_events": ..}}`.
 /// `batches` is the batcher's device-call count; the `lat_*` fields
 /// carry the log-bucket histogram digest of
 /// [`crate::serve::histo::LatencyHisto`].
@@ -151,9 +171,56 @@ pub fn stats_line(s: &ServeStats) -> String {
     inner.insert("lat_p50_us".to_string(), Json::Num(s.latency.p50_us));
     inner.insert("lat_p90_us".to_string(), Json::Num(s.latency.p90_us));
     inner.insert("lat_p99_us".to_string(), Json::Num(s.latency.p99_us));
+    inner.insert("artifact_warnings".to_string(), Json::Num(s.artifact_warnings as f64));
+    inner.insert("empty_events".to_string(), Json::Num(s.empty_events as f64));
     let mut obj = BTreeMap::new();
     obj.insert("stats".to_string(), Json::Obj(inner));
     Json::Obj(obj).to_string()
+}
+
+/// The metrics-registry dump as one flat JSON object: the process-wide
+/// [`crate::util::trace`] registry (counters, gauges, histogram
+/// quantiles) merged with the serve counters under stable
+/// `serve_*`-prefixed names. Both serve loops render through this one
+/// function, so the poll/threads byte-identity contract extends to
+/// `{"metrics"}` responses.
+pub fn metrics_json(s: &ServeStats) -> Json {
+    let mut obj = match crate::util::trace::metrics_snapshot() {
+        Json::Obj(m) => m,
+        _ => BTreeMap::new(),
+    };
+    obj.insert("serve_requests_total".to_string(), Json::Num(s.batcher.requests as f64));
+    obj.insert("serve_points_total".to_string(), Json::Num(s.batcher.points as f64));
+    obj.insert("serve_batches_total".to_string(), Json::Num(s.batcher.device_calls as f64));
+    obj.insert("serve_padded_rows_total".to_string(), Json::Num(s.batcher.padded_rows as f64));
+    obj.insert("serve_errors_total".to_string(), Json::Num(s.batcher.errors as f64));
+    obj.insert("serve_saturated_total".to_string(), Json::Num(s.saturated as f64));
+    obj.insert("serve_shed_heavy_total".to_string(), Json::Num(s.shed_heavy as f64));
+    obj.insert("serve_shed_load_total".to_string(), Json::Num(s.shed_load as f64));
+    obj.insert("serve_oversized_total".to_string(), Json::Num(s.oversized as f64));
+    obj.insert("serve_latency_count".to_string(), Json::Num(s.latency.count as f64));
+    obj.insert("serve_latency_p50_us".to_string(), Json::Num(s.latency.p50_us));
+    obj.insert("serve_latency_p90_us".to_string(), Json::Num(s.latency.p90_us));
+    obj.insert("serve_latency_p99_us".to_string(), Json::Num(s.latency.p99_us));
+    obj.insert("artifact_warnings_total".to_string(), Json::Num(s.artifact_warnings as f64));
+    obj.insert("empty_cluster_events_total".to_string(), Json::Num(s.empty_events as f64));
+    Json::Obj(obj)
+}
+
+/// Render the `{"metrics": true}` response line (no trailing newline):
+/// `{"metrics": {<registry + serve counters>}}`.
+pub fn metrics_line(s: &ServeStats) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("metrics".to_string(), metrics_json(s));
+    Json::Obj(obj).to_string()
+}
+
+/// Render the `{"metrics": "text"}` response: Prometheus exposition
+/// text, one `name value` line per metric, terminated by `# EOF` —
+/// the one multi-line response in the protocol (the terminator tells
+/// scrapers where it ends).
+pub fn metrics_text(s: &ServeStats) -> String {
+    crate::util::trace::metrics_text_from(&metrics_json(s))
 }
 
 /// Error string of the typed saturation rejection: sent (with id 0 —
@@ -323,6 +390,8 @@ mod tests {
             shed_load: 2,
             oversized: 4,
             latency: LatencySummary { count: 10, p50_us: 1.5, p90_us: 12.0, p99_us: 96.0 },
+            artifact_warnings: 5,
+            empty_events: 6,
         };
         let line = stats_line(&stats);
         let j = Json::parse(&line).unwrap();
@@ -340,8 +409,71 @@ mod tests {
         assert_eq!(s.get("lat_p50_us").and_then(Json::as_f64), Some(1.5));
         assert_eq!(s.get("lat_p90_us").and_then(Json::as_f64), Some(12.0));
         assert_eq!(s.get("lat_p99_us").and_then(Json::as_f64), Some(96.0));
+        assert_eq!(s.get("artifact_warnings").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(s.get("empty_events").and_then(Json::as_f64), Some(6.0));
         // one line, no embedded newlines (line-JSON protocol)
         assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn metrics_request_routes_both_forms() {
+        assert_eq!(
+            ClientRequest::parse(r#"{"metrics": true}"#).unwrap(),
+            ClientRequest::Metrics { text: false }
+        );
+        assert_eq!(
+            ClientRequest::parse(r#"{"metrics": "text"}"#).unwrap(),
+            ClientRequest::Metrics { text: true }
+        );
+        // anything else under the key is a malformed assign request
+        assert!(ClientRequest::parse(r#"{"metrics": false}"#).is_err());
+        assert!(ClientRequest::parse(r#"{"metrics": "json"}"#).is_err());
+        // both front ends agree on the new forms
+        for line in [r#"{"metrics": true}"#, r#"{"metrics": "text"}"#] {
+            assert_eq!(
+                ClientRequest::parse(line).unwrap(),
+                ClientRequest::parse_tape_tier(line, KernelTier::Scalar).unwrap(),
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_line_merges_registry_and_serve_counters() {
+        let stats = ServeStats {
+            batcher: BatcherStats {
+                requests: 10,
+                points: 640,
+                device_calls: 2,
+                padded_rows: 55,
+                errors: 1,
+            },
+            saturated: 7,
+            shed_heavy: 3,
+            shed_load: 2,
+            oversized: 4,
+            latency: LatencySummary { count: 10, p50_us: 1.5, p90_us: 12.0, p99_us: 96.0 },
+            artifact_warnings: 0,
+            empty_events: 9,
+        };
+        let line = metrics_line(&stats);
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        let m = j.get("metrics").expect("metrics object");
+        assert_eq!(m.get("serve_requests_total").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(m.get("serve_latency_p99_us").and_then(Json::as_f64), Some(96.0));
+        assert_eq!(m.get("empty_cluster_events_total").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(m.get("artifact_warnings_total").and_then(Json::as_f64), Some(0.0));
+        // registry counters appear alongside the serve counters
+        crate::util::trace::counter_add("protocol_test_metric_total", 3);
+        let j2 = Json::parse(&metrics_line(&stats)).unwrap();
+        assert_eq!(
+            j2.get("metrics").unwrap().get("protocol_test_metric_total").and_then(Json::as_f64),
+            Some(3.0)
+        );
+        // the text rendering is Prometheus-shaped and EOF-terminated
+        let text = metrics_text(&stats);
+        assert!(text.lines().any(|l| l == "serve_requests_total 10"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
     }
 
     #[test]

@@ -194,6 +194,8 @@ impl ServeShared {
             shed_load: self.shed_load.load(Ordering::Acquire),
             oversized: self.oversized.load(Ordering::Acquire),
             latency: self.latency.lock().unwrap().summary(),
+            artifact_warnings: crate::data::io::artifact_warnings(),
+            empty_events: crate::util::trace::empty_events_total(),
         }
     }
 
@@ -491,6 +493,18 @@ fn handle_conn(
         }
         let reply_line = match ClientRequest::parse(line) {
             Ok(ClientRequest::Stats) => protocol::stats_line(&shared.snapshot()),
+            Ok(ClientRequest::Metrics { text: false }) => {
+                protocol::metrics_line(&shared.snapshot())
+            }
+            Ok(ClientRequest::Metrics { text: true }) => {
+                // the one multi-line response: Prometheus exposition
+                // text, already `# EOF`-terminated (no extra newline)
+                shared.record_latency(started);
+                if write!(writer, "{}", protocol::metrics_text(&shared.snapshot())).is_err() {
+                    break;
+                }
+                continue;
+            }
             Ok(ClientRequest::Assign(request)) => {
                 if let Some(err) = shed_decision(&shared, queue_depth, &shed, request.points.len())
                 {
@@ -789,6 +803,63 @@ mod tests {
             assert_eq!(s.get("shed_heavy").and_then(Json::as_f64), Some(0.0), "mode {mode}");
             assert_eq!(s.get("shed_load").and_then(Json::as_f64), Some(0.0), "mode {mode}");
             assert_eq!(s.get("oversized").and_then(Json::as_f64), Some(0.0), "mode {mode}");
+            // consistency satellites: process-wide warning/event
+            // counters ride along on every probe (other tests in the
+            // process may have bumped them — presence + type only)
+            assert!(s.get("artifact_warnings").and_then(Json::as_f64).is_some(), "{line}");
+            assert!(s.get("empty_events").and_then(Json::as_f64).is_some(), "{line}");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn metrics_probe_answers_both_forms() {
+        use crate::util::json::Json;
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+
+            // JSON form: one line, registry + serve counters merged
+            writeln!(conn, r#"{{"metrics": true}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            let m = j.get("metrics").expect("metrics object");
+            assert_eq!(m.get("serve_requests_total").and_then(Json::as_f64), Some(0.0));
+            assert!(m.get("artifact_warnings_total").and_then(Json::as_f64).is_some());
+            assert!(m.get("empty_cluster_events_total").and_then(Json::as_f64).is_some());
+
+            // text form: Prometheus lines terminated by `# EOF`
+            writeln!(conn, r#"{{"metrics": "text"}}"#).unwrap();
+            let mut text = String::new();
+            loop {
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                text.push_str(&line);
+                if line.starts_with("# EOF") {
+                    break;
+                }
+            }
+            assert!(
+                text.lines().any(|l| l.starts_with("serve_requests_total ")),
+                "mode {mode}: {text}"
+            );
+
+            // the connection still serves requests after both probes
+            writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0]]}}"#).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }),
+                "mode {mode}: {line}"
+            );
             server.shutdown();
         }
     }

@@ -153,6 +153,18 @@ pub fn bench_json_row(
     m.insert("k".to_string(), Json::Num(k as f64));
     m.insert("ns_per_point_iter".to_string(), Json::Num(ns_per_point));
     m.insert("speedup_vs_exact_scalar".to_string(), Json::Num(speedup));
+    // consistency satellites: the process-wide integrity-warning and
+    // keep-centroid counters ride along on every row, so a bench run
+    // that read a CRC-less artifact (or hit empty clusters) says so in
+    // the trajectory the CI diff watches
+    m.insert(
+        "artifact_warnings".to_string(),
+        Json::Num(crate::data::io::artifact_warnings() as f64),
+    );
+    m.insert(
+        "empty_events".to_string(),
+        Json::Num(crate::util::trace::empty_events_total() as f64),
+    );
     Json::Obj(m)
 }
 
@@ -265,6 +277,9 @@ mod tests {
         assert_eq!(arr.len(), 3);
         assert_eq!(arr[1].get("engine").and_then(Json::as_str), Some("b"));
         assert_eq!(arr[0].get("n").and_then(Json::as_usize), Some(10));
+        // every row carries the process-wide consistency counters
+        assert!(arr[0].get("artifact_warnings").and_then(Json::as_f64).is_some());
+        assert!(arr[0].get("empty_events").and_then(Json::as_f64).is_some());
         // corrupt existing file is replaced, not fatal
         std::fs::write(&path, "{not json").unwrap();
         append_bench_json(&path, vec![row("d")]).unwrap();

@@ -11,3 +11,4 @@ pub mod csv;
 pub mod json;
 pub mod svg;
 pub mod tables;
+pub mod trace;

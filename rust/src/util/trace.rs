@@ -1,0 +1,682 @@
+//! Process-wide tracing + metrics layer (DESIGN.md §15).
+//!
+//! Three pieces, all dependency-free:
+//!
+//! 1. **Metrics registry** — monotonic counters, gauges and log₂-ns
+//!    latency histograms ([`Log2Histo`], generalized out of
+//!    `serve::histo`) behind one process-global store. The serve loops
+//!    dump it via `{"metrics": true}` (one JSON line) or
+//!    `{"metrics": "text"}` (Prometheus-style `name value` lines).
+//! 2. **Span API** — [`span`]`(Phase::Assign)` returns a guard whose
+//!    drop adds the elapsed nanoseconds to the current iteration's
+//!    phase accumulator. When tracing is not installed the guard is
+//!    inert: one relaxed atomic load and a `None`, no clock read, no
+//!    lock — the zero-cost-when-off guarantee `hotpath_micro` pins.
+//! 3. **Per-iteration trace events** — engines call [`emit_iter`] at
+//!    each iteration boundary; with `--trace FILE` (or `PARAKM_TRACE`)
+//!    installed, each call buffers one JSON-lines event
+//!    `{iter, sse, empty_events, phase_ns: {...}, per_worker: [...]}`
+//!    flushed by [`finish`] through the atomic-write path. With
+//!    `--stats-every N` it also prints a live progress line every N
+//!    iterations.
+//!
+//! Tracing never touches the numeric fold: spans wrap call *sites*
+//! (leader-side barrier waits, `merge_ordered`, `finalize_counted`,
+//! checkpoint saves, wire round trips), never the kernels inside them,
+//! so every documented bit-identity contract holds with tracing on or
+//! off — `integration_trace.rs` pins this for all eight engines.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// log₂ histogram (generalized from serve::histo)
+// ---------------------------------------------------------------------------
+
+/// Bucket count of a [`Log2Histo`]: bucket 0 holds exact-zero samples,
+/// bucket `b` in `1..63` holds `[2^(b-1), 2^b)` ns, and bucket 63 is
+/// the explicit saturating overflow bucket for everything `>= 2^62` ns
+/// (~146 years — nothing legitimate lands there, but a forged or
+/// overflowed sample must not index out of range).
+pub const HISTO_BUCKETS: usize = 64;
+
+/// Index of the saturating overflow bucket.
+pub const OVERFLOW_BUCKET: usize = HISTO_BUCKETS - 1;
+
+/// A fixed-size log₂-nanosecond histogram: O(1) record, O(buckets)
+/// quantile, 520 bytes of state, no allocation.
+///
+/// Quantiles interpolate linearly *within* a bucket by rank position
+/// (midpoint-rank convention), so sub-µs distributions resolve instead
+/// of collapsing to a bucket constant; the overflow bucket reports its
+/// lower bound `2^62` ns — saturation, stated rather than extrapolated.
+#[derive(Debug, Clone)]
+pub struct Log2Histo {
+    counts: [u64; HISTO_BUCKETS],
+    total: u64,
+}
+
+impl Default for Log2Histo {
+    fn default() -> Self {
+        Log2Histo::new()
+    }
+}
+
+impl Log2Histo {
+    pub const fn new() -> Log2Histo {
+        Log2Histo { counts: [0; HISTO_BUCKETS], total: 0 }
+    }
+
+    /// Bucket index for a nanosecond sample (saturating).
+    pub fn bucket_of(ns: u64) -> usize {
+        ((64 - ns.leading_zeros()) as usize).min(OVERFLOW_BUCKET)
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record(&mut self, ns: u64) {
+        self.counts[Log2Histo::bucket_of(ns)] += 1;
+        self.total += 1;
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Raw bucket counts (diagnostics, tests).
+    pub fn buckets(&self) -> &[u64; HISTO_BUCKETS] {
+        &self.counts
+    }
+
+    /// The `q`-quantile (0 < q <= 1) in nanoseconds; 0.0 when empty.
+    ///
+    /// The target rank's bucket is located by cumulative walk, then the
+    /// rank's position inside the bucket interpolates linearly across
+    /// the bucket's value range (midpoint-rank: a bucket holding one
+    /// sample reports its middle). The overflow bucket reports `2^62`.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                if b == 0 {
+                    return 0.0; // all samples in this bucket are exactly 0 ns
+                }
+                if b == OVERFLOW_BUCKET {
+                    return (1u64 << 62) as f64; // saturation, not a midpoint
+                }
+                let lo = (1u64 << (b - 1)) as f64;
+                let hi = (1u64 << b) as f64;
+                // midpoint-rank position of `target` among the c samples
+                let frac = ((target - cum) as f64 - 0.5) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        unreachable!("total > 0 guarantees a bucket reaches the target rank");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// phases + spans
+// ---------------------------------------------------------------------------
+
+/// The fixed phase vocabulary of an iteration trace event. The JSONL
+/// schema's `phase_ns` object carries exactly these six keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Point→centroid assignment + partial-stat accumulation (in the
+    /// barrier engines: the leader's wait while workers scan).
+    Assign,
+    /// Folding partials (`merge_ordered` / event replay).
+    Merge,
+    /// Centroid finalization (`finalize_counted`).
+    Update,
+    /// Bound maintenance (Elkan/Hamerly: inter-centroid distances,
+    /// bound refresh bookkeeping).
+    Bounds,
+    /// Network round trips (dist: broadcast + collect).
+    Wire,
+    /// Checkpoint snapshot writes.
+    Ckpt,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] =
+        [Phase::Assign, Phase::Merge, Phase::Update, Phase::Bounds, Phase::Wire, Phase::Ckpt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Assign => "assign",
+            Phase::Merge => "merge",
+            Phase::Update => "update",
+            Phase::Bounds => "bounds",
+            Phase::Wire => "wire",
+            Phase::Ckpt => "ckpt",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Assign => 0,
+            Phase::Merge => 1,
+            Phase::Update => 2,
+            Phase::Bounds => 3,
+            Phase::Wire => 4,
+            Phase::Ckpt => 5,
+        }
+    }
+}
+
+/// A phase timing guard: created by [`span`], adds its elapsed
+/// nanoseconds to the current iteration's accumulator on drop. Inert
+/// (no clock read, no lock) when tracing is not installed.
+pub struct Span {
+    live: Option<(Phase, Instant)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((phase, t0)) = self.live.take() {
+            let ns = t0.elapsed().as_nanos() as u64;
+            if let Some(c) = COLLECTOR.lock().unwrap().as_mut() {
+                c.cur_phase_ns[phase.idx()] += ns;
+            }
+        }
+    }
+}
+
+/// Start timing `phase`. The disabled path is one relaxed atomic load.
+#[inline]
+pub fn span(phase: Phase) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { live: None };
+    }
+    Span { live: Some((phase, Instant::now())) }
+}
+
+/// Is the trace collector installed? Cheap enough to gate optional
+/// bookkeeping (e.g. per-worker timing aggregation in the dist leader).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// collector: per-iteration trace events + progress lines
+// ---------------------------------------------------------------------------
+
+/// One remote worker's shard-side phase timings for an iteration,
+/// shipped back piggybacked on `Partials`/`ChunkPartials` (wire v4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPhase {
+    /// Worker index (shard order for static dist, agent order elastic).
+    pub worker: u64,
+    /// Shard-side assign + accumulate nanoseconds.
+    pub assign_ns: u64,
+    /// Shard-side reply serialization nanoseconds.
+    pub ser_ns: u64,
+}
+
+struct Collector {
+    /// Trace output path (`None`: progress lines only, nothing kept).
+    path: Option<PathBuf>,
+    /// Buffered JSONL events, flushed by [`finish`].
+    lines: String,
+    /// Print a progress line every N iterations (0 = never).
+    stats_every: u64,
+    /// Accumulated phase ns for the iteration being traced.
+    cur_phase_ns: [u64; 6],
+    /// SSE of the previous emitted iteration (progress-line delta).
+    last_sse: f64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static COLLECTOR: Mutex<Option<Collector>> = Mutex::new(None);
+
+// Always-on, lock-free run totals (satellite: `empty_events` must reach
+// `{"stats"}`/`{"metrics"}` and bench.json even without --trace).
+static ITERATIONS_TOTAL: AtomicU64 = AtomicU64::new(0);
+static EMPTY_EVENTS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Iterations committed process-wide (all engines, all runs).
+pub fn iterations_total() -> u64 {
+    ITERATIONS_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Empty-cluster keep-centroid events process-wide.
+pub fn empty_events_total() -> u64 {
+    EMPTY_EVENTS_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Install the trace collector: `path` receives the JSONL trace on
+/// [`finish`] (None = progress lines only); `stats_every` prints a live
+/// progress line every N iterations (0 = never). Idempotent; replaces
+/// any previous installation.
+pub fn install(path: Option<PathBuf>, stats_every: u64) {
+    let mut slot = COLLECTOR.lock().unwrap();
+    *slot = Some(Collector {
+        path,
+        lines: String::new(),
+        stats_every,
+        cur_phase_ns: [0; 6],
+        last_sse: f64::NAN,
+    });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Flush the buffered trace to its file (atomic temp+rename) and
+/// uninstall the collector. Returns the path written, if any.
+pub fn finish() -> Result<Option<PathBuf>> {
+    let taken = {
+        let mut slot = COLLECTOR.lock().unwrap();
+        ENABLED.store(false, Ordering::Release);
+        slot.take()
+    };
+    match taken {
+        Some(c) => match c.path {
+            Some(p) => {
+                crate::data::io::atomic_write(&p, c.lines.as_bytes())?;
+                Ok(Some(p))
+            }
+            None => Ok(None),
+        },
+        None => Ok(None),
+    }
+}
+
+fn f64_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null // JSON has no NaN; pruned engines report null SSE
+    }
+}
+
+/// Record one committed iteration: drains the phase accumulator into a
+/// JSONL event and (every `stats_every` iterations) prints a progress
+/// line. `iter` is the 1-based committed iteration count, `sse` the
+/// iteration's objective (NaN for pruned engines → JSON null),
+/// `empties` its empty-cluster events, `per_worker` any shard-side
+/// timings the leader collected. A no-op beyond two relaxed counter
+/// adds when tracing is not installed.
+pub fn emit_iter(iter: usize, sse: f64, empties: u64, per_worker: &[WorkerPhase]) {
+    ITERATIONS_TOTAL.fetch_add(1, Ordering::Relaxed);
+    EMPTY_EVENTS_TOTAL.fetch_add(empties, Ordering::Relaxed);
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut guard = COLLECTOR.lock().unwrap();
+    let Some(c) = guard.as_mut() else { return };
+    let phase_ns = std::mem::replace(&mut c.cur_phase_ns, [0; 6]);
+
+    let mut phases = BTreeMap::new();
+    for p in Phase::ALL {
+        phases.insert(p.name().to_string(), Json::Num(phase_ns[p.idx()] as f64));
+    }
+    let workers: Vec<Json> = per_worker
+        .iter()
+        .map(|w| {
+            let mut o = BTreeMap::new();
+            o.insert("worker".into(), Json::Num(w.worker as f64));
+            o.insert("assign_ns".into(), Json::Num(w.assign_ns as f64));
+            o.insert("ser_ns".into(), Json::Num(w.ser_ns as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut ev = BTreeMap::new();
+    ev.insert("iter".into(), Json::Num(iter as f64));
+    ev.insert("sse".into(), f64_json(sse));
+    ev.insert("empty_events".into(), Json::Num(empties as f64));
+    ev.insert("phase_ns".into(), Json::Obj(phases));
+    ev.insert("per_worker".into(), Json::Arr(workers));
+    if c.path.is_some() {
+        c.lines.push_str(&Json::Obj(ev).to_string());
+        c.lines.push('\n');
+    }
+
+    if c.stats_every > 0 && iter as u64 % c.stats_every == 0 {
+        let delta = sse - c.last_sse;
+        let sse_s = if sse.is_finite() { format!("{sse:.6e}") } else { "n/a".into() };
+        let delta_s = if delta.is_finite() { format!("{delta:+.3e}") } else { "n/a".into() };
+        let mut phases_s = String::new();
+        for p in Phase::ALL {
+            let ns = phase_ns[p.idx()];
+            if ns > 0 {
+                if !phases_s.is_empty() {
+                    phases_s.push(' ');
+                }
+                phases_s.push_str(&format!("{}={:.2}ms", p.name(), ns as f64 / 1e6));
+            }
+        }
+        let redispatched = counter_get("dist_redispatched_chunks_total");
+        let tail = if redispatched > 0 {
+            format!(" redispatched={redispatched}")
+        } else {
+            String::new()
+        };
+        eprintln!("iter {iter}: sse {sse_s} (Δ {delta_s}) {phases_s}{tail}");
+    }
+    c.last_sse = sse;
+}
+
+// ---------------------------------------------------------------------------
+// metrics registry
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histos: BTreeMap<&'static str, Log2Histo>,
+}
+
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let mut guard = REGISTRY.lock().unwrap();
+    f(guard.get_or_insert_with(Registry::default))
+}
+
+/// Add to a monotonic counter (created at zero on first touch).
+pub fn counter_add(name: &'static str, v: u64) {
+    with_registry(|r| *r.counters.entry(name).or_insert(0) += v);
+}
+
+/// Current value of a counter (0 if never touched).
+pub fn counter_get(name: &str) -> u64 {
+    with_registry(|r| r.counters.get(name).copied().unwrap_or(0))
+}
+
+/// Set a gauge to an instantaneous value.
+pub fn gauge_set(name: &'static str, v: f64) {
+    with_registry(|r| {
+        r.gauges.insert(name, v);
+    });
+}
+
+/// Record a nanosecond sample into a named log₂ histogram.
+pub fn histo_record_ns(name: &'static str, ns: u64) {
+    with_registry(|r| r.histos.entry(name).or_insert_with(Log2Histo::new).record(ns));
+}
+
+/// Snapshot the whole registry (plus the always-on run totals) as one
+/// JSON object — the `{"metrics": true}` serve payload. Callers may
+/// merge additional fields before rendering.
+pub fn metrics_snapshot() -> Json {
+    with_registry(|r| {
+        let mut o = BTreeMap::new();
+        o.insert("iterations_total".into(), Json::Num(iterations_total() as f64));
+        o.insert("empty_events_total".into(), Json::Num(empty_events_total() as f64));
+        for (k, v) in &r.counters {
+            o.insert((*k).to_string(), Json::Num(*v as f64));
+        }
+        for (k, v) in &r.gauges {
+            o.insert((*k).to_string(), f64_json(*v));
+        }
+        for (k, h) in &r.histos {
+            o.insert(format!("{k}_count"), Json::Num(h.count() as f64));
+            o.insert(format!("{k}_p50_ns"), Json::Num(h.quantile_ns(0.50)));
+            o.insert(format!("{k}_p99_ns"), Json::Num(h.quantile_ns(0.99)));
+        }
+        Json::Obj(o)
+    })
+}
+
+/// Render a JSON object of flat numeric metrics as Prometheus-style
+/// text: one `name value` line per field, terminated by `# EOF` (the
+/// OpenMetrics end marker, which doubles as the line-protocol
+/// terminator for `{"metrics": "text"}` scrapes).
+pub fn metrics_text_from(snapshot: &Json) -> String {
+    let mut out = String::new();
+    if let Json::Obj(m) = snapshot {
+        for (k, v) in m {
+            match v {
+                Json::Num(n) => {
+                    if n.fract() == 0.0 && n.abs() < 1e15 {
+                        out.push_str(&format!("{k} {}\n", *n as i64));
+                    } else {
+                        out.push_str(&format!("{k} {n}\n"));
+                    }
+                }
+                Json::Null => out.push_str(&format!("{k} NaN\n")),
+                _ => {}
+            }
+        }
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // trace-collector tests share process-global state with everything
+    // else in the test binary; serialize them against each other
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn histo_empty_reports_zero() {
+        let h = Log2Histo::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+    }
+
+    #[test]
+    fn histo_single_sample_dominates_every_quantile() {
+        let mut h = Log2Histo::new();
+        h.record(500);
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert_eq!(p50, p99, "one sample must pin every quantile to one value");
+        // midpoint-rank interpolation: the single sample reports its
+        // bucket's middle, inside [256, 512)'s range
+        assert!((256.0..=512.0).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn histo_interpolates_within_a_bucket() {
+        // 100 samples all inside bucket [512, 1024): the old midpoint
+        // rule collapsed p50 == p99; interpolation must resolve ranks
+        let mut h = Log2Histo::new();
+        for i in 0..100u64 {
+            h.record(600 + i);
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 < p99, "interpolation must separate ranks: p50 {p50} p99 {p99}");
+        assert!((512.0..1024.0).contains(&p50), "{p50}");
+        assert!((512.0..1024.0).contains(&p99), "{p99}");
+        // p50 lands near the bucket's middle, p99 near its top
+        assert!(p50 < 800.0 && p99 > 950.0, "p50 {p50} p99 {p99}");
+    }
+
+    #[test]
+    fn histo_overflow_bucket_saturates() {
+        let mut h = Log2Histo::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record(1u64 << 62);
+        assert_eq!(h.buckets()[OVERFLOW_BUCKET], 3);
+        let bound = (1u64 << 62) as f64;
+        assert_eq!(h.quantile_ns(0.5), bound);
+        assert_eq!(h.quantile_ns(0.99), bound, "overflow reports its lower bound, saturated");
+    }
+
+    #[test]
+    fn histo_zero_samples_stay_zero() {
+        let mut h = Log2Histo::new();
+        for _ in 0..10 {
+            h.record(0);
+        }
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+        assert_eq!(h.quantile_ns(1.0), 0.0);
+    }
+
+    #[test]
+    fn histo_quantiles_are_monotone() {
+        let mut h = Log2Histo::new();
+        for i in 1..=1000u64 {
+            h.record(i * 137);
+        }
+        let mut prev = 0.0;
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = h.quantile_ns(q);
+            assert!(v >= prev, "quantiles must be monotone: q={q} {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn span_is_inert_when_disabled() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        assert!(!enabled());
+        let s = span(Phase::Assign);
+        assert!(s.live.is_none(), "disabled span must not read the clock");
+        drop(s);
+    }
+
+    #[test]
+    fn emit_roundtrips_through_jsonl_schema() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("parakm_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.jsonl");
+        install(Some(path.clone()), 0);
+
+        {
+            let _s = span(Phase::Merge);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        emit_iter(777_001, 123.5, 2, &[WorkerPhase { worker: 0, assign_ns: 42, ser_ns: 7 }]);
+        emit_iter(777_002, f64::NAN, 0, &[]);
+        let written = finish().unwrap().expect("path was installed");
+        assert_eq!(written, path);
+        assert!(!enabled(), "finish() must disable tracing");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut seen_one = false;
+        let mut seen_two = false;
+        for line in text.lines() {
+            let j = Json::parse(line).expect("every trace line parses");
+            for key in ["iter", "sse", "empty_events", "phase_ns", "per_worker"] {
+                assert!(j.get(key).is_some(), "line missing `{key}`: {line}");
+            }
+            let phases = j.get("phase_ns").unwrap();
+            for p in Phase::ALL {
+                assert!(phases.get(p.name()).is_some(), "phase_ns missing {}", p.name());
+            }
+            match j.get("iter").and_then(Json::as_usize) {
+                Some(777_001) => {
+                    seen_one = true;
+                    assert_eq!(j.get("sse").unwrap().as_f64(), Some(123.5));
+                    assert!(
+                        phases.get("merge").unwrap().as_f64().unwrap() >= 1e6,
+                        "merge span must have recorded ~2ms"
+                    );
+                    let w = j.get("per_worker").unwrap().as_arr().unwrap();
+                    assert_eq!(w.len(), 1);
+                    assert_eq!(w[0].get("assign_ns").unwrap().as_f64(), Some(42.0));
+                    assert_eq!(w[0].get("ser_ns").unwrap().as_f64(), Some(7.0));
+                }
+                Some(777_002) => {
+                    seen_two = true;
+                    assert_eq!(j.get("sse"), Some(&Json::Null), "NaN SSE serializes as null");
+                }
+                _ => {} // concurrent engine tests may emit their own lines
+            }
+        }
+        assert!(seen_one && seen_two, "both unit events must land in the file");
+    }
+
+    #[test]
+    fn registry_counters_gauges_histos_render() {
+        counter_add("unit_test_counter_total", 3);
+        counter_add("unit_test_counter_total", 4);
+        assert_eq!(counter_get("unit_test_counter_total"), 7);
+        gauge_set("unit_test_gauge", 1.5);
+        histo_record_ns("unit_test_lat", 1000);
+
+        let snap = metrics_snapshot();
+        assert_eq!(
+            snap.get("unit_test_counter_total").and_then(Json::as_f64),
+            Some(7.0)
+        );
+        assert_eq!(snap.get("unit_test_gauge").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(snap.get("unit_test_lat_count").and_then(Json::as_f64), Some(1.0));
+        assert!(snap.get("iterations_total").is_some());
+        assert!(snap.get("empty_events_total").is_some());
+        // one line, valid JSON
+        let line = snap.to_string();
+        assert!(!line.contains('\n'));
+        Json::parse(&line).unwrap();
+
+        let text = metrics_text_from(&snap);
+        assert!(text.contains("unit_test_counter_total 7\n"), "{text}");
+        assert!(text.contains("unit_test_gauge 1.5\n"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "text scrape must terminate with # EOF");
+    }
+
+    #[test]
+    fn disabled_emit_only_bumps_run_totals() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        assert!(!enabled());
+        let before = iterations_total();
+        emit_iter(1, 1.0, 5, &[]);
+        assert_eq!(iterations_total(), before + 1);
+        assert!(empty_events_total() >= 5);
+    }
+}
+
+/// Path/env resolution for the CLI surface: an explicit `--trace FILE`
+/// wins, else the `PARAKM_TRACE` env var, else no trace file.
+pub fn trace_path_from(flag: Option<&str>) -> Option<PathBuf> {
+    match flag {
+        Some(p) => Some(PathBuf::from(p)),
+        None => std::env::var("PARAKM_TRACE").ok().filter(|s| !s.is_empty()).map(PathBuf::from),
+    }
+}
+
+/// Aggregate a trace file into per-phase totals: `(events, phase
+/// totals in ns indexed like [`Phase::ALL`], total ns)`. Shared by the
+/// `eval::report` phase-share section and the CI schema checker.
+pub fn phase_totals(path: &Path) -> Result<(usize, [u64; 6], u64)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut totals = [0u64; 6];
+    let mut events = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)?;
+        let phases = j.get("phase_ns").ok_or_else(|| {
+            crate::error::Error::Data(format!("trace event missing phase_ns: {line}"))
+        })?;
+        for p in Phase::ALL {
+            if let Some(ns) = phases.get(p.name()).and_then(Json::as_f64) {
+                totals[p.idx()] += ns as u64;
+            }
+        }
+        events += 1;
+    }
+    let total: u64 = totals.iter().sum();
+    Ok((events, totals, total))
+}

@@ -11,7 +11,9 @@
 //! `Rejoin`). Over 5,000 adversarial inputs execute per `cargo test`
 //! run.
 
-use parakmeans::cluster::wire::{read_frame_opt, write_frame, Frame, MAX_FRAME_BYTES, WIRE_VERSION};
+use parakmeans::cluster::wire::{
+    read_frame_opt, write_frame, Frame, PhaseNs, MAX_FRAME_BYTES, WIRE_VERSION,
+};
 use parakmeans::error::{ClusterError, Error};
 use parakmeans::linalg::kernel::DistancePolicy;
 use parakmeans::testutil::prop::{self, Gen};
@@ -32,6 +34,7 @@ fn gen_frame(g: &mut Gen, pick: usize) -> Frame {
             counts: (0..k).map(|_| g.u64() >> 32).collect(),
             sums: (0..k * dim).map(|_| g.f64_in(-1e12, 1e12)).collect(),
             sse: g.f64_in(0.0, 1e15),
+            phase: gen_phase(g),
         },
         4 => Frame::Gather { indices: (0..g.usize_in(0, 16)).map(|_| g.u64() >> 16).collect() },
         5 => {
@@ -67,9 +70,17 @@ fn gen_frame(g: &mut Gen, pick: usize) -> Frame {
             sums: (0..k * dim).map(|_| g.f64_in(-1e12, 1e12)).collect(),
             sse: g.f64_in(0.0, 1e15),
             assign: (0..g.usize_in(0, 16)).map(|_| g.usize_in(0, 99) as i32).collect(),
+            phase: gen_phase(g),
         },
         _ => Frame::Rejoin { version: WIRE_VERSION },
     }
+}
+
+/// Half the partial frames carry the v4 phase block, half are
+/// v3-shaped (`None` encodes zero bytes), so every sweep covers both
+/// wire generations.
+fn gen_phase(g: &mut Gen) -> Option<PhaseNs> {
+    g.bool().then(|| PhaseNs { assign_ns: g.u64(), ser_ns: g.u64() })
 }
 
 fn encode(f: &Frame) -> Vec<u8> {
@@ -197,6 +208,58 @@ fn zero_length_prefix_is_typed() {
     let buf = 0u32.to_le_bytes().to_vec();
     let err = read_frame_opt(&mut &buf[..]).unwrap_err();
     assert!(matches!(err, Error::Cluster(ClusterError::Frame(_))), "{err:?}");
+}
+
+#[test]
+fn v3_peers_interoperate_with_phase_carrying_frames() {
+    // stripping the trailing 17-byte phase block (and re-patching the
+    // length prefix) turns any v4 partials frame into its v3 encoding,
+    // and it must decode to the same frame with `phase: None` — the
+    // byte-prefix compatibility the MIN_WIRE_VERSION handshake relies
+    // on. Conversely, any cut *inside* the phase block is typed.
+    let mut g = Gen::new(0xbeef);
+    for pick in [3usize, 11] {
+        for _ in 0..200 {
+            let mut frame = gen_frame(&mut g, pick);
+            // force the block on so there is something to strip
+            match &mut frame {
+                Frame::Partials { phase, .. } | Frame::ChunkPartials { phase, .. } => {
+                    *phase = Some(PhaseNs { assign_ns: g.u64(), ser_ns: g.u64() });
+                }
+                other => panic!("pick {pick} generated {other:?}"),
+            }
+            let buf = encode(&frame);
+            const PHASE_BYTES: usize = 17; // marker + 2×u64
+            let body = buf.len() - 4;
+            let mut v3 = buf.clone();
+            v3.truncate(buf.len() - PHASE_BYTES);
+            v3[..4].copy_from_slice(&((body - PHASE_BYTES) as u32).to_le_bytes());
+            let mut r = &v3[..];
+            let (back, _) = read_frame_opt(&mut r)
+                .expect("v3-shaped frame must decode")
+                .expect("not a clean close");
+            let want = match frame.clone() {
+                Frame::Partials { k, dim, counts, sums, sse, .. } => {
+                    Frame::Partials { k, dim, counts, sums, sse, phase: None }
+                }
+                Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign, .. } => {
+                    Frame::ChunkPartials { chunk, k, dim, counts, sums, sse, assign, phase: None }
+                }
+                other => unreachable!("{other:?}"),
+            };
+            assert_eq!(back, want, "v3 stripping changed the payload");
+            // cuts inside the phase block: typed error, never a panic
+            for cut in 1..PHASE_BYTES {
+                let mut cut_frame = buf.clone();
+                cut_frame.truncate(buf.len() - cut);
+                cut_frame[..4].copy_from_slice(&((body - cut) as u32).to_le_bytes());
+                match read_frame_opt(&mut &cut_frame[..]) {
+                    Err(Error::Cluster(_)) => {}
+                    other => panic!("cut {cut} inside phase block: {other:?}"),
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,238 @@
+//! Integration: the tracing layer is contract-neutral and well-formed
+//! (DESIGN.md §15).
+//!
+//! For every engine, a run with `--trace` installed must be
+//! bit-identical to the same run untraced — spans wrap call sites, not
+//! kernels, so the numeric fold never sees them. Each traced run must
+//! emit one JSONL event per iteration, and every line must parse with
+//! `util::json` carrying the full schema: `iter`, `sse`,
+//! `empty_events`, `phase_ns` (all six phases), `per_worker`. The
+//! distributed engine must additionally ship non-empty `per_worker`
+//! rows (the wire-v4 piggyback).
+//!
+//! Trace state is process-global, so every test here serializes on one
+//! mutex; engine runs only ever happen with the lock held, keeping one
+//! test's iterations out of another test's trace file.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::config::{DistSched, SchedMode};
+use parakmeans::data::source::MemorySource;
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{
+    bisecting, elkan, hamerly, init, minibatch, parallel, serial, KmeansConfig, KmeansResult,
+};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::util::json::Json;
+use parakmeans::util::trace;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` twice — untraced, then with a JSONL trace installed — and
+/// return both results plus every parsed trace event.
+fn run_twice<R>(name: &str, mut f: impl FnMut() -> R) -> (R, R, Vec<Json>) {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Drain any trace left installed by a poisoned earlier test.
+    let _ = trace::finish();
+    let plain = f();
+
+    let path: PathBuf = std::env::temp_dir()
+        .join(format!("parakm_trace_{name}_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    trace::install(Some(path.clone()), 0);
+    let traced = f();
+    let out = trace::finish().unwrap();
+    assert_eq!(out.as_deref(), Some(path.as_path()), "{name}: finish returns the trace path");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("{name}: unparseable line {l:?}: {e}")))
+        .collect();
+    let _ = std::fs::remove_file(&path);
+    (plain, traced, events)
+}
+
+/// Every event carries the full §15 schema.
+fn check_schema(events: &[Json], what: &str) {
+    assert!(!events.is_empty(), "{what}: trace file is empty");
+    for (i, e) in events.iter().enumerate() {
+        assert!(
+            e.get("iter").and_then(Json::as_usize).is_some(),
+            "{what}: event {i} missing iter"
+        );
+        // sse may be null (elkan/hamerly converged-break emits NaN),
+        // but the key itself must always be present
+        assert!(e.get("sse").is_some(), "{what}: event {i} missing sse");
+        assert!(
+            e.get("empty_events").and_then(Json::as_usize).is_some(),
+            "{what}: event {i} missing empty_events"
+        );
+        let phases = e.get("phase_ns").unwrap_or_else(|| panic!("{what}: event {i} phase_ns"));
+        for p in trace::Phase::ALL {
+            assert!(
+                phases.get(p.name()).and_then(Json::as_f64).is_some(),
+                "{what}: event {i} phase_ns missing {}",
+                p.name()
+            );
+        }
+        assert!(
+            e.get("per_worker").and_then(Json::as_arr).is_some(),
+            "{what}: event {i} missing per_worker"
+        );
+    }
+}
+
+/// The common assertion bundle for in-process engines.
+fn check_engine(name: &str, f: impl FnMut() -> KmeansResult) {
+    let (plain, traced, events) = run_twice(name, f);
+    assert_bit_identical(&plain, &traced, &format!("{name}: traced vs untraced"));
+    check_schema(&events, name);
+    // engines emit one event per iteration (plus the converged-break
+    // event the bounded engines record on their early-out pass)
+    assert!(
+        events.len() >= plain.iterations,
+        "{name}: {} events for {} iterations",
+        events.len(),
+        plain.iterations
+    );
+}
+
+fn dist_opts(sched: DistSched) -> DistOpts {
+    DistOpts {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(5),
+        sched,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serial_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(2, 1203);
+    let cfg = KmeansConfig::new(5).with_seed(11);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("serial", || serial::run_from(&ds, &cfg, &mu0));
+}
+
+#[test]
+fn threads_static_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(2, 1301);
+    let cfg = KmeansConfig::new(4).with_seed(3);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("threads-static", || {
+        parallel::run_from(&ds, &cfg, 3, parallel::MergeMode::Leader, &mu0)
+    });
+}
+
+#[test]
+fn threads_steal_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(3, 1107);
+    let cfg = KmeansConfig::new(4).with_seed(9);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("threads-steal", || {
+        parallel::run_from_sched(
+            &ds,
+            &cfg,
+            3,
+            parallel::MergeMode::Leader,
+            SchedMode::Steal,
+            &mu0,
+        )
+    });
+}
+
+#[test]
+fn oocore_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(2, 1409);
+    let cfg = KmeansConfig::new(4).with_seed(17);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    let src = MemorySource::new(&ds);
+    check_engine("oocore", || {
+        streaming::run_from(&src, &cfg, &StreamOpts { shards: 2, chunk_rows: 257 }, &mu0).unwrap()
+    });
+}
+
+#[test]
+fn elkan_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(2, 1009);
+    let cfg = KmeansConfig::new(5).with_seed(23);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("elkan", || elkan::run_from(&ds, &cfg, &mu0));
+}
+
+#[test]
+fn hamerly_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(3, 1013);
+    let cfg = KmeansConfig::new(4).with_seed(29);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("hamerly", || hamerly::run_from(&ds, &cfg, &mu0));
+}
+
+#[test]
+fn minibatch_trace_is_contract_neutral() {
+    let ds = parakmeans::eval::paper_dataset(2, 1511);
+    let cfg = KmeansConfig::new(4).with_seed(31);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    check_engine("minibatch", || minibatch::run_from(&ds, &cfg, 128, &mu0));
+}
+
+#[test]
+fn bisecting_trace_is_contract_neutral() {
+    // bisecting routes every split through the serial core, so tracing
+    // it exercises the serial spans over many sub-runs
+    let ds = parakmeans::eval::paper_dataset(2, 907);
+    let cfg = KmeansConfig::new(4).with_seed(37);
+    let (plain, traced, events) = run_twice("bisecting", || bisecting::run(&ds, &cfg, 2));
+    assert_bit_identical(&plain, &traced, "bisecting: traced vs untraced");
+    check_schema(&events, "bisecting");
+}
+
+#[test]
+fn dist_trace_carries_per_worker_rows() {
+    let ds = parakmeans::eval::paper_dataset(2, 1207);
+    let cfg = KmeansConfig::new(4).with_seed(41);
+    let mu0 = init::initialize(&ds, cfg.k, cfg.init, cfg.seed);
+    for sched in [DistSched::Static, DistSched::Elastic] {
+        let name = format!("dist-{sched:?}");
+        let run = || {
+            let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 257).unwrap();
+            let run = dist::run_from(&cluster.addrs, &cfg, &dist_opts(sched), &mu0).unwrap();
+            cluster.join().unwrap();
+            run.result
+        };
+        let (plain, traced, events) = run_twice(&name, run);
+        assert_bit_identical(&plain, &traced, &format!("{name}: traced vs untraced"));
+        check_schema(&events, &name);
+        // the wire-v4 piggyback: shard-side timings reach the leader's
+        // trace — at least one event with both workers reporting
+        let populated = events.iter().any(|e| {
+            e.get("per_worker").and_then(Json::as_arr).map(|a| a.len() == 2).unwrap_or(false)
+        });
+        assert!(populated, "{name}: no event carries 2 per_worker rows");
+        for e in &events {
+            for w in e.get("per_worker").and_then(Json::as_arr).unwrap() {
+                assert!(w.get("worker").and_then(Json::as_usize).is_some(), "{name}: worker id");
+                assert!(w.get("assign_ns").and_then(Json::as_f64).is_some(), "{name}: assign_ns");
+                assert!(w.get("ser_ns").and_then(Json::as_f64).is_some(), "{name}: ser_ns");
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_off_emits_nothing_but_counters_still_tick() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = trace::finish();
+    let ds = parakmeans::eval::paper_dataset(2, 811);
+    let cfg = KmeansConfig::new(3).with_seed(43);
+    assert!(!trace::enabled());
+    let before = trace::iterations_total();
+    let r = serial::run(&ds, &cfg);
+    assert!(trace::iterations_total() >= before + r.iterations as u64);
+    assert!(!trace::enabled());
+}
