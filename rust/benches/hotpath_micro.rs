@@ -94,6 +94,36 @@ fn main() {
         ));
     }
 
+    // ---- chaos-off overhead guard (DESIGN.md §16) ----------------------
+    // like the trace guard: with no chaos plan installed a site poll
+    // must cost one relaxed load. This row pins the disabled fast path
+    // in the trajectory so a lock or allocation sneaking into it shows
+    // up in the bench.json diff.
+    {
+        assert!(!parakmeans::util::chaos::enabled());
+        const HITS: usize = 1_000_000;
+        let s = run_case(&format!("chaos disabled site x{HITS}"), &opts, || {
+            for _ in 0..HITS {
+                let f = parakmeans::util::chaos::hit(parakmeans::util::chaos::Site::WireRead);
+                assert!(f.is_none());
+            }
+        });
+        report(&s);
+        let ns_per_hit = s.median() / HITS as f64 * 1e9;
+        println!("         -> {ns_per_hit:.2} ns/site with chaos off");
+        json_rows.push(bench_json_row(
+            "hotpath_micro",
+            "chaos-off-site",
+            "exact",
+            &tier_label,
+            HITS,
+            0,
+            0,
+            ns_per_hit,
+            0.0,
+        ));
+    }
+
     let json_path = parakmeans::eval::results_dir().join("bench.json");
     if let Err(e) = append_bench_json(&json_path, json_rows) {
         eprintln!("warning: could not write {}: {e}", json_path.display());

@@ -54,6 +54,7 @@ use std::io::{Read, Write};
 
 use crate::error::{ClusterError, Error, Result};
 use crate::linalg::kernel::DistancePolicy;
+use crate::util::chaos;
 
 /// Protocol version carried in [`Frame::Hello`]; bumped on any frame
 /// layout change so mismatched binaries fail the handshake typed.
@@ -583,6 +584,20 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
     buf.push(frame.type_byte());
     buf.extend_from_slice(&payload);
     let what = format!("sending {}", frame.name());
+    if let Some(fault) = chaos::hit(chaos::Site::WireWrite) {
+        let full = buf.len();
+        match chaos::apply_to_bytes(chaos::Site::WireWrite, fault, &mut buf) {
+            Some(_) => return Err(conn_err(format!("chaos: injected write failure while {what}"))),
+            None if buf.len() < full => {
+                // Mid-frame close: the peer sees a truncated frame and
+                // must surface a typed error, never hang or misparse.
+                w.write_all(&buf).map_err(|e| io_err(e, &what))?;
+                w.flush().map_err(|e| io_err(e, &what))?;
+                return Err(conn_err(format!("chaos: injected mid-frame close while {what}")));
+            }
+            None => {} // stall already slept; proceed with the full frame
+        }
+    }
     w.write_all(&buf).map_err(|e| io_err(e, &what))?;
     w.flush().map_err(|e| io_err(e, &what))?;
     Ok(buf.len() as u64)
@@ -598,6 +613,13 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
 /// short payload are typed [`Error::Cluster`] errors.
 pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
     use std::io::ErrorKind;
+    if let Some(fault) = chaos::hit(chaos::Site::WireRead) {
+        if let chaos::Fault::Stall { ms } = fault {
+            std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+        } else {
+            return Err(conn_err("chaos: injected connection failure while reading a frame"));
+        }
+    }
     let mut len_buf = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {

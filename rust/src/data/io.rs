@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::util::chaos;
 use crate::util::crc32::{crc32, Crc32, CrcReader};
 
 const MAGIC: &[u8; 8] = b"PARAKMD1";
@@ -72,8 +73,34 @@ pub fn atomic_write_with(
     fill(&mut f)?;
     f.sync_all()?;
     drop(f);
+    if let Some(fault) = chaos::hit_path(chaos::Site::AtomicWrite, path) {
+        return chaos_atomic_write(path, &tmp, fault);
+    }
     std::fs::rename(&tmp, path)?;
     Ok(())
+}
+
+/// Resolve an injected [`chaos::Site::AtomicWrite`] fault. `Fail`
+/// aborts the write with a typed error (destination untouched, like a
+/// failed rename); `Torn` simulates a crash mid-publish by leaving a
+/// truncated destination behind; `BitFlip` corrupts the published
+/// payload. Readers must catch the latter two via the CRC trailer.
+#[cold]
+fn chaos_atomic_write(path: &Path, tmp: &Path, fault: chaos::Fault) -> Result<()> {
+    let mut bytes = std::fs::read(tmp)?;
+    let _ = std::fs::remove_file(tmp);
+    match chaos::apply_to_bytes(chaos::Site::AtomicWrite, fault, &mut bytes) {
+        Some(msg) => Err(Error::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("{msg} for {}", path.display()),
+        ))),
+        None => {
+            // Mutated payload published non-atomically: exactly the torn
+            // state a crash between sync and rename could leave behind.
+            std::fs::write(path, &bytes)?;
+            Ok(())
+        }
+    }
 }
 
 /// Fixed size of the `.pkd` header: magic (8) + dim (4) + n (8) +
@@ -310,6 +337,12 @@ pub fn write_binary(path: &Path, ds: &Dataset) -> Result<()> {
 /// files still load, counted in [`artifact_warnings`]; any other
 /// trailing length is a typed corruption error.
 pub fn read_binary(path: &Path) -> Result<Dataset> {
+    if let Some(fault) = chaos::hit_path(chaos::Site::ArtifactRead, path) {
+        // The streaming reader has no byte buffer to mutate; every read
+        // fault degrades to a typed failure here.
+        let _ = fault;
+        return Err(data_err(path, "chaos: injected artifact-read failure".into()));
+    }
     let header = probe_binary(path)?;
     let need = BIN_HEADER_BYTES
         + (header.n as u64) * (header.dim as u64) * 4
@@ -557,7 +590,14 @@ pub fn decode_model(bytes: &[u8]) -> Result<Model> {
 /// Read a `.pkm` model file; corrupt or truncated content is a typed
 /// [`Error::Data`] naming the file.
 pub fn read_model(path: &Path) -> Result<Model> {
-    let bytes = std::fs::read(path)?;
+    let mut bytes = std::fs::read(path)?;
+    if let Some(fault) = chaos::hit_path(chaos::Site::ArtifactRead, path) {
+        if let Some(msg) = chaos::apply_to_bytes(chaos::Site::ArtifactRead, fault, &mut bytes) {
+            return Err(data_err(path, msg));
+        }
+        // Torn / bit-flipped bytes fall through to decode_model, whose
+        // CRC trailer must reject them with a typed error.
+    }
     decode_model(&bytes).map_err(|e| match e {
         Error::Data(m) => data_err(path, m),
         other => other,

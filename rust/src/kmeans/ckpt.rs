@@ -24,7 +24,7 @@
 //!   wrong seed/engine/data shape must fail loudly, never resume wrong).
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::data::io as dio;
 use crate::data::Dataset;
@@ -32,6 +32,7 @@ use crate::error::{Error, Result};
 use crate::kmeans::step::{self, DistanceMode, PartialStats};
 use crate::kmeans::{KmeansConfig, KmeansResult};
 use crate::linalg::kernel::{self, DistancePolicy};
+use crate::util::chaos;
 
 /// Slot file names of the A/B rotation inside a checkpoint directory.
 pub const SLOT_A: &str = "ckpt_a.pkc";
@@ -254,10 +255,6 @@ pub struct CkptSink {
     fingerprint: Fingerprint,
     /// Next save goes to slot B?
     next_b: AtomicBool,
-    /// Test-only torn-write injection: when != usize::MAX the next
-    /// save writes only that many bytes straight to the slot file (no
-    /// temp, no rename) — simulating a crash mid-checkpoint-write.
-    torn_after: AtomicUsize,
 }
 
 impl CkptSink {
@@ -281,7 +278,6 @@ impl CkptSink {
             every,
             fingerprint,
             next_b: AtomicBool::new(next_b),
-            torn_after: AtomicUsize::new(usize::MAX),
         })
     }
 
@@ -299,30 +295,28 @@ impl CkptSink {
         iteration % self.every == 0
     }
 
-    /// Persist one snapshot into the next rotation slot.
+    /// Persist one snapshot into the next rotation slot. Torn and
+    /// failed writes are injectable here via the `atomic-write` chaos
+    /// site inside [`dio::atomic_write`] — the A/B rotation plus CRC
+    /// trailer is what makes either survivable.
     pub fn save(&self, state: &CkptState) -> Result<()> {
         let to_b = self.next_b.fetch_xor(true, Ordering::Relaxed);
         let path = self.dir.join(if to_b { SLOT_B } else { SLOT_A });
         let bytes = dio::encode_ckpt(state);
-        let torn = self.torn_after.swap(usize::MAX, Ordering::Relaxed);
-        if torn != usize::MAX {
-            // simulated crash mid-write: a truncated prefix lands
-            // directly in the slot file, bypassing temp+rename
-            std::fs::write(&path, &bytes[..torn.min(bytes.len())])?;
-            return Ok(());
-        }
         dio::atomic_write(&path, &bytes)
-    }
-
-    /// Arm the torn-write injection (tests): the next [`save`](Self::save)
-    /// leaves a truncated slot file, as a crash mid-write would.
-    pub fn inject_torn_write(&self, keep_bytes: usize) {
-        self.torn_after.store(keep_bytes, Ordering::Relaxed);
     }
 }
 
 fn read_slot(dir: &Path, name: &str) -> Option<CkptState> {
-    let bytes = std::fs::read(dir.join(name)).ok()?;
+    let path = dir.join(name);
+    let mut bytes = std::fs::read(&path).ok()?;
+    if let Some(fault) = chaos::hit_path(chaos::Site::ArtifactRead, &path) {
+        if chaos::apply_to_bytes(chaos::Site::ArtifactRead, fault, &mut bytes).is_some() {
+            return None; // injected read failure = slot unreadable
+        }
+        // torn / bit-flipped bytes fall through: decode_ckpt's CRC
+        // must reject them, which reads as a skipped slot below
+    }
     dio::decode_ckpt(&bytes).ok()
 }
 
@@ -519,21 +513,38 @@ mod tests {
     }
 
     #[test]
-    fn torn_write_leaves_last_good_snapshot_loadable() {
-        let dir = tmpdir("torn");
-        let sink = CkptSink::create(&dir, 1, fp()).unwrap();
-        sink.save(&state(1)).unwrap(); // slot A
-        sink.save(&state(2)).unwrap(); // slot B
-        sink.inject_torn_write(13); // crash mid-write of slot A
-        sink.save(&state(3)).unwrap();
-        // slot A is garbage; load falls back to the good slot
-        let s = load(&dir).unwrap();
-        assert_eq!(s.iteration, 2);
-        // the next save (fresh sink, as a restarted process would use)
-        // repairs the torn slot
-        let sink2 = CkptSink::create(&dir, 1, fp()).unwrap();
-        sink2.save(&state(3)).unwrap();
-        assert_eq!(load(&dir).unwrap().iteration, 3);
+    fn chaos_torn_write_leaves_last_good_snapshot_loadable() {
+        let _g = chaos::test_lock();
+        // Sweep seeds: every chaos-generated truncation/corruption of
+        // slot A must fall back to the good slot B, and a fresh sink
+        // (a restarted process) must repair the damaged slot.
+        for seed in 0..16u64 {
+            let dir = tmpdir(&format!("torn_{seed}"));
+            let sink = CkptSink::create(&dir, 1, fp()).unwrap();
+            sink.save(&state(1)).unwrap(); // slot A
+            sink.save(&state(2)).unwrap(); // slot B
+            let plan = chaos::ChaosPlan::new(seed)
+                .with_sites(&[chaos::Site::AtomicWrite])
+                .with_period(1)
+                .with_scope(&dir);
+            chaos::install(&plan);
+            let res = sink.save(&state(3)); // slot A, faulted
+            chaos::uninstall();
+            // Injected Fail is a typed error; Torn/BitFlip "succeed"
+            // like a crash mid-publish would. Either way the last good
+            // snapshot must load: iteration 3 if slot A survived the
+            // CRC check, else the slot-B fallback at iteration 2.
+            if let Err(e) = &res {
+                assert!(e.to_string().contains("chaos: injected"), "{e}");
+            }
+            let s = load(&dir).unwrap();
+            assert!(s.iteration == 2 || s.iteration == 3, "iteration {}", s.iteration);
+            // the next save (fresh sink, as a restarted process would
+            // use) repairs the torn slot
+            let sink2 = CkptSink::create(&dir, 1, fp()).unwrap();
+            sink2.save(&state(4)).unwrap();
+            assert_eq!(load(&dir).unwrap().iteration, 4);
+        }
     }
 
     #[test]

@@ -891,5 +891,8 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+        // every dist connection/frame error names the worker it came
+        // from — the operator-facing contract for triaging a cluster
+        assert!(err.to_string().contains("127.0.0.1:1"), "address missing: {err}");
     }
 }

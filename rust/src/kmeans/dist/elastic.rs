@@ -1084,6 +1084,9 @@ mod tests {
         let err =
             super::run(&["127.0.0.1:1".to_string()], &KmeansConfig::new(2), &opts).unwrap_err();
         assert!(matches!(err, Error::Cluster(ClusterError::Connection(_))), "{err}");
+        // elastic errors carry the worker address too, same contract as
+        // the static scheduler
+        assert!(err.to_string().contains("127.0.0.1:1"), "address missing: {err}");
     }
 
     #[test]

@@ -39,6 +39,7 @@ use parakmeans::kmeans::{self, KmeansConfig};
 use parakmeans::linalg::kernel::{self, KernelChoice};
 use parakmeans::metrics;
 use parakmeans::util::args::Args;
+use parakmeans::util::chaos;
 use parakmeans::util::trace;
 
 /// `anyhow::Context` stand-in (no third-party crates offline).
@@ -122,8 +123,14 @@ fn print_usage() {
          \u{20}          [--stats-every SECS]   (periodic latency/shed summary on stderr)\n\
          \u{20}          [--artifacts DIR] [--distance exact|dot]\n\
          \u{20}          ({{\"stats\": true}} probes live counters + latency percentiles;\n\
-         \u{20}          {{\"metrics\": true}} dumps the metrics registry, \"text\" = Prometheus)\n\
-         info      [--artifacts DIR]"
+         \u{20}          {{\"metrics\": true}} dumps the metrics registry, \"text\" = Prometheus;\n\
+         \u{20}          {{\"health\": true}} = live/ready probe, {{\"reload\": \"m.pkm\"}} hot-swaps\n\
+         \u{20}          the model; SIGTERM drains + exits 0, SIGHUP reloads --model)\n\
+         info      [--artifacts DIR]\n\
+         \n\
+         any       [--chaos SEED[:SITES[:PERIOD]] | PARAKM_CHAOS=SPEC]   (deterministic fault\n\
+         \u{20}          injection at the I/O choke points; sites: atomic-write, artifact-read,\n\
+         \u{20}          wire-read, wire-write, serve-accept, serve-enqueue, batcher, or `all`)"
     );
 }
 
@@ -319,6 +326,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
     let resume_dir = args.get("resume").map(PathBuf::from);
     install_trace_from(args)?;
+    install_chaos_from(args)?;
     args.finish()?;
 
     if ckpt_every == 0 {
@@ -510,6 +518,19 @@ fn install_trace_from(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--chaos SEED[:SITES[:PERIOD]]` / `PARAKM_CHAOS`: consume the
+/// fault-injection flag (before `args.finish()` so it counts as used)
+/// and arm the process-wide chaos plan. Left uninstalled, every
+/// injection site stays a single relaxed atomic load (DESIGN.md §16).
+fn install_chaos_from(args: &Args) -> Result<()> {
+    let flag = args.get("chaos").map(|s| s.to_string());
+    if let Some(spec) = chaos::spec_from(flag.as_deref()) {
+        chaos::install_spec(&spec)?;
+        eprintln!("chaos: plan `{spec}` armed");
+    }
+    Ok(())
+}
+
 /// Flush the JSONL run trace (atomic write) and name it in the run
 /// report. No-op when tracing was never installed.
 fn finish_trace() -> Result<()> {
@@ -630,6 +651,7 @@ fn cmd_run_oocore(args: &Args) -> Result<()> {
         return Err(Error::Config("provide --input <file.pkd> or --synthetic <2d|3d>:<N>".into()));
     };
     install_trace_from(args)?;
+    install_chaos_from(args)?;
     args.finish()?;
 
     let tier = match kernel_flag {
@@ -769,6 +791,7 @@ fn cmd_run_dist(args: &Args) -> Result<()> {
     let ckpt_every: usize = args.get_or("checkpoint-every", 1)?;
     let resume_dir = args.get("resume").map(PathBuf::from);
     install_trace_from(args)?;
+    install_chaos_from(args)?;
     args.finish()?;
 
     if !net_timeout.is_finite() || net_timeout <= 0.0 || net_timeout > 86_400.0 {
@@ -928,6 +951,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     } else {
         return Err(Error::Config("provide --input <file.pkd> or --synthetic <2d|3d>:<N>".into()));
     };
+    install_chaos_from(args)?;
     args.finish()?;
 
     let tier = match kernel_flag {
@@ -1050,6 +1074,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let distance = distance_from(args)?;
     let artifacts: PathBuf =
         PathBuf::from(args.get("artifacts").unwrap_or("artifacts").to_string());
+    install_chaos_from(args)?;
+    // SIGHUP re-reads the model file the server started from
+    let reload_path = model_path.clone();
 
     // a persisted model serves immediately; otherwise train first (a
     // restart re-pays full training cost — prefer run --save-model)
@@ -1112,13 +1139,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serving on {} (--serve-loop {loop_mode}) — line-JSON: {{\"id\": N, \"points\": [[..], ..]}}",
         handle.local_addr
     );
-    // block forever (ctrl-c to stop), optionally printing a periodic
-    // latency/shed summary from the shared counters
+    #[cfg(unix)]
+    sig::install();
+    #[cfg(not(unix))]
+    let _ = &reload_path; // signals are unix-only; ctrl-c still kills
+    // lifecycle wait loop: poll the signal flags (SIGTERM/SIGINT →
+    // graceful drain + exit 0, SIGHUP → model hot-reload), optionally
+    // printing a periodic latency/shed summary from the shared counters
+    let mut last_stats = std::time::Instant::now();
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(
-            if stats_every > 0 { stats_every } else { 3600 },
-        ));
-        if stats_every > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        #[cfg(unix)]
+        {
+            use std::sync::atomic::Ordering;
+            if sig::TERM.swap(false, Ordering::AcqRel) {
+                eprintln!("sigterm: draining — no new connections, flushing in-flight replies");
+                let s = handle.drain(std::time::Duration::from_secs(30));
+                eprintln!(
+                    "drained: requests={} errors={} batcher_restarts={} model_generation={}",
+                    s.batcher.requests, s.batcher.errors, s.batcher_restarts, s.model_generation
+                );
+                return Ok(()); // exit code 0: the drain was clean
+            }
+            if sig::HUP.swap(false, Ordering::AcqRel) {
+                match reload_path {
+                    Some(ref p) => match handle.reload_from(p) {
+                        Ok(generation) => eprintln!(
+                            "sighup: reloaded {} — now serving generation {generation}",
+                            p.display()
+                        ),
+                        Err(e) => {
+                            eprintln!("sighup: reload failed, keeping current model: {e}")
+                        }
+                    },
+                    None => eprintln!("sighup: no --model path to reload from"),
+                }
+            }
+        }
+        if stats_every > 0 && last_stats.elapsed().as_secs() >= stats_every {
+            last_stats = std::time::Instant::now();
             let s = handle.stats();
             eprintln!(
                 "stats: requests={} errors={} saturated={} shed_heavy={} shed_load={} \
@@ -1134,6 +1193,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 s.latency.p90_us,
                 s.latency.p99_us
             );
+        }
+    }
+}
+
+/// Hand-rolled `signal(2)` hookup (no libc crate): the handlers only
+/// flip atomics the serve wait loop polls, which keeps them trivially
+/// async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::os::raw::c_int;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::atomic::Ordering;
+
+    pub static TERM: AtomicBool = AtomicBool::new(false);
+    pub static HUP: AtomicBool = AtomicBool::new(false);
+
+    const SIGHUP: c_int = 1;
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+
+    extern "C" {
+        fn signal(signum: c_int, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_term(_sig: c_int) {
+        TERM.store(true, Ordering::Release);
+    }
+
+    extern "C" fn on_hup(_sig: c_int) {
+        HUP.store(true, Ordering::Release);
+    }
+
+    /// Install the serve-lifecycle handlers: SIGTERM/SIGINT request a
+    /// graceful drain, SIGHUP a model hot-reload.
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(c_int) as usize);
+            signal(SIGINT, on_term as extern "C" fn(c_int) as usize);
+            signal(SIGHUP, on_hup as extern "C" fn(c_int) as usize);
         }
     }
 }

@@ -7,7 +7,8 @@
 //! call and scatter results back per request. Latency-throughput
 //! trade-off is the A-serve ablation in `benches/ablations.rs`.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -16,6 +17,7 @@ use crate::runtime::manifest::ExecKind;
 use crate::runtime::{Runtime, TensorArg};
 use crate::serve::protocol::{Request, Response};
 use crate::serve::reply::ReplySink;
+use crate::util::chaos;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -58,9 +60,79 @@ pub struct BatcherStats {
 /// A queued unit of work: one request plus where its response goes —
 /// a blocking channel (thread loop) or the reactor's completion queue
 /// (poll loop); see [`ReplySink`].
+///
+/// A `Job` guarantees an answer: if it is dropped unanswered — the
+/// batcher thread panicked mid-flush, the queue was torn down during a
+/// restart, a chaos fault swallowed it — the [`Drop`] impl sends a
+/// typed [`Response::retry`] to the waiting client. No code path can
+/// leave a request hanging (or, on the poll loop, leak its in-flight
+/// accounting, which settles through the same completion path).
 pub struct Job {
     pub request: Request,
-    pub reply: ReplySink,
+    reply: ReplySink,
+    answered: bool,
+}
+
+impl Job {
+    pub fn new(request: Request, reply: ReplySink) -> Job {
+        Job { request, reply, answered: false }
+    }
+
+    /// Send the response for this job (at most once; later calls no-op).
+    pub fn respond(&mut self, response: Response) {
+        if !self.answered {
+            self.answered = true;
+            let _ = self.reply.send(response);
+        }
+    }
+
+    /// Mark answered without sending — for callers that already wrote
+    /// an inline rejection (e.g. the poll loop's shed path) and only
+    /// need to defuse the drop guarantee.
+    pub fn dismiss(&mut self) {
+        self.answered = true;
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        if !self.answered {
+            self.answered = true;
+            let _ = self.reply.send(Response::retry(self.request.id));
+        }
+    }
+}
+
+/// One-slot mailbox for hot model swaps: the serve loop publishes a
+/// validated `(generation, centroids)` pair off-thread; the batcher
+/// installs it at the top of its next flush, so a swap is atomic with
+/// respect to batches — every request in one batch is answered by one
+/// model generation.
+#[derive(Default)]
+pub struct ModelSlot {
+    dirty: AtomicBool,
+    pending: Mutex<Option<(u64, Vec<f32>)>>,
+}
+
+impl ModelSlot {
+    pub fn new() -> Arc<ModelSlot> {
+        Arc::new(ModelSlot::default())
+    }
+
+    /// Publish a new model (replaces any not-yet-installed one).
+    pub fn publish(&self, generation: u64, centroids: Vec<f32>) {
+        *self.pending.lock().unwrap() = Some((generation, centroids));
+        self.dirty.store(true, Ordering::Release);
+    }
+
+    /// Take the pending model, if any (one relaxed-ish load when idle).
+    pub fn take(&self) -> Option<(u64, Vec<f32>)> {
+        if !self.dirty.load(Ordering::Acquire) {
+            return None;
+        }
+        self.dirty.store(false, Ordering::Release);
+        self.pending.lock().unwrap().take()
+    }
 }
 
 /// The batcher: owns the runtime + trained centroids.
@@ -72,7 +144,6 @@ pub struct Batcher {
     /// fixed) — the `dot` policy's centroid-norm cache.
     c_norms: Vec<f32>,
     dim: usize,
-    #[allow(dead_code)] // retained for a future /stats endpoint
     k: usize,
     chunk: usize,
     cfg: BatcherConfig,
@@ -80,7 +151,10 @@ pub struct Batcher {
     /// Mirror the server installs ([`Batcher::publish_to`]) so
     /// connection threads can answer `{"stats": true}` without a round
     /// trip through the batcher queue.
-    shared: Option<std::sync::Arc<std::sync::Mutex<BatcherStats>>>,
+    shared: Option<Arc<Mutex<BatcherStats>>>,
+    /// Hot-reload mailbox ([`Batcher::watch_model`]); checked at the
+    /// top of every flush.
+    slot: Option<Arc<ModelSlot>>,
     // ---- flush scratch, reused across batches (no per-request
     // allocation churn): the staged device buffer, its per-row norms
     // (dot policy), and the request spans of the in-flight stage ------
@@ -134,6 +208,7 @@ impl Batcher {
             cfg: BatcherConfig { max_batch: cfg.max_batch.min(chunk), ..cfg },
             stats: BatcherStats::default(),
             shared: None,
+            slot: None,
             x: vec![0.0f32; chunk * dim],
             x_norms: vec![0.0f32; chunk],
             spans: Vec::new(),
@@ -144,9 +219,16 @@ impl Batcher {
     /// Install a shared stats mirror: after every flush the counters
     /// are copied into it, so readers on other threads see a consistent
     /// point-in-time snapshot (counters are monotone).
-    pub fn publish_to(&mut self, shared: std::sync::Arc<std::sync::Mutex<BatcherStats>>) {
+    pub fn publish_to(&mut self, shared: Arc<Mutex<BatcherStats>>) {
         *shared.lock().unwrap() = self.stats.clone();
         self.shared = Some(shared);
+    }
+
+    /// Watch a hot-reload mailbox: a model published into `slot` is
+    /// installed at the top of the next flush (centroids + recomputed
+    /// norms), so every batch is answered by exactly one generation.
+    pub fn watch_model(&mut self, slot: Arc<ModelSlot>) {
+        self.slot = Some(slot);
     }
 
     fn publish(&self) {
@@ -194,6 +276,21 @@ impl Batcher {
     /// immediately probes `{"stats": true}` sees counters that include
     /// its own request.
     pub fn flush(&mut self, jobs: Vec<Job>) {
+        if chaos::hit(chaos::Site::Batcher).is_some() {
+            // The supervisor must catch this, answer the staged jobs
+            // with ERR_RETRY (via Job::drop) and restart the batcher.
+            panic!("chaos: injected batcher panic");
+        }
+        // install a hot-reloaded model before staging anything, so the
+        // whole batch is answered by one generation
+        if let Some(slot) = &self.slot {
+            if let Some((_generation, centroids)) = slot.take() {
+                if centroids.len() == self.dim * self.k {
+                    self.centroids = centroids;
+                    self.c_norms = kernel::row_norms_vec(&self.centroids, self.dim);
+                }
+            }
+        }
         // validate dims first; reject bad jobs without spending a call
         let mut valid = Vec::new();
         let mut rejected = Vec::new();
@@ -208,9 +305,10 @@ impl Batcher {
             }
         }
         self.publish();
-        for job in rejected {
-            let _ = job.reply.send(Response::Err {
-                id: job.request.id,
+        for mut job in rejected {
+            let id = job.request.id;
+            job.respond(Response::Err {
+                id,
                 error: format!("expected {}-dimensional points", self.dim),
             });
         }
@@ -262,13 +360,10 @@ impl Batcher {
         // its response and immediately probes {"stats": true} must see
         // this batch's counters
         self.publish();
-        for (job, clusters, distances) in pending {
+        for (mut job, clusters, distances) in pending {
             if clusters.len() == job.request.points.len() {
-                let _ = job.reply.send(Response::Ok {
-                    id: job.request.id,
-                    clusters,
-                    distances,
-                });
+                let id = job.request.id;
+                job.respond(Response::Ok { id, clusters, distances });
             }
             // else: error already sent by flush_device
         }
@@ -323,10 +418,8 @@ impl Batcher {
                 for &(ji, _, _) in self.spans.iter() {
                     let (job, clusters, _) = &mut pending[ji];
                     clusters.clear();
-                    let _ = job.reply.send(Response::Err {
-                        id: job.request.id,
-                        error: e.to_string(),
-                    });
+                    let id = job.request.id;
+                    job.respond(Response::Err { id, error: e.to_string() });
                 }
             }
         }
@@ -361,7 +454,7 @@ mod tests {
 
     fn job(id: u64, points: Vec<Vec<f64>>) -> (Job, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
-        (Job { request: Request { id, points }, reply: ReplySink::Channel(tx) }, rx)
+        (Job::new(Request { id, points }, ReplySink::Channel(tx)), rx)
     }
 
     #[test]
@@ -579,5 +672,65 @@ mod tests {
             return;
         };
         assert!(Batcher::new(&dir, vec![0.0; 7], 3, 4, BatcherConfig::default()).is_err());
+    }
+
+    #[test]
+    fn dropped_job_answers_with_typed_retry() {
+        // a Job that dies unanswered — batcher panic, queue teardown —
+        // must still answer its client, with ERR_RETRY under its own id
+        let (j, rx) = job(17, vec![vec![0.0, 0.0, 0.0]]);
+        drop(j);
+        let r = rx.recv().unwrap();
+        assert!(r.is_retry(), "{r:?}");
+        assert!(matches!(r, Response::Err { id: 17, .. }), "{r:?}");
+        // an answered job must NOT double-send on drop
+        let (mut j, rx) = job(3, vec![vec![0.0, 0.0, 0.0]]);
+        j.respond(Response::Ok { id: 3, clusters: vec![0], distances: vec![0.0] });
+        drop(j);
+        assert!(matches!(rx.recv().unwrap(), Response::Ok { id: 3, .. }));
+        assert!(rx.recv().is_err(), "exactly one response per job");
+        // a dismissed job sends nothing at all
+        let (mut j, rx) = job(4, vec![vec![0.0, 0.0, 0.0]]);
+        j.dismiss();
+        drop(j);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn model_slot_swaps_centroids_between_batches() {
+        let dir = std::env::temp_dir().join("parakm_batcher_tests/no_artifacts_here");
+        let (centroids, _) = trained_model();
+        let mut b = Batcher::new(&dir, centroids, 3, 4, BatcherConfig::default()).unwrap();
+        let slot = ModelSlot::new();
+        b.watch_model(slot.clone());
+
+        let probe = vec![vec![100.0, 100.0, 100.0]];
+        let (j, rx) = job(1, probe.clone());
+        b.flush(vec![j]);
+        let before = match rx.recv().unwrap() {
+            Response::Ok { distances, .. } => distances[0],
+            other => panic!("unexpected {other:?}"),
+        };
+
+        // second generation: every centroid at the probe point
+        slot.publish(2, vec![100.0f32; 12]);
+        let (j, rx) = job(2, probe);
+        b.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { distances, .. } => {
+                assert!(distances[0] < 1e-6, "new model should be at the probe point");
+                assert_ne!(distances[0], before);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // a wrong-shape publish is ignored defensively
+        slot.publish(3, vec![1.0f32; 5]);
+        let (j, rx) = job(3, vec![vec![100.0, 100.0, 100.0]]);
+        b.flush(vec![j]);
+        match rx.recv().unwrap() {
+            Response::Ok { distances, .. } => assert!(distances[0] < 1e-6),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

@@ -52,12 +52,15 @@ pub mod reply;
 pub mod scan;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use batcher::{Batcher, BatcherConfig, BatcherStats, ModelSlot};
 pub use histo::{LatencyHisto, LatencySummary};
 pub use protocol::{
-    stats_line, ClientRequest, Request, Response, ServeStats, ERR_LINE_TOO_LONG, ERR_NOT_UTF8,
-    ERR_SATURATED, ERR_SHED_HEAVY, ERR_SHED_LOAD,
+    health_line, reload_line, stats_line, ClientRequest, Request, Response, ServeStats,
+    ERR_LINE_TOO_LONG, ERR_NOT_UTF8, ERR_RELOAD, ERR_RETRY, ERR_SATURATED, ERR_SHED_HEAVY,
+    ERR_SHED_LOAD,
 };
 pub use reply::{Completion, ReplySink, Waker};
 pub use scan::{parse_tape, parse_tape_tier, scan_tape, structural_offsets, Tape};
-pub use server::{serve, ServeConfig, ServeLoop, ServeShared, ServerHandle, ShedConfig};
+pub use server::{
+    reload_model, serve, Lifecycle, ServeConfig, ServeLoop, ServeShared, ServerHandle, ShedConfig,
+};

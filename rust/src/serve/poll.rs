@@ -34,7 +34,8 @@ use std::time::Instant;
 use crate::serve::batcher::Job;
 use crate::serve::protocol::{self, ClientRequest, Response};
 use crate::serve::reply::{Completion, ReplySink, Waker};
-use crate::serve::server::{shed_decision, ServeShared, ShedConfig};
+use crate::serve::server::{reload_response, shed_decision, ServeShared, ShedConfig};
+use crate::util::chaos;
 
 /// Hand-declared `poll(2)` interface (no libc crate).
 mod sys {
@@ -172,8 +173,20 @@ pub fn run(
     let mut scratch: Vec<u8> = Vec::new();
 
     loop {
+        let draining = ctx.shared.lifecycle.draining.load(Ordering::Acquire);
         if stop.load(Ordering::Acquire) {
-            break;
+            if !draining {
+                break;
+            }
+            // graceful drain: stop reading new requests, keep pumping
+            // completions and write buffers, exit when the last reply
+            // has flushed and every connection is gone
+            for c in conns.values_mut() {
+                c.closing = true;
+            }
+            if conns.is_empty() {
+                break;
+            }
         }
 
         // rebuild the fd set: listener, wake fd, then every connection
@@ -205,7 +218,7 @@ pub fn run(
             eprintln!("reactor: poll failed: {err}");
             break;
         }
-        if stop.load(Ordering::Acquire) {
+        if stop.load(Ordering::Acquire) && !draining {
             break;
         }
 
@@ -219,13 +232,13 @@ pub fn run(
             ctx.shared.record_latency(done.started);
             if let Some(c) = conns.get_mut(&done.token) {
                 c.inflight -= 1;
-                c.push_line(&done.response.to_line());
+                c.push_line(&done.line);
             }
             // a vanished token means the connection died mid-request;
             // the counters above are still ours to settle
         }
 
-        if fds[0].revents != 0 {
+        if fds[0].revents != 0 && !stop.load(Ordering::Acquire) {
             accept_ready(&listener, &mut conns, &mut next_token, &ctx);
         }
 
@@ -268,6 +281,11 @@ fn accept_ready(
     loop {
         match listener.accept() {
             Ok((stream, _)) => {
+                if chaos::hit(chaos::Site::ServeAccept).is_some() {
+                    // injected accept failure: connection dropped unserved
+                    drop(stream);
+                    continue;
+                }
                 let _ = stream.set_nodelay(true);
                 if conns.len() >= ctx.cfg.max_conns {
                     ctx.shared.saturated.fetch_add(1, Ordering::AcqRel);
@@ -399,6 +417,25 @@ fn handle_line(c: &mut Conn, tok: u64, ctx: &Ctx, raw: &[u8]) {
             c.push_raw(&protocol::metrics_text(&ctx.shared.snapshot()));
             ctx.shared.record_latency(started);
         }
+        Ok(ClientRequest::Health) => {
+            c.push_line(&protocol::health_line(&ctx.shared.snapshot()));
+            ctx.shared.record_latency(started);
+        }
+        Ok(ClientRequest::Reload { path }) => {
+            // the file read + CRC validation run off-thread — the
+            // reactor must not block on disk I/O; the answer comes
+            // back like any completion
+            ctx.shared.inflight.fetch_add(1, Ordering::AcqRel);
+            c.inflight += 1;
+            let shared = ctx.shared.clone();
+            let done = ctx.done_tx.clone();
+            let waker = ctx.waker.clone();
+            std::thread::spawn(move || {
+                let line = reload_response(&shared, &path);
+                let _ = done.send(Completion { token: tok, started, line });
+                waker.wake();
+            });
+        }
         Ok(ClientRequest::Assign(request)) => {
             if let Some(err) =
                 shed_decision(&ctx.shared, ctx.cfg.queue_depth, &ctx.cfg.shed, request.points.len())
@@ -416,17 +453,33 @@ fn handle_line(c: &mut Conn, tok: u64, ctx: &Ctx, raw: &[u8]) {
                 started,
                 waker: ctx.waker.clone(),
             };
-            if ctx.queue.try_send(Job { request, reply }).is_err() {
-                // hard shed tier: the bounded queue is full (the
-                // threads loop would block this connection's own
-                // thread here; the reactor must not block)
-                ctx.shared.inflight.fetch_sub(1, Ordering::AcqRel);
-                c.inflight -= 1;
-                ctx.shared.shed_load.fetch_add(1, Ordering::AcqRel);
-                c.push_line(
-                    &Response::Err { id, error: protocol::ERR_SHED_LOAD.to_string() }.to_line(),
-                );
-                ctx.shared.record_latency(started);
+            let job = Job::new(request, reply);
+            if chaos::hit(chaos::Site::ServeEnqueue).is_some() {
+                // injected enqueue failure; dropping the job answers
+                // its client with the typed retry error
+                drop(job);
+                return;
+            }
+            match ctx.queue.try_send(job) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(mut job)) => {
+                    // hard shed tier: the bounded queue is full (the
+                    // threads loop would block this connection's own
+                    // thread here; the reactor must not block)
+                    job.dismiss();
+                    ctx.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                    c.inflight -= 1;
+                    ctx.shared.shed_load.fetch_add(1, Ordering::AcqRel);
+                    c.push_line(
+                        &Response::Err { id, error: protocol::ERR_SHED_LOAD.to_string() }.to_line(),
+                    );
+                    ctx.shared.record_latency(started);
+                }
+                Err(mpsc::TrySendError::Disconnected(job)) => {
+                    // supervisor gone (shutdown); dropping the job
+                    // answers its client with the typed retry error
+                    drop(job);
+                }
             }
         }
         Err(e) => {

@@ -74,9 +74,10 @@ impl Request {
 }
 
 /// Any line a client may send: an assignment request, the
-/// observability probe `{"stats": true}`, or the metrics-registry dump
+/// observability probe `{"stats": true}`, the metrics-registry dump
 /// `{"metrics": true}` (JSON) / `{"metrics": "text"}` (Prometheus
-/// exposition text).
+/// exposition text), the liveness/readiness probe `{"health": true}`,
+/// or the model hot-reload command `{"reload": "path/to/model.pkm"}`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientRequest {
     Assign(Request),
@@ -85,6 +86,11 @@ pub enum ClientRequest {
         /// Prometheus text exposition instead of one JSON line.
         text: bool,
     },
+    /// Live/ready probe — answered outside the batcher so it keeps
+    /// working while the batcher is down or restarting.
+    Health,
+    /// Hot-swap the served model to the `.pkm` file at `path`.
+    Reload { path: String },
 }
 
 impl ClientRequest {
@@ -118,6 +124,12 @@ impl ClientRequest {
         if j.get("metrics").and_then(Json::as_str) == Some("text") {
             return Ok(ClientRequest::Metrics { text: true });
         }
+        if j.get("health").and_then(Json::as_bool) == Some(true) {
+            return Ok(ClientRequest::Health);
+        }
+        if let Some(path) = j.get("reload").and_then(Json::as_str) {
+            return Ok(ClientRequest::Reload { path: path.to_string() });
+        }
         Request::from_json(j).map(ClientRequest::Assign)
     }
 }
@@ -145,6 +157,18 @@ pub struct ServeStats {
     /// Keep-centroid (empty-cluster) events observed process-wide
     /// ([`crate::util::trace::empty_events_total`]).
     pub empty_events: u64,
+    /// Generation of the currently served model: 1 for the model the
+    /// server started with, bumped by each successful hot-reload.
+    pub model_generation: u64,
+    /// Times the supervisor restarted a dead/panicked batcher thread.
+    pub batcher_restarts: u64,
+    /// Human-readable reason for the most recent batcher restart
+    /// (empty while the original batcher is still on its first life).
+    pub batcher_last_restart: String,
+    /// Is a batcher thread currently alive?
+    pub batcher_up: bool,
+    /// Is the server draining (SIGTERM received, no longer accepting)?
+    pub draining: bool,
 }
 
 /// Render the stats response line (no trailing newline):
@@ -173,8 +197,48 @@ pub fn stats_line(s: &ServeStats) -> String {
     inner.insert("lat_p99_us".to_string(), Json::Num(s.latency.p99_us));
     inner.insert("artifact_warnings".to_string(), Json::Num(s.artifact_warnings as f64));
     inner.insert("empty_events".to_string(), Json::Num(s.empty_events as f64));
+    inner.insert("model_generation".to_string(), Json::Num(s.model_generation as f64));
+    inner.insert("batcher_restarts".to_string(), Json::Num(s.batcher_restarts as f64));
+    inner.insert(
+        "batcher_last_restart".to_string(),
+        Json::Str(s.batcher_last_restart.clone()),
+    );
+    inner.insert("batcher_up".to_string(), Json::Bool(s.batcher_up));
+    inner.insert("draining".to_string(), Json::Bool(s.draining));
     let mut obj = BTreeMap::new();
     obj.insert("stats".to_string(), Json::Obj(inner));
+    Json::Obj(obj).to_string()
+}
+
+/// Render the `{"health": true}` response line (no trailing newline):
+/// `{"health": {"live": true, "ready": .., "batcher_up": ..,
+/// "draining": .., "model_generation": .., "batcher_restarts": ..}}`.
+/// *live* means the serve loop answered at all; *ready* means the
+/// server can currently make progress on assignment requests: batcher
+/// thread up ∧ a model generation installed ∧ not draining.
+pub fn health_line(s: &ServeStats) -> String {
+    let ready = s.batcher_up && s.model_generation >= 1 && !s.draining;
+    let mut inner = BTreeMap::new();
+    inner.insert("live".to_string(), Json::Bool(true));
+    inner.insert("ready".to_string(), Json::Bool(ready));
+    inner.insert("batcher_up".to_string(), Json::Bool(s.batcher_up));
+    inner.insert("draining".to_string(), Json::Bool(s.draining));
+    inner.insert("model_generation".to_string(), Json::Num(s.model_generation as f64));
+    inner.insert("batcher_restarts".to_string(), Json::Num(s.batcher_restarts as f64));
+    let mut obj = BTreeMap::new();
+    obj.insert("health".to_string(), Json::Obj(inner));
+    Json::Obj(obj).to_string()
+}
+
+/// Render the success response to `{"reload": "path"}` (no trailing
+/// newline): `{"reload": {"generation": N}}` where `N` is the model
+/// generation now being served. Failures are a plain error response
+/// prefixed [`ERR_RELOAD`]; the previous model keeps serving.
+pub fn reload_line(generation: u64) -> String {
+    let mut inner = BTreeMap::new();
+    inner.insert("generation".to_string(), Json::Num(generation as f64));
+    let mut obj = BTreeMap::new();
+    obj.insert("reload".to_string(), Json::Obj(inner));
     Json::Obj(obj).to_string()
 }
 
@@ -204,6 +268,16 @@ pub fn metrics_json(s: &ServeStats) -> Json {
     obj.insert("serve_latency_p99_us".to_string(), Json::Num(s.latency.p99_us));
     obj.insert("artifact_warnings_total".to_string(), Json::Num(s.artifact_warnings as f64));
     obj.insert("empty_cluster_events_total".to_string(), Json::Num(s.empty_events as f64));
+    obj.insert("serve_model_generation".to_string(), Json::Num(s.model_generation as f64));
+    obj.insert(
+        "serve_batcher_restarts_total".to_string(),
+        Json::Num(s.batcher_restarts as f64),
+    );
+    obj.insert(
+        "serve_batcher_up".to_string(),
+        Json::Num(if s.batcher_up { 1.0 } else { 0.0 }),
+    );
+    obj.insert("serve_draining".to_string(), Json::Num(if s.draining { 1.0 } else { 0.0 }));
     Json::Obj(obj)
 }
 
@@ -245,6 +319,17 @@ pub const ERR_SHED_HEAVY: &str = "shedding: queue under pressure, heavy request 
 /// Hard shed tier: the bounded request queue is full.
 pub const ERR_SHED_LOAD: &str = "shedding: request queue full";
 
+/// Typed answer for an in-flight request dropped because the batcher
+/// thread died mid-service (sent with the request's own id). The
+/// supervisor restarts the batcher with capped backoff; the client
+/// should simply resend.
+pub const ERR_RETRY: &str = "retry: batcher restarting, request dropped";
+
+/// Prefix of the typed rejection sent when a `{"reload"}` command
+/// fails (unreadable file, CRC mismatch, dim/k mismatch). The
+/// previously served model generation keeps serving untouched.
+pub const ERR_RELOAD: &str = "reload failed";
+
 /// A server response (success or error).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -285,6 +370,16 @@ impl Response {
     pub fn is_shed(&self) -> bool {
         matches!(self, Response::Err { error, .. }
             if error == ERR_SHED_HEAVY || error == ERR_SHED_LOAD)
+    }
+
+    /// The typed answer for a request orphaned by a batcher death.
+    pub fn retry(id: u64) -> Response {
+        Response::Err { id, error: ERR_RETRY.to_string() }
+    }
+
+    /// Does this response tell the client to simply resend?
+    pub fn is_retry(&self) -> bool {
+        matches!(self, Response::Err { error, .. } if error == ERR_RETRY)
     }
 
     /// Serialize to one JSON line (no trailing newline).
@@ -392,6 +487,11 @@ mod tests {
             latency: LatencySummary { count: 10, p50_us: 1.5, p90_us: 12.0, p99_us: 96.0 },
             artifact_warnings: 5,
             empty_events: 6,
+            model_generation: 2,
+            batcher_restarts: 1,
+            batcher_last_restart: "panicked: chaos".to_string(),
+            batcher_up: true,
+            draining: false,
         };
         let line = stats_line(&stats);
         let j = Json::parse(&line).unwrap();
@@ -411,6 +511,11 @@ mod tests {
         assert_eq!(s.get("lat_p99_us").and_then(Json::as_f64), Some(96.0));
         assert_eq!(s.get("artifact_warnings").and_then(Json::as_f64), Some(5.0));
         assert_eq!(s.get("empty_events").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(s.get("model_generation").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(s.get("batcher_restarts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("batcher_last_restart").and_then(Json::as_str), Some("panicked: chaos"));
+        assert_eq!(s.get("batcher_up").and_then(Json::as_bool), Some(true));
+        assert_eq!(s.get("draining").and_then(Json::as_bool), Some(false));
         // one line, no embedded newlines (line-JSON protocol)
         assert!(!line.contains('\n'));
     }
@@ -454,6 +559,11 @@ mod tests {
             latency: LatencySummary { count: 10, p50_us: 1.5, p90_us: 12.0, p99_us: 96.0 },
             artifact_warnings: 0,
             empty_events: 9,
+            model_generation: 3,
+            batcher_restarts: 2,
+            batcher_last_restart: String::new(),
+            batcher_up: true,
+            draining: true,
         };
         let line = metrics_line(&stats);
         assert!(!line.contains('\n'));
@@ -463,6 +573,10 @@ mod tests {
         assert_eq!(m.get("serve_latency_p99_us").and_then(Json::as_f64), Some(96.0));
         assert_eq!(m.get("empty_cluster_events_total").and_then(Json::as_f64), Some(9.0));
         assert_eq!(m.get("artifact_warnings_total").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(m.get("serve_model_generation").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(m.get("serve_batcher_restarts_total").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(m.get("serve_batcher_up").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(m.get("serve_draining").and_then(Json::as_f64), Some(1.0));
         // registry counters appear alongside the serve counters
         crate::util::trace::counter_add("protocol_test_metric_total", 3);
         let j2 = Json::parse(&metrics_line(&stats)).unwrap();
@@ -477,11 +591,63 @@ mod tests {
     }
 
     #[test]
+    fn health_and_reload_route_on_both_front_ends() {
+        assert_eq!(ClientRequest::parse(r#"{"health": true}"#).unwrap(), ClientRequest::Health);
+        assert_eq!(
+            ClientRequest::parse(r#"{"reload": "m.pkm"}"#).unwrap(),
+            ClientRequest::Reload { path: "m.pkm".to_string() }
+        );
+        // health must be literally true; reload must be a string —
+        // anything else falls through to (malformed) assign parsing
+        assert!(ClientRequest::parse(r#"{"health": false}"#).is_err());
+        assert!(ClientRequest::parse(r#"{"health": 1}"#).is_err());
+        assert!(ClientRequest::parse(r#"{"reload": true}"#).is_err());
+        for line in [r#"{"health": true}"#, r#"{"reload": "m.pkm"}"#] {
+            assert_eq!(
+                ClientRequest::parse(line).unwrap(),
+                ClientRequest::parse_tape_tier(line, KernelTier::Scalar).unwrap(),
+            );
+        }
+    }
+
+    #[test]
+    fn health_line_distinguishes_live_from_ready() {
+        let mut s = ServeStats { batcher_up: true, model_generation: 1, ..Default::default() };
+        let j = Json::parse(&health_line(&s)).unwrap();
+        let h = j.get("health").expect("health object");
+        assert_eq!(h.get("live").and_then(Json::as_bool), Some(true));
+        assert_eq!(h.get("ready").and_then(Json::as_bool), Some(true));
+        // draining: still live, no longer ready
+        s.draining = true;
+        let j = Json::parse(&health_line(&s)).unwrap();
+        let h = j.get("health").unwrap();
+        assert_eq!(h.get("live").and_then(Json::as_bool), Some(true));
+        assert_eq!(h.get("ready").and_then(Json::as_bool), Some(false));
+        // dead batcher: live, not ready
+        s.draining = false;
+        s.batcher_up = false;
+        let h2 = Json::parse(&health_line(&s)).unwrap();
+        assert_eq!(h2.get("health").unwrap().get("ready").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn reload_line_and_retry_are_typed() {
+        let j = Json::parse(&reload_line(4)).unwrap();
+        assert_eq!(j.get("reload").unwrap().get("generation").and_then(Json::as_f64), Some(4.0));
+        let r = Response::retry(9);
+        assert!(r.is_retry());
+        assert_eq!(Response::parse(&r.to_line()).unwrap(), r);
+        assert!(!Response::saturated().is_retry());
+    }
+
+    #[test]
     fn tape_front_end_matches_legacy_on_protocol_lines() {
         let lines = [
             r#"{"id": 7, "points": [[1.0, 2.0], [3, 4]]}"#,
             r#"{"stats": true}"#,
             r#"{"stats": false}"#,
+            r#"{"health": true}"#,
+            r#"{"reload": "second.pkm"}"#,
             r#"{"id": -3, "points": [[1]]}"#,
             "not json",
             "",

@@ -28,12 +28,14 @@ use crate::serve::protocol::Response;
 
 /// A finished request on its way back to the reactor: which connection
 /// it belongs to, when it started (for the latency histogram), and the
-/// response to append to that connection's write buffer.
+/// rendered reply line to append to that connection's write buffer
+/// (pre-rendered so off-thread work like a model reload can complete
+/// with a line that is not a [`Response`] variant).
 #[derive(Debug)]
 pub struct Completion {
     pub token: u64,
     pub started: Instant,
-    pub response: Response,
+    pub line: String,
 }
 
 /// Pokes the reactor awake after a completion is queued.
@@ -79,9 +81,9 @@ impl ReplySink {
         match self {
             ReplySink::Channel(tx) => tx.send(response).map_err(|_| ()),
             ReplySink::Event { tx, token, started, waker } => {
-                let sent = tx
-                    .send(Completion { token: *token, started: *started, response })
-                    .map_err(|_| ());
+                let done =
+                    Completion { token: *token, started: *started, line: response.to_line() };
+                let sent = tx.send(done).map_err(|_| ());
                 waker.wake();
                 sent
             }
@@ -110,7 +112,7 @@ mod tests {
         sink.send(Response::Err { id: 9, error: "y".into() }).unwrap();
         let done = rx.recv().unwrap();
         assert_eq!(done.token, 42);
-        assert_eq!(done.response, Response::Err { id: 9, error: "y".into() });
+        assert_eq!(done.line, Response::Err { id: 9, error: "y".into() }.to_line());
         // the wake datagram is observable (may take a scheduling beat)
         wake_rx.set_nonblocking(false).unwrap();
         wake_rx

@@ -22,19 +22,26 @@
 //! graduated shed tiers of [`ShedConfig`]. Their responses are
 //! byte-identical on the same request corpus — pinned by tests here
 //! and by the CI serve-smoke diff.
+//!
+//! The lifecycle layer (DESIGN.md §16) rides on the same shared block:
+//! a supervisor thread restarts a dead or panicked batcher with capped
+//! backoff, `{"reload": path}` / SIGHUP hot-swap the model by atomic
+//! generation, [`ServerHandle::drain`] implements the SIGTERM graceful
+//! drain, and `{"health": true}` distinguishes live from ready.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::serve::batcher::{Batcher, BatcherConfig, BatcherStats, Job};
+use crate::serve::batcher::{Batcher, BatcherConfig, BatcherStats, Job, ModelSlot};
 use crate::serve::histo::LatencyHisto;
 use crate::serve::protocol::{self, ClientRequest, Response, ServeStats};
 use crate::serve::reply::ReplySink;
+use crate::util::chaos;
 
 /// Which event loop drives the front end.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,6 +158,30 @@ impl Default for ServeConfig {
     }
 }
 
+/// Serve-lifecycle state (DESIGN.md §16): model generations, batcher
+/// supervision and drain progress. Lives inside [`ServeShared`] so the
+/// `{"stats"}` / `{"health"}` probes read it without extra plumbing.
+#[derive(Debug)]
+pub struct Lifecycle {
+    /// Model dimensionality the server was started with (reload gate).
+    pub dim: usize,
+    /// Cluster count the server was started with (reload gate).
+    pub k: usize,
+    /// Monotonic model generation; 1 is the model `serve()` started
+    /// with, each successful reload bumps it.
+    pub generation: AtomicU64,
+    /// Completed batcher restarts (0 on a healthy server).
+    pub restarts: AtomicU64,
+    /// Human-readable reason for the most recent batcher restart.
+    pub last_restart: Mutex<String>,
+    /// The batcher thread is initialized and consuming jobs.
+    pub batcher_up: AtomicBool,
+    /// SIGTERM drain in progress: not accepting, flushing in-flight.
+    pub draining: AtomicBool,
+    /// Hot-reload mailbox the batcher swaps from between batches.
+    pub slot: Arc<ModelSlot>,
+}
+
 /// Counters and instruments shared by the front end, the batcher
 /// mirror and the `{"stats": true}` probe — one block, so both serve
 /// loops report identically.
@@ -158,6 +189,8 @@ impl Default for ServeConfig {
 pub struct ServeShared {
     /// Batcher counter mirror ([`Batcher::publish_to`]).
     pub batcher: Arc<Mutex<BatcherStats>>,
+    /// Lifecycle state: generations, supervision, drain.
+    pub lifecycle: Lifecycle,
     /// Accept-tier rejections (connection cap).
     pub saturated: AtomicU64,
     /// Soft-tier rejections (queue pressure × heavy request).
@@ -173,9 +206,19 @@ pub struct ServeShared {
 }
 
 impl ServeShared {
-    fn new() -> Arc<ServeShared> {
+    fn new(dim: usize, k: usize) -> Arc<ServeShared> {
         Arc::new(ServeShared {
             batcher: Arc::new(Mutex::new(BatcherStats::default())),
+            lifecycle: Lifecycle {
+                dim,
+                k,
+                generation: AtomicU64::new(1),
+                restarts: AtomicU64::new(0),
+                last_restart: Mutex::new(String::new()),
+                batcher_up: AtomicBool::new(false),
+                draining: AtomicBool::new(false),
+                slot: ModelSlot::new(),
+            },
             saturated: AtomicU64::new(0),
             shed_heavy: AtomicU64::new(0),
             shed_load: AtomicU64::new(0),
@@ -196,6 +239,11 @@ impl ServeShared {
             latency: self.latency.lock().unwrap().summary(),
             artifact_warnings: crate::data::io::artifact_warnings(),
             empty_events: crate::util::trace::empty_events_total(),
+            model_generation: self.lifecycle.generation.load(Ordering::Acquire),
+            batcher_restarts: self.lifecycle.restarts.load(Ordering::Acquire),
+            batcher_last_restart: self.lifecycle.last_restart.lock().unwrap().clone(),
+            batcher_up: self.lifecycle.batcher_up.load(Ordering::Acquire),
+            draining: self.lifecycle.draining.load(Ordering::Acquire),
         }
     }
 
@@ -220,6 +268,41 @@ pub(crate) fn shed_decision(
         return Some(protocol::ERR_SHED_HEAVY);
     }
     None
+}
+
+/// Load, validate and publish a replacement model — the `{"reload"}`
+/// request and SIGHUP both land here. The file is CRC-validated
+/// ([`crate::data::io::read_model`]) and shape-checked before anything
+/// is swapped, so a bad file leaves the serving model untouched
+/// (rollback is "never installed"). Returns the new generation.
+pub fn reload_model(shared: &ServeShared, path: &Path) -> Result<u64> {
+    let model = crate::data::io::read_model(path)?;
+    let lc = &shared.lifecycle;
+    if model.dim != lc.dim || model.k != lc.k {
+        return Err(Error::Config(format!(
+            "model {} has k={} dim={}, server expects k={} dim={}",
+            path.display(),
+            model.k,
+            model.dim,
+            lc.k,
+            lc.dim
+        )));
+    }
+    let generation = lc.generation.fetch_add(1, Ordering::AcqRel) + 1;
+    lc.slot.publish(generation, model.centroids);
+    Ok(generation)
+}
+
+/// Answer a `{"reload": path}` request: the success line with the new
+/// generation, or the typed [`protocol::ERR_RELOAD`] error. Shared by
+/// both loops so their responses stay byte-identical.
+pub(crate) fn reload_response(shared: &ServeShared, path: &str) -> String {
+    match reload_model(shared, Path::new(path)) {
+        Ok(generation) => protocol::reload_line(generation),
+        Err(e) => {
+            Response::Err { id: 0, error: format!("{}: {e}", protocol::ERR_RELOAD) }.to_line()
+        }
+    }
 }
 
 /// RAII share of the connection cap: decrements the live-connection
@@ -267,6 +350,29 @@ impl ServerHandle {
             let _ = h.join();
         }
     }
+
+    /// Hot-swap the serving model (the SIGHUP path; `{"reload"}`
+    /// requests go through the serve loops). Returns the generation.
+    pub fn reload_from(&self, path: &Path) -> Result<u64> {
+        reload_model(&self.shared, path)
+    }
+
+    /// Graceful drain (the SIGTERM path): stop accepting, let in-flight
+    /// requests finish and their replies flush (bounded by `timeout`),
+    /// then return the final stats snapshot for the shutdown summary.
+    pub fn drain(mut self, timeout: Duration) -> ServeStats {
+        self.shared.lifecycle.draining.store(true, Ordering::Release);
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + timeout;
+        while self.shared.inflight.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.shared.snapshot()
+    }
 }
 
 /// Start serving a trained model (non-blocking; returns a handle).
@@ -283,37 +389,21 @@ pub fn serve(cfg: ServeConfig, centroids: Vec<f32>, dim: usize, k: usize) -> Res
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let shared = ServeShared::new();
+    let shared = ServeShared::new(dim, k);
 
     let (queue_tx, queue_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
 
-    // batcher thread owns the (non-Send) runtime
+    // the supervisor owns the queue receiver and (re)spawns the batcher
+    // thread — which owns the non-Send runtime — with capped backoff
     let artifacts = cfg.artifacts_dir.clone();
     let bcfg = cfg.batcher.clone();
-    let stats_for_batcher = shared.batcher.clone();
+    let shared_sup = shared.clone();
     std::thread::Builder::new()
-        .name("parakm-batcher".into())
+        .name("parakm-batcher-supervisor".into())
         .spawn(move || {
-            let mut batcher = match Batcher::new(&artifacts, centroids, dim, k, bcfg) {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("batcher init failed: {e}");
-                    return;
-                }
-            };
-            batcher.publish_to(stats_for_batcher);
-            // adapt sync_channel receiver to the batcher loop
-            let (tx, rx) = mpsc::channel();
-            std::thread::spawn(move || {
-                while let Ok(job) = queue_rx.recv() {
-                    if tx.send(job).is_err() {
-                        break;
-                    }
-                }
-            });
-            batcher.run(rx);
+            supervise_batcher(queue_rx, shared_sup, artifacts, centroids, dim, k, bcfg);
         })
-        .expect("spawn batcher");
+        .expect("spawn batcher supervisor");
 
     let accept_thread = match cfg.loop_mode {
         ServeLoop::Threads => {
@@ -333,6 +423,12 @@ pub fn serve(cfg: ServeConfig, centroids: Vec<f32>, dim: usize, k: usize) -> Res
                         }
                         match conn {
                             Ok(stream) => {
+                                if chaos::hit(chaos::Site::ServeAccept).is_some() {
+                                    // injected accept failure: the
+                                    // connection is dropped unserved
+                                    drop(stream);
+                                    continue;
+                                }
                                 // small request/response lines: Nagle +
                                 // delayed ACK would add ~40 ms stalls
                                 // per round trip
@@ -369,7 +465,15 @@ pub fn serve(cfg: ServeConfig, centroids: Vec<f32>, dim: usize, k: usize) -> Res
                                     }
                                 }
                             }
-                            Err(e) => eprintln!("accept error: {e}"),
+                            Err(e) => {
+                                // listener errors during shutdown or
+                                // drain are clean termination, not a
+                                // per-connection error storm
+                                if stop2.load(Ordering::Acquire) {
+                                    break;
+                                }
+                                eprintln!("accept error: {e}");
+                            }
                         }
                     }
                 })
@@ -399,6 +503,109 @@ pub fn serve(cfg: ServeConfig, centroids: Vec<f32>, dim: usize, k: usize) -> Res
     };
 
     Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), shared })
+}
+
+/// Supervision backoff ladder: first restart after 50 ms, doubling to
+/// a 2 s cap while the batcher keeps dying; a healthy incarnation
+/// resets the ladder.
+const RESTART_BACKOFF_MIN_MS: u64 = 50;
+const RESTART_BACKOFF_MAX_MS: u64 = 2_000;
+
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("batcher thread panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("batcher thread panicked: {s}")
+    } else {
+        "batcher thread panicked".to_string()
+    }
+}
+
+/// Run one batcher incarnation per loop pass: spawn it, feed it jobs
+/// from the bounded queue, and on death (panic or premature exit)
+/// record the restart reason and back off before respawning. No reply
+/// bookkeeping happens here — a [`Job`] dropped anywhere on the dead
+/// path answers its client with the typed retry error by itself.
+/// Returns when the front end drops the queue sender (shutdown).
+fn supervise_batcher(
+    queue_rx: mpsc::Receiver<Job>,
+    shared: Arc<ServeShared>,
+    artifacts: PathBuf,
+    centroids: Vec<f32>,
+    dim: usize,
+    k: usize,
+    bcfg: BatcherConfig,
+) {
+    let mut backoff_ms = RESTART_BACKOFF_MIN_MS;
+    loop {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let artifacts2 = artifacts.clone();
+        let centroids2 = centroids.clone();
+        let bcfg2 = bcfg.clone();
+        let shared2 = shared.clone();
+        let incarnation = std::thread::Builder::new()
+            .name("parakm-batcher".into())
+            .spawn(move || -> Option<String> {
+                let mut batcher = match Batcher::new(&artifacts2, centroids2, dim, k, bcfg2) {
+                    Ok(b) => b,
+                    Err(e) => return Some(format!("batcher init failed: {e}")),
+                };
+                batcher.publish_to(shared2.batcher.clone());
+                batcher.watch_model(shared2.lifecycle.slot.clone());
+                shared2.lifecycle.batcher_up.store(true, Ordering::Release);
+                batcher.run(rx);
+                None // clean exit: every sender dropped
+            })
+            .expect("spawn batcher");
+
+        // feed jobs forward until the batcher stops receiving (died)
+        // or the front end hangs up (shutdown)
+        let died = loop {
+            match queue_rx.recv() {
+                Ok(job) => {
+                    if let Err(mpsc::SendError(job)) = tx.send(job) {
+                        break Some(job);
+                    }
+                }
+                Err(_) => break None,
+            }
+        };
+        let was_up = shared.lifecycle.batcher_up.swap(false, Ordering::AcqRel);
+        let Some(job) = died else {
+            // shutdown: let the batcher finish what it already holds
+            drop(tx);
+            let _ = incarnation.join();
+            return;
+        };
+        drop(job); // answers its client with the typed retry error
+        drop(tx);
+        let reason = match incarnation.join() {
+            Ok(Some(init_err)) => init_err,
+            Ok(None) => "batcher thread exited unexpectedly".to_string(),
+            Err(payload) => panic_reason(payload.as_ref()),
+        };
+        eprintln!("serve: {reason}; restarting batcher in {backoff_ms} ms");
+        shared.lifecycle.restarts.fetch_add(1, Ordering::AcqRel);
+        *shared.lifecycle.last_restart.lock().unwrap() = reason;
+        if was_up {
+            backoff_ms = RESTART_BACKOFF_MIN_MS;
+        }
+        // back off, dropping (= retry-answering) whatever arrives, so
+        // clients see the typed error instead of a stalled socket
+        let deadline = Instant::now() + Duration::from_millis(backoff_ms);
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match queue_rx.recv_timeout(left) {
+                Ok(job) => drop(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        backoff_ms = (backoff_ms * 2).min(RESTART_BACKOFF_MAX_MS);
+    }
 }
 
 /// What one bounded line read produced.
@@ -505,6 +712,8 @@ fn handle_conn(
                 }
                 continue;
             }
+            Ok(ClientRequest::Health) => protocol::health_line(&shared.snapshot()),
+            Ok(ClientRequest::Reload { path }) => reload_response(&shared, &path),
             Ok(ClientRequest::Assign(request)) => {
                 if let Some(err) = shed_decision(&shared, queue_depth, &shed, request.points.len())
                 {
@@ -512,16 +721,31 @@ fn handle_conn(
                 } else {
                     shared.inflight.fetch_add(1, Ordering::AcqRel);
                     let (tx, rx) = mpsc::channel();
-                    if queue.send(Job { request, reply: ReplySink::Channel(tx) }).is_err() {
-                        shared.inflight.fetch_sub(1, Ordering::AcqRel);
-                        break; // batcher gone; drop connection
+                    let job = Job::new(request, ReplySink::Channel(tx));
+                    if chaos::hit(chaos::Site::ServeEnqueue).is_some() {
+                        drop(job); // answers with the typed retry error
+                    } else if let Err(send_err) = queue.send(job) {
+                        // supervisor gone (shutdown); the returned job
+                        // answers itself with the typed retry error
+                        drop(send_err);
                     }
                     let got = rx.recv();
-                    shared.inflight.fetch_sub(1, Ordering::AcqRel);
-                    match got {
+                    let line = match got {
                         Ok(r) => r.to_line(),
-                        Err(_) => break,
+                        Err(_) => {
+                            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                            break;
+                        }
+                    };
+                    shared.record_latency(started);
+                    // decrement only after the reply hits the socket so
+                    // a SIGTERM drain cannot exit with a reply buffered
+                    let wrote = writeln!(writer, "{line}");
+                    shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                    if wrote.is_err() {
+                        break;
                     }
+                    continue;
                 }
             }
             Err(e) => Response::Err { id: 0, error: e.to_string() }.to_line(),
@@ -1097,5 +1321,176 @@ mod tests {
         buf.clear();
         assert!(matches!(read_line_bounded(&mut r, &mut buf, 10).unwrap(), LineRead::Line));
         assert_eq!(buf, b"0123456789");
+    }
+
+    #[test]
+    fn drain_terminates_cleanly_with_open_idle_connection() {
+        // satellite pin: a SIGTERM drain with an idle connection still
+        // open must terminate promptly (no accept-error storm, no
+        // hang) after flushing in-flight replies
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            // an idle connection that never sends and never hangs up
+            let idle = TcpStream::connect(server.local_addr).unwrap();
+            // a live connection with one answered request
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0]]}}"#).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                matches!(Response::parse(&line).unwrap(), Response::Ok { id: 1, .. }),
+                "mode {mode}: {line}"
+            );
+            let stats = server.drain(std::time::Duration::from_secs(10));
+            assert!(stats.draining, "mode {mode}");
+            drop(idle);
+        }
+    }
+
+    #[test]
+    fn health_probe_reports_ready_after_first_answered_request() {
+        for mode in test_modes() {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            // one answered assign proves the batcher came up, which
+            // makes the subsequent health probe deterministic
+            writeln!(conn, r#"{{"id": 1, "points": [[0.0, 0.0, 0.0]]}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            line.clear();
+            writeln!(conn, r#"{{"health": true}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(r#""live":true"#), "mode {mode}: {line}");
+            assert!(line.contains(r#""ready":true"#), "mode {mode}: {line}");
+            assert!(line.contains(r#""model_generation":1"#), "mode {mode}: {line}");
+            assert!(line.contains(r#""batcher_restarts":0"#), "mode {mode}: {line}");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn reload_swaps_model_and_rejects_bad_files() {
+        use crate::data::io::{write_model, Model};
+        for mode in test_modes() {
+            let dir = std::env::temp_dir().join(format!("parakm_server_tests/reload_{mode}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+
+            // a valid replacement model with every centroid at 100 so
+            // reloaded assignments are distinguishable by distance
+            let second = Model {
+                k: 4,
+                dim: 3,
+                seed: 9,
+                engine: "serial".into(),
+                iterations: 1,
+                sse: 0.0,
+                centroids: vec![100.0; 12],
+            };
+            let good = dir.join("second.pkm");
+            write_model(&good, &second).unwrap();
+            writeln!(conn, r#"{{"reload": "{}"}}"#, good.display()).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(r#""generation":2"#), "mode {mode}: {line}");
+
+            // the swap lands between batches: the next assign must be
+            // answered from the new centroids
+            line.clear();
+            writeln!(conn, r#"{{"id": 5, "points": [[100.0, 100.0, 100.0]]}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Ok { id, distances, .. } => {
+                    assert_eq!(id, 5, "mode {mode}");
+                    assert!(distances[0] < 1e-3, "mode {mode}: {distances:?}");
+                }
+                other => panic!("mode {mode}: unexpected {other:?}"),
+            }
+
+            // wrong shape: typed reload error, generation unchanged
+            let bad = Model {
+                k: 2,
+                dim: 5,
+                seed: 0,
+                engine: "serial".into(),
+                iterations: 1,
+                sse: 0.0,
+                centroids: vec![0.0; 10],
+            };
+            let bad_path = dir.join("bad.pkm");
+            write_model(&bad_path, &bad).unwrap();
+            line.clear();
+            writeln!(conn, r#"{{"reload": "{}"}}"#, bad_path.display()).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(protocol::ERR_RELOAD), "mode {mode}: {line}");
+            line.clear();
+            writeln!(conn, r#"{{"health": true}}"#).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(r#""model_generation":2"#), "mode {mode}: {line}");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn lifecycle_responses_byte_identical_across_loops() {
+        // satellite gate: health, reload-failure and malformed
+        // lifecycle lines must answer byte-identically on both loops.
+        // Driven in lockstep (write one, read one) so response order
+        // is deterministic on the reactor too.
+        if !cfg!(unix) {
+            return;
+        }
+        let corpus = [
+            r#"{"id": 1, "points": [[0.0, 0.0, 0.0]]}"#,
+            r#"{"health": true}"#,
+            r#"{"reload": "/nonexistent/parakm/model.pkm"}"#,
+            r#"{"health": 1}"#,
+            r#"{"reload": true}"#,
+        ];
+        let drive = |mode: ServeLoop| -> Vec<String> {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                artifacts_dir: no_artifacts(),
+                loop_mode: mode,
+                ..Default::default()
+            };
+            let server = start_server_artifact_free(cfg);
+            let mut conn = TcpStream::connect(server.local_addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut out = Vec::new();
+            for line in corpus {
+                writeln!(conn, "{line}").unwrap();
+                let mut reply = String::new();
+                reader.read_line(&mut reply).unwrap();
+                out.push(reply);
+            }
+            server.shutdown();
+            out
+        };
+        let threads = drive(ServeLoop::Threads);
+        let poll = drive(ServeLoop::Poll);
+        assert_eq!(threads, poll, "lifecycle responses must match across loops");
     }
 }

@@ -1,0 +1,585 @@
+//! Deterministic fault injection (DESIGN.md §16).
+//!
+//! `chaos` is a process-wide registry of named injection *sites* wrapping
+//! the crate's I/O choke points — artifact writes and reads, cluster
+//! socket frames, serve accept/enqueue, and the batcher loop. Like
+//! [`crate::util::trace`], it is a true no-op unless a plan is installed:
+//! the disabled fast path is one relaxed atomic load, so production
+//! binaries pay nothing for carrying the hooks.
+//!
+//! A [`ChaosPlan`] is seeded: each site gets an independent SplitMix64
+//! stream derived from `seed ^ site`, and fires a fault on a fixed
+//! fraction of calls (`1/period`). The same seed therefore replays the
+//! same fault schedule run-to-run, which is what makes a failing soak
+//! sweep reducible to `--chaos SEED:SITE:PERIOD` on the command line.
+//!
+//! Every injected failure message starts with `"chaos: injected"` so
+//! operators (and the soak harness) can tell synthetic faults from real
+//! ones at a glance.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::Error;
+use crate::rng::SplitMix64;
+
+/// Fast-path gate: `hit` returns `None` after one relaxed load when no
+/// plan is installed.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Installed plan state (counters + per-site RNG streams).
+static PLAN: Mutex<Option<PlanState>> = Mutex::new(None);
+
+/// Total faults fired since process start (monotone across installs).
+static FIRED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Injection sites. Names are the stable CLI / spec vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Site {
+    /// `data::io::atomic_write` — between tmp sync and rename.
+    AtomicWrite,
+    /// Artifact read paths (`read_binary`, `read_model`, ckpt slots).
+    ArtifactRead,
+    /// `cluster::wire::write_frame` — mid-frame close / stall.
+    WireWrite,
+    /// `cluster::wire::read_frame_opt` — connection failure / stall.
+    WireRead,
+    /// Serve accept loops (both `poll` and `threads`).
+    ServeAccept,
+    /// Serve request enqueue into the batcher queue.
+    ServeEnqueue,
+    /// Batcher flush — injected panic, exercises the supervisor.
+    Batcher,
+}
+
+/// All sites, in spec order.
+pub const ALL_SITES: [Site; 7] = [
+    Site::AtomicWrite,
+    Site::ArtifactRead,
+    Site::WireWrite,
+    Site::WireRead,
+    Site::ServeAccept,
+    Site::ServeEnqueue,
+    Site::Batcher,
+];
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::AtomicWrite => "atomic-write",
+            Site::ArtifactRead => "artifact-read",
+            Site::WireWrite => "wire-write",
+            Site::WireRead => "wire-read",
+            Site::ServeAccept => "serve-accept",
+            Site::ServeEnqueue => "serve-enqueue",
+            Site::Batcher => "batcher",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Site> {
+        ALL_SITES.iter().copied().find(|s| s.name() == name)
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Site::AtomicWrite => 0,
+            Site::ArtifactRead => 1,
+            Site::WireWrite => 2,
+            Site::WireRead => 3,
+            Site::ServeAccept => 4,
+            Site::ServeEnqueue => 5,
+            Site::Batcher => 6,
+        }
+    }
+}
+
+impl std::fmt::Display for Site {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete fault drawn from a site's schedule. Call sites interpret
+/// only the kinds that make sense for them (see DESIGN.md §16 for the
+/// site × kind matrix); kinds a site cannot express degrade to `Fail`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Outright typed failure (failed rename, connection error, ...).
+    Fail,
+    /// Truncate the payload, keeping `keep_permille`/1000 of its bytes.
+    Torn { keep_permille: u16 },
+    /// Flip one bit at `pos % (len * 8)` in the payload.
+    BitFlip { pos: u64 },
+    /// Sleep `ms` milliseconds, then proceed normally.
+    Stall { ms: u16 },
+    /// Panic at the site (batcher only — exercises the supervisor).
+    Panic,
+}
+
+/// Parsed, installable chaos plan.
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    pub sites: Vec<Site>,
+    /// Fire on roughly one in `period` calls per armed site (min 1).
+    pub period: u64,
+    /// When set, path-aware sites (`atomic-write`, `artifact-read`)
+    /// only fire for paths under this directory. Lets tests scope a
+    /// process-global plan to their own tempdir.
+    pub scope: Option<PathBuf>,
+}
+
+impl ChaosPlan {
+    pub fn new(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            sites: ALL_SITES.to_vec(),
+            period: 3,
+            scope: None,
+        }
+    }
+
+    pub fn with_sites(mut self, sites: &[Site]) -> ChaosPlan {
+        self.sites = sites.to_vec();
+        self
+    }
+
+    pub fn with_period(mut self, period: u64) -> ChaosPlan {
+        self.period = period.max(1);
+        self
+    }
+
+    pub fn with_scope(mut self, dir: &Path) -> ChaosPlan {
+        self.scope = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Parse a `SEED[:SITES[:PERIOD]]` spec. `SITES` is a comma list of
+    /// site names or `all` (default); `PERIOD` defaults to 3.
+    pub fn parse(spec: &str) -> Result<ChaosPlan, Error> {
+        let bad = |m: String| Error::Config(format!("--chaos {spec}: {m}"));
+        let mut parts = spec.splitn(3, ':');
+        let seed_part = parts.next().unwrap_or("");
+        let seed = seed_part
+            .parse::<u64>()
+            .map_err(|_| bad(format!("bad seed {seed_part:?} (want a u64)")))?;
+        let mut plan = ChaosPlan::new(seed);
+        if let Some(sites_part) = parts.next() {
+            if !sites_part.is_empty() && sites_part != "all" {
+                let mut sites = Vec::new();
+                for name in sites_part.split(',') {
+                    let site = Site::from_name(name).ok_or_else(|| {
+                        bad(format!(
+                            "unknown site {name:?} (known: {})",
+                            ALL_SITES.map(Site::name).join(", ")
+                        ))
+                    })?;
+                    if !sites.contains(&site) {
+                        sites.push(site);
+                    }
+                }
+                plan.sites = sites;
+            }
+        }
+        if let Some(period_part) = parts.next() {
+            let period = period_part
+                .parse::<u64>()
+                .map_err(|_| bad(format!("bad period {period_part:?} (want a u64 >= 1)")))?;
+            if period == 0 {
+                return Err(bad("bad period 0 (want >= 1)".into()));
+            }
+            plan.period = period;
+        }
+        Ok(plan)
+    }
+}
+
+struct SiteState {
+    armed: bool,
+    rng: SplitMix64,
+    calls: u64,
+    fired: u64,
+}
+
+struct PlanState {
+    period: u64,
+    scope: Option<PathBuf>,
+    sites: Vec<SiteState>,
+}
+
+impl PlanState {
+    fn build(plan: &ChaosPlan) -> PlanState {
+        let sites = ALL_SITES
+            .iter()
+            .map(|&site| SiteState {
+                armed: plan.sites.contains(&site),
+                // Independent stream per site so arming one site never
+                // perturbs another site's schedule.
+                rng: SplitMix64::new(plan.seed ^ (0x51_7E * (site.idx() as u64 + 1))),
+                calls: 0,
+                fired: 0,
+            })
+            .collect();
+        PlanState {
+            period: plan.period.max(1),
+            scope: plan.scope.clone(),
+            sites,
+        }
+    }
+}
+
+/// Install a plan. Replaces any existing plan (counters restart).
+pub fn install(plan: &ChaosPlan) {
+    let mut guard = PLAN.lock().unwrap();
+    *guard = Some(PlanState::build(plan));
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Parse and install a `SEED[:SITES[:PERIOD]]` spec.
+pub fn install_spec(spec: &str) -> Result<(), Error> {
+    let plan = ChaosPlan::parse(spec)?;
+    install(&plan);
+    Ok(())
+}
+
+/// Remove the plan; `hit` returns to the one-load no-op path.
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::Release);
+    let mut guard = PLAN.lock().unwrap();
+    *guard = None;
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Resolve a chaos spec: an explicit flag wins, else `PARAKM_CHAOS`.
+pub fn spec_from(flag: Option<&str>) -> Option<String> {
+    if let Some(f) = flag {
+        return Some(f.to_string());
+    }
+    match std::env::var("PARAKM_CHAOS") {
+        Ok(v) if !v.is_empty() => Some(v),
+        _ => None,
+    }
+}
+
+/// Total faults fired since process start (across plan installs).
+pub fn fired_total() -> u64 {
+    FIRED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Per-site fired counts for the currently installed plan.
+pub fn fired_by_site() -> BTreeMap<&'static str, u64> {
+    let guard = PLAN.lock().unwrap();
+    let mut out = BTreeMap::new();
+    if let Some(state) = guard.as_ref() {
+        for (i, s) in state.sites.iter().enumerate() {
+            if s.fired > 0 {
+                out.insert(ALL_SITES[i].name(), s.fired);
+            }
+        }
+    }
+    out
+}
+
+/// Poll a site. Returns the scheduled fault on firing calls, `None`
+/// otherwise. One relaxed load when no plan is installed.
+#[inline]
+pub fn hit(site: Site) -> Option<Fault> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    hit_slow(site, None)
+}
+
+/// Path-aware variant for artifact sites: respects the plan's `scope`
+/// so tests can confine a process-global plan to one tempdir.
+#[inline]
+pub fn hit_path(site: Site, path: &Path) -> Option<Fault> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    hit_slow(site, Some(path))
+}
+
+#[cold]
+fn hit_slow(site: Site, path: Option<&Path>) -> Option<Fault> {
+    let mut guard = PLAN.lock().unwrap();
+    let state = guard.as_mut()?;
+    if let Some(scope) = state.scope.as_deref() {
+        // A scoped plan only fires for paths under the scope dir; sites
+        // that carry no path (wire, serve) are disarmed entirely.
+        match path {
+            Some(p) if p.starts_with(scope) => {}
+            _ => return None,
+        }
+    }
+    let period = state.period;
+    let s = &mut state.sites[site.idx()];
+    if !s.armed {
+        return None;
+    }
+    s.calls += 1;
+    let draw = s.rng.next_u64();
+    if draw % period != 0 {
+        return None;
+    }
+    s.fired += 1;
+    FIRED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    crate::util::trace::counter_add("chaos_faults_total", 1);
+    let pick = draw >> 8;
+    Some(fault_for(site, pick))
+}
+
+/// Map a draw to a fault kind valid for the site. Kinds that could
+/// silently corrupt results without a CRC to catch them (bit flips on
+/// the un-checksummed wire) are deliberately excluded.
+fn fault_for(site: Site, pick: u64) -> Fault {
+    match site {
+        Site::AtomicWrite | Site::ArtifactRead => match pick % 3 {
+            0 => Fault::Fail,
+            1 => Fault::Torn {
+                keep_permille: (pick / 3 % 1000) as u16,
+            },
+            _ => Fault::BitFlip { pos: pick / 3 },
+        },
+        Site::WireWrite => match pick % 4 {
+            0 => Fault::Stall {
+                ms: (1 + pick / 4 % 10) as u16,
+            },
+            1 | 2 => Fault::Torn {
+                keep_permille: (pick / 4 % 1000) as u16,
+            },
+            _ => Fault::Fail,
+        },
+        Site::WireRead => match pick % 3 {
+            0 => Fault::Stall {
+                ms: (1 + pick / 3 % 10) as u16,
+            },
+            _ => Fault::Fail,
+        },
+        Site::ServeAccept | Site::ServeEnqueue => Fault::Fail,
+        Site::Batcher => Fault::Panic,
+    }
+}
+
+/// Serializes tests that install plans: the registry is process-global,
+/// so concurrent installs would clobber each other. In-binary tests
+/// must also *scope* their plan to a private tempdir so armed sites
+/// cannot fire inside unrelated tests running in parallel.
+/// Poison-tolerant so one panicking chaos test cannot cascade.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Apply a byte-mutating fault to a payload in place. Returns
+/// `Some(message)` when the fault is `Fail` (the caller should raise a
+/// typed error with it), `None` when the payload was mutated (or the
+/// fault does not apply to byte payloads) and the caller should proceed.
+pub fn apply_to_bytes(site: Site, fault: Fault, bytes: &mut Vec<u8>) -> Option<String> {
+    match fault {
+        Fault::Fail | Fault::Panic => Some(format!("chaos: injected {site} failure")),
+        Fault::Torn { keep_permille } => {
+            let keep = (bytes.len() as u64 * keep_permille as u64 / 1000) as usize;
+            bytes.truncate(keep);
+            None
+        }
+        Fault::BitFlip { pos } => {
+            if !bytes.is_empty() {
+                let bit = pos % (bytes.len() as u64 * 8);
+                bytes[(bit / 8) as usize] ^= 1 << (bit % 8);
+            }
+            None
+        }
+        Fault::Stall { ms } => {
+            std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scope_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join("parakm_chaos_tests").join(name)
+    }
+
+    #[test]
+    fn disabled_by_default_and_after_uninstall() {
+        let _g = test_lock();
+        uninstall();
+        assert!(!enabled());
+        assert_eq!(hit(Site::AtomicWrite), None);
+        let scope = scope_dir("toggle");
+        install(&ChaosPlan::new(1).with_period(1).with_scope(&scope));
+        assert!(enabled());
+        uninstall();
+        assert!(!enabled());
+        assert_eq!(hit_path(Site::AtomicWrite, &scope.join("x")), None);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_from_seed() {
+        let _g = test_lock();
+        let scope = scope_dir("determinism");
+        let p = scope.join("a.pkm");
+        let sweep = |seed: u64| -> Vec<Option<Fault>> {
+            install(&ChaosPlan::new(seed).with_period(3).with_scope(&scope));
+            let out = (0..64).map(|_| hit_path(Site::AtomicWrite, &p)).collect();
+            uninstall();
+            out
+        };
+        let a = sweep(42);
+        let b = sweep(42);
+        let c = sweep(43);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_ne!(a, c, "different seeds should diverge");
+        assert!(a.iter().any(|f| f.is_some()), "period 3 over 64 calls must fire");
+    }
+
+    #[test]
+    fn sites_have_independent_streams() {
+        let _g = test_lock();
+        // Arming extra sites must not perturb another site's schedule.
+        let scope = scope_dir("streams");
+        let p = scope.join("a.pkd");
+        let narrow = ChaosPlan::new(7)
+            .with_sites(&[Site::ArtifactRead])
+            .with_period(2)
+            .with_scope(&scope);
+        install(&narrow);
+        let solo: Vec<_> = (0..32).map(|_| hit_path(Site::ArtifactRead, &p)).collect();
+        install(&ChaosPlan::new(7).with_period(2).with_scope(&scope));
+        let with_all: Vec<_> = (0..32)
+            .map(|_| {
+                let f = hit_path(Site::ArtifactRead, &p);
+                hit_path(Site::AtomicWrite, &p); // interleave the other stream
+                f
+            })
+            .collect();
+        uninstall();
+        assert_eq!(solo, with_all);
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let _g = test_lock();
+        let scope = scope_dir("unarmed");
+        let p = scope.join("a.pkc");
+        let plan = ChaosPlan::new(9)
+            .with_sites(&[Site::ArtifactRead])
+            .with_period(1)
+            .with_scope(&scope);
+        install(&plan);
+        for _ in 0..50 {
+            assert_eq!(hit_path(Site::AtomicWrite, &p), None);
+        }
+        assert!(hit_path(Site::ArtifactRead, &p).is_some());
+        uninstall();
+    }
+
+    #[test]
+    fn scope_confines_path_sites_and_disarms_pathless_sites() {
+        let _g = test_lock();
+        let scope = scope_dir("confine");
+        install(&ChaosPlan::new(5).with_period(1).with_scope(&scope));
+        assert_eq!(hit(Site::WireWrite), None, "pathless site under scope");
+        assert_eq!(
+            hit_path(Site::AtomicWrite, Path::new("/elsewhere/x.pkm")),
+            None
+        );
+        assert!(hit_path(Site::AtomicWrite, &scope.join("x.pkm")).is_some());
+        uninstall();
+    }
+
+    #[test]
+    fn fault_kinds_match_site_capabilities() {
+        // Pure function, no plan needed: bit flips never reach the
+        // un-checksummed wire, the batcher only panics, serve sites
+        // only fail.
+        for pick in 0..200u64 {
+            assert_eq!(fault_for(Site::Batcher, pick), Fault::Panic);
+            assert_eq!(fault_for(Site::ServeAccept, pick), Fault::Fail);
+            assert_eq!(fault_for(Site::ServeEnqueue, pick), Fault::Fail);
+            assert!(!matches!(fault_for(Site::WireWrite, pick), Fault::BitFlip { .. }));
+            assert!(matches!(
+                fault_for(Site::WireRead, pick),
+                Fault::Fail | Fault::Stall { .. }
+            ));
+            assert!(!matches!(
+                fault_for(Site::AtomicWrite, pick),
+                Fault::Stall { .. } | Fault::Panic
+            ));
+        }
+    }
+
+    #[test]
+    fn spec_parsing_roundtrip_and_errors() {
+        let plan = ChaosPlan::parse("42").unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.period, 3);
+        assert_eq!(plan.sites.len(), ALL_SITES.len());
+
+        let plan = ChaosPlan::parse("7:wire-read,batcher:10").unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.period, 10);
+        assert_eq!(plan.sites, vec![Site::WireRead, Site::Batcher]);
+
+        let plan = ChaosPlan::parse("1:all:2").unwrap();
+        assert_eq!(plan.sites.len(), ALL_SITES.len());
+
+        assert!(ChaosPlan::parse("").is_err());
+        assert!(ChaosPlan::parse("x").is_err());
+        assert!(ChaosPlan::parse("1:nope").is_err());
+        assert!(ChaosPlan::parse("1:all:0").is_err());
+        assert!(ChaosPlan::parse("1:all:x").is_err());
+    }
+
+    #[test]
+    fn apply_to_bytes_truncates_flips_and_fails() {
+        let mut b = vec![0u8; 100];
+        assert!(apply_to_bytes(
+            Site::AtomicWrite,
+            Fault::Torn { keep_permille: 500 },
+            &mut b
+        )
+        .is_none());
+        assert_eq!(b.len(), 50);
+
+        let mut b = vec![0u8; 4];
+        assert!(apply_to_bytes(Site::ArtifactRead, Fault::BitFlip { pos: 9 }, &mut b).is_none());
+        assert_eq!(b, vec![0, 2, 0, 0]);
+
+        let mut b = vec![1u8; 4];
+        let msg = apply_to_bytes(Site::ArtifactRead, Fault::Fail, &mut b).unwrap();
+        assert!(msg.starts_with("chaos: injected"), "{msg}");
+        assert_eq!(b, vec![1u8; 4], "Fail must not mutate the payload");
+    }
+
+    #[test]
+    fn fired_counters_accumulate() {
+        let _g = test_lock();
+        let before = fired_total();
+        let scope = scope_dir("counters");
+        let p = scope.join("a.pkm");
+        let plan = ChaosPlan::new(3)
+            .with_sites(&[Site::AtomicWrite])
+            .with_period(1)
+            .with_scope(&scope);
+        install(&plan);
+        for _ in 0..5 {
+            assert!(hit_path(Site::AtomicWrite, &p).is_some());
+        }
+        assert_eq!(fired_by_site().get("atomic-write"), Some(&5));
+        uninstall();
+        assert_eq!(fired_total() - before, 5);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod chaos;
 pub mod crc32;
 pub mod csv;
 pub mod json;

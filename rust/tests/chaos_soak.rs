@@ -1,0 +1,544 @@
+//! Chaos soak (DESIGN.md §16): sweep seeded fault injections across
+//! every chaos site and assert the system-wide robustness invariant —
+//! an injected fault yields a **typed error** or a **bit-identical
+//! result**, never a panic, a hang, or silently corrupt output.
+//!
+//! Injection budget across the suite (the acceptance floor is 1,000
+//! injections over at least 5 sites):
+//!
+//! - `artifact_read_sweep`: 170 seeds × 4 reads = **680** exact
+//!   (`artifact-read`, period 1 — every hooked read fires).
+//! - `artifact_write_sweep`: 170 seeds × 3 writes = **510** exact
+//!   (`atomic-write`, period 1) over `.pkm` / `.pkd` / `.pkc` payloads
+//!   — the torn-write matrix.
+//! - `engine_ckpt_chaos`: serial / threads / oocore under mixed
+//!   `atomic-write` + `artifact-read` faults, with chaos-armed and
+//!   chaos-off resume legs.
+//! - `dist_wire_chaos`: static + elastic leaders over loopback TCP
+//!   under `wire-read` / `wire-write` faults, driven until both sites
+//!   fire repeatedly.
+//! - `serve_chaos`: both serve loops under `serve-accept` /
+//!   `serve-enqueue` / `batcher` faults, driven until all three sites
+//!   fire, then proven to recover to answering cleanly.
+//!
+//! Totals: ≥ 1,190 deterministic injections plus the driven legs,
+//! spanning all 7 sites. Every test serializes on
+//! [`chaos::test_lock`] because the plan registry is process-global.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use parakmeans::cluster::LoopbackCluster;
+use parakmeans::config::{DistSched, SchedMode};
+use parakmeans::data::source::MemorySource;
+use parakmeans::data::{io, MixtureSpec};
+use parakmeans::error::{Error, Result};
+use parakmeans::kmeans::ckpt::{self, CkptSink};
+use parakmeans::kmeans::dist::{self, DistOpts};
+use parakmeans::kmeans::streaming::{self, StreamOpts};
+use parakmeans::kmeans::{parallel, serial, KmeansConfig, KmeansResult};
+use parakmeans::serve::{serve, Response, ServeConfig, ServeLoop};
+use parakmeans::testutil::assert_bit_identical;
+use parakmeans::util::chaos::{self, ChaosPlan, Site};
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parakm_chaos_soak_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Per-leg accumulator over plan reinstalls ([`chaos::fired_by_site`]
+/// resets on every install, so legs absorb before uninstalling).
+#[derive(Default)]
+struct Tally {
+    by_site: BTreeMap<&'static str, u64>,
+}
+
+impl Tally {
+    fn absorb(&mut self) {
+        for (site, n) in chaos::fired_by_site() {
+            *self.by_site.entry(site).or_insert(0) += n;
+        }
+    }
+
+    fn of(&self, site: &str) -> u64 {
+        self.by_site.get(site).copied().unwrap_or(0)
+    }
+}
+
+fn sample_model() -> io::Model {
+    io::Model {
+        k: 4,
+        dim: 3,
+        seed: 7,
+        engine: "serial".into(),
+        iterations: 5,
+        sse: 12.5,
+        centroids: (0..12).map(|i| i as f32 * 0.5 - 3.0).collect(),
+    }
+}
+
+/// Build a checkpoint directory with both A/B slots intact (chaos off)
+/// and return it with its fingerprint.
+fn seeded_ckpt_dir(tag: &str) -> (PathBuf, ckpt::Fingerprint) {
+    let ds = MixtureSpec::paper_2d(4).generate(401, 19);
+    let cfg = KmeansConfig::new(4).with_seed(13).with_tol(0.0).with_max_iters(4);
+    let fp = ckpt::fingerprint("serial", "none", &cfg, ds.len(), ds.dim());
+    let dir = tmp(tag);
+    let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+    serial::run_ckpt(&ds, &cfg, Some(&sink), None).unwrap();
+    (dir, fp)
+}
+
+// ---- artifact sweeps: the deterministic bulk of the budget -------------
+
+/// 170 seeds × (1 `.pkm` read + 1 `.pkd` read + 2 `.pkc` slot reads),
+/// period 1: exactly 680 injections. Every faulted read must surface a
+/// typed error or decode to content equal to what was written (the
+/// legal outcome when a truncation lands exactly on the optional CRC
+/// trailer boundary of the legacy-tolerant formats). The files on disk
+/// are never mutated by a read fault: after the sweep every artifact
+/// still round-trips bit-exactly.
+#[test]
+fn artifact_read_sweep_typed_error_or_identical() {
+    let _g = chaos::test_lock();
+    let fired0 = chaos::fired_total();
+
+    let dir = tmp("read_sweep");
+    let model = sample_model();
+    let pkm = dir.join("m.pkm");
+    io::write_model(&pkm, &model).unwrap();
+    let ds = MixtureSpec::paper_2d(4).generate(300, 5);
+    let pkd = dir.join("d.pkd");
+    io::write_binary(&pkd, &ds).unwrap();
+    let (ckdir, fp) = seeded_ckpt_dir("read_sweep_ck");
+    let base_state = ckpt::load_validated(&ckdir, &fp).unwrap();
+
+    let mut tally = Tally::default();
+    for seed in 0..170u64 {
+        chaos::install(&ChaosPlan::new(seed).with_sites(&[Site::ArtifactRead]).with_period(1));
+        match io::read_model(&pkm) {
+            Ok(m) => assert_eq!(m, model, "seed {seed}: faulted .pkm read must stay exact"),
+            Err(e) => {
+                let _ = e.to_string(); // typed, renderable, no panic
+            }
+        }
+        match io::read_binary(&pkd) {
+            Ok(d) => assert_eq!(d.raw(), ds.raw(), "seed {seed}: faulted .pkd read"),
+            Err(e) => {
+                let _ = e.to_string();
+            }
+        }
+        match ckpt::load(&ckdir) {
+            // a surviving load may legitimately be the older A/B slot
+            Ok(s) => {
+                assert!(
+                    s.iteration >= 1 && s.iteration <= base_state.iteration,
+                    "seed {seed}: .pkc iteration {}",
+                    s.iteration
+                );
+                if s.iteration == base_state.iteration {
+                    assert_eq!(s.centroids, base_state.centroids, "seed {seed}: .pkc centroids");
+                }
+            }
+            Err(e) => {
+                let _ = e.to_string();
+            }
+        }
+        tally.absorb();
+        chaos::uninstall();
+    }
+
+    // read faults only ever touch in-memory copies: the artifacts on
+    // disk still round-trip exactly
+    assert_eq!(io::read_model(&pkm).unwrap(), model);
+    assert_eq!(io::read_binary(&pkd).unwrap().raw(), ds.raw());
+    assert_eq!(ckpt::load_validated(&ckdir, &fp).unwrap().centroids, base_state.centroids);
+
+    let fired = chaos::fired_total() - fired0;
+    assert_eq!(fired, 170 * 4, "period-1 sweep must fire on every hooked read");
+    assert_eq!(tally.of("artifact-read"), 170 * 4);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+/// The torn-write matrix (satellite of DESIGN.md §16): 170 seeds × 3
+/// atomic publishes (`.pkm`, `.pkd`, `.pkc` payloads), period 1 —
+/// exactly 510 injections. An injected `Fail` must leave no
+/// destination file and a `"chaos: injected"` typed error; a torn or
+/// bit-flipped publish may land, but then the reader must either
+/// reject it (CRC) or decode content equal to the original.
+#[test]
+fn artifact_write_sweep_torn_publishes_never_corrupt() {
+    let _g = chaos::test_lock();
+    let fired0 = chaos::fired_total();
+
+    let dir = tmp("write_sweep");
+    let model = sample_model();
+    let ds = MixtureSpec::paper_2d(4).generate(300, 5);
+    let src_pkd = dir.join("src.pkd");
+    io::write_binary(&src_pkd, &ds).unwrap();
+    let pkd_bytes = std::fs::read(&src_pkd).unwrap();
+    let (ckdir, _fp) = seeded_ckpt_dir("write_sweep_ck");
+    let pkc_bytes = std::fs::read(ckdir.join(ckpt::SLOT_A)).unwrap();
+    let base_state = io::decode_ckpt(&pkc_bytes).unwrap();
+
+    let mut tally = Tally::default();
+    for seed in 0..170u64 {
+        chaos::install(&ChaosPlan::new(seed).with_sites(&[Site::AtomicWrite]).with_period(1));
+
+        let pkm = dir.join(format!("w_{seed}.pkm"));
+        match io::write_model(&pkm, &model) {
+            Err(e) => {
+                assert!(e.to_string().contains("chaos: injected"), "seed {seed}: {e}");
+                assert!(!pkm.exists(), "seed {seed}: failed write must not publish");
+            }
+            Ok(()) => {
+                // period 1: an Ok write means the payload was published
+                // torn or bit-flipped — the reader must catch it or
+                // (trailer-boundary truncation) decode the exact model
+                if let Ok(m) = io::read_model(&pkm) {
+                    assert_eq!(m, model, "seed {seed}: survivor .pkm must be exact");
+                }
+            }
+        }
+
+        let pkd = dir.join(format!("w_{seed}.pkd"));
+        match io::atomic_write(&pkd, &pkd_bytes) {
+            Err(e) => {
+                assert!(e.to_string().contains("chaos: injected"), "seed {seed}: {e}");
+                assert!(!pkd.exists(), "seed {seed}: failed write must not publish");
+            }
+            Ok(()) => {
+                if let Ok(d) = io::read_binary(&pkd) {
+                    assert_eq!(d.raw(), ds.raw(), "seed {seed}: survivor .pkd must be exact");
+                }
+            }
+        }
+
+        let pkc = dir.join(format!("w_{seed}.pkc"));
+        match io::atomic_write(&pkc, &pkc_bytes) {
+            Err(e) => {
+                assert!(e.to_string().contains("chaos: injected"), "seed {seed}: {e}");
+                assert!(!pkc.exists(), "seed {seed}: failed write must not publish");
+            }
+            Ok(()) => {
+                if let Ok(s) = io::decode_ckpt(&std::fs::read(&pkc).unwrap()) {
+                    assert_eq!(s.centroids, base_state.centroids, "seed {seed}: survivor .pkc");
+                }
+            }
+        }
+
+        tally.absorb();
+        chaos::uninstall();
+    }
+
+    let fired = chaos::fired_total() - fired0;
+    assert_eq!(fired, 170 * 3, "period-1 sweep must fire on every atomic publish");
+    assert_eq!(tally.of("atomic-write"), 170 * 3);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+// ---- engines under checkpoint chaos ------------------------------------
+
+type CkptEngine<'a> =
+    &'a dyn Fn(&KmeansConfig, Option<&CkptSink>, Option<ckpt::CkptState>) -> Result<KmeansResult>;
+
+/// One engine under mixed artifact chaos: the chaos-armed run is
+/// bit-identical or typed-failed; a chaos-armed resume from whatever
+/// slots survived is bit-identical or typed-failed; and a chaos-OFF
+/// resume from any loadable slot is *always* bit-identical — the A/B
+/// rotation + CRC guarantee chaos cannot corrupt recovery.
+fn engine_chaos_leg(tag: &str, fp_engine: &str, fp_sched: &str, run: CkptEngine<'_>) {
+    let n = 1001;
+    let d = 2;
+    let cfg = KmeansConfig::new(4).with_seed(11).with_tol(0.0).with_max_iters(6);
+    let fp = ckpt::fingerprint(fp_engine, fp_sched, &cfg, n, d);
+    let base = run(&cfg, None, None).unwrap();
+    assert_eq!(base.iterations, 6, "{tag}: tol 0 runs the full budget");
+
+    let mut tally = Tally::default();
+    for seed in 0..10u64 {
+        let dir = tmp(&format!("engine_{tag}_{seed}"));
+        let sink = CkptSink::create(&dir, 1, fp.clone()).unwrap();
+        chaos::install(
+            &ChaosPlan::new(seed)
+                .with_sites(&[Site::AtomicWrite, Site::ArtifactRead])
+                .with_period(2),
+        );
+        match run(&cfg, Some(&sink), None) {
+            Ok(r) => assert_bit_identical(&r, &base, &format!("{tag} seed {seed}: chaos run")),
+            Err(e) => {
+                let _ = e.to_string(); // typed ckpt-write failure
+            }
+        }
+        // chaos-armed resume: slot reads themselves may fault
+        match ckpt::load_validated(&dir, &fp) {
+            Ok(state) => match run(&cfg, None, Some(state)) {
+                Ok(r) => {
+                    assert_bit_identical(&r, &base, &format!("{tag} seed {seed}: chaos resume"))
+                }
+                Err(e) => {
+                    let _ = e.to_string();
+                }
+            },
+            Err(e) => {
+                let _ = e.to_string();
+            }
+        }
+        tally.absorb();
+        chaos::uninstall();
+
+        // chaos off: if anything is loadable, recovery must be exact
+        if let Ok(state) = ckpt::load_validated(&dir, &fp) {
+            let r = run(&cfg, None, Some(state)).unwrap();
+            assert_bit_identical(&r, &base, &format!("{tag} seed {seed}: clean resume"));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert!(
+        tally.of("atomic-write") + tally.of("artifact-read") >= 10,
+        "{tag}: the sweep must actually inject ({:?})",
+        tally.by_site
+    );
+}
+
+#[test]
+fn serial_with_ckpt_chaos_bit_identical_or_typed() {
+    let _g = chaos::test_lock();
+    let ds = MixtureSpec::paper_2d(4).generate(1001, 9);
+    engine_chaos_leg("serial", "serial", "none", &|cfg, sink, resume| {
+        serial::run_ckpt(&ds, cfg, sink, resume)
+    });
+}
+
+#[test]
+fn threads_with_ckpt_chaos_bit_identical_or_typed() {
+    let _g = chaos::test_lock();
+    let ds = MixtureSpec::paper_2d(4).generate(1001, 9);
+    engine_chaos_leg("threads", "threads", "static", &|cfg, sink, resume| {
+        parallel::run_sched_ckpt(
+            &ds,
+            cfg,
+            3,
+            parallel::MergeMode::Leader,
+            SchedMode::Static,
+            sink,
+            resume,
+        )
+    });
+}
+
+#[test]
+fn oocore_with_ckpt_chaos_bit_identical_or_typed() {
+    let _g = chaos::test_lock();
+    let ds = MixtureSpec::paper_2d(4).generate(1001, 9);
+    let opts = StreamOpts { shards: 3, chunk_rows: 127 };
+    engine_chaos_leg("oocore", "oocore", "static", &|cfg, sink, resume| {
+        streaming::run_ckpt(&MemorySource::new(&ds), cfg, &opts, sink, resume)
+    });
+}
+
+// ---- distributed leaders under wire chaos ------------------------------
+
+/// Static and elastic leaders over loopback TCP with `wire-read` /
+/// `wire-write` faults (both leader- and worker-side — the plan is
+/// process-global). Static must fail fast and typed; elastic may also
+/// recover to the bit-identical result. Driven until both wire sites
+/// have fired at least 5 times each.
+#[test]
+fn dist_wire_chaos_typed_error_or_identical() {
+    let _g = chaos::test_lock();
+    let ds = MixtureSpec::paper_2d(4).generate(601, 3);
+    let cfg = KmeansConfig::new(4).with_seed(5).with_tol(0.0).with_max_iters(4);
+    let opts = |sched| DistOpts {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(2),
+        sched,
+        retry: 1,
+    };
+
+    let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 128).unwrap();
+    let base_static = dist::run(&cluster.addrs, &cfg, &opts(DistSched::Static)).unwrap();
+    cluster.join().unwrap();
+    let cluster = LoopbackCluster::spawn_replicated(&ds, 2, 128).unwrap();
+    let base_elastic = dist::run(&cluster.addrs, &cfg, &opts(DistSched::Elastic)).unwrap();
+    cluster.join().unwrap();
+
+    let mut tally = Tally::default();
+    for seed in 0..30u64 {
+        let cluster = LoopbackCluster::spawn_dataset(&ds, 2, 128).unwrap();
+        chaos::install(
+            &ChaosPlan::new(seed)
+                .with_sites(&[Site::WireRead, Site::WireWrite])
+                .with_period(4),
+        );
+        let out = dist::run(&cluster.addrs, &cfg, &opts(DistSched::Static));
+        tally.absorb();
+        chaos::uninstall();
+        let _ = cluster.join(); // worker-side injections surface here; fine
+        match out {
+            Ok(run) => {
+                assert_bit_identical(&run.result, &base_static.result, &format!("static {seed}"))
+            }
+            Err(e) => assert!(matches!(e, Error::Cluster(_)), "static seed {seed}: {e}"),
+        }
+        if tally.of("wire-read") >= 5 && tally.of("wire-write") >= 5 {
+            break;
+        }
+    }
+    assert!(
+        tally.of("wire-read") >= 5 && tally.of("wire-write") >= 5,
+        "wire sites never fired enough: {:?}",
+        tally.by_site
+    );
+
+    // elastic: chunk re-dispatch may outrun the injected faults — a
+    // completed run must be bit-identical, a failed one typed
+    for seed in 100..103u64 {
+        let cluster = LoopbackCluster::spawn_replicated(&ds, 2, 128).unwrap();
+        chaos::install(
+            &ChaosPlan::new(seed)
+                .with_sites(&[Site::WireRead, Site::WireWrite])
+                .with_period(6),
+        );
+        let out = dist::run(&cluster.addrs, &cfg, &opts(DistSched::Elastic));
+        chaos::uninstall();
+        let _ = cluster.join();
+        match out {
+            Ok(run) => assert_bit_identical(
+                &run.result,
+                &base_elastic.result,
+                &format!("elastic {seed}"),
+            ),
+            Err(e) => assert!(matches!(e, Error::Cluster(_)), "elastic seed {seed}: {e}"),
+        }
+    }
+}
+
+// ---- serve loops under accept / enqueue / batcher chaos ----------------
+
+enum Outcome {
+    Answered,
+    TypedError,
+    Dropped,
+}
+
+fn try_request(addr: std::net::SocketAddr, id: u64) -> Outcome {
+    let Ok(mut conn) = TcpStream::connect(addr) else {
+        return Outcome::Dropped;
+    };
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    if writeln!(conn, r#"{{"id": {id}, "points": [[0.5, 0.5, 0.5]]}}"#).is_err() {
+        return Outcome::Dropped;
+    }
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => Outcome::Dropped, // accept-chaos drop / reset
+        Ok(_) => match Response::parse(&line) {
+            Ok(Response::Ok { id: rid, clusters, .. }) => {
+                assert_eq!(rid, id, "response id echo");
+                assert_eq!(clusters.len(), 1);
+                Outcome::Answered
+            }
+            Ok(Response::Err { .. }) => Outcome::TypedError, // ERR_RETRY etc.
+            other => panic!("unparseable serve reply {other:?}: {line:?}"),
+        },
+    }
+}
+
+/// Both serve loops under dropped accepts, swallowed enqueues and
+/// injected batcher panics: every request resolves (answer, typed
+/// error line, or visibly dropped connection — never a hang), and once
+/// chaos stops the server must return to answering, with the batcher
+/// restarts it survived visible in the stats.
+#[test]
+fn serve_chaos_drops_typed_never_hangs_and_recovers() {
+    let _g = chaos::test_lock();
+    let modes: Vec<ServeLoop> = if cfg!(unix) {
+        vec![ServeLoop::Threads, ServeLoop::Poll]
+    } else {
+        vec![ServeLoop::Threads]
+    };
+    let ds = MixtureSpec::paper_3d(4).generate(500, 3);
+    let model = serial::run(&ds, &KmeansConfig::new(4).with_seed(1));
+
+    for (mi, mode) in modes.into_iter().enumerate() {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            // never-existing artifacts dir: the batcher falls back to
+            // the in-crate native runtime
+            artifacts_dir: std::env::temp_dir().join("parakm_chaos_soak/no_artifacts_here"),
+            loop_mode: mode,
+            ..Default::default()
+        };
+        let server = serve(cfg, model.centroids.clone(), 3, 4).unwrap();
+
+        chaos::install(
+            &ChaosPlan::new(0xC0FFEE + mi as u64)
+                .with_sites(&[Site::ServeAccept, Site::ServeEnqueue, Site::Batcher])
+                .with_period(5),
+        );
+        let mut answered = 0u64;
+        let mut typed = 0u64;
+        let mut dropped = 0u64;
+        let mut covered = false;
+        for i in 0..400u64 {
+            match try_request(server.local_addr, i) {
+                Outcome::Answered => answered += 1,
+                Outcome::TypedError => typed += 1,
+                Outcome::Dropped => dropped += 1,
+            }
+            let fired = chaos::fired_by_site();
+            let of = |s: &str| fired.get(s).copied().unwrap_or(0);
+            if i >= 40 && of("serve-accept") >= 5 && of("serve-enqueue") >= 5 && of("batcher") >= 2
+            {
+                covered = true;
+                break;
+            }
+        }
+        let mut tally = Tally::default();
+        tally.absorb();
+        chaos::uninstall();
+        assert!(
+            covered,
+            "mode {mode}: chaos sites never fired enough \
+             (answered {answered}, typed {typed}, dropped {dropped}, {:?})",
+            tally.by_site
+        );
+
+        // chaos off: the server must recover to answering (the batcher
+        // may still be inside its restart backoff — retry through it)
+        let mut recovered = false;
+        for i in 0..60u64 {
+            if matches!(try_request(server.local_addr, 10_000 + i), Outcome::Answered) {
+                recovered = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(250));
+        }
+        assert!(recovered, "mode {mode}: server did not recover after chaos stopped");
+
+        let stats = server.stats();
+        if tally.of("batcher") >= 1 {
+            assert!(
+                stats.batcher_restarts >= 1,
+                "mode {mode}: {} injected batcher panics but no restart recorded",
+                tally.of("batcher")
+            );
+            assert!(
+                stats.batcher_last_restart.contains("chaos: injected"),
+                "mode {mode}: restart reason {:?}",
+                stats.batcher_last_restart
+            );
+        }
+        assert_eq!(stats.model_generation, 1, "mode {mode}: chaos must not touch the model");
+        server.shutdown();
+    }
+}
